@@ -1,0 +1,64 @@
+//! Cluster-scale rollout walkthrough: simulates one DAPO-32B-20K training
+//! step under every policy and prints the step report — the quick tour of
+//! the Figure 12/13 machinery.
+//!
+//! ```bash
+//! cargo run --release --example cluster_rollout -- --trace dapo --step 140
+//! ```
+
+use specactor::sim::{scaled, simulate_step, Policy, TraceConfig};
+use specactor::util::cli::Args;
+
+fn main() {
+    let mut args = Args::from_env().unwrap();
+    let trace = args.opt("trace", "dapo");
+    let step = args.opt_parse("step", 140usize);
+    let full = args.flag("full");
+    args.finish().unwrap();
+
+    let base = match trace.as_str() {
+        "grpo" => TraceConfig::grpo_32b_20k(),
+        "ppo" => TraceConfig::ppo_32b_20k(),
+        "moe" => TraceConfig::grpo_235b_moe(),
+        _ => TraceConfig::dapo_32b_20k(),
+    };
+    let cfg = if full { base } else { scaled(&base, 4, 4_000) };
+    println!(
+        "trace {} — {} GPUs, {} workers, per-worker batch {}, budget {}",
+        cfg.name,
+        cfg.gpus,
+        cfg.workers(),
+        cfg.per_worker_batch(),
+        cfg.budget
+    );
+
+    println!(
+        "\n{:<22} {:>10} {:>10} {:>8} {:>10} {:>12}",
+        "policy", "rollout", "step", "idle", "TGS", "skipped-iter"
+    );
+    let mut verl = 0.0;
+    for p in [
+        Policy::Verl,
+        Policy::Rlhfuse,
+        Policy::Verl2x,
+        Policy::ModelSpec,
+        Policy::NgramSpec,
+        Policy::specactor(),
+    ] {
+        let r = simulate_step(&cfg, &p, step, 7);
+        if p == Policy::Verl {
+            verl = r.rollout_s;
+        }
+        println!(
+            "{:<22} {:>9.1}s {:>9.1}s {:>7.0}% {:>10.1} {:>11.0}%",
+            p.label(),
+            r.rollout_s,
+            r.step_s,
+            r.idle_frac * 100.0,
+            r.mean_tgs,
+            r.tail_skipped_iter_frac * 100.0
+        );
+    }
+    let sa = simulate_step(&cfg, &Policy::specactor(), step, 7);
+    println!("\nSpecActor rollout speedup vs veRL: {:.2}x", verl / sa.rollout_s);
+}

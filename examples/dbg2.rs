@@ -1,0 +1,20 @@
+use specactor::sim::*;
+use specactor::planner::costmodel::CostModel;
+fn main() {
+    // hand-roll the bulk-phase math vs sim outcome
+    let m = CostModel::paper_32b();
+    println!("decode(256)={:.1}ms V_2(256)={:.1}ms D_small(256)={:.1}ms",
+        m.decode(256)*1e3, m.verify(4,2,256)*1e3, m.draft("draft_small",256)*1e3);
+    let base = TraceConfig::dapo_32b_20k();
+    let cfg = scaled(&base, 4, 4000);
+    for (l, p) in [("verl", Policy::Verl), ("dec", Policy::SpecActor{decoupled:true,reconfig:false,fon:false})] {
+        let r = simulate_step(&cfg, &p, 140, 7);
+        // time-weighted: fraction of worker busy time at b>=128
+        let mut big = 0.0; let mut small = 0.0;
+        for s in &r.timeline {
+            if s.batch >= 128 { big += s.end - s.start } else { small += s.end - s.start }
+        }
+        println!("{l}: rollout={:.1}s busy big-batch={:.0}s small-batch={:.0}s tokens={}",
+                 r.rollout_s, big, small, r.total_tokens);
+    }
+}

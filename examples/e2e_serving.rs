@@ -1,0 +1,104 @@
+//! End-to-end validation driver (DESIGN.md §7): loads the AOT-compiled
+//! SpecGPT family, serves a batched rollout through the full stack —
+//! ladder selection → Algorithm 1 window → multi-worker coupled
+//! speculation — and reports latency / throughput / acceptance vs the
+//! vanilla engine, asserting losslessness. Results are recorded in
+//! EXPERIMENTS.md.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_serving -- --requests 6 --budget 48
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+use specactor::coordinator::global::{plan_initial, rollout, GlobalConfig};
+use specactor::engine::{EngineConfig, Request, SpecMode, Worker};
+use specactor::planner::costmodel::CostModel;
+use specactor::runtime::Runtime;
+use specactor::util::cli::Args;
+
+fn main() -> Result<()> {
+    let mut args = Args::from_env().map_err(|e| anyhow::anyhow!(e))?;
+    let art = PathBuf::from(args.opt("artifacts", "artifacts"));
+    let n = args.opt_parse("requests", 6usize);
+    let budget = args.opt_parse("budget", 48usize);
+    let workers = args.opt_parse("workers", 2usize);
+    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+
+    let rt = Runtime::load(&art)?;
+    let m = rt.manifest.clone();
+    let vocab = rt.model(&m.target)?.vocab as i32;
+    let prompts: Vec<(u64, Vec<i32>)> = (0..n as u64)
+        .map(|i| {
+            let start = m.reserved + (i as i32 * 83) % (vocab - m.reserved);
+            let p: Vec<i32> = (0..m.prompt_len)
+                .map(|j| m.reserved + (start + j as i32) % (vocab - m.reserved))
+                .collect();
+            (i, p)
+        })
+        .collect();
+
+    // vanilla reference (losslessness oracle + baseline timing)
+    let reqs: Vec<Request> =
+        prompts.iter().map(|(id, p)| Request::new(*id, p.clone(), budget)).collect();
+    let cfg = EngineConfig { mode: SpecMode::Vanilla, ..Default::default() };
+    let mut vw = Worker::new(&rt, cfg, reqs)?;
+    let vrep = vw.rollout_vanilla()?;
+    let vanilla_out = vw.outputs();
+    println!(
+        "vanilla:  {:>7.2}s  {:>6.1} tok/s  ({} target steps)",
+        vrep.wall_s,
+        vrep.tokens_per_second(),
+        vrep.target_steps
+    );
+
+    // SpecActor path: ladder + Algorithm 1, then multi-worker rollout
+    let cost = CostModel::paper_32b();
+    let profiled = vec![
+        ("draft_mid".to_string(), 0.82),
+        ("draft_small".to_string(), 0.74),
+        ("ngram".to_string(), 0.40),
+    ];
+    let (method, window) = plan_initial(&cost, &profiled, n, 8, 4);
+    println!("plan: method={method} window={window} workers={workers}");
+
+    let gcfg = GlobalConfig {
+        artifacts: art.clone(),
+        n_workers: workers,
+        window: Some(window),
+        temperature: 1.0,
+        seed: 7,
+        fon: true,
+    };
+    let rank: Vec<String> = std::iter::once(method.clone())
+        .chain(profiled.iter().map(|(n, _)| n.clone()).filter(|x| *x != method))
+        .collect();
+    let summary = rollout(&gcfg, prompts, budget, &rank, window)?;
+    let total_tokens: usize = summary.outcomes.iter().map(|o| o.tokens.len()).sum();
+    let acc = {
+        let (a, d) = summary
+            .per_worker
+            .iter()
+            .fold((0u64, 0u64), |(a, d), r| (a + r.accepted_tokens, d + r.drafted_tokens));
+        a as f64 / d.max(1) as f64
+    };
+    println!(
+        "specactor:{:>7.2}s  {:>6.1} tok/s  (acceptance {:.2}, {} workers)",
+        summary.wall_s,
+        total_tokens as f64 / summary.wall_s,
+        acc,
+        summary.per_worker.len()
+    );
+    println!("speedup: {:.2}x", vrep.wall_s / summary.wall_s);
+
+    // losslessness across the whole serving path
+    for (i, o) in summary.outcomes.iter().enumerate() {
+        assert_eq!(
+            o.tokens, vanilla_out[i],
+            "request {i} diverged from vanilla decoding"
+        );
+    }
+    println!("losslessness: all {} outputs identical to vanilla ✓", summary.outcomes.len());
+    Ok(())
+}

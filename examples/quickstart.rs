@@ -1,0 +1,90 @@
+//! Quickstart: load the AOT-compiled SpecGPT family, run a prefill + a few
+//! decode steps on the target model, then a speculative verify step, and
+//! print per-step latencies.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use std::time::Instant;
+
+use anyhow::Result;
+use specactor::runtime::Runtime;
+use specactor::util::rng::{position_rng, sample_logits};
+
+fn main() -> Result<()> {
+    let art = std::env::args().nth(1).unwrap_or_else(|| "artifacts".to_string());
+    let rt = Runtime::load(std::path::Path::new(&art))?;
+    let m = rt.manifest.clone();
+    println!(
+        "loaded manifest: target={} drafters={:?} buckets={:?} windows={:?}",
+        m.target, m.drafters, m.batch_buckets, m.windows
+    );
+
+    let batch = 4usize;
+    let p = m.prompt_len;
+    let info = rt.model(&m.target)?.clone();
+
+    // Prompts: each request starts at a different token so trajectories
+    // (and acceptance behaviour) differ per request.
+    let mut tokens = Vec::with_capacity(batch * p);
+    for r in 0..batch {
+        let start = 10 + 37 * r as i32;
+        for i in 0..p {
+            tokens.push(m.reserved + (start + i as i32) % (info.vocab as i32 - m.reserved));
+        }
+    }
+
+    let mut cache = rt.new_cache(&m.target, batch)?;
+    let t0 = Instant::now();
+    let out = rt.prefill(&m.target, &tokens, &mut cache)?;
+    println!("prefill[b={batch}, P={p}]: {:?}", t0.elapsed());
+
+    // Sample the first generated token per request from the shared tape.
+    let seed = 7u64;
+    let mut last: Vec<i32> = (0..batch)
+        .map(|i| {
+            let mut rng = position_rng(seed, i as u64, p as u64);
+            sample_logits(out.at(i, 0), 1.0, &mut rng) as i32
+        })
+        .collect();
+
+    // A few vanilla decode steps (w = 1).
+    for step in 0..8 {
+        let t = Instant::now();
+        let out = rt.step(&m.target, &last, 1, &mut cache)?;
+        for l in cache.lens.iter_mut() {
+            *l += 1;
+        }
+        last = (0..batch)
+            .map(|i| {
+                let pos = cache.lens[i] as u64;
+                let mut rng = position_rng(seed, i as u64, pos);
+                sample_logits(out.at(i, 0), 1.0, &mut rng) as i32
+            })
+            .collect();
+        println!("decode step {step}: {:?} tokens={last:?}", t.elapsed());
+    }
+
+    // One speculative verify step (w = 4) on the same cache: score 4 draft
+    // positions in a single pass.
+    let w = 4usize;
+    let mut draft_tokens = Vec::with_capacity(batch * w);
+    for &t in &last {
+        // naive draft: token, then its successor chain guess = token+1...
+        for j in 0..w {
+            draft_tokens.push(((t + j as i32) % (info.vocab as i32 - m.reserved)) + m.reserved);
+        }
+    }
+    let t = Instant::now();
+    let vout = rt.step(&m.target, &draft_tokens, w, &mut cache)?;
+    println!("verify step [w={w}]: {:?} (logits for {} positions)", t.elapsed(), batch * w);
+    let st = rt.stats.borrow();
+    println!(
+        "runtime stats: {} compiles ({:.2}s), {} executions ({:.3}s), host copies {:.3}s",
+        st.compiles, st.compile_s, st.executions, st.execute_s, st.host_copy_s
+    );
+    let _ = vout;
+    println!("quickstart OK");
+    Ok(())
+}

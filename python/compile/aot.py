@@ -1,0 +1,150 @@
+"""AOT compiler: lower every (model, fn, batch, window) variant to HLO text.
+
+Emits into ``artifacts/``:
+
+* ``{model}_{fn}_b{batch}[_w{window}].hlo.txt`` — HLO **text** (NOT a
+  serialized ``HloModuleProto``: jax >= 0.5 emits 64-bit instruction ids
+  that the runtime's xla_extension 0.5.1 rejects; the text parser reassigns
+  ids and round-trips cleanly — see /opt/xla-example/README.md).
+* ``weights/{model}.npz`` — model weights, keys ordered ``w000_...`` so the
+  rust runtime can sort-by-name to recover parameter order. Weights are
+  runtime *parameters* because the HLO-text printer elides large constants.
+* ``manifest.json`` — the contract with the rust runtime: model configs,
+  artifact table (file, model, fn, batch, window, shapes), weight
+  parameter lists, and family-level constants (eos/pad ids, succ params).
+
+Python runs ONCE at build time (``make artifacts``); the rust binary is
+self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# Batch buckets and draft windows lowered ahead of time. The engine rounds a
+# live batch up to the nearest bucket (padding with inactive slots).
+BATCH_BUCKETS = (1, 4, 8, 16, 32)
+WINDOWS = (1, 2, 4, 8)
+PROMPT_LEN = 16
+
+
+def to_hlo_text(fn, example_args) -> str:
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text()
+    # Large constants are elided by the printer ("..."): if any survive in
+    # the module the rust side would silently compute garbage. Weights are
+    # parameters, so nothing large should remain.
+    for line in text.splitlines():
+        if "constant(" in line and "..." in line:
+            raise RuntimeError(f"elided large constant in HLO text: {line[:120]}")
+    return text
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def weight_specs(cfg: M.ModelConfig, flat):
+    return [spec(a.shape, a.dtype) for a in flat]
+
+
+def lower_model(cfg: M.ModelConfig, weights, out_dir: str, manifest: dict,
+                batches, windows, prompt_len: int) -> None:
+    flat = M.flatten_weights(cfg, weights)
+    wspecs = weight_specs(cfg, flat)
+    names = M.weight_names(cfg)
+
+    # weights npz (ordered keys)
+    wpath = os.path.join(out_dir, "weights", f"{cfg.name}.npz")
+    os.makedirs(os.path.dirname(wpath), exist_ok=True)
+    np.savez(wpath, **{n: np.asarray(a) for n, a in zip(names, flat)})
+
+    manifest["models"][cfg.name] = {
+        "vocab": cfg.vocab, "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads, "d_head": cfg.d_head, "d_ff": cfg.d_ff,
+        "max_seq": cfg.max_seq, "block_k": cfg.block_k,
+        "weights_file": f"weights/{cfg.name}.npz",
+        "weight_names": names,
+    }
+
+    cache = (cfg.n_layers, None, cfg.max_seq, cfg.n_heads, cfg.d_head)
+
+    def emit(fname: str, fn, args, batch, window, kind):
+        t0 = time.time()
+        text = to_hlo_text(fn, args)
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append({
+            "file": fname, "model": cfg.name, "fn": kind,
+            "batch": batch, "window": window, "prompt_len": prompt_len,
+        })
+        print(f"  {fname}: {len(text)//1024} KiB in {time.time()-t0:.1f}s")
+
+    for b in batches:
+        kshape = (cfg.n_layers, b, cfg.max_seq, cfg.n_heads, cfg.d_head)
+        emit(f"{cfg.name}_prefill_b{b}.hlo.txt",
+             M.make_prefill(cfg, b, prompt_len),
+             wspecs + [spec((b, prompt_len), jnp.int32)], b, prompt_len,
+             "prefill")
+        for w in windows:
+            emit(f"{cfg.name}_step_b{b}_w{w}.hlo.txt",
+                 M.make_step(cfg, b, w),
+                 wspecs + [spec((b, w), jnp.int32), spec((b,), jnp.int32),
+                           spec(kshape), spec(kshape)], b, w, "step")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--batches", default=",".join(map(str, BATCH_BUCKETS)))
+    ap.add_argument("--windows", default=",".join(map(str, WINDOWS)))
+    ap.add_argument("--prompt-len", type=int, default=PROMPT_LEN)
+    args = ap.parse_args()
+
+    batches = [int(x) for x in args.batches.split(",") if x]
+    windows = [int(x) for x in args.windows.split(",") if x]
+    os.makedirs(args.out, exist_ok=True)
+
+    fam = M.family_weights()
+    manifest = {
+        "version": 1,
+        "eos_id": M.EOS_ID,
+        "pad_id": M.PAD_ID,
+        "reserved": M.RESERVED,
+        "noisy_band_lo": M.TARGET.noisy_band_lo,
+        "prompt_len": args.prompt_len,
+        "batch_buckets": batches,
+        "windows": windows,
+        "target": "target",
+        "drafters": ["draft_mid", "draft_small"],
+        "models": {},
+        "artifacts": [],
+    }
+    t0 = time.time()
+    for name in ("target", "draft_mid", "draft_small"):
+        print(f"lowering {name} ...")
+        lower_model(M.FAMILY[name], fam[name], args.out, manifest,
+                    batches, windows, args.prompt_len)
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest.json written; total {time.time()-t0:.0f}s, "
+          f"{len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

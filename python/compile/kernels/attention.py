@@ -1,0 +1,141 @@
+"""Layer-1 Pallas kernels: the speculative-verification hot-spot.
+
+The paper's compute hot-spot is *verification*: scoring ``w`` drafted
+positions per request in a single pass over the KV cache (decode is the
+``w = 1`` specialisation). On the authors' GPUs this is a large-batch
+attention problem; the TPU-minded adaptation here tiles for VMEM:
+
+* grid = (batch, heads, S / block_k): one program instance owns one
+  (request, head) pair and streams the KV cache HBM->VMEM in ``block_k``
+  chunks (the BlockSpec index maps express the HBM<->VMEM schedule the
+  paper's CUDA kernels express with threadblocks);
+* each chunk contributes an MXU-shaped ``[w, dh] x [dh, block_k]`` matmul
+  followed by an online-softmax update (flash-attention style), so VMEM
+  holds only ``w*dh + 2*block_k*dh + w*block_k`` floats regardless of
+  sequence length;
+* causal masking within the window uses the per-request cache length
+  ``lens`` so one lowered executable serves any (ragged) batch state.
+
+Kernels are lowered with ``interpret=True``: the CPU PJRT client cannot run
+Mosaic custom-calls, so interpret mode is the correctness path; real-TPU
+performance is estimated from the BlockSpec arithmetic in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _mha_kernel(q_ref, k_ref, v_ref, lens_ref, o_ref, acc_ref, m_ref, l_ref,
+                *, block_k: int, w: int, dh: int):
+    """One (batch, head) program; grid dim 2 walks the KV cache in chunks."""
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32)            # [w, dh]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)            # [bk, dh]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)            # [bk, dh]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+
+    scores = jnp.dot(q, k.T) * scale                     # [w, bk] (MXU tile)
+    jpos = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, (w, block_k), 1)
+    qpos = lens_ref[0] + jax.lax.broadcasted_iota(jnp.int32, (w, block_k), 0)
+    scores = jnp.where(jpos <= qpos, scores, NEG_INF)
+
+    # Online softmax update (flash-attention recurrence).
+    m_prev = m_ref[...]                                   # [w]
+    l_prev = l_ref[...]                                   # [w]
+    m_cur = jnp.max(scores, axis=-1)                      # [w]
+    m_new = jnp.maximum(m_prev, m_cur)
+    # Guard fully-masked rows: keep exp(NEG_INF - NEG_INF) from poisoning.
+    p = jnp.exp(scores - m_new[:, None])                  # [w, bk]
+    p = jnp.where(jpos <= qpos, p, 0.0)
+    alpha = jnp.where(m_prev == NEG_INF, 0.0, jnp.exp(m_prev - m_new))
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(p, v)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(kb == pl.num_programs(2) - 1)
+    def _finish():
+        l = l_ref[...]
+        safe_l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, :, 0, :] = (acc_ref[...] / safe_l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def mha_kv(q, k_cache, v_cache, lens, *, block_k: int = 128,
+           interpret: bool = True):
+    """Flash-style multi-head attention over a KV cache for a query window.
+
+    Args / semantics match :func:`ref.mha_kv_ref`. ``S`` must be a multiple
+    of ``block_k``.
+    """
+    b, w, h, dh = q.shape
+    s = k_cache.shape[1]
+    if s % block_k != 0:
+        raise ValueError(f"S={s} must be a multiple of block_k={block_k}")
+    grid = (b, h, s // block_k)
+    kernel = functools.partial(_mha_kernel, block_k=block_k, w=w, dh=dh)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, w, 1, dh), lambda i, j, kb: (i, 0, j, 0)),
+            pl.BlockSpec((1, block_k, 1, dh), lambda i, j, kb: (i, kb, j, 0)),
+            pl.BlockSpec((1, block_k, 1, dh), lambda i, j, kb: (i, kb, j, 0)),
+            pl.BlockSpec((1,), lambda i, j, kb: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, w, 1, dh), lambda i, j, kb: (i, 0, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, w, h, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((w, dh), jnp.float32),
+            pltpu.VMEM((w,), jnp.float32),
+            pltpu.VMEM((w,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_cache, v_cache, lens)
+
+
+def _ffn_kernel(x_ref, w1_ref, w2_ref, o_ref):
+    """Fused MLP block: GELU(x @ w1) @ w2 for one row-block of tokens."""
+    x = x_ref[...].astype(jnp.float32)                    # [bm, d]
+    h = jnp.dot(x, w1_ref[...].astype(jnp.float32))       # [bm, f]
+    h = 0.5 * h * (1.0 + jnp.tanh(0.7978845608028654 * (h + 0.044715 * h**3)))
+    o_ref[...] = jnp.dot(h, w2_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def ffn(x, w1, w2, *, block_m: int = 8, interpret: bool = True):
+    """Fused feed-forward: GELU(x @ w1) @ w2, tiled over rows.
+
+    x: [n, d] (n must be a multiple of block_m), w1: [d, f], w2: [f, d].
+    """
+    n, d = x.shape
+    f = w1.shape[1]
+    if n % block_m != 0:
+        raise ValueError(f"n={n} must be a multiple of block_m={block_m}")
+    return pl.pallas_call(
+        _ffn_kernel,
+        grid=(n // block_m,),
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, f), lambda i: (0, 0)),
+            pl.BlockSpec((f, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=interpret,
+    )(x, w1, w2)

@@ -1,0 +1,70 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has an exact (up to float tolerance)
+reference implementation here. pytest (``python/tests/test_kernels.py``)
+sweeps shapes/dtypes with hypothesis and asserts ``assert_allclose`` between
+kernel and reference.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def mha_kv_ref(q, k_cache, v_cache, lens):
+    """Reference multi-head attention over a KV cache for a query window.
+
+    Args:
+      q:        [b, w, h, dh] query states for the ``w`` new positions.
+      k_cache:  [b, S, h, dh] key cache. Positions ``lens[i] .. lens[i]+w-1``
+                already contain the window's own keys.
+      v_cache:  [b, S, h, dh] value cache (same layout as ``k_cache``).
+      lens:     [b] int32, number of cached positions *before* this window.
+
+    Query ``qi`` (0-based within the window) sits at absolute position
+    ``lens[i] + qi`` and attends to cache slots ``0 .. lens[i]+qi``
+    (inclusive) — causal within the window, full over the prefix.
+
+    Returns: [b, w, h, dh] attention outputs (same dtype as ``q``).
+    """
+    b, w, h, dh = q.shape
+    s = k_cache.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, dtype=jnp.float32))
+    # scores: [b, h, w, S]
+    scores = jnp.einsum(
+        "bwhd,bshd->bhws",
+        q.astype(jnp.float32),
+        k_cache.astype(jnp.float32),
+    ) * scale
+    kpos = jnp.arange(s)[None, None, None, :]                     # [1,1,1,S]
+    qpos = lens[:, None, None, None] + jnp.arange(w)[None, None, :, None]
+    mask = kpos <= qpos                                           # [b,1,w,S]
+    scores = jnp.where(mask, scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+    out = jnp.einsum("bhws,bshd->bwhd", probs, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def rmsnorm_ref(x, gamma, eps=1e-5):
+    """RMSNorm over the last axis. x: [..., d], gamma: [d]."""
+    x32 = x.astype(jnp.float32)
+    rms = jnp.sqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return ((x32 / rms) * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+def gelu_ref(x):
+    """tanh-approximation GELU (matches the kernel's polynomial)."""
+    x32 = x.astype(jnp.float32)
+    return (0.5 * x32 * (1.0 + jnp.tanh(
+        0.7978845608028654 * (x32 + 0.044715 * x32 ** 3)))).astype(x.dtype)
+
+
+def ffn_ref(x, w1, w2):
+    """2-layer MLP with GELU. x: [..., d], w1: [d, f], w2: [f, d]."""
+    x32 = x.astype(jnp.float32)
+    hidden = gelu_ref(x32 @ w1.astype(jnp.float32))
+    return (hidden @ w2.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,290 @@
+"""Layer-2: the SpecGPT model family (JAX, calling the Pallas kernels).
+
+The paper rolls out Qwen2.5-32B with Qwen2.5-0.5B / 1.5B drafters. Offline
+and CPU-only we reproduce the *speculation-relevant* structure at laptop
+scale (see DESIGN.md §2): a GPT-style target model plus truncated-depth
+drafters that share its embeddings and unembedding (early-exit drafting), so
+acceptance rates land in a realistic, tunable mid-range and a deeper drafter
+really is better-aligned than a shallower one.
+
+Acceptance construction: final logits mix a *successor prior* (a fixed
+pseudo-random token-successor table, sharply peaked and shared by every
+family member) with the transformer's own contribution, gated per token:
+
+    logits = succ_scale * onehot(succ[t]) + noise_scale * (1 + g[t]) * h @ W_u
+
+``g`` is high for a band of token ids, so requests whose trajectories enter
+that band see lower draft/target agreement — reproducing the per-request
+acceptance heterogeneity of Fig 7 with a mechanism, not a dial per request.
+
+All functions are pure; weights are baked into the AOT artifacts as
+constants (``aot.py``), so the rust runtime sees black-box
+prefill/decode/verify executables, exactly like a serving engine sees a GPU
+model.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import mha_kv, ffn
+
+PAD_ID = 0
+EOS_ID = 1
+RESERVED = 2
+SUCC_MULT = 5
+SUCC_ADD = 17
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static configuration of one SpecGPT family member."""
+
+    name: str
+    vocab: int = 256
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    d_head: int = 32
+    d_ff: int = 256
+    max_seq: int = 256
+    block_k: int = 64
+    # logits mixing (see module docstring)
+    succ_scale: float = 8.5
+    noise_scale: float = 0.7
+    noisy_band_lo: int = 160   # tokens in [lo, hi) have extra logit noise
+    noisy_band_hi: int = 256
+    noisy_gain: float = 3.0
+    seed: int = 2025
+
+
+# The shipped family: "32B-sim" target plus two early-exit drafters, echoing
+# Qwen2.5-32B / 1.5B / 0.5B. Drafters share the target's first layers.
+TARGET = ModelConfig(name="target", n_layers=4)
+DRAFT_MID = dataclasses.replace(TARGET, name="draft_mid", n_layers=2)
+DRAFT_SMALL = dataclasses.replace(TARGET, name="draft_small", n_layers=1)
+FAMILY = {m.name: m for m in (TARGET, DRAFT_MID, DRAFT_SMALL)}
+
+
+def successor_table(cfg: ModelConfig) -> jnp.ndarray:
+    """Fixed token-successor table; never maps into the reserved ids.
+
+    The table is TWO closed affine cycles: tokens in [RESERVED, band_lo)
+    cycle among themselves (the "quiet" region) and tokens in
+    [band_lo, vocab) cycle among themselves (the "noisy" region, see
+    ``noise_gate``). A request therefore *stays* in the region its prompt
+    starts in (modulo noise-induced hops), which is what makes acceptance
+    rates request-sticky — the mechanism behind the Fig 7 heterogeneity.
+    """
+    t = jnp.arange(cfg.vocab)
+    lo = cfg.noisy_band_lo
+    n_quiet = lo - RESERVED
+    n_noisy = cfg.vocab - lo
+    quiet_succ = RESERVED + (SUCC_MULT * (t - RESERVED) + SUCC_ADD) % n_quiet
+    noisy_succ = lo + (SUCC_MULT * (t - lo) + SUCC_ADD) % n_noisy
+    succ = jnp.where(t < lo, quiet_succ, noisy_succ)
+    # reserved ids also get a (quiet) successor so generation can't stall
+    return jnp.where(t < RESERVED, RESERVED + t, succ)
+
+
+def noise_gate(cfg: ModelConfig) -> jnp.ndarray:
+    """Per-token extra-noise gain g[t] (0 outside the noisy band)."""
+    t = jnp.arange(cfg.vocab)
+    in_band = (t >= cfg.noisy_band_lo) & (t < cfg.noisy_band_hi)
+    return jnp.where(in_band, cfg.noisy_gain, 0.0).astype(jnp.float32)
+
+
+def init_weights(cfg: ModelConfig):
+    """Deterministic weights for the *target*; drafters truncate these."""
+    key = jax.random.PRNGKey(cfg.seed)
+    keys = jax.random.split(key, 6 + 6 * cfg.n_layers)
+    d, dh, h, f, v = cfg.d_model, cfg.d_head, cfg.n_heads, cfg.d_ff, cfg.vocab
+    sd = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    w = {
+        "embed": jax.random.normal(keys[0], (v, d), jnp.float32) * 1.0,
+        "pos": jax.random.normal(keys[1], (cfg.max_seq, d), jnp.float32) * 0.3,
+        "unembed": jax.random.normal(keys[2], (d, v), jnp.float32) * sd,
+        "ln_f": jnp.ones((d,), jnp.float32),
+        "succ": successor_table(cfg),
+        "gate": noise_gate(cfg),
+        "layers": [],
+    }
+    for li in range(cfg.n_layers):
+        k = keys[6 + 6 * li: 12 + 6 * li]
+        w["layers"].append({
+            "ln1": jnp.ones((d,), jnp.float32),
+            "wq": jax.random.normal(k[0], (d, h * dh), jnp.float32) * sd,
+            "wk": jax.random.normal(k[1], (d, h * dh), jnp.float32) * sd,
+            "wv": jax.random.normal(k[2], (d, h * dh), jnp.float32) * sd,
+            "wo": jax.random.normal(k[3], (h * dh, d), jnp.float32) * sd,
+            "ln2": jnp.ones((d,), jnp.float32),
+            "w1": jax.random.normal(k[4], (d, f), jnp.float32) * sd,
+            "w2": jax.random.normal(k[5], (f, d), jnp.float32)
+                  * (1.0 / jnp.sqrt(jnp.asarray(f, jnp.float32))),
+        })
+    return w
+
+
+def family_weights():
+    """Weights for every family member. Drafters share the target's tensors
+    (early-exit drafting): first ``n_layers`` blocks + embed/unembed."""
+    target_w = init_weights(TARGET)
+    out = {"target": target_w}
+    for cfg in (DRAFT_MID, DRAFT_SMALL):
+        w = dict(target_w)
+        w["layers"] = target_w["layers"][: cfg.n_layers]
+        out[cfg.name] = w
+    return out
+
+
+def rmsnorm(x, gamma, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    rms = jnp.sqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (x32 / rms) * gamma
+
+
+def _update_cache(cache, new, lens):
+    """Write [b, w, h, dh] new entries at per-request offsets ``lens``.
+
+    cache: [b, S, h, dh]. Vectorised dynamic_update_slice over the batch —
+    this is the ragged-batch KV write a serving engine performs per step.
+    """
+    def upd(c, n, p):
+        return jax.lax.dynamic_update_slice(c, n, (p, 0, 0))
+    return jax.vmap(upd)(cache, new, lens)
+
+
+def _ffn_block_m(n: int) -> int:
+    for bm in (8, 4, 2, 1):
+        if n % bm == 0:
+            return bm
+    return 1
+
+
+def forward_window(cfg: ModelConfig, weights, tokens, lens, k_cache, v_cache,
+                   *, interpret: bool = True):
+    """Run ``w`` new positions through the model, updating the KV cache.
+
+    Args:
+      tokens:  [b, w] int32 token ids for the new positions.
+      lens:    [b] int32 number of positions already in the cache.
+      k_cache: [L, b, S, h, dh] key cache; v_cache same.
+
+    Returns: (logits [b, w, vocab], k_cache', v_cache').
+
+    ``w = 1`` is a decode step; ``w > 1`` is speculative *verification* (the
+    hot-spot: one parallel pass scores all drafted positions) and is also
+    used for prefill (``lens = 0``).
+    """
+    b, w = tokens.shape
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.d_head
+    pos_idx = lens[:, None] + jnp.arange(w)[None, :]          # [b, w]
+    x = weights["embed"][tokens] + weights["pos"][pos_idx]     # [b, w, d]
+
+    new_k, new_v = [], []
+    for li, lw in enumerate(weights["layers"]):
+        xn = rmsnorm(x, lw["ln1"])
+        q = (xn @ lw["wq"]).reshape(b, w, h, dh)
+        kk = (xn @ lw["wk"]).reshape(b, w, h, dh)
+        vv = (xn @ lw["wv"]).reshape(b, w, h, dh)
+        kc = _update_cache(k_cache[li], kk, lens)
+        vc = _update_cache(v_cache[li], vv, lens)
+        new_k.append(kc)
+        new_v.append(vc)
+        attn = mha_kv(q.astype(jnp.float32), kc, vc, lens,
+                      block_k=cfg.block_k, interpret=interpret)
+        x = x + (attn.reshape(b, w, h * dh) @ lw["wo"])
+        xn2 = rmsnorm(x, lw["ln2"])
+        ff = ffn(xn2.reshape(b * w, d), lw["w1"], lw["w2"],
+                 block_m=_ffn_block_m(b * w), interpret=interpret)
+        x = x + ff.reshape(b, w, d)
+
+    hfin = rmsnorm(x, weights["ln_f"])                         # [b, w, d]
+    tx_logits = hfin @ weights["unembed"]                      # [b, w, V]
+    succ_onehot = jax.nn.one_hot(weights["succ"][tokens], cfg.vocab,
+                                 dtype=jnp.float32)
+    gain = cfg.noise_scale * (1.0 + weights["gate"][tokens])   # [b, w]
+    logits = cfg.succ_scale * succ_onehot + gain[..., None] * tx_logits
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+def empty_cache(cfg: ModelConfig, batch: int):
+    shape = (cfg.n_layers, batch, cfg.max_seq, cfg.n_heads, cfg.d_head)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Weight flattening (weights travel as runtime parameters, NOT baked
+# constants: XLA's HLO-text printer elides large literals, so baked weights
+# would not survive the text interchange — see DESIGN.md). The rust runtime
+# uploads the .npz once to device buffers and passes them to every call.
+# ---------------------------------------------------------------------------
+
+def weight_names(cfg: ModelConfig):
+    """Flat, ordered weight-parameter names. Index prefix fixes ordering."""
+    names = ["embed", "pos", "unembed", "ln_f", "succ", "gate"]
+    for li in range(cfg.n_layers):
+        for t in ("ln1", "wq", "wk", "wv", "wo", "ln2", "w1", "w2"):
+            names.append(f"L{li}.{t}")
+    return [f"w{i:03d}_{n}" for i, n in enumerate(names)]
+
+
+def flatten_weights(cfg: ModelConfig, weights):
+    flat = [weights["embed"], weights["pos"], weights["unembed"],
+            weights["ln_f"], weights["succ"].astype(jnp.int32),
+            weights["gate"]]
+    for li in range(cfg.n_layers):
+        lw = weights["layers"][li]
+        flat += [lw["ln1"], lw["wq"], lw["wk"], lw["wv"], lw["wo"],
+                 lw["ln2"], lw["w1"], lw["w2"]]
+    return flat
+
+
+def unflatten_weights(cfg: ModelConfig, flat):
+    w = {"embed": flat[0], "pos": flat[1], "unembed": flat[2],
+         "ln_f": flat[3], "succ": flat[4], "gate": flat[5], "layers": []}
+    i = 6
+    for _ in range(cfg.n_layers):
+        keys = ("ln1", "wq", "wk", "wv", "wo", "ln2", "w1", "w2")
+        w["layers"].append(dict(zip(keys, flat[i:i + 8])))
+        i += 8
+    return w
+
+
+# ---------------------------------------------------------------------------
+# AOT entrypoints — one per (model, fn, batch, window). Weights are the
+# *leading* parameters so the rust runtime can reuse one uploaded buffer set
+# across every executable of a model.
+# ---------------------------------------------------------------------------
+
+def make_prefill(cfg: ModelConfig, batch: int, prompt_len: int,
+                 *, interpret: bool = True):
+    """prefill(*weights, tokens[b, P]) -> (last_logits[b, V], k, v)."""
+    def prefill(*args):
+        weights = unflatten_weights(cfg, args[:-1])
+        tokens = args[-1]
+        k0, v0 = empty_cache(cfg, batch)
+        lens = jnp.zeros((batch,), jnp.int32)
+        logits, k, v = forward_window(cfg, weights, tokens, lens, k0, v0,
+                                      interpret=interpret)
+        return logits[:, -1, :], k, v
+    return prefill
+
+
+def make_step(cfg: ModelConfig, batch: int, window: int,
+              *, interpret: bool = True):
+    """step(*weights, tokens[b, w], lens[b], k, v) -> (logits, k', v').
+
+    window = 1 → decode; window > 1 → verification of a draft window
+    (or prefill continuation).
+    """
+    def step(*args):
+        weights = unflatten_weights(cfg, args[:-4])
+        tokens, lens, k_cache, v_cache = args[-4:]
+        return forward_window(cfg, weights, tokens, lens, k_cache, v_cache,
+                              interpret=interpret)
+    return step

@@ -1,0 +1,122 @@
+"""L1 kernel correctness: Pallas (interpret=True) vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and cache-fill levels; every case asserts
+assert_allclose against ref.py.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import mha_kv, ffn
+from compile.kernels.ref import mha_kv_ref, ffn_ref, rmsnorm_ref, gelu_ref
+
+
+def _rand(rng, shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    w=st.integers(1, 8),
+    h=st.integers(1, 3),
+    dh=st.sampled_from([4, 8, 16]),
+    nblocks=st.integers(1, 4),
+    block_k=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mha_kv_matches_ref(b, w, h, dh, nblocks, block_k, seed):
+    s = nblocks * block_k
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, (b, w, h, dh))
+    k = _rand(rng, (b, s, h, dh))
+    v = _rand(rng, (b, s, h, dh))
+    max_len = max(s - w, 0)
+    lens = jnp.asarray(rng.integers(0, max_len + 1, size=(b,)), jnp.int32)
+    out = mha_kv(q, k, v, lens, block_k=block_k)
+    ref = mha_kv_ref(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_mha_kv_zero_len_attends_only_self():
+    # lens = 0 and w = 1: the query can only attend to its own (just
+    # written) cache slot, so the output equals v[0].
+    rng = np.random.default_rng(0)
+    b, h, dh, s = 2, 2, 8, 32
+    q = _rand(rng, (b, 1, h, dh))
+    k = _rand(rng, (b, s, h, dh))
+    v = _rand(rng, (b, s, h, dh))
+    lens = jnp.zeros((b,), jnp.int32)
+    out = mha_kv(q, k, v, lens, block_k=16)
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(v[:, 0]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_mha_kv_causal_within_window():
+    # Perturbing cache beyond the visible range must not change outputs.
+    rng = np.random.default_rng(1)
+    b, w, h, dh, s = 1, 4, 2, 8, 64
+    q = _rand(rng, (b, w, h, dh))
+    k = _rand(rng, (b, s, h, dh))
+    v = _rand(rng, (b, s, h, dh))
+    lens = jnp.asarray([10], jnp.int32)
+    out1 = mha_kv(q, k, v, lens, block_k=16)
+    # visible range for last query = 0..10+3; poison 14..
+    k2 = k.at[:, 14:].set(99.0)
+    v2 = v.at[:, 14:].set(-99.0)
+    out2 = mha_kv(q, k2, v2, lens, block_k=16)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_mha_kv_rejects_bad_block():
+    rng = np.random.default_rng(2)
+    q = _rand(rng, (1, 1, 1, 4))
+    k = _rand(rng, (1, 24, 1, 4))
+    v = _rand(rng, (1, 24, 1, 4))
+    with pytest.raises(ValueError):
+        mha_kv(q, k, v, jnp.zeros((1,), jnp.int32), block_k=16)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    nrows=st.integers(1, 4),
+    block_m=st.sampled_from([1, 2, 4]),
+    d=st.sampled_from([8, 16]),
+    f=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ffn_matches_ref(nrows, block_m, d, f, seed):
+    n = nrows * block_m
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (n, d))
+    w1 = _rand(rng, (d, f))
+    w2 = _rand(rng, (f, d))
+    out = ffn(x, w1, w2, block_m=block_m)
+    ref = ffn_ref(x, w1, w2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ffn_rejects_bad_block():
+    rng = np.random.default_rng(3)
+    with pytest.raises(ValueError):
+        ffn(_rand(rng, (3, 8)), _rand(rng, (8, 16)), _rand(rng, (16, 8)),
+            block_m=2)
+
+
+def test_gelu_ref_basic():
+    x = jnp.asarray([-2.0, 0.0, 2.0], jnp.float32)
+    g = np.asarray(gelu_ref(x))
+    assert g[1] == 0.0 and g[2] > 1.9 and -0.1 < g[0] < 0.0
+
+
+def test_rmsnorm_ref_unit_scale():
+    rng = np.random.default_rng(4)
+    x = _rand(rng, (5, 16))
+    out = np.asarray(rmsnorm_ref(x, jnp.ones((16,))))
+    rms = np.sqrt((out ** 2).mean(axis=-1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)

@@ -1,0 +1,47 @@
+//! Figure 12: mean training step time of every system on the three dense
+//! traces (GRPO/DAPO/PPO-32B-20K). Also prints the §5.2 headline ratios
+//! (rollout speedup over veRL, speedup over vanilla spec baselines).
+use specactor::sim::{scaled, simulate_step, Policy, TraceConfig};
+use specactor::util::benchkit::Bench;
+use specactor::util::cli::Args;
+
+fn main() {
+    let mut args = Args::from_env().unwrap();
+    let full = args.flag("full");
+    let steps: Vec<usize> = args.opt_list("steps", "60,140");
+    args.finish().unwrap();
+    let (f, cap) = if full { (1, 20_000) } else { (4, 4_000) };
+
+    let policies = [
+        Policy::Verl,
+        Policy::Rlhfuse,
+        Policy::Verl2x,
+        Policy::ModelSpec,
+        Policy::NgramSpec,
+        Policy::specactor(),
+    ];
+    for base in TraceConfig::all_dense() {
+        let cfg = scaled(&base, f, cap);
+        let mut bench = Bench::default();
+        let mut rollout: Vec<(String, f64)> = Vec::new();
+        for p in &policies {
+            let (mut st, mut ro) = (0.0, 0.0);
+            for &s in &steps {
+                let r = simulate_step(&cfg, p, s, 7);
+                st += r.step_s;
+                ro += r.rollout_s;
+            }
+            bench.record(&p.label(), st / steps.len() as f64);
+            rollout.push((p.label(), ro / steps.len() as f64));
+        }
+        bench.print_table(&format!("Fig 12 — mean step time, {} (scale 1/{f})", cfg.name));
+        let verl = rollout[0].1;
+        let vspec = rollout[3].1.min(rollout[4].1);
+        let sa = rollout.last().unwrap().1;
+        println!("rollout speedup vs veRL: {:.2}x (paper: 2.0-2.4x)", verl / sa);
+        println!("rollout speedup vs best vanilla spec: {:.2}x (paper: 1.1-2.6x)", vspec / sa);
+        let st_verl = bench.results[0].mean_s;
+        let st_sa = bench.results.last().unwrap().mean_s;
+        println!("end-to-end step speedup vs veRL: {:.2}x (paper: 1.4-2.3x)", st_verl / st_sa);
+    }
+}

@@ -1,0 +1,42 @@
+//! Figure 13: per-step latency breakdown across training steps 100–200
+//! for every approach (models get "smarter" → longer responses).
+use specactor::sim::{scaled, simulate_step, Policy, TraceConfig};
+use specactor::util::cli::Args;
+
+fn main() {
+    let mut args = Args::from_env().unwrap();
+    let full = args.flag("full");
+    args.finish().unwrap();
+    let (f, cap) = if full { (1, 20_000) } else { (4, 4_000) };
+    let policies = [
+        Policy::Verl,
+        Policy::Rlhfuse,
+        Policy::ModelSpec,
+        Policy::NgramSpec,
+        Policy::specactor(),
+    ];
+    for base in TraceConfig::all_dense() {
+        let cfg = scaled(&base, f, cap);
+        println!("\n== Fig 13 — step breakdown, {} ==", cfg.name);
+        print!("{:<8}", "step");
+        for p in &policies {
+            print!("{:>18}", p.label());
+        }
+        println!();
+        for step in [100, 125, 150, 175, 200] {
+            print!("{:<8}", step);
+            for p in &policies {
+                let r = simulate_step(&cfg, p, step, 7);
+                print!("{:>17.1}s", r.step_s);
+            }
+            println!();
+        }
+        // §5.4 claim: SpecActor still fastest at late steps
+        let late_verl = simulate_step(&cfg, &Policy::Verl, 200, 7);
+        let late_sa = simulate_step(&cfg, &Policy::specactor(), 200, 7);
+        println!(
+            "step-200 rollout speedup: {:.2}x (paper: 1.8-2.7x)",
+            late_verl.rollout_s / late_sa.rollout_s
+        );
+    }
+}

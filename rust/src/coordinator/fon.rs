@@ -1,0 +1,190 @@
+//! Algorithm 3: greedy Fastest-of-N drafter assignment.
+//!
+//! When workers free up (their batch finished), deploy additional draft
+//! methods for straggler requests: requests sorted by acceptance rate
+//! ascending (worst first — they gain least from the current method),
+//! methods sorted by ladder rank, each (request, method) pair mapped to
+//! the least-loaded worker serving that method, bounded by `b_max`.
+
+use std::collections::BTreeMap;
+
+/// A free worker that can host one additional (drafter + verifier) pair.
+#[derive(Clone, Debug)]
+pub struct FreeWorker {
+    pub id: usize,
+    /// Verification slots still available on this worker.
+    pub capacity: usize,
+    /// Draft method this worker has been assigned to serve (None = any;
+    /// it is fixed by the first assignment, matching the paper's
+    /// one-method-per-scaled-verifier deployment).
+    pub method: Option<String>,
+    pub load: usize,
+}
+
+/// Assignment map: (request, method) -> worker id.
+pub type Assignment = BTreeMap<(u64, String), usize>;
+
+/// Inputs: straggler requests with their acceptance rates and the methods
+/// already attached to them.
+#[derive(Clone, Debug)]
+pub struct Straggler {
+    pub request: u64,
+    pub accept_rate: f64,
+    pub methods: Vec<String>,
+}
+
+/// Algorithm 3. `ladder_rank` must list methods best-first.
+pub fn assign(
+    stragglers: &mut [Straggler],
+    ladder_rank: &[String],
+    workers: &mut [FreeWorker],
+    b_max: usize,
+) -> Assignment {
+    let mut out = Assignment::new();
+    // line 1: sort requests by acceptance rate ascending
+    stragglers.sort_by(|a, b| a.accept_rate.partial_cmp(&b.accept_rate).unwrap());
+    // lines 3–9: draft-first greedy
+    for r in stragglers.iter() {
+        for method in ladder_rank {
+            if r.methods.contains(method) || out.contains_key(&(r.request, method.clone())) {
+                continue; // M(r, d) is not None
+            }
+            // GetMinLoadWorker(W_d, b_max): least-loaded worker already
+            // serving `method`, else claim an unassigned worker.
+            let cand = workers
+                .iter_mut()
+                .filter(|w| {
+                    w.load < w.capacity.min(b_max)
+                        && (w.method.as_deref() == Some(method) || w.method.is_none())
+                })
+                .min_by_key(|w| (w.method.is_none() as usize, w.load));
+            match cand {
+                Some(w) => {
+                    w.method.get_or_insert_with(|| method.clone());
+                    w.load += 1;
+                    out.insert((r.request, method.clone()), w.id);
+                }
+                None => continue,
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest_lite::check;
+
+    fn workers(n: usize, cap: usize) -> Vec<FreeWorker> {
+        (0..n).map(|id| FreeWorker { id, capacity: cap, method: None, load: 0 }).collect()
+    }
+
+    fn rank() -> Vec<String> {
+        vec!["draft_mid".into(), "draft_small".into(), "ngram".into()]
+    }
+
+    #[test]
+    fn worst_request_gets_most_methods() {
+        let mut s = vec![
+            Straggler { request: 1, accept_rate: 0.9, methods: vec!["draft_small".into()] },
+            Straggler { request: 2, accept_rate: 0.2, methods: vec!["draft_small".into()] },
+        ];
+        let mut w = workers(2, 1); // only 2 slots total
+        let a = assign(&mut s, &rank(), &mut w, 1);
+        // request 2 (worst) must be served first and get both free slots
+        let r2: Vec<_> = a.keys().filter(|(r, _)| *r == 2).collect();
+        let r1: Vec<_> = a.keys().filter(|(r, _)| *r == 1).collect();
+        assert_eq!(r2.len(), 2, "worst straggler under-served: {a:?}");
+        assert_eq!(r1.len(), 0);
+    }
+
+    #[test]
+    fn never_duplicates_existing_method() {
+        let mut s = vec![Straggler {
+            request: 7,
+            accept_rate: 0.1,
+            methods: vec!["draft_mid".into(), "draft_small".into(), "ngram".into()],
+        }];
+        let mut w = workers(4, 8);
+        let a = assign(&mut s, &rank(), &mut w, 8);
+        assert!(a.is_empty(), "assigned a method the request already has");
+    }
+
+    #[test]
+    fn respects_capacity() {
+        let mut s: Vec<Straggler> = (0..10)
+            .map(|i| Straggler { request: i, accept_rate: 0.1, methods: vec![] })
+            .collect();
+        let mut w = workers(1, 3);
+        let a = assign(&mut s, &rank(), &mut w, 8);
+        assert_eq!(a.len(), 3, "capacity 3 exceeded: {}", a.len());
+        assert_eq!(w[0].load, 3);
+    }
+
+    #[test]
+    fn b_max_caps_load() {
+        let mut s: Vec<Straggler> = (0..10)
+            .map(|i| Straggler { request: i, accept_rate: 0.1, methods: vec![] })
+            .collect();
+        let mut w = workers(1, 100);
+        let a = assign(&mut s, &rank(), &mut w, 4);
+        assert_eq!(a.len(), 4);
+    }
+
+    #[test]
+    fn one_method_per_scaled_worker() {
+        let mut s: Vec<Straggler> = (0..6)
+            .map(|i| Straggler { request: i, accept_rate: 0.1 * i as f64, methods: vec![] })
+            .collect();
+        let mut w = workers(3, 4);
+        let _ = assign(&mut s, &rank(), &mut w, 4);
+        for wk in &w {
+            assert!(wk.method.is_some() || wk.load == 0);
+        }
+    }
+
+    #[test]
+    fn prop_assignment_invariants() {
+        check("fon-invariants", 150, |g| {
+            let n_req = 1 + g.usize_in(0, 12);
+            let n_work = g.usize_in(0, 6);
+            let cap = 1 + g.usize_in(0, 6);
+            let b_max = 1 + g.usize_in(0, 6);
+            let mut s: Vec<Straggler> = (0..n_req)
+                .map(|i| Straggler {
+                    request: i as u64,
+                    accept_rate: g.prob(),
+                    methods: if g.bool() { vec!["draft_mid".into()] } else { vec![] },
+                })
+                .collect();
+            let mut w = workers(n_work, cap);
+            let a = assign(&mut s, &rank(), &mut w, b_max);
+            // no worker overloaded
+            for wk in &w {
+                prop_assert!(
+                    wk.load <= wk.capacity.min(b_max),
+                    "worker {} load {} cap {}",
+                    wk.id,
+                    wk.load,
+                    wk.capacity.min(b_max)
+                );
+            }
+            // no (request, method) duplicate of existing methods
+            for ((r, m), _) in &a {
+                let st = s.iter().find(|x| x.request == *r).unwrap();
+                prop_assert!(!st.methods.contains(m), "duplicated {m} for {r}");
+            }
+            // every assignment points at a real worker serving that method
+            for ((_, m), wid) in &a {
+                let wk = w.iter().find(|x| x.id == *wid).unwrap();
+                prop_assert!(wk.method.as_deref() == Some(m), "worker method mismatch");
+            }
+            // total assignments = total load
+            let total: usize = w.iter().map(|x| x.load).sum();
+            prop_assert!(total == a.len(), "load {total} != assignments {}", a.len());
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,15 @@
+//! Coordinator: the global scheduler's decision algorithms.
+//!
+//! * [`reconfig`] — Algorithm 2: request-level draft-window / mode
+//!   reconfiguration for below-average-acceptance requests.
+//! * [`fon`] — Algorithm 3: greedy Fastest-of-N drafter assignment onto
+//!   freed workers.
+//! * [`global`] — the real-engine orchestration used by the e2e example:
+//!   plan → per-worker rollout → FoN racing for stragglers.
+
+pub mod fon;
+pub mod global;
+pub mod reconfig;
+
+pub use fon::{assign, Assignment, FreeWorker, Straggler};
+pub use reconfig::{reconfigure_batch, reconfigure_request, Mode, RequestPlan};

@@ -1,0 +1,133 @@
+//! Algorithm 2: request-level reconfiguration during rollout.
+//!
+//! Called periodically (every `period` decoding iterations). For each
+//! request whose measured acceptance rate fell below the batch average,
+//! re-derive its best draft window under both coupled and decoupled
+//! modelling at b = 1, and switch it to whichever is faster.
+
+use crate::planner::costmodel::CostModel;
+use crate::planner::tgs::{tgs_coupled, tgs_decoupled};
+
+/// Speculation mode flag in a per-request plan (paper's `m_r`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    Coupled,
+    Decoupled,
+}
+
+/// Per-request draft plan `(w_r, m_r)`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RequestPlan {
+    pub w: usize,
+    pub mode: Mode,
+    pub tgs: f64,
+}
+
+/// argmax_w TGS for one mode at batch 1.
+fn best_window(
+    m: &CostModel,
+    method: &str,
+    g_v: usize,
+    p: f64,
+    max_w: usize,
+    mode: Mode,
+) -> (usize, f64) {
+    let mut best = (1usize, f64::MIN);
+    for w in 1..=max_w {
+        let t = match mode {
+            Mode::Coupled => tgs_coupled(m, method, g_v, w, 1, p),
+            Mode::Decoupled => tgs_decoupled(m, method, g_v, w, 1, p),
+        };
+        if t > best.1 {
+            best = (w, t);
+        }
+    }
+    best
+}
+
+/// Algorithm 2 for one request: profile → model both modes → SelectBetter.
+pub fn reconfigure_request(
+    m: &CostModel,
+    method: &str,
+    g_v: usize,
+    measured_p: f64,
+    max_w: usize,
+) -> RequestPlan {
+    let (wc, tc) = best_window(m, method, g_v, measured_p, max_w, Mode::Coupled);
+    let (wd, td) = best_window(m, method, g_v, measured_p, max_w, Mode::Decoupled);
+    if tc >= td {
+        RequestPlan { w: wc, mode: Mode::Coupled, tgs: tc }
+    } else {
+        RequestPlan { w: wd, mode: Mode::Decoupled, tgs: td }
+    }
+}
+
+/// Algorithm 2 over a batch: reconfigure every request whose acceptance is
+/// below the batch average. Returns (request index, plan) pairs.
+pub fn reconfigure_batch(
+    m: &CostModel,
+    method: &str,
+    g_v: usize,
+    accept_rates: &[f64],
+    max_w: usize,
+) -> Vec<(usize, RequestPlan)> {
+    if accept_rates.is_empty() {
+        return Vec::new();
+    }
+    let avg = accept_rates.iter().sum::<f64>() / accept_rates.len() as f64;
+    accept_rates
+        .iter()
+        .enumerate()
+        .filter(|(_, &p)| p < avg)
+        .map(|(i, &p)| (i, reconfigure_request(m, method, g_v, p, max_w)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest_lite::check;
+
+    #[test]
+    fn low_acceptance_gets_smaller_window() {
+        let m = CostModel::paper_32b();
+        let hi = reconfigure_request(&m, "draft_small", 4, 0.95, 12);
+        let lo = reconfigure_request(&m, "draft_small", 4, 0.25, 12);
+        assert!(lo.w <= hi.w, "low-p window {} > high-p window {}", lo.w, hi.w);
+    }
+
+    #[test]
+    fn only_below_average_requests_reconfigured() {
+        let m = CostModel::paper_32b();
+        let rates = [0.9, 0.8, 0.4, 0.95];
+        let plans = reconfigure_batch(&m, "draft_small", 4, &rates, 8);
+        let touched: Vec<usize> = plans.iter().map(|(i, _)| *i).collect();
+        assert_eq!(touched, vec![2]);
+    }
+
+    #[test]
+    fn select_better_really_selects_better() {
+        let m = CostModel::paper_32b();
+        check("reconfig-selects-max", 100, |g| {
+            let p = 0.05 + 0.9 * g.prob();
+            let plan = reconfigure_request(&m, "draft_mid", 4, p, 10);
+            for w in 1..=10 {
+                let tc = tgs_coupled(&m, "draft_mid", 4, w, 1, p);
+                let td = tgs_decoupled(&m, "draft_mid", 4, w, 1, p);
+                prop_assert!(
+                    plan.tgs >= tc - 1e-12 && plan.tgs >= td - 1e-12,
+                    "p={p}: picked {:?} but w={w} gives C={tc} D={td}",
+                    plan
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn empty_batch_is_noop() {
+        let m = CostModel::paper_32b();
+        assert!(reconfigure_batch(&m, "ngram", 4, &[], 8).is_empty());
+    }
+}

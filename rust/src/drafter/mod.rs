@@ -1,0 +1,91 @@
+//! Draft methods: the "N" in Fastest-of-N.
+//!
+//! Three families, matching the paper's ladder (§4.2):
+//! * model-based drafters (small SpecGPT family members run through the
+//!   runtime; see `engine::draft_worker`),
+//! * n-gram lookup ([`NgramDrafter`], prompt-lookup style [2]),
+//! * suffix-automaton lookup ([`SamDrafter`], SAM-decoding style [25]).
+//!
+//! Model-free drafters implement [`TokenDrafter`] — they see only the
+//! request's token history, draft in O(1)-ish per token, and run on the
+//! worker's CPU (the paper piggybacks them on existing workers the same
+//! way).
+
+pub mod ngram;
+pub mod sam;
+
+pub use ngram::NgramDrafter;
+pub use sam::SamDrafter;
+
+/// A model-free draft method over one request's token history.
+pub trait TokenDrafter: Send {
+    /// Human-readable method name (ladder key).
+    fn name(&self) -> &'static str;
+
+    /// Ingest newly accepted tokens (extends the indexed history).
+    fn extend(&mut self, tokens: &[i32]);
+
+    /// Propose up to `n` next tokens given the current history.
+    /// May return fewer (or none) when the structure has no prediction.
+    fn draft(&mut self, n: usize) -> Vec<i32>;
+
+    /// Current history length (for testing / resync checks).
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Reset to a bare state (request restart / migration).
+    fn reset(&mut self);
+}
+
+/// Identifier for a draft method in ladders/plans (model-based methods are
+/// named by their model; token drafters by their algorithm).
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum DraftMethod {
+    /// Small model drafter, e.g. "draft_small" / "draft_mid".
+    Model(String),
+    /// N-gram hash lookup.
+    Ngram,
+    /// Suffix-automaton lookup.
+    Sam,
+}
+
+impl DraftMethod {
+    pub fn label(&self) -> String {
+        match self {
+            DraftMethod::Model(m) => m.clone(),
+            DraftMethod::Ngram => "ngram".to_string(),
+            DraftMethod::Sam => "sam".to_string(),
+        }
+    }
+
+    pub fn parse(s: &str) -> DraftMethod {
+        match s {
+            "ngram" => DraftMethod::Ngram,
+            "sam" => DraftMethod::Sam,
+            other => DraftMethod::Model(other.to_string()),
+        }
+    }
+
+    pub fn is_model(&self) -> bool {
+        matches!(self, DraftMethod::Model(_))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_label_roundtrip() {
+        for m in [
+            DraftMethod::Ngram,
+            DraftMethod::Sam,
+            DraftMethod::Model("draft_small".into()),
+        ] {
+            assert_eq!(DraftMethod::parse(&m.label()), m);
+        }
+    }
+}

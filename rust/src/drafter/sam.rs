@@ -1,0 +1,242 @@
+//! Suffix-automaton drafter (SAM-decoding [25]).
+//!
+//! Builds a suffix automaton over the request's token history online
+//! (amortised O(1) per appended token) and tracks the automaton state of
+//! the *current suffix*. To draft, it jumps to the end position of the
+//! longest history match of the current suffix and proposes the tokens
+//! that followed it — like the n-gram drafter but with unbounded match
+//! length and true longest-match semantics.
+
+use std::collections::HashMap;
+
+use super::TokenDrafter;
+
+#[derive(Clone, Debug)]
+struct State {
+    /// Longest substring length represented by this state.
+    len: usize,
+    /// Suffix link.
+    link: i32,
+    /// Transitions token -> state.
+    next: HashMap<i32, u32>,
+    /// One end position (exclusive) of an occurrence of this state's
+    /// substrings (the first time the state was created).
+    end_pos: usize,
+}
+
+pub struct SamDrafter {
+    states: Vec<State>,
+    last: u32,
+    history: Vec<i32>,
+    /// Matching state/length for the current full suffix (decode cursor).
+    cur_state: u32,
+    cur_len: usize,
+    /// Cap on drafted continuation length per call.
+    pub max_draft: usize,
+}
+
+impl SamDrafter {
+    pub fn new(max_draft: usize) -> Self {
+        let root = State { len: 0, link: -1, next: HashMap::new(), end_pos: 0 };
+        SamDrafter {
+            states: vec![root],
+            last: 0,
+            history: Vec::new(),
+            cur_state: 0,
+            cur_len: 0,
+            max_draft,
+        }
+    }
+
+    fn add_token(&mut self, c: i32) {
+        // classic SAM online construction (Blumer et al.)
+        let cur = self.states.len() as u32;
+        let end_pos = self.history.len() + 1;
+        self.states.push(State {
+            len: self.states[self.last as usize].len + 1,
+            link: 0,
+            next: HashMap::new(),
+            end_pos,
+        });
+        let mut p = self.last as i32;
+        while p >= 0 && !self.states[p as usize].next.contains_key(&c) {
+            self.states[p as usize].next.insert(c, cur);
+            p = self.states[p as usize].link;
+        }
+        if p == -1 {
+            self.states[cur as usize].link = 0;
+        } else {
+            let q = self.states[p as usize].next[&c];
+            if self.states[p as usize].len + 1 == self.states[q as usize].len {
+                self.states[cur as usize].link = q as i32;
+            } else {
+                // clone q
+                let clone = self.states.len() as u32;
+                let mut cl = self.states[q as usize].clone();
+                cl.len = self.states[p as usize].len + 1;
+                self.states.push(cl);
+                while p >= 0 && self.states[p as usize].next.get(&c) == Some(&q) {
+                    self.states[p as usize].next.insert(c, clone);
+                    p = self.states[p as usize].link;
+                }
+                self.states[q as usize].link = clone as i32;
+                self.states[cur as usize].link = clone as i32;
+            }
+        }
+        self.last = cur;
+        self.history.push(c);
+    }
+
+    /// Advance the decode cursor (matching state) by one token, following
+    /// suffix links on mismatch — identical to online string matching.
+    fn advance_cursor(&mut self, c: i32) {
+        loop {
+            if let Some(&nxt) = self.states[self.cur_state as usize].next.get(&c) {
+                self.cur_state = nxt;
+                self.cur_len += 1;
+                // clamp to the state's max length
+                let sl = self.states[self.cur_state as usize].len;
+                if self.cur_len > sl {
+                    self.cur_len = sl;
+                }
+                return;
+            }
+            let link = self.states[self.cur_state as usize].link;
+            if link < 0 {
+                self.cur_state = 0;
+                self.cur_len = 0;
+                return;
+            }
+            self.cur_state = link as u32;
+            self.cur_len = self.states[self.cur_state as usize].len;
+        }
+    }
+}
+
+impl TokenDrafter for SamDrafter {
+    fn name(&self) -> &'static str {
+        "sam"
+    }
+
+    fn extend(&mut self, tokens: &[i32]) {
+        for &t in tokens {
+            // cursor must be advanced against the automaton *before* the
+            // token is added (else it would trivially match itself)
+            self.advance_cursor(t);
+            self.add_token(t);
+        }
+    }
+
+    fn draft(&mut self, n_tokens: usize) -> Vec<i32> {
+        if self.cur_len == 0 || self.history.is_empty() {
+            return Vec::new();
+        }
+        // end position of one occurrence of the current matched suffix
+        let end = self.states[self.cur_state as usize].end_pos;
+        if end >= self.history.len() {
+            return Vec::new();
+        }
+        let take = n_tokens.min(self.max_draft).min(self.history.len() - end);
+        self.history[end..end + take].to_vec()
+    }
+
+    fn len(&self) -> usize {
+        self.history.len()
+    }
+
+    fn reset(&mut self) {
+        *self = SamDrafter::new(self.max_draft);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest_lite::check;
+
+    #[test]
+    fn drafts_repeated_pattern() {
+        let mut d = SamDrafter::new(8);
+        d.extend(&[1, 2, 3, 4, 1, 2, 3]);
+        let out = d.draft(2);
+        assert_eq!(out, vec![4, 1]);
+    }
+
+    #[test]
+    fn longest_match_beats_short() {
+        // suffix "9 2 3" matched once (continuation 8); the shorter "2 3"
+        // also occurred earlier with continuation 7 — SAM must use the
+        // longest match.
+        let mut d = SamDrafter::new(8);
+        d.extend(&[2, 3, 7, 0, 9, 2, 3, 8, 5, 9, 2, 3]);
+        let out = d.draft(1);
+        assert_eq!(out, vec![8]);
+    }
+
+    #[test]
+    fn empty_without_match() {
+        let mut d = SamDrafter::new(8);
+        d.extend(&[1, 2, 3, 4, 5]);
+        assert!(d.draft(3).is_empty());
+    }
+
+    #[test]
+    fn cyclic_predicts_perfectly() {
+        let mut d = SamDrafter::new(16);
+        let cycle: Vec<i32> = (10..30).collect();
+        d.extend(&cycle);
+        d.extend(&cycle);
+        let out = d.draft(10);
+        assert_eq!(out, (10..20).collect::<Vec<i32>>());
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut d = SamDrafter::new(4);
+        d.extend(&[1, 1, 1]);
+        d.reset();
+        assert!(d.is_empty());
+        assert!(d.draft(2).is_empty());
+    }
+
+    #[test]
+    fn prop_drafts_are_history_substring_continuations() {
+        // Whatever SAM drafts must literally appear in the history right
+        // after an occurrence of the current suffix.
+        check("sam-draft-validity", 100, |g| {
+            let alpha = 2 + g.usize_in(0, 4);
+            let len = 5 + g.usize_in(0, 60);
+            let toks: Vec<i32> = (0..len).map(|_| g.usize_in(0, alpha) as i32).collect();
+            let mut d = SamDrafter::new(8);
+            d.extend(&toks);
+            let out = d.draft(4);
+            if out.is_empty() {
+                return Ok(());
+            }
+            // check: exists i < len such that history[i..i+out.len] == out
+            // and history[..i] ends with a suffix of the current history.
+            let found = (0..toks.len().saturating_sub(out.len()) + 1)
+                .any(|i| toks[i..].starts_with(&out));
+            prop_assert!(found, "drafted {:?} not a substring of history", out);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_matches_ngram_on_long_patterns() {
+        // On strongly periodic inputs SAM should draft at least as
+        // accurately as a 3-gram.
+        check("sam-vs-ngram-periodic", 30, |g| {
+            let period = 3 + g.usize_in(0, 8);
+            let reps = 3;
+            let toks: Vec<i32> = (0..period * reps).map(|i| (i % period) as i32).collect();
+            let mut sam = SamDrafter::new(8);
+            sam.extend(&toks);
+            let out = sam.draft(period.min(8));
+            let expect: Vec<i32> = (0..out.len()).map(|i| (i % period) as i32).collect();
+            prop_assert!(out == expect, "period {period}: {out:?} != {expect:?}");
+            Ok(())
+        });
+    }
+}

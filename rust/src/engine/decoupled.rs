@@ -1,0 +1,449 @@
+//! Decoupled speculative rollout (§4.1): drafter and verifier on separate
+//! threads, linked by channels, with the drafter allowed to run ahead of
+//! verification bounded by the draft window.
+//!
+//! The paper places drafter and verifier on disjoint GPUs so verification
+//! gets all the compute; here each thread owns its own PJRT CPU client
+//! (`xla::PjRtClient` is not `Send`), which is the same process topology.
+//! Token-level behaviour is identical to coupled speculation — and to
+//! vanilla decoding — because acceptance uses the shared sampling tape
+//! (`rust/tests/losslessness.rs` asserts all three agree token-for-token).
+//!
+//! Protocol (per slot):
+//! * drafter sends `Chunk { slot, base_len, tokens }` drafted from its
+//!   local mirror (verified prefix + own unverified drafts);
+//! * verifier batches one chunk per active slot into a single verify step,
+//!   applies exact-match acceptance, and replies with
+//!   `Verdict::Advance { new_tokens, accepted, full }`;
+//! * a chunk whose `base_len` no longer matches the verified sequence
+//!   (an earlier chunk was rejected) is *stale*: the verifier discards it
+//!   as waste — this is exactly the `2w−1` worst case of Figure 9;
+//! * `Verdict::Done` stops drafting for a finished request; `Shutdown`
+//!   ends the drafter thread.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::drafter::{DraftMethod, NgramDrafter, SamDrafter, TokenDrafter};
+use crate::runtime::Runtime;
+use crate::spec::{verify_exact, DraftWindow};
+use crate::util::rng::{position_rng, sample_logits};
+
+use super::worker::{EngineConfig, EngineReport, Request, SpecMode};
+
+#[derive(Debug)]
+struct Chunk {
+    slot: usize,
+    base_len: usize,
+    tokens: Vec<i32>,
+}
+
+#[derive(Debug)]
+enum Verdict {
+    Advance { slot: usize, new_tokens: Vec<i32>, accepted: usize, full: bool },
+    Done { slot: usize },
+    Shutdown,
+}
+
+/// Drafter-thread state for one slot.
+struct SlotMirror {
+    /// Verified sequence prefix.
+    seq: Vec<i32>,
+    /// Unverified tokens drafted beyond `seq`.
+    ahead: Vec<i32>,
+    window: DraftWindow,
+    done: bool,
+}
+
+/// Run the drafter thread body. `art_dir` is used to open this thread's own
+/// PJRT client for model-based drafting.
+#[allow(clippy::too_many_arguments)]
+fn drafter_thread(
+    art_dir: PathBuf,
+    method: DraftMethod,
+    draft_seed: u64,
+    temp: f32,
+    chunk_k: usize,
+    prompts: Vec<(u64, Vec<i32>)>,
+    tx: Sender<Chunk>,
+    rx: Receiver<Verdict>,
+) -> Result<()> {
+    let n = prompts.len();
+    let mut mirrors: Vec<SlotMirror> = prompts
+        .iter()
+        .map(|(_, p)| SlotMirror {
+            seq: p.clone(),
+            ahead: Vec::new(),
+            window: DraftWindow::new(chunk_k, false),
+            done: false,
+        })
+        .collect();
+    let ids: Vec<u64> = prompts.iter().map(|(id, _)| *id).collect();
+
+    // Model-based drafting state (own runtime + cache), or token drafters.
+    let mut model_rt: Option<(Runtime, String, crate::runtime::KvCache, Vec<usize>)> = None;
+    let mut token_drafters: Vec<Option<Box<dyn TokenDrafter>>> = (0..n).map(|_| None).collect();
+    match &method {
+        DraftMethod::Model(name) => {
+            let rt = Runtime::load(&art_dir)?;
+            let bucket = rt.manifest.bucket_for(n)?;
+            let p = rt.manifest.prompt_len;
+            let mut cache = rt.new_cache(name, bucket)?;
+            let pad = rt.manifest.pad_id;
+            let mut toks = vec![pad; bucket * p];
+            for (i, (_, pr)) in prompts.iter().enumerate() {
+                toks[i * p..(i + 1) * p].copy_from_slice(pr);
+            }
+            rt.prefill(name, &toks, &mut cache)?;
+            for l in cache.lens.iter_mut() {
+                *l = (p - 1) as i32;
+            }
+            let consumed = vec![p - 1; bucket];
+            model_rt = Some((rt, name.clone(), cache, consumed));
+        }
+        DraftMethod::Ngram => {
+            for (i, (_, pr)) in prompts.iter().enumerate() {
+                let mut d = NgramDrafter::new(3);
+                d.extend(pr);
+                token_drafters[i] = Some(Box::new(d));
+            }
+        }
+        DraftMethod::Sam => {
+            for (i, (_, pr)) in prompts.iter().enumerate() {
+                let mut d = SamDrafter::new(16);
+                d.extend(pr);
+                token_drafters[i] = Some(Box::new(d));
+            }
+        }
+    }
+
+    loop {
+        // 1. drain verdicts (non-blocking)
+        let mut any_verdict = false;
+        loop {
+            match rx.try_recv() {
+                Ok(Verdict::Shutdown) => return Ok(()),
+                Ok(Verdict::Done { slot }) => {
+                    mirrors[slot].done = true;
+                    any_verdict = true;
+                }
+                Ok(Verdict::Advance { slot, new_tokens, accepted, full }) => {
+                    let m = &mut mirrors[slot];
+                    m.seq.extend_from_slice(&new_tokens);
+                    m.window.on_verified(accepted.min(m.window.in_flight()), full);
+                    if full {
+                        // decoupled verification takes no bonus token, so a
+                        // full accept consumes exactly the chunk: drop the
+                        // accepted prefix from `ahead`, keep the pipeline.
+                        let drop_n = new_tokens.len().min(m.ahead.len());
+                        m.ahead.drain(..drop_n);
+                    } else {
+                        // rejection: everything drafted ahead is garbage
+                        m.ahead.clear();
+                        m.window = DraftWindow::new(m.window.w, false);
+                    }
+                    any_verdict = true;
+                }
+                Err(_) => break,
+            }
+        }
+
+        if mirrors.iter().all(|m| m.done) {
+            // wait for shutdown so the channel does not close early
+            match rx.recv() {
+                Ok(Verdict::Shutdown) | Err(_) => return Ok(()),
+                _ => continue,
+            }
+        }
+
+        // 2. pick slots that may draft a chunk
+        let draftable: Vec<usize> = (0..n)
+            .filter(|&i| !mirrors[i].done && mirrors[i].window.draft_budget() >= chunk_k)
+            .collect();
+        if draftable.is_empty() {
+            if !any_verdict {
+                // block for the next verdict to avoid spinning
+                match rx.recv() {
+                    Ok(Verdict::Shutdown) => return Ok(()),
+                    Ok(Verdict::Done { slot }) => mirrors[slot].done = true,
+                    Ok(Verdict::Advance { slot, new_tokens, accepted, full }) => {
+                        let m = &mut mirrors[slot];
+                        m.seq.extend_from_slice(&new_tokens);
+                        m.window.on_verified(accepted.min(m.window.in_flight()), full);
+                        if full {
+                            let drop_n = new_tokens.len().min(m.ahead.len());
+                            m.ahead.drain(..drop_n);
+                        } else {
+                            m.ahead.clear();
+                            m.window = DraftWindow::new(m.window.w, false);
+                        }
+                    }
+                    Err(_) => return Ok(()),
+                }
+            }
+            continue;
+        }
+
+        // 3. draft one chunk of `chunk_k` tokens per draftable slot
+        let mut proposals: Vec<Vec<i32>> = vec![Vec::new(); n];
+        match (&method, &mut model_rt) {
+            (DraftMethod::Model(_), Some((rt, name, cache, consumed))) => {
+                let bucket = cache.batch;
+                let pad = rt.manifest.pad_id;
+                // catch-up: consume mirror tokens (seq + ahead, minus the
+                // final one which seeds the first decode step)
+                let mirror_len =
+                    |m: &SlotMirror| m.seq.len() + m.ahead.len();
+                let mut need = vec![0usize; bucket];
+                for &i in &draftable {
+                    let m = &mirrors[i];
+                    // the draft cache may have consumed diverged tokens:
+                    // roll back to the verified prefix when behind
+                    if consumed[i] > mirror_len(&mirrors[i]) - 1 {
+                        consumed[i] = m.seq.len().saturating_sub(1);
+                        cache.lens[i] = consumed[i] as i32;
+                    }
+                    need[i] = (mirror_len(m) - 1).saturating_sub(consumed[i]);
+                }
+                let mut max_need = draftable.iter().map(|&i| need[i]).max().unwrap_or(0);
+                while max_need > 0 {
+                    let w = rt.manifest.window_for(max_need)?;
+                    let mut toks = vec![pad; bucket * w];
+                    for &i in &draftable {
+                        let m = &mirrors[i];
+                        let full: Vec<i32> =
+                            m.seq.iter().chain(m.ahead.iter()).copied().collect();
+                        let take = need[i].min(w);
+                        for j in 0..take {
+                            toks[i * w + j] = full[consumed[i] + j];
+                        }
+                    }
+                    rt.step(name, &toks, w, cache)?;
+                    for &i in &draftable {
+                        let take = need[i].min(w);
+                        consumed[i] += take;
+                        cache.lens[i] = consumed[i] as i32;
+                        need[i] -= take;
+                    }
+                    max_need = draftable.iter().map(|&i| need[i]).max().unwrap_or(0);
+                }
+                // chunk_k batched decode steps
+                let mut last: Vec<i32> = (0..bucket)
+                    .map(|i| {
+                        if i < n && draftable.contains(&i) {
+                            let m = &mirrors[i];
+                            *m.ahead.last().or_else(|| m.seq.last()).unwrap()
+                        } else {
+                            pad
+                        }
+                    })
+                    .collect();
+                for _ in 0..chunk_k {
+                    let out = rt.step(name, &last, 1, cache)?;
+                    for &i in &draftable {
+                        let m = &mirrors[i];
+                        let pos = m.seq.len() + m.ahead.len() + proposals[i].len();
+                        let mut rng = position_rng(draft_seed, ids[i], pos as u64);
+                        let t = sample_logits(out.at(i, 0), temp, &mut rng) as i32;
+                        proposals[i].push(t);
+                        consumed[i] += 1;
+                        cache.lens[i] = consumed[i] as i32;
+                        last[i] = t;
+                    }
+                }
+            }
+            _ => {
+                for &i in &draftable {
+                    // token drafters draft from verified + ahead history
+                    if let Some(td) = &mut token_drafters[i] {
+                        // bring the index up to the mirror state
+                        let m = &mirrors[i];
+                        let mirror_total = m.seq.len() + m.ahead.len();
+                        if td.len() > mirror_total {
+                            // rejection rolled the mirror back: rebuild
+                            td.reset();
+                            td.extend(&m.seq);
+                            td.extend(&m.ahead);
+                        } else if td.len() < mirror_total {
+                            let full: Vec<i32> =
+                                m.seq.iter().chain(m.ahead.iter()).copied().collect();
+                            let missing = full[td.len()..].to_vec();
+                            td.extend(&missing);
+                        }
+                        let mut prop = td.draft(chunk_k);
+                        prop.resize(chunk_k, 0);
+                        proposals[i] = prop;
+                    }
+                }
+            }
+        }
+
+        // 4. send chunks and update mirrors
+        for &i in &draftable {
+            let m = &mut mirrors[i];
+            let base = m.seq.len() + m.ahead.len();
+            let chunk = Chunk { slot: i, base_len: base, tokens: proposals[i].clone() };
+            m.window.on_drafted(chunk_k);
+            m.ahead.extend_from_slice(&proposals[i]);
+            if tx.send(chunk).is_err() {
+                return Ok(()); // verifier gone
+            }
+        }
+    }
+}
+
+/// Decoupled speculative rollout over `requests`. Spawns the drafter
+/// thread, runs verification on the calling thread, returns the report.
+/// Sequences end up in `requests` (same layout as `Worker`).
+pub fn rollout_decoupled(
+    rt: &Runtime,
+    art_dir: &std::path::Path,
+    cfg: &EngineConfig,
+    requests: &mut Vec<Request>,
+) -> Result<EngineReport> {
+    let k = match cfg.mode {
+        SpecMode::Decoupled { window } => window,
+        _ => bail!("rollout_decoupled requires SpecMode::Decoupled"),
+    };
+    let m = &rt.manifest;
+    if k + 1 > *m.windows.iter().max().unwrap_or(&1) {
+        bail!("verify window {} not lowered", k + 1);
+    }
+    let n = requests.len();
+    let bucket = m.bucket_for(n)?;
+    let p = m.prompt_len;
+    let pad = m.pad_id;
+    let eos = m.eos_id;
+    let target = m.target.clone();
+
+    // target prefill
+    let mut cache = rt.new_cache(&target, bucket)?;
+    let mut toks = vec![pad; bucket * p];
+    for (i, r) in requests.iter().enumerate() {
+        toks[i * p..(i + 1) * p].copy_from_slice(&r.prompt);
+    }
+    rt.prefill(&target, &toks, &mut cache)?;
+    for l in cache.lens.iter_mut() {
+        *l = (p - 1) as i32;
+    }
+
+    let (chunk_tx, chunk_rx) = channel::<Chunk>();
+    let (verdict_tx, verdict_rx) = channel::<Verdict>();
+    let prompts: Vec<(u64, Vec<i32>)> =
+        requests.iter().map(|r| (r.id, r.prompt.clone())).collect();
+    let art = art_dir.to_path_buf();
+    let method = cfg.drafter.clone();
+    let dseed = cfg.draft_seed;
+    let temp = cfg.temperature;
+    let handle = std::thread::Builder::new()
+        .name("spec-drafter".to_string())
+        .spawn(move || drafter_thread(art, method, dseed, temp, k, prompts, chunk_tx, verdict_rx))
+        .map_err(|e| anyhow!("spawn drafter: {e}"))?;
+
+    let t0 = Instant::now();
+    let mut rep = EngineReport::default();
+    let mut pending: Vec<Option<Chunk>> = (0..n).map(|_| None).collect();
+
+    let active = |reqs: &Vec<Request>| reqs.iter().filter(|r| !r.done).count();
+    while active(requests) > 0 {
+        // Gather one fresh chunk per active slot (discard stale ones).
+        loop {
+            let missing = (0..n)
+                .filter(|&i| !requests[i].done && pending[i].is_none())
+                .count();
+            if missing == 0 {
+                break;
+            }
+            let chunk = chunk_rx
+                .recv()
+                .map_err(|_| anyhow!("drafter thread died"))?;
+            let i = chunk.slot;
+            if requests[i].done {
+                continue;
+            }
+            if chunk.base_len != requests[i].seq.len() {
+                // Stale chunk from a mis-speculated pipeline: pure waste.
+                // CRITICAL for liveness: the drafter's window counted this
+                // chunk as in flight, so discarding it silently could leave
+                // the drafter blocked with a full pipeline while we block
+                // waiting for a fresh chunk — always acknowledge with an
+                // empty resync verdict.
+                rep.wasted_tokens += chunk.tokens.len() as u64;
+                rep.drafted_tokens += chunk.tokens.len() as u64;
+                let _ = verdict_tx.send(Verdict::Advance {
+                    slot: i,
+                    new_tokens: vec![],
+                    accepted: 0,
+                    full: false,
+                });
+                continue;
+            }
+            pending[i] = Some(chunk);
+        }
+
+        // Batched verify of all pending chunks.
+        let w = k + 1;
+        let mut vtoks = vec![pad; bucket * w];
+        for i in 0..n {
+            if let Some(c) = &pending[i] {
+                vtoks[i * w] = *requests[i].seq.last().unwrap();
+                for (j, &t) in c.tokens.iter().enumerate() {
+                    vtoks[i * w + 1 + j] = t;
+                }
+            }
+        }
+        let out = rt.step(&target, &vtoks, w, &mut cache)?;
+        rep.target_steps += 1;
+        rep.iterations += 1;
+
+        for i in 0..n {
+            let Some(c) = pending[i].take() else { continue };
+            let seq_len = requests[i].seq.len();
+            let id = requests[i].id;
+            let outcome = verify_exact(id, cfg.seed, cfg.temperature, seq_len, &c.tokens, |j| {
+                out.at(i, j).to_vec()
+            });
+            let budget_left = requests[i].budget - requests[i].generated();
+            let mut append = outcome.append.clone();
+            if outcome.full_accept {
+                // Decoupled mode takes no bonus token: the drafter's
+                // pipelined next chunk was drafted without it, and the tape
+                // re-samples the identical token at that position later —
+                // losslessness is unaffected (see module docs).
+                append.pop();
+            }
+            append.truncate(budget_left);
+            requests[i].seq.extend_from_slice(&append);
+            requests[i].accept.observe(c.tokens.len(), outcome.accepted);
+            requests[i].iterations += 1;
+            cache.lens[i] = (requests[i].seq.len() - 1) as i32;
+            rep.total_generated += append.len() as u64;
+            rep.drafted_tokens += c.tokens.len() as u64;
+            rep.accepted_tokens += outcome.accepted as u64;
+            rep.wasted_tokens += outcome.wasted as u64;
+            if append.len() > 1 {
+                rep.skipped_iterations += 1;
+            }
+            let done = requests[i].generated() >= requests[i].budget
+                || requests[i].seq.last() == Some(&eos);
+            if done {
+                requests[i].done = true;
+                let _ = verdict_tx.send(Verdict::Done { slot: i });
+            } else {
+                let _ = verdict_tx.send(Verdict::Advance {
+                    slot: i,
+                    new_tokens: append,
+                    accepted: outcome.accepted,
+                    full: outcome.full_accept,
+                });
+            }
+        }
+    }
+    let _ = verdict_tx.send(Verdict::Shutdown);
+    let _ = handle.join();
+    rep.wall_s = t0.elapsed().as_secs_f64();
+    Ok(rep)
+}

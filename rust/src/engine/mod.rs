@@ -1,0 +1,19 @@
+//! Single-worker generation engine over the PJRT runtime.
+//!
+//! One [`Worker`] owns a batch slot table, the target model's KV cache and
+//! (for model-based drafting) the draft model's cache, and drives rollout
+//! in one of three modes:
+//!
+//! * [`Worker::rollout_vanilla`] — plain auto-regressive decoding,
+//! * [`Worker::rollout_coupled`] — draft-k-then-verify speculation
+//!   (vanilla speculative decoding, the paper's baseline),
+//! * `engine::decoupled::rollout_decoupled` — drafter and verifier on
+//!   separate threads with a bounded draft window (§4.1).
+//!
+//! All modes produce **identical token sequences** for the same seed (the
+//! losslessness invariant; enforced by `rust/tests/losslessness.rs`).
+
+pub mod decoupled;
+pub mod worker;
+
+pub use worker::{EngineConfig, EngineReport, Request, SpecMode, Worker};

@@ -1,0 +1,441 @@
+//! Batched single-worker engine: vanilla and coupled speculative rollout.
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::drafter::{DraftMethod, NgramDrafter, SamDrafter, TokenDrafter};
+use crate::runtime::{KvCache, Runtime};
+use crate::spec::{decode_one, verify_exact, AcceptanceStats};
+use crate::util::rng::{position_rng, sample_logits};
+
+/// One rollout request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    /// prompt + accepted generated tokens.
+    pub seq: Vec<i32>,
+    /// Maximum generated tokens (response budget).
+    pub budget: usize,
+    pub done: bool,
+    pub accept: AcceptanceStats,
+    /// Tokens generated per engine iteration this request was active in
+    /// (for skipped-iteration accounting, §5.2).
+    pub iterations: u64,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<i32>, budget: usize) -> Self {
+        Request {
+            id,
+            seq: prompt.clone(),
+            prompt,
+            budget,
+            done: false,
+            accept: AcceptanceStats::default(),
+            iterations: 0,
+        }
+    }
+
+    pub fn generated(&self) -> usize {
+        self.seq.len() - self.prompt.len()
+    }
+}
+
+/// Speculation mode for the engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpecMode {
+    Vanilla,
+    /// Draft `window` tokens, then verify (vanilla speculative decoding).
+    Coupled { window: usize },
+    /// Drafter runs ahead bounded by `window` (§4.1), on its own thread.
+    Decoupled { window: usize },
+}
+
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub mode: SpecMode,
+    pub drafter: DraftMethod,
+    pub temperature: f32,
+    /// Sampling-tape seed shared by every mode (losslessness).
+    pub seed: u64,
+    /// Drafter's own tape seed (draft sampling is independent).
+    pub draft_seed: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            mode: SpecMode::Vanilla,
+            drafter: DraftMethod::Model("draft_small".to_string()),
+            temperature: 1.0,
+            seed: 7,
+            draft_seed: 1007,
+        }
+    }
+}
+
+/// Rollout outcome + counters.
+#[derive(Clone, Debug, Default)]
+pub struct EngineReport {
+    pub wall_s: f64,
+    pub total_generated: u64,
+    pub target_steps: u64,
+    pub draft_steps: u64,
+    pub drafted_tokens: u64,
+    pub accepted_tokens: u64,
+    pub wasted_tokens: u64,
+    /// Engine iterations where a request advanced >1 token ("skipped
+    /// iterations" in the paper's §5.2 metric).
+    pub skipped_iterations: u64,
+    pub iterations: u64,
+}
+
+impl EngineReport {
+    pub fn tokens_per_second(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.total_generated as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.drafted_tokens == 0 {
+            0.0
+        } else {
+            self.accepted_tokens as f64 / self.drafted_tokens as f64
+        }
+    }
+}
+
+/// Batched engine worker over one `Runtime`.
+pub struct Worker<'rt> {
+    pub rt: &'rt Runtime,
+    pub cfg: EngineConfig,
+    pub requests: Vec<Request>,
+    target: String,
+    bucket: usize,
+    cache: KvCache,
+    /// Draft model cache (model-based drafting only).
+    draft_cache: Option<KvCache>,
+    draft_model: Option<String>,
+    /// Per-slot token drafters (ngram/sam drafting only).
+    token_drafters: Vec<Option<Box<dyn TokenDrafter>>>,
+    /// Per-slot: number of seq tokens consumed by the draft model cache.
+    draft_consumed: Vec<usize>,
+    eos: i32,
+    pad: i32,
+}
+
+impl<'rt> Worker<'rt> {
+    /// Create a worker for `requests` (all sharing the manifest prompt
+    /// length) and run prefill on both target and drafter.
+    pub fn new(rt: &'rt Runtime, cfg: EngineConfig, requests: Vec<Request>) -> Result<Self> {
+        if requests.is_empty() {
+            bail!("no requests");
+        }
+        let m = &rt.manifest;
+        let p = m.prompt_len;
+        for r in &requests {
+            if r.prompt.len() != p {
+                bail!("request {} prompt len {} != manifest prompt_len {p}", r.id, r.prompt.len());
+            }
+        }
+        let bucket = m.bucket_for(requests.len())?;
+        let target = m.target.clone();
+        let max_new = m.model(&target)?.max_seq - p - 2;
+        for r in &requests {
+            if r.budget > max_new {
+                bail!("budget {} exceeds cache capacity {max_new}", r.budget);
+            }
+        }
+
+        let (draft_model, token_drafters): (Option<String>, Vec<Option<Box<dyn TokenDrafter>>>) =
+            match &cfg.drafter {
+                DraftMethod::Model(name) => {
+                    m.model(name)?;
+                    (Some(name.clone()), (0..bucket).map(|_| None).collect())
+                }
+                DraftMethod::Ngram => (
+                    None,
+                    (0..bucket)
+                        .map(|_| Some(Box::new(NgramDrafter::new(3)) as Box<dyn TokenDrafter>))
+                        .collect(),
+                ),
+                DraftMethod::Sam => (
+                    None,
+                    (0..bucket)
+                        .map(|_| Some(Box::new(SamDrafter::new(16)) as Box<dyn TokenDrafter>))
+                        .collect(),
+                ),
+            };
+
+        let mut w = Worker {
+            cache: rt.new_cache(&target, bucket)?,
+            draft_cache: match &draft_model {
+                Some(dm) => Some(rt.new_cache(dm, bucket)?),
+                None => None,
+            },
+            draft_model,
+            token_drafters,
+            draft_consumed: vec![0; bucket],
+            eos: m.eos_id,
+            pad: m.pad_id,
+            rt,
+            cfg,
+            requests,
+            target,
+            bucket,
+        };
+        w.prefill_all()?;
+        Ok(w)
+    }
+
+    fn prefill_all(&mut self) -> Result<()> {
+        let p = self.rt.manifest.prompt_len;
+        let mut toks = vec![self.pad; self.bucket * p];
+        for (i, r) in self.requests.iter().enumerate() {
+            toks[i * p..(i + 1) * p].copy_from_slice(&r.prompt);
+        }
+        self.rt.prefill(&self.target, &toks, &mut self.cache)?;
+        // Target cache now holds the prompt; by convention the engine keeps
+        // cache lens = seq_len - 1 (the last token is the next step input).
+        for l in self.cache.lens.iter_mut() {
+            *l = (p - 1) as i32;
+        }
+        if let (Some(dm), Some(dc)) = (&self.draft_model, &mut self.draft_cache) {
+            self.rt.prefill(dm, &toks, dc)?;
+            for l in dc.lens.iter_mut() {
+                *l = (p - 1) as i32;
+            }
+            for c in self.draft_consumed.iter_mut() {
+                *c = p - 1;
+            }
+        }
+        for (i, td) in self.token_drafters.iter_mut().enumerate() {
+            if let Some(td) = td {
+                td.reset();
+                if i < self.requests.len() {
+                    td.extend(&self.requests[i].prompt);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn active(&self) -> Vec<usize> {
+        (0..self.requests.len()).filter(|&i| !self.requests[i].done).collect()
+    }
+
+    fn finish_check(&mut self, slot: usize) {
+        let r = &mut self.requests[slot];
+        if r.generated() >= r.budget || r.seq.last() == Some(&self.eos) {
+            r.done = true;
+        }
+    }
+
+    /// Plain auto-regressive rollout: one target decode step per token.
+    pub fn rollout_vanilla(&mut self) -> Result<EngineReport> {
+        let t0 = Instant::now();
+        let mut rep = EngineReport::default();
+        while !self.active().is_empty() {
+            // inputs: last token of each slot's sequence (pad for done)
+            let mut toks = vec![self.pad; self.bucket];
+            for (i, r) in self.requests.iter().enumerate() {
+                toks[i] = *r.seq.last().unwrap();
+            }
+            let out = self.rt.step(&self.target, &toks, 1, &mut self.cache)?;
+            rep.target_steps += 1;
+            rep.iterations += 1;
+            for i in self.active() {
+                let r = &self.requests[i];
+                let t = decode_one(r.id, self.cfg.seed, self.cfg.temperature, r.seq.len(), out.at(i, 0));
+                self.requests[i].seq.push(t);
+                self.requests[i].iterations += 1;
+                self.cache.lens[i] += 1;
+                rep.total_generated += 1;
+                self.finish_check(i);
+            }
+            // done slots keep their lens frozen: the pad fed to them is
+            // written at lens and overwritten by any later (unused) step.
+        }
+        rep.wall_s = t0.elapsed().as_secs_f64();
+        Ok(rep)
+    }
+
+    /// Draft `k` tokens for every active slot.
+    ///
+    /// Model-based drafting runs `k` batched decode steps on the draft
+    /// model (after a 1-token catch-up step when needed); token drafters
+    /// propose from their history index. Slots whose drafter has no
+    /// proposal fall back to a "self-draft" of the successor guess (pad),
+    /// which simply gets rejected — matching how serving engines handle
+    /// empty lookahead.
+    fn draft_k(&mut self, k: usize, rep: &mut EngineReport) -> Result<Vec<Vec<i32>>> {
+        let n = self.requests.len();
+        let mut drafts: Vec<Vec<i32>> = vec![Vec::new(); n];
+        if let (Some(dm), Some(_)) = (self.draft_model.clone(), self.draft_cache.as_ref()) {
+            // 1. catch-up: feed seq tokens the draft cache hasn't consumed,
+            //    except the last one (which seeds the first draft step).
+            let mut need = vec![0usize; self.bucket];
+            let mut max_need = 0usize;
+            for i in self.active() {
+                let want = self.requests[i].seq.len() - 1;
+                need[i] = want.saturating_sub(self.draft_consumed[i]);
+                max_need = max_need.max(need[i]);
+            }
+            while max_need > 0 {
+                let w = self.rt.manifest.window_for(max_need)?;
+                let mut toks = vec![self.pad; self.bucket * w];
+                for i in self.active() {
+                    let take = need[i].min(w);
+                    let start = self.draft_consumed[i];
+                    for j in 0..take {
+                        toks[i * w + j] = self.requests[i].seq[start + j];
+                    }
+                }
+                let dc = self.draft_cache.as_mut().unwrap();
+                self.rt.step(&dm, &toks, w, dc)?;
+                rep.draft_steps += 1;
+                for i in self.active() {
+                    let take = need[i].min(w);
+                    self.draft_cache.as_mut().unwrap().lens[i] += take as i32;
+                    self.draft_consumed[i] += take;
+                    need[i] -= take;
+                }
+                max_need = need.iter().copied().max().unwrap_or(0);
+            }
+            // 2. k sequential draft decode steps
+            let mut last: Vec<i32> = (0..self.bucket)
+                .map(|i| {
+                    if i < n && !self.requests[i].done {
+                        *self.requests[i].seq.last().unwrap()
+                    } else {
+                        self.pad
+                    }
+                })
+                .collect();
+            for _ in 0..k {
+                let dc = self.draft_cache.as_mut().unwrap();
+                let out = self.rt.step(&dm, &last, 1, dc)?;
+                rep.draft_steps += 1;
+                for i in self.active() {
+                    let r = &self.requests[i];
+                    let pos = r.seq.len() + drafts[i].len();
+                    let mut rng = position_rng(self.cfg.draft_seed, r.id, pos as u64);
+                    let t = sample_logits(out.at(i, 0), self.cfg.temperature, &mut rng) as i32;
+                    drafts[i].push(t);
+                    self.draft_cache.as_mut().unwrap().lens[i] += 1;
+                    self.draft_consumed[i] += 1;
+                    last[i] = t;
+                }
+            }
+            // draft_consumed now counts speculative tokens too; verification
+            // rolls it back to the accepted prefix below.
+        } else {
+            for i in self.active() {
+                if let Some(td) = &mut self.token_drafters[i] {
+                    drafts[i] = td.draft(k);
+                }
+                drafts[i].resize(k, self.pad); // pad empty/short proposals
+            }
+        }
+        for i in self.active() {
+            rep.drafted_tokens += drafts[i].len() as u64;
+        }
+        Ok(drafts)
+    }
+
+    /// One coupled speculation round for all active slots: draft `k`
+    /// tokens, verify with a `k+1`-window target step, apply outcomes.
+    fn coupled_round(&mut self, k: usize, rep: &mut EngineReport) -> Result<()> {
+        let drafts = self.draft_k(k, rep)?;
+        let w = k + 1; // verify window: [last, d0..d_{k-1}]
+        let mut toks = vec![self.pad; self.bucket * w];
+        for i in self.active() {
+            toks[i * w] = *self.requests[i].seq.last().unwrap();
+            for j in 0..k {
+                toks[i * w + 1 + j] = drafts[i][j];
+            }
+        }
+        let out = self.rt.step(&self.target, &toks, w, &mut self.cache)?;
+        rep.target_steps += 1;
+        rep.iterations += 1;
+
+        for i in self.active() {
+            let r = &self.requests[i];
+            let budget_left = r.budget - r.generated();
+            let seq_len = r.seq.len();
+            let id = r.id;
+            let outcome = verify_exact(id, self.cfg.seed, self.cfg.temperature, seq_len, &drafts[i], |j| {
+                out.at(i, j).to_vec()
+            });
+            let mut append = outcome.append.clone();
+            append.truncate(budget_left);
+            let advanced = append.len();
+            let req = &mut self.requests[i];
+            req.seq.extend_from_slice(&append);
+            req.accept.observe(drafts[i].len(), outcome.accepted);
+            req.iterations += 1;
+            // Invariant: the target cache has consumed exactly seq.len()-1
+            // tokens (the last token is the next step's input). The verify
+            // step wrote w entries; only the accepted prefix is valid, and
+            // that is exactly seq.len()-1 (budget truncation only lowers it,
+            // which is safe: stale slots are overwritten later).
+            self.cache.lens[i] = (self.requests[i].seq.len() - 1) as i32;
+            rep.total_generated += advanced as u64;
+            rep.accepted_tokens += outcome.accepted as u64;
+            rep.wasted_tokens += outcome.wasted as u64;
+            if advanced > 1 {
+                rep.skipped_iterations += 1;
+            }
+            // Drafter cache rollback: the draft model consumed its own
+            // drafts while drafting; only those matching the accepted
+            // prefix remain valid.
+            if self.draft_model.is_some() {
+                let rollback = (seq_len + outcome.accepted)
+                    .min(self.requests[i].seq.len() - 1)
+                    .min(self.draft_consumed[i]);
+                self.draft_consumed[i] = rollback;
+                if let Some(dc) = &mut self.draft_cache {
+                    dc.lens[i] = rollback as i32;
+                }
+            }
+            // token drafter resync: extend with the accepted tokens
+            if let Some(td) = &mut self.token_drafters[i] {
+                td.extend(&append);
+            }
+            self.finish_check(i);
+        }
+        Ok(())
+    }
+
+    /// Coupled (vanilla) speculative rollout: draft-k-then-verify.
+    pub fn rollout_coupled(&mut self, k: usize) -> Result<EngineReport> {
+        if k + 1 > *self.rt.manifest.windows.iter().max().unwrap_or(&1) {
+            bail!("verify window {} not lowered", k + 1);
+        }
+        let t0 = Instant::now();
+        let mut rep = EngineReport::default();
+        while !self.active().is_empty() {
+            self.coupled_round(k, &mut rep)?;
+        }
+        rep.wall_s = t0.elapsed().as_secs_f64();
+        Ok(rep)
+    }
+
+    /// Final sequences (generated part only), in request order.
+    pub fn outputs(&self) -> Vec<Vec<i32>> {
+        self.requests.iter().map(|r| r.seq[r.prompt.len()..].to_vec()).collect()
+    }
+
+    pub fn target_model(&self) -> &str {
+        &self.target
+    }
+
+    pub fn bucket(&self) -> usize {
+        self.bucket
+    }
+}

@@ -1,0 +1,265 @@
+//! Draft ladder (§4.2, Figure 11): maps acceptance rate → modelled speedup
+//! for every draft method, built by offline profiling, and the selection
+//! mechanism that picks the estimated-fastest method for a batch.
+//!
+//! The ladder is constructed *without the trained model* — exactly as the
+//! paper argues is possible: drafter execution cost is independent of the
+//! target, and speedup can be simulated by accepting tokens at a given
+//! rate. `build` uses the analytic TGS model; `build_simulated` Monte-Carlo
+//! simulates random acceptances (closer to the paper's offline profiler)
+//! and the tests check the two agree.
+
+use crate::planner::costmodel::CostModel;
+use crate::planner::tgs::{tgs_coupled, tgs_decoupled, tgs_vanilla};
+use crate::util::Rng;
+
+/// One method's speedup curve over the acceptance-rate grid.
+#[derive(Clone, Debug)]
+pub struct LadderEntry {
+    pub method: String,
+    /// Profiled average acceptance rate for this method (from history).
+    pub profiled_p: f64,
+    /// speedup[i] at acceptance grid point `grid[i]`.
+    pub speedup: Vec<f64>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Ladder {
+    /// Acceptance-rate grid (shared by all entries).
+    pub grid: Vec<f64>,
+    pub entries: Vec<LadderEntry>,
+    /// Batch size and window the ladder was profiled at.
+    pub batch: usize,
+    pub window: usize,
+}
+
+impl Ladder {
+    /// Build analytically from the cost model (offline profiling).
+    /// `profiled_p` gives each method's historical average acceptance.
+    /// Coupled-mode curves (the baseline regime).
+    pub fn build(
+        m: &CostModel,
+        batch: usize,
+        window: usize,
+        profiled_p: &[(String, f64)],
+    ) -> Ladder {
+        Self::build_mode(m, batch, window, profiled_p, false)
+    }
+
+    /// Ladder for the execution mode SpecActor will actually run
+    /// (decoupled): the selection must rank methods under decoupled TGS.
+    pub fn build_decoupled(
+        m: &CostModel,
+        batch: usize,
+        window: usize,
+        profiled_p: &[(String, f64)],
+    ) -> Ladder {
+        Self::build_mode(m, batch, window, profiled_p, true)
+    }
+
+    fn build_mode(
+        m: &CostModel,
+        batch: usize,
+        window: usize,
+        profiled_p: &[(String, f64)],
+        decoupled: bool,
+    ) -> Ladder {
+        let grid: Vec<f64> = (1..=19).map(|i| i as f64 * 0.05).collect();
+        let vanilla = tgs_vanilla(m, batch);
+        let entries = profiled_p
+            .iter()
+            .map(|(method, p)| LadderEntry {
+                method: method.clone(),
+                profiled_p: *p,
+                speedup: grid
+                    .iter()
+                    .map(|&gp| {
+                        let t = if decoupled {
+                            tgs_decoupled(m, method, m.g_ref, window, batch, gp)
+                        } else {
+                            tgs_coupled(m, method, m.g_ref, window, batch, gp)
+                        };
+                        t / vanilla
+                    })
+                    .collect(),
+            })
+            .collect();
+        Ladder { grid, entries, batch, window }
+    }
+
+    /// Monte-Carlo construction: simulate speculative rounds with random
+    /// acceptance at each grid rate (the paper's "randomly accepting
+    /// tokens according to a given acceptance rate").
+    pub fn build_simulated(
+        m: &CostModel,
+        batch: usize,
+        window: usize,
+        profiled_p: &[(String, f64)],
+        rounds: usize,
+        seed: u64,
+    ) -> Ladder {
+        let grid: Vec<f64> = (1..=19).map(|i| i as f64 * 0.05).collect();
+        let vanilla = tgs_vanilla(m, batch);
+        let mut rng = Rng::new(seed);
+        let entries = profiled_p
+            .iter()
+            .map(|(method, p)| {
+                let speedup = grid
+                    .iter()
+                    .map(|&gp| {
+                        let mut tokens = 0.0f64;
+                        let mut time = 0.0f64;
+                        for _ in 0..rounds {
+                            // draft `window` tokens, accept each with prob gp
+                            let mut acc = 0;
+                            while acc < window && rng.bernoulli(gp) {
+                                acc += 1;
+                            }
+                            let full = acc == window;
+                            tokens += acc as f64 + 1.0; // + correction/bonus
+                            let _ = full;
+                            time += window as f64 * m.draft(method, batch)
+                                + m.verify(m.g_ref, window, batch);
+                        }
+                        (tokens / time) / vanilla
+                    })
+                    .collect();
+                LadderEntry { method: method.clone(), profiled_p: *p, speedup }
+            })
+            .collect();
+        Ladder { grid, entries, batch, window }
+    }
+
+    fn speedup_at(&self, e: &LadderEntry, p: f64) -> f64 {
+        // linear interpolation over the grid
+        let p = p.clamp(self.grid[0], *self.grid.last().unwrap());
+        let idx = self
+            .grid
+            .iter()
+            .position(|&g| g >= p)
+            .unwrap_or(self.grid.len() - 1);
+        if idx == 0 {
+            return e.speedup[0];
+        }
+        let (g0, g1) = (self.grid[idx - 1], self.grid[idx]);
+        let f = (p - g0) / (g1 - g0);
+        e.speedup[idx - 1] * (1.0 - f) + e.speedup[idx] * f
+    }
+
+    /// Figure 11 selection: estimated speedup of each method at its own
+    /// profiled acceptance rate (①), pick the fastest (②).
+    pub fn select_initial(&self) -> &LadderEntry {
+        self.entries
+            .iter()
+            .max_by(|a, b| {
+                self.speedup_at(a, a.profiled_p)
+                    .partial_cmp(&self.speedup_at(b, b.profiled_p))
+                    .unwrap()
+            })
+            .expect("empty ladder")
+    }
+
+    /// Ladder rank for Algorithm 3 (ascending = best first).
+    pub fn ranked(&self) -> Vec<&LadderEntry> {
+        let mut v: Vec<&LadderEntry> = self.entries.iter().collect();
+        v.sort_by(|a, b| {
+            self.speedup_at(b, b.profiled_p)
+                .partial_cmp(&self.speedup_at(a, a.profiled_p))
+                .unwrap()
+        });
+        v
+    }
+
+    pub fn rank_of(&self, method: &str) -> usize {
+        self.ranked()
+            .iter()
+            .position(|e| e.method == method)
+            .unwrap_or(usize::MAX)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn profiled() -> Vec<(String, f64)> {
+        vec![
+            ("draft_small".to_string(), 0.75),
+            ("draft_mid".to_string(), 0.85),
+            ("ngram".to_string(), 0.35),
+        ]
+    }
+
+    #[test]
+    fn speedup_monotone_in_acceptance() {
+        let m = CostModel::paper_32b();
+        let l = Ladder::build(&m, 8, 4, &profiled());
+        for e in &l.entries {
+            for win in e.speedup.windows(2) {
+                assert!(win[1] >= win[0] - 1e-9, "{}: non-monotone", e.method);
+            }
+        }
+    }
+
+    #[test]
+    fn selection_picks_plausible_method() {
+        let m = CostModel::paper_32b();
+        let l = Ladder::build(&m, 8, 4, &profiled());
+        let sel = l.select_initial();
+        // 0.5B at 0.75 vs 1.5B at 0.85 vs ngram at 0.35: a model drafter
+        // must win over low-acceptance ngram
+        assert_ne!(sel.method, "ngram");
+    }
+
+    #[test]
+    fn ngram_wins_when_its_acceptance_is_high() {
+        let m = CostModel::paper_32b();
+        let l = Ladder::build(
+            &m,
+            8,
+            4,
+            &[
+                ("draft_small".to_string(), 0.6),
+                ("ngram".to_string(), 0.9),
+            ],
+        );
+        assert_eq!(l.select_initial().method, "ngram");
+    }
+
+    #[test]
+    fn ranked_is_total_order() {
+        let m = CostModel::paper_32b();
+        let l = Ladder::build(&m, 8, 4, &profiled());
+        let r = l.ranked();
+        assert_eq!(r.len(), 3);
+        assert_eq!(l.rank_of(&r[0].method), 0);
+        assert_eq!(l.rank_of("nonexistent"), usize::MAX);
+    }
+
+    #[test]
+    fn simulated_ladder_agrees_with_analytic() {
+        let m = CostModel::paper_32b();
+        let a = Ladder::build(&m, 8, 4, &profiled());
+        let s = Ladder::build_simulated(&m, 8, 4, &profiled(), 4000, 42);
+        for (ea, es) in a.entries.iter().zip(&s.entries) {
+            // compare at a mid-grid acceptance point
+            let ga = ea.speedup[9];
+            let gs = es.speedup[9];
+            let rel = (ga - gs).abs() / ga;
+            assert!(rel < 0.25, "{}: analytic {ga:.2} vs simulated {gs:.2}", ea.method);
+        }
+    }
+
+    #[test]
+    fn interpolation_within_bounds() {
+        let m = CostModel::paper_32b();
+        let l = Ladder::build(&m, 8, 4, &profiled());
+        let e = &l.entries[0];
+        let lo = l.speedup_at(e, 0.0);
+        let hi = l.speedup_at(e, 1.0);
+        assert!((lo - e.speedup[0]).abs() < 1e-9);
+        assert!((hi - *e.speedup.last().unwrap()).abs() < 1e-9);
+        let mid = l.speedup_at(e, 0.52);
+        assert!(mid >= lo && mid <= hi);
+    }
+}

@@ -1,0 +1,25 @@
+//! SpecActor: fast LLM post-training rollout via decoupled and
+//! Fastest-of-N speculation.
+//!
+//! Reproduction of "Fast LLM Post-training via Decoupled and Fastest-of-N
+//! Speculation" (CS.DC 2025). Three-layer architecture:
+//!
+//! * Layer 1 (build-time python): Pallas kernels for the attention /
+//!   verification hot-spot (`python/compile/kernels/`).
+//! * Layer 2 (build-time python): JAX transformer model lowered AOT to HLO
+//!   text artifacts (`python/compile/model.py`, `aot.py`).
+//! * Layer 3 (this crate): the rust coordinator — request routing, dynamic
+//!   batching, decoupled draft/verify pipelines, the decoupled-execution
+//!   planner (Algorithm 1), request-level reconfiguration (Algorithm 2) and
+//!   greedy Fastest-of-N assignment (Algorithm 3), plus the cluster-scale
+//!   discrete-event simulator that regenerates the paper's figures.
+
+pub mod coordinator;
+pub mod drafter;
+pub mod engine;
+pub mod ladder;
+pub mod planner;
+pub mod runtime;
+pub mod sim;
+pub mod spec;
+pub mod util;

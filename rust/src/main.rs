@@ -1,0 +1,218 @@
+//! `specactor` — the leader entrypoint / CLI.
+//!
+//! ```text
+//! specactor plan      --batch 16384 --gpus 256 --accept 0.8 --method draft_small
+//! specactor ladder    [--moe]
+//! specactor simulate  --trace dapo --step 140 [--policy specactor] [--full]
+//! specactor fit       [--artifacts artifacts]   # fit affine costs from the real runtime
+//! specactor rollout   --requests 4 --budget 32  # real-engine rollout
+//! ```
+
+use std::path::PathBuf;
+use std::process::exit;
+
+use specactor::coordinator::global::{plan_initial, rollout, GlobalConfig};
+use specactor::ladder::Ladder;
+use specactor::planner::costmodel::{AffineCost, CostModel};
+use specactor::planner::plan::{search, PlanInput};
+use specactor::runtime::Runtime;
+use specactor::sim::{scaled, simulate_step, Policy, TraceConfig};
+use specactor::util::cli::Args;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: specactor <plan|ladder|simulate|fit|rollout> [options]\n\
+         see README for the option list"
+    );
+    exit(2)
+}
+
+fn main() {
+    let mut args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            usage()
+        }
+    };
+    let cmd = args.positional.first().cloned().unwrap_or_default();
+    match cmd.as_str() {
+        "plan" => cmd_plan(args),
+        "ladder" => cmd_ladder(args),
+        "simulate" => cmd_simulate(args),
+        "fit" => cmd_fit(args),
+        "rollout" => cmd_rollout(args),
+        _ => usage(),
+    }
+}
+
+fn cmd_plan(mut args: Args) {
+    let batch = args.opt_parse("batch", 16384usize);
+    let gpus = args.opt_parse("gpus", 256usize);
+    let accept = args.opt_parse("accept", 0.8f64);
+    let method = args.opt("method", "draft_small");
+    let moe = args.flag("moe");
+    args.finish().unwrap_or_else(|e| { eprintln!("{e}"); usage() });
+    let m = if moe { CostModel::paper_235b_moe() } else { CostModel::paper_32b() };
+    let input = PlanInput {
+        global_batch: batch,
+        gpus,
+        verifier_configs: vec![m.g_ref, m.g_ref * 2],
+        accept_p: accept,
+        method,
+        max_window: 8,
+        fixed_batch: None,
+    };
+    match search(&m, &input) {
+        Some(p) => println!(
+            "plan: g_d={} g_v={} w={} b={} TGS={:.1} tok/s/replica speedup={:.2}x",
+            p.g_d, p.g_v, p.w, p.b, p.tgs, p.speedup
+        ),
+        None => println!("no speculative plan beats vanilla — run vanilla rollout"),
+    }
+}
+
+fn cmd_ladder(mut args: Args) {
+    let moe = args.flag("moe");
+    let batch = args.opt_parse("batch", 128usize);
+    args.finish().unwrap_or_else(|e| { eprintln!("{e}"); usage() });
+    let (m, trace) = if moe {
+        (CostModel::paper_235b_moe(), TraceConfig::grpo_235b_moe())
+    } else {
+        (CostModel::paper_32b(), TraceConfig::dapo_32b_20k())
+    };
+    let ladder = Ladder::build_decoupled(&m, batch, 4, &trace.profiled_acceptance());
+    println!("draft ladder (decoupled, batch {batch}, window 4):");
+    for e in ladder.ranked() {
+        println!("  {:<14} profiled p = {:.2}", e.method, e.profiled_p);
+    }
+    println!("initial selection: {}", ladder.select_initial().method);
+}
+
+fn cmd_simulate(mut args: Args) {
+    let trace = args.opt("trace", "dapo");
+    let step = args.opt_parse("step", 140usize);
+    let policy = args.opt("policy", "all");
+    let full = args.flag("full");
+    let seed = args.opt_parse("seed", 7u64);
+    args.finish().unwrap_or_else(|e| { eprintln!("{e}"); usage() });
+    let base = match trace.as_str() {
+        "grpo" => TraceConfig::grpo_32b_20k(),
+        "ppo" => TraceConfig::ppo_32b_20k(),
+        "moe" => TraceConfig::grpo_235b_moe(),
+        _ => TraceConfig::dapo_32b_20k(),
+    };
+    let cfg = if full { base } else { scaled(&base, 4, 4_000) };
+    let pols: Vec<Policy> = match policy.as_str() {
+        "verl" => vec![Policy::Verl],
+        "specactor" => vec![Policy::specactor()],
+        _ => vec![
+            Policy::Verl,
+            Policy::Rlhfuse,
+            Policy::Verl2x,
+            Policy::ModelSpec,
+            Policy::NgramSpec,
+            Policy::specactor(),
+        ],
+    };
+    for p in pols {
+        let r = simulate_step(&cfg, &p, step, seed);
+        println!(
+            "{:<22} rollout {:>8.1}s  step {:>8.1}s  idle {:>4.0}%  tokens {}",
+            p.label(),
+            r.rollout_s,
+            r.step_s,
+            r.idle_frac * 100.0,
+            r.total_tokens
+        );
+    }
+}
+
+fn cmd_fit(mut args: Args) {
+    let art = PathBuf::from(args.opt("artifacts", "artifacts"));
+    args.finish().unwrap_or_else(|e| { eprintln!("{e}"); usage() });
+    let rt = match Runtime::load(&art) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("load artifacts: {e}");
+            exit(1)
+        }
+    };
+    let m = rt.manifest.clone();
+    println!("fitting affine decode cost of {} from real measurements...", m.target);
+    let mut points = Vec::new();
+    for &b in &[1usize, 4, 8] {
+        let mut cache = rt.new_cache(&m.target, b).unwrap();
+        let prompt: Vec<i32> =
+            (0..b * m.prompt_len).map(|i| m.reserved + (i as i32 % 200)).collect();
+        rt.prefill(&m.target, &prompt, &mut cache).unwrap();
+        for l in cache.lens.iter_mut() {
+            *l = (m.prompt_len - 1) as i32;
+        }
+        let toks = vec![m.reserved + 1; b];
+        let _ = rt.step(&m.target, &toks, 1, &mut cache.clone()).unwrap();
+        let t0 = std::time::Instant::now();
+        let iters = 5;
+        for _ in 0..iters {
+            let _ = rt.step(&m.target, &toks, 1, &mut cache.clone()).unwrap();
+        }
+        let t = t0.elapsed().as_secs_f64() / iters as f64;
+        println!("  b={b}: {:.1} ms", t * 1e3);
+        points.push((b, t));
+    }
+    let (fit, r2) = AffineCost::fit(&points);
+    println!(
+        "fit: t(b) = {:.3}ms * b + {:.3}ms  (r2 = {:.3})",
+        fit.slope * 1e3,
+        fit.intercept * 1e3,
+        r2
+    );
+}
+
+fn cmd_rollout(mut args: Args) {
+    let art = PathBuf::from(args.opt("artifacts", "artifacts"));
+    let n = args.opt_parse("requests", 4usize);
+    let budget = args.opt_parse("budget", 32usize);
+    let workers = args.opt_parse("workers", 2usize);
+    args.finish().unwrap_or_else(|e| { eprintln!("{e}"); usage() });
+    let rt = Runtime::load(&art).unwrap_or_else(|e| {
+        eprintln!("load artifacts: {e}");
+        exit(1)
+    });
+    let m = rt.manifest.clone();
+    let vocab = rt.model(&m.target).unwrap().vocab as i32;
+    drop(rt);
+    let prompts: Vec<(u64, Vec<i32>)> = (0..n as u64)
+        .map(|i| {
+            let p: Vec<i32> = (0..m.prompt_len)
+                .map(|j| m.reserved + ((i as i32 * 83 + j as i32) % (vocab - m.reserved)))
+                .collect();
+            (i, p)
+        })
+        .collect();
+    let cost = CostModel::paper_32b();
+    let profiled = vec![
+        ("draft_mid".to_string(), 0.82),
+        ("draft_small".to_string(), 0.74),
+        ("ngram".to_string(), 0.40),
+    ];
+    let (method, window) = plan_initial(&cost, &profiled, n, 8, 4);
+    println!("plan: method={method} window={window}");
+    let gcfg = GlobalConfig {
+        artifacts: art,
+        n_workers: workers,
+        window: Some(window),
+        temperature: 1.0,
+        seed: 7,
+        fon: true,
+    };
+    let summary = rollout(&gcfg, prompts, budget, &[method], window).unwrap();
+    let tokens: usize = summary.outcomes.iter().map(|o| o.tokens.len()).sum();
+    println!(
+        "rollout finished: {} requests, {} tokens, {:.2}s ({:.1} tok/s)",
+        summary.outcomes.len(),
+        tokens,
+        summary.wall_s,
+        tokens as f64 / summary.wall_s
+    );
+}

@@ -1,0 +1,239 @@
+//! Affine execution-cost model (§4.1):
+//!
+//! ```text
+//! D_{g_d}(b)   = b · D'_{g_d}   + α_{g_d}      (draft one token, batch b)
+//! V_{g_v,w}(b) = b · V'_{g_v,w} + β_{g_v,w}    (verify a w-window, batch b)
+//! ```
+//!
+//! Coefficients come from offline profiling (the paper fits them the same
+//! way, citing [82, 12]). Two sources are supported: (1) the calibrated
+//! defaults below, anchored to the paper's quoted numbers for Qwen2.5-32B
+//! on Hopper (13 ms decode at b = 1; 1.4× latency from b 128→256; see
+//! DESIGN.md §2), and (2) [`AffineCost::fit`] over measured (b, t) points
+//! from the real runtime (`specactor fit`).
+
+use crate::util::stats::linfit;
+
+/// t(b) = slope · b + intercept, in seconds.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AffineCost {
+    pub slope: f64,
+    pub intercept: f64,
+}
+
+impl AffineCost {
+    pub fn new(slope: f64, intercept: f64) -> Self {
+        AffineCost { slope, intercept }
+    }
+
+    pub fn eval(&self, b: usize) -> f64 {
+        self.slope * b as f64 + self.intercept
+    }
+
+    /// Least-squares fit from (batch, seconds) measurements.
+    pub fn fit(points: &[(usize, f64)]) -> (AffineCost, f64) {
+        let xs: Vec<f64> = points.iter().map(|(b, _)| *b as f64).collect();
+        let ys: Vec<f64> = points.iter().map(|(_, t)| *t).collect();
+        let (slope, intercept, r2) = linfit(&xs, &ys);
+        (AffineCost { slope: slope.max(0.0), intercept: intercept.max(0.0) }, r2)
+    }
+}
+
+/// Relative compute scale of a draft method (vs the target model).
+#[derive(Clone, Debug)]
+pub struct DraftCost {
+    /// Method label ("draft_small", "draft_mid", "ngram", "sam", ...).
+    pub method: String,
+    /// Cost of drafting ONE token at batch b on `g_d` GPUs.
+    pub per_token: AffineCost,
+}
+
+/// Cluster-level cost model for one target model.
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    /// Verify-window cost: slope/intercept for `w = 1` on the *reference*
+    /// GPU config (the trace's TP degree).
+    pub verify1: AffineCost,
+    /// Extra per-token slope factor per additional window position:
+    /// `V'_w = V'_1 · (1 + w_scale · (w − 1))`. Near 1.0 when verification
+    /// is compute-bound (large batch), the regime of Figure 6.
+    pub w_scale: f64,
+    /// Window-independent part of β growth with w (kernel launch etc.).
+    pub beta_w: f64,
+    /// Parallel-efficiency exponent for scaling the verifier across GPU
+    /// configs: slope(g) = slope_ref · (g_ref / g)^eff.
+    pub tp_eff: f64,
+    /// Reference GPU count per verifier (trace TP degree).
+    pub g_ref: usize,
+    /// Draft methods available (the ladder pool).
+    pub drafts: Vec<DraftCost>,
+}
+
+impl CostModel {
+    /// Calibrated to the paper's Qwen2.5-32B numbers (see module docs):
+    /// V' ≈ 67.4 µs/req, β ≈ 12.93 ms at TP4.
+    pub fn paper_32b() -> CostModel {
+        let vp = 13.0e-3 / 193.0; // V' from t(1)=13ms and β=192·V'
+        let beta = 192.0 * vp;
+        CostModel {
+            verify1: AffineCost::new(vp, beta),
+            w_scale: 0.30,
+            beta_w: 0.1e-3,
+            tp_eff: 0.85,
+            g_ref: 4,
+            drafts: vec![
+                // 0.5B: compute is ~64× smaller, but batched drafting is
+                // memory-bound and GPU-underutilized (§3): its per-request
+                // slope is close to the target's while its intercept is
+                // small. This is exactly the Fig 5b/6b anchor — serial
+                // draft+verify turns *negative* at per-worker batch ≈ 128,
+                // and hiding the draft path is what decoupling buys.
+                DraftCost {
+                    method: "draft_small".into(),
+                    per_token: AffineCost::new(vp / 1.6, beta / 6.0),
+                },
+                // 1.5B: better acceptance, slower drafting
+                DraftCost {
+                    method: "draft_mid".into(),
+                    per_token: AffineCost::new(vp / 1.3, beta / 4.5),
+                },
+                // n-gram: CPU-side lookup, near-zero cost
+                DraftCost {
+                    method: "ngram".into(),
+                    per_token: AffineCost::new(vp / 400.0, beta / 400.0),
+                },
+            ],
+        }
+    }
+
+    /// MoE variant (§5.3): expert communication inflates verification,
+    /// especially its batch slope [26].
+    pub fn paper_235b_moe() -> CostModel {
+        let mut m = CostModel::paper_32b();
+        m.verify1.slope *= 3.0;
+        m.verify1.intercept *= 1.8;
+        m.w_scale = 0.45;
+        m.g_ref = 8; // EP8
+        m.drafts = vec![
+            DraftCost {
+                method: "draft_4b".into(),
+                per_token: AffineCost::new(m.verify1.slope / 1.1, m.verify1.intercept / 4.0),
+            },
+            DraftCost {
+                method: "draft_1.7b".into(),
+                per_token: AffineCost::new(m.verify1.slope / 1.5, m.verify1.intercept / 6.0),
+            },
+            DraftCost {
+                method: "draft_0.6b".into(),
+                per_token: AffineCost::new(m.verify1.slope / 2.0, m.verify1.intercept / 8.0),
+            },
+            DraftCost {
+                method: "ngram".into(),
+                per_token: AffineCost::new(m.verify1.slope / 400.0, m.verify1.intercept / 400.0),
+            },
+        ];
+        m
+    }
+
+    /// Verification cost of a `w`-token window at batch `b` on `g_v` GPUs.
+    pub fn verify(&self, g_v: usize, w: usize, b: usize) -> f64 {
+        self.verify_f(g_v, w as f64, b)
+    }
+
+    /// Fractional-window variant: a batch with mixed per-request windows
+    /// (Algorithm 2's fused scheduling) loads the verifier with the
+    /// *average* window, not the max.
+    pub fn verify_f(&self, g_v: usize, w: f64, b: usize) -> f64 {
+        let w1 = (w - 1.0).max(0.0);
+        let scale = (self.g_ref as f64 / g_v as f64).powf(self.tp_eff);
+        let slope = self.verify1.slope * (1.0 + self.w_scale * w1) * scale;
+        let beta = self.verify1.intercept * scale.clamp(1.0, 1.2) + self.beta_w * w1;
+        slope * b as f64 + beta
+    }
+
+    /// Decode (generation) cost of one token at batch `b` on the reference
+    /// config — i.e. vanilla rollout's per-iteration latency.
+    pub fn decode(&self, b: usize) -> f64 {
+        self.verify(self.g_ref, 1, b)
+    }
+
+    /// Draft cost of ONE token at batch `b` for `method`.
+    pub fn draft(&self, method: &str, b: usize) -> f64 {
+        self.draft_cost(method).per_token.eval(b)
+    }
+
+    pub fn draft_cost(&self, method: &str) -> &DraftCost {
+        self.drafts
+            .iter()
+            .find(|d| d.method == method)
+            .unwrap_or_else(|| panic!("unknown draft method {method:?}"))
+    }
+
+    pub fn methods(&self) -> Vec<String> {
+        self.drafts.iter().map(|d| d.method.clone()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_anchors_hold() {
+        let m = CostModel::paper_32b();
+        // 13 ms decode at b=1
+        let t1 = m.decode(1);
+        assert!((t1 - 13.0e-3).abs() < 0.5e-3, "t(1) = {t1}");
+        // 1.4x latency from b=128 -> 256
+        let r = m.decode(256) / m.decode(128);
+        assert!((r - 1.4).abs() < 0.05, "128->256 ratio {r}");
+    }
+
+    #[test]
+    fn verify_grows_with_window_and_batch() {
+        let m = CostModel::paper_32b();
+        assert!(m.verify(4, 4, 128) > m.verify(4, 1, 128));
+        assert!(m.verify(4, 4, 256) > m.verify(4, 4, 64));
+        // verification of w=4 at large batch is much worse than at b=1
+        let small = m.verify(4, 4, 1) / m.verify(4, 1, 1);
+        let large = m.verify(4, 4, 256) / m.verify(4, 1, 256);
+        assert!(large > small, "window penalty must grow with batch");
+    }
+
+    #[test]
+    fn more_gpus_speed_verification() {
+        let m = CostModel::paper_32b();
+        assert!(m.verify(8, 4, 128) < m.verify(4, 4, 128));
+    }
+
+    #[test]
+    fn draft_methods_cheaper_than_target() {
+        let m = CostModel::paper_32b();
+        for d in &m.drafts {
+            assert!(
+                m.draft(&d.method, 64) < m.decode(64),
+                "{} not cheaper than target",
+                d.method
+            );
+        }
+        // ngram is the cheapest
+        assert!(m.draft("ngram", 64) < m.draft("draft_small", 64));
+    }
+
+    #[test]
+    fn fit_recovers_affine() {
+        let truth = AffineCost::new(2e-4, 5e-3);
+        let pts: Vec<(usize, f64)> = [1, 2, 4, 8, 16, 32].iter().map(|&b| (b, truth.eval(b))).collect();
+        let (fit, r2) = AffineCost::fit(&pts);
+        assert!((fit.slope - truth.slope).abs() < 1e-9);
+        assert!((fit.intercept - truth.intercept).abs() < 1e-9);
+        assert!(r2 > 0.999);
+    }
+
+    #[test]
+    fn moe_verification_more_expensive() {
+        let dense = CostModel::paper_32b();
+        let moe = CostModel::paper_235b_moe();
+        assert!(moe.verify(8, 4, 64) > dense.verify(8, 4, 64));
+    }
+}

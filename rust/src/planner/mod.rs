@@ -1,0 +1,9 @@
+//! Planner: the affine cost model, the TGS expectation model, and the
+//! Algorithm 1 plan search (§4.1).
+
+pub mod costmodel;
+pub mod plan;
+pub mod tgs;
+
+pub use costmodel::{AffineCost, CostModel, DraftCost};
+pub use plan::{search, Plan, PlanInput};

@@ -1,0 +1,202 @@
+//! Algorithm 1: decoupled execution plan generation at rollout start.
+//!
+//! Enumeration-based search with decoupled-execution-aware pruning over
+//! (verifier GPU config `g_v`, drafter GPUs `g_d`, draft window `w`),
+//! maximising the modelled TGS. Mirrors the paper's pseudo-code, including
+//! the two prunes: `g_d ≤ g_v` (drafters need fewer GPUs) and
+//! `w ≤ w_max = max(⌈V'/D'⌉, ⌈β/α⌉)` (larger windows only add waste).
+
+use super::costmodel::CostModel;
+use super::tgs::{tgs_decoupled, tgs_vanilla};
+
+/// Search output: the initial decoupled execution plan.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Plan {
+    pub method: String,
+    /// GPUs allocated to one drafter replica.
+    pub g_d: usize,
+    /// GPUs allocated to one verifier replica.
+    pub g_v: usize,
+    /// Draft window.
+    pub w: usize,
+    /// Per-verifier-replica batch size implied by the allocation.
+    pub b: usize,
+    /// Modelled TGS of the plan (tokens/s per replica).
+    pub tgs: f64,
+    /// Modelled speedup over vanilla decoding at the same batch.
+    pub speedup: f64,
+}
+
+/// Inputs to Algorithm 1.
+#[derive(Clone, Debug)]
+pub struct PlanInput {
+    /// Initial global batch size B (requests in the step).
+    pub global_batch: usize,
+    /// Total GPUs in the cluster G.
+    pub gpus: usize,
+    /// Allowed verifier GPU configs (how one model copy may be partitioned).
+    pub verifier_configs: Vec<usize>,
+    /// Profiled average per-token acceptance probability for `method`.
+    pub accept_p: f64,
+    /// Draft method to plan for (selected by the ladder beforehand).
+    pub method: String,
+    /// Cap on enumerated windows (safety bound; paper prunes analytically).
+    pub max_window: usize,
+    /// Evaluate TGS at this per-replica batch instead of deriving it from
+    /// the GPU split (used when the deployment fixes worker batch sizes,
+    /// e.g. the cluster simulator's drafter-piggyback configuration).
+    pub fixed_batch: Option<usize>,
+}
+
+/// Paper's w_max prune: beyond this window the drafter outpaces any
+/// verification benefit.
+pub fn w_max(m: &CostModel, method: &str, g_v: usize) -> usize {
+    let d = m.draft_cost(method).per_token;
+    let scale = (m.g_ref as f64 / g_v as f64).powf(m.tp_eff);
+    let vp = m.verify1.slope * scale;
+    let beta = m.verify1.intercept * scale.clamp(1.0, 1.2);
+    let by_slope = (vp / d.slope.max(1e-12)).ceil() as usize;
+    let by_intercept = (beta / d.intercept.max(1e-12)).ceil() as usize;
+    by_slope.max(by_intercept).max(1)
+}
+
+/// Algorithm 1. Returns the best plan, or an effectively-vanilla plan
+/// (w = 0 encoded as None) when no speculative plan beats vanilla.
+pub fn search(m: &CostModel, input: &PlanInput) -> Option<Plan> {
+    let mut best: Option<Plan> = None;
+    for &g_v in &input.verifier_configs {
+        // line 3: drafters need fewer GPUs than verifiers
+        for g_d in 1..=g_v {
+            // line 4: per-replica batch for this allocation granularity
+            let replicas = input.gpus / (g_d + g_v);
+            if replicas == 0 {
+                continue;
+            }
+            let b = input.fixed_batch.unwrap_or_else(|| input.global_batch.div_ceil(replicas));
+            // line 5: prune arbitrarily large windows
+            let wm = w_max(m, &input.method, g_v).min(input.max_window);
+            for w in 1..=wm {
+                let tgs = tgs_decoupled(m, &input.method, g_v, w, b, input.accept_p)
+                    // drafter replica count is implied; model per-replica TGS
+                    ;
+                let vanilla = tgs_vanilla(m, b);
+                let cand = Plan {
+                    method: input.method.clone(),
+                    g_d,
+                    g_v,
+                    w,
+                    b,
+                    tgs,
+                    speedup: tgs / vanilla,
+                };
+                if best.as_ref().map(|p| cand.tgs > p.tgs).unwrap_or(true) {
+                    best = Some(cand);
+                }
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest_lite::check;
+
+    fn input(b: usize, p: f64) -> PlanInput {
+        PlanInput {
+            global_batch: b,
+            gpus: 256,
+            verifier_configs: vec![4, 8, 16],
+            accept_p: p,
+            method: "draft_small".to_string(),
+            max_window: 16,
+            fixed_batch: None,
+        }
+    }
+
+    #[test]
+    fn finds_a_plan_for_paper_config() {
+        // DAPO-32B-20K: B=16384, 256 GPUs, TP4 -> per-worker batch 256
+        let m = CostModel::paper_32b();
+        let plan = search(&m, &input(16384, 0.8)).unwrap();
+        assert!(plan.w >= 1);
+        assert!(plan.g_d <= plan.g_v);
+        assert!(plan.tgs > 0.0);
+    }
+
+    #[test]
+    fn plan_beats_vanilla_at_decent_acceptance() {
+        let m = CostModel::paper_32b();
+        let plan = search(&m, &input(8192, 0.85)).unwrap();
+        assert!(
+            plan.speedup > 1.2,
+            "planned speedup {:.2} too small for p=0.85",
+            plan.speedup
+        );
+    }
+
+    #[test]
+    fn low_acceptance_shrinks_window() {
+        let m = CostModel::paper_32b();
+        let hi = search(&m, &input(8192, 0.9)).unwrap();
+        let lo = search(&m, &input(8192, 0.3)).unwrap();
+        assert!(
+            lo.w <= hi.w,
+            "low-acceptance window {} should not exceed high-acceptance {}",
+            lo.w,
+            hi.w
+        );
+    }
+
+    #[test]
+    fn w_max_prune_is_positive() {
+        let m = CostModel::paper_32b();
+        for method in ["draft_small", "draft_mid", "ngram"] {
+            assert!(w_max(&m, method, 4) >= 1);
+        }
+    }
+
+    #[test]
+    fn prop_search_respects_constraints() {
+        let m = CostModel::paper_32b();
+        check("plan-constraints", 60, |g| {
+            let inp = PlanInput {
+                global_batch: 64 << g.usize_in(0, 8),
+                gpus: 8 << g.usize_in(0, 6),
+                verifier_configs: vec![2, 4, 8],
+                accept_p: 0.2 + 0.75 * g.prob(),
+                method: ["draft_small", "draft_mid", "ngram"][g.usize_in(0, 3)].to_string(),
+                max_window: 1 + g.usize_in(0, 15),
+                fixed_batch: None,
+            };
+            if let Some(p) = search(&m, &inp) {
+                prop_assert!(p.g_d >= 1 && p.g_d <= p.g_v, "g_d {} g_v {}", p.g_d, p.g_v);
+                prop_assert!(p.w >= 1 && p.w <= inp.max_window, "w {}", p.w);
+                prop_assert!(inp.verifier_configs.contains(&p.g_v), "g_v not allowed");
+                prop_assert!(p.tgs.is_finite() && p.tgs > 0.0, "tgs {}", p.tgs);
+                // exhaustive check: no enumerated candidate beats the winner
+                for &g_v in &inp.verifier_configs {
+                    for g_d in 1..=g_v {
+                        let reps = inp.gpus / (g_d + g_v);
+                        if reps == 0 {
+                            continue;
+                        }
+                        let b = inp.global_batch.div_ceil(reps);
+                        let wm = w_max(&m, &inp.method, g_v).min(inp.max_window);
+                        for w in 1..=wm {
+                            let t = super::tgs_decoupled(&m, &inp.method, g_v, w, b, inp.accept_p);
+                            prop_assert!(
+                                t <= p.tgs + 1e-12,
+                                "missed better plan g_v={g_v} g_d={g_d} w={w}: {t} > {}",
+                                p.tgs
+                            );
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,154 @@
+//! TGS (token generation speed) expectation model (§4.1).
+//!
+//! Implements the paper's formulas exactly:
+//!
+//! ```text
+//! P(a, w) = p^a (1 − p)   for 0 ≤ a ≤ w−1        (accept a, reject next)
+//!         = p^w           for a = w               (full accept)
+//!
+//! τ_w  = Σ_{a=0}^{w−1} p^a (1−p) (a+1)/2  +  w p^w        (decoupled)
+//!
+//! IL_{g_d,g_v,w}(b) = max( w·D_{g_d}(b),  V_{g_v,w}(b) )  (pipelined)
+//!
+//! TGS_{g_d,g_v,w}(b) = τ_w / IL_{g_d,g_v,w}(b)
+//! ```
+//!
+//! plus the coupled analogue `TGS_C,w` the paper references for
+//! Algorithm 2 (sequential draft-then-verify; full accept earns the bonus
+//! token; no aggressive-drafting discount, so the expected tokens per
+//! round is `Σ p^a(1−p)(a+1) + (w+1)p^w`).
+
+use super::costmodel::CostModel;
+
+/// P(a, w): probability of accepting exactly `a` of `w` drafted tokens
+/// given per-token acceptance probability `p`.
+pub fn p_accept(a: usize, w: usize, p: f64) -> f64 {
+    debug_assert!(a <= w);
+    if a == w {
+        p.powi(w as i32)
+    } else {
+        p.powi(a as i32) * (1.0 - p)
+    }
+}
+
+/// Expected useful tokens per decoupled round of window `w` (paper's τ_w —
+/// the (a+1)/2 factor discounts in-flight tokens wasted by aggressive
+/// drafting when a mis-speculation lands mid-window).
+pub fn tau_decoupled(w: usize, p: f64) -> f64 {
+    let mut tau = 0.0;
+    for a in 0..w {
+        tau += p_accept(a, w, p) * (a + 1) as f64 / 2.0;
+    }
+    tau + w as f64 * p.powi(w as i32)
+}
+
+/// Expected useful tokens per coupled round (accepted + correction, or
+/// full window + bonus).
+pub fn tau_coupled(w: usize, p: f64) -> f64 {
+    let mut tau = 0.0;
+    for a in 0..w {
+        tau += p_accept(a, w, p) * (a + 1) as f64;
+    }
+    tau + (w + 1) as f64 * p.powi(w as i32)
+}
+
+/// Iteration latency of one decoupled round: drafter and verifier overlap.
+pub fn il_decoupled(m: &CostModel, method: &str, g_v: usize, w: usize, b: usize) -> f64 {
+    let draft = w as f64 * m.draft(method, b);
+    let verify = m.verify(g_v, w, b);
+    draft.max(verify)
+}
+
+/// Iteration latency of one coupled round: draft then verify, serial.
+pub fn il_coupled(m: &CostModel, method: &str, g_v: usize, w: usize, b: usize) -> f64 {
+    w as f64 * m.draft(method, b) + m.verify(g_v, w, b)
+}
+
+/// TGS for decoupled speculation.
+pub fn tgs_decoupled(m: &CostModel, method: &str, g_v: usize, w: usize, b: usize, p: f64) -> f64 {
+    tau_decoupled(w, p) / il_decoupled(m, method, g_v, w, b)
+}
+
+/// TGS for coupled speculation.
+pub fn tgs_coupled(m: &CostModel, method: &str, g_v: usize, w: usize, b: usize, p: f64) -> f64 {
+    tau_coupled(w, p) / il_coupled(m, method, g_v, w, b)
+}
+
+/// TGS of vanilla decoding (one token per decode step).
+pub fn tgs_vanilla(m: &CostModel, b: usize) -> f64 {
+    1.0 / m.decode(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest_lite::check;
+
+    #[test]
+    fn p_accept_is_distribution() {
+        for &p in &[0.0, 0.3, 0.7, 0.95, 1.0] {
+            for w in 1..=8 {
+                let total: f64 = (0..=w).map(|a| p_accept(a, w, p)).sum();
+                assert!((total - 1.0).abs() < 1e-12, "p={p} w={w} sums to {total}");
+            }
+        }
+    }
+
+    #[test]
+    fn tau_monotone_in_p() {
+        for w in 1..=8 {
+            let lo = tau_decoupled(w, 0.3);
+            let hi = tau_decoupled(w, 0.9);
+            assert!(hi > lo, "w={w}");
+            assert!(tau_coupled(w, 0.9) > tau_coupled(w, 0.3));
+        }
+    }
+
+    #[test]
+    fn tau_coupled_bounds() {
+        // p=1: every round yields w+1 tokens (window + bonus)
+        assert!((tau_coupled(4, 1.0) - 5.0).abs() < 1e-12);
+        // p=0: every round yields exactly the correction token
+        assert!((tau_coupled(4, 0.0) - 1.0).abs() < 1e-12);
+        // decoupled at p=1 yields w per round (no bonus)
+        assert!((tau_decoupled(4, 1.0) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prop_tau_le_window_bound() {
+        check("tau-bounds", 200, |g| {
+            let w = 1 + g.usize_in(0, 8);
+            let p = g.prob();
+            let td = tau_decoupled(w, p);
+            let tc = tau_coupled(w, p);
+            prop_assert!(td > 0.0 && td <= w as f64 + 1e-12, "tau_d={td}");
+            prop_assert!(tc > 0.0 && tc <= (w + 1) as f64 + 1e-12, "tau_c={tc}");
+            prop_assert!(tc >= td, "coupled tau {tc} < decoupled {td}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn decoupled_beats_coupled_at_high_acceptance_large_batch() {
+        // The paper's headline: with b=128+ the serial draft+verify leaves
+        // the verifier starved; decoupling overlaps them.
+        let m = crate::planner::CostModel::paper_32b();
+        let (p, b, w) = (0.85, 128, 4);
+        let d = tgs_decoupled(&m, "draft_small", 4, w, b, p);
+        let c = tgs_coupled(&m, "draft_small", 4, w, b, p);
+        assert!(d > c, "decoupled {d} <= coupled {c}");
+    }
+
+    #[test]
+    fn vanilla_spec_breaks_even_at_large_batch() {
+        // Figure 5(b): at per-worker batch ~128 coupled speculation brings
+        // no or negative gain; at small batch it wins clearly.
+        let m = crate::planner::CostModel::paper_32b();
+        let p = 0.8;
+        let small = tgs_coupled(&m, "draft_small", 4, 4, 4, p) / tgs_vanilla(&m, 4);
+        let large = tgs_coupled(&m, "draft_small", 4, 4, 192, p) / tgs_vanilla(&m, 192);
+        assert!(small > 1.2, "small-batch spec speedup only {small}");
+        assert!(large < 1.15, "large-batch spec speedup {large} should collapse");
+    }
+}

@@ -1,0 +1,262 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute on the
+//! request path.
+//!
+//! Mirrors a serving engine's model-executor layer: one [`Runtime`] per
+//! worker process/thread owns a PJRT client, lazily compiles the
+//! (model, fn, batch-bucket, window) executables it needs, keeps them in a
+//! cache, and holds each model's weights as literals uploaded with every
+//! call (the CPU client's `execute` copies host literals to device
+//! internally; weights are ~100 KiB so this is noise next to the KV cache).
+//!
+//! The interchange format is HLO **text** — see DESIGN.md and
+//! /opt/xla-example/README.md for why serialized protos don't work.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+use xla::FromRawBytes;
+
+use super::kv::KvCache;
+use super::manifest::{ArtifactKey, FnKind, Manifest, ModelInfo};
+
+/// Output of one prefill/step execution.
+#[derive(Clone, Debug)]
+pub struct StepOut {
+    /// Row-major logits. Prefill: `[b, vocab]`; Step: `[b, w, vocab]`.
+    pub logits: Vec<f32>,
+    pub batch: usize,
+    pub window: usize,
+    pub vocab: usize,
+}
+
+impl StepOut {
+    /// Logits for batch slot `i`, window position `j`.
+    pub fn at(&self, i: usize, j: usize) -> &[f32] {
+        let off = (i * self.window + j) * self.vocab;
+        &self.logits[off..off + self.vocab]
+    }
+}
+
+/// Cumulative execution counters (perf accounting; see EXPERIMENTS.md §Perf).
+#[derive(Clone, Debug, Default)]
+pub struct RuntimeStats {
+    pub compiles: usize,
+    pub compile_s: f64,
+    pub executions: usize,
+    pub execute_s: f64,
+    pub host_copy_s: f64,
+}
+
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    exes: RefCell<HashMap<ArtifactKey, Rc<xla::PjRtLoadedExecutable>>>,
+    /// model name -> ordered weight literals (manifest order).
+    weights: RefCell<HashMap<String, Rc<Vec<xla::Literal>>>>,
+    pub stats: RefCell<RuntimeStats>,
+}
+
+impl Runtime {
+    pub fn load(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime {
+            manifest,
+            client,
+            exes: RefCell::new(HashMap::new()),
+            weights: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.manifest.model(name)
+    }
+
+    /// Compile (or fetch cached) executable for `key`.
+    pub fn executable(&self, key: &ArtifactKey) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.borrow().get(key) {
+            return Ok(e.clone());
+        }
+        let entry = self.manifest.artifact(key)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&entry.file)
+            .map_err(|e| anyhow!("parse {:?}: {e:?}", entry.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {:?}: {e:?}", entry.file))?;
+        let mut st = self.stats.borrow_mut();
+        st.compiles += 1;
+        st.compile_s += t0.elapsed().as_secs_f64();
+        drop(st);
+        let rc = Rc::new(exe);
+        self.exes.borrow_mut().insert(key.clone(), rc.clone());
+        Ok(rc)
+    }
+
+    /// Pre-compile every artifact of `model` (warmup; avoids first-call
+    /// latency spikes on the serving path).
+    pub fn warmup_model(&self, model: &str) -> Result<usize> {
+        let keys: Vec<ArtifactKey> = self
+            .manifest
+            .artifacts
+            .keys()
+            .filter(|k| k.model == model)
+            .cloned()
+            .collect();
+        for k in &keys {
+            self.executable(k)?;
+        }
+        Ok(keys.len())
+    }
+
+    /// Ordered weight literals for `model`, loaded from its .npz once.
+    fn model_weights(&self, model: &str) -> Result<Rc<Vec<xla::Literal>>> {
+        if let Some(w) = self.weights.borrow().get(model) {
+            return Ok(w.clone());
+        }
+        let info = self.manifest.model(model)?;
+        let entries = xla::Literal::read_npz(&info.weights_file, &())
+            .map_err(|e| anyhow!("read {:?}: {e:?}", info.weights_file))?;
+        let mut by_name: HashMap<String, xla::Literal> = entries.into_iter().collect();
+        let mut ordered = Vec::with_capacity(info.weight_names.len());
+        for name in &info.weight_names {
+            // npz entries may carry a trailing ".npy" in their names
+            let lit = by_name
+                .remove(name)
+                .or_else(|| by_name.remove(&format!("{name}.npy")))
+                .ok_or_else(|| anyhow!("weights npz missing {name:?}"))?;
+            ordered.push(lit);
+        }
+        let rc = Rc::new(ordered);
+        self.weights.borrow_mut().insert(model.to_string(), rc.clone());
+        Ok(rc)
+    }
+
+    /// Fresh KV cache for `model` at batch bucket `b`.
+    pub fn new_cache(&self, model: &str, batch: usize) -> Result<KvCache> {
+        let m = self.manifest.model(model)?;
+        Ok(KvCache::new(m.n_layers, batch, m.max_seq, m.n_heads, m.d_head))
+    }
+
+    fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+        xla::Literal::vec1(data)
+            .reshape(dims)
+            .map_err(|e| anyhow!("reshape i32 {dims:?}: {e:?}"))
+    }
+
+    fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+        xla::Literal::vec1(data)
+            .reshape(dims)
+            .map_err(|e| anyhow!("reshape f32 {dims:?}: {e:?}"))
+    }
+
+    /// Run prefill for `model` on `tokens` (row-major `[b, P]`), writing the
+    /// produced cache into `cache` (must be sized for batch bucket `b`).
+    /// Returns last-position logits `[b, vocab]`.
+    pub fn prefill(&self, model: &str, tokens: &[i32], cache: &mut KvCache) -> Result<StepOut> {
+        let info = self.manifest.model(model)?;
+        let b = cache.batch;
+        let p = self.manifest.prompt_len;
+        if tokens.len() != b * p {
+            bail!("prefill tokens len {} != b*P = {}", tokens.len(), b * p);
+        }
+        let key = ArtifactKey { model: model.to_string(), kind: FnKind::Prefill, batch: b, window: p };
+        let exe = self.executable(&key)?;
+        let weights = self.model_weights(model)?;
+
+        let mut args: Vec<&xla::Literal> = weights.iter().collect();
+        let tok_lit = Self::lit_i32(tokens, &[b as i64, p as i64])?;
+        args.push(&tok_lit);
+
+        let (logits, k, v) = self.run3(&exe, &args, info, b, 1)?;
+        cache.k = k;
+        cache.v = v;
+        for l in cache.lens.iter_mut() {
+            *l = p as i32;
+        }
+        Ok(StepOut { logits, batch: b, window: 1, vocab: info.vocab })
+    }
+
+    /// Run one decode/verify step. `tokens` is `[b, w]` row-major; the
+    /// cache's `lens` field supplies per-slot positions and is advanced by
+    /// the caller (engine) according to how many tokens were accepted.
+    pub fn step(&self, model: &str, tokens: &[i32], window: usize, cache: &mut KvCache) -> Result<StepOut> {
+        let info = self.manifest.model(model)?;
+        let b = cache.batch;
+        if tokens.len() != b * window {
+            bail!("step tokens len {} != b*w = {}", tokens.len(), b * window);
+        }
+        for (slot, &l) in cache.lens.iter().enumerate() {
+            if l as usize + window > info.max_seq {
+                bail!(
+                    "slot {slot}: cache len {l} + window {window} exceeds max_seq {}",
+                    info.max_seq
+                );
+            }
+        }
+        let key = ArtifactKey { model: model.to_string(), kind: FnKind::Step, batch: b, window };
+        let exe = self.executable(&key)?;
+        let weights = self.model_weights(model)?;
+
+        let dims = cache.dims().map(|d| d as i64);
+        let mut args: Vec<&xla::Literal> = weights.iter().collect();
+        let tok_lit = Self::lit_i32(tokens, &[b as i64, window as i64])?;
+        let lens_lit = Self::lit_i32(&cache.lens, &[b as i64])?;
+        let t0 = Instant::now();
+        let k_lit = Self::lit_f32(&cache.k, &dims)?;
+        let v_lit = Self::lit_f32(&cache.v, &dims)?;
+        self.stats.borrow_mut().host_copy_s += t0.elapsed().as_secs_f64();
+        args.push(&tok_lit);
+        args.push(&lens_lit);
+        args.push(&k_lit);
+        args.push(&v_lit);
+
+        let (logits, k, v) = self.run3(&exe, &args, info, b, window)?;
+        cache.k = k;
+        cache.v = v;
+        Ok(StepOut { logits, batch: b, window, vocab: info.vocab })
+    }
+
+    /// Execute and unpack the `(logits, k, v)` tuple.
+    fn run3(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[&xla::Literal],
+        info: &ModelInfo,
+        batch: usize,
+        window: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let t0 = Instant::now();
+        let out = exe
+            .execute::<&xla::Literal>(args)
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        let tup = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        {
+            let mut st = self.stats.borrow_mut();
+            st.executions += 1;
+            st.execute_s += t0.elapsed().as_secs_f64();
+        }
+        let t1 = Instant::now();
+        let (lg, k, v) = tup
+            .to_tuple3()
+            .map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let logits: Vec<f32> = lg.to_vec().map_err(|e| anyhow!("logits to_vec: {e:?}"))?;
+        let kk: Vec<f32> = k.to_vec().map_err(|e| anyhow!("k to_vec: {e:?}"))?;
+        let vv: Vec<f32> = v.to_vec().map_err(|e| anyhow!("v to_vec: {e:?}"))?;
+        self.stats.borrow_mut().host_copy_s += t1.elapsed().as_secs_f64();
+        let want = batch * window * info.vocab;
+        if logits.len() != want {
+            bail!("logits len {} != expected {}", logits.len(), want);
+        }
+        Ok((logits, kk, vv))
+    }
+}

@@ -1,0 +1,212 @@
+//! Host-side KV caches and the "KVCache scale" primitive (§4.3).
+//!
+//! CPU-PJRT returns executables' results as a single tuple buffer (no
+//! device-side untupling in xla_extension 0.5.1), so caches round-trip
+//! through host memory between steps. The cache layout matches the lowered
+//! executables: `[L, b, S, h, dh]` f32, one tensor for keys and one for
+//! values.
+//!
+//! `extract_row` / `insert_row` implement per-request cache migration: when
+//! Fastest-of-N deploys an extra verifier for a straggler request, its
+//! cache rows are copied over to the new worker (the paper transfers the
+//! tail and recomputes; at our scale a straight copy exercises the same
+//! code path).
+
+use anyhow::{bail, Result};
+
+/// One model's KV cache at a fixed batch bucket.
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    pub n_layers: usize,
+    pub batch: usize,
+    pub max_seq: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    /// Per-slot number of valid cache positions (`lens` argument).
+    pub lens: Vec<i32>,
+}
+
+impl KvCache {
+    pub fn new(n_layers: usize, batch: usize, max_seq: usize, n_heads: usize, d_head: usize) -> Self {
+        let n = n_layers * batch * max_seq * n_heads * d_head;
+        KvCache {
+            n_layers,
+            batch,
+            max_seq,
+            n_heads,
+            d_head,
+            k: vec![0.0; n],
+            v: vec![0.0; n],
+            lens: vec![0; batch],
+        }
+    }
+
+    pub fn dims(&self) -> [usize; 5] {
+        [self.n_layers, self.batch, self.max_seq, self.n_heads, self.d_head]
+    }
+
+    pub fn elems(&self) -> usize {
+        self.k.len()
+    }
+
+    /// Bytes held by this cache (both k and v).
+    pub fn bytes(&self) -> usize {
+        2 * self.k.len() * std::mem::size_of::<f32>()
+    }
+
+    fn row_stride(&self) -> usize {
+        self.max_seq * self.n_heads * self.d_head
+    }
+
+    fn layer_stride(&self) -> usize {
+        self.batch * self.row_stride()
+    }
+
+    /// Copy one request's cache rows (all layers) out.
+    pub fn extract_row(&self, slot: usize) -> Result<KvRow> {
+        if slot >= self.batch {
+            bail!("slot {slot} out of range (batch {})", self.batch);
+        }
+        let rs = self.row_stride();
+        let ls = self.layer_stride();
+        let mut k = Vec::with_capacity(self.n_layers * rs);
+        let mut v = Vec::with_capacity(self.n_layers * rs);
+        for l in 0..self.n_layers {
+            let off = l * ls + slot * rs;
+            k.extend_from_slice(&self.k[off..off + rs]);
+            v.extend_from_slice(&self.v[off..off + rs]);
+        }
+        Ok(KvRow {
+            n_layers: self.n_layers,
+            max_seq: self.max_seq,
+            n_heads: self.n_heads,
+            d_head: self.d_head,
+            k,
+            v,
+            len: self.lens[slot],
+        })
+    }
+
+    /// Insert one request's cache rows (all layers) into `slot`.
+    pub fn insert_row(&mut self, slot: usize, row: &KvRow) -> Result<()> {
+        if slot >= self.batch {
+            bail!("slot {slot} out of range (batch {})", self.batch);
+        }
+        if row.n_layers != self.n_layers
+            || row.max_seq != self.max_seq
+            || row.n_heads != self.n_heads
+            || row.d_head != self.d_head
+        {
+            bail!("cache row geometry mismatch");
+        }
+        let rs = self.row_stride();
+        let ls = self.layer_stride();
+        for l in 0..self.n_layers {
+            let off = l * ls + slot * rs;
+            self.k[off..off + rs].copy_from_slice(&row.k[l * rs..(l + 1) * rs]);
+            self.v[off..off + rs].copy_from_slice(&row.v[l * rs..(l + 1) * rs]);
+        }
+        self.lens[slot] = row.len;
+        Ok(())
+    }
+
+    /// Clear one slot (request finished; slot becomes inactive padding).
+    pub fn clear_row(&mut self, slot: usize) {
+        let rs = self.row_stride();
+        let ls = self.layer_stride();
+        for l in 0..self.n_layers {
+            let off = l * ls + slot * rs;
+            self.k[off..off + rs].fill(0.0);
+            self.v[off..off + rs].fill(0.0);
+        }
+        self.lens[slot] = 0;
+    }
+}
+
+/// One request's extracted cache (all layers), used for cache migration
+/// between workers / batch buckets.
+#[derive(Clone, Debug)]
+pub struct KvRow {
+    pub n_layers: usize,
+    pub max_seq: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub len: i32,
+}
+
+impl KvRow {
+    pub fn bytes(&self) -> usize {
+        2 * self.k.len() * std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn filled_cache() -> KvCache {
+        let mut c = KvCache::new(2, 3, 4, 1, 2);
+        for (i, x) in c.k.iter_mut().enumerate() {
+            *x = i as f32;
+        }
+        for (i, x) in c.v.iter_mut().enumerate() {
+            *x = -(i as f32);
+        }
+        c.lens = vec![1, 2, 3];
+        c
+    }
+
+    #[test]
+    fn extract_insert_roundtrip() {
+        let c = filled_cache();
+        let row = c.extract_row(1).unwrap();
+        assert_eq!(row.len, 2);
+        let mut c2 = KvCache::new(2, 3, 4, 1, 2);
+        c2.insert_row(2, &row).unwrap();
+        let row2 = c2.extract_row(2).unwrap();
+        assert_eq!(row.k, row2.k);
+        assert_eq!(row.v, row2.v);
+        assert_eq!(c2.lens[2], 2);
+    }
+
+    #[test]
+    fn extract_row_is_layer_contiguous() {
+        let c = filled_cache();
+        let row = c.extract_row(0).unwrap();
+        // layer 0 row 0 starts at 0; layer 1 row 0 starts at layer_stride
+        let rs = 4 * 1 * 2;
+        let ls = 3 * rs;
+        assert_eq!(row.k[0], 0.0);
+        assert_eq!(row.k[rs], ls as f32);
+    }
+
+    #[test]
+    fn clear_row_zeroes() {
+        let mut c = filled_cache();
+        c.clear_row(1);
+        let row = c.extract_row(1).unwrap();
+        assert!(row.k.iter().all(|&x| x == 0.0));
+        assert_eq!(c.lens[1], 0);
+        // neighbours untouched
+        assert!(c.extract_row(0).unwrap().k.iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn geometry_mismatch_rejected() {
+        let c = filled_cache();
+        let row = c.extract_row(0).unwrap();
+        let mut other = KvCache::new(2, 3, 8, 1, 2);
+        assert!(other.insert_row(0, &row).is_err());
+        assert!(c.extract_row(99).is_err());
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let c = KvCache::new(2, 3, 4, 1, 2);
+        assert_eq!(c.bytes(), 2 * 2 * 3 * 4 * 1 * 2 * 4);
+    }
+}

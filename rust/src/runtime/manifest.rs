@@ -1,0 +1,262 @@
+//! `artifacts/manifest.json` — the python→rust contract.
+//!
+//! The manifest lists every AOT-lowered executable (model, fn, batch
+//! bucket, draft window), per-model configs, and the weight parameter
+//! order. See `python/compile/aot.py` for the writer.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::Json;
+
+/// Which lowered entrypoint an artifact implements.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum FnKind {
+    /// `prefill(tokens[b, P]) -> (last_logits, k, v)` with a fresh cache.
+    Prefill,
+    /// `step(tokens[b, w], lens[b], k, v) -> (logits[b, w, V], k', v')`.
+    /// `w = 1` decodes; `w > 1` verifies a draft window.
+    Step,
+}
+
+impl FnKind {
+    pub fn parse(s: &str) -> Result<FnKind> {
+        match s {
+            "prefill" => Ok(FnKind::Prefill),
+            "step" => Ok(FnKind::Step),
+            other => bail!("unknown fn kind {other:?}"),
+        }
+    }
+}
+
+/// Key identifying one executable.
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ArtifactKey {
+    pub model: String,
+    pub kind: FnKind,
+    pub batch: usize,
+    /// draft window for Step; prompt length for Prefill.
+    pub window: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub key: ArtifactKey,
+    pub file: PathBuf,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub weights_file: PathBuf,
+    pub weight_names: Vec<String>,
+}
+
+impl ModelInfo {
+    /// KV-cache element count for one of k/v at batch `b`:
+    /// `[L, b, S, h, dh]` f32.
+    pub fn cache_elems(&self, batch: usize) -> usize {
+        self.n_layers * batch * self.max_seq * self.n_heads * self.d_head
+    }
+
+    /// KV-cache dims for one of k/v at batch `b`.
+    pub fn cache_dims(&self, batch: usize) -> [usize; 5] {
+        [self.n_layers, batch, self.max_seq, self.n_heads, self.d_head]
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub eos_id: i32,
+    pub pad_id: i32,
+    pub reserved: i32,
+    pub noisy_band_lo: i32,
+    pub prompt_len: usize,
+    pub batch_buckets: Vec<usize>,
+    pub windows: Vec<usize>,
+    pub target: String,
+    pub drafters: Vec<String>,
+    pub models: BTreeMap<String, ModelInfo>,
+    pub artifacts: BTreeMap<ArtifactKey, ArtifactEntry>,
+}
+
+fn get_usize(j: &Json, key: &str) -> Result<usize> {
+    j.get(key)
+        .as_usize()
+        .ok_or_else(|| anyhow!("manifest: missing numeric field {key:?}"))
+}
+
+fn get_str(j: &Json, key: &str) -> Result<String> {
+    Ok(j.get(key)
+        .as_str()
+        .ok_or_else(|| anyhow!("manifest: missing string field {key:?}"))?
+        .to_string())
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let raw = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {dir:?} (run `make artifacts`)"))?;
+        let j = Json::parse(&raw).map_err(|e| anyhow!("manifest.json: {e}"))?;
+
+        let mut models = BTreeMap::new();
+        for (name, m) in j
+            .get("models")
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest: models not an object"))?
+        {
+            let weight_names = m
+                .get("weight_names")
+                .as_arr()
+                .ok_or_else(|| anyhow!("manifest: weight_names"))?
+                .iter()
+                .map(|x| x.as_str().unwrap_or_default().to_string())
+                .collect();
+            models.insert(
+                name.clone(),
+                ModelInfo {
+                    name: name.clone(),
+                    vocab: get_usize(m, "vocab")?,
+                    d_model: get_usize(m, "d_model")?,
+                    n_layers: get_usize(m, "n_layers")?,
+                    n_heads: get_usize(m, "n_heads")?,
+                    d_head: get_usize(m, "d_head")?,
+                    d_ff: get_usize(m, "d_ff")?,
+                    max_seq: get_usize(m, "max_seq")?,
+                    weights_file: dir.join(get_str(m, "weights_file")?),
+                    weight_names,
+                },
+            );
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for a in j
+            .get("artifacts")
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest: artifacts not an array"))?
+        {
+            let kind = FnKind::parse(&get_str(a, "fn")?)?;
+            let key = ArtifactKey {
+                model: get_str(a, "model")?,
+                kind,
+                batch: get_usize(a, "batch")?,
+                window: get_usize(a, "window")?,
+            };
+            let file = dir.join(get_str(a, "file")?);
+            if !file.exists() {
+                bail!("manifest lists missing artifact {file:?}");
+            }
+            artifacts.insert(key.clone(), ArtifactEntry { key, file });
+        }
+
+        let drafters = j
+            .get("drafters")
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest: drafters"))?
+            .iter()
+            .map(|x| x.as_str().unwrap_or_default().to_string())
+            .collect();
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            eos_id: get_usize(&j, "eos_id")? as i32,
+            pad_id: get_usize(&j, "pad_id")? as i32,
+            reserved: get_usize(&j, "reserved")? as i32,
+            noisy_band_lo: get_usize(&j, "noisy_band_lo")? as i32,
+            prompt_len: get_usize(&j, "prompt_len")?,
+            batch_buckets: j
+                .get("batch_buckets")
+                .as_arr()
+                .ok_or_else(|| anyhow!("manifest: batch_buckets"))?
+                .iter()
+                .filter_map(|x| x.as_usize())
+                .collect(),
+            windows: j
+                .get("windows")
+                .as_arr()
+                .ok_or_else(|| anyhow!("manifest: windows"))?
+                .iter()
+                .filter_map(|x| x.as_usize())
+                .collect(),
+            target: get_str(&j, "target")?,
+            drafters,
+            models,
+            artifacts,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown model {name:?}"))
+    }
+
+    pub fn artifact(&self, key: &ArtifactKey) -> Result<&ArtifactEntry> {
+        self.artifacts
+            .get(key)
+            .ok_or_else(|| anyhow!("no artifact lowered for {key:?}"))
+    }
+
+    /// Smallest lowered batch bucket that fits `n` live requests.
+    pub fn bucket_for(&self, n: usize) -> Result<usize> {
+        self.batch_buckets
+            .iter()
+            .copied()
+            .filter(|&b| b >= n)
+            .min()
+            .ok_or_else(|| anyhow!("batch {n} exceeds largest lowered bucket"))
+    }
+
+    /// Largest lowered draft window <= `w` (planner may ask for any w).
+    pub fn window_for(&self, w: usize) -> Result<usize> {
+        self.windows
+            .iter()
+            .copied()
+            .filter(|&x| x <= w.max(1))
+            .max()
+            .ok_or_else(|| anyhow!("no lowered window <= {w}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Integration tests against real artifacts live in rust/tests/;
+    // here we test pure logic on a synthetic manifest value.
+
+    #[test]
+    fn fn_kind_parse() {
+        assert_eq!(FnKind::parse("prefill").unwrap(), FnKind::Prefill);
+        assert_eq!(FnKind::parse("step").unwrap(), FnKind::Step);
+        assert!(FnKind::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn cache_dims() {
+        let m = ModelInfo {
+            name: "m".into(),
+            vocab: 256,
+            d_model: 128,
+            n_layers: 4,
+            n_heads: 4,
+            d_head: 32,
+            d_ff: 256,
+            max_seq: 256,
+            weights_file: PathBuf::new(),
+            weight_names: vec![],
+        };
+        assert_eq!(m.cache_dims(8), [4, 8, 256, 4, 32]);
+        assert_eq!(m.cache_elems(8), 4 * 8 * 256 * 4 * 32);
+    }
+}

@@ -1,0 +1,12 @@
+//! Runtime layer: PJRT client wrapper, artifact/manifest registry, and the
+//! host-side KV-cache pool. Loads `artifacts/*.hlo.txt` produced by
+//! `python/compile/aot.py` and executes them on the request path — python
+//! never runs at serving time.
+
+pub mod client;
+pub mod kv;
+pub mod manifest;
+
+pub use client::{Runtime, StepOut};
+pub use kv::{KvCache, KvRow};
+pub use manifest::{ArtifactKey, FnKind, Manifest, ModelInfo};

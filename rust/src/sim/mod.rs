@@ -1,0 +1,15 @@
+//! Cluster-scale discrete-event simulator.
+//!
+//! Regenerates the paper's evaluation (Figures 2, 5, 6b, 7, 10, 12–16) at
+//! 256–512-GPU scale, driven by the same affine cost model and the same
+//! planner / reconfiguration / FoN code as the real engine. See
+//! DESIGN.md §2 for the substitution argument and §5 for the
+//! experiment-to-bench mapping.
+
+pub mod rollout;
+pub mod scale;
+pub mod traces;
+
+pub use rollout::{simulate_step, Policy, Segment, StepResult};
+pub use scale::scaled;
+pub use traces::{gen_step_requests, ReqClass, SimRequest, TraceConfig};

@@ -1,0 +1,676 @@
+//! Cluster rollout simulator: replays one training step under a policy.
+//!
+//! Workers advance round-by-round on a shared event clock (binary heap of
+//! worker-ready times). Round latency comes from the affine cost model
+//! (§4.1) and per-request token gains from the acceptance process — the
+//! same `planner::tgs` math the real planner uses, but *sampled* rather
+//! than in expectation.
+//!
+//! Fastest-of-N across workers is modelled as adopt-and-race: a freed
+//! worker adopts a straggler with the next-best ladder method (after a
+//! KV-scale delay); the replica with the higher realised rate finishes
+//! first, which — because generation is lossless and identical across
+//! replicas — is equivalent to migrating the request to the faster
+//! replica. See DESIGN.md §2 for why this preserves the paper's behaviour.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::coordinator::fon::{assign, FreeWorker, Straggler};
+use crate::coordinator::reconfig::{reconfigure_batch, Mode};
+use crate::ladder::Ladder;
+use crate::planner::costmodel::CostModel;
+use crate::planner::plan::{search, PlanInput};
+use crate::sim::traces::{SimRequest, TraceConfig};
+use crate::util::Rng;
+
+/// Simulated rollout policy.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Policy {
+    /// veRL: plain auto-regressive rollout.
+    Verl,
+    /// veRL with doubled GPUs (RLBoost-style upper bound).
+    Verl2x,
+    /// RLHFuse: same rollout; prepare/learn overlapped into the tail.
+    Rlhfuse,
+    /// veRL + vanilla coupled speculation with one model drafter.
+    ModelSpec,
+    /// veRL + vanilla coupled speculation with the n-gram drafter.
+    NgramSpec,
+    /// SpecActor with feature flags (for the Fig 15 ablation).
+    SpecActor { decoupled: bool, reconfig: bool, fon: bool },
+}
+
+impl Policy {
+    pub fn specactor() -> Policy {
+        Policy::SpecActor { decoupled: true, reconfig: true, fon: true }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Policy::Verl => "veRL".into(),
+            Policy::Verl2x => "veRL(2x)".into(),
+            Policy::Rlhfuse => "RLHFuse".into(),
+            Policy::ModelSpec => "veRL+model-spec".into(),
+            Policy::NgramSpec => "veRL+n-gram".into(),
+            Policy::SpecActor { decoupled, reconfig, fon } => match (decoupled, reconfig, fon) {
+                (true, true, true) => "SpecActor".into(),
+                (true, true, false) => "SpecActor(-FoN)".into(),
+                (true, false, false) => "SpecActor(decoupled-only)".into(),
+                (false, false, false) => "SpecActor(vanilla-spec)".into(),
+                _ => format!("SpecActor(d={decoupled},r={reconfig},f={fon})"),
+            },
+        }
+    }
+}
+
+/// Timeline segment for Fig 16.
+#[derive(Clone, Debug)]
+pub struct Segment {
+    pub worker: usize,
+    pub start: f64,
+    pub end: f64,
+    /// Draft method active during the segment ("-" for vanilla, method
+    /// label otherwise; "fon:<method>" for adopted straggler service).
+    pub method: String,
+    pub batch: usize,
+}
+
+/// Result of simulating one training step.
+#[derive(Clone, Debug, Default)]
+pub struct StepResult {
+    pub rollout_s: f64,
+    /// End-to-end step time (rollout + prepare + learn, after overlap).
+    pub step_s: f64,
+    pub total_tokens: u64,
+    pub drafted_tokens: u64,
+    pub accepted_tokens: u64,
+    pub wasted_tokens: u64,
+    /// Fraction of worker·time idle during rollout.
+    pub idle_frac: f64,
+    /// Mean TGS across the rollout (tokens per worker-second).
+    pub mean_tgs: f64,
+    /// Per-worker finish times.
+    pub finish_times: Vec<f64>,
+    /// Fraction of iterations of the LAST-finishing request that advanced
+    /// more than one token (§5.2's "skipped iteration" metric).
+    pub tail_skipped_iter_frac: f64,
+    pub timeline: Vec<Segment>,
+    /// GPUs this policy actually used (veRL 2x uses double).
+    pub gpus_used: usize,
+}
+
+impl StepResult {
+    pub fn tokens_per_gpu_second(&self) -> f64 {
+        self.total_tokens as f64 / (self.rollout_s * self.gpus_used as f64)
+    }
+}
+
+/// Per-request speculation state inside a worker.
+struct SpecState {
+    method_idx: usize,
+    w: usize,
+    coupled: bool,
+    /// Decoupled pipeline staleness: after a partial accept the next
+    /// in-flight chunk was drafted from a wrong prefix and verifies to
+    /// nothing — the mechanism behind the paper's (a+1)/2 discount in τ_w.
+    stale: bool,
+    /// iterations / multi-token iterations (skipped-iteration metric)
+    iters: u64,
+    multi_iters: u64,
+}
+
+struct SimWorker {
+    id: usize,
+    /// (request index into the step's request vec, spec state)
+    slots: Vec<(usize, SpecState)>,
+    t: f64,
+    busy: f64,
+    rounds: u64,
+    /// When this worker becomes a FoN host: which method it serves.
+    fon_method: Option<String>,
+    done: bool,
+}
+
+/// Shared per-step simulation context.
+pub struct StepSim<'a> {
+    pub cfg: &'a TraceConfig,
+    pub m: CostModel,
+    pub reqs: Vec<SimRequest>,
+    pub rng: Rng,
+}
+
+const RECONFIG_PERIOD: f64 = 1000.0; // decoding iterations (paper §4.1)
+const KV_SCALE_DELAY: f64 = 0.25; // seconds: KV transfer + verifier wakeup
+const FON_BMAX: usize = 8;
+
+/// Sample how many of `w` drafted tokens are accepted at rate `p`.
+fn sample_accept(rng: &mut Rng, w: usize, p: f64) -> usize {
+    let mut a = 0;
+    while a < w && rng.bernoulli(p) {
+        a += 1;
+    }
+    a
+}
+
+pub fn simulate_step(cfg: &TraceConfig, policy: &Policy, step: usize, seed: u64) -> StepResult {
+    let mut rng = Rng::new(seed ^ (step as u64).wrapping_mul(0x9E3779B97F4A7C15));
+    let m = cfg.cost_model();
+    let mut reqs = crate::sim::traces::gen_step_requests(cfg, step, &mut rng);
+
+    let (base_workers, gpus_used) = match policy {
+        Policy::Verl2x => (cfg.workers() * 2, cfg.gpus * 2),
+        _ => (cfg.workers(), cfg.gpus),
+    };
+    let plan_gv = cfg.tp;
+
+    // ladder + initial method/plan for speculative policies: SpecActor
+    // selects under decoupled-mode speedups (the mode it will run)
+    let ladder = match policy {
+        Policy::SpecActor { decoupled: true, .. } => {
+            Ladder::build_decoupled(&m, cfg.per_worker_batch(), 4, &cfg.profiled_acceptance())
+        }
+        _ => Ladder::build(&m, cfg.per_worker_batch(), 4, &cfg.profiled_acceptance()),
+    };
+    let methods = m.methods();
+    let pick_method = |name: &str| methods.iter().position(|x| x == name).unwrap_or(0);
+
+    #[allow(unused_assignments)]
+    let (init_method, init_w, decoupled, reconfig, fon) = match policy {
+        Policy::Verl | Policy::Verl2x | Policy::Rlhfuse => (None, 0, false, false, false),
+        Policy::ModelSpec => {
+            // sweet-spot model drafter (paper: 0.5B for 32B)
+            let name = if cfg.moe { "draft_4b" } else { "draft_small" };
+            (Some(pick_method(name)), 4, false, false, false)
+        }
+        Policy::NgramSpec => (Some(pick_method("ngram")), 4, false, false, false),
+        Policy::SpecActor { decoupled, reconfig, fon } => {
+            let sel = ladder.select_initial().method.clone();
+            let plan = search(
+                &m,
+                &PlanInput {
+                    global_batch: cfg.global_batch,
+                    gpus: cfg.gpus,
+                    verifier_configs: vec![cfg.tp, cfg.tp * 2],
+                    accept_p: cfg
+                        .profiled_acceptance()
+                        .iter()
+                        .find(|(n, _)| *n == sel)
+                        .map(|(_, p)| *p)
+                        .unwrap_or(0.7),
+                    method: sel.clone(),
+                    max_window: 8,
+                    fixed_batch: Some(cfg.per_worker_batch()),
+                },
+            );
+            let mut w = if *decoupled { plan.as_ref().map(|p| p.w).unwrap_or(4).clamp(1, 8) } else { 4 };
+            // The planner also compares against the best *coupled* plan
+            // (TGS_C, Algorithm 2's model): SpecActor never runs a mode its
+            // own model predicts slower — decoupling is an option, not a
+            // mandate (§4.1: switching modes only pauses aggressive
+            // drafting).
+            let mut run_decoupled = *decoupled;
+            if *decoupled {
+                let p_sel = cfg
+                    .profiled_acceptance()
+                    .iter()
+                    .find(|(n, _)| *n == sel)
+                    .map(|(_, p)| *p)
+                    .unwrap_or(0.7);
+                let b = cfg.per_worker_batch();
+                let (mut best_c, mut best_cw) = (f64::MIN, 4usize);
+                for cw in 1..=8 {
+                    let t = crate::planner::tgs::tgs_coupled(&m, &sel, cfg.tp, cw, b, p_sel);
+                    if t > best_c {
+                        best_c = t;
+                        best_cw = cw;
+                    }
+                }
+                let t_d = crate::planner::tgs::tgs_decoupled(&m, &sel, cfg.tp, w, b, p_sel);
+                // Require a clear modelled margin before decoupling: the
+                // expectation model evaluates at the batch-MEAN acceptance,
+                // while pipeline staleness hits below-mean requests
+                // superlinearly (Jensen gap observed in simulation).
+                if best_c * 1.15 > t_d {
+                    run_decoupled = false;
+                    w = best_cw;
+                }
+            }
+            if std::env::var("SPECACTOR_SIM_DEBUG").is_ok() {
+                eprintln!("[plan] method={sel} w={w} decoupled={run_decoupled} plan={plan:?}");
+            }
+            (Some(pick_method(&sel)), w, run_decoupled, *reconfig, *fon)
+        }
+    };
+
+    let workers = base_workers;
+
+    // distribute requests round-robin
+    let mut sim_workers: Vec<SimWorker> = (0..workers)
+        .map(|id| SimWorker {
+            id,
+            slots: Vec::new(),
+            t: 0.0,
+            busy: 0.0,
+            rounds: 0,
+            fon_method: None,
+            done: false,
+        })
+        .collect();
+    for (ri, _) in reqs.iter().enumerate() {
+        let wid = ri % workers;
+        sim_workers[wid].slots.push((
+            ri,
+            SpecState {
+                method_idx: init_method.unwrap_or(0),
+                w: init_w.max(1),
+                coupled: !decoupled,
+                stale: false,
+                iters: 0,
+                multi_iters: 0,
+            },
+        ));
+    }
+
+    // event loop
+    let mut heap: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::new();
+    let key = |t: f64, id: usize| Reverse(((t * 1e9) as u64, id));
+    for w in &sim_workers {
+        heap.push(key(0.0, w.id));
+    }
+    let mut timeline: Vec<Segment> = Vec::new();
+    // request idx -> adopting worker: requests migrated by FoN; their home
+    // workers drop them at their next round. HashMap: the O(n) scan here
+    // was the simulator's top hot spot (see EXPERIMENTS.md §Perf).
+    let mut migrations: std::collections::HashMap<usize, usize> =
+        std::collections::HashMap::new();
+    let mut total_tokens = 0u64;
+    let mut drafted = 0u64;
+    let mut accepted = 0u64;
+    let mut wasted = 0u64;
+    // requests adopted by FoN hosts: (request idx -> adopted method idx)
+    let spec = init_method.is_some();
+
+    while let Some(Reverse((tkey, wid))) = heap.pop() {
+        let now = tkey as f64 / 1e9;
+        // split borrow: take the worker out
+        let w = &mut sim_workers[wid];
+        if w.done {
+            continue;
+        }
+        w.slots
+            .retain(|(ri, _)| !reqs[*ri].done() && migrations.get(ri).map(|ww| *ww == wid).unwrap_or(true));
+        if w.slots.is_empty() {
+            w.done = true;
+            w.t = now;
+            // FoN: this worker is now free — adopt stragglers
+            if fon {
+                let mut free = vec![FreeWorker {
+                    id: wid,
+                    capacity: FON_BMAX,
+                    method: None,
+                    load: 0,
+                }];
+                // stragglers: active requests not already adopted by a
+                // FoN host (one racing replica per request keeps the
+                // migration model acyclic), worst acceptance first
+                let mut stragglers: Vec<Straggler> = reqs
+                    .iter()
+                    .enumerate()
+                    .filter(|(ri, r)| !r.done() && !migrations.contains_key(ri))
+                    .map(|(ri, r)| Straggler {
+                        request: ri as u64,
+                        accept_rate: r.accept_for(&methods[init_method.unwrap_or(0)]),
+                        methods: vec![methods[init_method.unwrap_or(0)].clone()],
+                    })
+                    .collect();
+                if !stragglers.is_empty() {
+                    let rank: Vec<String> =
+                        ladder.ranked().iter().map(|e| e.method.clone()).collect();
+                    let assignment = assign(&mut stragglers, &rank, &mut free, FON_BMAX);
+                    if !assignment.is_empty() {
+                        // reactivate this worker as a FoN host
+                        let method = free[0].method.clone().unwrap();
+                        let midx = pick_method(&method);
+                        w.done = false;
+                        w.fon_method = Some(method.clone());
+                        let migrated: Vec<usize> =
+                            assignment.keys().map(|(ri, _)| *ri as usize).collect();
+                        for &ri in &migrated {
+                            // fastest-of-N: the new (method, small-batch)
+                            // replica wins the race for a straggler, so the
+                            // request migrates ("removed from other
+                            // workers", §4.2) after the KV-scale delay.
+                            w.slots.push((
+                                ri,
+                                SpecState {
+                                    method_idx: midx,
+                                    // dedicated tail service: coupled mode
+                                    // (no pipeline staleness) with a full
+                                    // window — per Algorithm 2 at b = 1
+                                    w: 4,
+                                    coupled: true,
+                                    stale: false,
+                                    iters: 0,
+                                    multi_iters: 0,
+                                },
+                            ));
+                        }
+                        for &ri in &migrated {
+                            migrations.insert(ri, wid);
+                        }
+                        w.t = now + KV_SCALE_DELAY;
+                        heap.push(key(w.t, wid));
+                        timeline.push(Segment {
+                            worker: wid,
+                            start: now,
+                            end: now + KV_SCALE_DELAY,
+                            method: "scale".into(),
+                            batch: w.slots.len(),
+                        });
+                        continue;
+                    }
+                }
+            }
+            continue;
+        }
+
+        let b = w.slots.len();
+        // round latency + per-request advancement
+        let (dt, method_label) = if !spec {
+            // vanilla decode round
+            for (ri, st) in w.slots.iter_mut() {
+                let r = &mut reqs[*ri];
+                r.progress += 1;
+                st.iters += 1;
+                total_tokens += 1;
+            }
+            (m.decode(b), "-".to_string())
+        } else {
+            // speculative round: per-request window/method, batched.
+            // Mixed windows are fused (paper: one CUDA graph), so the
+            // verifier's token load scales with the *average* window.
+            let w_avg = w.slots.iter().map(|(_, st)| st.w).sum::<usize>() as f64
+                / w.slots.len() as f64;
+            let mut dt = 0.0f64;
+            for (ri, st) in w.slots.iter_mut() {
+                let r = &mut reqs[*ri];
+                let method = &methods[st.method_idx];
+                let p = r.accept_for(method);
+                let gain = if st.stale {
+                    // decoupled pipeline flush: the in-flight chunk was
+                    // drafted past a rejection — it verifies to nothing
+                    st.stale = false;
+                    drafted += st.w as u64;
+                    wasted += st.w as u64;
+                    0
+                } else {
+                    let a = sample_accept(&mut rng, st.w, p);
+                    let full = a == st.w;
+                    drafted += st.w as u64;
+                    accepted += a as u64;
+                    wasted += (st.w - a) as u64;
+                    if st.coupled {
+                        a + 1 // correction or bonus token
+                    } else if full {
+                        a
+                    } else {
+                        st.stale = true; // next chunk is garbage
+                        a + 1
+                    }
+                };
+                let gain = gain.min(r.remaining());
+                r.progress += gain;
+                total_tokens += gain as u64;
+                st.iters += 1;
+                if gain > 1 {
+                    st.multi_iters += 1;
+                }
+            }
+            // round time: decoupled slots overlap drafting with the
+            // verification pass; coupled slots serialize their drafting
+            // (paper fuses mixed windows into one CUDA graph — the cost is
+            // the verify pass plus the coupled subset's serial drafting)
+            let mdix = w.slots[0].1.method_idx;
+            let method = &methods[mdix];
+            let b_coupled = w.slots.iter().filter(|(_, st)| st.coupled).count();
+            let draft_overlap = w_avg * m.draft(method, b - b_coupled);
+            let verify_t = m.verify_f(plan_gv, w_avg, b);
+            let draft_serial = if b_coupled > 0 {
+                w_avg * m.draft(method, b_coupled)
+            } else {
+                0.0
+            };
+            dt += if b_coupled == b {
+                draft_serial + verify_t
+            } else {
+                draft_overlap.max(verify_t) + draft_serial
+            };
+            (dt, methods[mdix].clone())
+        };
+
+        let seg_method = match &w.fon_method {
+            Some(fm) => format!("fon:{fm}"),
+            None => method_label,
+        };
+        // merge contiguous same-method segments to keep Fig 16 data small
+        match timeline.last_mut() {
+            Some(s) if s.worker == wid && s.method == seg_method && (s.end - w.t).abs() < 1e-9 => {
+                s.end = w.t + dt;
+                s.batch = b;
+            }
+            _ => timeline.push(Segment {
+                worker: wid,
+                start: w.t,
+                end: w.t + dt,
+                method: seg_method,
+                batch: b,
+            }),
+        }
+        w.busy += dt;
+        w.t += dt;
+        w.rounds += 1;
+
+        // Algorithm 2: periodic per-request reconfiguration (the paper
+        // reconfigures every 1000 decoding iterations; spec rounds cover
+        // several iterations each)
+        if reconfig && w.rounds % (RECONFIG_PERIOD as u64 / 8).max(1) == 0 {
+            let b = w.slots.len();
+            let rates: Vec<f64> = w
+                .slots
+                .iter()
+                .map(|(ri, st)| reqs[*ri].accept_for(&methods[st.method_idx]))
+                .collect();
+            // Algorithm 2 models each request at b = 1 — it is a *tail*
+            // mechanism: while a request shares a sizeable batch, its
+            // round time is set by the batch, and shrinking its window
+            // only cuts its token gain. Apply the per-request plan once
+            // the worker's batch has drained to tail size.
+            if b <= 16 {
+                let plans =
+                    reconfigure_batch(&m, &methods[w.slots[0].1.method_idx], plan_gv, &rates, 8);
+                for (slot_i, plan) in plans {
+                    let st = &mut w.slots[slot_i].1;
+                    st.w = plan.w;
+                    st.coupled = plan.mode == Mode::Coupled;
+                }
+            }
+        }
+
+        heap.push(key(w.t, wid));
+    }
+
+    // collect results
+    let finish_times: Vec<f64> = sim_workers.iter().map(|w| w.t).collect();
+    let rollout_s = finish_times.iter().copied().fold(0.0, f64::max);
+    let busy_total: f64 = sim_workers.iter().map(|w| w.busy).sum();
+    let idle_frac = 1.0 - busy_total / (rollout_s * workers as f64);
+
+    // skipped-iteration fraction of the last finished requests
+    let tail_skipped = {
+        let mut worst: Vec<(f64, f64)> = sim_workers
+            .iter()
+            .flat_map(|w| w.slots.iter().map(move |(_, st)| {
+                let frac = if st.iters > 0 { st.multi_iters as f64 / st.iters as f64 } else { 0.0 };
+                (w.t, frac)
+            }))
+            .collect();
+        // slots were drained on completion; recompute from timeline tail if
+        // empty (vanilla: zero anyway)
+        if worst.is_empty() {
+            0.0
+        } else {
+            worst.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+            worst.truncate(8);
+            worst.iter().map(|(_, f)| *f).sum::<f64>() / worst.len() as f64
+        }
+    };
+
+    // other phases (prepare + learn): fraction of the VANILLA rollout time
+    // of this trace (so speculation does not shrink them), overlapped away
+    // partially by RLHFuse.
+    let vanilla_scale = estimate_vanilla_rollout(cfg, step, seed);
+    let other = cfg.other_phase_frac * vanilla_scale;
+    let step_s = match policy {
+        Policy::Rlhfuse => rollout_s + other * 0.80,
+        _ => rollout_s + other,
+    };
+
+    StepResult {
+        rollout_s,
+        step_s,
+        total_tokens,
+        drafted_tokens: drafted,
+        accepted_tokens: accepted,
+        wasted_tokens: wasted,
+        idle_frac,
+        mean_tgs: total_tokens as f64 / busy_total.max(1e-9),
+        finish_times,
+        tail_skipped_iter_frac: tail_skipped,
+        timeline,
+        gpus_used,
+    }
+}
+
+/// Closed-form estimate of the vanilla rollout time (longest worker):
+/// used to size the prepare/learn phases consistently across policies.
+pub fn estimate_vanilla_rollout(cfg: &TraceConfig, step: usize, seed: u64) -> f64 {
+    let mut rng = Rng::new(seed ^ (step as u64).wrapping_mul(0x9E3779B97F4A7C15));
+    let m = cfg.cost_model();
+    let reqs = crate::sim::traces::gen_step_requests(cfg, step, &mut rng);
+    let workers = cfg.workers();
+    let mut worst = 0.0f64;
+    for wid in 0..workers {
+        let mut lens: Vec<usize> =
+            reqs.iter().enumerate().filter(|(i, _)| i % workers == wid).map(|(_, r)| r.length).collect();
+        lens.sort_unstable();
+        // decode rounds: batch shrinks as requests finish
+        let mut t = 0.0;
+        let mut prev = 0usize;
+        let mut remaining = lens.len();
+        for &l in &lens {
+            t += (l - prev) as f64 * m.decode(remaining);
+            prev = l;
+            remaining -= 1;
+        }
+        worst = worst.max(t);
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_trace() -> TraceConfig {
+        // 1/8-scale PPO trace: preserves the per-worker batch and tail
+        // structure of the paper's configuration at test-friendly size
+        crate::sim::scale::scaled(&TraceConfig::ppo_32b_20k(), 8, 2000)
+    }
+
+    #[test]
+    fn all_policies_complete_all_requests() {
+        let cfg = small_trace();
+        for policy in [
+            Policy::Verl,
+            Policy::Verl2x,
+            Policy::Rlhfuse,
+            Policy::ModelSpec,
+            Policy::NgramSpec,
+            Policy::specactor(),
+        ] {
+            let r = simulate_step(&cfg, &policy, 100, 7);
+            assert!(r.rollout_s > 0.0, "{policy:?}");
+            assert!(r.total_tokens > 0, "{policy:?}");
+            assert!(r.step_s >= r.rollout_s);
+            assert!((0.0..=1.0).contains(&r.idle_frac), "{policy:?} idle {}", r.idle_frac);
+        }
+    }
+
+    #[test]
+    fn token_conservation() {
+        // every request's full length must be generated exactly once
+        let cfg = small_trace();
+        let r = simulate_step(&cfg, &Policy::specactor(), 100, 3);
+        let mut rng = Rng::new(3 ^ (100u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let reqs = crate::sim::traces::gen_step_requests(&cfg, 100, &mut rng);
+        let want: u64 = reqs.iter().map(|r| r.length as u64).sum();
+        assert_eq!(r.total_tokens, want, "token conservation violated");
+    }
+
+    #[test]
+    fn specactor_beats_verl() {
+        let cfg = small_trace();
+        let verl = simulate_step(&cfg, &Policy::Verl, 100, 7);
+        let sa = simulate_step(&cfg, &Policy::specactor(), 100, 7);
+        let speedup = verl.rollout_s / sa.rollout_s;
+        // Paper reports 2.0-2.4x; our acceptance mixture and conservative
+        // staleness model land lower (EXPERIMENTS.md §Deviations) — the
+        // invariant asserted here is a real, reproducible improvement.
+        assert!(speedup > 1.1, "SpecActor speedup only {speedup:.2}x");
+    }
+
+    #[test]
+    fn vanilla_spec_weak_at_large_batch() {
+        // Fig 5b / §5.5: coupled model-spec gains little at production
+        // batch sizes
+        let cfg = TraceConfig::dapo_32b_20k();
+        let mut c = cfg.clone();
+        c.global_batch = 2048;
+        c.gpus = 32; // per-worker batch 256
+        c.budget = 1500;
+        let verl = simulate_step(&c, &Policy::Verl, 50, 9);
+        let spec = simulate_step(&c, &Policy::ModelSpec, 50, 9);
+        let speedup = verl.rollout_s / spec.rollout_s;
+        assert!(speedup < 1.35, "vanilla spec at b=256 gained {speedup:.2}x, too much");
+        let sa = simulate_step(&c, &Policy::specactor(), 50, 9);
+        assert!(
+            verl.rollout_s / sa.rollout_s > speedup,
+            "SpecActor must beat vanilla spec"
+        );
+    }
+
+    #[test]
+    fn verl2x_limited_speedup() {
+        // Fig 2b: doubling GPUs buys only ~1.2-1.3x
+        let cfg = small_trace();
+        let verl = simulate_step(&cfg, &Policy::Verl, 100, 7);
+        let v2 = simulate_step(&cfg, &Policy::Verl2x, 100, 7);
+        let speedup = verl.rollout_s / v2.rollout_s;
+        assert!(
+            (1.0..=1.6).contains(&speedup),
+            "veRL(2x) speedup {speedup:.2} out of plausible band"
+        );
+    }
+
+    #[test]
+    fn timeline_segments_cover_rollout() {
+        let cfg = small_trace();
+        let r = simulate_step(&cfg, &Policy::specactor(), 100, 7);
+        assert!(!r.timeline.is_empty());
+        for s in &r.timeline {
+            assert!(s.end > s.start);
+            assert!(s.end <= r.rollout_s + 1e-6);
+        }
+    }
+}

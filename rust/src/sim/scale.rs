@@ -1,0 +1,36 @@
+//! Scaling helper for benches: the full paper traces (256 GPUs, 16K
+//! requests, 20K-token budgets) are expensive to simulate on one CPU core;
+//! benches default to a 1/4-scale configuration that preserves the
+//! per-worker batch size (the quantity the paper's effects depend on) and
+//! the length-distribution shape, and accept `--full` for full scale.
+
+use crate::sim::traces::TraceConfig;
+
+/// Scale a trace down by `f` in GPUs and global batch (per-worker batch
+/// and worker-level dynamics preserved), and cap the token budget.
+pub fn scaled(cfg: &TraceConfig, f: usize, budget_cap: usize) -> TraceConfig {
+    let mut c = cfg.clone();
+    c.gpus = (c.gpus / f).max(c.tp);
+    c.global_batch = (c.global_batch / f).max(c.workers());
+    c.budget = c.budget.min(budget_cap);
+    // keep the lognormal median in proportion to the cap so the tail
+    // structure (budget-capped stragglers) is preserved
+    if budget_cap < cfg.budget {
+        let shrink = (cfg.budget as f64 / budget_cap as f64).ln();
+        c.len_mu0 -= shrink;
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_per_worker_batch() {
+        let base = TraceConfig::dapo_32b_20k();
+        let s = scaled(&base, 4, 4000);
+        assert_eq!(s.per_worker_batch(), base.per_worker_batch());
+        assert!(s.budget <= 4000);
+    }
+}

@@ -1,0 +1,343 @@
+//! Production-trace models (§5.1): GRPO/DAPO/PPO-32B-20K and the
+//! Qwen3-235B MoE trace, with the paper's batch sizes, GPU counts, TP
+//! degrees and response budgets.
+//!
+//! The paper replays checkpoints against recorded prompt batches; we have
+//! neither, so each trace is a *generator*: per-request response lengths
+//! follow a long-tailed lognormal whose mean grows across training steps
+//! ("as the model becomes smarter it generates more tokens", §2.2), and
+//! per-(request, method) acceptance rates follow a request-class mixture
+//! that reproduces the Fig 7 heterogeneity and the Fig 10 stability.
+
+use crate::planner::costmodel::CostModel;
+use crate::util::Rng;
+
+/// Request classes driving acceptance heterogeneity (Fig 7): which draft
+/// method suits a request depends on its content class.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReqClass {
+    /// Plain reasoning: model drafters do well, n-gram poorly.
+    Smooth,
+    /// Hard/noisy: all drafters degrade, deeper drafter degrades least.
+    Hard,
+    /// Repetitive structure (tables, code): n-gram shines.
+    Repetitive,
+}
+
+#[derive(Clone, Debug)]
+pub struct TraceConfig {
+    pub name: &'static str,
+    pub algo: &'static str,
+    /// Per-step sampled prompts (incl. group sampling factor).
+    pub global_batch: usize,
+    /// Response budget in tokens.
+    pub budget: usize,
+    pub gpus: usize,
+    /// GPUs per rollout worker (TP/EP degree).
+    pub tp: usize,
+    pub steps: usize,
+    /// Lognormal response-length parameters at step 0 (of the underlying
+    /// normal), truncated at `budget`.
+    pub len_mu0: f64,
+    pub len_sigma: f64,
+    /// Mean-length growth factor over the full run (smarter model → longer).
+    pub len_growth: f64,
+    /// Class mixture (Smooth, Hard, Repetitive).
+    pub class_probs: [f64; 3],
+    /// prepare+learn time as a fraction of mean *vanilla* rollout time
+    /// (Fig 2a: rollout 70–80 % of a step).
+    pub other_phase_frac: f64,
+    /// Cost model for this trace's target model.
+    pub moe: bool,
+}
+
+impl TraceConfig {
+    pub fn grpo_32b_20k() -> Self {
+        TraceConfig {
+            name: "GRPO-32B-20K",
+            algo: "GRPO",
+            global_batch: 8192,
+            budget: 20_000,
+            gpus: 256,
+            tp: 4,
+            steps: 200,
+            len_mu0: 5.4, // median ~220 tokens; >10K stragglers hit ~1/3 of workers
+            len_sigma: 1.3,
+            len_growth: 1.8,
+            class_probs: [0.6, 0.25, 0.15],
+            other_phase_frac: 0.33,
+            moe: false,
+        }
+    }
+
+    pub fn dapo_32b_20k() -> Self {
+        TraceConfig {
+            name: "DAPO-32B-20K",
+            algo: "DAPO",
+            global_batch: 16_384,
+            budget: 20_000,
+            gpus: 256,
+            tp: 4,
+            steps: 200,
+            len_mu0: 5.2,
+            len_sigma: 1.35,
+            len_growth: 2.0,
+            class_probs: [0.55, 0.3, 0.15],
+            other_phase_frac: 0.30,
+            moe: false,
+        }
+    }
+
+    pub fn ppo_32b_20k() -> Self {
+        TraceConfig {
+            name: "PPO-32B-20K",
+            algo: "PPO",
+            global_batch: 4096,
+            budget: 20_000,
+            gpus: 256,
+            tp: 4,
+            steps: 200,
+            len_mu0: 5.6,
+            len_sigma: 1.25,
+            len_growth: 1.6,
+            class_probs: [0.65, 0.2, 0.15],
+            // PPO trains a critic too: larger non-rollout share
+            other_phase_frac: 0.45,
+            moe: false,
+        }
+    }
+
+    pub fn grpo_235b_moe() -> Self {
+        TraceConfig {
+            name: "GRPO-235B-MoE",
+            algo: "GRPO",
+            global_batch: 256,
+            budget: 20_000,
+            gpus: 256,
+            tp: 8, // EP8
+            steps: 12,
+            len_mu0: 5.8,
+            len_sigma: 1.3,
+            len_growth: 1.9,
+            class_probs: [0.6, 0.25, 0.15],
+            other_phase_frac: 0.3,
+            moe: true,
+        }
+    }
+
+    pub fn all_dense() -> Vec<TraceConfig> {
+        vec![Self::grpo_32b_20k(), Self::dapo_32b_20k(), Self::ppo_32b_20k()]
+    }
+
+    pub fn workers(&self) -> usize {
+        self.gpus / self.tp
+    }
+
+    pub fn per_worker_batch(&self) -> usize {
+        self.global_batch.div_ceil(self.workers())
+    }
+
+    pub fn cost_model(&self) -> CostModel {
+        if self.moe {
+            CostModel::paper_235b_moe()
+        } else {
+            CostModel::paper_32b()
+        }
+    }
+
+    /// Profiled average acceptance per method (ladder input; Fig 10's
+    /// stability claim makes this a constant across steps).
+    pub fn profiled_acceptance(&self) -> Vec<(String, f64)> {
+        if self.moe {
+            vec![
+                ("draft_4b".into(), 0.88),
+                ("draft_1.7b".into(), 0.72),
+                ("draft_0.6b".into(), 0.62),
+                ("ngram".into(), 0.38),
+            ]
+        } else {
+            vec![
+                ("draft_mid".into(), 0.82),
+                ("draft_small".into(), 0.74),
+                ("ngram".into(), 0.40),
+            ]
+        }
+    }
+}
+
+/// One simulated rollout request.
+#[derive(Clone, Debug)]
+pub struct SimRequest {
+    pub id: u64,
+    pub class: ReqClass,
+    /// Total tokens this request will generate (ground truth).
+    pub length: usize,
+    /// Per-method per-token acceptance probability.
+    pub accept: Vec<(String, f64)>,
+    /// Tokens generated so far.
+    pub progress: usize,
+}
+
+impl SimRequest {
+    pub fn accept_for(&self, method: &str) -> f64 {
+        self.accept
+            .iter()
+            .find(|(m, _)| m == method)
+            .map(|(_, p)| *p)
+            .unwrap_or(0.0)
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.length - self.progress
+    }
+
+    pub fn done(&self) -> bool {
+        self.progress >= self.length
+    }
+}
+
+/// Per-class mean acceptance for each method (dense traces).
+fn class_acceptance(class: ReqClass, method: &str, moe: bool) -> f64 {
+    // (mean values; per-request Beta jitter is applied around them)
+    let dense = |c: ReqClass, m: &str| -> f64 {
+        match (c, m) {
+            (ReqClass::Smooth, "draft_mid") => 0.88,
+            (ReqClass::Smooth, "draft_small") => 0.82,
+            (ReqClass::Smooth, "ngram") => 0.35,
+            (ReqClass::Hard, "draft_mid") => 0.72,
+            (ReqClass::Hard, "draft_small") => 0.62,
+            (ReqClass::Hard, "ngram") => 0.22,
+            (ReqClass::Repetitive, "draft_mid") => 0.80,
+            (ReqClass::Repetitive, "draft_small") => 0.75,
+            (ReqClass::Repetitive, "ngram") => 0.85,
+            _ => 0.5,
+        }
+    };
+    let moe_t = |c: ReqClass, m: &str| -> f64 {
+        match (c, m) {
+            // Qwen3-4B-2507 aligns closely with 235B (§5.3)
+            (ReqClass::Smooth, "draft_4b") => 0.92,
+            (ReqClass::Smooth, "draft_1.7b") => 0.76,
+            (ReqClass::Smooth, "draft_0.6b") => 0.66,
+            (ReqClass::Smooth, "ngram") => 0.33,
+            (ReqClass::Hard, "draft_4b") => 0.78,
+            (ReqClass::Hard, "draft_1.7b") => 0.55,
+            (ReqClass::Hard, "draft_0.6b") => 0.45,
+            (ReqClass::Hard, "ngram") => 0.2,
+            (ReqClass::Repetitive, "draft_4b") => 0.85,
+            (ReqClass::Repetitive, "draft_1.7b") => 0.72,
+            (ReqClass::Repetitive, "draft_0.6b") => 0.65,
+            (ReqClass::Repetitive, "ngram") => 0.86,
+            _ => 0.5,
+        }
+    };
+    if moe {
+        moe_t(class, method)
+    } else {
+        dense(class, method)
+    }
+}
+
+/// Generate the requests of one training step.
+pub fn gen_step_requests(cfg: &TraceConfig, step: usize, rng: &mut Rng) -> Vec<SimRequest> {
+    let m = cfg.cost_model();
+    let methods = m.methods();
+    // smarter model → longer responses: scale mu with training progress
+    let progress = step as f64 / cfg.steps.max(1) as f64;
+    let mu = cfg.len_mu0 + (cfg.len_growth * progress).ln_1p();
+    (0..cfg.global_batch as u64)
+        .map(|i| {
+            let class = match rng.categorical(&cfg.class_probs.to_vec()) {
+                0 => ReqClass::Smooth,
+                1 => ReqClass::Hard,
+                _ => ReqClass::Repetitive,
+            };
+            let raw = rng.lognormal(mu, cfg.len_sigma);
+            let length = (raw as usize).clamp(64, cfg.budget);
+            let accept = methods
+                .iter()
+                .map(|meth| {
+                    let mean = class_acceptance(class, meth, cfg.moe);
+                    // Beta jitter with concentration 30 around the mean
+                    let k = 30.0;
+                    let p = rng.beta(mean * k, (1.0 - mean) * k);
+                    (meth.clone(), p.clamp(0.02, 0.98))
+                })
+                .collect();
+            SimRequest { id: i, class, length, accept, progress: 0 }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_worker_batches() {
+        assert_eq!(TraceConfig::grpo_32b_20k().per_worker_batch(), 128);
+        assert_eq!(TraceConfig::dapo_32b_20k().per_worker_batch(), 256);
+        assert_eq!(TraceConfig::ppo_32b_20k().per_worker_batch(), 64);
+        assert_eq!(TraceConfig::grpo_235b_moe().workers(), 32);
+    }
+
+    #[test]
+    fn lengths_are_long_tailed() {
+        let cfg = TraceConfig::dapo_32b_20k();
+        let mut rng = Rng::new(1);
+        let reqs = gen_step_requests(&cfg, 100, &mut rng);
+        let lens: Vec<f64> = reqs.iter().map(|r| r.length as f64).collect();
+        let mean = crate::util::stats::mean(&lens);
+        let p99 = crate::util::stats::percentile(&lens, 99.0);
+        assert!(p99 > 3.0 * mean, "p99 {p99} vs mean {mean}: tail too light");
+        assert!(lens.iter().any(|&l| l >= cfg.budget as f64 * 0.99), "no budget-capped requests");
+    }
+
+    #[test]
+    fn lengths_grow_with_training() {
+        let cfg = TraceConfig::dapo_32b_20k();
+        let mean_at = |step: usize| {
+            let mut rng = Rng::new(9);
+            let reqs = gen_step_requests(&cfg, step, &mut rng);
+            reqs.iter().map(|r| r.length as f64).sum::<f64>() / reqs.len() as f64
+        };
+        assert!(mean_at(190) > mean_at(5) * 1.2, "no length growth across steps");
+    }
+
+    #[test]
+    fn acceptance_heterogeneity_matches_fig7() {
+        // every method must be the best one for SOME requests
+        let cfg = TraceConfig::dapo_32b_20k();
+        let mut rng = Rng::new(4);
+        let reqs = gen_step_requests(&cfg, 100, &mut rng);
+        let mut winners = std::collections::BTreeMap::new();
+        for r in &reqs {
+            let best = r
+                .accept
+                .iter()
+                .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap()
+                .0
+                .clone();
+            *winners.entry(best).or_insert(0usize) += 1;
+        }
+        assert!(winners.len() >= 3, "only {winners:?} ever win");
+        // and the majority still prefers a model drafter
+        let ngram_share = *winners.get("ngram").unwrap_or(&0) as f64 / reqs.len() as f64;
+        assert!(ngram_share > 0.02 && ngram_share < 0.5, "ngram share {ngram_share}");
+    }
+
+    #[test]
+    fn average_acceptance_stable_across_steps() {
+        // Fig 10: batch-average acceptance is statistically stable
+        let cfg = TraceConfig::grpo_32b_20k();
+        let avg_at = |step: usize, seed: u64| {
+            let mut rng = Rng::new(seed);
+            let reqs = gen_step_requests(&cfg, step, &mut rng);
+            reqs.iter().map(|r| r.accept_for("draft_small")).sum::<f64>() / reqs.len() as f64
+        };
+        let a = avg_at(0, 1);
+        let b = avg_at(150, 2);
+        assert!((a - b).abs() < 0.03, "acceptance drifted: {a} vs {b}");
+    }
+}

@@ -1,0 +1,257 @@
+//! Speculation core: exact-match verification, draft-window bookkeeping and
+//! waste accounting.
+//!
+//! This module is pure logic (no runtime dependency) so the same code is
+//! used by the real engine (`engine/`), the coordinator, and the cluster
+//! simulator (`sim/`) — and can be property-tested exhaustively.
+//!
+//! Losslessness: the target's token at sequence position `p` of request `r`
+//! is always sampled from the tape stream `position_rng(seed, r, p)`
+//! regardless of whether the engine is decoding vanilla, verifying coupled
+//! or verifying decoupled. Exact-match acceptance then guarantees the final
+//! sequence is identical to vanilla decoding token-for-token (tested in
+//! `tests` below and end-to-end in `rust/tests/losslessness.rs`).
+
+pub mod window;
+
+pub use window::DraftWindow;
+
+use crate::util::rng::{position_rng, sample_logits};
+
+/// Outcome of verifying one request's draft chunk.
+#[derive(Clone, Debug, PartialEq)]
+pub struct VerifyOutcome {
+    /// Number of draft tokens accepted (prefix of the chunk).
+    pub accepted: usize,
+    /// Tokens to append to the sequence: accepted drafts plus either the
+    /// correction (on mismatch) or the bonus token (on full accept).
+    pub append: Vec<i32>,
+    /// Draft tokens wasted by this verification (rejected suffix).
+    pub wasted: usize,
+    /// True if every draft token was accepted.
+    pub full_accept: bool,
+}
+
+/// Exact-match verification of `drafts` for request `req`.
+///
+/// `logits(j)` must return the target-model logits after consuming input
+/// position `j` of the verify window, where the window inputs are
+/// `[last_accepted, drafts[0], ..., drafts[w-2]]` — i.e. `logits(j)` is the
+/// distribution for sequence position `seq_len + j`.
+///
+/// `seq_len` is the request's current sequence length (prompt + accepted),
+/// so the token being sampled at window offset `j` has tape position
+/// `seq_len + j`.
+pub fn verify_exact<F>(
+    req: u64,
+    seed: u64,
+    temp: f32,
+    seq_len: usize,
+    drafts: &[i32],
+    mut logits: F,
+) -> VerifyOutcome
+where
+    F: FnMut(usize) -> Vec<f32>,
+{
+    let w = drafts.len();
+    let mut append = Vec::with_capacity(w + 1);
+    for (j, &d) in drafts.iter().enumerate() {
+        let lg = logits(j);
+        let mut rng = position_rng(seed, req, (seq_len + j) as u64);
+        let t = sample_logits(&lg, temp, &mut rng) as i32;
+        if t == d {
+            append.push(d);
+        } else {
+            // Mismatch: the target's own sample is the correct token.
+            append.push(t);
+            return VerifyOutcome {
+                accepted: j,
+                append,
+                wasted: w - j,
+                full_accept: false,
+            };
+        }
+    }
+    // Full accept: bonus token from the last position's logits.
+    let lg = logits(w);
+    let mut rng = position_rng(seed, req, (seq_len + w) as u64);
+    let bonus = sample_logits(&lg, temp, &mut rng) as i32;
+    append.push(bonus);
+    VerifyOutcome { accepted: w, append, wasted: 0, full_accept: true }
+}
+
+/// Vanilla decode of one token (the `w = 0` case) — sample sequence
+/// position `seq_len` from the tape.
+pub fn decode_one(req: u64, seed: u64, temp: f32, seq_len: usize, logits: &[f32]) -> i32 {
+    let mut rng = position_rng(seed, req, seq_len as u64);
+    sample_logits(logits, temp, &mut rng) as i32
+}
+
+/// Running acceptance-rate estimate for a request (used by Algorithm 2's
+/// reconfiguration and by the FoN assignment ordering).
+#[derive(Clone, Debug)]
+pub struct AcceptanceStats {
+    pub proposed: u64,
+    pub accepted: u64,
+    /// Exponentially-weighted recent acceptance rate.
+    pub ewma: f64,
+    alpha: f64,
+}
+
+impl Default for AcceptanceStats {
+    fn default() -> Self {
+        AcceptanceStats { proposed: 0, accepted: 0, ewma: 0.8, alpha: 0.2 }
+    }
+}
+
+impl AcceptanceStats {
+    pub fn observe(&mut self, proposed: usize, accepted: usize) {
+        self.proposed += proposed as u64;
+        self.accepted += accepted as u64;
+        if proposed > 0 {
+            let r = accepted as f64 / proposed as f64;
+            self.ewma = (1.0 - self.alpha) * self.ewma + self.alpha * r;
+        }
+    }
+
+    /// Lifetime acceptance rate.
+    pub fn rate(&self) -> f64 {
+        if self.proposed == 0 {
+            1.0
+        } else {
+            self.accepted as f64 / self.proposed as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest_lite::check;
+
+    /// Synthetic target: position p of request r deterministically prefers
+    /// token `(p * 7 + r) % V` with huge margin.
+    fn synth_logits(req: u64, pos: usize, vocab: usize) -> Vec<f32> {
+        let mut lg = vec![0.0f32; vocab];
+        lg[(pos * 7 + req as usize) % vocab] = 50.0;
+        lg
+    }
+
+    #[test]
+    fn all_accept_with_perfect_drafts() {
+        let vocab = 64;
+        let seq_len = 10;
+        let drafts: Vec<i32> = (0..4).map(|j| ((seq_len + j) * 7) as i32 % vocab as i32).collect();
+        let out = verify_exact(0, 1, 1.0, seq_len, &drafts, |j| synth_logits(0, seq_len + j, vocab));
+        assert!(out.full_accept);
+        assert_eq!(out.accepted, 4);
+        assert_eq!(out.append.len(), 5); // 4 drafts + bonus
+        assert_eq!(out.wasted, 0);
+        // bonus is the target's own choice for the next position
+        assert_eq!(out.append[4], ((seq_len + 4) * 7) as i32 % vocab as i32);
+    }
+
+    #[test]
+    fn rejects_at_first_mismatch() {
+        let vocab = 64;
+        let seq_len = 3;
+        let req = 5u64;
+        let mut drafts: Vec<i32> = (0..4)
+            .map(|j| ((seq_len + j) * 7 + req as usize) as i32 % vocab as i32)
+            .collect();
+        drafts[2] = (drafts[2] + 1) % vocab as i32; // corrupt 3rd draft
+        let out = verify_exact(req, 1, 1.0, seq_len, &drafts, |j| synth_logits(req, seq_len + j, vocab));
+        assert!(!out.full_accept);
+        assert_eq!(out.accepted, 2);
+        assert_eq!(out.wasted, 2);
+        assert_eq!(out.append.len(), 3); // 2 accepted + correction
+        // correction equals the target's sample at that position — which is
+        // the uncorrupted draft value
+        assert_eq!(out.append[2], ((seq_len + 2) * 7 + 5) as i32 % vocab as i32);
+        assert_ne!(out.append[2], drafts[2]);
+    }
+
+    #[test]
+    fn losslessness_spec_equals_vanilla() {
+        // Roll a full synthetic generation twice: once token-by-token,
+        // once with (sometimes wrong) speculative chunks. The final
+        // sequences must be identical.
+        let vocab = 32;
+        let seed = 9;
+        let req = 3;
+        let horizon = 40;
+
+        // vanilla
+        let mut vanilla = vec![4i32];
+        while vanilla.len() < horizon {
+            let lg = synth_logits(req, vanilla.len(), vocab);
+            let t = decode_one(req, seed, 1.0, vanilla.len(), &lg);
+            vanilla.push(t);
+        }
+
+        // speculative with a drafter that is right 70% of the time
+        let mut spec = vec![4i32];
+        let mut flip = crate::util::Rng::new(123);
+        while spec.len() < horizon {
+            let w = 4.min(horizon - spec.len());
+            let drafts: Vec<i32> = (0..w)
+                .map(|j| {
+                    let correct = ((spec.len() + j) * 7 + req as usize) as i32 % vocab as i32;
+                    if flip.bernoulli(0.7) {
+                        correct
+                    } else {
+                        (correct + 1) % vocab as i32
+                    }
+                })
+                .collect();
+            let base = spec.len();
+            let out = verify_exact(req, seed, 1.0, base, &drafts, |j| {
+                synth_logits(req, base + j, vocab)
+            });
+            spec.extend_from_slice(&out.append);
+        }
+        spec.truncate(horizon);
+        assert_eq!(spec, vanilla, "speculative output diverged from vanilla");
+    }
+
+    #[test]
+    fn prop_accepted_prefix_matches_drafts() {
+        check("verify-prefix", 200, |g| {
+            let vocab = 16 + g.usize_in(0, 48);
+            let w = 1 + g.usize_in(0, 8);
+            let seq_len = g.usize_in(0, 100);
+            let req = g.usize_in(0, 10) as u64;
+            let drafts: Vec<i32> =
+                (0..w).map(|_| g.usize_in(0, vocab) as i32).collect();
+            let out = verify_exact(req, 7, 1.0, seq_len, &drafts, |j| {
+                synth_logits(req, seq_len + j, vocab)
+            });
+            prop_assert!(out.accepted <= w, "accepted {} > w {}", out.accepted, w);
+            prop_assert!(
+                out.append.len() == out.accepted + 1,
+                "append {} != accepted+1 {}",
+                out.append.len(),
+                out.accepted + 1
+            );
+            prop_assert!(
+                out.wasted == w - out.accepted,
+                "waste accounting broken"
+            );
+            prop_assert!(
+                out.append[..out.accepted] == drafts[..out.accepted],
+                "accepted prefix differs from drafts"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn acceptance_stats_tracks() {
+        let mut s = AcceptanceStats::default();
+        s.observe(4, 4);
+        s.observe(4, 0);
+        assert!((s.rate() - 0.5).abs() < 1e-12);
+        assert!(s.ewma < 0.8);
+    }
+}

@@ -1,0 +1,202 @@
+//! Draft-window bookkeeping for decoupled speculation (§4.1).
+//!
+//! The drafter may run ahead of verification, bounded by the window `w`:
+//! once `w` tokens are in flight (sent for verification), it may draft at
+//! most another `w` before it must stall for feedback. Under a speculation
+//! failure at the first in-flight position, everything drafted after it is
+//! discarded — at most `2w − 1` tokens (Figure 9), an invariant the tests
+//! check by construction.
+
+/// State machine tracking one request's in-flight draft tokens.
+#[derive(Clone, Debug)]
+pub struct DraftWindow {
+    /// Window size `w` (reconfigured online by Algorithm 2).
+    pub w: usize,
+    /// Coupled mode: the drafter stalls until each verification returns.
+    pub coupled: bool,
+    /// Tokens drafted and sent to the verifier, not yet resolved.
+    in_flight: usize,
+    /// Tokens drafted beyond the in-flight chunk (aggressive drafting).
+    ahead: usize,
+    /// Cumulative waste (rejected drafted tokens).
+    pub wasted_tokens: u64,
+    /// Cumulative drafted tokens.
+    pub drafted_tokens: u64,
+}
+
+impl DraftWindow {
+    pub fn new(w: usize, coupled: bool) -> Self {
+        assert!(w >= 1);
+        DraftWindow { w, coupled, in_flight: 0, ahead: 0, wasted_tokens: 0, drafted_tokens: 0 }
+    }
+
+    /// How many tokens the drafter may draft right now.
+    pub fn draft_budget(&self) -> usize {
+        if self.coupled {
+            // coupled: draft only when nothing is in flight
+            if self.in_flight == 0 {
+                self.w
+            } else {
+                0
+            }
+        } else {
+            // decoupled: one chunk in flight plus one chunk ahead
+            let cap = if self.in_flight == 0 { self.w } else { self.w.saturating_sub(self.ahead) };
+            cap
+        }
+    }
+
+    /// Record `n` tokens drafted (n <= draft_budget()).
+    pub fn on_drafted(&mut self, n: usize) {
+        assert!(n <= self.draft_budget(), "drafted {n} > budget {}", self.draft_budget());
+        self.drafted_tokens += n as u64;
+        if self.in_flight == 0 {
+            self.in_flight += n;
+        } else {
+            self.ahead += n;
+        }
+    }
+
+    /// The verifier picked up the in-flight chunk and returned a verdict:
+    /// `accepted` of the chunk's tokens were accepted (`full` = all).
+    /// The `ahead` tokens move in flight if the chunk fully accepted, else
+    /// they are waste.
+    pub fn on_verified(&mut self, accepted: usize, full: bool) {
+        debug_assert!(accepted <= self.in_flight);
+        if full || accepted == self.in_flight {
+            self.in_flight = self.ahead;
+            self.ahead = 0;
+        } else {
+            // Mis-speculation: the rejected slot itself becomes the
+            // verifier's correction (not waste, per Figure 9's accounting);
+            // everything after it — the rest of the chunk and all `ahead`
+            // tokens — is garbage. Worst case (rejection at slot 1 with a
+            // full chunk ahead): (w − 1) + w = 2w − 1.
+            self.wasted_tokens +=
+                (self.in_flight - accepted - 1) as u64 + self.ahead as u64;
+            self.in_flight = 0;
+            self.ahead = 0;
+        }
+    }
+
+    /// Upper bound on waste from a single failure: `2w − 1` (Figure 9).
+    pub fn max_failure_waste(&self) -> usize {
+        2 * self.w - 1
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.in_flight
+    }
+
+    pub fn ahead(&self) -> usize {
+        self.ahead
+    }
+
+    /// Switch mode / resize (Algorithm 2 reconfiguration).
+    pub fn reconfigure(&mut self, w: usize, coupled: bool) {
+        assert!(w >= 1);
+        self.w = w;
+        self.coupled = coupled;
+        // In-flight tokens stay; ahead tokens beyond the new window are
+        // clipped by future draft_budget() calls, not discarded here.
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest_lite::check;
+
+    #[test]
+    fn coupled_blocks_until_verified() {
+        let mut dw = DraftWindow::new(4, true);
+        assert_eq!(dw.draft_budget(), 4);
+        dw.on_drafted(4);
+        assert_eq!(dw.draft_budget(), 0);
+        dw.on_verified(4, true);
+        // full accept moved ahead (0) into flight; nothing in flight now
+        assert_eq!(dw.draft_budget(), 4);
+    }
+
+    #[test]
+    fn decoupled_allows_one_chunk_ahead() {
+        let mut dw = DraftWindow::new(3, false);
+        dw.on_drafted(3); // in flight
+        assert_eq!(dw.draft_budget(), 3); // can go ahead
+        dw.on_drafted(3);
+        assert_eq!(dw.draft_budget(), 0); // 2w in the pipe → stall
+    }
+
+    #[test]
+    fn failure_wastes_at_most_2w_minus_1() {
+        let mut dw = DraftWindow::new(4, false);
+        dw.on_drafted(4);
+        dw.on_drafted(4); // maximally ahead
+        // worst case: first in-flight token rejected (slot 1 becomes the
+        // correction; 3 in-flight + 4 ahead wasted = 2w - 1)
+        dw.on_verified(0, false);
+        assert_eq!(dw.wasted_tokens as usize, (4 - 1) + 4);
+        assert!(dw.wasted_tokens as usize <= dw.max_failure_waste());
+    }
+
+    #[test]
+    fn full_accept_promotes_ahead_chunk() {
+        let mut dw = DraftWindow::new(2, false);
+        dw.on_drafted(2);
+        dw.on_drafted(2);
+        dw.on_verified(2, true);
+        assert_eq!(dw.in_flight(), 2);
+        assert_eq!(dw.ahead(), 0);
+        assert_eq!(dw.wasted_tokens, 0);
+    }
+
+    #[test]
+    fn prop_waste_bounded_per_failure() {
+        check("window-waste-bound", 300, |g| {
+            let w = 1 + g.usize_in(0, 8);
+            let coupled = g.bool();
+            let mut dw = DraftWindow::new(w, coupled);
+            let mut waste_before = 0u64;
+            for _ in 0..30 {
+                let budget = dw.draft_budget();
+                if budget > 0 && g.bool() {
+                    let n = 1 + g.usize_in(0, budget);
+                    dw.on_drafted(n);
+                }
+                if dw.in_flight() > 0 && g.bool() {
+                    let fl = dw.in_flight();
+                    let acc = g.usize_in(0, fl + 1);
+                    let full = acc == fl;
+                    dw.on_verified(acc, full);
+                    let delta = dw.wasted_tokens - waste_before;
+                    prop_assert!(
+                        delta as usize <= dw.max_failure_waste(),
+                        "single verification wasted {delta} > 2w-1 = {}",
+                        dw.max_failure_waste()
+                    );
+                    waste_before = dw.wasted_tokens;
+                }
+            }
+            prop_assert!(
+                dw.wasted_tokens <= dw.drafted_tokens,
+                "wasted {} > drafted {}",
+                dw.wasted_tokens,
+                dw.drafted_tokens
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn reconfigure_changes_mode() {
+        let mut dw = DraftWindow::new(4, false);
+        dw.on_drafted(4);
+        dw.reconfigure(2, true);
+        assert!(dw.coupled);
+        assert_eq!(dw.w, 2);
+        assert_eq!(dw.draft_budget(), 0); // coupled with chunk in flight
+        dw.on_verified(4, true);
+        assert_eq!(dw.draft_budget(), 2);
+    }
+}

@@ -1,0 +1,143 @@
+//! Tiny benchmark harness (criterion is unavailable offline).
+//!
+//! Each `[[bench]]` target is a `harness = false` binary that uses
+//! [`Bench`] to time closures with warmup, then prints a fixed-width table
+//! plus an optional machine-readable JSON line per row. The figure benches
+//! (`rust/benches/fig*.rs`) use it to print the same rows/series the paper
+//! reports.
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+/// One measured series.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+}
+
+pub struct Bench {
+    pub warmup: usize,
+    pub iters: usize,
+    pub results: Vec<Measurement>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup: 2, iters: 10, results: Vec::new() }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        Bench { warmup, iters, results: Vec::new() }
+    }
+
+    /// Time `f` (which should perform one full unit of work per call).
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> Measurement {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let m = Measurement {
+            name: name.to_string(),
+            iters: self.iters,
+            mean_s: stats::mean(&samples),
+            median_s: stats::percentile_sorted(&samples, 50.0),
+            p95_s: stats::percentile_sorted(&samples, 95.0),
+            min_s: samples[0],
+        };
+        self.results.push(m.clone());
+        m
+    }
+
+    /// Record an externally-computed scalar (e.g. simulated seconds) so all
+    /// figure output flows through one table printer.
+    pub fn record(&mut self, name: &str, seconds: f64) -> Measurement {
+        let m = Measurement {
+            name: name.to_string(),
+            iters: 1,
+            mean_s: seconds,
+            median_s: seconds,
+            p95_s: seconds,
+            min_s: seconds,
+        };
+        self.results.push(m.clone());
+        m
+    }
+
+    pub fn print_table(&self, title: &str) {
+        println!("\n== {title} ==");
+        println!("{:<44} {:>12} {:>12} {:>12}", "series", "mean", "median", "p95");
+        for m in &self.results {
+            println!(
+                "{:<44} {:>12} {:>12} {:>12}",
+                m.name,
+                fmt_s(m.mean_s),
+                fmt_s(m.median_s),
+                fmt_s(m.p95_s)
+            );
+        }
+    }
+}
+
+/// Human duration formatting.
+pub fn fmt_s(s: f64) -> String {
+    if s >= 100.0 {
+        format!("{:.1}s", s)
+    } else if s >= 1.0 {
+        format!("{:.2}s", s)
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.2}us", s * 1e6)
+    } else {
+        format!("{:.0}ns", s * 1e9)
+    }
+}
+
+/// Print a ratio row ("A is X× faster than B").
+pub fn speedup_line(label: &str, base: f64, ours: f64) {
+    if ours > 0.0 {
+        println!("{label}: {:.2}x (base {} -> {})", base / ours, fmt_s(base), fmt_s(ours));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_and_orders() {
+        let mut b = Bench::new(0, 5);
+        let m = b.run("noop", || {});
+        assert!(m.min_s <= m.median_s && m.median_s <= m.p95_s);
+        assert_eq!(b.results.len(), 1);
+    }
+
+    #[test]
+    fn record_scalar() {
+        let mut b = Bench::default();
+        let m = b.record("sim", 1.5);
+        assert_eq!(m.mean_s, 1.5);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert_eq!(fmt_s(2.0), "2.00s");
+        assert_eq!(fmt_s(0.002), "2.00ms");
+        assert_eq!(fmt_s(2e-6), "2.00us");
+        assert_eq!(fmt_s(5e-9), "5ns");
+    }
+}

@@ -1,0 +1,154 @@
+//! Minimal CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+//! Each binary declares its options by querying the parsed bag; unknown
+//! options are an error so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    known: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args, String> {
+        let mut a = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if body.is_empty() {
+                    // "--": everything after is positional
+                    a.positional.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    a.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    a.opts.insert(body.to_string(), v);
+                } else {
+                    a.flags.push(body.to_string());
+                }
+            } else {
+                a.positional.push(tok);
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// String option with default.
+    pub fn opt(&mut self, key: &str, default: &str) -> String {
+        self.known.push(key.to_string());
+        self.opts.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Optional string option.
+    pub fn opt_maybe(&mut self, key: &str) -> Option<String> {
+        self.known.push(key.to_string());
+        self.opts.get(key).cloned()
+    }
+
+    /// Typed option with default; panics with a clear message on bad parse.
+    pub fn opt_parse<T: std::str::FromStr>(&mut self, key: &str, default: T) -> T {
+        self.known.push(key.to_string());
+        match self.opts.get(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{key}: cannot parse {v:?}")),
+        }
+    }
+
+    /// Boolean flag (present or not).
+    pub fn flag(&mut self, key: &str) -> bool {
+        self.known.push(key.to_string());
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Comma-separated list of T.
+    pub fn opt_list<T: std::str::FromStr>(&mut self, key: &str, default: &str) -> Vec<T> {
+        let raw = self.opt(key, default);
+        raw.split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.parse()
+                    .unwrap_or_else(|_| panic!("--{key}: cannot parse element {s:?}"))
+            })
+            .collect()
+    }
+
+    /// Call after all opt/flag queries: errors on unrecognised options.
+    /// `--bench` is always accepted (cargo bench passes it to
+    /// harness = false targets).
+    pub fn finish(&self) -> Result<(), String> {
+        for k in self.opts.keys() {
+            if !self.known.contains(k) && k != "bench" {
+                return Err(format!("unknown option --{k}"));
+            }
+        }
+        for f in &self.flags {
+            if !self.known.contains(f) && f != "bench" {
+                return Err(format!("unknown flag --{f}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_kinds() {
+        // note: a bare `--flag tok` would consume `tok` as its value, so
+        // flags go last (documented semantics).
+        let mut a = parse(&["run", "x", "--n", "5", "--mode=fast", "--verbose"]);
+        assert_eq!(a.positional, vec!["run", "x"]);
+        assert_eq!(a.opt_parse("n", 0usize), 5);
+        assert_eq!(a.opt("mode", "slow"), "fast");
+        assert!(a.flag("verbose"));
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let mut a = parse(&[]);
+        assert_eq!(a.opt_parse("n", 7u32), 7);
+        assert_eq!(a.opt("mode", "slow"), "slow");
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let mut a = parse(&["--bogus", "1"]);
+        let _ = a.opt("known", "");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn list_option() {
+        let mut a = parse(&["--sizes", "1,2,8"]);
+        let v: Vec<usize> = a.opt_list("sizes", "");
+        assert_eq!(v, vec![1, 2, 8]);
+    }
+
+    #[test]
+    fn double_dash_stops_parsing() {
+        let a = parse(&["--", "--not-a-flag"]);
+        assert_eq!(a.positional, vec!["--not-a-flag"]);
+    }
+}

@@ -1,0 +1,14 @@
+//! Small self-contained utilities. The offline crate set contains only the
+//! `xla` dependency closure, so JSON, CLI parsing, PRNG, stats, the bench
+//! harness and a mini property-testing framework are implemented in-repo
+//! (see DESIGN.md §2, infrastructure substitutions).
+
+pub mod benchkit;
+pub mod cli;
+pub mod json;
+pub mod proptest_lite;
+pub mod rng;
+pub mod stats;
+
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,130 @@
+//! Miniature property-testing framework (proptest is unavailable offline).
+//!
+//! A property is a closure over a [`Gen`] (seeded RNG wrapper with
+//! convenience generators). [`check`] runs it for N seeded cases; on
+//! failure it reports the failing seed so the case can be replayed
+//! deterministically with [`replay`]. Used for coordinator/planner/sim
+//! invariants (see `spec`, `planner`, `coordinator`, `sim` test modules).
+
+use crate::util::rng::Rng;
+
+/// Case-local generator handed to properties.
+pub struct Gen {
+    pub rng: Rng,
+    /// Case index (0..cases); properties can use it to scale sizes.
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo, hi)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    pub fn prob(&mut self) -> f64 {
+        self.rng.next_f64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bernoulli(0.5)
+    }
+
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.f64_in(lo, hi)).collect()
+    }
+
+    pub fn vec_usize(&mut self, len: usize, lo: usize, hi: usize) -> Vec<usize> {
+        (0..len).map(|_| self.usize_in(lo, hi)).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.range(0, xs.len())]
+    }
+}
+
+/// Run `prop` for `cases` seeded cases. Panics (with the failing seed) on
+/// the first property violation — the violation itself should panic or
+/// return Err.
+pub fn check<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let base_seed = 0x5eed_0000u64;
+    for case in 0..cases {
+        let seed = base_seed + case as u64;
+        let mut g = Gen { rng: Rng::new(seed), case };
+        if let Err(msg) = prop(&mut g) {
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Replay one failing case by seed (for debugging).
+pub fn replay<F>(seed: u64, mut prop: F) -> Result<(), String>
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let mut g = Gen { rng: Rng::new(seed), case: 0 };
+    prop(&mut g)
+}
+
+/// Assert helper that returns Err instead of panicking, so `check` can
+/// attach seed context.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_valid_property() {
+        check("sum-commutes", 50, |g| {
+            let a = g.f64_in(-10.0, 10.0);
+            let b = g.f64_in(-10.0, 10.0);
+            prop_assert!((a + b - (b + a)).abs() < 1e-12, "a={a} b={b}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn fails_with_seed_context() {
+        check("always-fails", 3, |_| Err("nope".to_string()));
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let mut seen = Vec::new();
+        let _ = replay(42, |g| {
+            seen.push(g.usize_in(0, 1000));
+            Ok(())
+        });
+        let mut seen2 = Vec::new();
+        let _ = replay(42, |g| {
+            seen2.push(g.usize_in(0, 1000));
+            Ok(())
+        });
+        assert_eq!(seen, seen2);
+    }
+
+    #[test]
+    fn generators_in_range() {
+        check("gen-ranges", 100, |g| {
+            let v = g.vec_usize(10, 5, 15);
+            prop_assert!(v.iter().all(|&x| (5..15).contains(&x)), "{v:?}");
+            let f = g.f64_in(1.0, 2.0);
+            prop_assert!((1.0..2.0).contains(&f), "{f}");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,320 @@
+//! Deterministic PRNG (splitmix64 + xoshiro256**) used everywhere randomness
+//! is needed: sampling, trace generation, the simulator, property tests.
+//!
+//! We hand-roll this because the offline crate set has no `rand`. Determinism
+//! is a feature, not a workaround: speculative-decoding losslessness is
+//! verified by comparing spec-decoded output token-for-token against vanilla
+//! decoding under the *same* per-(request, position) sampling streams.
+
+/// splitmix64 — used for seeding and cheap stateless hashing.
+#[inline]
+pub fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256** PRNG.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Seed the generator. Any seed (including 0) is valid.
+    pub fn new(seed: u64) -> Self {
+        // Expand the seed with splitmix64 per the xoshiro authors' advice.
+        let mut x = seed;
+        let mut s = [0u64; 4];
+        for v in s.iter_mut() {
+            x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+            *v = splitmix64(x);
+        }
+        Rng { s }
+    }
+
+    /// Derive an independent stream keyed by `key` (e.g. request id).
+    pub fn fork(&self, key: u64) -> Rng {
+        Rng::new(splitmix64(self.s[0] ^ splitmix64(key ^ 0xA076_1D64_78BD_642F)))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in [0, n). n must be > 0.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        // Lemire's multiply-shift rejection method.
+        debug_assert!(n > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform usize in [lo, hi).
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi > lo);
+        lo + self.below((hi - lo) as u64) as usize
+    }
+
+    /// Bernoulli draw with probability `p`.
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Standard normal via Box–Muller (uses two uniforms; no caching for
+    /// simplicity/determinism).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = (1.0 - self.next_f64()).max(f64::MIN_POSITIVE);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// Lognormal with the given parameters of the underlying normal.
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Exponential with rate `lambda`.
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        let u = (1.0 - self.next_f64()).max(f64::MIN_POSITIVE);
+        -u.ln() / lambda
+    }
+
+    /// Gamma(shape, scale) via Marsaglia–Tsang (shape >= 0 handled by
+    /// boosting for shape < 1).
+    pub fn gamma(&mut self, shape: f64, scale: f64) -> f64 {
+        assert!(shape > 0.0 && scale > 0.0);
+        if shape < 1.0 {
+            // boost: Gamma(a) = Gamma(a+1) * U^(1/a)
+            let u = self.next_f64().max(f64::MIN_POSITIVE);
+            return self.gamma(shape + 1.0, scale) * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v = v * v * v;
+            let u = self.next_f64();
+            if u < 1.0 - 0.0331 * x * x * x * x
+                || u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln())
+            {
+                return d * v * scale;
+            }
+        }
+    }
+
+    /// Beta(a, b) via two gammas.
+    pub fn beta(&mut self, a: f64, b: f64) -> f64 {
+        let x = self.gamma(a, 1.0);
+        let y = self.gamma(b, 1.0);
+        x / (x + y)
+    }
+
+    /// Sample an index from unnormalised non-negative weights.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "categorical: all-zero weights");
+        let mut r = self.next_f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            r -= w;
+            if r <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below((i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// Sample a token index from f32 logits at temperature `temp`, using the
+/// provided RNG. Implements the exact categorical draw that both the vanilla
+/// decode path and the verification path must share for lossless speculation.
+pub fn sample_logits(logits: &[f32], temp: f32, rng: &mut Rng) -> usize {
+    debug_assert!(!logits.is_empty());
+    if temp <= 0.0 {
+        // argmax (ties broken by lowest index, deterministically)
+        let mut best = 0usize;
+        let mut bv = f32::NEG_INFINITY;
+        for (i, &v) in logits.iter().enumerate() {
+            if v > bv {
+                bv = v;
+                best = i;
+            }
+        }
+        return best;
+    }
+    // Stable softmax sampling via the Gumbel-max trick: argmax(logit/T + g).
+    // Gumbel-max keeps the draw exactly categorical while avoiding an
+    // explicit normalisation pass, and it is branch-free per element.
+    let inv_t = 1.0 / temp as f64;
+    let mut best = 0usize;
+    let mut bv = f64::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        let u = (1.0 - rng.next_f64()).max(f64::MIN_POSITIVE);
+        let g = -(-u.ln()).ln();
+        let s = v as f64 * inv_t + g;
+        if s > bv {
+            bv = s;
+            best = i;
+        }
+    }
+    best
+}
+
+/// RNG stream for sampling position `pos` of request `req` — the shared
+/// "sampling tape" that makes speculative verification exactly equal to
+/// vanilla decoding (losslessness invariant, tested in `spec::tests`).
+pub fn position_rng(seed: u64, req: u64, pos: u64) -> Rng {
+    Rng::new(splitmix64(seed ^ splitmix64(req.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ pos)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn fork_streams_differ() {
+        let base = Rng::new(7);
+        let mut a = base.fork(1);
+        let mut b = base.fork(2);
+        let va: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_ne!(va, vb);
+    }
+
+    #[test]
+    fn uniform_mean_close_to_half() {
+        let mut r = Rng::new(3);
+        let n = 20_000;
+        let s: f64 = (0..n).map(|_| r.next_f64()).sum();
+        let mean = s / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut r = Rng::new(9);
+        for _ in 0..10_000 {
+            assert!(r.below(7) < 7);
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn beta_in_unit_interval() {
+        let mut r = Rng::new(13);
+        for _ in 0..1000 {
+            let x = r.beta(2.0, 5.0);
+            assert!((0.0..=1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut r = Rng::new(17);
+        let mut counts = [0usize; 3];
+        for _ in 0..30_000 {
+            counts[r.categorical(&[1.0, 2.0, 7.0])] += 1;
+        }
+        assert!(counts[2] > counts[1] && counts[1] > counts[0]);
+        let f2 = counts[2] as f64 / 30_000.0;
+        assert!((f2 - 0.7).abs() < 0.03, "f2={f2}");
+    }
+
+    #[test]
+    fn sample_logits_greedy_when_temp_zero() {
+        let mut r = Rng::new(1);
+        let logits = vec![0.1, 3.0, -1.0, 2.9];
+        assert_eq!(sample_logits(&logits, 0.0, &mut r), 1);
+    }
+
+    #[test]
+    fn sample_logits_categorical_frequency() {
+        // logits [0, ln 9] at T=1 → probabilities [0.1, 0.9].
+        let logits = vec![0.0f32, (9f32).ln()];
+        let mut hits = 0usize;
+        for i in 0..20_000u64 {
+            let mut r = position_rng(5, 1, i);
+            if sample_logits(&logits, 1.0, &mut r) == 1 {
+                hits += 1;
+            }
+        }
+        let f = hits as f64 / 20_000.0;
+        assert!((f - 0.9).abs() < 0.01, "f={f}");
+    }
+
+    #[test]
+    fn position_rng_reproducible() {
+        let mut a = position_rng(1, 2, 3);
+        let mut b = position_rng(1, 2, 3);
+        assert_eq!(a.next_u64(), b.next_u64());
+        let mut c = position_rng(1, 2, 4);
+        let _ = c; // different pos → different stream (spot check)
+    }
+}

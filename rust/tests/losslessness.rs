@@ -1,0 +1,147 @@
+//! End-to-end losslessness over the real AOT artifacts: vanilla, coupled
+//! and decoupled speculative rollout must produce IDENTICAL token
+//! sequences for the same sampling-tape seed — the paper's core claim
+//! ("preserves the exact rollout process").
+//!
+//! Requires `make artifacts`.
+
+use std::path::Path;
+
+use specactor::drafter::DraftMethod;
+use specactor::engine::{decoupled::rollout_decoupled, EngineConfig, Request, SpecMode, Worker};
+use specactor::runtime::Runtime;
+
+fn art() -> &'static Path {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").leak()
+}
+
+trait Leak {
+    fn leak(self) -> &'static Path;
+}
+
+impl Leak for std::path::PathBuf {
+    fn leak(self) -> &'static Path {
+        Box::leak(self.into_boxed_path())
+    }
+}
+
+fn mk_requests(rt: &Runtime, n: usize, budget: usize) -> Vec<Request> {
+    let m = &rt.manifest;
+    let p = m.prompt_len;
+    let vocab = rt.model(&m.target).unwrap().vocab as i32;
+    (0..n)
+        .map(|i| {
+            // request 0 starts in the quiet region, later ones spread out
+            // (different acceptance behaviour per request)
+            let start = m.reserved + (i as i32 * 83) % (vocab - m.reserved);
+            let prompt: Vec<i32> =
+                (0..p).map(|j| m.reserved + (start + j as i32) % (vocab - m.reserved)).collect();
+            Request::new(i as u64, prompt, budget)
+        })
+        .collect()
+}
+
+fn vanilla_outputs(rt: &Runtime, n: usize, budget: usize) -> Vec<Vec<i32>> {
+    let cfg = EngineConfig { mode: SpecMode::Vanilla, ..Default::default() };
+    let mut w = Worker::new(rt, cfg, mk_requests(rt, n, budget)).unwrap();
+    w.rollout_vanilla().unwrap();
+    w.outputs()
+}
+
+#[test]
+fn coupled_model_spec_equals_vanilla() {
+    let rt = Runtime::load(art()).unwrap();
+    let want = vanilla_outputs(&rt, 2, 20);
+
+    let cfg = EngineConfig {
+        mode: SpecMode::Coupled { window: 3 },
+        drafter: DraftMethod::Model("draft_small".to_string()),
+        ..Default::default()
+    };
+    let mut w = Worker::new(&rt, cfg, mk_requests(&rt, 2, 20)).unwrap();
+    let rep = w.rollout_coupled(3).unwrap();
+    assert_eq!(w.outputs(), want, "coupled(draft_small) diverged from vanilla");
+    assert!(rep.drafted_tokens > 0);
+    assert!(rep.accepted_tokens > 0, "acceptance was zero — drafter misconfigured");
+}
+
+#[test]
+fn coupled_mid_drafter_equals_vanilla() {
+    let rt = Runtime::load(art()).unwrap();
+    let want = vanilla_outputs(&rt, 2, 16);
+    let cfg = EngineConfig {
+        mode: SpecMode::Coupled { window: 3 },
+        drafter: DraftMethod::Model("draft_mid".to_string()),
+        ..Default::default()
+    };
+    let mut w = Worker::new(&rt, cfg, mk_requests(&rt, 2, 16)).unwrap();
+    w.rollout_coupled(3).unwrap();
+    assert_eq!(w.outputs(), want, "coupled(draft_mid) diverged from vanilla");
+}
+
+#[test]
+fn coupled_token_drafters_equal_vanilla() {
+    let rt = Runtime::load(art()).unwrap();
+    let want = vanilla_outputs(&rt, 2, 16);
+    for method in [DraftMethod::Ngram, DraftMethod::Sam] {
+        let cfg = EngineConfig {
+            mode: SpecMode::Coupled { window: 3 },
+            drafter: method.clone(),
+            ..Default::default()
+        };
+        let mut w = Worker::new(&rt, cfg, mk_requests(&rt, 2, 16)).unwrap();
+        w.rollout_coupled(3).unwrap();
+        assert_eq!(w.outputs(), want, "coupled({method:?}) diverged from vanilla");
+    }
+}
+
+#[test]
+fn decoupled_equals_vanilla() {
+    let rt = Runtime::load(art()).unwrap();
+    let want = vanilla_outputs(&rt, 2, 16);
+    for method in [
+        DraftMethod::Model("draft_small".to_string()),
+        DraftMethod::Sam,
+    ] {
+        let cfg = EngineConfig {
+            mode: SpecMode::Decoupled { window: 3 },
+            drafter: method.clone(),
+            ..Default::default()
+        };
+        let mut reqs = mk_requests(&rt, 2, 16);
+        let rep = rollout_decoupled(&rt, art(), &cfg, &mut reqs).unwrap();
+        let outs: Vec<Vec<i32>> =
+            reqs.iter().map(|r| r.seq[r.prompt.len()..].to_vec()).collect();
+        assert_eq!(outs, want, "decoupled({method:?}) diverged from vanilla");
+        assert!(rep.total_generated >= 16, "decoupled under-generated");
+    }
+}
+
+#[test]
+fn speculation_actually_accelerates_iterations() {
+    // Not a wallclock assertion (CPU interpret mode) but an algorithmic
+    // one: coupled speculation must need far fewer target steps than
+    // vanilla decoding when acceptance is decent.
+    let rt = Runtime::load(art()).unwrap();
+    let budget = 24;
+
+    let cfg = EngineConfig { mode: SpecMode::Vanilla, ..Default::default() };
+    let mut wv = Worker::new(&rt, cfg, mk_requests(&rt, 2, budget)).unwrap();
+    let rep_v = wv.rollout_vanilla().unwrap();
+
+    let cfg = EngineConfig {
+        mode: SpecMode::Coupled { window: 3 },
+        drafter: DraftMethod::Model("draft_mid".to_string()),
+        ..Default::default()
+    };
+    let mut wc = Worker::new(&rt, cfg, mk_requests(&rt, 2, budget)).unwrap();
+    let rep_c = wc.rollout_coupled(3).unwrap();
+
+    assert!(
+        rep_c.target_steps * 2 <= rep_v.target_steps,
+        "speculation saved too few target steps: coupled {} vs vanilla {}",
+        rep_c.target_steps,
+        rep_v.target_steps
+    );
+    assert!(rep_c.acceptance_rate() > 0.4, "acceptance {:.2} too low", rep_c.acceptance_rate());
+}

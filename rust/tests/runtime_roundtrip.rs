@@ -1,0 +1,174 @@
+//! Runtime ↔ artifacts integration: numeric consistency of the AOT HLO
+//! executables across batch buckets and window sizes.
+//!
+//! The python test-suite proves `forward_window` is self-consistent inside
+//! JAX; these tests prove the *lowered text artifacts* loaded through PJRT
+//! compute the same function (same tokens in → same logits out) so the
+//! whole interchange (HLO text, weight npz, manifest) is sound.
+
+use std::path::Path;
+
+use specactor::runtime::{KvCache, Runtime};
+
+fn art() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn prompt(rt: &Runtime, start: i32) -> Vec<i32> {
+    let m = &rt.manifest;
+    let vocab = rt.model(&m.target).unwrap().vocab as i32;
+    (0..m.prompt_len)
+        .map(|j| m.reserved + (start + j as i32) % (vocab - m.reserved))
+        .collect()
+}
+
+/// Decode-by-one must equal a verify window over the same tokens
+/// (KV-cache consistency through the rust runtime).
+#[test]
+fn decode_by_one_equals_window_via_artifacts() {
+    let rt = Runtime::load(&art()).unwrap();
+    let m = rt.manifest.clone();
+    let model = m.target.clone();
+    let p = m.prompt_len;
+    let toks = prompt(&rt, 5);
+    let extra: Vec<i32> = vec![10, 20, 30, 40];
+
+    // path A: prefill + 4 decode steps
+    let mut ca = rt.new_cache(&model, 1).unwrap();
+    rt.prefill(&model, &toks, &mut ca).unwrap();
+    ca.lens[0] = (p - 1) as i32;
+    let mut logits_a = Vec::new();
+    let mut feed = vec![*toks.last().unwrap()];
+    for (i, &t) in extra.iter().enumerate() {
+        let out = rt.step(&model, &feed, 1, &mut ca).unwrap();
+        logits_a.push(out.at(0, 0).to_vec());
+        ca.lens[0] += 1;
+        feed = vec![t];
+        let _ = i;
+    }
+
+    // path B: prefill + one window step of the same 4 inputs
+    let mut cb = rt.new_cache(&model, 1).unwrap();
+    rt.prefill(&model, &toks, &mut cb).unwrap();
+    cb.lens[0] = (p - 1) as i32;
+    let mut win = vec![*toks.last().unwrap()];
+    win.extend_from_slice(&extra[..3]);
+    let out = rt.step(&model, &win, 4, &mut cb).unwrap();
+    for j in 0..4 {
+        let a = &logits_a[j];
+        let b = out.at(0, j);
+        let max_diff = a
+            .iter()
+            .zip(b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0f32, f32::max);
+        assert!(max_diff < 2e-3, "position {j}: max logit diff {max_diff}");
+    }
+}
+
+/// The same request must compute identical logits regardless of which
+/// batch bucket (and padding) it rides in.
+#[test]
+fn bucket_padding_does_not_change_logits() {
+    let rt = Runtime::load(&art()).unwrap();
+    let m = rt.manifest.clone();
+    let model = m.target.clone();
+    let p = m.prompt_len;
+    let toks = prompt(&rt, 42);
+
+    let run = |bucket: usize| -> Vec<f32> {
+        let mut cache = rt.new_cache(&model, bucket).unwrap();
+        let mut all = vec![m.pad_id; bucket * p];
+        all[..p].copy_from_slice(&toks);
+        // fill other slots with a different prompt to catch cross-talk
+        for s in 1..bucket {
+            let other = prompt(&rt, 99 + s as i32);
+            all[s * p..(s + 1) * p].copy_from_slice(&other);
+        }
+        let out = rt.prefill(&model, &all, &mut cache).unwrap();
+        out.at(0, 0).to_vec()
+    };
+
+    let l1 = run(1);
+    let l4 = run(4);
+    let l8 = run(8);
+    for (a, b) in l1.iter().zip(&l4) {
+        assert!((a - b).abs() < 2e-3, "b=1 vs b=4 differ");
+    }
+    for (a, b) in l1.iter().zip(&l8) {
+        assert!((a - b).abs() < 2e-3, "b=1 vs b=8 differ");
+    }
+}
+
+/// Drafter and target share embeddings: the draft_small model must produce
+/// finite, differently-shaped logits (sanity of multi-model loading).
+#[test]
+fn all_models_load_and_execute() {
+    let rt = Runtime::load(&art()).unwrap();
+    let m = rt.manifest.clone();
+    let toks = prompt(&rt, 7);
+    for name in std::iter::once(&m.target).chain(m.drafters.iter()) {
+        let mut cache = rt.new_cache(name, 1).unwrap();
+        let out = rt.prefill(name, &toks, &mut cache).unwrap();
+        assert_eq!(out.vocab, rt.model(name).unwrap().vocab);
+        assert!(out.logits.iter().all(|x| x.is_finite()), "{name}: non-finite logits");
+        let spread = out.logits.iter().fold(f32::MIN, |a, &b| a.max(b))
+            - out.logits.iter().fold(f32::MAX, |a, &b| a.min(b));
+        assert!(spread > 1.0, "{name}: logits suspiciously flat");
+    }
+}
+
+/// Executable cache: second use of the same key must not recompile.
+#[test]
+fn executable_cache_hits() {
+    let rt = Runtime::load(&art()).unwrap();
+    let m = rt.manifest.clone();
+    let toks = prompt(&rt, 3);
+    let mut cache = rt.new_cache(&m.target, 1).unwrap();
+    rt.prefill(&m.target, &toks, &mut cache).unwrap();
+    cache.lens[0] = (m.prompt_len - 1) as i32;
+    let compiles_before = rt.stats.borrow().compiles;
+    for _ in 0..3 {
+        let _ = rt.step(&m.target, &[5], 1, &mut cache).unwrap();
+        cache.lens[0] += 1;
+    }
+    let st = rt.stats.borrow();
+    assert_eq!(st.compiles, compiles_before + 1, "step executable recompiled");
+}
+
+/// KV row migration across caches preserves generation (KVCache scale).
+#[test]
+fn kv_row_migration_preserves_logits() {
+    let rt = Runtime::load(&art()).unwrap();
+    let m = rt.manifest.clone();
+    let model = m.target.clone();
+    let p = m.prompt_len;
+
+    // run request in a b=4 cache at slot 2
+    let mut c4 = rt.new_cache(&model, 4).unwrap();
+    let mut all = vec![m.pad_id; 4 * p];
+    for s in 0..4 {
+        let pr = prompt(&rt, 11 * (s as i32 + 1));
+        all[s * p..(s + 1) * p].copy_from_slice(&pr);
+    }
+    rt.prefill(&model, &all, &mut c4).unwrap();
+    for l in c4.lens.iter_mut() {
+        *l = (p - 1) as i32;
+    }
+
+    // migrate slot 2 into a fresh b=1 cache
+    let row = c4.extract_row(2).unwrap();
+    let mut c1: KvCache = rt.new_cache(&model, 1).unwrap();
+    c1.insert_row(0, &row).unwrap();
+
+    // same next-step logits from both caches
+    let last = all[2 * p + p - 1];
+    let out4 = rt
+        .step(&model, &[m.pad_id, m.pad_id, last, m.pad_id], 1, &mut c4)
+        .unwrap();
+    let out1 = rt.step(&model, &[last], 1, &mut c1).unwrap();
+    let a = out4.at(2, 0);
+    let b = out1.at(0, 0);
+    let max_diff = a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0f32, f32::max);
+    assert!(max_diff < 2e-3, "migrated cache diverged: {max_diff}");
+}
