@@ -11,7 +11,10 @@ Emits into ``artifacts/``:
   runtime *parameters* because the HLO-text printer elides large constants.
 * ``manifest.json`` — the contract with the rust runtime: model configs,
   artifact table (file, model, fn, batch, window, shapes), weight
-  parameter lists, and family-level constants (eos/pad ids, succ params).
+  parameter lists, family-level constants (eos/pad ids, succ params) and
+  the ``kv_protocol`` the executables were lowered with ("window" =
+  incremental KV transfer, see PERF.md; "full" = legacy whole-cache
+  returns, still understood by the runtime).
 
 Python runs ONCE at build time (``make artifacts``); the rust binary is
 self-contained afterwards.
@@ -95,15 +98,16 @@ def lower_model(cfg: M.ModelConfig, weights, out_dir: str, manifest: dict,
         })
         print(f"  {fname}: {len(text)//1024} KiB in {time.time()-t0:.1f}s")
 
+    kv_out = manifest["kv_protocol"]
     for b in batches:
         kshape = (cfg.n_layers, b, cfg.max_seq, cfg.n_heads, cfg.d_head)
         emit(f"{cfg.name}_prefill_b{b}.hlo.txt",
-             M.make_prefill(cfg, b, prompt_len),
+             M.make_prefill(cfg, b, prompt_len, kv_out=kv_out),
              wspecs + [spec((b, prompt_len), jnp.int32)], b, prompt_len,
              "prefill")
         for w in windows:
             emit(f"{cfg.name}_step_b{b}_w{w}.hlo.txt",
-                 M.make_step(cfg, b, w),
+                 M.make_step(cfg, b, w, kv_out=kv_out),
                  wspecs + [spec((b, w), jnp.int32), spec((b,), jnp.int32),
                            spec(kshape), spec(kshape)], b, w, "step")
 
@@ -114,6 +118,12 @@ def main() -> None:
     ap.add_argument("--batches", default=",".join(map(str, BATCH_BUCKETS)))
     ap.add_argument("--windows", default=",".join(map(str, WINDOWS)))
     ap.add_argument("--prompt-len", type=int, default=PROMPT_LEN)
+    ap.add_argument("--kv-protocol", choices=("window", "full"),
+                    default="window",
+                    help="step/prefill KV return: 'window' transfers only "
+                         "the written [L,b,w,h,dh] entries per call (the "
+                         "copy-lean hot path, see PERF.md); 'full' returns "
+                         "whole caches (legacy, for A/B measurement)")
     args = ap.parse_args()
 
     batches = [int(x) for x in args.batches.split(",") if x]
@@ -122,7 +132,8 @@ def main() -> None:
 
     fam = M.family_weights()
     manifest = {
-        "version": 1,
+        "version": 2,
+        "kv_protocol": args.kv_protocol,
         "eos_id": M.EOS_ID,
         "pad_id": M.PAD_ID,
         "reserved": M.RESERVED,

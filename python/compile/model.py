@@ -166,15 +166,21 @@ def _ffn_block_m(n: int) -> int:
 
 
 def forward_window(cfg: ModelConfig, weights, tokens, lens, k_cache, v_cache,
-                   *, interpret: bool = True):
+                   *, interpret: bool = True, kv_out: str = "full"):
     """Run ``w`` new positions through the model, updating the KV cache.
 
     Args:
       tokens:  [b, w] int32 token ids for the new positions.
       lens:    [b] int32 number of positions already in the cache.
       k_cache: [L, b, S, h, dh] key cache; v_cache same.
+      kv_out:  "full" returns the scatter-updated caches (``[L, b, S, h,
+               dh]``); "window" returns only the entries *written this
+               call* (``[L, b, w, h, dh]``) — the incremental-KV protocol
+               (see PERF.md): the runtime scatters them into its host
+               cache at ``lens[i]..lens[i]+w`` per slot, so the
+               device→host transfer is O(w) instead of O(S) per step.
 
-    Returns: (logits [b, w, vocab], k_cache', v_cache').
+    Returns: (logits [b, w, vocab], k_out, v_out) per ``kv_out``.
 
     ``w = 1`` is a decode step; ``w > 1`` is speculative *verification* (the
     hot-spot: one parallel pass scores all drafted positions) and is also
@@ -186,6 +192,7 @@ def forward_window(cfg: ModelConfig, weights, tokens, lens, k_cache, v_cache,
     x = weights["embed"][tokens] + weights["pos"][pos_idx]     # [b, w, d]
 
     new_k, new_v = [], []
+    win_k, win_v = [], []
     for li, lw in enumerate(weights["layers"]):
         xn = rmsnorm(x, lw["ln1"])
         q = (xn @ lw["wq"]).reshape(b, w, h, dh)
@@ -195,6 +202,8 @@ def forward_window(cfg: ModelConfig, weights, tokens, lens, k_cache, v_cache,
         vc = _update_cache(v_cache[li], vv, lens)
         new_k.append(kc)
         new_v.append(vc)
+        win_k.append(kk)
+        win_v.append(vv)
         attn = mha_kv(q.astype(jnp.float32), kc, vc, lens,
                       block_k=cfg.block_k, interpret=interpret)
         x = x + (attn.reshape(b, w, h * dh) @ lw["wo"])
@@ -209,6 +218,8 @@ def forward_window(cfg: ModelConfig, weights, tokens, lens, k_cache, v_cache,
                                  dtype=jnp.float32)
     gain = cfg.noise_scale * (1.0 + weights["gate"][tokens])   # [b, w]
     logits = cfg.succ_scale * succ_onehot + gain[..., None] * tx_logits
+    if kv_out == "window":
+        return logits, jnp.stack(win_k), jnp.stack(win_v)
     return logits, jnp.stack(new_k), jnp.stack(new_v)
 
 
@@ -262,29 +273,34 @@ def unflatten_weights(cfg: ModelConfig, flat):
 # ---------------------------------------------------------------------------
 
 def make_prefill(cfg: ModelConfig, batch: int, prompt_len: int,
-                 *, interpret: bool = True):
-    """prefill(*weights, tokens[b, P]) -> (last_logits[b, V], k, v)."""
+                 *, interpret: bool = True, kv_out: str = "window"):
+    """prefill(*weights, tokens[b, P]) -> (last_logits[b, V], k, v).
+
+    With ``kv_out="window"`` (the shipped protocol) k/v are the P written
+    cache entries ``[L, b, P, h, dh]``; with "full" the whole cache.
+    """
     def prefill(*args):
         weights = unflatten_weights(cfg, args[:-1])
         tokens = args[-1]
         k0, v0 = empty_cache(cfg, batch)
         lens = jnp.zeros((batch,), jnp.int32)
         logits, k, v = forward_window(cfg, weights, tokens, lens, k0, v0,
-                                      interpret=interpret)
+                                      interpret=interpret, kv_out=kv_out)
         return logits[:, -1, :], k, v
     return prefill
 
 
 def make_step(cfg: ModelConfig, batch: int, window: int,
-              *, interpret: bool = True):
+              *, interpret: bool = True, kv_out: str = "window"):
     """step(*weights, tokens[b, w], lens[b], k, v) -> (logits, k', v').
 
     window = 1 → decode; window > 1 → verification of a draft window
-    (or prefill continuation).
+    (or prefill continuation). With ``kv_out="window"`` (the shipped
+    protocol) k'/v' are only the w written entries ``[L, b, w, h, dh]``.
     """
     def step(*args):
         weights = unflatten_weights(cfg, args[:-4])
         tokens, lens, k_cache, v_cache = args[-4:]
         return forward_window(cfg, weights, tokens, lens, k_cache, v_cache,
-                              interpret=interpret)
+                              interpret=interpret, kv_out=kv_out)
     return step

@@ -7,7 +7,12 @@ assert_allclose against ref.py.
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # offline containers may lack hypothesis; fall back to fixed cases
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from compile.kernels.attention import mha_kv, ffn
 from compile.kernels.ref import mha_kv_ref, ffn_ref, rmsnorm_ref, gelu_ref
@@ -17,17 +22,7 @@ def _rand(rng, shape):
     return jnp.asarray(rng.normal(size=shape), jnp.float32)
 
 
-@settings(max_examples=25, deadline=None)
-@given(
-    b=st.integers(1, 3),
-    w=st.integers(1, 8),
-    h=st.integers(1, 3),
-    dh=st.sampled_from([4, 8, 16]),
-    nblocks=st.integers(1, 4),
-    block_k=st.sampled_from([8, 16, 32]),
-    seed=st.integers(0, 2**31 - 1),
-)
-def test_mha_kv_matches_ref(b, w, h, dh, nblocks, block_k, seed):
+def _check_mha_kv_matches_ref(b, w, h, dh, nblocks, block_k, seed):
     s = nblocks * block_k
     rng = np.random.default_rng(seed)
     q = _rand(rng, (b, w, h, dh))
@@ -39,6 +34,29 @@ def test_mha_kv_matches_ref(b, w, h, dh, nblocks, block_k, seed):
     ref = mha_kv_ref(q, k, v, lens)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=2e-5, atol=2e-5)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        b=st.integers(1, 3),
+        w=st.integers(1, 8),
+        h=st.integers(1, 3),
+        dh=st.sampled_from([4, 8, 16]),
+        nblocks=st.integers(1, 4),
+        block_k=st.sampled_from([8, 16, 32]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_mha_kv_matches_ref(b, w, h, dh, nblocks, block_k, seed):
+        _check_mha_kv_matches_ref(b, w, h, dh, nblocks, block_k, seed)
+else:
+    @pytest.mark.parametrize("b,w,h,dh,nblocks,block_k,seed", [
+        (1, 1, 1, 4, 1, 8, 0),
+        (2, 4, 2, 8, 2, 16, 7),
+        (3, 8, 3, 16, 4, 32, 123),
+    ])
+    def test_mha_kv_matches_ref(b, w, h, dh, nblocks, block_k, seed):
+        _check_mha_kv_matches_ref(b, w, h, dh, nblocks, block_k, seed)
 
 
 def test_mha_kv_zero_len_attends_only_self():
@@ -81,15 +99,7 @@ def test_mha_kv_rejects_bad_block():
         mha_kv(q, k, v, jnp.zeros((1,), jnp.int32), block_k=16)
 
 
-@settings(max_examples=20, deadline=None)
-@given(
-    nrows=st.integers(1, 4),
-    block_m=st.sampled_from([1, 2, 4]),
-    d=st.sampled_from([8, 16]),
-    f=st.sampled_from([16, 32]),
-    seed=st.integers(0, 2**31 - 1),
-)
-def test_ffn_matches_ref(nrows, block_m, d, f, seed):
+def _check_ffn_matches_ref(nrows, block_m, d, f, seed):
     n = nrows * block_m
     rng = np.random.default_rng(seed)
     x = _rand(rng, (n, d))
@@ -99,6 +109,27 @@ def test_ffn_matches_ref(nrows, block_m, d, f, seed):
     ref = ffn_ref(x, w1, w2)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=2e-4, atol=2e-4)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        nrows=st.integers(1, 4),
+        block_m=st.sampled_from([1, 2, 4]),
+        d=st.sampled_from([8, 16]),
+        f=st.sampled_from([16, 32]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_ffn_matches_ref(nrows, block_m, d, f, seed):
+        _check_ffn_matches_ref(nrows, block_m, d, f, seed)
+else:
+    @pytest.mark.parametrize("nrows,block_m,d,f,seed", [
+        (1, 1, 8, 16, 0),
+        (2, 2, 16, 32, 7),
+        (4, 4, 16, 32, 123),
+    ])
+    def test_ffn_matches_ref(nrows, block_m, d, f, seed):
+        _check_ffn_matches_ref(nrows, block_m, d, f, seed)
 
 
 def test_ffn_rejects_bad_block():

@@ -1,15 +1,19 @@
 //! Runtime hot-path microbenchmark (perf deliverable): per-step latency of
 //! the PJRT execution path across batch buckets and windows, with the
-//! breakdown (execute vs host copies) the §Perf iteration log tracks.
-use std::path::Path;
+//! breakdown (execute vs host copies, bytes moved per step) the PERF.md
+//! iteration log tracks. Writes `BENCH_hotpath.json` for machine-readable
+//! trajectory tracking across PRs.
+use std::path::{Path, PathBuf};
 
 use specactor::runtime::Runtime;
 use specactor::util::benchkit::Bench;
 use specactor::util::cli::Args;
+use specactor::util::Json;
 
 fn main() {
     let mut args = Args::from_env().unwrap();
     let iters = args.opt_parse("iters", 8usize);
+    let json_out = args.opt("json-out", "BENCH_hotpath.json");
     args.finish().unwrap();
     let rt = match Runtime::load(Path::new("artifacts")) {
         Ok(rt) => rt,
@@ -20,6 +24,7 @@ fn main() {
     };
     let m = rt.manifest.clone();
     let mut bench = Bench::new(2, iters);
+    let mut extra: Vec<Vec<(&str, Json)>> = Vec::new();
     for &b in &[1usize, 8, 32] {
         for &w in &[1usize, 4] {
             let mut cache = rt.new_cache(&m.target, b).unwrap();
@@ -31,13 +36,42 @@ fn main() {
                 *l = (m.prompt_len - 1) as i32;
             }
             let toks = vec![m.reserved + 1; b * w];
+            // `lens` never advance, so each step rewrites the same window
+            // positions and the closure is exactly one step of work. (A
+            // previous version cloned the cache inside the closure, so the
+            // bench timed a multi-MB memcpy instead of the step.)
+            let st0 = rt.stats.borrow().clone();
             bench.run(&format!("target step b={b} w={w}"), || {
-                let mut c = cache.clone();
-                let _ = rt.step(&m.target, &toks, w, &mut c).unwrap();
+                let _ = rt.step(&m.target, &toks, w, &mut cache).unwrap();
             });
+            let st1 = rt.stats.borrow().clone();
+            let steps = (st1.executions - st0.executions).max(1) as f64;
+            let kv_d2h = (st1.kv_d2h_bytes - st0.kv_d2h_bytes) as f64 / steps;
+            let kv_h2d = (st1.kv_h2d_bytes - st0.kv_h2d_bytes) as f64 / steps;
+            extra.push(vec![
+                ("batch", Json::num(b as f64)),
+                ("window", Json::num(w as f64)),
+                ("kv_d2h_bytes_per_step", Json::num(kv_d2h)),
+                ("kv_h2d_bytes_per_step", Json::num(kv_h2d)),
+                ("full_cache_bytes", Json::num(cache.bytes() as f64)),
+            ]);
         }
     }
     bench.print_table("runtime hot path (PJRT CPU, interpret-mode kernels)");
+    println!("\nhost KV copies per step ({:?} protocol):", m.kv_protocol);
+    for row in &extra {
+        let get = |k: &str| {
+            row.iter().find(|(n, _)| *n == k).and_then(|(_, v)| v.as_f64()).unwrap_or(0.0)
+        };
+        println!(
+            "  b={:<3} w={:<2} d2h {:>12.0} B/step (full cache: {:.0} B)  h2d {:>12.0} B/step",
+            get("batch"),
+            get("window"),
+            get("kv_d2h_bytes_per_step"),
+            get("full_cache_bytes"),
+            get("kv_h2d_bytes_per_step"),
+        );
+    }
     let st = rt.stats.borrow();
     println!(
         "breakdown: {} executes {:.3}s total, host copies {:.3}s ({:.0}% of execute)",
@@ -46,4 +80,9 @@ fn main() {
         st.host_copy_s,
         st.host_copy_s / st.execute_s * 100.0
     );
+    let path = PathBuf::from(&json_out);
+    match bench.write_json(&path, "runtime_hotpath", &extra) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => println!("could not write {}: {e}", path.display()),
+    }
 }

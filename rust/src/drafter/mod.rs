@@ -18,6 +18,15 @@ pub use ngram::NgramDrafter;
 pub use sam::SamDrafter;
 
 /// A model-free draft method over one request's token history.
+///
+/// Drafting writes into a caller-provided buffer ([`draft_into`]) so the
+/// engine's decode loop can reuse one `Vec` per slot across rounds — the
+/// hot path does zero steady-state allocation (PERF.md §Memory
+/// discipline). [`draft`] is an allocating convenience wrapper for tests
+/// and one-off callers.
+///
+/// [`draft_into`]: TokenDrafter::draft_into
+/// [`draft`]: TokenDrafter::draft
 pub trait TokenDrafter: Send {
     /// Human-readable method name (ladder key).
     fn name(&self) -> &'static str;
@@ -25,9 +34,17 @@ pub trait TokenDrafter: Send {
     /// Ingest newly accepted tokens (extends the indexed history).
     fn extend(&mut self, tokens: &[i32]);
 
-    /// Propose up to `n` next tokens given the current history.
-    /// May return fewer (or none) when the structure has no prediction.
-    fn draft(&mut self, n: usize) -> Vec<i32>;
+    /// Propose up to `n` next tokens given the current history, appending
+    /// them to `out` (which is cleared first). May produce fewer (or none)
+    /// when the structure has no prediction.
+    fn draft_into(&mut self, n: usize, out: &mut Vec<i32>);
+
+    /// Allocating wrapper around [`TokenDrafter::draft_into`].
+    fn draft(&mut self, n: usize) -> Vec<i32> {
+        let mut out = Vec::new();
+        self.draft_into(n, &mut out);
+        out
+    }
 
     /// Current history length (for testing / resync checks).
     fn len(&self) -> usize;

@@ -1,26 +1,114 @@
 //! Prompt-lookup n-gram drafter [2]: hash the last `n` tokens, find the
 //! most recent earlier occurrence of the same n-gram in the history, and
 //! propose the tokens that followed it.
-
-use std::collections::HashMap;
+//!
+//! The gram index is a [`GramTable`] — a flat open-addressing hash table
+//! (linear probing, power-of-two capacity) instead of a `HashMap` per
+//! order: lookups touch one contiguous allocation and inserts only
+//! allocate on the amortised doubling rehash (PERF.md §Memory
+//! discipline). Drafting writes into the caller's buffer via
+//! [`TokenDrafter::draft_into`].
 
 use super::TokenDrafter;
+
+/// Flat open-addressing map `u64 gram-hash -> (latest, prev)` end
+/// positions (exclusive, 1-based — so `latest == 0` marks an empty slot).
+///
+/// Two positions are kept because the current tail indexes itself: the
+/// lookup needs the latest occurrence *strictly before* the tail.
+#[derive(Clone, Debug)]
+struct GramTable {
+    keys: Vec<u64>,
+    /// (latest, prev) end positions; `.0 == 0` ⇒ slot empty.
+    vals: Vec<(u32, u32)>,
+    live: usize,
+    mask: usize,
+}
+
+impl GramTable {
+    fn with_capacity_pow2(cap: usize) -> Self {
+        debug_assert!(cap.is_power_of_two());
+        GramTable {
+            keys: vec![0; cap],
+            vals: vec![(0, 0); cap],
+            live: 0,
+            mask: cap - 1,
+        }
+    }
+
+    fn new() -> Self {
+        Self::with_capacity_pow2(64)
+    }
+
+    /// Slot holding `key`, or the empty slot where it would be inserted.
+    fn probe(&self, key: u64) -> usize {
+        let mut i = (key as usize) & self.mask;
+        loop {
+            if self.vals[i].0 == 0 || self.keys[i] == key {
+                return i;
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
+
+    fn get(&self, key: u64) -> Option<(u32, u32)> {
+        let i = self.probe(key);
+        if self.vals[i].0 == 0 {
+            None
+        } else {
+            Some(self.vals[i])
+        }
+    }
+
+    /// Record an occurrence of `key` ending at `end` (1-based exclusive).
+    fn record(&mut self, key: u64, end: u32) {
+        debug_assert!(end > 0);
+        let i = self.probe(key);
+        if self.vals[i].0 == 0 {
+            self.keys[i] = key;
+            self.vals[i] = (end, end);
+            self.live += 1;
+            if self.live * 10 > self.keys.len() * 7 {
+                self.grow();
+            }
+        } else if self.vals[i].0 != end {
+            self.vals[i] = (end, self.vals[i].0);
+        }
+    }
+
+    fn grow(&mut self) {
+        let mut next = GramTable::with_capacity_pow2(self.keys.len() * 2);
+        for i in 0..self.keys.len() {
+            if self.vals[i].0 != 0 {
+                let j = next.probe(self.keys[i]);
+                next.keys[j] = self.keys[i];
+                next.vals[j] = self.vals[i];
+                next.live += 1;
+            }
+        }
+        *self = next;
+    }
+
+    fn clear(&mut self) {
+        self.keys.fill(0);
+        self.vals.fill((0, 0));
+        self.live = 0;
+    }
+}
 
 pub struct NgramDrafter {
     /// n-gram order (falls back to shorter grams down to 1).
     pub max_n: usize,
     history: Vec<i32>,
-    /// gram (packed) -> (most recent, previous) end positions (exclusive).
-    /// Two entries are kept because the current tail indexes itself: the
-    /// lookup needs the latest occurrence *strictly before* the tail.
-    index: Vec<HashMap<u64, (usize, usize)>>,
+    /// One table per gram order.
+    index: Vec<GramTable>,
 }
 
 fn pack(gram: &[i32]) -> u64 {
     // tokens are < 2^16 in practice; fold into 64 bits with a prime mix.
     let mut h = 0xcbf2_9ce4_8422_2325u64;
     for &t in gram {
-        h ^= t as u64 as u64;
+        h ^= t as u64;
         h = h.wrapping_mul(0x1000_0000_01b3);
     }
     h
@@ -32,7 +120,7 @@ impl NgramDrafter {
         NgramDrafter {
             max_n,
             history: Vec::new(),
-            index: vec![HashMap::new(); max_n],
+            index: (0..max_n).map(|_| GramTable::new()).collect(),
         }
     }
 
@@ -40,11 +128,7 @@ impl NgramDrafter {
         // index all grams ending at `end` (exclusive end)
         for n in 1..=self.max_n.min(end) {
             let gram = &self.history[end - n..end];
-            let key = pack(gram);
-            let slot = self.index[n - 1].entry(key).or_insert((end, end));
-            if slot.0 != end {
-                *slot = (end, slot.0);
-            }
+            self.index[n - 1].record(pack(gram), end as u32);
         }
     }
 }
@@ -61,28 +145,29 @@ impl TokenDrafter for NgramDrafter {
         }
     }
 
-    fn draft(&mut self, n_tokens: usize) -> Vec<i32> {
+    fn draft_into(&mut self, n_tokens: usize, out: &mut Vec<i32>) {
+        out.clear();
         let len = self.history.len();
         if len == 0 || n_tokens == 0 {
-            return Vec::new();
+            return;
         }
         // longest gram first
         for n in (1..=self.max_n.min(len)).rev() {
             let gram = &self.history[len - n..len];
-            if let Some(&(latest, prev)) = self.index[n - 1].get(&pack(gram)) {
+            if let Some((latest, prev)) = self.index[n - 1].get(pack(gram)) {
                 // the tail gram indexes itself at `len`; use the latest
                 // occurrence strictly before it
-                let end = if latest < len { latest } else { prev };
+                let end = if (latest as usize) < len { latest as usize } else { prev as usize };
                 if end < len {
                     // propose what followed the previous occurrence
                     let take = n_tokens.min(len - end);
                     if take > 0 {
-                        return self.history[end..end + take].to_vec();
+                        out.extend_from_slice(&self.history[end..end + take]);
+                        return;
                     }
                 }
             }
         }
-        Vec::new()
     }
 
     fn len(&self) -> usize {
@@ -91,8 +176,8 @@ impl TokenDrafter for NgramDrafter {
 
     fn reset(&mut self) {
         self.history.clear();
-        for m in &mut self.index {
-            m.clear();
+        for t in &mut self.index {
+            t.clear();
         }
     }
 }
@@ -160,5 +245,39 @@ mod tests {
         }
         let out = d.draft(5);
         assert_eq!(out, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn gram_table_record_get_and_growth() {
+        let mut t = GramTable::with_capacity_pow2(4); // force rehashes
+        for end in 1..=200u32 {
+            t.record(end as u64 * 0x9e37_79b9, end);
+        }
+        assert_eq!(t.live, 200);
+        for end in 1..=200u32 {
+            assert_eq!(t.get(end as u64 * 0x9e37_79b9), Some((end, end)));
+        }
+        assert_eq!(t.get(12345), None);
+        // updating the same key keeps (latest, prev) history
+        t.record(42, 10);
+        t.record(42, 10); // same end twice: no change
+        assert_eq!(t.get(42), Some((10, 10)));
+        t.record(42, 20);
+        assert_eq!(t.get(42), Some((20, 10)));
+        t.record(42, 30);
+        assert_eq!(t.get(42), Some((30, 20)));
+    }
+
+    #[test]
+    fn draft_into_appends_into_reused_buffer() {
+        let mut d = NgramDrafter::new(3);
+        d.extend(&[1, 2, 3, 4, 1, 2, 3]);
+        let mut buf = vec![7; 8];
+        d.draft_into(2, &mut buf);
+        assert_eq!(buf, vec![4, 1]);
+        let cap = buf.capacity();
+        d.draft_into(2, &mut buf);
+        assert_eq!(buf, vec![4, 1]);
+        assert_eq!(buf.capacity(), cap, "steady-state draft reallocated");
     }
 }

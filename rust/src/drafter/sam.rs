@@ -6,26 +6,112 @@
 //! longest history match of the current suffix and proposes the tokens
 //! that followed it — like the n-gram drafter but with unbounded match
 //! length and true longest-match semantics.
-
-use std::collections::HashMap;
+//!
+//! Transitions live in a [`TransArena`]: one flat `Vec` of token-sorted
+//! per-state blocks, looked up by binary search. Compared to the obvious
+//! `HashMap<i32, u32>` per state this allocates nothing per state, keeps
+//! lookups on a few cache lines, and makes `extend` allocation-free in the
+//! steady state (blocks grow by amortised relocation inside the arena) —
+//! see PERF.md §Memory discipline.
 
 use super::TokenDrafter;
 
-#[derive(Clone, Debug)]
+/// Per-state transition block descriptor inside the arena.
+#[derive(Clone, Copy, Debug)]
+struct Block {
+    off: u32,
+    len: u32,
+    cap: u32,
+}
+
+/// Flat transition storage: every state's outgoing transitions are a
+/// token-sorted `(token, target)` block inside one shared `Vec`.
+///
+/// Blocks grow by relocation to the arena tail with doubled capacity; the
+/// abandoned block becomes dead space (bounded by ~2× the live transition
+/// count, the classic amortised-doubling bound).
+#[derive(Clone, Debug, Default)]
+struct TransArena {
+    data: Vec<(i32, u32)>,
+    blocks: Vec<Block>,
+}
+
+impl TransArena {
+    /// Append a new state with no transitions.
+    fn push_state(&mut self) {
+        self.blocks.push(Block { off: self.data.len() as u32, len: 0, cap: 0 });
+    }
+
+    /// Append a new state whose transitions are a snapshot of `src`'s
+    /// (the SAM clone operation).
+    fn push_state_cloned_from(&mut self, src: u32) {
+        let b = self.blocks[src as usize];
+        let off = self.data.len() as u32;
+        self.data.extend_from_within(b.off as usize..(b.off + b.len) as usize);
+        self.blocks.push(Block { off, len: b.len, cap: b.len });
+    }
+
+    fn seg(&self, state: u32) -> &[(i32, u32)] {
+        let b = self.blocks[state as usize];
+        &self.data[b.off as usize..(b.off + b.len) as usize]
+    }
+
+    /// Transition target of `state` on `token`, if present.
+    fn get(&self, state: u32, token: i32) -> Option<u32> {
+        let seg = self.seg(state);
+        seg.binary_search_by_key(&token, |&(t, _)| t).ok().map(|i| seg[i].1)
+    }
+
+    /// Insert or overwrite `state --token--> target`, keeping the block
+    /// token-sorted.
+    fn set(&mut self, state: u32, token: i32, target: u32) {
+        let b = self.blocks[state as usize];
+        let pos = self.data[b.off as usize..(b.off + b.len) as usize]
+            .binary_search_by_key(&token, |&(t, _)| t);
+        match pos {
+            Ok(i) => self.data[b.off as usize + i].1 = target,
+            Err(i) => {
+                if b.len == b.cap {
+                    self.relocate(state);
+                }
+                let b = self.blocks[state as usize];
+                let off = b.off as usize;
+                let len = b.len as usize;
+                // shift the tail right by one slot inside the block
+                self.data.copy_within(off + i..off + len, off + i + 1);
+                self.data[off + i] = (token, target);
+                self.blocks[state as usize].len += 1;
+            }
+        }
+    }
+
+    /// Move `state`'s block to the arena tail with doubled capacity.
+    fn relocate(&mut self, state: u32) {
+        let b = self.blocks[state as usize];
+        let new_cap = (b.cap * 2).max(2);
+        let off = self.data.len() as u32;
+        self.data.extend_from_within(b.off as usize..(b.off + b.len) as usize);
+        // placeholder entries reserve the block's spare capacity; they sit
+        // beyond `len` and are never read
+        self.data.resize(off as usize + new_cap as usize, (0, 0));
+        self.blocks[state as usize] = Block { off, len: b.len, cap: new_cap };
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
 struct State {
     /// Longest substring length represented by this state.
-    len: usize,
+    len: u32,
     /// Suffix link.
     link: i32,
-    /// Transitions token -> state.
-    next: HashMap<i32, u32>,
     /// One end position (exclusive) of an occurrence of this state's
     /// substrings (the first time the state was created).
-    end_pos: usize,
+    end_pos: u32,
 }
 
 pub struct SamDrafter {
     states: Vec<State>,
+    trans: TransArena,
     last: u32,
     history: Vec<i32>,
     /// Matching state/length for the current full suffix (decode cursor).
@@ -37,9 +123,11 @@ pub struct SamDrafter {
 
 impl SamDrafter {
     pub fn new(max_draft: usize) -> Self {
-        let root = State { len: 0, link: -1, next: HashMap::new(), end_pos: 0 };
+        let mut trans = TransArena::default();
+        trans.push_state();
         SamDrafter {
-            states: vec![root],
+            states: vec![State { len: 0, link: -1, end_pos: 0 }],
+            trans,
             last: 0,
             history: Vec::new(),
             cur_state: 0,
@@ -51,32 +139,33 @@ impl SamDrafter {
     fn add_token(&mut self, c: i32) {
         // classic SAM online construction (Blumer et al.)
         let cur = self.states.len() as u32;
-        let end_pos = self.history.len() + 1;
+        let end_pos = (self.history.len() + 1) as u32;
         self.states.push(State {
             len: self.states[self.last as usize].len + 1,
             link: 0,
-            next: HashMap::new(),
             end_pos,
         });
+        self.trans.push_state();
         let mut p = self.last as i32;
-        while p >= 0 && !self.states[p as usize].next.contains_key(&c) {
-            self.states[p as usize].next.insert(c, cur);
+        while p >= 0 && self.trans.get(p as u32, c).is_none() {
+            self.trans.set(p as u32, c, cur);
             p = self.states[p as usize].link;
         }
         if p == -1 {
             self.states[cur as usize].link = 0;
         } else {
-            let q = self.states[p as usize].next[&c];
+            let q = self.trans.get(p as u32, c).expect("transition exists after scan");
             if self.states[p as usize].len + 1 == self.states[q as usize].len {
                 self.states[cur as usize].link = q as i32;
             } else {
                 // clone q
                 let clone = self.states.len() as u32;
-                let mut cl = self.states[q as usize].clone();
+                let mut cl = self.states[q as usize];
                 cl.len = self.states[p as usize].len + 1;
                 self.states.push(cl);
-                while p >= 0 && self.states[p as usize].next.get(&c) == Some(&q) {
-                    self.states[p as usize].next.insert(c, clone);
+                self.trans.push_state_cloned_from(q);
+                while p >= 0 && self.trans.get(p as u32, c) == Some(q) {
+                    self.trans.set(p as u32, c, clone);
                     p = self.states[p as usize].link;
                 }
                 self.states[q as usize].link = clone as i32;
@@ -91,11 +180,11 @@ impl SamDrafter {
     /// suffix links on mismatch — identical to online string matching.
     fn advance_cursor(&mut self, c: i32) {
         loop {
-            if let Some(&nxt) = self.states[self.cur_state as usize].next.get(&c) {
+            if let Some(nxt) = self.trans.get(self.cur_state, c) {
                 self.cur_state = nxt;
                 self.cur_len += 1;
                 // clamp to the state's max length
-                let sl = self.states[self.cur_state as usize].len;
+                let sl = self.states[self.cur_state as usize].len as usize;
                 if self.cur_len > sl {
                     self.cur_len = sl;
                 }
@@ -108,7 +197,7 @@ impl SamDrafter {
                 return;
             }
             self.cur_state = link as u32;
-            self.cur_len = self.states[self.cur_state as usize].len;
+            self.cur_len = self.states[self.cur_state as usize].len as usize;
         }
     }
 }
@@ -127,17 +216,18 @@ impl TokenDrafter for SamDrafter {
         }
     }
 
-    fn draft(&mut self, n_tokens: usize) -> Vec<i32> {
+    fn draft_into(&mut self, n_tokens: usize, out: &mut Vec<i32>) {
+        out.clear();
         if self.cur_len == 0 || self.history.is_empty() {
-            return Vec::new();
+            return;
         }
         // end position of one occurrence of the current matched suffix
-        let end = self.states[self.cur_state as usize].end_pos;
+        let end = self.states[self.cur_state as usize].end_pos as usize;
         if end >= self.history.len() {
-            return Vec::new();
+            return;
         }
         let take = n_tokens.min(self.max_draft).min(self.history.len() - end);
-        self.history[end..end + take].to_vec()
+        out.extend_from_slice(&self.history[end..end + take]);
     }
 
     fn len(&self) -> usize {
@@ -198,6 +288,44 @@ mod tests {
         d.reset();
         assert!(d.is_empty());
         assert!(d.draft(2).is_empty());
+    }
+
+    #[test]
+    fn draft_into_reuses_buffer() {
+        let mut d = SamDrafter::new(8);
+        d.extend(&[1, 2, 3, 4, 1, 2, 3]);
+        let mut buf = vec![9, 9, 9, 9, 9]; // stale contents must be cleared
+        d.draft_into(2, &mut buf);
+        assert_eq!(buf, vec![4, 1]);
+        let cap = buf.capacity();
+        d.draft_into(2, &mut buf);
+        assert_eq!(buf, vec![4, 1]);
+        assert_eq!(buf.capacity(), cap, "steady-state draft reallocated");
+    }
+
+    #[test]
+    fn arena_set_get_overwrite_and_growth() {
+        let mut a = TransArena::default();
+        a.push_state();
+        // out-of-order inserts must stay sorted and findable
+        for (i, t) in [5, 1, 9, 3, 7, 2, 8].iter().enumerate() {
+            a.set(0, *t, i as u32);
+        }
+        assert_eq!(a.get(0, 1), Some(1));
+        assert_eq!(a.get(0, 9), Some(2));
+        assert_eq!(a.get(0, 4), None);
+        let seg: Vec<i32> = a.seg(0).iter().map(|&(t, _)| t).collect();
+        assert_eq!(seg, vec![1, 2, 3, 5, 7, 8, 9]);
+        // overwrite keeps length
+        a.set(0, 3, 42);
+        assert_eq!(a.get(0, 3), Some(42));
+        assert_eq!(a.seg(0).len(), 7);
+        // cloned block is an independent snapshot
+        a.push_state_cloned_from(0);
+        a.set(1, 100, 7);
+        assert_eq!(a.get(1, 3), Some(42));
+        assert_eq!(a.get(0, 100), None);
+        assert_eq!(a.get(1, 100), Some(7));
     }
 
     #[test]

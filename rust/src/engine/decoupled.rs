@@ -9,6 +9,10 @@
 //! vanilla decoding — because acceptance uses the shared sampling tape
 //! (`rust/tests/losslessness.rs` asserts all three agree token-for-token).
 //!
+//! Both loops reuse their token/proposal buffers across rounds (PERF.md
+//! §Memory discipline); the only steady-state allocation is the one `Vec`
+//! per [`Chunk`] that crosses the drafter→verifier channel.
+//!
 //! Protocol (per slot):
 //! * drafter sends `Chunk { slot, base_len, tokens }` drafted from its
 //!   local mirror (verified prefix + own unverified drafts);
@@ -56,6 +60,16 @@ struct SlotMirror {
     ahead: Vec<i32>,
     window: DraftWindow,
     done: bool,
+}
+
+/// Token at mirror position `idx` of `seq ++ ahead`, without materialising
+/// the concatenation.
+fn mirror_tok(m: &SlotMirror, idx: usize) -> i32 {
+    if idx < m.seq.len() {
+        m.seq[idx]
+    } else {
+        m.ahead[idx - m.seq.len()]
+    }
 }
 
 /// Run the drafter thread body. `art_dir` is used to open this thread's own
@@ -120,6 +134,13 @@ fn drafter_thread(
         }
     }
 
+    // Round-reused buffers (allocated once; see module docs).
+    let mut proposals: Vec<Vec<i32>> = (0..n).map(|_| Vec::new()).collect();
+    let mut draftable: Vec<usize> = Vec::with_capacity(n);
+    let mut need: Vec<usize> = Vec::new();
+    let mut toks: Vec<i32> = Vec::new();
+    let mut last: Vec<i32> = Vec::new();
+
     loop {
         // 1. drain verdicts (non-blocking)
         let mut any_verdict = false;
@@ -160,9 +181,9 @@ fn drafter_thread(
         }
 
         // 2. pick slots that may draft a chunk
-        let draftable: Vec<usize> = (0..n)
-            .filter(|&i| !mirrors[i].done && mirrors[i].window.draft_budget() >= chunk_k)
-            .collect();
+        draftable.clear();
+        draftable
+            .extend((0..n).filter(|&i| !mirrors[i].done && mirrors[i].window.draft_budget() >= chunk_k));
         if draftable.is_empty() {
             if !any_verdict {
                 // block for the next verdict to avoid spinning
@@ -188,16 +209,18 @@ fn drafter_thread(
         }
 
         // 3. draft one chunk of `chunk_k` tokens per draftable slot
-        let mut proposals: Vec<Vec<i32>> = vec![Vec::new(); n];
+        for &i in &draftable {
+            proposals[i].clear();
+        }
         match (&method, &mut model_rt) {
             (DraftMethod::Model(_), Some((rt, name, cache, consumed))) => {
                 let bucket = cache.batch;
                 let pad = rt.manifest.pad_id;
                 // catch-up: consume mirror tokens (seq + ahead, minus the
                 // final one which seeds the first decode step)
-                let mirror_len =
-                    |m: &SlotMirror| m.seq.len() + m.ahead.len();
-                let mut need = vec![0usize; bucket];
+                let mirror_len = |m: &SlotMirror| m.seq.len() + m.ahead.len();
+                need.clear();
+                need.resize(bucket, 0);
                 for &i in &draftable {
                     let m = &mirrors[i];
                     // the draft cache may have consumed diverged tokens:
@@ -211,14 +234,13 @@ fn drafter_thread(
                 let mut max_need = draftable.iter().map(|&i| need[i]).max().unwrap_or(0);
                 while max_need > 0 {
                     let w = rt.manifest.window_for(max_need)?;
-                    let mut toks = vec![pad; bucket * w];
+                    toks.clear();
+                    toks.resize(bucket * w, pad);
                     for &i in &draftable {
                         let m = &mirrors[i];
-                        let full: Vec<i32> =
-                            m.seq.iter().chain(m.ahead.iter()).copied().collect();
                         let take = need[i].min(w);
                         for j in 0..take {
-                            toks[i * w + j] = full[consumed[i] + j];
+                            toks[i * w + j] = mirror_tok(m, consumed[i] + j);
                         }
                     }
                     rt.step(name, &toks, w, cache)?;
@@ -231,16 +253,12 @@ fn drafter_thread(
                     max_need = draftable.iter().map(|&i| need[i]).max().unwrap_or(0);
                 }
                 // chunk_k batched decode steps
-                let mut last: Vec<i32> = (0..bucket)
-                    .map(|i| {
-                        if i < n && draftable.contains(&i) {
-                            let m = &mirrors[i];
-                            *m.ahead.last().or_else(|| m.seq.last()).unwrap()
-                        } else {
-                            pad
-                        }
-                    })
-                    .collect();
+                last.clear();
+                last.resize(bucket, pad);
+                for &i in &draftable {
+                    let m = &mirrors[i];
+                    last[i] = *m.ahead.last().or_else(|| m.seq.last()).unwrap();
+                }
                 for _ in 0..chunk_k {
                     let out = rt.step(name, &last, 1, cache)?;
                     for &i in &draftable {
@@ -268,26 +286,34 @@ fn drafter_thread(
                             td.extend(&m.seq);
                             td.extend(&m.ahead);
                         } else if td.len() < mirror_total {
-                            let full: Vec<i32> =
-                                m.seq.iter().chain(m.ahead.iter()).copied().collect();
-                            let missing = full[td.len()..].to_vec();
-                            td.extend(&missing);
+                            // extend with the missing mirror suffix without
+                            // materialising seq ++ ahead
+                            let start = td.len();
+                            if start < m.seq.len() {
+                                td.extend(&m.seq[start..]);
+                                td.extend(&m.ahead);
+                            } else {
+                                td.extend(&m.ahead[start - m.seq.len()..]);
+                            }
                         }
-                        let mut prop = td.draft(chunk_k);
-                        prop.resize(chunk_k, 0);
-                        proposals[i] = prop;
+                        td.draft_into(chunk_k, &mut proposals[i]);
+                        proposals[i].resize(chunk_k, 0);
                     }
                 }
             }
         }
 
-        // 4. send chunks and update mirrors
+        // 4. update mirrors and send chunks
         for &i in &draftable {
             let m = &mut mirrors[i];
             let base = m.seq.len() + m.ahead.len();
-            let chunk = Chunk { slot: i, base_len: base, tokens: proposals[i].clone() };
             m.window.on_drafted(chunk_k);
             m.ahead.extend_from_slice(&proposals[i]);
+            // the chunk must own its tokens across the channel: hand over
+            // the proposal buffer (one allocation per chunk, regrown next
+            // round) instead of cloning it
+            let chunk =
+                Chunk { slot: i, base_len: base, tokens: std::mem::take(&mut proposals[i]) };
             if tx.send(chunk).is_err() {
                 return Ok(()); // verifier gone
             }
@@ -346,6 +372,9 @@ pub fn rollout_decoupled(
     let t0 = Instant::now();
     let mut rep = EngineReport::default();
     let mut pending: Vec<Option<Chunk>> = (0..n).map(|_| None).collect();
+    // verify-step inputs, reused every round
+    let w = k + 1;
+    let mut vtoks = vec![pad; bucket * w];
 
     let active = |reqs: &Vec<Request>| reqs.iter().filter(|r| !r.done).count();
     while active(requests) > 0 {
@@ -385,14 +414,11 @@ pub fn rollout_decoupled(
         }
 
         // Batched verify of all pending chunks.
-        let w = k + 1;
-        let mut vtoks = vec![pad; bucket * w];
+        vtoks.fill(pad);
         for i in 0..n {
             if let Some(c) = &pending[i] {
                 vtoks[i * w] = *requests[i].seq.last().unwrap();
-                for (j, &t) in c.tokens.iter().enumerate() {
-                    vtoks[i * w + 1 + j] = t;
-                }
+                vtoks[i * w + 1..i * w + 1 + c.tokens.len()].copy_from_slice(&c.tokens);
             }
         }
         let out = rt.step(&target, &vtoks, w, &mut cache)?;
@@ -403,11 +429,10 @@ pub fn rollout_decoupled(
             let Some(c) = pending[i].take() else { continue };
             let seq_len = requests[i].seq.len();
             let id = requests[i].id;
-            let outcome = verify_exact(id, cfg.seed, cfg.temperature, seq_len, &c.tokens, |j| {
-                out.at(i, j).to_vec()
-            });
+            let outcome =
+                verify_exact(id, cfg.seed, cfg.temperature, seq_len, &c.tokens, |j| out.at(i, j));
             let budget_left = requests[i].budget - requests[i].generated();
-            let mut append = outcome.append.clone();
+            let mut append = outcome.append;
             if outcome.full_accept {
                 // Decoupled mode takes no bonus token: the drafter's
                 // pipelined next chunk was drafted without it, and the tape

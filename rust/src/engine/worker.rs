@@ -1,4 +1,11 @@
 //! Batched single-worker engine: vanilla and coupled speculative rollout.
+//!
+//! The decode loop is allocation-lean: all per-round token/draft buffers
+//! live in a [`Scratch`] owned by the worker and are reused across rounds
+//! (see PERF.md §Memory discipline), and verification borrows logits rows
+//! straight out of the runtime's [`StepOut`].
+//!
+//! [`StepOut`]: crate::runtime::StepOut
 
 use std::time::Instant;
 
@@ -110,6 +117,25 @@ impl EngineReport {
     }
 }
 
+/// Reusable decode-loop buffers. Allocated once per worker; every round
+/// borrows them via `std::mem::take` and hands them back, so the steady
+/// state allocates nothing (PERF.md §Memory discipline).
+#[derive(Debug, Default)]
+struct Scratch {
+    /// Target step/verify token inputs `[bucket * w]`.
+    toks: Vec<i32>,
+    /// Draft-model catch-up / decode token inputs `[bucket * w]`.
+    draft_toks: Vec<i32>,
+    /// Per-slot draft proposals (one reused buffer per slot).
+    drafts: Vec<Vec<i32>>,
+    /// Last-token seed per slot for sequential draft decode.
+    last: Vec<i32>,
+    /// Per-slot catch-up token debt (model drafting).
+    need: Vec<usize>,
+    /// Indices of not-done requests (refreshed once per round).
+    active: Vec<usize>,
+}
+
 /// Batched engine worker over one `Runtime`.
 pub struct Worker<'rt> {
     pub rt: &'rt Runtime,
@@ -125,6 +151,7 @@ pub struct Worker<'rt> {
     token_drafters: Vec<Option<Box<dyn TokenDrafter>>>,
     /// Per-slot: number of seq tokens consumed by the draft model cache.
     draft_consumed: Vec<usize>,
+    scratch: Scratch,
     eos: i32,
     pad: i32,
 }
@@ -172,6 +199,7 @@ impl<'rt> Worker<'rt> {
                 ),
             };
 
+        let n = requests.len();
         let mut w = Worker {
             cache: rt.new_cache(&target, bucket)?,
             draft_cache: match &draft_model {
@@ -181,6 +209,10 @@ impl<'rt> Worker<'rt> {
             draft_model,
             token_drafters,
             draft_consumed: vec![0; bucket],
+            scratch: Scratch {
+                drafts: (0..n).map(|_| Vec::new()).collect(),
+                ..Scratch::default()
+            },
             eos: m.eos_id,
             pad: m.pad_id,
             rt,
@@ -195,7 +227,9 @@ impl<'rt> Worker<'rt> {
 
     fn prefill_all(&mut self) -> Result<()> {
         let p = self.rt.manifest.prompt_len;
-        let mut toks = vec![self.pad; self.bucket * p];
+        let mut toks = std::mem::take(&mut self.scratch.toks);
+        toks.clear();
+        toks.resize(self.bucket * p, self.pad);
         for (i, r) in self.requests.iter().enumerate() {
             toks[i * p..(i + 1) * p].copy_from_slice(&r.prompt);
         }
@@ -214,6 +248,7 @@ impl<'rt> Worker<'rt> {
                 *c = p - 1;
             }
         }
+        self.scratch.toks = toks;
         for (i, td) in self.token_drafters.iter_mut().enumerate() {
             if let Some(td) = td {
                 td.reset();
@@ -225,8 +260,16 @@ impl<'rt> Worker<'rt> {
         Ok(())
     }
 
-    fn active(&self) -> Vec<usize> {
-        (0..self.requests.len()).filter(|&i| !self.requests[i].done).collect()
+    /// Recompute the active-slot list into scratch (no allocation in the
+    /// steady state). Returns the number of active slots.
+    fn refresh_active(&mut self) -> usize {
+        self.scratch.active.clear();
+        for (i, r) in self.requests.iter().enumerate() {
+            if !r.done {
+                self.scratch.active.push(i);
+            }
+        }
+        self.scratch.active.len()
     }
 
     fn finish_check(&mut self, slot: usize) {
@@ -240,16 +283,20 @@ impl<'rt> Worker<'rt> {
     pub fn rollout_vanilla(&mut self) -> Result<EngineReport> {
         let t0 = Instant::now();
         let mut rep = EngineReport::default();
-        while !self.active().is_empty() {
+        while self.refresh_active() > 0 {
             // inputs: last token of each slot's sequence (pad for done)
-            let mut toks = vec![self.pad; self.bucket];
+            let mut toks = std::mem::take(&mut self.scratch.toks);
+            toks.clear();
+            toks.resize(self.bucket, self.pad);
             for (i, r) in self.requests.iter().enumerate() {
                 toks[i] = *r.seq.last().unwrap();
             }
             let out = self.rt.step(&self.target, &toks, 1, &mut self.cache)?;
+            self.scratch.toks = toks;
             rep.target_steps += 1;
             rep.iterations += 1;
-            for i in self.active() {
+            for idx in 0..self.scratch.active.len() {
+                let i = self.scratch.active[idx];
                 let r = &self.requests[i];
                 let t = decode_one(r.id, self.cfg.seed, self.cfg.temperature, r.seq.len(), out.at(i, 0));
                 self.requests[i].seq.push(t);
@@ -265,41 +312,50 @@ impl<'rt> Worker<'rt> {
         Ok(rep)
     }
 
-    /// Draft `k` tokens for every active slot.
+    /// Draft `k` tokens for every active slot into `drafts` (per-slot
+    /// reused buffers; active slots end up with exactly `k` tokens).
     ///
     /// Model-based drafting runs `k` batched decode steps on the draft
-    /// model (after a 1-token catch-up step when needed); token drafters
-    /// propose from their history index. Slots whose drafter has no
-    /// proposal fall back to a "self-draft" of the successor guess (pad),
-    /// which simply gets rejected — matching how serving engines handle
-    /// empty lookahead.
-    fn draft_k(&mut self, k: usize, rep: &mut EngineReport) -> Result<Vec<Vec<i32>>> {
+    /// model (after a catch-up step when needed); token drafters propose
+    /// from their history index straight into the slot's buffer. Slots
+    /// whose drafter has no proposal fall back to a "self-draft" of the
+    /// successor guess (pad), which simply gets rejected — matching how
+    /// serving engines handle empty lookahead.
+    fn draft_k(&mut self, k: usize, drafts: &mut [Vec<i32>], rep: &mut EngineReport) -> Result<()> {
+        for d in drafts.iter_mut() {
+            d.clear();
+        }
         let n = self.requests.len();
-        let mut drafts: Vec<Vec<i32>> = vec![Vec::new(); n];
         if let (Some(dm), Some(_)) = (self.draft_model.clone(), self.draft_cache.as_ref()) {
             // 1. catch-up: feed seq tokens the draft cache hasn't consumed,
             //    except the last one (which seeds the first draft step).
-            let mut need = vec![0usize; self.bucket];
+            let mut need = std::mem::take(&mut self.scratch.need);
+            need.clear();
+            need.resize(self.bucket, 0);
             let mut max_need = 0usize;
-            for i in self.active() {
+            for idx in 0..self.scratch.active.len() {
+                let i = self.scratch.active[idx];
                 let want = self.requests[i].seq.len() - 1;
                 need[i] = want.saturating_sub(self.draft_consumed[i]);
                 max_need = max_need.max(need[i]);
             }
+            let mut toks = std::mem::take(&mut self.scratch.draft_toks);
             while max_need > 0 {
                 let w = self.rt.manifest.window_for(max_need)?;
-                let mut toks = vec![self.pad; self.bucket * w];
-                for i in self.active() {
+                toks.clear();
+                toks.resize(self.bucket * w, self.pad);
+                for idx in 0..self.scratch.active.len() {
+                    let i = self.scratch.active[idx];
                     let take = need[i].min(w);
                     let start = self.draft_consumed[i];
-                    for j in 0..take {
-                        toks[i * w + j] = self.requests[i].seq[start + j];
-                    }
+                    toks[i * w..i * w + take]
+                        .copy_from_slice(&self.requests[i].seq[start..start + take]);
                 }
                 let dc = self.draft_cache.as_mut().unwrap();
                 self.rt.step(&dm, &toks, w, dc)?;
                 rep.draft_steps += 1;
-                for i in self.active() {
+                for idx in 0..self.scratch.active.len() {
+                    let i = self.scratch.active[idx];
                     let take = need[i].min(w);
                     self.draft_cache.as_mut().unwrap().lens[i] += take as i32;
                     self.draft_consumed[i] += take;
@@ -308,20 +364,20 @@ impl<'rt> Worker<'rt> {
                 max_need = need.iter().copied().max().unwrap_or(0);
             }
             // 2. k sequential draft decode steps
-            let mut last: Vec<i32> = (0..self.bucket)
-                .map(|i| {
-                    if i < n && !self.requests[i].done {
-                        *self.requests[i].seq.last().unwrap()
-                    } else {
-                        self.pad
-                    }
-                })
-                .collect();
+            let mut last = std::mem::take(&mut self.scratch.last);
+            last.clear();
+            last.resize(self.bucket, self.pad);
+            for i in 0..self.bucket {
+                if i < n && !self.requests[i].done {
+                    last[i] = *self.requests[i].seq.last().unwrap();
+                }
+            }
             for _ in 0..k {
                 let dc = self.draft_cache.as_mut().unwrap();
                 let out = self.rt.step(&dm, &last, 1, dc)?;
                 rep.draft_steps += 1;
-                for i in self.active() {
+                for idx in 0..self.scratch.active.len() {
+                    let i = self.scratch.active[idx];
                     let r = &self.requests[i];
                     let pos = r.seq.len() + drafts[i].len();
                     let mut rng = position_rng(self.cfg.draft_seed, r.id, pos as u64);
@@ -332,47 +388,58 @@ impl<'rt> Worker<'rt> {
                     last[i] = t;
                 }
             }
+            self.scratch.last = last;
+            self.scratch.draft_toks = toks;
+            self.scratch.need = need;
             // draft_consumed now counts speculative tokens too; verification
             // rolls it back to the accepted prefix below.
         } else {
-            for i in self.active() {
+            for idx in 0..self.scratch.active.len() {
+                let i = self.scratch.active[idx];
                 if let Some(td) = &mut self.token_drafters[i] {
-                    drafts[i] = td.draft(k);
+                    td.draft_into(k, &mut drafts[i]);
                 }
                 drafts[i].resize(k, self.pad); // pad empty/short proposals
             }
         }
-        for i in self.active() {
+        for idx in 0..self.scratch.active.len() {
+            let i = self.scratch.active[idx];
             rep.drafted_tokens += drafts[i].len() as u64;
         }
-        Ok(drafts)
+        Ok(())
     }
 
     /// One coupled speculation round for all active slots: draft `k`
     /// tokens, verify with a `k+1`-window target step, apply outcomes.
+    /// Assumes `refresh_active` ran since the last `done` change.
     fn coupled_round(&mut self, k: usize, rep: &mut EngineReport) -> Result<()> {
-        let drafts = self.draft_k(k, rep)?;
+        let mut drafts = std::mem::take(&mut self.scratch.drafts);
+        self.draft_k(k, &mut drafts, rep)?;
         let w = k + 1; // verify window: [last, d0..d_{k-1}]
-        let mut toks = vec![self.pad; self.bucket * w];
-        for i in self.active() {
+        let mut toks = std::mem::take(&mut self.scratch.toks);
+        toks.clear();
+        toks.resize(self.bucket * w, self.pad);
+        for idx in 0..self.scratch.active.len() {
+            let i = self.scratch.active[idx];
             toks[i * w] = *self.requests[i].seq.last().unwrap();
-            for j in 0..k {
-                toks[i * w + 1 + j] = drafts[i][j];
-            }
+            toks[i * w + 1..i * w + 1 + k].copy_from_slice(&drafts[i][..k]);
         }
         let out = self.rt.step(&self.target, &toks, w, &mut self.cache)?;
+        self.scratch.toks = toks;
         rep.target_steps += 1;
         rep.iterations += 1;
 
-        for i in self.active() {
+        for idx in 0..self.scratch.active.len() {
+            let i = self.scratch.active[idx];
             let r = &self.requests[i];
             let budget_left = r.budget - r.generated();
             let seq_len = r.seq.len();
             let id = r.id;
-            let outcome = verify_exact(id, self.cfg.seed, self.cfg.temperature, seq_len, &drafts[i], |j| {
-                out.at(i, j).to_vec()
-            });
-            let mut append = outcome.append.clone();
+            let outcome =
+                verify_exact(id, self.cfg.seed, self.cfg.temperature, seq_len, &drafts[i], |j| {
+                    out.at(i, j)
+                });
+            let mut append = outcome.append;
             append.truncate(budget_left);
             let advanced = append.len();
             let req = &mut self.requests[i];
@@ -409,6 +476,7 @@ impl<'rt> Worker<'rt> {
             }
             self.finish_check(i);
         }
+        self.scratch.drafts = drafts;
         Ok(())
     }
 
@@ -419,7 +487,7 @@ impl<'rt> Worker<'rt> {
         }
         let t0 = Instant::now();
         let mut rep = EngineReport::default();
-        while !self.active().is_empty() {
+        while self.refresh_active() > 0 {
             self.coupled_round(k, &mut rep)?;
         }
         rep.wall_s = t0.elapsed().as_secs_f64();

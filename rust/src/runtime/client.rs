@@ -10,6 +10,12 @@
 //!
 //! The interchange format is HLO **text** — see DESIGN.md and
 //! /opt/xla-example/README.md for why serialized protos don't work.
+//!
+//! KV hand-back follows the manifest's [`KvProtocol`]: under `Window` (the
+//! shipped protocol) executables return only the `[L, b, w, h, dh]` cache
+//! entries written that call and the runtime scatters them into the host
+//! cache, so steady-state device→host KV traffic is O(w) per step instead
+//! of O(max_seq) — see PERF.md.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -21,7 +27,7 @@ use anyhow::{anyhow, bail, Result};
 use xla::FromRawBytes;
 
 use super::kv::KvCache;
-use super::manifest::{ArtifactKey, FnKind, Manifest, ModelInfo};
+use super::manifest::{ArtifactKey, FnKind, KvProtocol, Manifest, ModelInfo};
 
 /// Output of one prefill/step execution.
 #[derive(Clone, Debug)]
@@ -41,14 +47,26 @@ impl StepOut {
     }
 }
 
-/// Cumulative execution counters (perf accounting; see EXPERIMENTS.md §Perf).
+/// Cumulative execution counters (perf accounting; see PERF.md).
 #[derive(Clone, Debug, Default)]
 pub struct RuntimeStats {
     pub compiles: usize,
     pub compile_s: f64,
     pub executions: usize,
     pub execute_s: f64,
+    /// Wall time spent building KV input literals, copying results back to
+    /// host vectors and scattering KV windows into the cache.
     pub host_copy_s: f64,
+    /// KV bytes staged host→device per call (the full cache must travel
+    /// down every step because CPU-PJRT gives us no persistent device-side
+    /// cache buffers — see PERF.md §Incremental-KV protocol).
+    pub kv_h2d_bytes: u64,
+    /// KV bytes copied device→host per call. Under [`KvProtocol::Window`]
+    /// this is O(L·b·w·h·dh) per step — the incremental-KV win — versus
+    /// O(L·b·S·h·dh) under the legacy full-cache protocol.
+    pub kv_d2h_bytes: u64,
+    /// Logits bytes copied device→host per call.
+    pub logits_d2h_bytes: u64,
 }
 
 pub struct Runtime {
@@ -176,8 +194,14 @@ impl Runtime {
         args.push(&tok_lit);
 
         let (logits, k, v) = self.run3(&exe, &args, info, b, 1)?;
-        cache.k = k;
-        cache.v = v;
+        if self.manifest.kv_protocol == KvProtocol::Window {
+            // The executable computed rows 0..P; the host cache may be
+            // reused, so reset it before the scatter (a memset, no alloc).
+            cache.k.fill(0.0);
+            cache.v.fill(0.0);
+            cache.lens.fill(0);
+        }
+        self.apply_kv(cache, k, v, p)?;
         for l in cache.lens.iter_mut() {
             *l = p as i32;
         }
@@ -212,19 +236,55 @@ impl Runtime {
         let t0 = Instant::now();
         let k_lit = Self::lit_f32(&cache.k, &dims)?;
         let v_lit = Self::lit_f32(&cache.v, &dims)?;
-        self.stats.borrow_mut().host_copy_s += t0.elapsed().as_secs_f64();
+        {
+            let mut st = self.stats.borrow_mut();
+            st.host_copy_s += t0.elapsed().as_secs_f64();
+            st.kv_h2d_bytes += cache.bytes() as u64;
+        }
         args.push(&tok_lit);
         args.push(&lens_lit);
         args.push(&k_lit);
         args.push(&v_lit);
 
         let (logits, k, v) = self.run3(&exe, &args, info, b, window)?;
-        cache.k = k;
-        cache.v = v;
+        self.apply_kv(cache, k, v, window)?;
         Ok(StepOut { logits, batch: b, window, vocab: info.vocab })
     }
 
-    /// Execute and unpack the `(logits, k, v)` tuple.
+    /// Fold an execution's KV output back into the host cache according to
+    /// the manifest's [`KvProtocol`].
+    ///
+    /// `Window`: `k`/`v` are the `[L, b, w, h, dh]` entries written this
+    /// call; scatter them at each slot's `lens..lens+w` (two contiguous
+    /// `copy_from_slice` runs per (layer, slot) — see
+    /// [`KvCache::scatter_window`]). `Full`: `k`/`v` are whole caches and
+    /// simply replace the host copies (a move, but the device→host
+    /// transfer behind it was O(max_seq) per step — the cost this protocol
+    /// retires).
+    fn apply_kv(&self, cache: &mut KvCache, k: Vec<f32>, v: Vec<f32>, window: usize) -> Result<()> {
+        let t0 = Instant::now();
+        match self.manifest.kv_protocol {
+            KvProtocol::Full => {
+                if k.len() != cache.elems() || v.len() != cache.elems() {
+                    bail!(
+                        "full kv output len {}/{} != cache elems {}",
+                        k.len(),
+                        v.len(),
+                        cache.elems()
+                    );
+                }
+                cache.k = k;
+                cache.v = v;
+            }
+            KvProtocol::Window => cache.scatter_window(&k, &v, window)?,
+        }
+        self.stats.borrow_mut().host_copy_s += t0.elapsed().as_secs_f64();
+        Ok(())
+    }
+
+    /// Execute and unpack the `(logits, k, v)` tuple. `k`/`v` are returned
+    /// raw (window- or full-cache-sized depending on the manifest's
+    /// protocol); [`Runtime::apply_kv`] validates and applies them.
     fn run3(
         &self,
         exe: &xla::PjRtLoadedExecutable,
@@ -252,7 +312,12 @@ impl Runtime {
         let logits: Vec<f32> = lg.to_vec().map_err(|e| anyhow!("logits to_vec: {e:?}"))?;
         let kk: Vec<f32> = k.to_vec().map_err(|e| anyhow!("k to_vec: {e:?}"))?;
         let vv: Vec<f32> = v.to_vec().map_err(|e| anyhow!("v to_vec: {e:?}"))?;
-        self.stats.borrow_mut().host_copy_s += t1.elapsed().as_secs_f64();
+        {
+            let mut st = self.stats.borrow_mut();
+            st.host_copy_s += t1.elapsed().as_secs_f64();
+            st.logits_d2h_bytes += (logits.len() * std::mem::size_of::<f32>()) as u64;
+            st.kv_d2h_bytes += ((kk.len() + vv.len()) * std::mem::size_of::<f32>()) as u64;
+        }
         let want = batch * window * info.vocab;
         if logits.len() != want {
             bail!("logits len {} != expected {}", logits.len(), want);

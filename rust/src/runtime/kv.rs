@@ -4,7 +4,11 @@
 //! device-side untupling in xla_extension 0.5.1), so caches round-trip
 //! through host memory between steps. The cache layout matches the lowered
 //! executables: `[L, b, S, h, dh]` f32, one tensor for keys and one for
-//! values.
+//! values. Under the incremental-KV protocol ([`scatter_window`] /
+//! `KvProtocol::Window`, see PERF.md) only the entries written by a step
+//! come back from the device; the host cache is the source of truth.
+//!
+//! [`scatter_window`]: KvCache::scatter_window
 //!
 //! `extract_row` / `insert_row` implement per-request cache migration: when
 //! Fastest-of-N deploys an extra verifier for a straggler request, its
@@ -112,6 +116,44 @@ impl KvCache {
         Ok(())
     }
 
+    /// Scatter one step's freshly-written KV entries into the cache
+    /// (incremental-KV protocol, see PERF.md).
+    ///
+    /// `k_win`/`v_win` are row-major `[L, b, w, h, dh]` — the entries the
+    /// executable wrote at each slot's `lens[i]..lens[i]+w`. Both source
+    /// block and destination range are contiguous `w*h*dh` runs, so each
+    /// (layer, slot) pair is a single `copy_from_slice`. `lens` is NOT
+    /// advanced — the engine owns it (rollbacks on rejection reuse the
+    /// same positions, exactly like the on-device scatter did).
+    pub fn scatter_window(&mut self, k_win: &[f32], v_win: &[f32], w: usize) -> Result<()> {
+        let hd = self.n_heads * self.d_head;
+        let ws = w * hd;
+        if k_win.len() != self.n_layers * self.batch * ws || v_win.len() != k_win.len() {
+            bail!(
+                "kv window len {}/{} != L*b*w*h*dh = {}",
+                k_win.len(),
+                v_win.len(),
+                self.n_layers * self.batch * ws
+            );
+        }
+        let rs = self.row_stride();
+        let ls = self.layer_stride();
+        for (slot, &l) in self.lens.iter().enumerate() {
+            if (l as usize) + w > self.max_seq {
+                bail!("slot {slot}: scatter at {l}+{w} exceeds max_seq {}", self.max_seq);
+            }
+        }
+        for l in 0..self.n_layers {
+            for slot in 0..self.batch {
+                let src = (l * self.batch + slot) * ws;
+                let dst = l * ls + slot * rs + self.lens[slot] as usize * hd;
+                self.k[dst..dst + ws].copy_from_slice(&k_win[src..src + ws]);
+                self.v[dst..dst + ws].copy_from_slice(&v_win[src..src + ws]);
+            }
+        }
+        Ok(())
+    }
+
     /// Clear one slot (request finished; slot becomes inactive padding).
     pub fn clear_row(&mut self, slot: usize) {
         let rs = self.row_stride();
@@ -208,5 +250,68 @@ mod tests {
     fn bytes_accounting() {
         let c = KvCache::new(2, 3, 4, 1, 2);
         assert_eq!(c.bytes(), 2 * 2 * 3 * 4 * 1 * 2 * 4);
+    }
+
+    #[test]
+    fn scatter_window_writes_at_lens() {
+        // L=2, b=3, S=4, h=1, dh=2; scatter w=2 entries per slot.
+        let mut c = KvCache::new(2, 3, 4, 1, 2);
+        c.lens = vec![0, 1, 2];
+        let ws = 4; // w * h * dh = 2 * 1 * 2
+        let n = 2 * 3 * ws; // L * b * ws
+        let k_win: Vec<f32> = (0..n).map(|i| 1000.0 + i as f32).collect();
+        let v_win: Vec<f32> = (0..n).map(|i| -(1000.0 + i as f32)).collect();
+        c.scatter_window(&k_win, &v_win, 2).unwrap();
+        let rs = 8; // S * h * dh = 4 * 1 * 2
+        let ls = 3 * rs;
+        for l in 0..2usize {
+            for slot in 0..3usize {
+                let src = (l * 3 + slot) * ws;
+                let dst = l * ls + slot * rs + c.lens[slot] as usize * 2;
+                assert_eq!(&c.k[dst..dst + ws], &k_win[src..src + ws], "k l={l} slot={slot}");
+                assert_eq!(&c.v[dst..dst + ws], &v_win[src..src + ws], "v l={l} slot={slot}");
+            }
+        }
+        // untouched positions stay zero (slot 0 wrote rows 0..2 of 4)
+        assert!(c.k[ws..rs].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn scatter_window_equals_full_replacement() {
+        // Scattering the window into a copy of the pre-step cache must
+        // reproduce exactly what the full-cache protocol would hand back.
+        let pre = filled_cache(); // lens = [1, 2, 3], S = 4
+        let mut full = pre.clone();
+        // simulate the device-side dynamic_update_slice for w=1
+        let w = 1;
+        let hd = 2; // h * dh
+        let ws = w * hd;
+        let k_win: Vec<f32> = (0..2 * 3 * ws).map(|i| 7.5 + i as f32).collect();
+        let v_win: Vec<f32> = k_win.iter().map(|x| -x).collect();
+        let rs = 4 * hd;
+        let ls = 3 * rs;
+        for l in 0..2usize {
+            for slot in 0..3usize {
+                let src = (l * 3 + slot) * ws;
+                let dst = l * ls + slot * rs + pre.lens[slot] as usize * hd;
+                full.k[dst..dst + ws].copy_from_slice(&k_win[src..src + ws]);
+                full.v[dst..dst + ws].copy_from_slice(&v_win[src..src + ws]);
+            }
+        }
+        let mut inc = pre.clone();
+        inc.scatter_window(&k_win, &v_win, w).unwrap();
+        assert_eq!(inc.k, full.k);
+        assert_eq!(inc.v, full.v);
+    }
+
+    #[test]
+    fn scatter_window_rejects_bad_geometry() {
+        let mut c = KvCache::new(2, 3, 4, 1, 2);
+        let ok = vec![0.0f32; 2 * 3 * 2]; // w=1
+        assert!(c.scatter_window(&ok, &ok[..4], 1).is_err()); // v too short
+        assert!(c.scatter_window(&ok, &ok, 2).is_err()); // len != L*b*w*h*dh
+        c.lens = vec![3, 0, 0];
+        let win2 = vec![0.0f32; 2 * 3 * 2 * 2];
+        assert!(c.scatter_window(&win2, &win2, 2).is_err()); // 3+2 > S=4
     }
 }

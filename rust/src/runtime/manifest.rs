@@ -31,6 +31,32 @@ impl FnKind {
     }
 }
 
+/// How the lowered executables hand KV state back to the host.
+///
+/// `Window` is the incremental-KV protocol (PERF.md): step/prefill return
+/// only the `[L, b, w, h, dh]` entries written this call and the runtime
+/// scatters them into the host cache at each slot's `lens..lens+w`, so the
+/// device→host KV traffic is O(w) per step instead of O(max_seq). `Full`
+/// is the legacy whole-cache return, kept so old artifact sets still load.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KvProtocol {
+    /// Executables return full `[L, b, S, h, dh]` caches.
+    #[default]
+    Full,
+    /// Executables return only the written `[L, b, w, h, dh]` window.
+    Window,
+}
+
+impl KvProtocol {
+    pub fn parse(s: &str) -> Result<KvProtocol> {
+        match s {
+            "full" => Ok(KvProtocol::Full),
+            "window" => Ok(KvProtocol::Window),
+            other => bail!("unknown kv_protocol {other:?}"),
+        }
+    }
+}
+
 /// Key identifying one executable.
 #[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct ArtifactKey {
@@ -77,6 +103,9 @@ impl ModelInfo {
 #[derive(Clone, Debug)]
 pub struct Manifest {
     pub dir: PathBuf,
+    /// KV hand-back protocol the artifacts were lowered with (absent in
+    /// pre-v2 manifests, which implies [`KvProtocol::Full`]).
+    pub kv_protocol: KvProtocol,
     pub eos_id: i32,
     pub pad_id: i32,
     pub reserved: i32,
@@ -167,8 +196,14 @@ impl Manifest {
             .map(|x| x.as_str().unwrap_or_default().to_string())
             .collect();
 
+        let kv_protocol = match j.get("kv_protocol").as_str() {
+            Some(s) => KvProtocol::parse(s)?,
+            None => KvProtocol::Full,
+        };
+
         Ok(Manifest {
             dir: dir.to_path_buf(),
+            kv_protocol,
             eos_id: get_usize(&j, "eos_id")? as i32,
             pad_id: get_usize(&j, "pad_id")? as i32,
             reserved: get_usize(&j, "reserved")? as i32,
@@ -240,6 +275,15 @@ mod tests {
         assert_eq!(FnKind::parse("prefill").unwrap(), FnKind::Prefill);
         assert_eq!(FnKind::parse("step").unwrap(), FnKind::Step);
         assert!(FnKind::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn kv_protocol_parse_and_default() {
+        assert_eq!(KvProtocol::parse("full").unwrap(), KvProtocol::Full);
+        assert_eq!(KvProtocol::parse("window").unwrap(), KvProtocol::Window);
+        assert!(KvProtocol::parse("bogus").is_err());
+        // pre-v2 manifests (no kv_protocol key) must imply Full
+        assert_eq!(KvProtocol::default(), KvProtocol::Full);
     }
 
     #[test]

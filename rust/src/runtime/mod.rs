@@ -7,6 +7,6 @@ pub mod client;
 pub mod kv;
 pub mod manifest;
 
-pub use client::{Runtime, StepOut};
+pub use client::{Runtime, RuntimeStats, StepOut};
 pub use kv::{KvCache, KvRow};
-pub use manifest::{ArtifactKey, FnKind, Manifest, ModelInfo};
+pub use manifest::{ArtifactKey, FnKind, KvProtocol, Manifest, ModelInfo};

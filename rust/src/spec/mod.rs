@@ -39,10 +39,16 @@ pub struct VerifyOutcome {
 /// `[last_accepted, drafts[0], ..., drafts[w-2]]` — i.e. `logits(j)` is the
 /// distribution for sequence position `seq_len + j`.
 ///
+/// The closure returns a *borrowed* slice (typically straight out of a
+/// [`StepOut`]'s logits buffer) so verification copies nothing — the
+/// engines call this once per slot per round on the hot path.
+///
 /// `seq_len` is the request's current sequence length (prompt + accepted),
 /// so the token being sampled at window offset `j` has tape position
 /// `seq_len + j`.
-pub fn verify_exact<F>(
+///
+/// [`StepOut`]: crate::runtime::StepOut
+pub fn verify_exact<'l, F>(
     req: u64,
     seed: u64,
     temp: f32,
@@ -51,14 +57,14 @@ pub fn verify_exact<F>(
     mut logits: F,
 ) -> VerifyOutcome
 where
-    F: FnMut(usize) -> Vec<f32>,
+    F: FnMut(usize) -> &'l [f32],
 {
     let w = drafts.len();
     let mut append = Vec::with_capacity(w + 1);
     for (j, &d) in drafts.iter().enumerate() {
         let lg = logits(j);
         let mut rng = position_rng(seed, req, (seq_len + j) as u64);
-        let t = sample_logits(&lg, temp, &mut rng) as i32;
+        let t = sample_logits(lg, temp, &mut rng) as i32;
         if t == d {
             append.push(d);
         } else {
@@ -75,7 +81,7 @@ where
     // Full accept: bonus token from the last position's logits.
     let lg = logits(w);
     let mut rng = position_rng(seed, req, (seq_len + w) as u64);
-    let bonus = sample_logits(&lg, temp, &mut rng) as i32;
+    let bonus = sample_logits(lg, temp, &mut rng) as i32;
     append.push(bonus);
     VerifyOutcome { accepted: w, append, wasted: 0, full_accept: true }
 }
@@ -138,12 +144,19 @@ mod tests {
         lg
     }
 
+    /// Precomputed logits rows for window offsets `0..=w` (the borrowed
+    /// closure contract mirrors how engines lend `StepOut` rows).
+    fn synth_rows(req: u64, seq_len: usize, w: usize, vocab: usize) -> Vec<Vec<f32>> {
+        (0..=w).map(|j| synth_logits(req, seq_len + j, vocab)).collect()
+    }
+
     #[test]
     fn all_accept_with_perfect_drafts() {
         let vocab = 64;
         let seq_len = 10;
         let drafts: Vec<i32> = (0..4).map(|j| ((seq_len + j) * 7) as i32 % vocab as i32).collect();
-        let out = verify_exact(0, 1, 1.0, seq_len, &drafts, |j| synth_logits(0, seq_len + j, vocab));
+        let rows = synth_rows(0, seq_len, 4, vocab);
+        let out = verify_exact(0, 1, 1.0, seq_len, &drafts, |j| rows[j].as_slice());
         assert!(out.full_accept);
         assert_eq!(out.accepted, 4);
         assert_eq!(out.append.len(), 5); // 4 drafts + bonus
@@ -161,7 +174,8 @@ mod tests {
             .map(|j| ((seq_len + j) * 7 + req as usize) as i32 % vocab as i32)
             .collect();
         drafts[2] = (drafts[2] + 1) % vocab as i32; // corrupt 3rd draft
-        let out = verify_exact(req, 1, 1.0, seq_len, &drafts, |j| synth_logits(req, seq_len + j, vocab));
+        let rows = synth_rows(req, seq_len, 4, vocab);
+        let out = verify_exact(req, 1, 1.0, seq_len, &drafts, |j| rows[j].as_slice());
         assert!(!out.full_accept);
         assert_eq!(out.accepted, 2);
         assert_eq!(out.wasted, 2);
@@ -206,9 +220,8 @@ mod tests {
                 })
                 .collect();
             let base = spec.len();
-            let out = verify_exact(req, seed, 1.0, base, &drafts, |j| {
-                synth_logits(req, base + j, vocab)
-            });
+            let rows = synth_rows(req, base, w, vocab);
+            let out = verify_exact(req, seed, 1.0, base, &drafts, |j| rows[j].as_slice());
             spec.extend_from_slice(&out.append);
         }
         spec.truncate(horizon);
@@ -224,9 +237,8 @@ mod tests {
             let req = g.usize_in(0, 10) as u64;
             let drafts: Vec<i32> =
                 (0..w).map(|_| g.usize_in(0, vocab) as i32).collect();
-            let out = verify_exact(req, 7, 1.0, seq_len, &drafts, |j| {
-                synth_logits(req, seq_len + j, vocab)
-            });
+            let rows = synth_rows(req, seq_len, w, vocab);
+            let out = verify_exact(req, 7, 1.0, seq_len, &drafts, |j| rows[j].as_slice());
             prop_assert!(out.accepted <= w, "accepted {} > w {}", out.accepted, w);
             prop_assert!(
                 out.append.len() == out.accepted + 1,

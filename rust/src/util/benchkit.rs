@@ -2,12 +2,15 @@
 //!
 //! Each `[[bench]]` target is a `harness = false` binary that uses
 //! [`Bench`] to time closures with warmup, then prints a fixed-width table
-//! plus an optional machine-readable JSON line per row. The figure benches
-//! (`rust/benches/fig*.rs`) use it to print the same rows/series the paper
-//! reports.
+//! plus optional machine-readable JSON ([`Bench::write_json`], the
+//! `BENCH_*.json` convention) so the perf trajectory can be tracked across
+//! PRs. The figure benches (`rust/benches/fig*.rs`) use it to print the
+//! same rows/series the paper reports.
 
+use std::path::Path;
 use std::time::Instant;
 
+use crate::util::json::Json;
 use crate::util::stats;
 
 /// One measured series.
@@ -19,6 +22,21 @@ pub struct Measurement {
     pub median_s: f64,
     pub p95_s: f64,
     pub min_s: f64,
+}
+
+impl Measurement {
+    /// Row as a JSON object (for `BENCH_*.json` reports). Callers may
+    /// merge extra per-row fields into the returned object.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("iters", Json::num(self.iters as f64)),
+            ("mean_s", Json::num(self.mean_s)),
+            ("median_s", Json::num(self.median_s)),
+            ("p95_s", Json::num(self.p95_s)),
+            ("min_s", Json::num(self.min_s)),
+        ])
+    }
 }
 
 pub struct Bench {
@@ -75,6 +93,39 @@ impl Bench {
         };
         self.results.push(m.clone());
         m
+    }
+
+    /// All results as a JSON report object: `{"title", "rows": [...]}`.
+    /// `extra` rows are merged per-index into the corresponding result row
+    /// (e.g. host-copy byte counters recorded alongside each series); an
+    /// `extra` shorter than `results` leaves the tail rows untouched.
+    pub fn to_json(&self, title: &str, extra: &[Vec<(&str, Json)>]) -> Json {
+        let rows: Vec<Json> = self
+            .results
+            .iter()
+            .enumerate()
+            .map(|(i, m)| {
+                let mut row = m.to_json();
+                if let (Some(fields), Json::Obj(map)) = (extra.get(i), &mut row) {
+                    for (k, v) in fields {
+                        map.insert(k.to_string(), v.clone());
+                    }
+                }
+                row
+            })
+            .collect();
+        Json::obj(vec![("title", Json::str(title)), ("rows", Json::arr(rows))])
+    }
+
+    /// Write the report to `path` as one JSON document (the `BENCH_*.json`
+    /// convention; see PERF.md §Tracking the trajectory).
+    pub fn write_json(
+        &self,
+        path: &Path,
+        title: &str,
+        extra: &[Vec<(&str, Json)>],
+    ) -> std::io::Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json(title, extra)))
     }
 
     pub fn print_table(&self, title: &str) {
@@ -139,5 +190,25 @@ mod tests {
         assert_eq!(fmt_s(0.002), "2.00ms");
         assert_eq!(fmt_s(2e-6), "2.00us");
         assert_eq!(fmt_s(5e-9), "5ns");
+    }
+
+    #[test]
+    fn json_report_roundtrips_with_extra_fields() {
+        let mut b = Bench::default();
+        b.record("cfg-a", 1.5);
+        b.record("cfg-b", 0.5);
+        let extra = vec![vec![("kv_d2h_bytes", Json::num(4096.0))]];
+        let j = b.to_json("hotpath", &extra);
+        assert_eq!(j.get("title").as_str(), Some("hotpath"));
+        let rows = j.get("rows").as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("name").as_str(), Some("cfg-a"));
+        assert_eq!(rows[0].get("mean_s").as_f64(), Some(1.5));
+        assert_eq!(rows[0].get("kv_d2h_bytes").as_f64(), Some(4096.0));
+        // extra shorter than results: tail row has no merged field
+        assert_eq!(rows[1].get("kv_d2h_bytes"), &Json::Null);
+        // printed document parses back
+        let reparsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(reparsed, j);
     }
 }

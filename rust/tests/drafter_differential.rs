@@ -1,0 +1,273 @@
+//! Differential tests for the arena-based drafters (PERF.md §Memory
+//! discipline): the compact-representation `SamDrafter` / `NgramDrafter`
+//! must produce **token-identical** drafts to naive reference
+//! implementations on random token streams, under arbitrary
+//! extend/draft interleavings.
+//!
+//! * The SAM reference is the textbook suffix automaton with a
+//!   `HashMap<i32, u32>` transition table per state (the representation
+//!   the arena replaced) — same construction, same cursor, same
+//!   first-occurrence end-position bookkeeping.
+//! * The n-gram reference is a brute-force longest-suffix-match scan over
+//!   the raw history (no index at all).
+
+use std::collections::HashMap;
+
+use specactor::drafter::{NgramDrafter, SamDrafter, TokenDrafter};
+use specactor::util::proptest_lite::{check, Gen};
+
+// ---------------------------------------------------------------------------
+// Naive SAM reference (HashMap transitions, allocating draft).
+// ---------------------------------------------------------------------------
+
+#[derive(Clone)]
+struct RefState {
+    len: usize,
+    link: i32,
+    next: HashMap<i32, u32>,
+    end_pos: usize,
+}
+
+struct RefSam {
+    states: Vec<RefState>,
+    last: u32,
+    history: Vec<i32>,
+    cur_state: u32,
+    cur_len: usize,
+    max_draft: usize,
+}
+
+impl RefSam {
+    fn new(max_draft: usize) -> Self {
+        RefSam {
+            states: vec![RefState { len: 0, link: -1, next: HashMap::new(), end_pos: 0 }],
+            last: 0,
+            history: Vec::new(),
+            cur_state: 0,
+            cur_len: 0,
+            max_draft,
+        }
+    }
+
+    fn add_token(&mut self, c: i32) {
+        let cur = self.states.len() as u32;
+        let end_pos = self.history.len() + 1;
+        self.states.push(RefState {
+            len: self.states[self.last as usize].len + 1,
+            link: 0,
+            next: HashMap::new(),
+            end_pos,
+        });
+        let mut p = self.last as i32;
+        while p >= 0 && !self.states[p as usize].next.contains_key(&c) {
+            self.states[p as usize].next.insert(c, cur);
+            p = self.states[p as usize].link;
+        }
+        if p == -1 {
+            self.states[cur as usize].link = 0;
+        } else {
+            let q = self.states[p as usize].next[&c];
+            if self.states[p as usize].len + 1 == self.states[q as usize].len {
+                self.states[cur as usize].link = q as i32;
+            } else {
+                let clone = self.states.len() as u32;
+                let mut cl = self.states[q as usize].clone();
+                cl.len = self.states[p as usize].len + 1;
+                self.states.push(cl);
+                while p >= 0 && self.states[p as usize].next.get(&c) == Some(&q) {
+                    self.states[p as usize].next.insert(c, clone);
+                    p = self.states[p as usize].link;
+                }
+                self.states[q as usize].link = clone as i32;
+                self.states[cur as usize].link = clone as i32;
+            }
+        }
+        self.last = cur;
+        self.history.push(c);
+    }
+
+    fn advance_cursor(&mut self, c: i32) {
+        loop {
+            if let Some(&nxt) = self.states[self.cur_state as usize].next.get(&c) {
+                self.cur_state = nxt;
+                self.cur_len += 1;
+                let sl = self.states[self.cur_state as usize].len;
+                if self.cur_len > sl {
+                    self.cur_len = sl;
+                }
+                return;
+            }
+            let link = self.states[self.cur_state as usize].link;
+            if link < 0 {
+                self.cur_state = 0;
+                self.cur_len = 0;
+                return;
+            }
+            self.cur_state = link as u32;
+            self.cur_len = self.states[self.cur_state as usize].len;
+        }
+    }
+
+    fn extend(&mut self, tokens: &[i32]) {
+        for &t in tokens {
+            self.advance_cursor(t);
+            self.add_token(t);
+        }
+    }
+
+    fn draft(&self, n_tokens: usize) -> Vec<i32> {
+        if self.cur_len == 0 || self.history.is_empty() {
+            return Vec::new();
+        }
+        let end = self.states[self.cur_state as usize].end_pos;
+        if end >= self.history.len() {
+            return Vec::new();
+        }
+        let take = n_tokens.min(self.max_draft).min(self.history.len() - end);
+        self.history[end..end + take].to_vec()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Brute-force n-gram reference (no index: scan the history).
+// ---------------------------------------------------------------------------
+
+fn ngram_ref_draft(history: &[i32], max_n: usize, n_tokens: usize) -> Vec<i32> {
+    let len = history.len();
+    if len == 0 || n_tokens == 0 {
+        return Vec::new();
+    }
+    // longest gram first; within a gram order, the most recent occurrence
+    // strictly before the tail wins
+    for n in (1..=max_n.min(len)).rev() {
+        let suffix = &history[len - n..len];
+        for e in (n..len).rev() {
+            if &history[e - n..e] == suffix {
+                let take = n_tokens.min(len - e);
+                return history[e..e + take].to_vec();
+            }
+        }
+    }
+    Vec::new()
+}
+
+// ---------------------------------------------------------------------------
+// Shared stream driver: random extend/draft interleavings.
+// ---------------------------------------------------------------------------
+
+/// Random token stream cut into random-sized chunks; after each chunk both
+/// implementations must agree on drafts of several sizes.
+fn stream_chunks(g: &mut Gen) -> (Vec<i32>, Vec<usize>) {
+    let alpha = 2 + g.usize_in(0, 5); // small alphabets force SAM clones
+    let len = 10 + g.usize_in(0, 120);
+    let toks: Vec<i32> = (0..len).map(|_| g.usize_in(0, alpha) as i32).collect();
+    let mut cuts = Vec::new();
+    let mut at = 0;
+    while at < len {
+        let step = 1 + g.usize_in(0, 7);
+        at = (at + step).min(len);
+        cuts.push(at);
+    }
+    (toks, cuts)
+}
+
+#[test]
+fn sam_arena_matches_hashmap_reference() {
+    check("sam-arena-differential", 150, |g| {
+        let (toks, cuts) = stream_chunks(g);
+        let mut arena = SamDrafter::new(8);
+        let mut naive = RefSam::new(8);
+        let mut prev = 0;
+        let mut buf = Vec::new();
+        for &cut in &cuts {
+            arena.extend(&toks[prev..cut]);
+            naive.extend(&toks[prev..cut]);
+            prev = cut;
+            for n in [1usize, 3, 8, 17] {
+                arena.draft_into(n, &mut buf);
+                let want = naive.draft(n);
+                if buf != want {
+                    return Err(format!(
+                        "after {cut} tokens, draft({n}): arena {buf:?} != reference {want:?} (history {:?})",
+                        &toks[..cut]
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sam_arena_matches_reference_after_reset() {
+    check("sam-arena-reset-differential", 40, |g| {
+        let (toks, _) = stream_chunks(g);
+        let half = toks.len() / 2;
+        let mut arena = SamDrafter::new(8);
+        arena.extend(&toks[..half]);
+        arena.reset();
+        arena.extend(&toks[half..]);
+        let mut naive = RefSam::new(8);
+        naive.extend(&toks[half..]);
+        let got = arena.draft(6);
+        let want = naive.draft(6);
+        if got != want {
+            return Err(format!("post-reset drafts diverged: {got:?} != {want:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn ngram_table_matches_bruteforce_reference() {
+    check("ngram-differential", 150, |g| {
+        let (toks, cuts) = stream_chunks(g);
+        let max_n = 1 + g.usize_in(0, 3);
+        let mut fast = NgramDrafter::new(max_n);
+        let mut prev = 0;
+        let mut buf = Vec::new();
+        for &cut in &cuts {
+            fast.extend(&toks[prev..cut]);
+            prev = cut;
+            for n in [1usize, 2, 5] {
+                fast.draft_into(n, &mut buf);
+                let want = ngram_ref_draft(&toks[..cut], max_n, n);
+                if buf != want {
+                    return Err(format!(
+                        "after {cut} tokens, max_n={max_n} draft({n}): table {buf:?} != reference {want:?} (history {:?})",
+                        &toks[..cut]
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn drafters_agree_on_degenerate_streams() {
+    // Constant and strictly-periodic streams hit the SAM clone path and
+    // the n-gram self-index edge case hardest.
+    for toks in [
+        vec![1; 40],
+        (0..60).map(|i| i % 2).collect::<Vec<i32>>(),
+        (0..60).map(|i| i % 7).collect::<Vec<i32>>(),
+    ] {
+        let mut arena = SamDrafter::new(16);
+        let mut naive = RefSam::new(16);
+        arena.extend(&toks);
+        naive.extend(&toks);
+        for n in 1..=16 {
+            assert_eq!(arena.draft(n), naive.draft(n), "sam n={n} toks={toks:?}");
+        }
+        let mut fast = NgramDrafter::new(3);
+        fast.extend(&toks);
+        for n in 1..=8 {
+            assert_eq!(
+                fast.draft(n),
+                ngram_ref_draft(&toks, 3, n),
+                "ngram n={n} toks={toks:?}"
+            );
+        }
+    }
+}
