@@ -1,0 +1,100 @@
+//! Continuous-batching serve demo: open-loop Poisson arrivals against the
+//! real PJRT engine (falls back to the deterministic synthetic engine when
+//! artifacts are missing, so the demo always runs).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_demo -- --rate 20 --requests 12
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+use specactor::drafter::DraftMethod;
+use specactor::engine::{EngineConfig, Request, SpecMode, Worker};
+use specactor::planner::costmodel::CostModel;
+use specactor::runtime::Runtime;
+use specactor::serve::{
+    drive_open_loop, Batcher, Priority, Replanner, ServeEngine, SyntheticEngine,
+};
+use specactor::sim::{ArrivalProcess, TraceConfig};
+use specactor::util::benchkit::fmt_s;
+use specactor::util::cli::Args;
+use specactor::util::Rng;
+
+/// Paper-profiled per-method acceptance (shared with the simulator).
+fn profiled() -> Vec<(String, f64)> {
+    TraceConfig::grpo_32b_20k().profiled_acceptance()
+}
+
+fn summarize<E: ServeEngine>(label: &str, b: &Batcher<E>, elapsed_s: f64) {
+    println!(
+        "{label}: {} completed, {} tokens, {:.1} tok/s sustained",
+        b.metrics.completed,
+        b.metrics.tokens,
+        b.metrics.tokens_per_second(elapsed_s)
+    );
+    println!(
+        "  occupancy mean {:.2} peak {}  latency p50 {} p99 {}  replans {} (plan: {} w={})",
+        b.metrics.mean_occupancy(),
+        b.slots.high_water,
+        fmt_s(b.metrics.latency_p50_s()),
+        fmt_s(b.metrics.latency_p99_s()),
+        b.metrics.replans,
+        b.replan.plan.method,
+        b.replan.plan.window
+    );
+}
+
+fn main() -> Result<()> {
+    let mut args = Args::from_env().map_err(anyhow::Error::msg)?;
+    let art = PathBuf::from(args.opt("artifacts", "artifacts"));
+    let n = args.opt_parse("requests", 12usize);
+    let budget = args.opt_parse("budget", 20usize);
+    let rate = args.opt_parse("rate", 20.0f64);
+    let capacity = args.opt_parse("capacity", 4usize);
+    let seed = args.opt_parse("seed", 7u64);
+    args.finish().map_err(anyhow::Error::msg)?;
+
+    let mut rng = Rng::new(seed);
+    let times = ArrivalProcess::Poisson { rate }.sample(n, &mut rng);
+
+    match Runtime::load(&art) {
+        Ok(rt) => {
+            let m = rt.manifest.clone();
+            let info = rt.model(&m.target)?;
+            let budget = budget.min(info.max_seq - m.prompt_len - 2);
+            let arrivals: Vec<(f64, Request, Priority)> = times
+                .iter()
+                .enumerate()
+                .map(|(i, &t)| {
+                    let prompt = m.synth_prompt(i as u64).unwrap();
+                    (t, Request::new(i as u64, prompt, budget), Priority::Batch)
+                })
+                .collect();
+            let cfg = EngineConfig {
+                mode: SpecMode::Coupled { window: 3 },
+                drafter: DraftMethod::Sam,
+                ..Default::default()
+            };
+            let worker = Worker::with_capacity(&rt, cfg, capacity)?;
+            let replan =
+                Replanner::for_manifest(&m, CostModel::paper_32b(), profiled(), 7);
+            let mut b = Batcher::new(worker, 4 * n.max(1), replan, true);
+            let rep = drive_open_loop(&mut b, arrivals, None)?;
+            summarize("serve (pjrt engine)", &b, rep.elapsed_s);
+        }
+        Err(e) => {
+            println!("artifacts missing ({e}); running the synthetic engine instead");
+            let arrivals: Vec<(f64, Request, Priority)> = times
+                .iter()
+                .enumerate()
+                .map(|(i, &t)| (t, Request::new(i as u64, vec![0; 8], budget), Priority::Batch))
+                .collect();
+            let engine = SyntheticEngine::new(capacity.max(1), seed);
+            let mut b = Batcher::new(engine, 4 * n.max(1), Replanner::synthetic(), true);
+            let rep = drive_open_loop(&mut b, arrivals, Some(1.0e-3))?;
+            summarize("serve (synthetic engine)", &b, rep.elapsed_s);
+        }
+    }
+    Ok(())
+}

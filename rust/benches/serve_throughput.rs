@@ -1,0 +1,149 @@
+//! Serve-loop throughput/latency benchmark: sustained tokens/s, p50/p99
+//! request latency and mean occupancy under Poisson and bursty open-loop
+//! arrivals, written to `BENCH_serve.json` (the `BENCH_*.json` trajectory
+//! convention, see PERF.md).
+//!
+//! Runs the real PJRT engine when `artifacts/` is present; otherwise it
+//! falls back to the deterministic synthetic engine (virtual 1 ms rounds)
+//! so the serving-logic numbers — queueing, occupancy, replans — are
+//! still tracked in environments without lowered artifacts.
+
+use std::path::{Path, PathBuf};
+
+use specactor::drafter::DraftMethod;
+use specactor::engine::{EngineConfig, Request, SpecMode, Worker};
+use specactor::planner::costmodel::CostModel;
+use specactor::runtime::Runtime;
+use specactor::serve::{
+    drive_open_loop, Batcher, Priority, Replanner, ServeEngine, SyntheticEngine,
+};
+use specactor::sim::{ArrivalProcess, TraceConfig};
+use specactor::util::benchkit::Bench;
+use specactor::util::cli::Args;
+use specactor::util::{Json, Rng};
+
+/// Paper-profiled per-method acceptance (shared with the simulator).
+fn profiled() -> Vec<(String, f64)> {
+    TraceConfig::grpo_32b_20k().profiled_acceptance()
+}
+
+struct RunResult {
+    elapsed_s: f64,
+    row: Vec<(&'static str, Json)>,
+}
+
+fn run_one<E: ServeEngine>(
+    mut b: Batcher<E>,
+    arrivals: Vec<(f64, Request, Priority)>,
+    dt: Option<f64>,
+    engine_label: &str,
+) -> RunResult {
+    let rep = drive_open_loop(&mut b, arrivals, dt).expect("serve run failed");
+    let m = &b.metrics;
+    let row = vec![
+        ("engine", Json::str(engine_label)),
+        ("tokens_per_s", Json::num(m.tokens_per_second(rep.elapsed_s))),
+        ("latency_p50_s", Json::num(m.latency_p50_s())),
+        ("latency_p99_s", Json::num(m.latency_p99_s())),
+        ("mean_queue_wait_s", Json::num(m.mean_queue_wait_s())),
+        ("mean_occupancy", Json::num(m.mean_occupancy())),
+        ("peak_occupancy", Json::num(b.slots.high_water as f64)),
+        ("completed", Json::num(m.completed as f64)),
+        ("rejected", Json::num(rep.rejected as f64)),
+        ("replans", Json::num(m.replans as f64)),
+        ("ticks", Json::num(rep.ticks as f64)),
+    ];
+    RunResult { elapsed_s: rep.elapsed_s, row }
+}
+
+fn main() {
+    let mut args = Args::from_env().unwrap();
+    let n = args.opt_parse("requests", 24usize);
+    let budget = args.opt_parse("budget", 16usize);
+    let rate = args.opt_parse("rate", 10.0f64);
+    let capacity = args.opt_parse("capacity", 4usize);
+    let seed = args.opt_parse("seed", 7u64);
+    let json_out = args.opt("json-out", "BENCH_serve.json");
+    args.finish().unwrap();
+
+    // bursty_with_mean keeps the long-run offered load equal to poisson's,
+    // so the two rows differ only in arrival burstiness
+    let processes = [ArrivalProcess::Poisson { rate }, ArrivalProcess::bursty_with_mean(rate)];
+
+    let rt = Runtime::load(Path::new("artifacts")).ok();
+    let mut bench = Bench::new(0, 1);
+    let mut extra: Vec<Vec<(&str, Json)>> = Vec::new();
+
+    for proc_ in &processes {
+        let mut rng = Rng::new(seed);
+        let times = proc_.sample(n, &mut rng);
+        let name = format!("serve {} rate={rate} n={n} cap={capacity}", proc_.label());
+        let result = match &rt {
+            Some(rt) => {
+                let m = rt.manifest.clone();
+                let info = rt.model(&m.target).unwrap();
+                let budget = budget.min(info.max_seq - m.prompt_len - 2);
+                let arrivals: Vec<(f64, Request, Priority)> = times
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &t)| {
+                        let prompt = m.synth_prompt(i as u64).unwrap();
+                        (t, Request::new(i as u64, prompt, budget), Priority::Batch)
+                    })
+                    .collect();
+                let cfg = EngineConfig {
+                    mode: SpecMode::Coupled { window: 3 },
+                    drafter: DraftMethod::Sam,
+                    ..Default::default()
+                };
+                let worker = Worker::with_capacity(rt, cfg, capacity).unwrap();
+                let replan =
+                    Replanner::for_manifest(&m, CostModel::paper_32b(), profiled(), 7);
+                let b = Batcher::new(worker, 4 * n, replan, true);
+                run_one(b, arrivals, None, "pjrt")
+            }
+            None => {
+                let arrivals: Vec<(f64, Request, Priority)> = times
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &t)| (t, Request::new(i as u64, vec![0; 8], budget), Priority::Batch))
+                    .collect();
+                let b = Batcher::new(
+                    SyntheticEngine::new(capacity.max(1), seed),
+                    4 * n,
+                    Replanner::synthetic(),
+                    true,
+                );
+                run_one(b, arrivals, Some(1.0e-3), "synthetic")
+            }
+        };
+        bench.record(&name, result.elapsed_s);
+        extra.push(result.row);
+    }
+
+    if rt.is_none() {
+        println!("artifacts missing; measured the synthetic serve engine instead");
+    }
+    bench.print_table("serve throughput (continuous batching, open-loop arrivals)");
+    for row in &extra {
+        let get = |k: &str| {
+            row.iter().find(|(n, _)| *n == k).and_then(|(_, v)| v.as_f64()).unwrap_or(0.0)
+        };
+        println!(
+            "  {:>9.1} tok/s  p50 {:>8.4}s  p99 {:>8.4}s  occ {:>5.2} (peak {:.0})  \
+             replans {:.0}  rejected {:.0}",
+            get("tokens_per_s"),
+            get("latency_p50_s"),
+            get("latency_p99_s"),
+            get("mean_occupancy"),
+            get("peak_occupancy"),
+            get("replans"),
+            get("rejected"),
+        );
+    }
+    let path = PathBuf::from(&json_out);
+    match bench.write_json(&path, "serve_throughput", &extra) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => println!("could not write {}: {e}", path.display()),
+    }
+}

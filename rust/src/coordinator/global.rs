@@ -147,9 +147,8 @@ pub fn rollout(
                 let mut w = Worker::new(&rt, ecfg, reqs)?;
                 let rep = w.rollout_coupled(window)?;
                 let outs: Vec<(u64, Vec<i32>, String)> = w
-                    .requests
-                    .iter()
-                    .map(|r| {
+                    .iter_requests()
+                    .map(|(_, r)| {
                         done.get(&r.id).map(|f| f.store(true, Ordering::SeqCst));
                         (r.id, r.seq[r.prompt.len()..].to_vec(), format!("worker{widx}"))
                     })

@@ -10,8 +10,15 @@
 //! * `engine::decoupled::rollout_decoupled` — drafter and verifier on
 //!   separate threads with a bounded draft window (§4.1).
 //!
+//! The batch is **slot-dynamic**: [`Worker::admit`] prefill-joins a new
+//! request into a free slot mid-flight and [`Worker::retire`] frees a
+//! finished one, so the serve loop (`serve/`) can keep occupancy high
+//! under open-loop arrivals while batch-static callers drive the same
+//! worker through [`Worker::round`]-based `rollout_*` helpers.
+//!
 //! All modes produce **identical token sequences** for the same seed (the
-//! losslessness invariant; enforced by `rust/tests/losslessness.rs`).
+//! losslessness invariant; enforced by `rust/tests/losslessness.rs` and —
+//! across staggered admits/retires — `rust/tests/serve_lossless.rs`).
 
 pub mod decoupled;
 pub mod worker;

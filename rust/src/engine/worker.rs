@@ -1,4 +1,14 @@
-//! Batched single-worker engine: vanilla and coupled speculative rollout.
+//! Batched single-worker engine: vanilla and coupled speculative rollout
+//! over a **slot-dynamic** batch.
+//!
+//! The worker owns `bucket` sequence slots. A slot table (`Vec<Option<Request>>`)
+//! replaces the old construct-and-drain request vector: requests can be
+//! admitted into free slots ([`Worker::admit`], prefill-join via a staging
+//! cache + row migration) and retired out of them ([`Worker::retire`])
+//! while other slots keep decoding — the substrate of the continuous
+//! batching serve loop (`serve/batcher.rs`). Batch-static callers are
+//! unchanged: [`Worker::new`] fills slots `0..n` with one batched prefill
+//! and the `rollout_*` drivers drain them.
 //!
 //! The decode loop is allocation-lean: all per-round token/draft buffers
 //! live in a [`Scratch`] owned by the worker and are reused across rounds
@@ -132,7 +142,7 @@ struct Scratch {
     last: Vec<i32>,
     /// Per-slot catch-up token debt (model drafting).
     need: Vec<usize>,
-    /// Indices of not-done requests (refreshed once per round).
+    /// Indices of occupied, not-done slots (refreshed once per round).
     active: Vec<usize>,
 }
 
@@ -140,7 +150,8 @@ struct Scratch {
 pub struct Worker<'rt> {
     pub rt: &'rt Runtime,
     pub cfg: EngineConfig,
-    pub requests: Vec<Request>,
+    /// Slot table: `slots[i]` is the request occupying batch slot `i`.
+    slots: Vec<Option<Request>>,
     target: String,
     bucket: usize,
     cache: KvCache,
@@ -151,78 +162,103 @@ pub struct Worker<'rt> {
     token_drafters: Vec<Option<Box<dyn TokenDrafter>>>,
     /// Per-slot: number of seq tokens consumed by the draft model cache.
     draft_consumed: Vec<usize>,
+    /// Reusable staging caches for per-slot admission prefill (target /
+    /// draft model), built lazily on the first `admit`.
+    stage: Option<KvCache>,
+    stage_draft: Option<KvCache>,
     scratch: Scratch,
     eos: i32,
     pad: i32,
+    /// Cache-capacity cap on a request's generation budget.
+    max_new: usize,
 }
 
 impl<'rt> Worker<'rt> {
-    /// Create a worker for `requests` (all sharing the manifest prompt
-    /// length) and run prefill on both target and drafter.
-    pub fn new(rt: &'rt Runtime, cfg: EngineConfig, requests: Vec<Request>) -> Result<Self> {
-        if requests.is_empty() {
-            bail!("no requests");
-        }
+    /// Create an **empty** worker with room for `capacity` concurrent
+    /// requests (rounded up to the nearest lowered batch bucket). Requests
+    /// join later via [`Worker::admit`] — the serve loop's constructor.
+    pub fn with_capacity(rt: &'rt Runtime, cfg: EngineConfig, capacity: usize) -> Result<Self> {
         let m = &rt.manifest;
-        let p = m.prompt_len;
-        for r in &requests {
-            if r.prompt.len() != p {
-                bail!("request {} prompt len {} != manifest prompt_len {p}", r.id, r.prompt.len());
-            }
-        }
-        let bucket = m.bucket_for(requests.len())?;
+        let bucket = m.bucket_for(capacity.max(1))?;
         let target = m.target.clone();
-        let max_new = m.model(&target)?.max_seq - p - 2;
-        for r in &requests {
-            if r.budget > max_new {
-                bail!("budget {} exceeds cache capacity {max_new}", r.budget);
+        let max_new = m.model(&target)?.max_seq - m.prompt_len - 2;
+
+        let (draft_model, draft_cache) = match &cfg.drafter {
+            DraftMethod::Model(name) => {
+                m.model(name)?;
+                (Some(name.clone()), Some(rt.new_cache(name, bucket)?))
             }
-        }
+            _ => (None, None),
+        };
 
-        let (draft_model, token_drafters): (Option<String>, Vec<Option<Box<dyn TokenDrafter>>>) =
-            match &cfg.drafter {
-                DraftMethod::Model(name) => {
-                    m.model(name)?;
-                    (Some(name.clone()), (0..bucket).map(|_| None).collect())
-                }
-                DraftMethod::Ngram => (
-                    None,
-                    (0..bucket)
-                        .map(|_| Some(Box::new(NgramDrafter::new(3)) as Box<dyn TokenDrafter>))
-                        .collect(),
-                ),
-                DraftMethod::Sam => (
-                    None,
-                    (0..bucket)
-                        .map(|_| Some(Box::new(SamDrafter::new(16)) as Box<dyn TokenDrafter>))
-                        .collect(),
-                ),
-            };
-
-        let n = requests.len();
-        let mut w = Worker {
+        Ok(Worker {
             cache: rt.new_cache(&target, bucket)?,
-            draft_cache: match &draft_model {
-                Some(dm) => Some(rt.new_cache(dm, bucket)?),
-                None => None,
-            },
+            draft_cache,
             draft_model,
-            token_drafters,
+            token_drafters: (0..bucket).map(|_| None).collect(),
             draft_consumed: vec![0; bucket],
+            stage: None,
+            stage_draft: None,
+            slots: (0..bucket).map(|_| None).collect(),
             scratch: Scratch {
-                drafts: (0..n).map(|_| Vec::new()).collect(),
+                drafts: (0..bucket).map(|_| Vec::new()).collect(),
                 ..Scratch::default()
             },
             eos: m.eos_id,
             pad: m.pad_id,
             rt,
             cfg,
-            requests,
             target,
             bucket,
-        };
+            max_new,
+        })
+    }
+
+    /// Create a worker for `requests` (all sharing the manifest prompt
+    /// length) and run one batched prefill on both target and drafter.
+    pub fn new(rt: &'rt Runtime, cfg: EngineConfig, requests: Vec<Request>) -> Result<Self> {
+        if requests.is_empty() {
+            bail!("no requests");
+        }
+        let mut w = Self::with_capacity(rt, cfg, requests.len())?;
+        for r in &requests {
+            w.validate_request(r)?;
+        }
+        for (i, r) in requests.into_iter().enumerate() {
+            w.slots[i] = Some(r);
+        }
         w.prefill_all()?;
         Ok(w)
+    }
+
+    /// Check that `req` is admissible at all (prompt length matches the
+    /// manifest, budget fits the cache). The serve loop screens queued
+    /// requests with this so one malformed request is rejected instead of
+    /// aborting the whole batch.
+    pub fn validate_request(&self, r: &Request) -> Result<()> {
+        let p = self.rt.manifest.prompt_len;
+        if r.prompt.len() != p {
+            bail!("request {} prompt len {} != manifest prompt_len {p}", r.id, r.prompt.len());
+        }
+        if r.budget > self.max_new {
+            bail!("budget {} exceeds cache capacity {}", r.budget, self.max_new);
+        }
+        Ok(())
+    }
+
+    /// Fresh per-slot token drafter for the configured method (None for
+    /// model-based drafting, and for pure-vanilla workers — maintaining a
+    /// drafter index per generated token would be hot-path waste when no
+    /// speculative round will ever consult it).
+    fn fresh_token_drafter(&self) -> Option<Box<dyn TokenDrafter>> {
+        if matches!(self.cfg.mode, SpecMode::Vanilla) {
+            return None;
+        }
+        match &self.cfg.drafter {
+            DraftMethod::Model(_) => None,
+            DraftMethod::Ngram => Some(Box::new(NgramDrafter::new(3)) as Box<dyn TokenDrafter>),
+            DraftMethod::Sam => Some(Box::new(SamDrafter::new(16)) as Box<dyn TokenDrafter>),
+        }
     }
 
     fn prefill_all(&mut self) -> Result<()> {
@@ -230,8 +266,10 @@ impl<'rt> Worker<'rt> {
         let mut toks = std::mem::take(&mut self.scratch.toks);
         toks.clear();
         toks.resize(self.bucket * p, self.pad);
-        for (i, r) in self.requests.iter().enumerate() {
-            toks[i * p..(i + 1) * p].copy_from_slice(&r.prompt);
+        for (i, s) in self.slots.iter().enumerate() {
+            if let Some(r) = s {
+                toks[i * p..(i + 1) * p].copy_from_slice(&r.prompt);
+            }
         }
         self.rt.prefill(&self.target, &toks, &mut self.cache)?;
         // Target cache now holds the prompt; by convention the engine keeps
@@ -249,65 +287,180 @@ impl<'rt> Worker<'rt> {
             }
         }
         self.scratch.toks = toks;
-        for (i, td) in self.token_drafters.iter_mut().enumerate() {
-            if let Some(td) = td {
-                td.reset();
-                if i < self.requests.len() {
-                    td.extend(&self.requests[i].prompt);
+        for i in 0..self.bucket {
+            let td = match &self.slots[i] {
+                Some(r) => {
+                    let mut td = self.fresh_token_drafter();
+                    if let Some(t) = td.as_mut() {
+                        t.extend(&r.prompt);
+                    }
+                    td
                 }
-            }
+                None => None,
+            };
+            self.token_drafters[i] = td;
         }
         Ok(())
+    }
+
+    /// Admit `req` into the free slot `slot` while the batch keeps running:
+    /// prefill the prompt into a small staging cache (the whole-cache reset
+    /// inside `Runtime::prefill` must not touch live slots), then migrate
+    /// the row in via `extract_row`/`insert_row` — the same machinery that
+    /// moves straggler caches between Fastest-of-N workers. An admission is
+    /// a control-plane cost: one bucket-1 prefill plus one row copy.
+    pub fn admit(&mut self, slot: usize, req: Request) -> Result<()> {
+        if slot >= self.bucket {
+            bail!("slot {slot} out of range (bucket {})", self.bucket);
+        }
+        if self.slots[slot].is_some() {
+            bail!("slot {slot} already occupied");
+        }
+        self.validate_request(&req)?;
+        let p = self.rt.manifest.prompt_len;
+        let sb = self.rt.manifest.bucket_for(1)?;
+        let mut toks = std::mem::take(&mut self.scratch.toks);
+        toks.clear();
+        toks.resize(sb * p, self.pad);
+        toks[..p].copy_from_slice(&req.prompt);
+
+        if self.stage.is_none() {
+            self.stage = Some(self.rt.new_cache(&self.target, sb)?);
+        }
+        let stage = self.stage.as_mut().unwrap();
+        self.rt.prefill(&self.target, &toks, stage)?;
+        stage.lens[0] = (p - 1) as i32;
+        let row = stage.extract_row(0)?;
+        self.cache.insert_row(slot, &row)?;
+
+        if let Some(dm) = self.draft_model.clone() {
+            if self.stage_draft.is_none() {
+                self.stage_draft = Some(self.rt.new_cache(&dm, sb)?);
+            }
+            let sd = self.stage_draft.as_mut().unwrap();
+            self.rt.prefill(&dm, &toks, sd)?;
+            sd.lens[0] = (p - 1) as i32;
+            let drow = sd.extract_row(0)?;
+            self.draft_cache
+                .as_mut()
+                .expect("draft cache exists for model drafting")
+                .insert_row(slot, &drow)?;
+            self.draft_consumed[slot] = p - 1;
+        }
+        self.scratch.toks = toks;
+
+        if let Some(mut td) = self.fresh_token_drafter() {
+            td.extend(&req.prompt);
+            self.token_drafters[slot] = Some(td);
+        }
+        self.slots[slot] = Some(req);
+        Ok(())
+    }
+
+    /// Remove the request occupying `slot` and free its cache rows for
+    /// reuse by a later admission.
+    pub fn retire(&mut self, slot: usize) -> Result<Request> {
+        if slot >= self.bucket {
+            bail!("slot {slot} out of range (bucket {})", self.bucket);
+        }
+        let Some(req) = self.slots[slot].take() else {
+            bail!("slot {slot} is empty");
+        };
+        self.cache.clear_row(slot)?;
+        if let Some(dc) = &mut self.draft_cache {
+            dc.clear_row(slot)?;
+        }
+        self.draft_consumed[slot] = 0;
+        self.token_drafters[slot] = None;
+        Ok(req)
     }
 
     /// Recompute the active-slot list into scratch (no allocation in the
     /// steady state). Returns the number of active slots.
     fn refresh_active(&mut self) -> usize {
         self.scratch.active.clear();
-        for (i, r) in self.requests.iter().enumerate() {
-            if !r.done {
-                self.scratch.active.push(i);
+        for (i, s) in self.slots.iter().enumerate() {
+            if let Some(r) = s {
+                if !r.done {
+                    self.scratch.active.push(i);
+                }
             }
         }
         self.scratch.active.len()
     }
 
     fn finish_check(&mut self, slot: usize) {
-        let r = &mut self.requests[slot];
+        let r = self.slots[slot].as_mut().unwrap();
         if r.generated() >= r.budget || r.seq.last() == Some(&self.eos) {
             r.done = true;
         }
+    }
+
+    /// One engine iteration over the currently-admitted unfinished slots:
+    /// `window == 0` runs a single vanilla decode step, `window >= 1` runs
+    /// one coupled draft-`window`-verify round. Returns the number of slots
+    /// that participated (0 = nothing to do). The serve loop's batcher
+    /// calls this once per tick with the replanner's current window.
+    pub fn round(&mut self, window: usize, rep: &mut EngineReport) -> Result<usize> {
+        let active = self.refresh_active();
+        if active == 0 {
+            return Ok(0);
+        }
+        if window == 0 {
+            self.vanilla_round(rep)?;
+        } else {
+            if window + 1 > *self.rt.manifest.windows.iter().max().unwrap_or(&1) {
+                bail!("verify window {} not lowered", window + 1);
+            }
+            self.coupled_round(window, rep)?;
+        }
+        Ok(active)
+    }
+
+    /// One vanilla decode step for all active slots.
+    fn vanilla_round(&mut self, rep: &mut EngineReport) -> Result<()> {
+        // inputs: last token of each occupied slot's sequence (pad for free)
+        let mut toks = std::mem::take(&mut self.scratch.toks);
+        toks.clear();
+        toks.resize(self.bucket, self.pad);
+        for (i, s) in self.slots.iter().enumerate() {
+            if let Some(r) = s {
+                toks[i] = *r.seq.last().unwrap();
+            }
+        }
+        let out = self.rt.step(&self.target, &toks, 1, &mut self.cache)?;
+        self.scratch.toks = toks;
+        rep.target_steps += 1;
+        rep.iterations += 1;
+        for idx in 0..self.scratch.active.len() {
+            let i = self.scratch.active[idx];
+            let (id, seq_len) = {
+                let r = self.slots[i].as_ref().unwrap();
+                (r.id, r.seq.len())
+            };
+            let t = decode_one(id, self.cfg.seed, self.cfg.temperature, seq_len, out.at(i, 0));
+            let r = self.slots[i].as_mut().unwrap();
+            r.seq.push(t);
+            r.iterations += 1;
+            self.cache.lens[i] += 1;
+            rep.total_generated += 1;
+            // keep token-drafter history in sync so vanilla rounds can be
+            // interleaved with speculative ones (serve-loop replanning)
+            if let Some(td) = &mut self.token_drafters[i] {
+                td.extend(std::slice::from_ref(&t));
+            }
+            self.finish_check(i);
+        }
+        // done slots keep their lens frozen: the pad fed to them is
+        // written at lens and overwritten by any later (unused) step.
+        Ok(())
     }
 
     /// Plain auto-regressive rollout: one target decode step per token.
     pub fn rollout_vanilla(&mut self) -> Result<EngineReport> {
         let t0 = Instant::now();
         let mut rep = EngineReport::default();
-        while self.refresh_active() > 0 {
-            // inputs: last token of each slot's sequence (pad for done)
-            let mut toks = std::mem::take(&mut self.scratch.toks);
-            toks.clear();
-            toks.resize(self.bucket, self.pad);
-            for (i, r) in self.requests.iter().enumerate() {
-                toks[i] = *r.seq.last().unwrap();
-            }
-            let out = self.rt.step(&self.target, &toks, 1, &mut self.cache)?;
-            self.scratch.toks = toks;
-            rep.target_steps += 1;
-            rep.iterations += 1;
-            for idx in 0..self.scratch.active.len() {
-                let i = self.scratch.active[idx];
-                let r = &self.requests[i];
-                let t = decode_one(r.id, self.cfg.seed, self.cfg.temperature, r.seq.len(), out.at(i, 0));
-                self.requests[i].seq.push(t);
-                self.requests[i].iterations += 1;
-                self.cache.lens[i] += 1;
-                rep.total_generated += 1;
-                self.finish_check(i);
-            }
-            // done slots keep their lens frozen: the pad fed to them is
-            // written at lens and overwritten by any later (unused) step.
-        }
+        while self.round(0, &mut rep)? > 0 {}
         rep.wall_s = t0.elapsed().as_secs_f64();
         Ok(rep)
     }
@@ -325,7 +478,6 @@ impl<'rt> Worker<'rt> {
         for d in drafts.iter_mut() {
             d.clear();
         }
-        let n = self.requests.len();
         if let (Some(dm), Some(_)) = (self.draft_model.clone(), self.draft_cache.as_ref()) {
             // 1. catch-up: feed seq tokens the draft cache hasn't consumed,
             //    except the last one (which seeds the first draft step).
@@ -335,7 +487,7 @@ impl<'rt> Worker<'rt> {
             let mut max_need = 0usize;
             for idx in 0..self.scratch.active.len() {
                 let i = self.scratch.active[idx];
-                let want = self.requests[i].seq.len() - 1;
+                let want = self.slots[i].as_ref().unwrap().seq.len() - 1;
                 need[i] = want.saturating_sub(self.draft_consumed[i]);
                 max_need = max_need.max(need[i]);
             }
@@ -349,7 +501,7 @@ impl<'rt> Worker<'rt> {
                     let take = need[i].min(w);
                     let start = self.draft_consumed[i];
                     toks[i * w..i * w + take]
-                        .copy_from_slice(&self.requests[i].seq[start..start + take]);
+                        .copy_from_slice(&self.slots[i].as_ref().unwrap().seq[start..start + take]);
                 }
                 let dc = self.draft_cache.as_mut().unwrap();
                 self.rt.step(&dm, &toks, w, dc)?;
@@ -367,9 +519,11 @@ impl<'rt> Worker<'rt> {
             let mut last = std::mem::take(&mut self.scratch.last);
             last.clear();
             last.resize(self.bucket, self.pad);
-            for i in 0..self.bucket {
-                if i < n && !self.requests[i].done {
-                    last[i] = *self.requests[i].seq.last().unwrap();
+            for (i, s) in self.slots.iter().enumerate() {
+                if let Some(r) = s {
+                    if !r.done {
+                        last[i] = *r.seq.last().unwrap();
+                    }
                 }
             }
             for _ in 0..k {
@@ -378,7 +532,7 @@ impl<'rt> Worker<'rt> {
                 rep.draft_steps += 1;
                 for idx in 0..self.scratch.active.len() {
                     let i = self.scratch.active[idx];
-                    let r = &self.requests[i];
+                    let r = self.slots[i].as_ref().unwrap();
                     let pos = r.seq.len() + drafts[i].len();
                     let mut rng = position_rng(self.cfg.draft_seed, r.id, pos as u64);
                     let t = sample_logits(out.at(i, 0), self.cfg.temperature, &mut rng) as i32;
@@ -421,7 +575,7 @@ impl<'rt> Worker<'rt> {
         toks.resize(self.bucket * w, self.pad);
         for idx in 0..self.scratch.active.len() {
             let i = self.scratch.active[idx];
-            toks[i * w] = *self.requests[i].seq.last().unwrap();
+            toks[i * w] = *self.slots[i].as_ref().unwrap().seq.last().unwrap();
             toks[i * w + 1..i * w + 1 + k].copy_from_slice(&drafts[i][..k]);
         }
         let out = self.rt.step(&self.target, &toks, w, &mut self.cache)?;
@@ -431,10 +585,10 @@ impl<'rt> Worker<'rt> {
 
         for idx in 0..self.scratch.active.len() {
             let i = self.scratch.active[idx];
-            let r = &self.requests[i];
-            let budget_left = r.budget - r.generated();
-            let seq_len = r.seq.len();
-            let id = r.id;
+            let (id, seq_len, budget_left) = {
+                let r = self.slots[i].as_ref().unwrap();
+                (r.id, r.seq.len(), r.budget - r.generated())
+            };
             let outcome =
                 verify_exact(id, self.cfg.seed, self.cfg.temperature, seq_len, &drafts[i], |j| {
                     out.at(i, j)
@@ -442,16 +596,17 @@ impl<'rt> Worker<'rt> {
             let mut append = outcome.append;
             append.truncate(budget_left);
             let advanced = append.len();
-            let req = &mut self.requests[i];
+            let req = self.slots[i].as_mut().unwrap();
             req.seq.extend_from_slice(&append);
             req.accept.observe(drafts[i].len(), outcome.accepted);
             req.iterations += 1;
+            let new_seq_len = req.seq.len();
             // Invariant: the target cache has consumed exactly seq.len()-1
             // tokens (the last token is the next step's input). The verify
             // step wrote w entries; only the accepted prefix is valid, and
             // that is exactly seq.len()-1 (budget truncation only lowers it,
             // which is safe: stale slots are overwritten later).
-            self.cache.lens[i] = (self.requests[i].seq.len() - 1) as i32;
+            self.cache.lens[i] = (new_seq_len - 1) as i32;
             rep.total_generated += advanced as u64;
             rep.accepted_tokens += outcome.accepted as u64;
             rep.wasted_tokens += outcome.wasted as u64;
@@ -463,7 +618,7 @@ impl<'rt> Worker<'rt> {
             // prefix remain valid.
             if self.draft_model.is_some() {
                 let rollback = (seq_len + outcome.accepted)
-                    .min(self.requests[i].seq.len() - 1)
+                    .min(new_seq_len - 1)
                     .min(self.draft_consumed[i]);
                 self.draft_consumed[i] = rollback;
                 if let Some(dc) = &mut self.draft_cache {
@@ -487,16 +642,38 @@ impl<'rt> Worker<'rt> {
         }
         let t0 = Instant::now();
         let mut rep = EngineReport::default();
-        while self.refresh_active() > 0 {
-            self.coupled_round(k, &mut rep)?;
-        }
+        while self.round(k, &mut rep)? > 0 {}
         rep.wall_s = t0.elapsed().as_secs_f64();
         Ok(rep)
     }
 
-    /// Final sequences (generated part only), in request order.
+    /// The request occupying `slot`, if any.
+    pub fn request(&self, slot: usize) -> Option<&Request> {
+        self.slots.get(slot).and_then(|s| s.as_ref())
+    }
+
+    /// Occupied slots in slot order.
+    pub fn iter_requests(&self) -> impl Iterator<Item = (usize, &Request)> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.as_ref().map(|r| (i, r)))
+    }
+
+    /// Number of occupied slots (live batch size).
+    pub fn occupancy(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// True when the request in `slot` has finished (empty slots: false).
+    pub fn is_done(&self, slot: usize) -> bool {
+        self.request(slot).map(|r| r.done).unwrap_or(false)
+    }
+
+    /// Final sequences (generated part only) of occupied slots, in slot
+    /// order.
     pub fn outputs(&self) -> Vec<Vec<i32>> {
-        self.requests.iter().map(|r| r.seq[r.prompt.len()..].to_vec()).collect()
+        self.iter_requests().map(|(_, r)| r.seq[r.prompt.len()..].to_vec()).collect()
     }
 
     pub fn target_model(&self) -> &str {

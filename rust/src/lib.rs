@@ -20,6 +20,7 @@ pub mod engine;
 pub mod ladder;
 pub mod planner;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod spec;
 pub mod util;

@@ -6,23 +6,42 @@
 //! specactor simulate  --trace dapo --step 140 [--policy specactor] [--full]
 //! specactor fit       [--artifacts artifacts]   # fit affine costs from the real runtime
 //! specactor rollout   --requests 4 --budget 32  # real-engine rollout
+//! specactor serve     --rate 20 --arrival poisson|bursty [--smoke]  # continuous batching
 //! ```
 
 use std::path::PathBuf;
 use std::process::exit;
 
 use specactor::coordinator::global::{plan_initial, rollout, GlobalConfig};
+use specactor::drafter::DraftMethod;
+use specactor::engine::{EngineConfig, Request, SpecMode, Worker};
 use specactor::ladder::Ladder;
 use specactor::planner::costmodel::{AffineCost, CostModel};
 use specactor::planner::plan::{search, PlanInput};
 use specactor::runtime::Runtime;
-use specactor::sim::{scaled, simulate_step, Policy, TraceConfig};
+use specactor::serve::{
+    drive_open_loop, Batcher, OpenLoopReport, Priority, Replanner, ServeEngine, ServeMetrics,
+    SyntheticEngine,
+};
+use specactor::sim::{scaled, simulate_step, ArrivalProcess, Policy, TraceConfig};
+use specactor::util::benchkit::fmt_s;
 use specactor::util::cli::Args;
+use specactor::util::Rng;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: specactor <plan|ladder|simulate|fit|rollout> [options]\n\
-         see README for the option list"
+        "usage: specactor <plan|ladder|simulate|fit|rollout|serve> [options]\n\
+         serve: continuous-batching rollout server with open-loop arrivals\n\
+           --rate R          mean arrival rate, requests/s (default 20)\n\
+           --arrival KIND    poisson | bursty (default poisson)\n\
+           --requests N      total requests to offer (default 16)\n\
+           --budget B        per-request token budget (default 24)\n\
+           --capacity C      concurrent KV slots, rounded to a bucket (default 4)\n\
+           --queue-cap Q     admission queue bound, backpressure beyond (default 64)\n\
+           --drafter D       sam | ngram | draft_small | draft_mid (default sam)\n\
+           --vanilla         disable speculation (plain decode rounds)\n\
+           --smoke           synthetic engine, no artifacts needed (CI)\n\
+         see README / PERF.md for the remaining subcommands' options"
     );
     exit(2)
 }
@@ -42,7 +61,154 @@ fn main() {
         "simulate" => cmd_simulate(args),
         "fit" => cmd_fit(args),
         "rollout" => cmd_rollout(args),
+        "serve" => cmd_serve(args),
         _ => usage(),
+    }
+}
+
+/// Deterministic priority mix for generated open-loop traffic: mostly
+/// batch, with interactive and background minorities to exercise the
+/// queue's lanes.
+fn prio_for(id: u64) -> Priority {
+    match id % 8 {
+        0 => Priority::Interactive,
+        7 => Priority::Background,
+        _ => Priority::Batch,
+    }
+}
+
+fn print_serve_summary<E: ServeEngine>(engine: &str, b: &Batcher<E>, rep: &OpenLoopReport) {
+    let m: &ServeMetrics = &b.metrics;
+    println!(
+        "serve[{engine}]: offered {}  rejected {}  invalid {}  completed {}  in {} ({} ticks)",
+        rep.offered,
+        rep.rejected,
+        m.invalid,
+        m.completed,
+        fmt_s(rep.elapsed_s),
+        rep.ticks
+    );
+    println!(
+        "  tokens {}  sustained {:.1} tok/s  mean occupancy {:.2} (peak {})",
+        m.tokens,
+        m.tokens_per_second(rep.elapsed_s),
+        m.mean_occupancy(),
+        b.slots.high_water
+    );
+    println!(
+        "  latency p50 {}  p99 {}  mean queue wait {}",
+        fmt_s(m.latency_p50_s()),
+        fmt_s(m.latency_p99_s()),
+        fmt_s(m.mean_queue_wait_s())
+    );
+    println!(
+        "  replans {}  plan: method={} w={} (occupancy bucket {}, modelled speedup {:.2}x)",
+        m.replans,
+        b.replan.plan.method,
+        b.replan.plan.window,
+        b.replan.plan.bucket,
+        b.replan.plan.modelled_speedup
+    );
+}
+
+fn cmd_serve(mut args: Args) {
+    let art = PathBuf::from(args.opt("artifacts", "artifacts"));
+    let n = args.opt_parse("requests", 16usize);
+    let mut budget = args.opt_parse("budget", 24usize);
+    let rate = args.opt_parse("rate", 20.0f64);
+    let arrival = args.opt("arrival", "poisson");
+    let capacity = args.opt_parse("capacity", 4usize);
+    let queue_cap = args.opt_parse("queue-cap", 64usize);
+    let drafter = args.opt("drafter", "sam");
+    let seed = args.opt_parse("seed", 7u64);
+    let vanilla = args.flag("vanilla");
+    let smoke = args.flag("smoke");
+    args.finish().unwrap_or_else(|e| {
+        eprintln!("{e}");
+        usage()
+    });
+
+    let proc_ = match arrival.as_str() {
+        // same long-run offered load as poisson at the same --rate
+        "bursty" => ArrivalProcess::bursty_with_mean(rate),
+        "poisson" => ArrivalProcess::Poisson { rate },
+        other => {
+            eprintln!("unknown arrival process {other:?}");
+            usage()
+        }
+    };
+    let mut rng = Rng::new(seed);
+    let times = proc_.sample(n, &mut rng);
+
+    if smoke {
+        // hermetic path: synthetic engine, virtual 1 ms ticks — used by CI
+        let arrivals: Vec<(f64, Request, Priority)> = times
+            .iter()
+            .enumerate()
+            .map(|(i, &t)| (t, Request::new(i as u64, vec![0; 8], budget), prio_for(i as u64)))
+            .collect();
+        let replan = Replanner::synthetic();
+        let mut b =
+            Batcher::new(SyntheticEngine::new(capacity.max(1), seed), queue_cap, replan, !vanilla);
+        match drive_open_loop(&mut b, arrivals, Some(1.0e-3)) {
+            Ok(rep) => print_serve_summary("synthetic", &b, &rep),
+            Err(e) => {
+                eprintln!("serve --smoke failed: {e}");
+                exit(1);
+            }
+        }
+        return;
+    }
+
+    let rt = Runtime::load(&art).unwrap_or_else(|e| {
+        eprintln!("load artifacts: {e}");
+        exit(1)
+    });
+    let m = rt.manifest.clone();
+    let info = rt.model(&m.target).unwrap();
+    budget = budget.min(info.max_seq - m.prompt_len - 2);
+    let arrivals: Vec<(f64, Request, Priority)> = times
+        .iter()
+        .enumerate()
+        .map(|(i, &t)| {
+            let id = i as u64;
+            let prompt = m.synth_prompt(id).unwrap();
+            (t, Request::new(id, prompt, budget), prio_for(id))
+        })
+        .collect();
+    let ecfg = EngineConfig {
+        // vanilla mode also disables per-slot token-drafter maintenance
+        mode: if vanilla { SpecMode::Vanilla } else { SpecMode::Coupled { window: 3 } },
+        drafter: DraftMethod::parse(&drafter),
+        temperature: 1.0,
+        seed,
+        draft_seed: seed.wrapping_add(1000),
+    };
+    let worker = Worker::with_capacity(&rt, ecfg, capacity).unwrap_or_else(|e| {
+        eprintln!("worker: {e}");
+        exit(1)
+    });
+    let replan = Replanner::for_manifest(
+        &m,
+        CostModel::paper_32b(),
+        TraceConfig::grpo_32b_20k().profiled_acceptance(),
+        7,
+    );
+    let mut b = Batcher::new(worker, queue_cap, replan, !vanilla);
+    match drive_open_loop(&mut b, arrivals, None) {
+        Ok(rep) => {
+            print_serve_summary("pjrt", &b, &rep);
+            println!(
+                "  engine: {} target steps, {} draft steps, acceptance {:.2}",
+                b.report.target_steps,
+                b.report.draft_steps,
+                b.report.acceptance_rate()
+            );
+        }
+        Err(e) => {
+            eprintln!("serve failed: {e}");
+            exit(1);
+        }
     }
 }
 
@@ -180,16 +346,9 @@ fn cmd_rollout(mut args: Args) {
         exit(1)
     });
     let m = rt.manifest.clone();
-    let vocab = rt.model(&m.target).unwrap().vocab as i32;
     drop(rt);
-    let prompts: Vec<(u64, Vec<i32>)> = (0..n as u64)
-        .map(|i| {
-            let p: Vec<i32> = (0..m.prompt_len)
-                .map(|j| m.reserved + ((i as i32 * 83 + j as i32) % (vocab - m.reserved)))
-                .collect();
-            (i, p)
-        })
-        .collect();
+    let prompts: Vec<(u64, Vec<i32>)> =
+        (0..n as u64).map(|i| (i, m.synth_prompt(i).unwrap())).collect();
     let cost = CostModel::paper_32b();
     let profiled = vec![
         ("draft_mid".to_string(), 0.82),

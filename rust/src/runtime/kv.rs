@@ -105,6 +105,17 @@ impl KvCache {
         {
             bail!("cache row geometry mismatch");
         }
+        let want = self.n_layers * self.row_stride();
+        if row.k.len() != want || row.v.len() != want {
+            bail!(
+                "cache row data len {}/{} != L*S*h*dh = {want}",
+                row.k.len(),
+                row.v.len()
+            );
+        }
+        if row.len < 0 || row.len as usize > self.max_seq {
+            bail!("cache row len {} outside [0, {}]", row.len, self.max_seq);
+        }
         let rs = self.row_stride();
         let ls = self.layer_stride();
         for l in 0..self.n_layers {
@@ -139,7 +150,7 @@ impl KvCache {
         let rs = self.row_stride();
         let ls = self.layer_stride();
         for (slot, &l) in self.lens.iter().enumerate() {
-            if (l as usize) + w > self.max_seq {
+            if l < 0 || (l as usize) + w > self.max_seq {
                 bail!("slot {slot}: scatter at {l}+{w} exceeds max_seq {}", self.max_seq);
             }
         }
@@ -154,8 +165,12 @@ impl KvCache {
         Ok(())
     }
 
-    /// Clear one slot (request finished; slot becomes inactive padding).
-    pub fn clear_row(&mut self, slot: usize) {
+    /// Clear one slot (request finished/retired; the slot becomes free
+    /// padding until the next admission reuses it).
+    pub fn clear_row(&mut self, slot: usize) -> Result<()> {
+        if slot >= self.batch {
+            bail!("slot {slot} out of range (batch {})", self.batch);
+        }
         let rs = self.row_stride();
         let ls = self.layer_stride();
         for l in 0..self.n_layers {
@@ -164,6 +179,30 @@ impl KvCache {
             self.v[off..off + rs].fill(0.0);
         }
         self.lens[slot] = 0;
+        Ok(())
+    }
+
+    /// Move one request's rows from `from` to `to` and clear the source —
+    /// the compaction primitive for slot defragmentation (e.g. packing
+    /// live sequences into a smaller batch bucket). `copy_within` per
+    /// (layer, slot), no allocation.
+    pub fn move_row(&mut self, from: usize, to: usize) -> Result<()> {
+        if from >= self.batch || to >= self.batch {
+            bail!("move_row {from}->{to} out of range (batch {})", self.batch);
+        }
+        if from == to {
+            return Ok(());
+        }
+        let rs = self.row_stride();
+        let ls = self.layer_stride();
+        for l in 0..self.n_layers {
+            let src = l * ls + from * rs;
+            let dst = l * ls + to * rs;
+            self.k.copy_within(src..src + rs, dst);
+            self.v.copy_within(src..src + rs, dst);
+        }
+        self.lens[to] = self.lens[from];
+        self.clear_row(from)
     }
 }
 
@@ -229,12 +268,14 @@ mod tests {
     #[test]
     fn clear_row_zeroes() {
         let mut c = filled_cache();
-        c.clear_row(1);
+        c.clear_row(1).unwrap();
         let row = c.extract_row(1).unwrap();
         assert!(row.k.iter().all(|&x| x == 0.0));
         assert_eq!(c.lens[1], 0);
         // neighbours untouched
         assert!(c.extract_row(0).unwrap().k.iter().any(|&x| x != 0.0));
+        // out-of-range slot is an error, not a panic (serve-loop safety)
+        assert!(c.clear_row(99).is_err());
     }
 
     #[test]
@@ -244,6 +285,47 @@ mod tests {
         let mut other = KvCache::new(2, 3, 8, 1, 2);
         assert!(other.insert_row(0, &row).is_err());
         assert!(c.extract_row(99).is_err());
+    }
+
+    #[test]
+    fn corrupt_row_data_rejected() {
+        // geometry fields match but the payload is short / len is bogus —
+        // a bad manifest or truncated migration must error, not panic.
+        let mut c = filled_cache();
+        let mut row = c.extract_row(0).unwrap();
+        row.k.truncate(3);
+        assert!(c.insert_row(1, &row).is_err());
+        let mut row2 = c.extract_row(0).unwrap();
+        row2.len = 999;
+        assert!(c.insert_row(1, &row2).is_err());
+        let mut row3 = c.extract_row(0).unwrap();
+        row3.len = -1;
+        assert!(c.insert_row(1, &row3).is_err());
+    }
+
+    #[test]
+    fn scatter_rejects_negative_lens() {
+        let mut c = KvCache::new(2, 3, 4, 1, 2);
+        c.lens = vec![-1, 0, 0];
+        let win = vec![0.0f32; 2 * 3 * 2]; // w=1
+        assert!(c.scatter_window(&win, &win, 1).is_err());
+    }
+
+    #[test]
+    fn move_row_compacts() {
+        let mut c = filled_cache();
+        let want = c.extract_row(2).unwrap();
+        c.move_row(2, 0).unwrap();
+        let got = c.extract_row(0).unwrap();
+        assert_eq!(got.k, want.k);
+        assert_eq!(got.v, want.v);
+        assert_eq!(c.lens[0], 3);
+        // source cleared
+        assert!(c.extract_row(2).unwrap().k.iter().all(|&x| x == 0.0));
+        assert_eq!(c.lens[2], 0);
+        // no-op and bounds
+        c.move_row(1, 1).unwrap();
+        assert!(c.move_row(0, 99).is_err());
     }
 
     #[test]

@@ -252,6 +252,27 @@ impl Manifest {
             .ok_or_else(|| anyhow!("batch {n} exceeds largest lowered bucket"))
     }
 
+    /// Deterministic synthetic prompt for request `id`: `prompt_len`
+    /// tokens from the non-reserved vocab range, offset per request so
+    /// different requests exercise different acceptance behaviour. Shared
+    /// by the serve CLI/demo/bench drivers and the integration tests.
+    pub fn synth_prompt(&self, id: u64) -> Result<Vec<i32>> {
+        // i64 arithmetic with the id reduced first: `(id * 83) % range`
+        // overflows i32 for id >= i32::MAX/83, and long-running open-loop
+        // serving reaches such ids. `((id % range) * 83) % range` is the
+        // same residue without the overflow.
+        let vocab = self.model(&self.target)?.vocab as i64;
+        let reserved = self.reserved as i64;
+        let range = vocab - reserved;
+        if range <= 0 {
+            bail!("manifest: vocab {vocab} leaves no tokens above reserved {reserved}");
+        }
+        let start = reserved + ((id % range as u64) as i64 * 83) % range;
+        Ok((0..self.prompt_len as i64)
+            .map(|j| (reserved + (start + j) % range) as i32)
+            .collect())
+    }
+
     /// Largest lowered draft window <= `w` (planner may ask for any w).
     pub fn window_for(&self, w: usize) -> Result<usize> {
         self.windows

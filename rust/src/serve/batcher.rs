@@ -1,0 +1,563 @@
+//! Continuous-batching serve loop.
+//!
+//! Each [`Batcher::tick`] is one serving round:
+//!
+//! 1. **retire** finished requests (free their KV slots, record latency),
+//! 2. **admit** waiting requests from the [`AdmissionQueue`] into free
+//!    slots (prefill-join via `Worker::admit`),
+//! 3. **replan** when the resulting occupancy crossed a bucket boundary
+//!    ([`Replanner`]), and
+//! 4. run one engine **round** (vanilla step or coupled draft-w-verify)
+//!    over the live slots with the current plan's window.
+//!
+//! The batcher is generic over a [`ServeEngine`] so the loop's admission /
+//! retirement / replanning / telemetry logic is unit-testable without AOT
+//! artifacts: the real backend is [`Worker`], and [`SyntheticEngine`] is a
+//! deterministic stand-in used by those tests and `specactor serve
+//! --smoke` (CI runs it artifact-free).
+//!
+//! Time is injected by the caller (`now_s`), never read from a wall
+//! clock here — the open-loop drivers pass measured wall time for real
+//! serving and a fixed virtual step for deterministic tests, and the
+//! lossless test (`rust/tests/serve_lossless.rs`) replays identical
+//! admission schedules under both static and continuous batching.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::engine::{EngineReport, Request, Worker};
+use crate::util::rng::position_rng;
+
+use super::metrics::ServeMetrics;
+use super::queue::{AdmissionQueue, Priority};
+use super::replan::Replanner;
+use super::slots::SlotAllocator;
+
+/// The engine surface the serve loop drives. Implemented by the real
+/// [`Worker`] and by [`SyntheticEngine`].
+pub trait ServeEngine {
+    /// Number of batch slots.
+    fn capacity(&self) -> usize;
+    /// Is `req` admissible at all (prompt geometry, budget)? The batcher
+    /// screens queued requests with this and *rejects* failures
+    /// individually — only `admit`/`round` errors (infrastructure
+    /// failures) abort the serve loop.
+    fn validate(&self, _req: &Request) -> Result<()> {
+        Ok(())
+    }
+    /// Prefill-join `req` into the free slot `slot`.
+    fn admit(&mut self, slot: usize, req: Request) -> Result<()>;
+    /// Remove the (finished) request from `slot`, freeing it.
+    fn retire(&mut self, slot: usize) -> Result<Request>;
+    /// One decode round over active slots (`window == 0` → vanilla,
+    /// else coupled speculation). Returns the active-slot count.
+    fn round(&mut self, window: usize, rep: &mut EngineReport) -> Result<usize>;
+    /// Did the request in `slot` finish? (false for empty slots)
+    fn is_done(&self, slot: usize) -> bool;
+}
+
+impl ServeEngine for Worker<'_> {
+    fn capacity(&self) -> usize {
+        self.bucket()
+    }
+
+    fn validate(&self, req: &Request) -> Result<()> {
+        self.validate_request(req)
+    }
+
+    fn admit(&mut self, slot: usize, req: Request) -> Result<()> {
+        Worker::admit(self, slot, req)
+    }
+
+    fn retire(&mut self, slot: usize) -> Result<Request> {
+        Worker::retire(self, slot)
+    }
+
+    fn round(&mut self, window: usize, rep: &mut EngineReport) -> Result<usize> {
+        Worker::round(self, window, rep)
+    }
+
+    fn is_done(&self, slot: usize) -> bool {
+        Worker::is_done(self, slot)
+    }
+}
+
+/// A retired request plus its serving timeline.
+#[derive(Clone, Debug)]
+pub struct FinishedRequest {
+    pub req: Request,
+    /// Arrival (enqueue) time.
+    pub arrival_s: f64,
+    /// Tick time at which the request was retired.
+    pub finished_s: f64,
+}
+
+/// Per-tick outcome summary.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TickReport {
+    pub retired: usize,
+    pub admitted: usize,
+    /// Slots that ran in this tick's engine round.
+    pub active: usize,
+    pub generated: u64,
+    pub replanned: bool,
+}
+
+/// The continuous-batching loop state.
+pub struct Batcher<E: ServeEngine> {
+    engine: E,
+    pub queue: AdmissionQueue,
+    pub slots: SlotAllocator,
+    pub replan: Replanner,
+    pub metrics: ServeMetrics,
+    /// Cumulative engine counters across all rounds.
+    pub report: EngineReport,
+    /// Per-slot arrival timestamp of the occupying request.
+    arrival_s: Vec<f64>,
+    finished: Vec<FinishedRequest>,
+    /// Run speculative rounds (false = vanilla decode every round).
+    spec: bool,
+}
+
+impl<E: ServeEngine> Batcher<E> {
+    pub fn new(engine: E, queue_cap: usize, replan: Replanner, spec: bool) -> Self {
+        let cap = engine.capacity();
+        Batcher {
+            engine,
+            queue: AdmissionQueue::new(queue_cap),
+            slots: SlotAllocator::new(cap),
+            replan,
+            metrics: ServeMetrics::new(),
+            report: EngineReport::default(),
+            arrival_s: vec![0.0; cap],
+            finished: Vec::new(),
+            spec,
+        }
+    }
+
+    /// Offer a request to the admission queue (false = backpressure).
+    pub fn enqueue(&mut self, req: Request, prio: Priority, now_s: f64) -> bool {
+        self.queue.push(req, prio, now_s)
+    }
+
+    /// Nothing queued, nothing in flight.
+    pub fn idle(&self) -> bool {
+        self.queue.is_empty() && self.slots.occupancy() == 0
+    }
+
+    pub fn engine(&self) -> &E {
+        &self.engine
+    }
+
+    /// Completed requests retired so far (draining resets the list).
+    pub fn drain_finished(&mut self) -> Vec<FinishedRequest> {
+        std::mem::take(&mut self.finished)
+    }
+
+    /// One serving round: retire → admit → replan → decode.
+    pub fn tick(&mut self, now_s: f64) -> Result<TickReport> {
+        let mut tr = TickReport::default();
+
+        // 1. retire finished requests, freeing their slots
+        for slot in 0..self.engine.capacity() {
+            if self.slots.is_live(slot) && self.engine.is_done(slot) {
+                let req = self.engine.retire(slot)?;
+                self.slots.release(slot)?;
+                let arrival = self.arrival_s[slot];
+                self.metrics.on_finish(now_s - arrival);
+                self.finished.push(FinishedRequest { req, arrival_s: arrival, finished_s: now_s });
+                tr.retired += 1;
+            }
+        }
+
+        // 2. prefill-join waiting requests into free slots
+        while !self.slots.is_full() {
+            let Some(q) = self.queue.pop() else { break };
+            // a malformed request is rejected individually — it must not
+            // take down the batch it would have joined
+            if self.engine.validate(&q.req).is_err() {
+                self.metrics.invalid += 1;
+                continue;
+            }
+            let slot = self
+                .slots
+                .alloc()
+                .ok_or_else(|| anyhow!("slot allocator full despite free check"))?;
+            if let Err(e) = self.engine.admit(slot, q.req) {
+                // a failed admission must not leak the slot
+                self.slots.release(slot)?;
+                return Err(e);
+            }
+            self.arrival_s[slot] = q.enqueued_s;
+            self.metrics.on_admit(now_s - q.enqueued_s);
+            tr.admitted += 1;
+        }
+
+        // 3. concurrency-aware replanning at bucket granularity
+        let occ = self.slots.occupancy();
+        if occ == 0 {
+            return Ok(tr);
+        }
+        if self.replan.on_occupancy(occ).is_some() {
+            self.metrics.replans += 1;
+            tr.replanned = true;
+        }
+
+        // 4. one engine round under the current plan
+        let window = if self.spec { self.replan.plan.window } else { 0 };
+        let before = self.report.total_generated;
+        tr.active = self.engine.round(window, &mut self.report)?;
+        tr.generated = self.report.total_generated - before;
+        self.metrics.on_round(occ, tr.generated);
+        Ok(tr)
+    }
+}
+
+/// Outcome of [`drive_open_loop`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OpenLoopReport {
+    /// Virtual serving time at the end of the run (equals accumulated wall
+    /// time when `dt` is None).
+    pub elapsed_s: f64,
+    pub offered: usize,
+    /// Requests lost to backpressure during this run — both outright
+    /// refusals and queued entries evicted by higher-priority arrivals
+    /// (the queue's own counter), so
+    /// `completed + rejected + metrics.invalid == offered`.
+    pub rejected: usize,
+    pub ticks: u64,
+}
+
+/// Drive a batcher through an **open-loop** arrival schedule: requests
+/// join at their arrival times regardless of completions (the serving
+/// regime; closed-loop replay would hide queueing).
+///
+/// `arrivals` is (absolute arrival seconds, request, priority), ascending
+/// by time. `dt` fixes the virtual time advanced per tick (deterministic
+/// smoke/test mode); with `None` each tick advances by its measured wall
+/// duration — real serving time.
+pub fn drive_open_loop<E: ServeEngine>(
+    b: &mut Batcher<E>,
+    arrivals: Vec<(f64, Request, Priority)>,
+    dt: Option<f64>,
+) -> Result<OpenLoopReport> {
+    if arrivals.windows(2).any(|w| w[1].0 < w[0].0) {
+        bail!("arrivals must be sorted by time");
+    }
+    let mut rep = OpenLoopReport { offered: arrivals.len(), ..Default::default() };
+    let rejected0 = b.queue.rejected;
+    let mut now = 0.0f64;
+    let mut pending = arrivals.into_iter().peekable();
+    loop {
+        while pending.peek().map(|(t, _, _)| *t <= now).unwrap_or(false) {
+            let (t, req, prio) = pending.next().unwrap();
+            b.enqueue(req, prio, t);
+        }
+        if b.idle() {
+            match pending.peek() {
+                // fast-forward an idle server to the next arrival
+                Some((t, _, _)) => {
+                    now = *t;
+                    continue;
+                }
+                None => break,
+            }
+        }
+        let t0 = std::time::Instant::now();
+        b.tick(now)?;
+        rep.ticks += 1;
+        now += dt.unwrap_or_else(|| t0.elapsed().as_secs_f64());
+    }
+    rep.elapsed_s = now;
+    rep.rejected = (b.queue.rejected - rejected0) as usize;
+    Ok(rep)
+}
+
+/// Deterministic engine stand-in: no runtime, no artifacts. Each round
+/// advances every active request by a seeded pseudo-random number of
+/// tokens in `1..=window+1` — the same shape as speculative acceptance —
+/// so the batcher's admission / retirement / replanning logic can be
+/// exercised hermetically (unit tests, `specactor serve --smoke`).
+pub struct SyntheticEngine {
+    slots: Vec<Option<Request>>,
+    seed: u64,
+    rounds: u64,
+}
+
+impl SyntheticEngine {
+    pub fn new(capacity: usize, seed: u64) -> Self {
+        assert!(capacity > 0);
+        SyntheticEngine { slots: (0..capacity).map(|_| None).collect(), seed, rounds: 0 }
+    }
+}
+
+impl ServeEngine for SyntheticEngine {
+    fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    fn admit(&mut self, slot: usize, req: Request) -> Result<()> {
+        if slot >= self.slots.len() {
+            bail!("slot {slot} out of range");
+        }
+        if self.slots[slot].is_some() {
+            bail!("slot {slot} already occupied");
+        }
+        self.slots[slot] = Some(req);
+        Ok(())
+    }
+
+    fn retire(&mut self, slot: usize) -> Result<Request> {
+        self.slots
+            .get_mut(slot)
+            .and_then(|s| s.take())
+            .ok_or_else(|| anyhow!("slot {slot} empty"))
+    }
+
+    fn round(&mut self, window: usize, rep: &mut EngineReport) -> Result<usize> {
+        self.rounds += 1;
+        let mut active = 0usize;
+        for s in self.slots.iter_mut() {
+            let Some(r) = s else { continue };
+            if r.done {
+                continue;
+            }
+            active += 1;
+            let mut rng = position_rng(self.seed, r.id, self.rounds);
+            let adv = if window == 0 { 1 } else { 1 + rng.below(window as u64 + 1) as usize };
+            let adv = adv.min(r.budget - r.generated());
+            for _ in 0..adv {
+                let t = (r.id as i32).wrapping_mul(31).wrapping_add(r.seq.len() as i32) & 0x7fff;
+                r.seq.push(t);
+            }
+            r.iterations += 1;
+            rep.total_generated += adv as u64;
+            if adv > 1 {
+                rep.skipped_iterations += 1;
+            }
+            if r.generated() >= r.budget {
+                r.done = true;
+            }
+        }
+        if active > 0 {
+            rep.target_steps += 1;
+            rep.iterations += 1;
+        }
+        Ok(active)
+    }
+
+    fn is_done(&self, slot: usize) -> bool {
+        self.slots
+            .get(slot)
+            .and_then(|s| s.as_ref())
+            .map(|r| r.done)
+            .unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::costmodel::CostModel;
+
+    fn replanner() -> Replanner {
+        Replanner::new(
+            CostModel::paper_32b(),
+            vec![
+                ("draft_mid".to_string(), 0.82),
+                ("draft_small".to_string(), 0.74),
+                ("ngram".to_string(), 0.40),
+            ],
+            vec![1, 2, 4],
+            vec![1, 3, 7],
+            7,
+        )
+    }
+
+    fn mk_batcher(capacity: usize, queue_cap: usize) -> Batcher<SyntheticEngine> {
+        Batcher::new(SyntheticEngine::new(capacity, 99), queue_cap, replanner(), true)
+    }
+
+    fn req(id: u64, budget: usize) -> Request {
+        Request::new(id, vec![1, 2, 3, 4], budget)
+    }
+
+    #[test]
+    fn serves_everything_to_completion() {
+        let mut b = mk_batcher(2, 16);
+        for i in 0..5u64 {
+            assert!(b.enqueue(req(i, 10), Priority::Batch, i as f64 * 0.01));
+        }
+        let mut now = 0.1;
+        let mut guard = 0;
+        while !b.idle() {
+            b.tick(now).unwrap();
+            now += 0.01;
+            guard += 1;
+            assert!(guard < 1000, "serve loop did not converge");
+        }
+        let fin = b.drain_finished();
+        assert_eq!(fin.len(), 5);
+        assert!(fin.iter().all(|f| f.req.generated() == 10));
+        assert!(fin.iter().all(|f| f.finished_s >= f.arrival_s));
+        assert_eq!(b.metrics.completed, 5);
+        assert_eq!(b.metrics.tokens, 50);
+        // capacity 2 with 5 requests: someone must have waited
+        assert!(b.metrics.mean_queue_wait_s() > 0.0);
+        assert_eq!(b.slots.high_water, 2);
+    }
+
+    #[test]
+    fn occupancy_changes_trigger_replans() {
+        let mut b = mk_batcher(4, 16);
+        b.enqueue(req(0, 40), Priority::Batch, 0.0);
+        let t1 = b.tick(0.0).unwrap();
+        assert!(t1.replanned); // first plan establishment counts as applied
+        assert_eq!(b.replan.plan.bucket, 1);
+        // three more arrivals push occupancy 1 -> 4: bucket crossing
+        for i in 1..4u64 {
+            b.enqueue(req(i, 40), Priority::Batch, 0.1);
+        }
+        let t2 = b.tick(0.1).unwrap();
+        assert!(t2.replanned);
+        assert_eq!(t2.admitted, 3);
+        assert_eq!(b.replan.plan.bucket, 4);
+        let t3 = b.tick(0.2).unwrap();
+        assert!(!t3.replanned);
+    }
+
+    #[test]
+    fn priorities_jump_the_queue() {
+        let mut b = mk_batcher(1, 16);
+        b.enqueue(req(0, 6), Priority::Batch, 0.0);
+        b.tick(0.0).unwrap(); // id 0 occupies the only slot
+        b.enqueue(req(1, 6), Priority::Background, 0.1);
+        b.enqueue(req(2, 6), Priority::Interactive, 0.2);
+        let mut now = 0.3;
+        while !b.idle() {
+            b.tick(now).unwrap();
+            now += 0.01;
+        }
+        let order: Vec<u64> = b.drain_finished().iter().map(|f| f.req.id).collect();
+        assert_eq!(order, vec![0, 2, 1], "interactive must pass background");
+    }
+
+    #[test]
+    fn vanilla_mode_generates_one_token_per_round() {
+        let mut b = Batcher::new(SyntheticEngine::new(1, 7), 4, replanner(), false);
+        b.enqueue(req(0, 5), Priority::Batch, 0.0);
+        let mut ticks = 0;
+        let mut now = 0.0;
+        while !b.idle() {
+            let tr = b.tick(now).unwrap();
+            assert!(tr.generated <= 1);
+            now += 0.01;
+            ticks += 1;
+        }
+        assert_eq!(ticks, 6, "5 decode rounds + 1 retire tick");
+    }
+
+    #[test]
+    fn open_loop_driver_fast_forwards_idle_gaps() {
+        let mut b = mk_batcher(2, 8);
+        let arrivals = vec![
+            (0.0, req(0, 8), Priority::Batch),
+            (0.0, req(1, 8), Priority::Batch),
+            (1000.0, req(2, 8), Priority::Batch), // long idle gap
+        ];
+        let rep = drive_open_loop(&mut b, arrivals, Some(0.001)).unwrap();
+        assert_eq!(rep.offered, 3);
+        assert_eq!(rep.rejected, 0);
+        assert_eq!(b.drain_finished().len(), 3);
+        // the idle gap is skipped, not ticked through
+        assert!(rep.ticks < 100, "driver spun through the idle gap: {} ticks", rep.ticks);
+        assert!(rep.elapsed_s >= 1000.0);
+    }
+
+    #[test]
+    fn open_loop_driver_counts_backpressure() {
+        // queue of 1 and capacity 1: a burst of simultaneous arrivals sheds
+        let mut b = mk_batcher(1, 1);
+        let arrivals: Vec<(f64, Request, Priority)> =
+            (0..6u64).map(|i| (0.0, req(i, 30), Priority::Batch)).collect();
+        let rep = drive_open_loop(&mut b, arrivals, Some(0.001)).unwrap();
+        assert!(rep.rejected > 0, "expected backpressure rejections");
+        let done = b.drain_finished().len();
+        assert_eq!(done + rep.rejected, 6);
+        assert!(drive_open_loop(
+            &mut b,
+            vec![(1.0, req(9, 4), Priority::Batch), (0.5, req(10, 4), Priority::Batch)],
+            Some(0.001)
+        )
+        .is_err(), "unsorted arrivals must error");
+    }
+
+    #[test]
+    fn invalid_request_is_rejected_not_fatal() {
+        // an engine that refuses one specific request at validation time:
+        // the batcher must drop that request and keep serving the rest
+        struct Picky(SyntheticEngine);
+        impl ServeEngine for Picky {
+            fn capacity(&self) -> usize {
+                self.0.capacity()
+            }
+            fn validate(&self, req: &Request) -> Result<()> {
+                if req.id == 1 {
+                    bail!("bad prompt geometry")
+                }
+                Ok(())
+            }
+            fn admit(&mut self, slot: usize, req: Request) -> Result<()> {
+                self.0.admit(slot, req)
+            }
+            fn retire(&mut self, slot: usize) -> Result<Request> {
+                self.0.retire(slot)
+            }
+            fn round(&mut self, w: usize, rep: &mut EngineReport) -> Result<usize> {
+                self.0.round(w, rep)
+            }
+            fn is_done(&self, slot: usize) -> bool {
+                self.0.is_done(slot)
+            }
+        }
+        let mut b = Batcher::new(Picky(SyntheticEngine::new(2, 5)), 8, replanner(), true);
+        for i in 0..3u64 {
+            b.enqueue(req(i, 6), Priority::Batch, 0.0);
+        }
+        let mut now = 0.0;
+        while !b.idle() {
+            b.tick(now).unwrap();
+            now += 0.01;
+        }
+        let mut done: Vec<u64> = b.drain_finished().iter().map(|f| f.req.id).collect();
+        done.sort_unstable();
+        assert_eq!(done, vec![0, 2], "valid requests must still be served");
+        assert_eq!(b.metrics.invalid, 1);
+        assert_eq!(b.metrics.completed, 2);
+    }
+
+    #[test]
+    fn failed_admission_does_not_leak_the_slot() {
+        struct Failing(SyntheticEngine);
+        impl ServeEngine for Failing {
+            fn capacity(&self) -> usize {
+                self.0.capacity()
+            }
+            fn admit(&mut self, _slot: usize, _req: Request) -> Result<()> {
+                bail!("prefill failed")
+            }
+            fn retire(&mut self, slot: usize) -> Result<Request> {
+                self.0.retire(slot)
+            }
+            fn round(&mut self, w: usize, rep: &mut EngineReport) -> Result<usize> {
+                self.0.round(w, rep)
+            }
+            fn is_done(&self, slot: usize) -> bool {
+                self.0.is_done(slot)
+            }
+        }
+        let mut b = Batcher::new(Failing(SyntheticEngine::new(2, 1)), 4, replanner(), true);
+        b.enqueue(req(0, 4), Priority::Batch, 0.0);
+        assert!(b.tick(0.0).is_err());
+        assert_eq!(b.slots.occupancy(), 0, "slot leaked by failed admit");
+    }
+}

@@ -1,0 +1,183 @@
+//! Rolling serve-loop telemetry: latency quantiles, throughput and
+//! occupancy.
+//!
+//! Everything here is O(1) per event — latency percentiles come from the
+//! fixed-state P² estimator ([`P2Quantile`]), occupancy and queue wait
+//! from Welford accumulators — so telemetry never grows with the number
+//! of requests served (a serving loop can't afford per-request sample
+//! vectors).
+
+use crate::util::json::Json;
+use crate::util::stats::{P2Quantile, Welford};
+
+/// Telemetry accumulated by the batcher.
+#[derive(Clone, Debug)]
+pub struct ServeMetrics {
+    /// Requests admitted into slots.
+    pub admitted: u64,
+    /// Requests finished and retired.
+    pub completed: u64,
+    /// Tokens generated across all rounds.
+    pub tokens: u64,
+    /// Engine rounds executed (ticks with at least one active slot).
+    pub rounds: u64,
+    /// Plans applied by the replanner (bucket crossings, including the
+    /// initial plan establishment) — the single replan counter.
+    pub replans: u64,
+    /// Queued requests rejected at admission because the engine cannot
+    /// serve them at all (bad prompt geometry, oversized budget).
+    pub invalid: u64,
+    queue_wait: Welford,
+    latency_p50: P2Quantile,
+    latency_p99: P2Quantile,
+    latency_mean: Welford,
+    occupancy: Welford,
+}
+
+impl Default for ServeMetrics {
+    fn default() -> Self {
+        ServeMetrics {
+            admitted: 0,
+            completed: 0,
+            tokens: 0,
+            rounds: 0,
+            replans: 0,
+            invalid: 0,
+            queue_wait: Welford::default(),
+            latency_p50: P2Quantile::new(0.5),
+            latency_p99: P2Quantile::new(0.99),
+            latency_mean: Welford::default(),
+            occupancy: Welford::default(),
+        }
+    }
+}
+
+impl ServeMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A request left the queue for a slot after waiting `wait_s`.
+    pub fn on_admit(&mut self, wait_s: f64) {
+        self.admitted += 1;
+        self.queue_wait.add(wait_s.max(0.0));
+    }
+
+    /// A request finished `latency_s` after arrival. (Tokens are counted
+    /// per-round by [`ServeMetrics::on_round`].)
+    pub fn on_finish(&mut self, latency_s: f64) {
+        self.completed += 1;
+        let l = latency_s.max(0.0);
+        self.latency_p50.add(l);
+        self.latency_p99.add(l);
+        self.latency_mean.add(l);
+    }
+
+    /// One engine round ran at `occupancy` live slots and generated
+    /// `generated` tokens.
+    pub fn on_round(&mut self, occupancy: usize, generated: u64) {
+        self.rounds += 1;
+        self.tokens += generated;
+        self.occupancy.add(occupancy as f64);
+    }
+
+    pub fn mean_queue_wait_s(&self) -> f64 {
+        self.queue_wait.mean()
+    }
+
+    pub fn latency_p50_s(&self) -> f64 {
+        self.latency_p50.value()
+    }
+
+    pub fn latency_p99_s(&self) -> f64 {
+        self.latency_p99.value()
+    }
+
+    pub fn mean_latency_s(&self) -> f64 {
+        self.latency_mean.mean()
+    }
+
+    /// Round-weighted mean live batch size.
+    pub fn mean_occupancy(&self) -> f64 {
+        self.occupancy.mean()
+    }
+
+    /// Sustained throughput over `wall_s` seconds of serving.
+    pub fn tokens_per_second(&self, wall_s: f64) -> f64 {
+        if wall_s > 0.0 {
+            self.tokens as f64 / wall_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Machine-readable snapshot (BENCH_serve.json rows, demo output).
+    pub fn to_json(&self, wall_s: f64) -> Json {
+        Json::obj(vec![
+            ("admitted", Json::num(self.admitted as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("tokens", Json::num(self.tokens as f64)),
+            ("rounds", Json::num(self.rounds as f64)),
+            ("replans", Json::num(self.replans as f64)),
+            ("invalid", Json::num(self.invalid as f64)),
+            ("tokens_per_s", Json::num(self.tokens_per_second(wall_s))),
+            ("mean_queue_wait_s", Json::num(self.mean_queue_wait_s())),
+            ("latency_p50_s", Json::num(self.latency_p50_s())),
+            ("latency_p99_s", Json::num(self.latency_p99_s())),
+            ("mean_latency_s", Json::num(self.mean_latency_s())),
+            ("mean_occupancy", Json::num(self.mean_occupancy())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let mut m = ServeMetrics::new();
+        m.on_admit(0.1);
+        m.on_admit(0.3);
+        m.on_round(2, 5);
+        m.on_round(1, 2);
+        m.on_finish(1.0);
+        assert_eq!(m.admitted, 2);
+        assert_eq!(m.completed, 1);
+        assert_eq!(m.tokens, 7);
+        assert_eq!(m.rounds, 2);
+        assert!((m.mean_queue_wait_s() - 0.2).abs() < 1e-12);
+        assert!((m.mean_occupancy() - 1.5).abs() < 1e-12);
+        assert!((m.tokens_per_second(7.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_quantiles_ordered() {
+        let mut m = ServeMetrics::new();
+        let mut rng = crate::util::Rng::new(3);
+        for _ in 0..2000 {
+            m.on_finish(rng.lognormal(-1.0, 0.7));
+        }
+        assert!(m.latency_p99_s() >= m.latency_p50_s());
+        assert!(m.mean_latency_s() > 0.0);
+    }
+
+    #[test]
+    fn json_snapshot_has_headline_fields() {
+        let mut m = ServeMetrics::new();
+        m.on_round(3, 12);
+        let j = m.to_json(2.0);
+        assert_eq!(j.get("tokens").as_f64(), Some(12.0));
+        assert_eq!(j.get("tokens_per_s").as_f64(), Some(6.0));
+        assert_eq!(j.get("mean_occupancy").as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn negative_times_clamped() {
+        let mut m = ServeMetrics::new();
+        m.on_admit(-0.5);
+        m.on_finish(-1.0);
+        assert_eq!(m.mean_queue_wait_s(), 0.0);
+        assert_eq!(m.latency_p50_s(), 0.0);
+    }
+}

@@ -1,0 +1,37 @@
+//! Continuous-batching rollout server.
+//!
+//! The engine below this layer is slot-dynamic (`Worker::admit` /
+//! `Worker::retire`); this module turns it into a *server*: requests
+//! arrive open-loop, wait in a bounded priority [`AdmissionQueue`], get
+//! prefill-joined into free KV slots ([`SlotAllocator`]), and leave as
+//! they finish — so batch occupancy tracks offered load instead of being
+//! fixed at construction. Because occupancy is the variable the paper's
+//! TGS model keys on (§4.1), the loop replans speculation — window via
+//! Algorithm 1, method advisory via the ladder — whenever occupancy
+//! crosses a bucket boundary ([`Replanner`]), and reports rolling
+//! latency/throughput/occupancy telemetry ([`ServeMetrics`]).
+//!
+//! Losslessness survives continuous batching: the sampling tape is keyed
+//! by (seed, request id, position), never by slot or batch composition,
+//! so a request's tokens are identical whether it ran in a static batch
+//! or joined mid-flight (`rust/tests/serve_lossless.rs`).
+//!
+//! Entry points: `specactor serve` (open-loop arrivals from
+//! `sim::traces::ArrivalProcess`), `examples/serve_demo.rs`, and
+//! `benches/serve_throughput.rs` (BENCH_serve.json). See PERF.md
+//! §Serving for the slot lifecycle and the occupancy→replan policy.
+
+pub mod batcher;
+pub mod metrics;
+pub mod queue;
+pub mod replan;
+pub mod slots;
+
+pub use batcher::{
+    drive_open_loop, Batcher, FinishedRequest, OpenLoopReport, ServeEngine, SyntheticEngine,
+    TickReport,
+};
+pub use metrics::ServeMetrics;
+pub use queue::{AdmissionQueue, Priority};
+pub use replan::{Replanner, ServePlan};
+pub use slots::SlotAllocator;

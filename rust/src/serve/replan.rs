@@ -1,0 +1,271 @@
+//! Concurrency-aware replanning (the serving-side analogue of §4.1).
+//!
+//! The paper's central observation is that the profitable draft window —
+//! and even the profitable draft *method* — depends on the per-worker
+//! batch size: verification cost grows with batch (affine `V_w(b)`), so
+//! larger live batches want smaller windows. Under continuous batching
+//! the live batch (occupancy) changes every round, so the serve loop
+//! re-runs Algorithm 1 ([`search`]) and re-consults the [`Ladder`] — but
+//! only when occupancy crosses a *bucket boundary*, the same hysteresis
+//! trick the AOT bucket table uses: replanning on every ±1 occupancy
+//! change would thrash, while bucket-granular replanning is at most
+//! `O(log capacity)` plan switches per load swing.
+//!
+//! The planned **window** is applied directly (the engine verifies any
+//! lowered `w+1` window); the planned **method** is advisory — the engine
+//! keeps the drafter family it was constructed with (switching a model
+//! drafter mid-flight means migrating its KV rows), and the batcher
+//! surfaces the recommendation through [`ServePlan::method`] / metrics so
+//! an operator (or a future reconfiguration pass) can act on it.
+
+use crate::ladder::Ladder;
+use crate::planner::costmodel::CostModel;
+use crate::planner::plan::{search, PlanInput};
+use crate::runtime::Manifest;
+use crate::sim::TraceConfig;
+
+/// The replanner's current decision for the live occupancy bucket.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServePlan {
+    /// Ladder-selected draft method for this occupancy (advisory).
+    pub method: String,
+    /// Draft window the engine runs next rounds with (applied).
+    /// `0` means Algorithm 1 found no speculative plan beating vanilla at
+    /// this occupancy — the batcher runs plain decode rounds.
+    pub window: usize,
+    /// Occupancy bucket (upper bound) this plan was computed for.
+    pub bucket: usize,
+    /// Modelled speedup over vanilla decoding at this occupancy.
+    pub modelled_speedup: f64,
+}
+
+/// Occupancy-bucketed replanner over the analytic cost model.
+#[derive(Debug)]
+pub struct Replanner {
+    cost: CostModel,
+    profiled: Vec<(String, f64)>,
+    /// Sorted occupancy bucket upper bounds (last one is open-ended).
+    buckets: Vec<usize>,
+    /// Draft windows the runtime can actually verify (lowered step window
+    /// minus the bonus position), ascending.
+    allowed_windows: Vec<usize>,
+    max_window: usize,
+    current: Option<usize>,
+    pub plan: ServePlan,
+}
+
+impl Replanner {
+    /// `buckets` are occupancy boundaries (e.g. the manifest's batch
+    /// buckets); `allowed_windows` the verifiable draft windows (from the
+    /// manifest's lowered step windows: `w - 1` for each `w >= 2`).
+    pub fn new(
+        cost: CostModel,
+        profiled: Vec<(String, f64)>,
+        buckets: Vec<usize>,
+        allowed_windows: Vec<usize>,
+        max_window: usize,
+    ) -> Self {
+        let mut buckets: Vec<usize> = buckets.into_iter().filter(|&b| b > 0).collect();
+        buckets.sort_unstable();
+        buckets.dedup();
+        if buckets.is_empty() {
+            buckets.push(1);
+        }
+        // an empty list (no verifiable speculative window lowered) is kept
+        // empty: plan_for then always emits window 0 — vanilla rounds —
+        // instead of a window the engine would refuse to verify
+        let mut allowed_windows: Vec<usize> =
+            allowed_windows.into_iter().filter(|&w| w > 0).collect();
+        allowed_windows.sort_unstable();
+        allowed_windows.dedup();
+        let mut r = Replanner {
+            cost,
+            profiled,
+            buckets,
+            allowed_windows,
+            max_window: max_window.max(1),
+            current: None,
+            plan: ServePlan {
+                method: String::new(),
+                window: 1,
+                bucket: 0,
+                modelled_speedup: 1.0,
+            },
+        };
+        // seed an initial plan for the smallest bucket (the first
+        // on_occupancy call establishes the real bucket)
+        r.plan = r.plan_for(r.buckets[0]);
+        r
+    }
+
+    /// Replanner wired to a lowered artifact set: occupancy buckets from
+    /// the manifest's batch buckets, verifiable draft windows from its
+    /// lowered step windows (`w - 1` for each `w >= 2`).
+    pub fn for_manifest(
+        m: &Manifest,
+        cost: CostModel,
+        profiled: Vec<(String, f64)>,
+        max_window: usize,
+    ) -> Self {
+        let allowed: Vec<usize> = m.windows.iter().filter(|&&w| w >= 2).map(|w| w - 1).collect();
+        Self::new(cost, profiled, m.batch_buckets.clone(), allowed, max_window)
+    }
+
+    /// Default replanner for engines without a manifest (the synthetic
+    /// smoke engine and artifact-less bench fallback): the default AOT
+    /// bucket/window grid with the paper-profiled 32B acceptance table.
+    pub fn synthetic() -> Self {
+        Self::new(
+            CostModel::paper_32b(),
+            TraceConfig::grpo_32b_20k().profiled_acceptance(),
+            vec![1, 2, 4, 8, 16, 32],
+            vec![1, 3, 7],
+            7,
+        )
+    }
+
+    fn bucket_of(&self, occ: usize) -> usize {
+        self.buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= occ)
+            .unwrap_or(*self.buckets.last().unwrap())
+    }
+
+    /// Report the live occupancy. Returns the fresh plan when the
+    /// occupancy crossed a bucket boundary (replan), None otherwise.
+    pub fn on_occupancy(&mut self, occ: usize) -> Option<&ServePlan> {
+        let b = self.bucket_of(occ.max(1));
+        if self.current == Some(b) {
+            return None;
+        }
+        self.current = Some(b);
+        self.plan = self.plan_for(b);
+        Some(&self.plan)
+    }
+
+    /// Ladder selection + Algorithm 1 window search at batch `b`.
+    fn plan_for(&self, b: usize) -> ServePlan {
+        // representative profiling window for the ladder curves (the
+        // search below picks the actually-run window)
+        let ladder = Ladder::build(&self.cost, b, 4, &self.profiled);
+        let sel = ladder.select_initial();
+        let method = sel.method.clone();
+        let accept_p = sel.profiled_p;
+        let plan = search(
+            &self.cost,
+            &PlanInput {
+                global_batch: b,
+                // single-replica serving: one drafter + one verifier slice
+                gpus: 2 * self.cost.g_ref,
+                verifier_configs: vec![self.cost.g_ref],
+                accept_p,
+                method: method.clone(),
+                max_window: self.max_window,
+                fixed_batch: Some(b),
+            },
+        );
+        let (window, speedup) = match plan {
+            // clamp to a window the lowered executables can verify; when
+            // even the smallest verifiable window exceeds the plan, vanilla
+            // decoding is closer to the planner's intent than over-drafting
+            Some(p) => (
+                self.allowed_windows.iter().copied().filter(|&w| w <= p.w).max().unwrap_or(0),
+                p.speedup,
+            ),
+            // Algorithm 1 found no speculative plan beating vanilla
+            // ("w = 0 encoded as None"): run plain decode rounds.
+            None => (0, 1.0),
+        };
+        ServePlan { method, window, bucket: b, modelled_speedup: speedup }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn profiled() -> Vec<(String, f64)> {
+        vec![
+            ("draft_mid".to_string(), 0.82),
+            ("draft_small".to_string(), 0.74),
+            ("ngram".to_string(), 0.40),
+        ]
+    }
+
+    fn mk() -> Replanner {
+        Replanner::new(
+            CostModel::paper_32b(),
+            profiled(),
+            vec![1, 4, 8, 16, 32],
+            vec![1, 3, 7],
+            7,
+        )
+    }
+
+    #[test]
+    fn replans_only_on_bucket_crossings() {
+        let mut r = mk();
+        assert!(r.on_occupancy(1).is_some()); // establishes bucket 1
+        assert!(r.on_occupancy(1).is_none());
+        assert!(r.on_occupancy(2).is_some()); // 1 -> 4
+        assert!(r.on_occupancy(3).is_none()); // still bucket 4
+        assert!(r.on_occupancy(4).is_none());
+        assert!(r.on_occupancy(5).is_some()); // 4 -> 8
+        assert!(r.on_occupancy(2).is_some()); // back down
+    }
+
+    #[test]
+    fn windows_are_verifiable_and_bounded() {
+        let mut r = mk();
+        for occ in [1usize, 3, 7, 12, 30, 100] {
+            r.on_occupancy(occ);
+            // 0 = vanilla (no profitable speculative plan); otherwise the
+            // window must be one the lowered executables can verify
+            assert!(
+                [0usize, 1, 3, 7].contains(&r.plan.window),
+                "occ {occ}: window {} not lowered",
+                r.plan.window
+            );
+            assert!(r.plan.bucket >= occ.min(32));
+            assert!(r.plan.modelled_speedup.is_finite());
+        }
+    }
+
+    #[test]
+    fn picks_a_model_drafter_at_paper_acceptances() {
+        let mut r = mk();
+        r.on_occupancy(8);
+        assert_ne!(r.plan.method, "ngram");
+        assert!(r.plan.modelled_speedup > 1.0);
+    }
+
+    #[test]
+    fn beyond_largest_bucket_clamps() {
+        let mut r = mk();
+        r.on_occupancy(32);
+        let b32 = r.plan.clone();
+        // occupancy above every bucket maps to the last bucket: no replan
+        assert!(r.on_occupancy(1000).is_none());
+        assert_eq!(r.plan, b32);
+    }
+
+    #[test]
+    fn no_verifiable_window_means_vanilla() {
+        // artifacts lowering only the vanilla window (allowed = []) must
+        // plan window 0 — plain decode rounds — never a window the engine
+        // would refuse to verify
+        let mut r = Replanner::new(CostModel::paper_32b(), profiled(), vec![], vec![], 4);
+        r.on_occupancy(5);
+        assert_eq!(r.plan.window, 0);
+        assert!(!r.plan.method.is_empty());
+    }
+
+    #[test]
+    fn synthetic_replanner_plans() {
+        let mut r = Replanner::synthetic();
+        r.on_occupancy(4);
+        assert!([0usize, 1, 3, 7].contains(&r.plan.window));
+        assert!(!r.plan.method.is_empty());
+    }
+}

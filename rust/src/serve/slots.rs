@@ -1,0 +1,122 @@
+//! Per-sequence KV slot allocator.
+//!
+//! The engine's `KvCache` is a fixed `[L, bucket, S, h, dh]` arena; each
+//! live request owns one batch row ("slot"). This allocator hands slots
+//! out and takes them back with a LIFO free list, so a freshly retired
+//! slot — whose cache row was just touched and is hot in the host's
+//! caches — is the first one reused by the next admission. The engine
+//! layer (`Worker::admit`/`retire`) does the actual row writes; this type
+//! only decides *which* row.
+
+use anyhow::{bail, Result};
+
+#[derive(Debug)]
+pub struct SlotAllocator {
+    /// Free slot indices, LIFO (last freed = first reused).
+    free: Vec<usize>,
+    live: Vec<bool>,
+    /// Peak concurrent occupancy observed.
+    pub high_water: usize,
+}
+
+impl SlotAllocator {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "slot capacity must be positive");
+        SlotAllocator {
+            // reversed so initial allocation order is 0, 1, 2, ...
+            free: (0..capacity).rev().collect(),
+            live: vec![false; capacity],
+            high_water: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.live.len()
+    }
+
+    pub fn occupancy(&self) -> usize {
+        self.live.len() - self.free.len()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.free.is_empty()
+    }
+
+    pub fn is_live(&self, slot: usize) -> bool {
+        self.live.get(slot).copied().unwrap_or(false)
+    }
+
+    /// Claim a free slot (None when the batch is full).
+    pub fn alloc(&mut self) -> Option<usize> {
+        let slot = self.free.pop()?;
+        self.live[slot] = true;
+        self.high_water = self.high_water.max(self.occupancy());
+        Some(slot)
+    }
+
+    /// Return a slot to the free list.
+    pub fn release(&mut self, slot: usize) -> Result<()> {
+        if slot >= self.live.len() {
+            bail!("slot {slot} out of range (capacity {})", self.live.len());
+        }
+        if !self.live[slot] {
+            bail!("slot {slot} double-released");
+        }
+        self.live[slot] = false;
+        self.free.push(slot);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocates_in_order_and_exhausts() {
+        let mut s = SlotAllocator::new(3);
+        assert_eq!(s.alloc(), Some(0));
+        assert_eq!(s.alloc(), Some(1));
+        assert_eq!(s.alloc(), Some(2));
+        assert_eq!(s.alloc(), None);
+        assert!(s.is_full());
+        assert_eq!(s.occupancy(), 3);
+        assert_eq!(s.high_water, 3);
+    }
+
+    #[test]
+    fn lifo_reuse_of_freed_slots() {
+        let mut s = SlotAllocator::new(4);
+        for _ in 0..3 {
+            s.alloc();
+        }
+        s.release(1).unwrap();
+        s.release(0).unwrap();
+        // last freed first reused
+        assert_eq!(s.alloc(), Some(0));
+        assert_eq!(s.alloc(), Some(1));
+        assert_eq!(s.alloc(), Some(3));
+    }
+
+    #[test]
+    fn release_errors() {
+        let mut s = SlotAllocator::new(2);
+        assert!(s.release(0).is_err()); // never allocated
+        assert!(s.release(9).is_err()); // out of range
+        let slot = s.alloc().unwrap();
+        s.release(slot).unwrap();
+        assert!(s.release(slot).is_err()); // double release
+    }
+
+    #[test]
+    fn occupancy_tracks_high_water() {
+        let mut s = SlotAllocator::new(8);
+        let a = s.alloc().unwrap();
+        let _b = s.alloc().unwrap();
+        s.release(a).unwrap();
+        assert_eq!(s.occupancy(), 1);
+        assert_eq!(s.high_water, 2);
+        assert!(s.is_live(1));
+        assert!(!s.is_live(a));
+    }
+}

@@ -12,4 +12,4 @@ pub mod traces;
 
 pub use rollout::{simulate_step, Policy, Segment, StepResult};
 pub use scale::scaled;
-pub use traces::{gen_step_requests, ReqClass, SimRequest, TraceConfig};
+pub use traces::{gen_step_requests, ArrivalProcess, ReqClass, SimRequest, TraceConfig};

@@ -165,6 +165,96 @@ impl TraceConfig {
     }
 }
 
+/// Open-loop arrival processes: request arrival times are generated
+/// independently of completions (the serving regime, as opposed to the
+/// closed per-training-step batches above). Shared by the cluster
+/// simulator, the `serve` subsystem's CLI/demo drivers and
+/// `benches/serve_throughput.rs`, all with seeded [`Rng`] determinism.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalProcess {
+    /// Memoryless arrivals: i.i.d. exponential inter-arrival times at
+    /// `rate` requests/second.
+    Poisson { rate: f64 },
+    /// Markov-modulated Poisson (bursty): the process alternates between a
+    /// quiet state (`rate_lo`) and a burst state (`rate_hi`), with
+    /// exponential state dwell times of mean `mean_dwell_s` seconds.
+    Bursty { rate_lo: f64, rate_hi: f64, mean_dwell_s: f64 },
+}
+
+impl ArrivalProcess {
+    /// Bursty process whose **long-run mean** equals `rate` (so
+    /// poisson-vs-bursty comparisons run at the same offered load): a
+    /// quiet state at `0.25·rate` and a burst state at `1.75·rate` with
+    /// equal expected dwell, mean `(0.25 + 1.75)/2 · rate = rate`.
+    pub fn bursty_with_mean(rate: f64) -> ArrivalProcess {
+        assert!(rate > 0.0, "bursty mean rate must be positive");
+        ArrivalProcess::Bursty {
+            rate_lo: 0.25 * rate,
+            rate_hi: 1.75 * rate,
+            mean_dwell_s: 0.5,
+        }
+    }
+
+    /// Sample `n` absolute arrival times (seconds, ascending from 0).
+    pub fn sample(&self, n: usize, rng: &mut Rng) -> Vec<f64> {
+        let mut out = Vec::with_capacity(n);
+        match *self {
+            ArrivalProcess::Poisson { rate } => {
+                assert!(rate > 0.0, "poisson rate must be positive");
+                let mut t = 0.0;
+                for _ in 0..n {
+                    t += rng.exponential(rate);
+                    out.push(t);
+                }
+            }
+            ArrivalProcess::Bursty { rate_lo, rate_hi, mean_dwell_s } => {
+                assert!(
+                    rate_lo > 0.0 && rate_hi > 0.0 && mean_dwell_s > 0.0,
+                    "bursty parameters must be positive"
+                );
+                let mut t = 0.0;
+                let mut hi = false;
+                // time left in the current modulating state
+                let mut dwell = rng.exponential(1.0 / mean_dwell_s);
+                while out.len() < n {
+                    let rate = if hi { rate_hi } else { rate_lo };
+                    let inter = rng.exponential(rate);
+                    if inter < dwell {
+                        // next arrival lands inside the current state
+                        t += inter;
+                        dwell -= inter;
+                        out.push(t);
+                    } else {
+                        // state switches before the tentative arrival; the
+                        // exponential's memorylessness lets us resample
+                        // from the switch point.
+                        t += dwell;
+                        hi = !hi;
+                        dwell = rng.exponential(1.0 / mean_dwell_s);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Long-run mean arrival rate (requests/second).
+    pub fn mean_rate(&self) -> f64 {
+        match *self {
+            ArrivalProcess::Poisson { rate } => rate,
+            // equal expected dwell in each state -> average of the rates
+            ArrivalProcess::Bursty { rate_lo, rate_hi, .. } => 0.5 * (rate_lo + rate_hi),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ArrivalProcess::Poisson { .. } => "poisson",
+            ArrivalProcess::Bursty { .. } => "bursty",
+        }
+    }
+}
+
 /// One simulated rollout request.
 #[derive(Clone, Debug)]
 pub struct SimRequest {
@@ -325,6 +415,72 @@ mod tests {
         // and the majority still prefers a model drafter
         let ngram_share = *winners.get("ngram").unwrap_or(&0) as f64 / reqs.len() as f64;
         assert!(ngram_share > 0.02 && ngram_share < 0.5, "ngram share {ngram_share}");
+    }
+
+    fn inter_arrivals(ts: &[f64]) -> Vec<f64> {
+        let mut prev = 0.0;
+        ts.iter()
+            .map(|&t| {
+                let d = t - prev;
+                prev = t;
+                d
+            })
+            .collect()
+    }
+
+    #[test]
+    fn poisson_arrivals_match_rate() {
+        let p = ArrivalProcess::Poisson { rate: 20.0 };
+        let mut rng = Rng::new(3);
+        let ts = p.sample(20_000, &mut rng);
+        assert_eq!(ts.len(), 20_000);
+        assert!(ts.windows(2).all(|w| w[1] >= w[0]), "arrival times not sorted");
+        let gaps = inter_arrivals(&ts);
+        let mean = crate::util::stats::mean(&gaps);
+        assert!((mean - 0.05).abs() < 0.005, "mean inter-arrival {mean} != 1/rate");
+        // exponential gaps: coefficient of variation ~ 1
+        let cv = crate::util::stats::stddev(&gaps) / mean;
+        assert!((cv - 1.0).abs() < 0.1, "poisson CV {cv}");
+    }
+
+    #[test]
+    fn bursty_arrivals_are_burstier_than_poisson() {
+        let b = ArrivalProcess::Bursty { rate_lo: 4.0, rate_hi: 80.0, mean_dwell_s: 0.5 };
+        let mut rng = Rng::new(9);
+        let ts = b.sample(20_000, &mut rng);
+        let gaps = inter_arrivals(&ts);
+        let mean = crate::util::stats::mean(&gaps);
+        let cv = crate::util::stats::stddev(&gaps) / mean;
+        assert!(cv > 1.3, "bursty CV {cv} not burstier than poisson");
+        // long-run rate lands between the two state rates
+        let rate = ts.len() as f64 / ts.last().unwrap();
+        assert!(rate > 4.0 && rate < 80.0, "bursty rate {rate} outside state rates");
+    }
+
+    #[test]
+    fn bursty_with_mean_preserves_offered_load() {
+        let p = ArrivalProcess::bursty_with_mean(20.0);
+        assert!((p.mean_rate() - 20.0).abs() < 1e-9);
+        let mut rng = Rng::new(31);
+        let ts = p.sample(40_000, &mut rng);
+        let realized = ts.len() as f64 / ts.last().unwrap();
+        assert!(
+            (realized - 20.0).abs() / 20.0 < 0.15,
+            "realized bursty rate {realized} far from requested 20"
+        );
+    }
+
+    #[test]
+    fn arrivals_are_seed_deterministic() {
+        for p in [
+            ArrivalProcess::Poisson { rate: 10.0 },
+            ArrivalProcess::Bursty { rate_lo: 2.0, rate_hi: 40.0, mean_dwell_s: 1.0 },
+        ] {
+            let a = p.sample(64, &mut Rng::new(42));
+            let b = p.sample(64, &mut Rng::new(42));
+            assert_eq!(a, b, "{} not deterministic", p.label());
+            assert!(p.mean_rate() > 0.0);
+        }
     }
 
     #[test]

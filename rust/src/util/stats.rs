@@ -147,6 +147,121 @@ impl Histogram {
     }
 }
 
+/// Streaming quantile estimator with fixed O(1) state: the P² algorithm
+/// (Jain & Chlamtáč 1985). Five markers track (min, q/2, q, (1+q)/2, max)
+/// positions; each observation adjusts the middle markers by a parabolic
+/// (falling back to linear) interpolation, so no sample buffer is kept.
+/// `serve/metrics.rs` uses one per tracked latency quantile — a serving
+/// loop cannot afford an unbounded sample vector per percentile.
+#[derive(Clone, Debug)]
+pub struct P2Quantile {
+    q: f64,
+    /// Observations seen. Below 5 the estimator falls back to the exact
+    /// percentile of the stored prefix.
+    n: u64,
+    heights: [f64; 5],
+    pos: [f64; 5],
+    desired: [f64; 5],
+    incr: [f64; 5],
+}
+
+impl P2Quantile {
+    pub fn new(q: f64) -> Self {
+        assert!((0.0..=1.0).contains(&q), "quantile {q} outside [0, 1]");
+        P2Quantile {
+            q,
+            n: 0,
+            heights: [0.0; 5],
+            pos: [1.0, 2.0, 3.0, 4.0, 5.0],
+            desired: [1.0, 1.0 + 2.0 * q, 1.0 + 4.0 * q, 3.0 + 2.0 * q, 5.0],
+            incr: [0.0, q / 2.0, q, (1.0 + q) / 2.0, 1.0],
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn add(&mut self, x: f64) {
+        if self.n < 5 {
+            self.heights[self.n as usize] = x;
+            self.n += 1;
+            if self.n == 5 {
+                self.heights.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            }
+            return;
+        }
+        // Locate the cell k with heights[k] <= x < heights[k+1], extending
+        // the extreme markers when x falls outside them.
+        let h = &mut self.heights;
+        let k = if x < h[0] {
+            h[0] = x;
+            0
+        } else if x >= h[4] {
+            h[4] = x;
+            3
+        } else {
+            // x in [h[0], h[4]): find the first marker above it.
+            let mut k = 0;
+            for i in 1..4 {
+                if x >= h[i] {
+                    k = i;
+                }
+            }
+            k
+        };
+        for p in self.pos[k + 1..].iter_mut() {
+            *p += 1.0;
+        }
+        for (d, inc) in self.desired.iter_mut().zip(self.incr) {
+            *d += inc;
+        }
+        // Adjust the three interior markers toward their desired positions.
+        for i in 1..4 {
+            let d = self.desired[i] - self.pos[i];
+            let right = self.pos[i + 1] - self.pos[i];
+            let left = self.pos[i - 1] - self.pos[i];
+            if (d >= 1.0 && right > 1.0) || (d <= -1.0 && left < -1.0) {
+                let s = if d >= 1.0 { 1.0 } else { -1.0 };
+                let hp = self.parabolic(i, s);
+                self.heights[i] = if self.heights[i - 1] < hp && hp < self.heights[i + 1] {
+                    hp
+                } else {
+                    self.linear(i, s)
+                };
+                self.pos[i] += s;
+            }
+        }
+        self.n += 1;
+    }
+
+    fn parabolic(&self, i: usize, s: f64) -> f64 {
+        let (h, p) = (&self.heights, &self.pos);
+        h[i] + s / (p[i + 1] - p[i - 1])
+            * ((p[i] - p[i - 1] + s) * (h[i + 1] - h[i]) / (p[i + 1] - p[i])
+                + (p[i + 1] - p[i] - s) * (h[i] - h[i - 1]) / (p[i] - p[i - 1]))
+    }
+
+    fn linear(&self, i: usize, s: f64) -> f64 {
+        let j = if s > 0.0 { i + 1 } else { i - 1 };
+        self.heights[i]
+            + s * (self.heights[j] - self.heights[i]) / (self.pos[j] - self.pos[i])
+    }
+
+    /// Current quantile estimate (0.0 before any observation).
+    pub fn value(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        if self.n < 5 {
+            let mut v = self.heights[..self.n as usize].to_vec();
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            return percentile_sorted(&v, self.q * 100.0);
+        }
+        self.heights[2]
+    }
+}
+
 /// Streaming mean/var accumulator (Welford).
 #[derive(Clone, Debug, Default)]
 pub struct Welford {
@@ -242,6 +357,63 @@ mod tests {
         h.add(5.0);
         assert_eq!(h.bins[0], 1);
         assert_eq!(h.bins[3], 1);
+    }
+
+    #[test]
+    fn p2_small_streams_are_exact() {
+        let mut p = P2Quantile::new(0.5);
+        assert_eq!(p.value(), 0.0);
+        for x in [3.0, 1.0, 2.0] {
+            p.add(x);
+        }
+        assert!((p.value() - 2.0).abs() < 1e-12);
+        assert_eq!(p.count(), 3);
+    }
+
+    #[test]
+    fn p2_median_of_uniform() {
+        let mut rng = crate::util::Rng::new(5);
+        let mut p = P2Quantile::new(0.5);
+        for _ in 0..20_000 {
+            p.add(rng.next_f64());
+        }
+        assert!((p.value() - 0.5).abs() < 0.02, "p50 = {}", p.value());
+    }
+
+    #[test]
+    fn p2_tail_quantile_tracks_exact() {
+        // heavy-tailed stream: p99 estimate within 15% of the exact value
+        let mut rng = crate::util::Rng::new(11);
+        let xs: Vec<f64> = (0..30_000).map(|_| rng.lognormal(0.0, 1.0)).collect();
+        let mut p = P2Quantile::new(0.99);
+        for &x in &xs {
+            p.add(x);
+        }
+        let exact = percentile(&xs, 99.0);
+        let rel = (p.value() - exact).abs() / exact;
+        assert!(rel < 0.15, "p99 est {} vs exact {exact}", p.value());
+    }
+
+    #[test]
+    fn p2_constant_stream() {
+        let mut p = P2Quantile::new(0.9);
+        for _ in 0..100 {
+            p.add(4.25);
+        }
+        assert_eq!(p.value(), 4.25);
+    }
+
+    #[test]
+    fn p2_quantiles_ordered() {
+        let mut rng = crate::util::Rng::new(23);
+        let mut p50 = P2Quantile::new(0.5);
+        let mut p99 = P2Quantile::new(0.99);
+        for _ in 0..5_000 {
+            let x = rng.lognormal(1.0, 0.8);
+            p50.add(x);
+            p99.add(x);
+        }
+        assert!(p99.value() > p50.value());
     }
 
     #[test]

@@ -26,18 +26,10 @@ impl Leak for std::path::PathBuf {
 }
 
 fn mk_requests(rt: &Runtime, n: usize, budget: usize) -> Vec<Request> {
-    let m = &rt.manifest;
-    let p = m.prompt_len;
-    let vocab = rt.model(&m.target).unwrap().vocab as i32;
+    // request 0 starts in the quiet region, later ones spread out
+    // (different acceptance behaviour per request)
     (0..n)
-        .map(|i| {
-            // request 0 starts in the quiet region, later ones spread out
-            // (different acceptance behaviour per request)
-            let start = m.reserved + (i as i32 * 83) % (vocab - m.reserved);
-            let prompt: Vec<i32> =
-                (0..p).map(|j| m.reserved + (start + j as i32) % (vocab - m.reserved)).collect();
-            Request::new(i as u64, prompt, budget)
-        })
+        .map(|i| Request::new(i as u64, rt.manifest.synth_prompt(i as u64).unwrap(), budget))
         .collect()
 }
 

@@ -1,0 +1,182 @@
+//! Serving losslessness over the real AOT artifacts: continuous batching
+//! with staggered admits and retires must produce token-identical outputs
+//! to a static-batch rollout of the same requests — joining a batch
+//! mid-flight, waiting in the queue, or landing in a recycled slot must
+//! never change a request's tokens. The sampling tape is keyed by
+//! (seed, request id, position), never by slot or batch composition, so
+//! this is the serve-loop extension of `losslessness.rs`.
+//!
+//! Requires `make artifacts`.
+
+use std::path::Path;
+
+use specactor::drafter::DraftMethod;
+use specactor::engine::{EngineConfig, Request, SpecMode, Worker};
+use specactor::planner::costmodel::CostModel;
+use specactor::runtime::Runtime;
+use specactor::serve::{Batcher, Priority, Replanner};
+use specactor::sim::TraceConfig;
+
+fn art() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn mk_requests(rt: &Runtime, n: usize, budget: usize) -> Vec<Request> {
+    (0..n)
+        .map(|i| Request::new(i as u64, rt.manifest.synth_prompt(i as u64).unwrap(), budget))
+        .collect()
+}
+
+/// Static-batch vanilla rollout: the losslessness oracle.
+fn vanilla_outputs(rt: &Runtime, n: usize, budget: usize) -> Vec<Vec<i32>> {
+    let cfg = EngineConfig { mode: SpecMode::Vanilla, ..Default::default() };
+    let mut w = Worker::new(rt, cfg, mk_requests(rt, n, budget)).unwrap();
+    w.rollout_vanilla().unwrap();
+    w.outputs()
+}
+
+fn replanner(rt: &Runtime) -> Replanner {
+    Replanner::for_manifest(
+        &rt.manifest,
+        CostModel::paper_32b(),
+        TraceConfig::grpo_32b_20k().profiled_acceptance(),
+        3,
+    )
+}
+
+/// Serve `reqs` through the continuous-batching loop with staggered
+/// arrivals (one request every `stagger` ticks), returning outputs by id.
+fn serve_outputs(
+    rt: &Runtime,
+    cfg: EngineConfig,
+    capacity: usize,
+    reqs: Vec<Request>,
+    stagger: usize,
+    spec: bool,
+) -> Vec<Vec<i32>> {
+    let n = reqs.len();
+    let worker = Worker::with_capacity(rt, cfg, capacity).unwrap();
+    let mut b = Batcher::new(worker, 2 * n.max(1), replanner(rt), spec);
+    let mut now = 0.0f64;
+    let mut pending = reqs.into_iter();
+    let mut next_at = 0usize;
+    let mut tick_no = 0usize;
+    let mut remaining = n;
+    loop {
+        // staggered open-loop arrivals: one request every `stagger` ticks
+        while remaining > 0 && tick_no >= next_at {
+            let req = pending.next().unwrap();
+            assert!(b.enqueue(req, Priority::Batch, now), "queue rejected under test sizing");
+            remaining -= 1;
+            next_at += stagger.max(1);
+        }
+        if remaining == 0 && b.idle() {
+            break;
+        }
+        if b.idle() {
+            // nothing in flight yet; jump to the next scheduled arrival
+            tick_no = next_at;
+            now = next_at as f64 * 0.01;
+            continue;
+        }
+        b.tick(now).unwrap();
+        tick_no += 1;
+        now += 0.01;
+        assert!(tick_no < 10_000, "serve loop did not converge");
+    }
+    let mut fin = b.drain_finished();
+    assert_eq!(fin.len(), n, "not all requests served");
+    fin.sort_by_key(|f| f.req.id);
+    fin.iter().map(|f| f.req.seq[f.req.prompt.len()..].to_vec()).collect()
+}
+
+/// Single-slot server: every request is admitted into the same recycled
+/// slot via the staging-prefill path (admit → serve → retire → admit),
+/// fully serialized. The purest test of slot-reuse losslessness.
+#[test]
+fn serialized_slot_reuse_is_lossless() {
+    let rt = Runtime::load(&art()).unwrap();
+    let want = vanilla_outputs(&rt, 3, 12);
+    let cfg = EngineConfig {
+        mode: SpecMode::Coupled { window: 3 },
+        drafter: DraftMethod::Sam,
+        ..Default::default()
+    };
+    let got = serve_outputs(&rt, cfg, 1, mk_requests(&rt, 3, 12), 1, true);
+    assert_eq!(got, want, "single-slot serve diverged from static vanilla");
+}
+
+/// Concurrent continuous batching with token drafting: requests join a
+/// running batch mid-flight at staggered ticks, occupancy swings across
+/// replan buckets, and every output must still match static vanilla.
+#[test]
+fn staggered_joins_are_lossless_with_token_drafter() {
+    let rt = Runtime::load(&art()).unwrap();
+    let n = 4;
+    let want = vanilla_outputs(&rt, n, 14);
+    let cfg = EngineConfig {
+        mode: SpecMode::Coupled { window: 3 },
+        drafter: DraftMethod::Sam,
+        ..Default::default()
+    };
+    let got = serve_outputs(&rt, cfg, n, mk_requests(&rt, n, 14), 2, true);
+    assert_eq!(got, want, "staggered continuous batching diverged from static vanilla");
+}
+
+/// Same, with the model drafter: admission must also migrate a prefilled
+/// draft-model cache row into the joined slot, and the catch-up/rollback
+/// machinery must keep working as neighbours join and leave.
+#[test]
+fn staggered_joins_are_lossless_with_model_drafter() {
+    let rt = Runtime::load(&art()).unwrap();
+    let n = 3;
+    let want = vanilla_outputs(&rt, n, 12);
+    let cfg = EngineConfig {
+        mode: SpecMode::Coupled { window: 3 },
+        drafter: DraftMethod::Model("draft_small".to_string()),
+        ..Default::default()
+    };
+    let got = serve_outputs(&rt, cfg, 2, mk_requests(&rt, n, 12), 3, true);
+    assert_eq!(got, want, "model-drafter continuous batching diverged from static vanilla");
+}
+
+/// Continuous batching without speculation (vanilla decode rounds): the
+/// admit/retire machinery alone must be lossless.
+#[test]
+fn vanilla_serving_is_lossless() {
+    let rt = Runtime::load(&art()).unwrap();
+    let n = 3;
+    let want = vanilla_outputs(&rt, n, 10);
+    let cfg = EngineConfig { mode: SpecMode::Vanilla, ..Default::default() };
+    let got = serve_outputs(&rt, cfg, 2, mk_requests(&rt, n, 10), 2, false);
+    assert_eq!(got, want, "vanilla continuous batching diverged from static vanilla");
+}
+
+/// The serve loop must actually exercise continuous batching: with fewer
+/// slots than requests, admissions overlap retirements and the engine
+/// report shows speculation progress.
+#[test]
+fn serve_loop_reports_progress() {
+    let rt = Runtime::load(&art()).unwrap();
+    let n = 3;
+    let cfg = EngineConfig {
+        mode: SpecMode::Coupled { window: 3 },
+        drafter: DraftMethod::Sam,
+        ..Default::default()
+    };
+    let worker = Worker::with_capacity(&rt, cfg, 1).unwrap();
+    let mut b = Batcher::new(worker, 8, replanner(&rt), true);
+    for (i, r) in mk_requests(&rt, n, 10).into_iter().enumerate() {
+        b.enqueue(r, Priority::Batch, i as f64 * 0.01);
+    }
+    let mut now = 0.1;
+    while !b.idle() {
+        b.tick(now).unwrap();
+        now += 0.01;
+    }
+    assert_eq!(b.metrics.completed, n as u64);
+    assert_eq!(b.metrics.tokens, (n * 10) as u64);
+    assert!(b.metrics.mean_queue_wait_s() > 0.0, "capacity 1 must make requests wait");
+    assert!(b.report.drafted_tokens > 0, "speculation never ran");
+    assert!(b.metrics.latency_p99_s() >= b.metrics.latency_p50_s());
+}
