@@ -13,7 +13,7 @@ use std::path::PathBuf;
 
 use anyhow::Result;
 use specactor::coordinator::global::{plan_initial, rollout, GlobalConfig};
-use specactor::engine::{EngineConfig, Request, SpecMode, Worker};
+use specactor::engine::{EngineConfig, Request, Worker};
 use specactor::planner::costmodel::CostModel;
 use specactor::runtime::Runtime;
 use specactor::util::cli::Args;
@@ -42,8 +42,7 @@ fn main() -> Result<()> {
     // vanilla reference (losslessness oracle + baseline timing)
     let reqs: Vec<Request> =
         prompts.iter().map(|(id, p)| Request::new(*id, p.clone(), budget)).collect();
-    let cfg = EngineConfig { mode: SpecMode::Vanilla, ..Default::default() };
-    let mut vw = Worker::new(&rt, cfg, reqs)?;
+    let mut vw = Worker::new(&rt, EngineConfig::default(), reqs)?;
     let vrep = vw.rollout_vanilla()?;
     let vanilla_out = vw.outputs();
     println!(

@@ -9,8 +9,7 @@
 use std::path::PathBuf;
 
 use anyhow::Result;
-use specactor::drafter::DraftMethod;
-use specactor::engine::{EngineConfig, Request, SpecMode, Worker};
+use specactor::engine::{EngineConfig, Request, Worker};
 use specactor::planner::costmodel::CostModel;
 use specactor::runtime::Runtime;
 use specactor::serve::{
@@ -61,8 +60,7 @@ fn main() -> Result<()> {
     match Runtime::load(&art) {
         Ok(rt) => {
             let m = rt.manifest.clone();
-            let info = rt.model(&m.target)?;
-            let budget = budget.min(info.max_seq - m.prompt_len - 2);
+            let budget = budget.min(m.max_new_tokens()?);
             let arrivals: Vec<(f64, Request, Priority)> = times
                 .iter()
                 .enumerate()
@@ -71,12 +69,9 @@ fn main() -> Result<()> {
                     (t, Request::new(i as u64, prompt, budget), Priority::Batch)
                 })
                 .collect();
-            let cfg = EngineConfig {
-                mode: SpecMode::Coupled { window: 3 },
-                drafter: DraftMethod::Sam,
-                ..Default::default()
-            };
-            let worker = Worker::with_capacity(&rt, cfg, capacity)?;
+            // the admission path applies the replanner's (method, window)
+            // plan to every slot; the config only seeds the tape
+            let worker = Worker::with_capacity(&rt, EngineConfig::default(), capacity)?;
             let replan =
                 Replanner::for_manifest(&m, CostModel::paper_32b(), profiled(), 7);
             let mut b = Batcher::new(worker, 4 * n.max(1), replan, true);

@@ -8,7 +8,7 @@ fn print_timeline(label: &str, r: &specactor::sim::StepResult, workers: usize) {
     println!("\n-- {label}: rollout {:.1}s --", r.rollout_s);
     // pick the earliest-finishing worker and the slowest 4 (as the paper does)
     let mut order: Vec<usize> = (0..r.finish_times.len()).collect();
-    order.sort_by(|&a, &b| r.finish_times[a].partial_cmp(&r.finish_times[b]).unwrap());
+    order.sort_by(|&a, &b| r.finish_times[a].total_cmp(&r.finish_times[b]));
     let mut sel = vec![order[0]];
     sel.extend(order.iter().rev().take(4.min(order.len())));
     let width = 72usize;

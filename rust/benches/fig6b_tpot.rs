@@ -4,7 +4,7 @@
 use std::path::Path;
 
 use specactor::drafter::DraftMethod;
-use specactor::engine::{EngineConfig, Request, SpecMode, Worker};
+use specactor::engine::{EngineConfig, Request, SlotPlan, Worker};
 use specactor::planner::costmodel::CostModel;
 use specactor::planner::tgs::{tgs_coupled, tgs_decoupled, tgs_vanilla};
 use specactor::runtime::Runtime;
@@ -50,16 +50,14 @@ fn main() {
                     })
                     .collect()
             };
-            let cfg = EngineConfig { mode: SpecMode::Vanilla, ..Default::default() };
-            let mut w = Worker::new(&rt, cfg, mk(0)).unwrap();
+            let mut w = Worker::new(&rt, EngineConfig::default(), mk(0)).unwrap();
             let rv = w.rollout_vanilla().unwrap();
             let cfg = EngineConfig {
-                mode: SpecMode::Coupled { window: 3 },
-                drafter: DraftMethod::Model("draft_small".to_string()),
+                plan: SlotPlan::coupled(DraftMethod::Model("draft_small".to_string()), 3),
                 ..Default::default()
             };
             let mut w = Worker::new(&rt, cfg, mk(1)).unwrap();
-            let rc = w.rollout_coupled(3).unwrap();
+            let rc = w.rollout_planned().unwrap();
             println!(
                 "{:<8} {:>14.1} {:>14.1}",
                 b,

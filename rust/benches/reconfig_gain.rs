@@ -1,0 +1,193 @@
+//! Reconfiguration gain (Algorithm 2): static plan vs live request-level
+//! reconfiguration on a skewed-acceptance synthetic trace, written to
+//! `BENCH_reconfig.json` (the `BENCH_*.json` trajectory convention, see
+//! PERF.md).
+//!
+//! The trace is the [`SyntheticEngine`]'s intrinsic acceptance skew —
+//! three quarters of requests accept ~0.85, one quarter is a 0.2-tail —
+//! served as one batch. The **static** run keeps every slot on the
+//! launch plan (coupled w=7); the **live** run fires the
+//! [`Reconfigurator`] every `--period` rounds, so the tail's windows
+//! shrink to match their measured acceptance.
+//!
+//! Each run's rounds are priced with the paper's analytic cost model
+//! under two execution disciplines (PERF.md §Per-slot planning):
+//!
+//! * **grouped** — what this testbed's engine runs: one full-bucket
+//!   verify step per `(method, window)` plan group, so every extra group
+//!   pays the verify intercept β again;
+//! * **fused** — Algorithm 2's intended deployment: one verify step whose
+//!   effective window is the *average* of the per-request windows
+//!   (`CostModel::verify_f`), the paper's fused scheduling.
+//!
+//! Reported gain = modelled-TGS(live) / modelled-TGS(static) per
+//! discipline. At small buckets the grouped discipline can lose (β per
+//! extra group outweighs the smaller tail windows) while fused gains —
+//! the bench makes that trade-off measurable instead of anecdotal.
+
+use std::path::Path;
+
+use specactor::coordinator::reconfig::{cost_method, LiveSlot, Reconfigurator};
+use specactor::drafter::DraftMethod;
+use specactor::engine::{EngineReport, Request, SlotPlan};
+use specactor::planner::costmodel::CostModel;
+use specactor::serve::{ServeEngine, SyntheticEngine};
+use specactor::util::benchkit::Bench;
+use specactor::util::cli::Args;
+use specactor::util::Json;
+
+/// Modelled wall time of one engine round under the current slot plans:
+/// (grouped, fused) — see module docs.
+fn round_cost(engine: &SyntheticEngine, m: &CostModel) -> (f64, f64) {
+    let b = engine.capacity();
+    let mut groups: Vec<(usize, String)> = Vec::new();
+    let mut vanilla = false;
+    let mut w_sum = 0usize;
+    let mut spec_slots = 0usize;
+    for slot in 0..engine.capacity() {
+        if engine.is_done(slot) {
+            continue;
+        }
+        let Some(p) = engine.slot_plan(slot) else { continue };
+        if p.window == 0 {
+            vanilla = true;
+            continue;
+        }
+        w_sum += p.window;
+        spec_slots += 1;
+        let key = (p.window, cost_method(m, &p.method));
+        if !groups.contains(&key) {
+            groups.push(key);
+        }
+    }
+    let mut grouped = 0.0;
+    let mut fused = 0.0;
+    if vanilla {
+        grouped += m.decode(b);
+        fused += m.decode(b);
+    }
+    for (w, method) in &groups {
+        grouped += *w as f64 * m.draft(method, b) + m.verify(m.g_ref, w + 1, b);
+    }
+    if spec_slots > 0 {
+        let avg_w = w_sum as f64 / spec_slots as f64;
+        let method = &groups[0].1; // one method family in this bench
+        fused += avg_w * m.draft(method, b) + m.verify_f(m.g_ref, avg_w + 1.0, b);
+    }
+    (grouped, fused)
+}
+
+struct RunOut {
+    tokens: u64,
+    rounds: u64,
+    wasted: u64,
+    drafted: u64,
+    grouped_s: f64,
+    fused_s: f64,
+    reconfig_firings: u64,
+}
+
+fn run(n: usize, budget: usize, seed: u64, period: Option<u64>) -> RunOut {
+    let mut engine = SyntheticEngine::new(n, seed);
+    for i in 0..n as u64 {
+        engine
+            .admit(
+                i as usize,
+                Request::new(i, vec![0; 8], budget),
+                SlotPlan::coupled(DraftMethod::Ngram, 7),
+            )
+            .expect("admit");
+    }
+    let cost = CostModel::paper_32b();
+    let mut rc = period.map(Reconfigurator::synthetic);
+    let mut rep = EngineReport::default();
+    let (mut grouped_s, mut fused_s) = (0.0, 0.0);
+    let mut live: Vec<LiveSlot> = Vec::new();
+    loop {
+        // price the round the engine is about to run
+        let (cg, cf) = round_cost(&engine, &cost);
+        let active = engine.round(&mut rep).expect("round");
+        if active == 0 {
+            break;
+        }
+        grouped_s += cg;
+        fused_s += cf;
+        if let Some(rc) = &mut rc {
+            live.clear();
+            // gather live-slot state only on firing rounds, like the
+            // production serve loop (Batcher::tick)
+            if rc.due() {
+                for slot in 0..engine.capacity() {
+                    if engine.is_done(slot) {
+                        continue;
+                    }
+                    if let Some(p) = engine.slot_plan(slot) {
+                        if p.window > 0 {
+                            live.push(LiveSlot { slot, method: p.method });
+                        }
+                    }
+                }
+            }
+            for (slot, plan) in rc.on_round(&rep.per_slot, &live) {
+                engine.set_slot_plan(slot, plan).expect("set_slot_plan");
+            }
+        }
+    }
+    RunOut {
+        tokens: rep.total_generated,
+        rounds: rep.iterations,
+        wasted: rep.wasted_tokens,
+        drafted: rep.drafted_tokens,
+        grouped_s,
+        fused_s,
+        reconfig_firings: rc.map(|r| r.fired).unwrap_or(0),
+    }
+}
+
+fn main() {
+    let mut args = Args::from_env().unwrap();
+    let n = args.opt_parse("slots", 8usize);
+    let budget = args.opt_parse("budget", 96usize);
+    let seed = args.opt_parse("seed", 7u64);
+    let period = args.opt_parse("period", 4u64);
+    let json_out = args.opt("json-out", "BENCH_reconfig.json");
+    args.finish().unwrap();
+
+    let mut bench = Bench::new(0, 1);
+    let mut extra: Vec<Vec<(&str, Json)>> = Vec::new();
+    let mut tgs: Vec<(f64, f64)> = Vec::new();
+
+    for (label, p) in [("static w=7", None), ("live Algorithm 2", Some(period))] {
+        let out = run(n, budget, seed, p);
+        let tg = out.tokens as f64 / out.grouped_s;
+        let tf = out.tokens as f64 / out.fused_s;
+        println!(
+            "{label:<18} tokens {:>6}  rounds {:>5}  waste {:>5}/{:<6}  \
+             TGS grouped {:>8.1}  fused {:>8.1}  reconfigs {}",
+            out.tokens, out.rounds, out.wasted, out.drafted, tg, tf, out.reconfig_firings
+        );
+        bench.record(&format!("reconfig {label} n={n} budget={budget}"), out.fused_s);
+        extra.push(vec![
+            ("tokens", Json::num(out.tokens as f64)),
+            ("rounds", Json::num(out.rounds as f64)),
+            ("drafted", Json::num(out.drafted as f64)),
+            ("wasted", Json::num(out.wasted as f64)),
+            ("grouped_modelled_s", Json::num(out.grouped_s)),
+            ("fused_modelled_s", Json::num(out.fused_s)),
+            ("tgs_grouped", Json::num(tg)),
+            ("tgs_fused", Json::num(tf)),
+            ("reconfig_firings", Json::num(out.reconfig_firings as f64)),
+        ]);
+        tgs.push((tg, tf));
+        assert!(tg.is_finite() && tf.is_finite() && tg > 0.0 && tf > 0.0);
+    }
+    let gain_grouped = tgs[1].0 / tgs[0].0;
+    let gain_fused = tgs[1].1 / tgs[0].1;
+    println!(
+        "reconfiguration gain (live / static): grouped {gain_grouped:.2}x  fused {gain_fused:.2}x"
+    );
+    bench
+        .write_json(Path::new(&json_out), "reconfig_gain", &extra)
+        .expect("write BENCH_reconfig.json");
+    println!("wrote {json_out}");
+}

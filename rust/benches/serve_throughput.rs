@@ -10,8 +10,7 @@
 
 use std::path::{Path, PathBuf};
 
-use specactor::drafter::DraftMethod;
-use specactor::engine::{EngineConfig, Request, SpecMode, Worker};
+use specactor::engine::{EngineConfig, Request, Worker};
 use specactor::planner::costmodel::CostModel;
 use specactor::runtime::Runtime;
 use specactor::serve::{
@@ -81,8 +80,7 @@ fn main() {
         let result = match &rt {
             Some(rt) => {
                 let m = rt.manifest.clone();
-                let info = rt.model(&m.target).unwrap();
-                let budget = budget.min(info.max_seq - m.prompt_len - 2);
+                let budget = budget.min(m.max_new_tokens().unwrap());
                 let arrivals: Vec<(f64, Request, Priority)> = times
                     .iter()
                     .enumerate()
@@ -91,12 +89,11 @@ fn main() {
                         (t, Request::new(i as u64, prompt, budget), Priority::Batch)
                     })
                     .collect();
-                let cfg = EngineConfig {
-                    mode: SpecMode::Coupled { window: 3 },
-                    drafter: DraftMethod::Sam,
-                    ..Default::default()
-                };
-                let worker = Worker::with_capacity(rt, cfg, capacity).unwrap();
+                // the admission path applies the replanner's (method,
+                // window) plan to every slot; the config only seeds the
+                // tape and temperature
+                let worker =
+                    Worker::with_capacity(rt, EngineConfig::default(), capacity).unwrap();
                 let replan =
                     Replanner::for_manifest(&m, CostModel::paper_32b(), profiled(), 7);
                 let b = Batcher::new(worker, 4 * n, replan, true);

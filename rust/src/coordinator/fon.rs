@@ -5,8 +5,17 @@
 //! ascending (worst first — they gain least from the current method),
 //! methods sorted by ladder rank, each (request, method) pair mapped to
 //! the least-loaded worker serving that method, bounded by `b_max`.
+//!
+//! Methods are identified by their **index into the ladder rank** within
+//! the assignment structures, so the inner greedy loop compares and
+//! inserts plain `(u64, usize)` keys — no per-pair `String` clones.
+//! [`slot_plans`] converts a finished assignment into the engine's
+//! [`SlotPlan`] currency for the racing replicas.
 
 use std::collections::BTreeMap;
+
+use crate::drafter::DraftMethod;
+use crate::engine::SlotPlan;
 
 /// A free worker that can host one additional (drafter + verifier) pair.
 #[derive(Clone, Debug)]
@@ -14,15 +23,15 @@ pub struct FreeWorker {
     pub id: usize,
     /// Verification slots still available on this worker.
     pub capacity: usize,
-    /// Draft method this worker has been assigned to serve (None = any;
-    /// it is fixed by the first assignment, matching the paper's
-    /// one-method-per-scaled-verifier deployment).
-    pub method: Option<String>,
+    /// Ladder-rank index of the draft method this worker has been assigned
+    /// to serve (None = any; it is fixed by the first assignment, matching
+    /// the paper's one-method-per-scaled-verifier deployment).
+    pub method: Option<usize>,
     pub load: usize,
 }
 
-/// Assignment map: (request, method) -> worker id.
-pub type Assignment = BTreeMap<(u64, String), usize>;
+/// Assignment map: (request, ladder-rank method index) -> worker id.
+pub type Assignment = BTreeMap<(u64, usize), usize>;
 
 /// Inputs: straggler requests with their acceptance rates and the methods
 /// already attached to them.
@@ -33,7 +42,8 @@ pub struct Straggler {
     pub methods: Vec<String>,
 }
 
-/// Algorithm 3. `ladder_rank` must list methods best-first.
+/// Algorithm 3. `ladder_rank` must list methods best-first; assignment
+/// keys index into it.
 pub fn assign(
     stragglers: &mut [Straggler],
     ladder_rank: &[String],
@@ -41,12 +51,13 @@ pub fn assign(
     b_max: usize,
 ) -> Assignment {
     let mut out = Assignment::new();
-    // line 1: sort requests by acceptance rate ascending
-    stragglers.sort_by(|a, b| a.accept_rate.partial_cmp(&b.accept_rate).unwrap());
+    // line 1: sort requests by acceptance rate ascending (total_cmp: a NaN
+    // rate from a 0/0 measurement must not panic the scheduler)
+    stragglers.sort_by(|a, b| a.accept_rate.total_cmp(&b.accept_rate));
     // lines 3–9: draft-first greedy
     for r in stragglers.iter() {
-        for method in ladder_rank {
-            if r.methods.contains(method) || out.contains_key(&(r.request, method.clone())) {
+        for (mi, method) in ladder_rank.iter().enumerate() {
+            if r.methods.iter().any(|m| m == method) || out.contains_key(&(r.request, mi)) {
                 continue; // M(r, d) is not None
             }
             // GetMinLoadWorker(W_d, b_max): least-loaded worker already
@@ -55,20 +66,37 @@ pub fn assign(
                 .iter_mut()
                 .filter(|w| {
                     w.load < w.capacity.min(b_max)
-                        && (w.method.as_deref() == Some(method) || w.method.is_none())
+                        && (w.method == Some(mi) || w.method.is_none())
                 })
                 .min_by_key(|w| (w.method.is_none() as usize, w.load));
             match cand {
                 Some(w) => {
-                    w.method.get_or_insert_with(|| method.clone());
+                    w.method.get_or_insert(mi);
                     w.load += 1;
-                    out.insert((r.request, method.clone()), w.id);
+                    out.insert((r.request, mi), w.id);
                 }
                 None => continue,
             }
         }
     }
     out
+}
+
+/// Route an assignment into per-replica slot plans: each (request, method)
+/// pair becomes `(request, worker, SlotPlan)` for the racing replica —
+/// coupled speculation at `window` (dedicated tail service at b ≈ 1, per
+/// Algorithm 2's modelling; the replica that finishes first wins and
+/// losslessness makes the race output-invariant).
+pub fn slot_plans(
+    a: &Assignment,
+    ladder_rank: &[String],
+    window: usize,
+) -> Vec<(u64, usize, SlotPlan)> {
+    a.iter()
+        .map(|(&(req, mi), &wid)| {
+            (req, wid, SlotPlan::coupled(DraftMethod::parse(&ladder_rank[mi]), window))
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -146,6 +174,32 @@ mod tests {
     }
 
     #[test]
+    fn nan_acceptance_does_not_panic() {
+        let mut s = vec![
+            Straggler { request: 0, accept_rate: f64::NAN, methods: vec![] },
+            Straggler { request: 1, accept_rate: 0.4, methods: vec![] },
+        ];
+        let mut w = workers(1, 2);
+        let a = assign(&mut s, &rank(), &mut w, 2);
+        assert_eq!(a.len(), 2);
+    }
+
+    #[test]
+    fn slot_plans_map_rank_indices_to_methods() {
+        let mut s = vec![Straggler { request: 5, accept_rate: 0.1, methods: vec![] }];
+        let mut w = workers(1, 2);
+        let a = assign(&mut s, &rank(), &mut w, 2);
+        let plans = slot_plans(&a, &rank(), 3);
+        assert_eq!(plans.len(), a.len());
+        for (req, wid, plan) in &plans {
+            assert_eq!(*req, 5);
+            assert_eq!(*wid, 0);
+            assert_eq!(plan.window, 3);
+            assert!(rank().contains(&plan.method.label()));
+        }
+    }
+
+    #[test]
     fn prop_assignment_invariants() {
         check("fon-invariants", 150, |g| {
             let n_req = 1 + g.usize_in(0, 12);
@@ -161,6 +215,7 @@ mod tests {
                 .collect();
             let mut w = workers(n_work, cap);
             let a = assign(&mut s, &rank(), &mut w, b_max);
+            let rank = rank();
             // no worker overloaded
             for wk in &w {
                 prop_assert!(
@@ -172,14 +227,19 @@ mod tests {
                 );
             }
             // no (request, method) duplicate of existing methods
-            for ((r, m), _) in &a {
+            for ((r, mi), _) in &a {
                 let st = s.iter().find(|x| x.request == *r).unwrap();
-                prop_assert!(!st.methods.contains(m), "duplicated {m} for {r}");
+                prop_assert!(*mi < rank.len(), "method index {mi} out of rank");
+                prop_assert!(
+                    !st.methods.contains(&rank[*mi]),
+                    "duplicated {} for {r}",
+                    rank[*mi]
+                );
             }
             // every assignment points at a real worker serving that method
-            for ((_, m), wid) in &a {
+            for ((_, mi), wid) in &a {
                 let wk = w.iter().find(|x| x.id == *wid).unwrap();
-                prop_assert!(wk.method.as_deref() == Some(m), "worker method mismatch");
+                prop_assert!(wk.method == Some(*mi), "worker method mismatch");
             }
             // total assignments = total load
             let total: usize = w.iter().map(|x| x.load).sum();

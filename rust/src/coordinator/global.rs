@@ -5,14 +5,16 @@
 //!   its own PJRT client — the process topology the paper uses for
 //!   drafter/verifier separation).
 //! * Selects the initial draft method with the ladder and plans the draft
-//!   window with Algorithm 1.
-//! * When a worker finishes its batch, the scheduler deploys the
-//!   *next-best* draft method for the slowest unfinished requests on the
-//!   freed worker (Algorithm 3) and races it against the original: the
-//!   first replica to finish wins. Losslessness makes the race safe — both
-//!   replicas generate the identical sequence, so "fastest of N" can never
-//!   change the rollout output (asserted in the coordinator integration
-//!   test).
+//!   window with Algorithm 1; each worker receives it as the engine's
+//!   [`SlotPlan`] currency (the same type Algorithm 2 rewrites per slot
+//!   and the serve loop applies on admission).
+//! * When workers finish their batches, Algorithm 3 ([`fon::assign`])
+//!   maps next-best draft methods for the lowest-acceptance requests onto
+//!   the freed workers and the resulting assignment is routed into racing
+//!   [`SlotPlan`] replicas ([`fon::slot_plans`]): the first replica to
+//!   finish wins. Losslessness makes the race safe — both replicas
+//!   generate the identical sequence, so "fastest of N" can never change
+//!   the rollout output (asserted in the coordinator integration test).
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -23,8 +25,9 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use crate::coordinator::fon;
 use crate::drafter::DraftMethod;
-use crate::engine::{EngineConfig, EngineReport, Request, SpecMode, Worker};
+use crate::engine::{EngineConfig, EngineReport, Request, SlotPlan, Worker};
 use crate::ladder::Ladder;
 use crate::planner::costmodel::CostModel;
 use crate::planner::plan::{search, PlanInput};
@@ -37,6 +40,9 @@ pub struct RequestOutcome {
     pub tokens: Vec<i32>,
     /// Which replica finished it ("worker<k>" or "fon:<method>").
     pub finished_by: String,
+    /// Lifetime acceptance rate under the primary method (FoN's ordering
+    /// signal).
+    pub accept_rate: f64,
 }
 
 #[derive(Clone, Debug, Default)]
@@ -46,6 +52,10 @@ pub struct RolloutSummary {
     pub per_worker: Vec<EngineReport>,
     pub fon_launches: usize,
     pub fon_wins: usize,
+    /// Racing replicas Algorithm 3 planned: (request, freed worker, plan).
+    /// At CPU scale the race itself is exercised by `race_methods` /
+    /// `fon_demo`; the plans are what a GPU deployment would launch.
+    pub fon_plans: Vec<(u64, usize, SlotPlan)>,
 }
 
 /// Global scheduler configuration.
@@ -100,8 +110,8 @@ fn to_engine_method(name: &str) -> DraftMethod {
 }
 
 /// Run one batch through `n_workers` worker threads with coupled
-/// speculation, then (optionally) race stragglers with the next-best
-/// method on freed workers.
+/// speculation, then (optionally) plan Fastest-of-N races for the
+/// lowest-acceptance requests on the freed workers.
 pub fn rollout(
     cfg: &GlobalConfig,
     prompts: Vec<(u64, Vec<i32>)>,
@@ -116,7 +126,8 @@ pub fn rollout(
         prompts.chunks(per).map(|c| c.to_vec()).collect();
 
     let primary = method_rank.first().cloned().unwrap_or_else(|| "draft_small".into());
-    let (tx, rx) = channel::<(usize, Vec<(u64, Vec<i32>, String)>, EngineReport)>();
+    type WorkerOut = (usize, Vec<(u64, Vec<i32>, String, f64)>, EngineReport);
+    let (tx, rx) = channel::<WorkerOut>();
     // done flags per request id: FoN racers poll these to stop early
     let done: Arc<BTreeMap<u64, AtomicBool>> = Arc::new(
         prompts.iter().map(|(id, _)| (*id, AtomicBool::new(false))).collect(),
@@ -138,19 +149,23 @@ pub fn rollout(
                     .map(|(id, p)| Request::new(*id, p.clone(), budget))
                     .collect();
                 let ecfg = EngineConfig {
-                    mode: SpecMode::Coupled { window },
-                    drafter: to_engine_method(&method),
+                    plan: SlotPlan::coupled(to_engine_method(&method), window),
                     temperature: temp,
                     seed,
                     draft_seed: seed.wrapping_add(1000),
                 };
                 let mut w = Worker::new(&rt, ecfg, reqs)?;
-                let rep = w.rollout_coupled(window)?;
-                let outs: Vec<(u64, Vec<i32>, String)> = w
+                let rep = w.rollout_planned()?;
+                let outs: Vec<(u64, Vec<i32>, String, f64)> = w
                     .iter_requests()
                     .map(|(_, r)| {
                         done.get(&r.id).map(|f| f.store(true, Ordering::SeqCst));
-                        (r.id, r.seq[r.prompt.len()..].to_vec(), format!("worker{widx}"))
+                        (
+                            r.id,
+                            r.seq[r.prompt.len()..].to_vec(),
+                            format!("worker{widx}"),
+                            r.accept.rate(),
+                        )
                     })
                     .collect();
                 tx.send((widx, outs, rep)).map_err(|e| anyhow!("send: {e}"))?;
@@ -163,25 +178,48 @@ pub fn rollout(
 
     let mut outcomes: BTreeMap<u64, RequestOutcome> = BTreeMap::new();
     let mut per_worker = Vec::new();
-    let mut fon_launches = 0usize;
-    let fon_wins = 0usize;
+    let mut freed_workers: Vec<usize> = Vec::new();
     while let Ok((widx, outs, rep)) = rx.recv() {
-        let _ = widx;
         per_worker.push(rep);
-        for (id, tokens, by) in outs {
-            outcomes.entry(id).or_insert(RequestOutcome { id, tokens, finished_by: by });
-        }
-        // NOTE on FoN at CPU scale: a genuinely concurrent racing replica
-        // needs a second CPU; on this testbed the race is exercised by
-        // `fon_demo` sequentially (launch → first-to-finish wins). Here we
-        // record where FoN *would* launch (Algorithm 3 decides in
-        // `fon::assign`, shared with the simulator).
-        if cfg.fon {
-            fon_launches += 1;
+        freed_workers.push(widx);
+        for (id, tokens, by, accept_rate) in outs {
+            outcomes
+                .entry(id)
+                .or_insert(RequestOutcome { id, tokens, finished_by: by, accept_rate });
         }
     }
     for h in handles {
         h.join().map_err(|_| anyhow!("worker panicked"))??;
+    }
+
+    // FoN phase (Algorithm 3): on real clusters this fires while stragglers
+    // are still decoding; at CPU scale every batch has drained by the time
+    // workers report, so we plan the races the deployment *would* launch —
+    // lowest-acceptance requests first, next-best methods from the given
+    // rank — and surface them as SlotPlans. `race_methods` / `fon_demo`
+    // exercise the race itself.
+    let mut fon_launches = 0usize;
+    let fon_wins = 0usize;
+    let mut fon_plans = Vec::new();
+    if cfg.fon && method_rank.len() > 1 && !outcomes.is_empty() {
+        let mean_p = outcomes.values().map(|o| o.accept_rate).sum::<f64>()
+            / outcomes.len() as f64;
+        let mut stragglers: Vec<fon::Straggler> = outcomes
+            .values()
+            .filter(|o| o.accept_rate < mean_p)
+            .map(|o| fon::Straggler {
+                request: o.id,
+                accept_rate: o.accept_rate,
+                methods: vec![primary.clone()],
+            })
+            .collect();
+        let mut free: Vec<fon::FreeWorker> = freed_workers
+            .iter()
+            .map(|&id| fon::FreeWorker { id, capacity: per.max(1), method: None, load: 0 })
+            .collect();
+        let assignment = fon::assign(&mut stragglers, method_rank, &mut free, per.max(1));
+        fon_launches = assignment.len();
+        fon_plans = fon::slot_plans(&assignment, method_rank, window);
     }
 
     Ok(RolloutSummary {
@@ -190,13 +228,15 @@ pub fn rollout(
         per_worker,
         fon_launches,
         fon_wins,
+        fon_plans,
     })
 }
 
 /// Race `methods` on the same request (sequentially at CPU scale),
-/// returning (winning method, tokens, per-method wall seconds). Losslessness
-/// means every replica yields identical tokens; the "win" is purely about
-/// speed — exactly the paper's fastest-of-N semantics.
+/// returning (winning method, tokens, per-method wall seconds). Each
+/// replica is a single-slot worker on its own coupled [`SlotPlan`].
+/// Losslessness means every replica yields identical tokens; the "win" is
+/// purely about speed — exactly the paper's fastest-of-N semantics.
 pub fn race_methods(
     art: &Path,
     id: u64,
@@ -211,15 +251,14 @@ pub fn race_methods(
     let mut times = Vec::new();
     for meth in methods {
         let cfg = EngineConfig {
-            mode: SpecMode::Coupled { window },
-            drafter: to_engine_method(meth),
+            plan: SlotPlan::coupled(to_engine_method(meth), window),
             temperature: 1.0,
             seed,
             draft_seed: seed.wrapping_add(1000),
         };
         let reqs = vec![Request::new(id, prompt.to_vec(), budget)];
         let mut w = Worker::new(&rt, cfg, reqs)?;
-        let rep = w.rollout_coupled(window)?;
+        let rep = w.rollout_planned()?;
         let out = w.outputs().pop().unwrap();
         times.push((meth.clone(), rep.wall_s));
         match &best {

@@ -1,15 +1,21 @@
 //! Coordinator: the global scheduler's decision algorithms.
 //!
 //! * [`reconfig`] — Algorithm 2: request-level draft-window / mode
-//!   reconfiguration for below-average-acceptance requests.
+//!   reconfiguration for below-average-acceptance requests, plus the live
+//!   [`Reconfigurator`] the serve loop fires every `period` rounds.
 //! * [`fon`] — Algorithm 3: greedy Fastest-of-N drafter assignment onto
-//!   freed workers.
+//!   freed workers, routed into racing [`SlotPlan`]s.
 //! * [`global`] — the real-engine orchestration used by the e2e example:
-//!   plan → per-worker rollout → FoN racing for stragglers.
+//!   plan → per-worker rollout → FoN planning for stragglers.
+//!
+//! [`SlotPlan`]: crate::engine::SlotPlan
 
 pub mod fon;
 pub mod global;
 pub mod reconfig;
 
-pub use fon::{assign, Assignment, FreeWorker, Straggler};
-pub use reconfig::{reconfigure_batch, reconfigure_request, Mode, RequestPlan};
+pub use fon::{assign, slot_plans, Assignment, FreeWorker, Straggler};
+pub use reconfig::{
+    cost_method, reconfigure_batch, reconfigure_request, LiveSlot, Mode, Reconfigurator,
+    RequestPlan,
+};

@@ -1,19 +1,32 @@
 //! Algorithm 2: request-level reconfiguration during rollout.
 //!
-//! Called periodically (every `period` decoding iterations). For each
-//! request whose measured acceptance rate fell below the batch average,
-//! re-derive its best draft window under both coupled and decoupled
-//! modelling at b = 1, and switch it to whichever is faster.
+//! Two layers:
+//!
+//! * the pure decision functions ([`reconfigure_request`] /
+//!   [`reconfigure_batch`]): for a request whose measured acceptance rate
+//!   fell below the batch average, re-derive its best draft window under
+//!   both coupled and decoupled modelling at b = 1 and switch it to
+//!   whichever is faster;
+//! * the **live** wrapper ([`Reconfigurator`]): fired every
+//!   `period` engine rounds by the serve loop (and any other round-based
+//!   driver), it measures each slot's *recent* acceptance as the delta of
+//!   the engine's per-slot counters since the last firing, runs the
+//!   decision functions with each slot's own draft method, clamps the
+//!   chosen window to what the lowered artifacts can verify, and returns
+//!   ready-to-apply [`SlotPlan`]s — `Worker::set_plan` hot-swaps them in
+//!   place.
 
+use crate::drafter::DraftMethod;
+use crate::engine::{SlotAccept, SlotPlan};
 use crate::planner::costmodel::CostModel;
 use crate::planner::tgs::{tgs_coupled, tgs_decoupled};
+use crate::runtime::Manifest;
 
-/// Speculation mode flag in a per-request plan (paper's `m_r`).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Mode {
-    Coupled,
-    Decoupled,
-}
+/// Speculation mode flag in a per-request plan (paper's `m_r`) — the
+/// engine's [`PlanMode`], re-exported under Algorithm 2's historical name.
+///
+/// [`PlanMode`]: crate::engine::PlanMode
+pub use crate::engine::PlanMode as Mode;
 
 /// Per-request draft plan `(w_r, m_r)`.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -83,6 +96,179 @@ pub fn reconfigure_batch(
         .collect()
 }
 
+/// Cost-model key for an engine draft method. Model drafters are named by
+/// their model; token drafters without their own profiled cost curve (sam)
+/// borrow the n-gram curve — both are O(1)-per-token CPU lookups the paper
+/// piggybacks on the worker, and the cost model only needs the family's
+/// order of magnitude.
+pub fn cost_method(cost: &CostModel, method: &DraftMethod) -> String {
+    let label = method.label();
+    if cost.methods().iter().any(|m| *m == label) {
+        label
+    } else {
+        "ngram".to_string()
+    }
+}
+
+/// A live speculative slot offered to the reconfigurator: where it is and
+/// what drafts for it (the window/mode are re-derived, the method kept).
+#[derive(Clone, Debug)]
+pub struct LiveSlot {
+    pub slot: usize,
+    pub method: DraftMethod,
+}
+
+/// Periodic Algorithm 2 driver over the live engine: measures per-slot
+/// acceptance as counter deltas between firings and emits ready-to-apply
+/// [`SlotPlan`]s for below-average slots.
+#[derive(Clone, Debug)]
+pub struct Reconfigurator {
+    cost: CostModel,
+    /// Engine rounds between firings.
+    period: u64,
+    g_v: usize,
+    max_w: usize,
+    /// Draft windows the lowered artifacts can verify, ascending.
+    allowed: Vec<usize>,
+    rounds: u64,
+    /// Per-slot counter snapshot at the last firing (admissions reset
+    /// their slot so a recycled slot never inherits the previous
+    /// request's acceptance history).
+    baseline: Vec<SlotAccept>,
+    /// Restrict SelectBetter to coupled-mode plans. The in-process engine
+    /// emulates decoupled discipline without the pipelining that
+    /// `tgs_decoupled` models (it only forgoes the bonus token), so
+    /// applying a Decoupled pick there would strictly slow the slot down —
+    /// serve-loop constructors set this; deployments that route Decoupled
+    /// slots to the threaded pipeline clear it.
+    coupled_only: bool,
+    /// Firings that changed at least one slot.
+    pub fired: u64,
+}
+
+impl Reconfigurator {
+    pub fn new(
+        cost: CostModel,
+        g_v: usize,
+        max_w: usize,
+        allowed: Vec<usize>,
+        period: u64,
+    ) -> Self {
+        let mut allowed: Vec<usize> = allowed.into_iter().filter(|&w| w > 0).collect();
+        allowed.sort_unstable();
+        allowed.dedup();
+        Reconfigurator {
+            cost,
+            period: period.max(1),
+            g_v,
+            max_w: max_w.max(1),
+            allowed,
+            rounds: 0,
+            baseline: Vec::new(),
+            coupled_only: true,
+            fired: 0,
+        }
+    }
+
+    /// Allow Decoupled-mode plans in SelectBetter (only meaningful when
+    /// the caller runs those slots on the real threaded pipeline).
+    pub fn with_decoupled_modes(mut self) -> Self {
+        self.coupled_only = false;
+        self
+    }
+
+    /// Reconfigurator wired to a lowered artifact set: verifiable draft
+    /// windows from its lowered step windows.
+    pub fn for_manifest(m: &Manifest, cost: CostModel, max_w: usize, period: u64) -> Self {
+        let g_v = cost.g_ref;
+        Self::new(cost, g_v, max_w, m.draft_windows(), period)
+    }
+
+    /// Default driver for engines without a manifest (the synthetic smoke
+    /// engine): the default AOT window grid and paper cost model.
+    pub fn synthetic(period: u64) -> Self {
+        let cost = CostModel::paper_32b();
+        let g_v = cost.g_ref;
+        Self::new(cost, g_v, 7, vec![1, 3, 7], period)
+    }
+
+    pub fn period(&self) -> u64 {
+        self.period
+    }
+
+    /// Will the NEXT [`Reconfigurator::on_round`] call fire? Lets the
+    /// driver skip gathering live-slot state on the rounds where
+    /// `on_round` would discard it anyway.
+    pub fn due(&self) -> bool {
+        (self.rounds + 1) % self.period == 0
+    }
+
+    /// A request was admitted into `slot`: reset the slot's measurement
+    /// baseline to the engine's current counters.
+    pub fn on_admit(&mut self, slot: usize, per_slot: &[SlotAccept]) {
+        if self.baseline.len() <= slot {
+            self.baseline.resize(slot + 1, SlotAccept::default());
+        }
+        self.baseline[slot] = per_slot.get(slot).copied().unwrap_or_default();
+    }
+
+    /// Note one engine round. Every `period`-th round, run Algorithm 2
+    /// over the live speculative slots' measured (delta) acceptance rates
+    /// and return the plans to apply; otherwise an empty vec.
+    pub fn on_round(
+        &mut self,
+        per_slot: &[SlotAccept],
+        live: &[LiveSlot],
+    ) -> Vec<(usize, SlotPlan)> {
+        self.rounds += 1;
+        if self.rounds % self.period != 0 {
+            return Vec::new();
+        }
+        // measured recent acceptance per live slot (delta since the last
+        // firing; slots with no drafting evidence are skipped)
+        let mut rates: Vec<(usize, f64)> = Vec::with_capacity(live.len());
+        for (li, ls) in live.iter().enumerate() {
+            let cur = per_slot.get(ls.slot).copied().unwrap_or_default();
+            let base = self.baseline.get(ls.slot).copied().unwrap_or_default();
+            let drafted = cur.drafted.saturating_sub(base.drafted);
+            if drafted == 0 {
+                continue;
+            }
+            let accepted = cur.accepted.saturating_sub(base.accepted);
+            rates.push((li, accepted as f64 / drafted as f64));
+        }
+        self.baseline = per_slot.to_vec();
+        if rates.is_empty() || self.allowed.is_empty() {
+            return Vec::new();
+        }
+        let avg = rates.iter().map(|(_, p)| p).sum::<f64>() / rates.len() as f64;
+        let mut out = Vec::new();
+        for &(li, p) in rates.iter().filter(|(_, p)| *p < avg) {
+            let ls = &live[li];
+            let method = cost_method(&self.cost, &ls.method);
+            let plan = if self.coupled_only {
+                let (w, tgs) =
+                    best_window(&self.cost, &method, self.g_v, p, self.max_w, Mode::Coupled);
+                RequestPlan { w, mode: Mode::Coupled, tgs }
+            } else {
+                reconfigure_request(&self.cost, &method, self.g_v, p, self.max_w)
+            };
+            // cap at the largest verifiable draft window (the engine rounds
+            // intermediate windows up to the next lowered step size, so the
+            // full 1..=cap grid is runnable — no grid snapping)
+            let w = plan.w.min(*self.allowed.last().unwrap());
+            out.push((
+                ls.slot,
+                SlotPlan { method: ls.method.clone(), window: w, mode: plan.mode },
+            ));
+        }
+        if !out.is_empty() {
+            self.fired += 1;
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -129,5 +315,91 @@ mod tests {
     fn empty_batch_is_noop() {
         let m = CostModel::paper_32b();
         assert!(reconfigure_batch(&m, "ngram", 4, &[], 8).is_empty());
+    }
+
+    #[test]
+    fn cost_method_maps_known_and_falls_back_unknown() {
+        let m = CostModel::paper_32b();
+        // sam has no profiled curve: it borrows the n-gram cost key
+        assert_eq!(cost_method(&m, &DraftMethod::Sam), "ngram");
+        assert_eq!(cost_method(&m, &DraftMethod::Ngram), "ngram");
+        assert_eq!(
+            cost_method(&m, &DraftMethod::Model("draft_mid".into())),
+            "draft_mid"
+        );
+        assert_eq!(
+            cost_method(&m, &DraftMethod::Model("mystery_9b".into())),
+            "ngram"
+        );
+    }
+
+    fn slot_counters(pairs: &[(u64, u64)]) -> Vec<SlotAccept> {
+        pairs.iter().map(|&(d, a)| SlotAccept { drafted: d, accepted: a }).collect()
+    }
+
+    #[test]
+    fn reconfigurator_fires_on_period_and_targets_stragglers() {
+        let mut rc = Reconfigurator::synthetic(2);
+        let live = vec![
+            LiveSlot { slot: 0, method: DraftMethod::Sam },
+            LiveSlot { slot: 1, method: DraftMethod::Sam },
+        ];
+        // round 1: off-period, nothing
+        assert!(rc.on_round(&slot_counters(&[(4, 4), (4, 1)]), &live).is_empty());
+        // round 2: slot 1 is the straggler (delta rate 0.25 vs 1.0)
+        let plans = rc.on_round(&slot_counters(&[(8, 8), (8, 2)]), &live);
+        assert_eq!(plans.len(), 1, "exactly the below-average slot: {plans:?}");
+        assert_eq!(plans[0].0, 1);
+        let p = &plans[0].1;
+        assert!(
+            (1..=7).contains(&p.window),
+            "window {} outside the verifiable 1..=7 grid",
+            p.window
+        );
+        assert_eq!(p.mode, Mode::Coupled, "serve-path reconfigurator is coupled-only");
+        assert_eq!(p.method, DraftMethod::Sam, "method is kept, window/mode re-derived");
+        assert_eq!(rc.fired, 1);
+    }
+
+    #[test]
+    fn reconfigurator_uses_deltas_not_lifetime_counters() {
+        let mut rc = Reconfigurator::synthetic(1);
+        let live = vec![
+            LiveSlot { slot: 0, method: DraftMethod::Ngram },
+            LiveSlot { slot: 1, method: DraftMethod::Ngram },
+        ];
+        // firing 1 establishes a baseline where slot 0 looks terrible
+        let _ = rc.on_round(&slot_counters(&[(10, 0), (10, 9)]), &live);
+        // since then slot 0 accepted everything and slot 1 nothing:
+        // the *delta* ranking must flip
+        let plans = rc.on_round(&slot_counters(&[(20, 10), (20, 9)]), &live);
+        assert_eq!(plans.len(), 1);
+        assert_eq!(plans[0].0, 1, "delta measurement must rank slot 1 as the straggler");
+    }
+
+    #[test]
+    fn admission_resets_the_slot_baseline() {
+        let mut rc = Reconfigurator::synthetic(1);
+        let live = vec![
+            LiveSlot { slot: 0, method: DraftMethod::Ngram },
+            LiveSlot { slot: 1, method: DraftMethod::Ngram },
+        ];
+        let _ = rc.on_round(&slot_counters(&[(10, 1), (10, 8)]), &live);
+        // a new request recycles slot 0: its horrible history must not leak
+        rc.on_admit(0, &slot_counters(&[(10, 1), (10, 8)]));
+        let plans = rc.on_round(&slot_counters(&[(14, 5), (14, 9)]), &live);
+        // slot 0's delta is 4/4 = 1.0, slot 1's is 1/4 = 0.25
+        assert_eq!(plans.len(), 1);
+        assert_eq!(plans[0].0, 1);
+    }
+
+    #[test]
+    fn no_evidence_means_no_plans() {
+        let mut rc = Reconfigurator::synthetic(1);
+        let live = vec![LiveSlot { slot: 0, method: DraftMethod::Sam }];
+        // vanilla slots / fresh slots draft nothing: no deltas, no plans
+        assert!(rc.on_round(&[], &live).is_empty());
+        assert!(rc.on_round(&slot_counters(&[(0, 0)]), &live).is_empty());
+        assert_eq!(rc.fired, 0);
     }
 }

@@ -89,6 +89,26 @@ impl DraftMethod {
     pub fn is_model(&self) -> bool {
         matches!(self, DraftMethod::Model(_))
     }
+
+    /// Model name for model-based drafting, None for token drafters.
+    pub fn model_name(&self) -> Option<&str> {
+        match self {
+            DraftMethod::Model(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Fresh per-request token-drafter state for model-free methods
+    /// (None for model-based drafting, which lives in a KV cache instead).
+    /// The single construction point for drafter hyper-parameters, so a
+    /// slot-plan hot swap and a worker prefill build identical state.
+    pub fn new_token_drafter(&self) -> Option<Box<dyn TokenDrafter>> {
+        match self {
+            DraftMethod::Model(_) => None,
+            DraftMethod::Ngram => Some(Box::new(NgramDrafter::new(3)) as Box<dyn TokenDrafter>),
+            DraftMethod::Sam => Some(Box::new(SamDrafter::new(16)) as Box<dyn TokenDrafter>),
+        }
+    }
 }
 
 #[cfg(test)]

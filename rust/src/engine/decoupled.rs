@@ -1,13 +1,24 @@
 //! Decoupled speculative rollout (§4.1): drafter and verifier on separate
 //! threads, linked by channels, with the drafter allowed to run ahead of
-//! verification bounded by the draft window.
+//! verification bounded by each slot's draft window.
 //!
 //! The paper places drafter and verifier on disjoint GPUs so verification
 //! gets all the compute; here each thread owns its own PJRT CPU client
 //! (`xla::PjRtClient` is not `Send`), which is the same process topology.
 //! Token-level behaviour is identical to coupled speculation — and to
 //! vanilla decoding — because acceptance uses the shared sampling tape
-//! (`rust/tests/losslessness.rs` asserts all three agree token-for-token).
+//! (`rust/tests/losslessness.rs` asserts all modes agree token-for-token).
+//!
+//! The rollout is **plan-driven** ([`rollout_decoupled_planned`]): every
+//! slot carries its own [`SlotPlan`], so chunk size (`window`), draft
+//! method and discipline vary per slot within one batch. Token drafters
+//! (sam/ngram) mix freely; model-based slots must share ONE draft model
+//! per rollout (the thread hosts a single model runtime — the paper's
+//! one-drafter-per-worker deployment; heterogeneous model batches route
+//! through `Worker::round`'s plan groups instead). A `Coupled`-mode slot
+//! runs with pipeline depth 1 and keeps the bonus token — the same token
+//! dynamics as `Worker`'s coupled groups — while `Decoupled` slots run
+//! ahead and forgo the bonus.
 //!
 //! Both loops reuse their token/proposal buffers across rounds (PERF.md
 //! §Memory discipline); the only steady-state allocation is the one `Vec`
@@ -31,12 +42,13 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::drafter::{DraftMethod, NgramDrafter, SamDrafter, TokenDrafter};
+use crate::drafter::{DraftMethod, TokenDrafter};
 use crate::runtime::Runtime;
 use crate::spec::{verify_exact, DraftWindow};
 use crate::util::rng::{position_rng, sample_logits};
 
-use super::worker::{EngineConfig, EngineReport, Request, SpecMode};
+use super::plan::{PlanMode, SlotPlan};
+use super::worker::{EngineConfig, EngineReport, Request};
 
 #[derive(Debug)]
 struct Chunk {
@@ -50,6 +62,17 @@ enum Verdict {
     Advance { slot: usize, new_tokens: Vec<i32>, accepted: usize, full: bool },
     Done { slot: usize },
     Shutdown,
+}
+
+/// Everything the drafter thread needs to know about one slot.
+struct SlotSpec {
+    id: u64,
+    prompt: Vec<i32>,
+    /// Chunk size (the slot plan's draft window).
+    k: usize,
+    /// Coupled discipline: depth-1 pipeline, bonus token on full accept.
+    coupled: bool,
+    method: DraftMethod,
 }
 
 /// Drafter-thread state for one slot.
@@ -72,71 +95,88 @@ fn mirror_tok(m: &SlotMirror, idx: usize) -> i32 {
     }
 }
 
+/// Apply an `Advance` verdict to the drafter's mirror of one slot.
+fn mirror_advance(m: &mut SlotMirror, new_tokens: &[i32], accepted: usize, full: bool) {
+    m.seq.extend_from_slice(new_tokens);
+    m.window.on_verified(accepted.min(m.window.in_flight()), full);
+    if full {
+        // A full accept consumes exactly the chunk (plus, for coupled
+        // slots, the bonus token the drafter never proposed): drop the
+        // accepted prefix from `ahead`, keep the pipeline.
+        let drop_n = new_tokens.len().min(m.ahead.len());
+        m.ahead.drain(..drop_n);
+    } else {
+        // rejection: everything drafted ahead is garbage
+        m.ahead.clear();
+        m.window = DraftWindow::new(m.window.w, m.window.coupled);
+    }
+}
+
 /// Run the drafter thread body. `art_dir` is used to open this thread's own
 /// PJRT client for model-based drafting.
-#[allow(clippy::too_many_arguments)]
 fn drafter_thread(
     art_dir: PathBuf,
-    method: DraftMethod,
     draft_seed: u64,
     temp: f32,
-    chunk_k: usize,
-    prompts: Vec<(u64, Vec<i32>)>,
+    specs: Vec<SlotSpec>,
     tx: Sender<Chunk>,
     rx: Receiver<Verdict>,
 ) -> Result<()> {
-    let n = prompts.len();
-    let mut mirrors: Vec<SlotMirror> = prompts
+    let n = specs.len();
+    let mut mirrors: Vec<SlotMirror> = specs
         .iter()
-        .map(|(_, p)| SlotMirror {
-            seq: p.clone(),
+        .map(|s| SlotMirror {
+            seq: s.prompt.clone(),
             ahead: Vec::new(),
-            window: DraftWindow::new(chunk_k, false),
+            window: DraftWindow::new(s.k, s.coupled),
             done: false,
         })
         .collect();
-    let ids: Vec<u64> = prompts.iter().map(|(id, _)| *id).collect();
 
-    // Model-based drafting state (own runtime + cache), or token drafters.
+    // Model-based drafting state (own runtime + cache) for the single
+    // model family the plans may name, plus per-slot token drafters.
+    let model_slots: Vec<usize> =
+        (0..n).filter(|&i| specs[i].method.is_model()).collect();
     let mut model_rt: Option<(Runtime, String, crate::runtime::KvCache, Vec<usize>)> = None;
-    let mut token_drafters: Vec<Option<Box<dyn TokenDrafter>>> = (0..n).map(|_| None).collect();
-    match &method {
-        DraftMethod::Model(name) => {
-            let rt = Runtime::load(&art_dir)?;
-            let bucket = rt.manifest.bucket_for(n)?;
-            let p = rt.manifest.prompt_len;
-            let mut cache = rt.new_cache(name, bucket)?;
-            let pad = rt.manifest.pad_id;
-            let mut toks = vec![pad; bucket * p];
-            for (i, (_, pr)) in prompts.iter().enumerate() {
-                toks[i * p..(i + 1) * p].copy_from_slice(pr);
+    let mut token_drafters: Vec<Option<Box<dyn TokenDrafter>>> = (0..n)
+        .map(|i| {
+            let mut td = specs[i].method.new_token_drafter();
+            if let Some(t) = td.as_mut() {
+                t.extend(&specs[i].prompt);
             }
-            rt.prefill(name, &toks, &mut cache)?;
-            for l in cache.lens.iter_mut() {
+            td
+        })
+        .collect();
+    if let Some(&first) = model_slots.first() {
+        let name = specs[first].method.model_name().unwrap().to_string();
+        let rt = Runtime::load(&art_dir)?;
+        let bucket = rt.manifest.bucket_for(n)?;
+        let p = rt.manifest.prompt_len;
+        let mut cache = rt.new_cache(&name, bucket)?;
+        let pad = rt.manifest.pad_id;
+        let mut toks = vec![pad; bucket * p];
+        for &i in &model_slots {
+            toks[i * p..(i + 1) * p].copy_from_slice(&specs[i].prompt);
+        }
+        rt.prefill(&name, &toks, &mut cache)?;
+        let mut consumed = vec![0usize; bucket];
+        for (i, l) in cache.lens.iter_mut().enumerate() {
+            if model_slots.contains(&i) {
                 *l = (p - 1) as i32;
-            }
-            let consumed = vec![p - 1; bucket];
-            model_rt = Some((rt, name.clone(), cache, consumed));
-        }
-        DraftMethod::Ngram => {
-            for (i, (_, pr)) in prompts.iter().enumerate() {
-                let mut d = NgramDrafter::new(3);
-                d.extend(pr);
-                token_drafters[i] = Some(Box::new(d));
+                consumed[i] = p - 1;
+            } else {
+                // non-model rows hold prefill junk; zero their lens so the
+                // runtime's max_seq guard never trips on them
+                *l = 0;
             }
         }
-        DraftMethod::Sam => {
-            for (i, (_, pr)) in prompts.iter().enumerate() {
-                let mut d = SamDrafter::new(16);
-                d.extend(pr);
-                token_drafters[i] = Some(Box::new(d));
-            }
-        }
+        model_rt = Some((rt, name, cache, consumed));
     }
 
     // Round-reused buffers (allocated once; see module docs).
     let mut proposals: Vec<Vec<i32>> = (0..n).map(|_| Vec::new()).collect();
     let mut draftable: Vec<usize> = Vec::with_capacity(n);
+    let mut draftable_model: Vec<usize> = Vec::with_capacity(n);
     let mut need: Vec<usize> = Vec::new();
     let mut toks: Vec<i32> = Vec::new();
     let mut last: Vec<i32> = Vec::new();
@@ -152,20 +192,7 @@ fn drafter_thread(
                     any_verdict = true;
                 }
                 Ok(Verdict::Advance { slot, new_tokens, accepted, full }) => {
-                    let m = &mut mirrors[slot];
-                    m.seq.extend_from_slice(&new_tokens);
-                    m.window.on_verified(accepted.min(m.window.in_flight()), full);
-                    if full {
-                        // decoupled verification takes no bonus token, so a
-                        // full accept consumes exactly the chunk: drop the
-                        // accepted prefix from `ahead`, keep the pipeline.
-                        let drop_n = new_tokens.len().min(m.ahead.len());
-                        m.ahead.drain(..drop_n);
-                    } else {
-                        // rejection: everything drafted ahead is garbage
-                        m.ahead.clear();
-                        m.window = DraftWindow::new(m.window.w, false);
-                    }
+                    mirror_advance(&mut mirrors[slot], &new_tokens, accepted, full);
                     any_verdict = true;
                 }
                 Err(_) => break,
@@ -180,10 +207,11 @@ fn drafter_thread(
             }
         }
 
-        // 2. pick slots that may draft a chunk
+        // 2. pick slots that may draft a chunk (each by its own size)
         draftable.clear();
-        draftable
-            .extend((0..n).filter(|&i| !mirrors[i].done && mirrors[i].window.draft_budget() >= chunk_k));
+        draftable.extend(
+            (0..n).filter(|&i| !mirrors[i].done && mirrors[i].window.draft_budget() >= specs[i].k),
+        );
         if draftable.is_empty() {
             if !any_verdict {
                 // block for the next verdict to avoid spinning
@@ -191,16 +219,7 @@ fn drafter_thread(
                     Ok(Verdict::Shutdown) => return Ok(()),
                     Ok(Verdict::Done { slot }) => mirrors[slot].done = true,
                     Ok(Verdict::Advance { slot, new_tokens, accepted, full }) => {
-                        let m = &mut mirrors[slot];
-                        m.seq.extend_from_slice(&new_tokens);
-                        m.window.on_verified(accepted.min(m.window.in_flight()), full);
-                        if full {
-                            let drop_n = new_tokens.len().min(m.ahead.len());
-                            m.ahead.drain(..drop_n);
-                        } else {
-                            m.ahead.clear();
-                            m.window = DraftWindow::new(m.window.w, false);
-                        }
+                        mirror_advance(&mut mirrors[slot], &new_tokens, accepted, full);
                     }
                     Err(_) => return Ok(()),
                 }
@@ -208,12 +227,15 @@ fn drafter_thread(
             continue;
         }
 
-        // 3. draft one chunk of `chunk_k` tokens per draftable slot
+        // 3. draft one chunk of `k_i` tokens per draftable slot
         for &i in &draftable {
             proposals[i].clear();
         }
-        match (&method, &mut model_rt) {
-            (DraftMethod::Model(_), Some((rt, name, cache, consumed))) => {
+        if let Some((rt, name, cache, consumed)) = &mut model_rt {
+            draftable_model.clear();
+            draftable_model
+                .extend(draftable.iter().copied().filter(|&i| specs[i].method.is_model()));
+            if !draftable_model.is_empty() {
                 let bucket = cache.batch;
                 let pad = rt.manifest.pad_id;
                 // catch-up: consume mirror tokens (seq + ahead, minus the
@@ -221,7 +243,7 @@ fn drafter_thread(
                 let mirror_len = |m: &SlotMirror| m.seq.len() + m.ahead.len();
                 need.clear();
                 need.resize(bucket, 0);
-                for &i in &draftable {
+                for &i in &draftable_model {
                     let m = &mirrors[i];
                     // the draft cache may have consumed diverged tokens:
                     // roll back to the verified prefix when behind
@@ -231,12 +253,13 @@ fn drafter_thread(
                     }
                     need[i] = (mirror_len(m) - 1).saturating_sub(consumed[i]);
                 }
-                let mut max_need = draftable.iter().map(|&i| need[i]).max().unwrap_or(0);
+                let mut max_need =
+                    draftable_model.iter().map(|&i| need[i]).max().unwrap_or(0);
                 while max_need > 0 {
                     let w = rt.manifest.window_for(max_need)?;
                     toks.clear();
                     toks.resize(bucket * w, pad);
-                    for &i in &draftable {
+                    for &i in &draftable_model {
                         let m = &mirrors[i];
                         let take = need[i].min(w);
                         for j in 0..take {
@@ -244,27 +267,35 @@ fn drafter_thread(
                         }
                     }
                     rt.step(name, &toks, w, cache)?;
-                    for &i in &draftable {
+                    for &i in &draftable_model {
                         let take = need[i].min(w);
                         consumed[i] += take;
                         cache.lens[i] = consumed[i] as i32;
                         need[i] -= take;
                     }
-                    max_need = draftable.iter().map(|&i| need[i]).max().unwrap_or(0);
+                    max_need = draftable_model.iter().map(|&i| need[i]).max().unwrap_or(0);
                 }
-                // chunk_k batched decode steps
+                // up to max(k_i) batched decode steps; each slot stops
+                // consuming once its own chunk is full
                 last.clear();
                 last.resize(bucket, pad);
-                for &i in &draftable {
+                for &i in &draftable_model {
                     let m = &mirrors[i];
                     last[i] = *m.ahead.last().or_else(|| m.seq.last()).unwrap();
                 }
-                for _ in 0..chunk_k {
+                let kmax = draftable_model.iter().map(|&i| specs[i].k).max().unwrap_or(0);
+                for _ in 0..kmax {
                     let out = rt.step(name, &last, 1, cache)?;
-                    for &i in &draftable {
+                    for &i in &draftable_model {
+                        if proposals[i].len() >= specs[i].k {
+                            // chunk full: this row was stepped with a stale
+                            // token; its cache position is not advanced and
+                            // gets overwritten by the next real step
+                            continue;
+                        }
                         let m = &mirrors[i];
                         let pos = m.seq.len() + m.ahead.len() + proposals[i].len();
-                        let mut rng = position_rng(draft_seed, ids[i], pos as u64);
+                        let mut rng = position_rng(draft_seed, specs[i].id, pos as u64);
                         let t = sample_logits(out.at(i, 0), temp, &mut rng) as i32;
                         proposals[i].push(t);
                         consumed[i] += 1;
@@ -273,33 +304,34 @@ fn drafter_thread(
                     }
                 }
             }
-            _ => {
-                for &i in &draftable {
-                    // token drafters draft from verified + ahead history
-                    if let Some(td) = &mut token_drafters[i] {
-                        // bring the index up to the mirror state
-                        let m = &mirrors[i];
-                        let mirror_total = m.seq.len() + m.ahead.len();
-                        if td.len() > mirror_total {
-                            // rejection rolled the mirror back: rebuild
-                            td.reset();
-                            td.extend(&m.seq);
-                            td.extend(&m.ahead);
-                        } else if td.len() < mirror_total {
-                            // extend with the missing mirror suffix without
-                            // materialising seq ++ ahead
-                            let start = td.len();
-                            if start < m.seq.len() {
-                                td.extend(&m.seq[start..]);
-                                td.extend(&m.ahead);
-                            } else {
-                                td.extend(&m.ahead[start - m.seq.len()..]);
-                            }
-                        }
-                        td.draft_into(chunk_k, &mut proposals[i]);
-                        proposals[i].resize(chunk_k, 0);
+        }
+        for &i in &draftable {
+            if specs[i].method.is_model() {
+                continue;
+            }
+            // token drafters draft from verified + ahead history
+            if let Some(td) = &mut token_drafters[i] {
+                // bring the index up to the mirror state
+                let m = &mirrors[i];
+                let mirror_total = m.seq.len() + m.ahead.len();
+                if td.len() > mirror_total {
+                    // rejection rolled the mirror back: rebuild
+                    td.reset();
+                    td.extend(&m.seq);
+                    td.extend(&m.ahead);
+                } else if td.len() < mirror_total {
+                    // extend with the missing mirror suffix without
+                    // materialising seq ++ ahead
+                    let start = td.len();
+                    if start < m.seq.len() {
+                        td.extend(&m.seq[start..]);
+                        td.extend(&m.ahead);
+                    } else {
+                        td.extend(&m.ahead[start - m.seq.len()..]);
                     }
                 }
+                td.draft_into(specs[i].k, &mut proposals[i]);
+                proposals[i].resize(specs[i].k, 0);
             }
         }
 
@@ -307,7 +339,7 @@ fn drafter_thread(
         for &i in &draftable {
             let m = &mut mirrors[i];
             let base = m.seq.len() + m.ahead.len();
-            m.window.on_drafted(chunk_k);
+            m.window.on_drafted(specs[i].k);
             m.ahead.extend_from_slice(&proposals[i]);
             // the chunk must own its tokens across the channel: hand over
             // the proposal buffer (one allocation per chunk, regrown next
@@ -321,29 +353,83 @@ fn drafter_thread(
     }
 }
 
-/// Decoupled speculative rollout over `requests`. Spawns the drafter
-/// thread, runs verification on the calling thread, returns the report.
-/// Sequences end up in `requests` (same layout as `Worker`).
+/// Decoupled rollout of a uniform batch: every slot runs the config's
+/// default plan (which must be speculative). Kept as the whole-batch
+/// convenience wrapper over [`rollout_decoupled_planned`].
 pub fn rollout_decoupled(
     rt: &Runtime,
     art_dir: &std::path::Path,
     cfg: &EngineConfig,
     requests: &mut Vec<Request>,
 ) -> Result<EngineReport> {
-    let k = match cfg.mode {
-        SpecMode::Decoupled { window } => window,
-        _ => bail!("rollout_decoupled requires SpecMode::Decoupled"),
-    };
-    let m = &rt.manifest;
-    if k + 1 > *m.windows.iter().max().unwrap_or(&1) {
-        bail!("verify window {} not lowered", k + 1);
+    if cfg.plan.mode != PlanMode::Decoupled {
+        bail!("rollout_decoupled requires a Decoupled default plan");
     }
+    let plans = vec![cfg.plan.clone(); requests.len()];
+    rollout_decoupled_planned(rt, art_dir, cfg, requests, &plans)
+}
+
+/// Plan-driven decoupled speculative rollout over `requests`: slot `i`
+/// drafts `plans[i].window`-token chunks with `plans[i].method` under
+/// `plans[i].mode`'s discipline. Spawns the drafter thread, runs
+/// verification on the calling thread, returns the report. Sequences end
+/// up in `requests` (same layout as `Worker`).
+pub fn rollout_decoupled_planned(
+    rt: &Runtime,
+    art_dir: &std::path::Path,
+    cfg: &EngineConfig,
+    requests: &mut Vec<Request>,
+    plans: &[SlotPlan],
+) -> Result<EngineReport> {
+    let m = &rt.manifest;
     let n = requests.len();
+    if n == 0 {
+        bail!("no requests");
+    }
+    if plans.len() != n {
+        bail!("{} plans for {n} requests", plans.len());
+    }
+    let mut max_k = 0usize;
+    let mut model: Option<&str> = None;
+    for p in plans {
+        if p.window == 0 {
+            bail!("vanilla slots belong in Worker::round, not the drafter thread");
+        }
+        max_k = max_k.max(p.window);
+        if let Some(name) = p.method.model_name() {
+            match model {
+                None => model = Some(name),
+                Some(prev) if prev == name => {}
+                Some(prev) => bail!(
+                    "decoupled drafter thread hosts one model family: {prev:?} vs {name:?} \
+                     (mix token drafters freely; heterogeneous model batches route through \
+                     Worker::round)"
+                ),
+            }
+        }
+    }
+    // verify window: smallest lowered step window covering the largest
+    // chunk plus its seed token (shorter chunks are padded)
+    let w = m
+        .windows
+        .iter()
+        .copied()
+        .filter(|&x| x >= max_k + 1)
+        .min()
+        .ok_or_else(|| anyhow!("no lowered step window can verify draft window {max_k}"))?;
     let bucket = m.bucket_for(n)?;
     let p = m.prompt_len;
     let pad = m.pad_id;
     let eos = m.eos_id;
     let target = m.target.clone();
+    // every verify step spans the whole bucket at window `w`: each
+    // request's budget must leave that much cache headroom
+    let max_new = m.model(&target)?.max_seq - p - w;
+    for r in requests.iter() {
+        if r.budget > max_new {
+            bail!("request {}: budget {} exceeds cache capacity {max_new}", r.id, r.budget);
+        }
+    }
 
     // target prefill
     let mut cache = rt.new_cache(&target, bucket)?;
@@ -358,22 +444,29 @@ pub fn rollout_decoupled(
 
     let (chunk_tx, chunk_rx) = channel::<Chunk>();
     let (verdict_tx, verdict_rx) = channel::<Verdict>();
-    let prompts: Vec<(u64, Vec<i32>)> =
-        requests.iter().map(|r| (r.id, r.prompt.clone())).collect();
+    let specs: Vec<SlotSpec> = requests
+        .iter()
+        .zip(plans)
+        .map(|(r, pl)| SlotSpec {
+            id: r.id,
+            prompt: r.prompt.clone(),
+            k: pl.window,
+            coupled: pl.mode == PlanMode::Coupled,
+            method: pl.method.clone(),
+        })
+        .collect();
     let art = art_dir.to_path_buf();
-    let method = cfg.drafter.clone();
     let dseed = cfg.draft_seed;
     let temp = cfg.temperature;
     let handle = std::thread::Builder::new()
         .name("spec-drafter".to_string())
-        .spawn(move || drafter_thread(art, method, dseed, temp, k, prompts, chunk_tx, verdict_rx))
+        .spawn(move || drafter_thread(art, dseed, temp, specs, chunk_tx, verdict_rx))
         .map_err(|e| anyhow!("spawn drafter: {e}"))?;
 
     let t0 = Instant::now();
     let mut rep = EngineReport::default();
     let mut pending: Vec<Option<Chunk>> = (0..n).map(|_| None).collect();
     // verify-step inputs, reused every round
-    let w = k + 1;
     let mut vtoks = vec![pad; bucket * w];
 
     let active = |reqs: &Vec<Request>| reqs.iter().filter(|r| !r.done).count();
@@ -402,6 +495,7 @@ pub fn rollout_decoupled(
                 // empty resync verdict.
                 rep.wasted_tokens += chunk.tokens.len() as u64;
                 rep.drafted_tokens += chunk.tokens.len() as u64;
+                rep.slot_accept(i).drafted += chunk.tokens.len() as u64;
                 let _ = verdict_tx.send(Verdict::Advance {
                     slot: i,
                     new_tokens: vec![],
@@ -413,7 +507,7 @@ pub fn rollout_decoupled(
             pending[i] = Some(chunk);
         }
 
-        // Batched verify of all pending chunks.
+        // Batched verify of all pending chunks (shorter chunks padded).
         vtoks.fill(pad);
         for i in 0..n {
             if let Some(c) = &pending[i] {
@@ -433,11 +527,13 @@ pub fn rollout_decoupled(
                 verify_exact(id, cfg.seed, cfg.temperature, seq_len, &c.tokens, |j| out.at(i, j));
             let budget_left = requests[i].budget - requests[i].generated();
             let mut append = outcome.append;
-            if outcome.full_accept {
-                // Decoupled mode takes no bonus token: the drafter's
+            if outcome.full_accept && plans[i].mode == PlanMode::Decoupled {
+                // Decoupled discipline takes no bonus token: the drafter's
                 // pipelined next chunk was drafted without it, and the tape
                 // re-samples the identical token at that position later —
-                // losslessness is unaffected (see module docs).
+                // losslessness is unaffected (see module docs). Coupled
+                // slots (depth-1 pipeline) keep the bonus, matching
+                // `Worker`'s coupled groups token-for-token.
                 append.pop();
             }
             append.truncate(budget_left);
@@ -449,6 +545,9 @@ pub fn rollout_decoupled(
             rep.drafted_tokens += c.tokens.len() as u64;
             rep.accepted_tokens += outcome.accepted as u64;
             rep.wasted_tokens += outcome.wasted as u64;
+            let sa = rep.slot_accept(i);
+            sa.drafted += c.tokens.len() as u64;
+            sa.accepted += outcome.accepted as u64;
             if append.len() > 1 {
                 rep.skipped_iterations += 1;
             }

@@ -1,26 +1,35 @@
 //! Single-worker generation engine over the PJRT runtime.
 //!
 //! One [`Worker`] owns a batch slot table, the target model's KV cache and
-//! (for model-based drafting) the draft model's cache, and drives rollout
-//! in one of three modes:
+//! (for model-based drafting) per-draft-model caches, and drives rollout
+//! under **per-slot speculation plans** ([`SlotPlan`]): each slot chooses
+//! its own draft method, window and coupled/decoupled discipline, and
+//! [`Worker::round`] batches the active slots into one verify step per
+//! `(method, window)` plan group. Whole-batch drivers remain as thin
+//! wrappers:
 //!
 //! * [`Worker::rollout_vanilla`] — plain auto-regressive decoding,
-//! * [`Worker::rollout_coupled`] — draft-k-then-verify speculation
+//! * [`Worker::rollout_coupled`] — uniform draft-k-then-verify speculation
 //!   (vanilla speculative decoding, the paper's baseline),
-//! * `engine::decoupled::rollout_decoupled` — drafter and verifier on
-//!   separate threads with a bounded draft window (§4.1).
+//! * [`Worker::rollout_planned`] — drain under the current slot plans,
+//! * `engine::decoupled::rollout_decoupled_planned` — drafter and verifier
+//!   on separate threads with bounded per-slot draft windows (§4.1).
 //!
 //! The batch is **slot-dynamic**: [`Worker::admit`] prefill-joins a new
 //! request into a free slot mid-flight and [`Worker::retire`] frees a
 //! finished one, so the serve loop (`serve/`) can keep occupancy high
-//! under open-loop arrivals while batch-static callers drive the same
-//! worker through [`Worker::round`]-based `rollout_*` helpers.
+//! under open-loop arrivals; plans are hot-swapped in place by
+//! [`Worker::set_plan`] (Algorithm 2 reconfiguration, serve replanning).
 //!
 //! All modes produce **identical token sequences** for the same seed (the
-//! losslessness invariant; enforced by `rust/tests/losslessness.rs` and —
-//! across staggered admits/retires — `rust/tests/serve_lossless.rs`).
+//! losslessness invariant; enforced by `rust/tests/losslessness.rs` —
+//! including mixed-plan batches and mid-rollout plan switches — and,
+//! across staggered admits/retires, `rust/tests/serve_lossless.rs`).
 
 pub mod decoupled;
+pub mod plan;
 pub mod worker;
 
-pub use worker::{EngineConfig, EngineReport, Request, SpecMode, Worker};
+pub use decoupled::{rollout_decoupled, rollout_decoupled_planned};
+pub use plan::{same_group, PlanMode, SlotPlan};
+pub use worker::{EngineConfig, EngineReport, Request, SlotAccept, Worker};

@@ -1,0 +1,111 @@
+//! Per-slot speculation plans: the engine-level currency of the paper's
+//! request-level `(w_r, m_r)` pairs.
+//!
+//! A [`SlotPlan`] describes how ONE batch slot speculates: which draft
+//! method proposes tokens, how many tokens per round (`window`, 0 =
+//! vanilla decoding), and whether verification runs coupled (bonus token
+//! on full accept) or decoupled (no bonus — token dynamics identical to
+//! the pipelined drafter thread, so a request can migrate between the
+//! in-process round loop and `engine::decoupled` without changing its
+//! token stream).
+//!
+//! Plans are owned per slot by [`Worker`], applied by the serve loop on
+//! admission and at occupancy-bucket crossings, and rewritten in place by
+//! Algorithm 2 (`coordinator::reconfig::Reconfigurator`) and Algorithm 3
+//! (`coordinator::fon::slot_plans`). Slots sharing `(method, window)` are
+//! batched into one verify step per round regardless of `mode` — see
+//! PERF.md §Per-slot planning for the grouping cost model.
+//!
+//! [`Worker`]: crate::engine::Worker
+
+use crate::drafter::DraftMethod;
+
+/// Verification discipline for a speculative slot (the paper's `m_r`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum PlanMode {
+    /// Draft-then-verify; a fully accepted window earns the bonus token.
+    Coupled,
+    /// Pipelined drafting discipline: no bonus token on full accept, so
+    /// the drafter may run ahead without ever drafting from a token it
+    /// has not proposed itself (§4.1).
+    Decoupled,
+}
+
+/// One slot's speculation plan `(d_r, w_r, m_r)`.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SlotPlan {
+    /// Draft method proposing tokens for this slot.
+    pub method: DraftMethod,
+    /// Draft window: tokens proposed per round. `0` = vanilla decoding
+    /// (method and mode are then inert).
+    pub window: usize,
+    pub mode: PlanMode,
+}
+
+impl SlotPlan {
+    /// Plain auto-regressive decoding (no drafter state is maintained).
+    pub fn vanilla() -> SlotPlan {
+        SlotPlan {
+            method: DraftMethod::Model("draft_small".to_string()),
+            window: 0,
+            mode: PlanMode::Coupled,
+        }
+    }
+
+    /// Coupled draft-`window`-verify speculation.
+    pub fn coupled(method: DraftMethod, window: usize) -> SlotPlan {
+        SlotPlan { method, window, mode: PlanMode::Coupled }
+    }
+
+    /// Decoupled-discipline speculation (bounded run-ahead, no bonus).
+    pub fn decoupled(method: DraftMethod, window: usize) -> SlotPlan {
+        SlotPlan { method, window, mode: PlanMode::Decoupled }
+    }
+
+    pub fn is_vanilla(&self) -> bool {
+        self.window == 0
+    }
+}
+
+/// Two plans share a round group when they run the same verify step:
+/// vanilla slots all share one decode step; speculative slots group by
+/// `(method, window)`. `mode` is intentionally NOT part of the key — the
+/// bonus-token discipline is applied per slot when outcomes land, so
+/// coupled and decoupled slots with the same drafter and window still
+/// share one verify step.
+pub fn same_group(a: &SlotPlan, b: &SlotPlan) -> bool {
+    (a.window == 0 && b.window == 0) || (a.window == b.window && a.method == b.method)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vanilla_groups_ignore_method_and_mode() {
+        let a = SlotPlan::vanilla();
+        let mut b = SlotPlan::coupled(DraftMethod::Sam, 0);
+        b.mode = PlanMode::Decoupled;
+        assert!(same_group(&a, &b));
+    }
+
+    #[test]
+    fn speculative_groups_key_on_method_and_window() {
+        let a = SlotPlan::coupled(DraftMethod::Sam, 3);
+        let b = SlotPlan::decoupled(DraftMethod::Sam, 3);
+        let c = SlotPlan::coupled(DraftMethod::Sam, 1);
+        let d = SlotPlan::coupled(DraftMethod::Ngram, 3);
+        assert!(same_group(&a, &b), "mode must not split a group");
+        assert!(!same_group(&a, &c), "window must split groups");
+        assert!(!same_group(&a, &d), "method must split groups");
+    }
+
+    #[test]
+    fn constructors() {
+        assert!(SlotPlan::vanilla().is_vanilla());
+        let p = SlotPlan::decoupled(DraftMethod::Ngram, 4);
+        assert_eq!(p.window, 4);
+        assert_eq!(p.mode, PlanMode::Decoupled);
+        assert!(!p.is_vanilla());
+    }
+}

@@ -1,30 +1,41 @@
-//! Batched single-worker engine: vanilla and coupled speculative rollout
-//! over a **slot-dynamic** batch.
+//! Batched single-worker engine over a **slot-dynamic**, **plan-driven**
+//! batch.
 //!
-//! The worker owns `bucket` sequence slots. A slot table (`Vec<Option<Request>>`)
-//! replaces the old construct-and-drain request vector: requests can be
+//! The worker owns `bucket` sequence slots. A slot table
+//! (`Vec<Option<Request>>`) holds the live requests; requests can be
 //! admitted into free slots ([`Worker::admit`], prefill-join via a staging
 //! cache + row migration) and retired out of them ([`Worker::retire`])
 //! while other slots keep decoding — the substrate of the continuous
-//! batching serve loop (`serve/batcher.rs`). Batch-static callers are
-//! unchanged: [`Worker::new`] fills slots `0..n` with one batched prefill
-//! and the `rollout_*` drivers drain them.
+//! batching serve loop (`serve/batcher.rs`).
 //!
-//! The decode loop is allocation-lean: all per-round token/draft buffers
-//! live in a [`Scratch`] owned by the worker and are reused across rounds
-//! (see PERF.md §Memory discipline), and verification borrows logits rows
-//! straight out of the runtime's [`StepOut`].
+//! Speculation is configured **per slot**, not per batch: every slot owns
+//! a [`SlotPlan`] `(method, window, mode)` and [`Worker::round`] partitions
+//! the active slots into plan groups — one vanilla decode step for all
+//! window-0 slots, plus one draft-and-verify step per `(method, window)`
+//! group. Plans are hot-swappable mid-rollout ([`Worker::set_plan`]):
+//! token drafters are rebuilt from the slot's verified prefix, and a model
+//! drafter's cache row is re-fed through the ordinary catch-up path — so
+//! Algorithm 2 (request-level reconfiguration) and the serve replanner
+//! rewrite live slots without touching the rest of the batch.
+//!
+//! The decode loop is allocation-lean: all per-round token/draft/group
+//! buffers live in a [`Scratch`] owned by the worker and are reused across
+//! rounds (see PERF.md §Memory discipline), and verification borrows
+//! logits rows straight out of the runtime's [`StepOut`].
 //!
 //! [`StepOut`]: crate::runtime::StepOut
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
-use crate::drafter::{DraftMethod, NgramDrafter, SamDrafter, TokenDrafter};
+use crate::drafter::TokenDrafter;
 use crate::runtime::{KvCache, Runtime};
 use crate::spec::{decode_one, verify_exact, AcceptanceStats};
 use crate::util::rng::{position_rng, sample_logits};
+
+use super::plan::{same_group, PlanMode, SlotPlan};
 
 /// One rollout request.
 #[derive(Clone, Debug)]
@@ -60,20 +71,12 @@ impl Request {
     }
 }
 
-/// Speculation mode for the engine.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum SpecMode {
-    Vanilla,
-    /// Draft `window` tokens, then verify (vanilla speculative decoding).
-    Coupled { window: usize },
-    /// Drafter runs ahead bounded by `window` (§4.1), on its own thread.
-    Decoupled { window: usize },
-}
-
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
-    pub mode: SpecMode,
-    pub drafter: DraftMethod,
+    /// Default plan applied to slots constructed or admitted without an
+    /// explicit per-slot plan ([`Worker::new_with_plans`] /
+    /// [`Worker::admit_with_plan`] override it).
+    pub plan: SlotPlan,
     pub temperature: f32,
     /// Sampling-tape seed shared by every mode (losslessness).
     pub seed: u64,
@@ -84,11 +87,31 @@ pub struct EngineConfig {
 impl Default for EngineConfig {
     fn default() -> Self {
         EngineConfig {
-            mode: SpecMode::Vanilla,
-            drafter: DraftMethod::Model("draft_small".to_string()),
+            plan: SlotPlan::vanilla(),
             temperature: 1.0,
             seed: 7,
             draft_seed: 1007,
+        }
+    }
+}
+
+/// Per-slot draft/accept counters (Algorithm 2's measurement input): the
+/// serve loop's reconfigurator takes deltas of these between firings to
+/// get the *recent* acceptance rate of whatever request occupies the slot.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SlotAccept {
+    pub drafted: u64,
+    pub accepted: u64,
+}
+
+impl SlotAccept {
+    /// Acceptance rate; 1.0 when nothing was drafted (optimistic prior,
+    /// matching [`AcceptanceStats::rate`]).
+    pub fn rate(&self) -> f64 {
+        if self.drafted == 0 {
+            1.0
+        } else {
+            self.accepted as f64 / self.drafted as f64
         }
     }
 }
@@ -107,6 +130,10 @@ pub struct EngineReport {
     /// iterations" in the paper's §5.2 metric).
     pub skipped_iterations: u64,
     pub iterations: u64,
+    /// Per-slot drafted/accepted counters, indexed by batch slot (grown on
+    /// first use; cumulative across the report's lifetime — consumers
+    /// wanting recent rates take deltas).
+    pub per_slot: Vec<SlotAccept>,
 }
 
 impl EngineReport {
@@ -124,6 +151,14 @@ impl EngineReport {
         } else {
             self.accepted_tokens as f64 / self.drafted_tokens as f64
         }
+    }
+
+    /// Mutable per-slot counter for `slot`, growing the table as needed.
+    pub fn slot_accept(&mut self, slot: usize) -> &mut SlotAccept {
+        if self.per_slot.len() <= slot {
+            self.per_slot.resize(slot + 1, SlotAccept::default());
+        }
+        &mut self.per_slot[slot]
     }
 }
 
@@ -144,6 +179,23 @@ struct Scratch {
     need: Vec<usize>,
     /// Indices of occupied, not-done slots (refreshed once per round).
     active: Vec<usize>,
+    /// Representative slot of each plan group (rebuilt per round; keying
+    /// groups by a member slot avoids cloning `SlotPlan`s on the hot path).
+    group_reps: Vec<usize>,
+    /// Member slots of each plan group (vec pool, reused across rounds).
+    group_slots: Vec<Vec<usize>>,
+}
+
+/// Per-draft-model runtime state: one KV cache spanning the whole bucket
+/// plus per-slot consumed counters. Created lazily the first time any
+/// slot's plan names the model; rows are re-fed from the slot's verified
+/// prefix through the catch-up path after a plan switch.
+struct DraftModelState {
+    cache: KvCache,
+    /// Per-slot count of sequence tokens this model's cache has consumed.
+    consumed: Vec<usize>,
+    /// Staging cache for per-slot admission prefill (lazily built).
+    stage: Option<KvCache>,
 }
 
 /// Batched engine worker over one `Runtime`.
@@ -152,20 +204,18 @@ pub struct Worker<'rt> {
     pub cfg: EngineConfig,
     /// Slot table: `slots[i]` is the request occupying batch slot `i`.
     slots: Vec<Option<Request>>,
+    /// Per-slot speculation plans (entries for empty slots are inert).
+    plans: Vec<SlotPlan>,
     target: String,
     bucket: usize,
     cache: KvCache,
-    /// Draft model cache (model-based drafting only).
-    draft_cache: Option<KvCache>,
-    draft_model: Option<String>,
-    /// Per-slot token drafters (ngram/sam drafting only).
+    /// Draft-model caches, keyed by model name (a batch may speculate with
+    /// several model drafters at once — one bucket-wide cache each).
+    draft_models: BTreeMap<String, DraftModelState>,
+    /// Per-slot token drafters (ngram/sam plans only).
     token_drafters: Vec<Option<Box<dyn TokenDrafter>>>,
-    /// Per-slot: number of seq tokens consumed by the draft model cache.
-    draft_consumed: Vec<usize>,
-    /// Reusable staging caches for per-slot admission prefill (target /
-    /// draft model), built lazily on the first `admit`.
+    /// Reusable staging cache for target-side admission prefill.
     stage: Option<KvCache>,
-    stage_draft: Option<KvCache>,
     scratch: Scratch,
     eos: i32,
     pad: i32,
@@ -181,25 +231,19 @@ impl<'rt> Worker<'rt> {
         let m = &rt.manifest;
         let bucket = m.bucket_for(capacity.max(1))?;
         let target = m.target.clone();
-        let max_new = m.model(&target)?.max_seq - m.prompt_len - 2;
+        // Budget cap reserves headroom for the LARGEST lowered verify
+        // window, not just one decode step: a plan group's verify runs the
+        // full bucket, so every row — whatever its own plan — must satisfy
+        // the runtime's lens + w <= max_seq guard for any group's w.
+        let max_new = m.max_new_tokens()?;
 
-        let (draft_model, draft_cache) = match &cfg.drafter {
-            DraftMethod::Model(name) => {
-                m.model(name)?;
-                (Some(name.clone()), Some(rt.new_cache(name, bucket)?))
-            }
-            _ => (None, None),
-        };
-
-        Ok(Worker {
+        let w = Worker {
             cache: rt.new_cache(&target, bucket)?,
-            draft_cache,
-            draft_model,
+            draft_models: BTreeMap::new(),
             token_drafters: (0..bucket).map(|_| None).collect(),
-            draft_consumed: vec![0; bucket],
             stage: None,
-            stage_draft: None,
             slots: (0..bucket).map(|_| None).collect(),
+            plans: (0..bucket).map(|_| cfg.plan.clone()).collect(),
             scratch: Scratch {
                 drafts: (0..bucket).map(|_| Vec::new()).collect(),
                 ..Scratch::default()
@@ -211,21 +255,46 @@ impl<'rt> Worker<'rt> {
             target,
             bucket,
             max_new,
-        })
+        };
+        w.validate_plan(&w.cfg.plan)?;
+        Ok(w)
     }
 
     /// Create a worker for `requests` (all sharing the manifest prompt
-    /// length) and run one batched prefill on both target and drafter.
+    /// length, all on the config's default plan) and run one batched
+    /// prefill on the target and every draft model the plans name.
     pub fn new(rt: &'rt Runtime, cfg: EngineConfig, requests: Vec<Request>) -> Result<Self> {
+        let plans = vec![cfg.plan.clone(); requests.len()];
+        Self::new_with_plans(rt, cfg, requests, plans)
+    }
+
+    /// Create a worker with an explicit per-slot plan for each request —
+    /// a mixed-plan batch from the start (e.g. Algorithm 2 output carried
+    /// over from a previous rollout phase).
+    pub fn new_with_plans(
+        rt: &'rt Runtime,
+        cfg: EngineConfig,
+        requests: Vec<Request>,
+        plans: Vec<SlotPlan>,
+    ) -> Result<Self> {
         if requests.is_empty() {
             bail!("no requests");
+        }
+        if plans.len() != requests.len() {
+            bail!("{} plans for {} requests", plans.len(), requests.len());
         }
         let mut w = Self::with_capacity(rt, cfg, requests.len())?;
         for r in &requests {
             w.validate_request(r)?;
         }
+        for p in &plans {
+            w.validate_plan(p)?;
+        }
         for (i, r) in requests.into_iter().enumerate() {
             w.slots[i] = Some(r);
+        }
+        for (i, p) in plans.into_iter().enumerate() {
+            w.plans[i] = p;
         }
         w.prefill_all()?;
         Ok(w)
@@ -246,19 +315,46 @@ impl<'rt> Worker<'rt> {
         Ok(())
     }
 
-    /// Fresh per-slot token drafter for the configured method (None for
-    /// model-based drafting, and for pure-vanilla workers — maintaining a
-    /// drafter index per generated token would be hot-path waste when no
-    /// speculative round will ever consult it).
-    fn fresh_token_drafter(&self) -> Option<Box<dyn TokenDrafter>> {
-        if matches!(self.cfg.mode, SpecMode::Vanilla) {
-            return None;
+    /// A plan is runnable when its verify window can be served by some
+    /// lowered step executable and its draft model (if any) exists.
+    fn validate_plan(&self, p: &SlotPlan) -> Result<()> {
+        if p.window > 0 {
+            self.verify_window_for(p.window)?;
+            if let Some(name) = p.method.model_name() {
+                self.rt.manifest.model(name)?;
+            }
         }
-        match &self.cfg.drafter {
-            DraftMethod::Model(_) => None,
-            DraftMethod::Ngram => Some(Box::new(NgramDrafter::new(3)) as Box<dyn TokenDrafter>),
-            DraftMethod::Sam => Some(Box::new(SamDrafter::new(16)) as Box<dyn TokenDrafter>),
+        Ok(())
+    }
+
+    /// Smallest lowered step window able to verify `k` drafted tokens
+    /// (`k + 1` input positions: last accepted token + the drafts). A
+    /// window between lowered sizes rounds UP — the surplus positions are
+    /// padded and their outputs ignored, trading a little verify compute
+    /// for an unrestricted Algorithm 2 window grid.
+    fn verify_window_for(&self, k: usize) -> Result<usize> {
+        self.rt
+            .manifest
+            .windows
+            .iter()
+            .copied()
+            .filter(|&w| w >= k + 1)
+            .min()
+            .ok_or_else(|| anyhow!("no lowered step window can verify draft window {k}"))
+    }
+
+    /// Lazily create the bucket-wide cache for draft model `name`.
+    fn ensure_draft_model(&mut self, name: &str) -> Result<()> {
+        if !self.draft_models.contains_key(name) {
+            self.rt.manifest.model(name)?;
+            let st = DraftModelState {
+                cache: self.rt.new_cache(name, self.bucket)?,
+                consumed: vec![0; self.bucket],
+                stage: None,
+            };
+            self.draft_models.insert(name.to_string(), st);
         }
+        Ok(())
     }
 
     fn prefill_all(&mut self) -> Result<()> {
@@ -277,39 +373,82 @@ impl<'rt> Worker<'rt> {
         for l in self.cache.lens.iter_mut() {
             *l = (p - 1) as i32;
         }
-        if let (Some(dm), Some(dc)) = (&self.draft_model, &mut self.draft_cache) {
-            self.rt.prefill(dm, &toks, dc)?;
-            for l in dc.lens.iter_mut() {
-                *l = (p - 1) as i32;
+
+        // One batched prefill per draft model named by any slot's plan,
+        // covering exactly the slots that use it.
+        let mut models: Vec<String> = Vec::new();
+        for i in 0..self.bucket {
+            if self.slots[i].is_none() || self.plans[i].window == 0 {
+                continue;
             }
-            for c in self.draft_consumed.iter_mut() {
-                *c = p - 1;
+            if let Some(name) = self.plans[i].method.model_name() {
+                if !models.iter().any(|m| m == name) {
+                    models.push(name.to_string());
+                }
+            }
+        }
+        for name in models {
+            self.ensure_draft_model(&name)?;
+            toks.clear();
+            toks.resize(self.bucket * p, self.pad);
+            let mut users = vec![false; self.bucket];
+            for (i, s) in self.slots.iter().enumerate() {
+                let uses = s.is_some()
+                    && self.plans[i].window > 0
+                    && self.plans[i].method.model_name() == Some(name.as_str());
+                if uses {
+                    toks[i * p..(i + 1) * p]
+                        .copy_from_slice(&self.slots[i].as_ref().unwrap().prompt);
+                    users[i] = true;
+                }
+            }
+            let rt = self.rt;
+            let st = self.draft_models.get_mut(&name).unwrap();
+            rt.prefill(&name, &toks, &mut st.cache)?;
+            for i in 0..st.cache.lens.len() {
+                if users[i] {
+                    st.cache.lens[i] = (p - 1) as i32;
+                    st.consumed[i] = p - 1;
+                } else {
+                    // non-user rows hold prefill junk; zero their lens so
+                    // the runtime's max_seq guard never trips on them and
+                    // a later plan switch re-feeds from scratch
+                    st.cache.lens[i] = 0;
+                    st.consumed[i] = 0;
+                }
             }
         }
         self.scratch.toks = toks;
+
         for i in 0..self.bucket {
-            let td = match &self.slots[i] {
-                Some(r) => {
-                    let mut td = self.fresh_token_drafter();
+            self.token_drafters[i] = match &self.slots[i] {
+                Some(r) if self.plans[i].window > 0 => {
+                    let mut td = self.plans[i].method.new_token_drafter();
                     if let Some(t) = td.as_mut() {
                         t.extend(&r.prompt);
                     }
                     td
                 }
-                None => None,
+                _ => None,
             };
-            self.token_drafters[i] = td;
         }
         Ok(())
     }
 
-    /// Admit `req` into the free slot `slot` while the batch keeps running:
-    /// prefill the prompt into a small staging cache (the whole-cache reset
-    /// inside `Runtime::prefill` must not touch live slots), then migrate
-    /// the row in via `extract_row`/`insert_row` — the same machinery that
-    /// moves straggler caches between Fastest-of-N workers. An admission is
-    /// a control-plane cost: one bucket-1 prefill plus one row copy.
+    /// Admit `req` into the free slot `slot` on the config's default plan.
     pub fn admit(&mut self, slot: usize, req: Request) -> Result<()> {
+        let plan = self.cfg.plan.clone();
+        self.admit_with_plan(slot, req, plan)
+    }
+
+    /// Admit `req` into the free slot `slot` under `plan` while the batch
+    /// keeps running: prefill the prompt into a small staging cache (the
+    /// whole-cache reset inside `Runtime::prefill` must not touch live
+    /// slots), then migrate the row in via `extract_row`/`insert_row` —
+    /// the same machinery that moves straggler caches between
+    /// Fastest-of-N workers. An admission is a control-plane cost: one
+    /// bucket-1 prefill plus one row copy (twice with a model drafter).
+    pub fn admit_with_plan(&mut self, slot: usize, req: Request, plan: SlotPlan) -> Result<()> {
         if slot >= self.bucket {
             bail!("slot {slot} out of range (bucket {})", self.bucket);
         }
@@ -317,6 +456,7 @@ impl<'rt> Worker<'rt> {
             bail!("slot {slot} already occupied");
         }
         self.validate_request(&req)?;
+        self.validate_plan(&plan)?;
         let p = self.rt.manifest.prompt_len;
         let sb = self.rt.manifest.bucket_for(1)?;
         let mut toks = std::mem::take(&mut self.scratch.toks);
@@ -333,32 +473,41 @@ impl<'rt> Worker<'rt> {
         let row = stage.extract_row(0)?;
         self.cache.insert_row(slot, &row)?;
 
-        if let Some(dm) = self.draft_model.clone() {
-            if self.stage_draft.is_none() {
-                self.stage_draft = Some(self.rt.new_cache(&dm, sb)?);
+        if plan.window > 0 {
+            if let Some(name) = plan.method.model_name() {
+                let name = name.to_string();
+                self.ensure_draft_model(&name)?;
+                let rt = self.rt;
+                let st = self.draft_models.get_mut(&name).unwrap();
+                if st.stage.is_none() {
+                    st.stage = Some(rt.new_cache(&name, sb)?);
+                }
+                let sd = st.stage.as_mut().unwrap();
+                rt.prefill(&name, &toks, sd)?;
+                sd.lens[0] = (p - 1) as i32;
+                let drow = sd.extract_row(0)?;
+                st.cache.insert_row(slot, &drow)?;
+                st.consumed[slot] = p - 1;
             }
-            let sd = self.stage_draft.as_mut().unwrap();
-            self.rt.prefill(&dm, &toks, sd)?;
-            sd.lens[0] = (p - 1) as i32;
-            let drow = sd.extract_row(0)?;
-            self.draft_cache
-                .as_mut()
-                .expect("draft cache exists for model drafting")
-                .insert_row(slot, &drow)?;
-            self.draft_consumed[slot] = p - 1;
         }
         self.scratch.toks = toks;
 
-        if let Some(mut td) = self.fresh_token_drafter() {
-            td.extend(&req.prompt);
-            self.token_drafters[slot] = Some(td);
-        }
+        self.token_drafters[slot] = if plan.window > 0 {
+            let mut td = plan.method.new_token_drafter();
+            if let Some(t) = td.as_mut() {
+                t.extend(&req.prompt);
+            }
+            td
+        } else {
+            None
+        };
+        self.plans[slot] = plan;
         self.slots[slot] = Some(req);
         Ok(())
     }
 
-    /// Remove the request occupying `slot` and free its cache rows for
-    /// reuse by a later admission.
+    /// Remove the request occupying `slot` and free its cache rows (target
+    /// and every draft model) for reuse by a later admission.
     pub fn retire(&mut self, slot: usize) -> Result<Request> {
         if slot >= self.bucket {
             bail!("slot {slot} out of range (bucket {})", self.bucket);
@@ -367,12 +516,70 @@ impl<'rt> Worker<'rt> {
             bail!("slot {slot} is empty");
         };
         self.cache.clear_row(slot)?;
-        if let Some(dc) = &mut self.draft_cache {
-            dc.clear_row(slot)?;
+        for st in self.draft_models.values_mut() {
+            st.cache.clear_row(slot)?;
+            st.consumed[slot] = 0;
         }
-        self.draft_consumed[slot] = 0;
         self.token_drafters[slot] = None;
+        self.plans[slot] = self.cfg.plan.clone();
         Ok(req)
+    }
+
+    /// The plan the slot currently runs under.
+    pub fn plan(&self, slot: usize) -> Option<&SlotPlan> {
+        self.plans.get(slot)
+    }
+
+    /// Hot-swap the slot's speculation plan mid-rollout (Algorithm 2 /
+    /// serve replanning). Drafter state is rebuilt from the slot's
+    /// verified prefix: a token drafter re-indexes `seq`, a model
+    /// drafter's cache row is invalidated and re-fed through the next
+    /// round's catch-up path. Switching between plans that share a drafter
+    /// keeps the live state (the common case for window-only changes).
+    pub fn set_plan(&mut self, slot: usize, plan: SlotPlan) -> Result<()> {
+        if slot >= self.bucket {
+            bail!("slot {slot} out of range (bucket {})", self.bucket);
+        }
+        self.validate_plan(&plan)?;
+        if self.slots[slot].is_none() {
+            // empty slot: just record the plan (admission overrides it)
+            self.plans[slot] = plan;
+            return Ok(());
+        }
+        let old = self.plans[slot].clone();
+        if old == plan {
+            return Ok(());
+        }
+        // Same live drafter carried over? (window/mode-only change)
+        let keep = old.window > 0 && plan.window > 0 && old.method == plan.method;
+        if !keep {
+            // tear down the old drafter surface
+            self.token_drafters[slot] = None;
+            if old.window > 0 {
+                if let Some(oname) = old.method.model_name() {
+                    if let Some(st) = self.draft_models.get_mut(oname) {
+                        st.cache.clear_row(slot)?;
+                        st.consumed[slot] = 0;
+                    }
+                }
+            }
+            // build the new one from the verified prefix
+            if plan.window > 0 {
+                if let Some(name) = plan.method.model_name() {
+                    // the row is re-fed lazily: consumed = 0 makes the next
+                    // draft round's catch-up feed the whole verified prefix
+                    // in windowed steps (an admission-style prefill would
+                    // reset the staging cache mid-batch for nothing)
+                    self.ensure_draft_model(name)?;
+                } else {
+                    let mut td = plan.method.new_token_drafter().expect("token method");
+                    td.extend(&self.slots[slot].as_ref().unwrap().seq);
+                    self.token_drafters[slot] = Some(td);
+                }
+            }
+        }
+        self.plans[slot] = plan;
+        Ok(())
     }
 
     /// Recompute the active-slot list into scratch (no allocation in the
@@ -396,44 +603,77 @@ impl<'rt> Worker<'rt> {
         }
     }
 
-    /// One engine iteration over the currently-admitted unfinished slots:
-    /// `window == 0` runs a single vanilla decode step, `window >= 1` runs
-    /// one coupled draft-`window`-verify round. Returns the number of slots
-    /// that participated (0 = nothing to do). The serve loop's batcher
-    /// calls this once per tick with the replanner's current window.
-    pub fn round(&mut self, window: usize, rep: &mut EngineReport) -> Result<usize> {
+    /// One engine iteration over the currently-admitted unfinished slots,
+    /// driven by their [`SlotPlan`]s: the active slots are partitioned into
+    /// plan groups and each group runs one target step — a single vanilla
+    /// decode step for all window-0 slots, one draft-`w`-verify round per
+    /// `(method, window)` group. Returns the number of slots that
+    /// participated (0 = nothing to do).
+    pub fn round(&mut self, rep: &mut EngineReport) -> Result<usize> {
         let active = self.refresh_active();
         if active == 0 {
             return Ok(0);
         }
-        if window == 0 {
-            self.vanilla_round(rep)?;
-        } else {
-            if window + 1 > *self.rt.manifest.windows.iter().max().unwrap_or(&1) {
-                bail!("verify window {} not lowered", window + 1);
-            }
-            self.coupled_round(window, rep)?;
+        // Partition into plan groups, keyed by a representative member
+        // slot (comparing plans in place; no clones on the hot path).
+        let mut reps = std::mem::take(&mut self.scratch.group_reps);
+        let mut groups = std::mem::take(&mut self.scratch.group_slots);
+        reps.clear();
+        for g in groups.iter_mut() {
+            g.clear();
         }
+        for idx in 0..self.scratch.active.len() {
+            let i = self.scratch.active[idx];
+            let gi = reps
+                .iter()
+                .position(|&r| same_group(&self.plans[r], &self.plans[i]));
+            let gi = match gi {
+                Some(g) => g,
+                None => {
+                    reps.push(i);
+                    if groups.len() < reps.len() {
+                        groups.push(Vec::new());
+                    }
+                    reps.len() - 1
+                }
+            };
+            groups[gi].push(i);
+        }
+        let n_groups = reps.len();
+        let mut result = Ok(());
+        for g in 0..n_groups {
+            let slots = std::mem::take(&mut groups[g]);
+            let window = self.plans[reps[g]].window;
+            let r = if window == 0 {
+                self.vanilla_round(&slots, rep)
+            } else {
+                self.coupled_round(window, &slots, rep)
+            };
+            groups[g] = slots;
+            if r.is_err() {
+                result = r;
+                break;
+            }
+        }
+        self.scratch.group_reps = reps;
+        self.scratch.group_slots = groups;
+        result?;
+        rep.iterations += 1;
         Ok(active)
     }
 
-    /// One vanilla decode step for all active slots.
-    fn vanilla_round(&mut self, rep: &mut EngineReport) -> Result<()> {
-        // inputs: last token of each occupied slot's sequence (pad for free)
+    /// One vanilla decode step for the window-0 group.
+    fn vanilla_round(&mut self, slots: &[usize], rep: &mut EngineReport) -> Result<()> {
         let mut toks = std::mem::take(&mut self.scratch.toks);
         toks.clear();
         toks.resize(self.bucket, self.pad);
-        for (i, s) in self.slots.iter().enumerate() {
-            if let Some(r) = s {
-                toks[i] = *r.seq.last().unwrap();
-            }
+        for &i in slots {
+            toks[i] = *self.slots[i].as_ref().unwrap().seq.last().unwrap();
         }
         let out = self.rt.step(&self.target, &toks, 1, &mut self.cache)?;
         self.scratch.toks = toks;
         rep.target_steps += 1;
-        rep.iterations += 1;
-        for idx in 0..self.scratch.active.len() {
-            let i = self.scratch.active[idx];
+        for &i in slots {
             let (id, seq_len) = {
                 let r = self.slots[i].as_ref().unwrap();
                 (r.id, r.seq.len())
@@ -445,146 +685,171 @@ impl<'rt> Worker<'rt> {
             self.cache.lens[i] += 1;
             rep.total_generated += 1;
             // keep token-drafter history in sync so vanilla rounds can be
-            // interleaved with speculative ones (serve-loop replanning)
+            // interleaved with speculative ones (plan switches)
             if let Some(td) = &mut self.token_drafters[i] {
                 td.extend(std::slice::from_ref(&t));
             }
             self.finish_check(i);
         }
-        // done slots keep their lens frozen: the pad fed to them is
-        // written at lens and overwritten by any later (unused) step.
+        // slots outside the group keep their lens frozen: the pad fed to
+        // them is written at lens and overwritten by their own next step.
         Ok(())
     }
 
-    /// Plain auto-regressive rollout: one target decode step per token.
-    pub fn rollout_vanilla(&mut self) -> Result<EngineReport> {
-        let t0 = Instant::now();
-        let mut rep = EngineReport::default();
-        while self.round(0, &mut rep)? > 0 {}
-        rep.wall_s = t0.elapsed().as_secs_f64();
-        Ok(rep)
-    }
-
-    /// Draft `k` tokens for every active slot into `drafts` (per-slot
-    /// reused buffers; active slots end up with exactly `k` tokens).
+    /// Draft `k` tokens for every slot of one plan group into `drafts`
+    /// (per-slot reused buffers; group slots end up with exactly `k`
+    /// tokens). The group's method is read from its first member's plan.
     ///
     /// Model-based drafting runs `k` batched decode steps on the draft
-    /// model (after a catch-up step when needed); token drafters propose
-    /// from their history index straight into the slot's buffer. Slots
-    /// whose drafter has no proposal fall back to a "self-draft" of the
-    /// successor guess (pad), which simply gets rejected — matching how
-    /// serving engines handle empty lookahead.
-    fn draft_k(&mut self, k: usize, drafts: &mut [Vec<i32>], rep: &mut EngineReport) -> Result<()> {
-        for d in drafts.iter_mut() {
-            d.clear();
+    /// model (after a catch-up phase that also re-feeds rows invalidated
+    /// by a plan switch); token drafters propose from their history index
+    /// straight into the slot's buffer. Slots whose drafter has no
+    /// proposal fall back to a "self-draft" of pad, which simply gets
+    /// rejected — matching how serving engines handle empty lookahead.
+    fn draft_group(
+        &mut self,
+        k: usize,
+        slots: &[usize],
+        drafts: &mut [Vec<i32>],
+        rep: &mut EngineReport,
+    ) -> Result<()> {
+        for &i in slots {
+            drafts[i].clear();
         }
-        if let (Some(dm), Some(_)) = (self.draft_model.clone(), self.draft_cache.as_ref()) {
-            // 1. catch-up: feed seq tokens the draft cache hasn't consumed,
-            //    except the last one (which seeds the first draft step).
-            let mut need = std::mem::take(&mut self.scratch.need);
-            need.clear();
-            need.resize(self.bucket, 0);
-            let mut max_need = 0usize;
-            for idx in 0..self.scratch.active.len() {
-                let i = self.scratch.active[idx];
-                let want = self.slots[i].as_ref().unwrap().seq.len() - 1;
-                need[i] = want.saturating_sub(self.draft_consumed[i]);
-                max_need = max_need.max(need[i]);
-            }
-            let mut toks = std::mem::take(&mut self.scratch.draft_toks);
-            while max_need > 0 {
-                let w = self.rt.manifest.window_for(max_need)?;
-                toks.clear();
-                toks.resize(self.bucket * w, self.pad);
-                for idx in 0..self.scratch.active.len() {
-                    let i = self.scratch.active[idx];
-                    let take = need[i].min(w);
-                    let start = self.draft_consumed[i];
-                    toks[i * w..i * w + take]
-                        .copy_from_slice(&self.slots[i].as_ref().unwrap().seq[start..start + take]);
-                }
-                let dc = self.draft_cache.as_mut().unwrap();
-                self.rt.step(&dm, &toks, w, dc)?;
-                rep.draft_steps += 1;
-                for idx in 0..self.scratch.active.len() {
-                    let i = self.scratch.active[idx];
-                    let take = need[i].min(w);
-                    self.draft_cache.as_mut().unwrap().lens[i] += take as i32;
-                    self.draft_consumed[i] += take;
-                    need[i] -= take;
-                }
-                max_need = need.iter().copied().max().unwrap_or(0);
-            }
-            // 2. k sequential draft decode steps
-            let mut last = std::mem::take(&mut self.scratch.last);
-            last.clear();
-            last.resize(self.bucket, self.pad);
-            for (i, s) in self.slots.iter().enumerate() {
-                if let Some(r) = s {
-                    if !r.done {
-                        last[i] = *r.seq.last().unwrap();
-                    }
-                }
-            }
-            for _ in 0..k {
-                let dc = self.draft_cache.as_mut().unwrap();
-                let out = self.rt.step(&dm, &last, 1, dc)?;
-                rep.draft_steps += 1;
-                for idx in 0..self.scratch.active.len() {
-                    let i = self.scratch.active[idx];
-                    let r = self.slots[i].as_ref().unwrap();
-                    let pos = r.seq.len() + drafts[i].len();
-                    let mut rng = position_rng(self.cfg.draft_seed, r.id, pos as u64);
-                    let t = sample_logits(out.at(i, 0), self.cfg.temperature, &mut rng) as i32;
-                    drafts[i].push(t);
-                    self.draft_cache.as_mut().unwrap().lens[i] += 1;
-                    self.draft_consumed[i] += 1;
-                    last[i] = t;
-                }
-            }
-            self.scratch.last = last;
-            self.scratch.draft_toks = toks;
-            self.scratch.need = need;
-            // draft_consumed now counts speculative tokens too; verification
-            // rolls it back to the accepted prefix below.
+        let is_model = self.plans[slots[0]].method.is_model();
+        if is_model {
+            // Take the model state out of the map so the runtime and slot
+            // table stay borrowable; put it back whatever happens.
+            let (name, mut st) = {
+                let name = self.plans[slots[0]].method.model_name().unwrap();
+                self.draft_models
+                    .remove_entry(name)
+                    .ok_or_else(|| anyhow!("draft model state missing for {name:?}"))?
+            };
+            let res = self.draft_group_model(&name, &mut st, k, slots, drafts, rep);
+            self.draft_models.insert(name, st);
+            res?;
         } else {
-            for idx in 0..self.scratch.active.len() {
-                let i = self.scratch.active[idx];
+            for &i in slots {
                 if let Some(td) = &mut self.token_drafters[i] {
                     td.draft_into(k, &mut drafts[i]);
                 }
                 drafts[i].resize(k, self.pad); // pad empty/short proposals
             }
         }
-        for idx in 0..self.scratch.active.len() {
-            let i = self.scratch.active[idx];
+        for &i in slots {
             rep.drafted_tokens += drafts[i].len() as u64;
+            rep.slot_accept(i).drafted += drafts[i].len() as u64;
         }
         Ok(())
     }
 
-    /// One coupled speculation round for all active slots: draft `k`
-    /// tokens, verify with a `k+1`-window target step, apply outcomes.
-    /// Assumes `refresh_active` ran since the last `done` change.
-    fn coupled_round(&mut self, k: usize, rep: &mut EngineReport) -> Result<()> {
+    /// Model-drafting body of [`Worker::draft_group`]: catch-up then `k`
+    /// sequential decode steps on draft model `name`.
+    fn draft_group_model(
+        &mut self,
+        name: &str,
+        st: &mut DraftModelState,
+        k: usize,
+        slots: &[usize],
+        drafts: &mut [Vec<i32>],
+        rep: &mut EngineReport,
+    ) -> Result<()> {
+        // 1. catch-up: feed seq tokens the draft cache hasn't consumed,
+        //    except the last one (which seeds the first draft step). A
+        //    just-switched slot has consumed = 0 and is re-fed wholesale.
+        let mut need = std::mem::take(&mut self.scratch.need);
+        need.clear();
+        need.resize(self.bucket, 0);
+        let mut max_need = 0usize;
+        for &i in slots {
+            let want = self.slots[i].as_ref().unwrap().seq.len() - 1;
+            need[i] = want.saturating_sub(st.consumed[i]);
+            max_need = max_need.max(need[i]);
+        }
+        let mut toks = std::mem::take(&mut self.scratch.draft_toks);
+        while max_need > 0 {
+            let w = self.rt.manifest.window_for(max_need)?;
+            toks.clear();
+            toks.resize(self.bucket * w, self.pad);
+            for &i in slots {
+                let take = need[i].min(w);
+                let start = st.consumed[i];
+                toks[i * w..i * w + take]
+                    .copy_from_slice(&self.slots[i].as_ref().unwrap().seq[start..start + take]);
+            }
+            self.rt.step(name, &toks, w, &mut st.cache)?;
+            rep.draft_steps += 1;
+            for &i in slots {
+                let take = need[i].min(w);
+                st.cache.lens[i] += take as i32;
+                st.consumed[i] += take;
+                need[i] -= take;
+            }
+            max_need = slots.iter().map(|&i| need[i]).max().unwrap_or(0);
+        }
+        // 2. k sequential draft decode steps
+        let mut last = std::mem::take(&mut self.scratch.last);
+        last.clear();
+        last.resize(self.bucket, self.pad);
+        for &i in slots {
+            last[i] = *self.slots[i].as_ref().unwrap().seq.last().unwrap();
+        }
+        for _ in 0..k {
+            let out = self.rt.step(name, &last, 1, &mut st.cache)?;
+            rep.draft_steps += 1;
+            for &i in slots {
+                let r = self.slots[i].as_ref().unwrap();
+                let pos = r.seq.len() + drafts[i].len();
+                let mut rng = position_rng(self.cfg.draft_seed, r.id, pos as u64);
+                let t = sample_logits(out.at(i, 0), self.cfg.temperature, &mut rng) as i32;
+                drafts[i].push(t);
+                st.cache.lens[i] += 1;
+                st.consumed[i] += 1;
+                last[i] = t;
+            }
+        }
+        self.scratch.last = last;
+        self.scratch.draft_toks = toks;
+        self.scratch.need = need;
+        // consumed now counts speculative tokens too; verification rolls
+        // it back to the accepted prefix in `coupled_round`.
+        Ok(())
+    }
+
+    /// One speculation round for a `(method, window)` plan group: draft
+    /// `k` tokens, verify with one target step, apply outcomes under each
+    /// slot's own mode (coupled keeps the bonus token on full accept;
+    /// decoupled drops it — the threaded pipeline's token dynamics).
+    fn coupled_round(&mut self, k: usize, slots: &[usize], rep: &mut EngineReport) -> Result<()> {
         let mut drafts = std::mem::take(&mut self.scratch.drafts);
-        self.draft_k(k, &mut drafts, rep)?;
-        let w = k + 1; // verify window: [last, d0..d_{k-1}]
+        let res = self.verify_group(k, slots, &mut drafts, rep);
+        self.scratch.drafts = drafts;
+        res
+    }
+
+    fn verify_group(
+        &mut self,
+        k: usize,
+        slots: &[usize],
+        drafts: &mut [Vec<i32>],
+        rep: &mut EngineReport,
+    ) -> Result<()> {
+        self.draft_group(k, slots, drafts, rep)?;
+        // verify window: [last, d0..d_{k-1}] (+ padding up to a lowered w)
+        let w = self.verify_window_for(k)?;
         let mut toks = std::mem::take(&mut self.scratch.toks);
         toks.clear();
         toks.resize(self.bucket * w, self.pad);
-        for idx in 0..self.scratch.active.len() {
-            let i = self.scratch.active[idx];
+        for &i in slots {
             toks[i * w] = *self.slots[i].as_ref().unwrap().seq.last().unwrap();
             toks[i * w + 1..i * w + 1 + k].copy_from_slice(&drafts[i][..k]);
         }
         let out = self.rt.step(&self.target, &toks, w, &mut self.cache)?;
         self.scratch.toks = toks;
         rep.target_steps += 1;
-        rep.iterations += 1;
 
-        for idx in 0..self.scratch.active.len() {
-            let i = self.scratch.active[idx];
+        for &i in slots {
             let (id, seq_len, budget_left) = {
                 let r = self.slots[i].as_ref().unwrap();
                 (r.id, r.seq.len(), r.budget - r.generated())
@@ -594,6 +859,12 @@ impl<'rt> Worker<'rt> {
                     out.at(i, j)
                 });
             let mut append = outcome.append;
+            if outcome.full_accept && self.plans[i].mode == PlanMode::Decoupled {
+                // Decoupled discipline takes no bonus token: the tape
+                // re-samples the identical token at that position later, so
+                // losslessness is unaffected (see engine::decoupled docs).
+                append.pop();
+            }
             append.truncate(budget_left);
             let advanced = append.len();
             let req = self.slots[i].as_mut().unwrap();
@@ -610,19 +881,20 @@ impl<'rt> Worker<'rt> {
             rep.total_generated += advanced as u64;
             rep.accepted_tokens += outcome.accepted as u64;
             rep.wasted_tokens += outcome.wasted as u64;
+            rep.slot_accept(i).accepted += outcome.accepted as u64;
             if advanced > 1 {
                 rep.skipped_iterations += 1;
             }
             // Drafter cache rollback: the draft model consumed its own
             // drafts while drafting; only those matching the accepted
             // prefix remain valid.
-            if self.draft_model.is_some() {
-                let rollback = (seq_len + outcome.accepted)
-                    .min(new_seq_len - 1)
-                    .min(self.draft_consumed[i]);
-                self.draft_consumed[i] = rollback;
-                if let Some(dc) = &mut self.draft_cache {
-                    dc.lens[i] = rollback as i32;
+            if let Some(name) = self.plans[i].method.model_name() {
+                if let Some(st) = self.draft_models.get_mut(name) {
+                    let rollback = (seq_len + outcome.accepted)
+                        .min(new_seq_len - 1)
+                        .min(st.consumed[i]);
+                    st.consumed[i] = rollback;
+                    st.cache.lens[i] = rollback as i32;
                 }
             }
             // token drafter resync: extend with the accepted tokens
@@ -631,20 +903,46 @@ impl<'rt> Worker<'rt> {
             }
             self.finish_check(i);
         }
-        self.scratch.drafts = drafts;
         Ok(())
     }
 
-    /// Coupled (vanilla) speculative rollout: draft-k-then-verify.
-    pub fn rollout_coupled(&mut self, k: usize) -> Result<EngineReport> {
-        if k + 1 > *self.rt.manifest.windows.iter().max().unwrap_or(&1) {
-            bail!("verify window {} not lowered", k + 1);
-        }
+    /// Drain the batch under the current per-slot plans: the plan-driven
+    /// rollout driver ([`Worker::round`] in a loop).
+    pub fn rollout_planned(&mut self) -> Result<EngineReport> {
         let t0 = Instant::now();
         let mut rep = EngineReport::default();
-        while self.round(k, &mut rep)? > 0 {}
+        while self.round(&mut rep)? > 0 {}
         rep.wall_s = t0.elapsed().as_secs_f64();
         Ok(rep)
+    }
+
+    /// Plain auto-regressive rollout: forces every occupied slot onto the
+    /// vanilla plan, then drains.
+    pub fn rollout_vanilla(&mut self) -> Result<EngineReport> {
+        for i in 0..self.bucket {
+            if self.slots[i].is_some() && self.plans[i].window != 0 {
+                let p = SlotPlan { window: 0, ..self.plans[i].clone() };
+                self.set_plan(i, p)?;
+            }
+        }
+        self.rollout_planned()
+    }
+
+    /// Coupled (vanilla speculative) rollout: forces every occupied slot
+    /// onto `Coupled { window: k }` with its current method, then drains.
+    pub fn rollout_coupled(&mut self, k: usize) -> Result<EngineReport> {
+        for i in 0..self.bucket {
+            if self.slots[i].is_none() {
+                continue;
+            }
+            let p = SlotPlan {
+                method: self.plans[i].method.clone(),
+                window: k,
+                mode: PlanMode::Coupled,
+            };
+            self.set_plan(i, p)?;
+        }
+        self.rollout_planned()
     }
 
     /// The request occupying `slot`, if any.

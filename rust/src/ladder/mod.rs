@@ -153,8 +153,7 @@ impl Ladder {
             .iter()
             .max_by(|a, b| {
                 self.speedup_at(a, a.profiled_p)
-                    .partial_cmp(&self.speedup_at(b, b.profiled_p))
-                    .unwrap()
+                    .total_cmp(&self.speedup_at(b, b.profiled_p))
             })
             .expect("empty ladder")
     }
@@ -164,8 +163,7 @@ impl Ladder {
         let mut v: Vec<&LadderEntry> = self.entries.iter().collect();
         v.sort_by(|a, b| {
             self.speedup_at(b, b.profiled_p)
-                .partial_cmp(&self.speedup_at(a, a.profiled_p))
-                .unwrap()
+                .total_cmp(&self.speedup_at(a, a.profiled_p))
         });
         v
     }

@@ -13,8 +13,9 @@ use std::path::PathBuf;
 use std::process::exit;
 
 use specactor::coordinator::global::{plan_initial, rollout, GlobalConfig};
+use specactor::coordinator::Reconfigurator;
 use specactor::drafter::DraftMethod;
-use specactor::engine::{EngineConfig, Request, SpecMode, Worker};
+use specactor::engine::{EngineConfig, Request, SlotPlan, Worker};
 use specactor::ladder::Ladder;
 use specactor::planner::costmodel::{AffineCost, CostModel};
 use specactor::planner::plan::{search, PlanInput};
@@ -38,7 +39,9 @@ fn usage() -> ! {
            --budget B        per-request token budget (default 24)\n\
            --capacity C      concurrent KV slots, rounded to a bucket (default 4)\n\
            --queue-cap Q     admission queue bound, backpressure beyond (default 64)\n\
-           --drafter D       sam | ngram | draft_small | draft_mid (default sam)\n\
+           --drafter D       sam | ngram | draft_small | draft_mid | auto (default sam;\n\
+                             auto = ladder picks per occupancy; applied, not advisory)\n\
+           --reconfig-period N  run Algorithm 2 every N rounds (0 = off, default 0)\n\
            --vanilla         disable speculation (plain decode rounds)\n\
            --smoke           synthetic engine, no artifacts needed (CI)\n\
          see README / PERF.md for the remaining subcommands' options"
@@ -109,6 +112,14 @@ fn print_serve_summary<E: ServeEngine>(engine: &str, b: &Batcher<E>, rep: &OpenL
         b.replan.plan.bucket,
         b.replan.plan.modelled_speedup
     );
+    if let Some(rc) = &b.reconfig {
+        println!(
+            "  reconfig (Algorithm 2): every {} rounds, {} firings, {} slot plans rewritten",
+            rc.period(),
+            m.reconfigs,
+            m.reconfigured_slots
+        );
+    }
 }
 
 fn cmd_serve(mut args: Args) {
@@ -121,6 +132,7 @@ fn cmd_serve(mut args: Args) {
     let queue_cap = args.opt_parse("queue-cap", 64usize);
     let drafter = args.opt("drafter", "sam");
     let seed = args.opt_parse("seed", 7u64);
+    let reconfig_period = args.opt_parse("reconfig-period", 0u64);
     let vanilla = args.flag("vanilla");
     let smoke = args.flag("smoke");
     args.finish().unwrap_or_else(|e| {
@@ -150,6 +162,9 @@ fn cmd_serve(mut args: Args) {
         let replan = Replanner::synthetic();
         let mut b =
             Batcher::new(SyntheticEngine::new(capacity.max(1), seed), queue_cap, replan, !vanilla);
+        if reconfig_period > 0 && !vanilla {
+            b = b.with_reconfig(Reconfigurator::synthetic(reconfig_period));
+        }
         match drive_open_loop(&mut b, arrivals, Some(1.0e-3)) {
             Ok(rep) => print_serve_summary("synthetic", &b, &rep),
             Err(e) => {
@@ -165,8 +180,7 @@ fn cmd_serve(mut args: Args) {
         exit(1)
     });
     let m = rt.manifest.clone();
-    let info = rt.model(&m.target).unwrap();
-    budget = budget.min(info.max_seq - m.prompt_len - 2);
+    budget = budget.min(m.max_new_tokens().unwrap());
     let arrivals: Vec<(f64, Request, Priority)> = times
         .iter()
         .enumerate()
@@ -176,10 +190,19 @@ fn cmd_serve(mut args: Args) {
             (t, Request::new(id, prompt, budget), prio_for(id))
         })
         .collect();
+    if !matches!(drafter.as_str(), "auto" | "sam" | "ngram" | "draft_small" | "draft_mid") {
+        eprintln!("unknown --drafter {drafter:?}");
+        usage()
+    }
     let ecfg = EngineConfig {
-        // vanilla mode also disables per-slot token-drafter maintenance
-        mode: if vanilla { SpecMode::Vanilla } else { SpecMode::Coupled { window: 3 } },
-        drafter: DraftMethod::parse(&drafter),
+        // the default plan for slots the batcher does not re-plan; the
+        // admission path applies the replanner's (method, window) anyway,
+        // so `auto` (no pinned method) just seeds a vanilla default
+        plan: if vanilla || drafter == "auto" {
+            SlotPlan::vanilla()
+        } else {
+            SlotPlan::coupled(DraftMethod::parse(&drafter), 3)
+        },
         temperature: 1.0,
         seed,
         draft_seed: seed.wrapping_add(1000),
@@ -188,13 +211,30 @@ fn cmd_serve(mut args: Args) {
         eprintln!("worker: {e}");
         exit(1)
     });
-    let replan = Replanner::for_manifest(
-        &m,
-        CostModel::paper_32b(),
-        TraceConfig::grpo_32b_20k().profiled_acceptance(),
-        7,
-    );
+    // --drafter pins the served method (single-rung ladder); `auto` hands
+    // method selection to the ladder over the full profiled table. Either
+    // way the replanner's choice is APPLIED to slots on admission.
+    let profiled_all = TraceConfig::grpo_32b_20k().profiled_acceptance();
+    let profiled = if drafter == "auto" {
+        profiled_all
+    } else {
+        let p = profiled_all
+            .iter()
+            .find(|(n, _)| *n == drafter)
+            .map(|(_, p)| *p)
+            .unwrap_or(0.6);
+        vec![(drafter.clone(), p)]
+    };
+    let replan = Replanner::for_manifest(&m, CostModel::paper_32b(), profiled, 7);
     let mut b = Batcher::new(worker, queue_cap, replan, !vanilla);
+    if reconfig_period > 0 && !vanilla {
+        b = b.with_reconfig(Reconfigurator::for_manifest(
+            &m,
+            CostModel::paper_32b(),
+            7,
+            reconfig_period,
+        ));
+    }
     match drive_open_loop(&mut b, arrivals, None) {
         Ok(rep) => {
             print_serve_summary("pjrt", &b, &rep);
@@ -374,4 +414,10 @@ fn cmd_rollout(mut args: Args) {
         summary.wall_s,
         tokens as f64 / summary.wall_s
     );
+    if !summary.fon_plans.is_empty() {
+        println!(
+            "fon: Algorithm 3 planned {} racing replica(s) on freed workers",
+            summary.fon_plans.len()
+        );
+    }
 }

@@ -162,11 +162,24 @@ impl CostModel {
         self.draft_cost(method).per_token.eval(b)
     }
 
+    /// Cost curve for `method`. The suffix-automaton drafter has no
+    /// profiled curve of its own and borrows n-gram's — same CPU
+    /// token-lookup family, piggybacked on the worker — so ladders and
+    /// replanners can be pinned to "sam" directly. Unknown MODEL drafter
+    /// names stay a loud error: their real cost is orders of magnitude
+    /// above any token drafter's, and pricing them as near-free lookups
+    /// would silently mis-plan. ([`CostModel::methods`] enumerates only
+    /// explicitly profiled curves.)
     pub fn draft_cost(&self, method: &str) -> &DraftCost {
-        self.drafts
-            .iter()
-            .find(|d| d.method == method)
-            .unwrap_or_else(|| panic!("unknown draft method {method:?}"))
+        if let Some(d) = self.drafts.iter().find(|d| d.method == method) {
+            return d;
+        }
+        if method == "sam" {
+            if let Some(d) = self.drafts.iter().find(|d| d.method == "ngram") {
+                return d;
+            }
+        }
+        panic!("unknown draft method {method:?}")
     }
 
     pub fn methods(&self) -> Vec<String> {

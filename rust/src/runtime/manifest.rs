@@ -273,6 +273,25 @@ impl Manifest {
             .collect())
     }
 
+    /// Largest per-request generation budget the engine can serve: cache
+    /// capacity minus the prompt and headroom for the largest lowered
+    /// step window (a plan group's verify step spans the whole bucket, so
+    /// every row must satisfy `lens + w <= max_seq` whatever window any
+    /// group runs).
+    pub fn max_new_tokens(&self) -> Result<usize> {
+        let wmax = self.windows.iter().copied().max().unwrap_or(1).max(2);
+        Ok(self.model(&self.target)?.max_seq - self.prompt_len - wmax)
+    }
+
+    /// Draft windows whose verify step is lowered exactly: `w - 1` for
+    /// each lowered step window `w >= 2`. The shared derivation behind
+    /// the serve replanner's and the reconfigurator's window grids (the
+    /// engine additionally rounds intermediate windows up at verify
+    /// time — see `Worker::verify_window_for`).
+    pub fn draft_windows(&self) -> Vec<usize> {
+        self.windows.iter().filter(|&&w| w >= 2).map(|w| w - 1).collect()
+    }
+
     /// Largest lowered draft window <= `w` (planner may ask for any w).
     pub fn window_for(&self, w: usize) -> Result<usize> {
         self.windows

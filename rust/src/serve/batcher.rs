@@ -4,17 +4,23 @@
 //!
 //! 1. **retire** finished requests (free their KV slots, record latency),
 //! 2. **admit** waiting requests from the [`AdmissionQueue`] into free
-//!    slots (prefill-join via `Worker::admit`),
+//!    slots (prefill-join via `Worker::admit_with_plan` — the replanner's
+//!    ladder-selected method and window are **applied** to the new slot),
 //! 3. **replan** when the resulting occupancy crossed a bucket boundary
-//!    ([`Replanner`]), and
-//! 4. run one engine **round** (vanilla step or coupled draft-w-verify)
-//!    over the live slots with the current plan's window.
+//!    ([`Replanner`]): the fresh plan is applied to every live slot,
+//! 4. run one engine **round** over the live slots under their per-slot
+//!    plans (the engine groups them into one verify step per
+//!    `(method, window)`), and
+//! 5. **reconfigure** (Algorithm 2, optional): every `period` rounds the
+//!    [`Reconfigurator`] re-derives window/mode for slots whose measured
+//!    acceptance fell below the live average and the new [`SlotPlan`]s are
+//!    hot-swapped in place.
 //!
 //! The batcher is generic over a [`ServeEngine`] so the loop's admission /
-//! retirement / replanning / telemetry logic is unit-testable without AOT
-//! artifacts: the real backend is [`Worker`], and [`SyntheticEngine`] is a
-//! deterministic stand-in used by those tests and `specactor serve
-//! --smoke` (CI runs it artifact-free).
+//! retirement / replanning / reconfiguration / telemetry logic is
+//! unit-testable without AOT artifacts: the real backend is [`Worker`],
+//! and [`SyntheticEngine`] is a deterministic stand-in used by those tests
+//! and `specactor serve --smoke` (CI runs it artifact-free).
 //!
 //! Time is injected by the caller (`now_s`), never read from a wall
 //! clock here — the open-loop drivers pass measured wall time for real
@@ -24,7 +30,9 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::engine::{EngineReport, Request, Worker};
+use crate::coordinator::reconfig::{LiveSlot, Reconfigurator};
+use crate::drafter::DraftMethod;
+use crate::engine::{EngineReport, PlanMode, Request, SlotPlan, Worker};
 use crate::util::rng::position_rng;
 
 use super::metrics::ServeMetrics;
@@ -44,15 +52,19 @@ pub trait ServeEngine {
     fn validate(&self, _req: &Request) -> Result<()> {
         Ok(())
     }
-    /// Prefill-join `req` into the free slot `slot`.
-    fn admit(&mut self, slot: usize, req: Request) -> Result<()>;
+    /// Prefill-join `req` into the free slot `slot` under `plan`.
+    fn admit(&mut self, slot: usize, req: Request, plan: SlotPlan) -> Result<()>;
     /// Remove the (finished) request from `slot`, freeing it.
     fn retire(&mut self, slot: usize) -> Result<Request>;
-    /// One decode round over active slots (`window == 0` → vanilla,
-    /// else coupled speculation). Returns the active-slot count.
-    fn round(&mut self, window: usize, rep: &mut EngineReport) -> Result<usize>;
+    /// One decode round over active slots, driven by their slot plans.
+    /// Returns the active-slot count.
+    fn round(&mut self, rep: &mut EngineReport) -> Result<usize>;
     /// Did the request in `slot` finish? (false for empty slots)
     fn is_done(&self, slot: usize) -> bool;
+    /// The plan the slot currently runs under (None for out-of-range).
+    fn slot_plan(&self, slot: usize) -> Option<SlotPlan>;
+    /// Hot-swap the slot's plan (replanning / Algorithm 2).
+    fn set_slot_plan(&mut self, slot: usize, plan: SlotPlan) -> Result<()>;
 }
 
 impl ServeEngine for Worker<'_> {
@@ -64,20 +76,28 @@ impl ServeEngine for Worker<'_> {
         self.validate_request(req)
     }
 
-    fn admit(&mut self, slot: usize, req: Request) -> Result<()> {
-        Worker::admit(self, slot, req)
+    fn admit(&mut self, slot: usize, req: Request, plan: SlotPlan) -> Result<()> {
+        Worker::admit_with_plan(self, slot, req, plan)
     }
 
     fn retire(&mut self, slot: usize) -> Result<Request> {
         Worker::retire(self, slot)
     }
 
-    fn round(&mut self, window: usize, rep: &mut EngineReport) -> Result<usize> {
-        Worker::round(self, window, rep)
+    fn round(&mut self, rep: &mut EngineReport) -> Result<usize> {
+        Worker::round(self, rep)
     }
 
     fn is_done(&self, slot: usize) -> bool {
         Worker::is_done(self, slot)
+    }
+
+    fn slot_plan(&self, slot: usize) -> Option<SlotPlan> {
+        Worker::plan(self, slot).cloned()
+    }
+
+    fn set_slot_plan(&mut self, slot: usize, plan: SlotPlan) -> Result<()> {
+        Worker::set_plan(self, slot, plan)
     }
 }
 
@@ -100,6 +120,8 @@ pub struct TickReport {
     pub active: usize,
     pub generated: u64,
     pub replanned: bool,
+    /// Slots Algorithm 2 rewrote this tick.
+    pub reconfigured: usize,
 }
 
 /// The continuous-batching loop state.
@@ -111,6 +133,9 @@ pub struct Batcher<E: ServeEngine> {
     pub metrics: ServeMetrics,
     /// Cumulative engine counters across all rounds.
     pub report: EngineReport,
+    /// Request-level reconfiguration (Algorithm 2), fired every
+    /// `period` rounds when present.
+    pub reconfig: Option<Reconfigurator>,
     /// Per-slot arrival timestamp of the occupying request.
     arrival_s: Vec<f64>,
     finished: Vec<FinishedRequest>,
@@ -128,10 +153,17 @@ impl<E: ServeEngine> Batcher<E> {
             replan,
             metrics: ServeMetrics::new(),
             report: EngineReport::default(),
+            reconfig: None,
             arrival_s: vec![0.0; cap],
             finished: Vec::new(),
             spec,
         }
+    }
+
+    /// Enable request-level reconfiguration (Algorithm 2).
+    pub fn with_reconfig(mut self, rc: Reconfigurator) -> Self {
+        self.reconfig = Some(rc);
+        self
     }
 
     /// Offer a request to the admission queue (false = backpressure).
@@ -153,7 +185,25 @@ impl<E: ServeEngine> Batcher<E> {
         std::mem::take(&mut self.finished)
     }
 
-    /// One serving round: retire → admit → replan → decode.
+    /// The slot plan the replanner's current decision maps to: the
+    /// ladder-selected method and Algorithm 1 window, applied (not
+    /// advised) on admission and at bucket crossings. Window 0 (no
+    /// profitable speculative plan at this occupancy) and non-speculative
+    /// batchers serve vanilla slots.
+    fn current_plan(&self) -> SlotPlan {
+        let p = &self.replan.plan;
+        if !self.spec || p.window == 0 || p.method.is_empty() {
+            SlotPlan::vanilla()
+        } else {
+            SlotPlan {
+                method: DraftMethod::parse(&p.method),
+                window: p.window,
+                mode: PlanMode::Coupled,
+            }
+        }
+    }
+
+    /// One serving round: retire → admit → replan → decode → reconfigure.
     pub fn tick(&mut self, now_s: f64) -> Result<TickReport> {
         let mut tr = TickReport::default();
 
@@ -169,7 +219,9 @@ impl<E: ServeEngine> Batcher<E> {
             }
         }
 
-        // 2. prefill-join waiting requests into free slots
+        // 2. prefill-join waiting requests into free slots, each under the
+        //    replanner's currently-applied plan
+        let admission_plan = self.current_plan();
         while !self.slots.is_full() {
             let Some(q) = self.queue.pop() else { break };
             // a malformed request is rejected individually — it must not
@@ -182,17 +234,23 @@ impl<E: ServeEngine> Batcher<E> {
                 .slots
                 .alloc()
                 .ok_or_else(|| anyhow!("slot allocator full despite free check"))?;
-            if let Err(e) = self.engine.admit(slot, q.req) {
+            if let Err(e) = self.engine.admit(slot, q.req, admission_plan.clone()) {
                 // a failed admission must not leak the slot
                 self.slots.release(slot)?;
                 return Err(e);
+            }
+            if let Some(rc) = &mut self.reconfig {
+                rc.on_admit(slot, &self.report.per_slot);
             }
             self.arrival_s[slot] = q.enqueued_s;
             self.metrics.on_admit(now_s - q.enqueued_s);
             tr.admitted += 1;
         }
 
-        // 3. concurrency-aware replanning at bucket granularity
+        // 3. concurrency-aware replanning at bucket granularity: a bucket
+        //    crossing re-derives (method, window) for the new occupancy
+        //    and applies it to every live slot; Algorithm 2 then
+        //    re-specialises individual slots from that common baseline.
         let occ = self.slots.occupancy();
         if occ == 0 {
             return Ok(tr);
@@ -200,14 +258,51 @@ impl<E: ServeEngine> Batcher<E> {
         if self.replan.on_occupancy(occ).is_some() {
             self.metrics.replans += 1;
             tr.replanned = true;
+            if self.spec {
+                let plan = self.current_plan();
+                for slot in 0..self.engine.capacity() {
+                    if self.slots.is_live(slot) {
+                        self.engine.set_slot_plan(slot, plan.clone())?;
+                    }
+                }
+            }
         }
 
-        // 4. one engine round under the current plan
-        let window = if self.spec { self.replan.plan.window } else { 0 };
+        // 4. one engine round under the live slot plans
         let before = self.report.total_generated;
-        tr.active = self.engine.round(window, &mut self.report)?;
+        tr.active = self.engine.round(&mut self.report)?;
         tr.generated = self.report.total_generated - before;
         self.metrics.on_round(occ, tr.generated);
+
+        // 5. request-level reconfiguration (Algorithm 2) on schedule.
+        //    Live-slot state (plan clones) is gathered only on firing
+        //    rounds; off-period rounds just advance the counter.
+        if self.spec {
+            if let Some(rc) = self.reconfig.as_mut() {
+                let mut live = Vec::new();
+                if rc.due() {
+                    for slot in 0..self.engine.capacity() {
+                        if !self.slots.is_live(slot) || self.engine.is_done(slot) {
+                            continue;
+                        }
+                        if let Some(p) = self.engine.slot_plan(slot) {
+                            if p.window > 0 {
+                                live.push(LiveSlot { slot, method: p.method });
+                            }
+                        }
+                    }
+                }
+                let changes = rc.on_round(&self.report.per_slot, &live);
+                if !changes.is_empty() {
+                    self.metrics.reconfigs += 1;
+                    self.metrics.reconfigured_slots += changes.len() as u64;
+                    tr.reconfigured = changes.len();
+                }
+                for (slot, plan) in changes {
+                    self.engine.set_slot_plan(slot, plan)?;
+                }
+            }
+        }
         Ok(tr)
     }
 }
@@ -274,11 +369,17 @@ pub fn drive_open_loop<E: ServeEngine>(
 
 /// Deterministic engine stand-in: no runtime, no artifacts. Each round
 /// advances every active request by a seeded pseudo-random number of
-/// tokens in `1..=window+1` — the same shape as speculative acceptance —
-/// so the batcher's admission / retirement / replanning logic can be
-/// exercised hermetically (unit tests, `specactor serve --smoke`).
+/// tokens shaped like speculative acceptance: the request's intrinsic
+/// acceptance probability (skewed by id — most requests accept well, a
+/// tail accepts poorly) gates a chain of up to `window` bonus advances,
+/// where `window` comes from the slot's applied [`SlotPlan`]. Per-slot
+/// drafted/accepted counters feed the reconfigurator exactly as the real
+/// engine's do, so the batcher's admission / retirement / replanning /
+/// reconfiguration logic can be exercised hermetically (unit tests,
+/// `specactor serve --smoke`, `benches/reconfig_gain.rs`).
 pub struct SyntheticEngine {
     slots: Vec<Option<Request>>,
+    plans: Vec<SlotPlan>,
     seed: u64,
     rounds: u64,
 }
@@ -286,7 +387,23 @@ pub struct SyntheticEngine {
 impl SyntheticEngine {
     pub fn new(capacity: usize, seed: u64) -> Self {
         assert!(capacity > 0);
-        SyntheticEngine { slots: (0..capacity).map(|_| None).collect(), seed, rounds: 0 }
+        SyntheticEngine {
+            slots: (0..capacity).map(|_| None).collect(),
+            plans: (0..capacity).map(|_| SlotPlan::vanilla()).collect(),
+            seed,
+            rounds: 0,
+        }
+    }
+
+    /// Intrinsic per-request acceptance probability: a skewed mix — three
+    /// quarters of requests draft well, one quarter is a low-acceptance
+    /// tail (the regime where Algorithm 2 pays off).
+    pub fn accept_p(id: u64) -> f64 {
+        if id % 4 == 3 {
+            0.2
+        } else {
+            0.85
+        }
     }
 }
 
@@ -295,7 +412,7 @@ impl ServeEngine for SyntheticEngine {
         self.slots.len()
     }
 
-    fn admit(&mut self, slot: usize, req: Request) -> Result<()> {
+    fn admit(&mut self, slot: usize, req: Request, plan: SlotPlan) -> Result<()> {
         if slot >= self.slots.len() {
             bail!("slot {slot} out of range");
         }
@@ -303,6 +420,7 @@ impl ServeEngine for SyntheticEngine {
             bail!("slot {slot} already occupied");
         }
         self.slots[slot] = Some(req);
+        self.plans[slot] = plan;
         Ok(())
     }
 
@@ -313,17 +431,32 @@ impl ServeEngine for SyntheticEngine {
             .ok_or_else(|| anyhow!("slot {slot} empty"))
     }
 
-    fn round(&mut self, window: usize, rep: &mut EngineReport) -> Result<usize> {
+    fn round(&mut self, rep: &mut EngineReport) -> Result<usize> {
         self.rounds += 1;
         let mut active = 0usize;
-        for s in self.slots.iter_mut() {
-            let Some(r) = s else { continue };
+        for i in 0..self.slots.len() {
+            let Some(r) = &mut self.slots[i] else { continue };
             if r.done {
                 continue;
             }
             active += 1;
-            let mut rng = position_rng(self.seed, r.id, self.rounds);
-            let adv = if window == 0 { 1 } else { 1 + rng.below(window as u64 + 1) as usize };
+            let w = self.plans[i].window;
+            let mut adv = 1usize;
+            if w > 0 {
+                let mut rng = position_rng(self.seed, r.id, self.rounds);
+                let p = Self::accept_p(r.id);
+                let mut acc = 0usize;
+                while acc < w && rng.bernoulli(p) {
+                    acc += 1;
+                }
+                adv += acc;
+                rep.drafted_tokens += w as u64;
+                rep.accepted_tokens += acc as u64;
+                rep.wasted_tokens += (w - acc) as u64;
+                let sa = rep.slot_accept(i);
+                sa.drafted += w as u64;
+                sa.accepted += acc as u64;
+            }
             let adv = adv.min(r.budget - r.generated());
             for _ in 0..adv {
                 let t = (r.id as i32).wrapping_mul(31).wrapping_add(r.seq.len() as i32) & 0x7fff;
@@ -351,6 +484,18 @@ impl ServeEngine for SyntheticEngine {
             .and_then(|s| s.as_ref())
             .map(|r| r.done)
             .unwrap_or(false)
+    }
+
+    fn slot_plan(&self, slot: usize) -> Option<SlotPlan> {
+        self.plans.get(slot).cloned()
+    }
+
+    fn set_slot_plan(&mut self, slot: usize, plan: SlotPlan) -> Result<()> {
+        if slot >= self.plans.len() {
+            bail!("slot {slot} out of range");
+        }
+        self.plans[slot] = plan;
+        Ok(())
     }
 }
 
@@ -426,6 +571,21 @@ mod tests {
     }
 
     #[test]
+    fn replanned_method_is_applied_to_slots() {
+        let mut b = mk_batcher(4, 16);
+        b.enqueue(req(0, 40), Priority::Batch, 0.0);
+        b.tick(0.0).unwrap();
+        let applied = b.engine().slot_plan(0).unwrap();
+        let planned = &b.replan.plan;
+        if planned.window > 0 {
+            assert_eq!(applied.method.label(), planned.method, "method must be applied");
+            assert_eq!(applied.window, planned.window, "window must be applied");
+        } else {
+            assert!(applied.is_vanilla());
+        }
+    }
+
+    #[test]
     fn priorities_jump_the_queue() {
         let mut b = mk_batcher(1, 16);
         b.enqueue(req(0, 6), Priority::Batch, 0.0);
@@ -454,6 +614,32 @@ mod tests {
             ticks += 1;
         }
         assert_eq!(ticks, 6, "5 decode rounds + 1 retire tick");
+    }
+
+    #[test]
+    fn reconfiguration_rewrites_straggler_plans() {
+        use crate::coordinator::reconfig::Reconfigurator;
+        // ids 0..2 accept at 0.85, id 3 at 0.2 (SyntheticEngine::accept_p):
+        // the below-average tail must be re-planned by Algorithm 2 while
+        // the batch drains, and serving must still complete everything.
+        let mut b = mk_batcher(4, 16).with_reconfig(Reconfigurator::synthetic(2));
+        for i in 0..4u64 {
+            b.enqueue(req(i, 40), Priority::Batch, 0.0);
+        }
+        let mut now = 0.0;
+        let mut reconfigured = 0usize;
+        let mut guard = 0;
+        while !b.idle() {
+            let tr = b.tick(now).unwrap();
+            reconfigured += tr.reconfigured;
+            now += 0.01;
+            guard += 1;
+            assert!(guard < 2000, "serve loop did not converge");
+        }
+        assert!(reconfigured > 0, "Algorithm 2 never fired");
+        assert!(b.metrics.reconfigs > 0);
+        assert_eq!(b.metrics.reconfigured_slots as usize, reconfigured);
+        assert_eq!(b.drain_finished().len(), 4, "reconfiguration must not lose requests");
     }
 
     #[test]
@@ -506,17 +692,23 @@ mod tests {
                 }
                 Ok(())
             }
-            fn admit(&mut self, slot: usize, req: Request) -> Result<()> {
-                self.0.admit(slot, req)
+            fn admit(&mut self, slot: usize, req: Request, plan: SlotPlan) -> Result<()> {
+                self.0.admit(slot, req, plan)
             }
             fn retire(&mut self, slot: usize) -> Result<Request> {
                 self.0.retire(slot)
             }
-            fn round(&mut self, w: usize, rep: &mut EngineReport) -> Result<usize> {
-                self.0.round(w, rep)
+            fn round(&mut self, rep: &mut EngineReport) -> Result<usize> {
+                self.0.round(rep)
             }
             fn is_done(&self, slot: usize) -> bool {
                 self.0.is_done(slot)
+            }
+            fn slot_plan(&self, slot: usize) -> Option<SlotPlan> {
+                self.0.slot_plan(slot)
+            }
+            fn set_slot_plan(&mut self, slot: usize, plan: SlotPlan) -> Result<()> {
+                self.0.set_slot_plan(slot, plan)
             }
         }
         let mut b = Batcher::new(Picky(SyntheticEngine::new(2, 5)), 8, replanner(), true);
@@ -542,17 +734,23 @@ mod tests {
             fn capacity(&self) -> usize {
                 self.0.capacity()
             }
-            fn admit(&mut self, _slot: usize, _req: Request) -> Result<()> {
+            fn admit(&mut self, _slot: usize, _req: Request, _plan: SlotPlan) -> Result<()> {
                 bail!("prefill failed")
             }
             fn retire(&mut self, slot: usize) -> Result<Request> {
                 self.0.retire(slot)
             }
-            fn round(&mut self, w: usize, rep: &mut EngineReport) -> Result<usize> {
-                self.0.round(w, rep)
+            fn round(&mut self, rep: &mut EngineReport) -> Result<usize> {
+                self.0.round(rep)
             }
             fn is_done(&self, slot: usize) -> bool {
                 self.0.is_done(slot)
+            }
+            fn slot_plan(&self, slot: usize) -> Option<SlotPlan> {
+                self.0.slot_plan(slot)
+            }
+            fn set_slot_plan(&mut self, slot: usize, plan: SlotPlan) -> Result<()> {
+                self.0.set_slot_plan(slot, plan)
             }
         }
         let mut b = Batcher::new(Failing(SyntheticEngine::new(2, 1)), 4, replanner(), true);

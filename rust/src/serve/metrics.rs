@@ -27,6 +27,10 @@ pub struct ServeMetrics {
     /// Queued requests rejected at admission because the engine cannot
     /// serve them at all (bad prompt geometry, oversized budget).
     pub invalid: u64,
+    /// Algorithm 2 firings that rewrote at least one slot plan.
+    pub reconfigs: u64,
+    /// Individual slot plans rewritten by Algorithm 2.
+    pub reconfigured_slots: u64,
     queue_wait: Welford,
     latency_p50: P2Quantile,
     latency_p99: P2Quantile,
@@ -43,6 +47,8 @@ impl Default for ServeMetrics {
             rounds: 0,
             replans: 0,
             invalid: 0,
+            reconfigs: 0,
+            reconfigured_slots: 0,
             queue_wait: Welford::default(),
             latency_p50: P2Quantile::new(0.5),
             latency_p99: P2Quantile::new(0.99),
@@ -120,6 +126,8 @@ impl ServeMetrics {
             ("rounds", Json::num(self.rounds as f64)),
             ("replans", Json::num(self.replans as f64)),
             ("invalid", Json::num(self.invalid as f64)),
+            ("reconfigs", Json::num(self.reconfigs as f64)),
+            ("reconfigured_slots", Json::num(self.reconfigured_slots as f64)),
             ("tokens_per_s", Json::num(self.tokens_per_second(wall_s))),
             ("mean_queue_wait_s", Json::num(self.mean_queue_wait_s())),
             ("latency_p50_s", Json::num(self.latency_p50_s())),

@@ -7,8 +7,11 @@
 //! they finish — so batch occupancy tracks offered load instead of being
 //! fixed at construction. Because occupancy is the variable the paper's
 //! TGS model keys on (§4.1), the loop replans speculation — window via
-//! Algorithm 1, method advisory via the ladder — whenever occupancy
-//! crosses a bucket boundary ([`Replanner`]), and reports rolling
+//! Algorithm 1, method via the ladder, both **applied** to the live
+//! slots' `SlotPlan`s — whenever occupancy crosses a bucket boundary
+//! ([`Replanner`]), re-specialises individual below-average slots with
+//! Algorithm 2 (`coordinator::reconfig::Reconfigurator`, every
+//! `--reconfig-period` rounds), and reports rolling
 //! latency/throughput/occupancy telemetry ([`ServeMetrics`]).
 //!
 //! Losslessness survives continuous batching: the sampling tape is keyed

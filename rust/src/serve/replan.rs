@@ -11,12 +11,13 @@
 //! change would thrash, while bucket-granular replanning is at most
 //! `O(log capacity)` plan switches per load swing.
 //!
-//! The planned **window** is applied directly (the engine verifies any
-//! lowered `w+1` window); the planned **method** is advisory — the engine
-//! keeps the drafter family it was constructed with (switching a model
-//! drafter mid-flight means migrating its KV rows), and the batcher
-//! surfaces the recommendation through [`ServePlan::method`] / metrics so
-//! an operator (or a future reconfiguration pass) can act on it.
+//! Both the planned **window** and the planned **method** are *applied*:
+//! the batcher converts [`ServePlan`] into the engine's per-slot
+//! `SlotPlan` on every admission and — at bucket crossings — rewrites
+//! every live slot (drafter state is rebuilt from the slot's verified
+//! prefix by `Worker::set_plan`, so a mid-flight method switch costs one
+//! catch-up pass, not a batch restart). Algorithm 2's reconfigurator then
+//! re-specialises individual slots from that common baseline.
 
 use crate::ladder::Ladder;
 use crate::planner::costmodel::CostModel;
@@ -27,7 +28,8 @@ use crate::sim::TraceConfig;
 /// The replanner's current decision for the live occupancy bucket.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ServePlan {
-    /// Ladder-selected draft method for this occupancy (advisory).
+    /// Ladder-selected draft method for this occupancy (applied to slots
+    /// on admission and at bucket crossings).
     pub method: String,
     /// Draft window the engine runs next rounds with (applied).
     /// `0` means Algorithm 1 found no speculative plan beating vanilla at
@@ -100,15 +102,28 @@ impl Replanner {
 
     /// Replanner wired to a lowered artifact set: occupancy buckets from
     /// the manifest's batch buckets, verifiable draft windows from its
-    /// lowered step windows (`w - 1` for each `w >= 2`).
+    /// lowered step windows (`w - 1` for each `w >= 2`). Because the
+    /// selected method is *applied* to slots (not advisory), profiled
+    /// methods the artifact set cannot serve — model drafters absent from
+    /// the manifest — are dropped up front; token drafters (ngram/sam)
+    /// run on any artifact set. An empty result falls back to n-gram so
+    /// the ladder always has a servable rung.
     pub fn for_manifest(
         m: &Manifest,
         cost: CostModel,
         profiled: Vec<(String, f64)>,
         max_window: usize,
     ) -> Self {
-        let allowed: Vec<usize> = m.windows.iter().filter(|&&w| w >= 2).map(|w| w - 1).collect();
-        Self::new(cost, profiled, m.batch_buckets.clone(), allowed, max_window)
+        let mut profiled: Vec<(String, f64)> = profiled
+            .into_iter()
+            .filter(|(name, _)| {
+                matches!(name.as_str(), "ngram" | "sam") || m.models.contains_key(name)
+            })
+            .collect();
+        if profiled.is_empty() {
+            profiled.push(("ngram".to_string(), 0.5));
+        }
+        Self::new(cost, profiled, m.batch_buckets.clone(), m.draft_windows(), max_window)
     }
 
     /// Default replanner for engines without a manifest (the synthetic

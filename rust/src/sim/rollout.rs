@@ -330,7 +330,7 @@ pub fn simulate_step(cfg: &TraceConfig, policy: &Policy, step: usize, seed: u64)
                     let assignment = assign(&mut stragglers, &rank, &mut free, FON_BMAX);
                     if !assignment.is_empty() {
                         // reactivate this worker as a FoN host
-                        let method = free[0].method.clone().unwrap();
+                        let method = rank[free[0].method.unwrap()].clone();
                         let midx = pick_method(&method);
                         w.done = false;
                         w.fon_method = Some(method.clone());
@@ -520,7 +520,7 @@ pub fn simulate_step(cfg: &TraceConfig, policy: &Policy, step: usize, seed: u64)
         if worst.is_empty() {
             0.0
         } else {
-            worst.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+            worst.sort_by(|a, b| b.0.total_cmp(&a.0));
             worst.truncate(8);
             worst.iter().map(|(_, f)| *f).sum::<f64>() / worst.len() as f64
         }

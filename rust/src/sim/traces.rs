@@ -405,7 +405,7 @@ mod tests {
             let best = r
                 .accept
                 .iter()
-                .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .max_by(|a, b| a.1.total_cmp(&b.1))
                 .unwrap()
                 .0
                 .clone();

@@ -67,7 +67,7 @@ impl Bench {
             f();
             samples.push(t0.elapsed().as_secs_f64());
         }
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        samples.sort_by(|a, b| a.total_cmp(b));
         let m = Measurement {
             name: name.to_string(),
             iters: self.iters,

@@ -27,7 +27,7 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
         return 0.0;
     }
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     percentile_sorted(&v, q)
 }
 
@@ -187,7 +187,7 @@ impl P2Quantile {
             self.heights[self.n as usize] = x;
             self.n += 1;
             if self.n == 5 {
-                self.heights.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                self.heights.sort_by(|a, b| a.total_cmp(b));
             }
             return;
         }
@@ -255,7 +255,7 @@ impl P2Quantile {
         }
         if self.n < 5 {
             let mut v = self.heights[..self.n as usize].to_vec();
-            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            v.sort_by(|a, b| a.total_cmp(b));
             return percentile_sorted(&v, self.q * 100.0);
         }
         self.heights[2]

@@ -4,7 +4,7 @@
 use std::path::Path;
 
 use specactor::coordinator::global::{plan_initial, race_methods, rollout, GlobalConfig};
-use specactor::engine::{EngineConfig, Request, SpecMode, Worker};
+use specactor::engine::{EngineConfig, Request, Worker};
 use specactor::planner::costmodel::CostModel;
 use specactor::runtime::Runtime;
 
@@ -34,8 +34,7 @@ fn multi_worker_rollout_matches_vanilla() {
     // vanilla oracle on one worker
     let reqs: Vec<Request> =
         ps.iter().map(|(id, p)| Request::new(*id, p.clone(), budget)).collect();
-    let cfg = EngineConfig { mode: SpecMode::Vanilla, ..Default::default() };
-    let mut w = Worker::new(&rt, cfg, reqs).unwrap();
+    let mut w = Worker::new(&rt, EngineConfig::default(), reqs).unwrap();
     w.rollout_vanilla().unwrap();
     let want = w.outputs();
     drop(rt);

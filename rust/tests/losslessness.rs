@@ -1,14 +1,20 @@
-//! End-to-end losslessness over the real AOT artifacts: vanilla, coupled
-//! and decoupled speculative rollout must produce IDENTICAL token
-//! sequences for the same sampling-tape seed — the paper's core claim
-//! ("preserves the exact rollout process").
+//! End-to-end losslessness over the real AOT artifacts: vanilla, coupled,
+//! decoupled and **mixed-plan** speculative rollout must produce IDENTICAL
+//! token sequences for the same sampling-tape seed — the paper's core
+//! claim ("preserves the exact rollout process"), extended to per-slot
+//! plans: a batch where every slot runs its own (method, window, mode) and
+//! a rollout whose plans are hot-swapped mid-flight must still match
+//! vanilla token-for-token.
 //!
 //! Requires `make artifacts`.
 
 use std::path::Path;
 
 use specactor::drafter::DraftMethod;
-use specactor::engine::{decoupled::rollout_decoupled, EngineConfig, Request, SpecMode, Worker};
+use specactor::engine::{
+    rollout_decoupled, rollout_decoupled_planned, EngineConfig, EngineReport, Request, SlotPlan,
+    Worker,
+};
 use specactor::runtime::Runtime;
 
 fn art() -> &'static Path {
@@ -34,10 +40,13 @@ fn mk_requests(rt: &Runtime, n: usize, budget: usize) -> Vec<Request> {
 }
 
 fn vanilla_outputs(rt: &Runtime, n: usize, budget: usize) -> Vec<Vec<i32>> {
-    let cfg = EngineConfig { mode: SpecMode::Vanilla, ..Default::default() };
-    let mut w = Worker::new(rt, cfg, mk_requests(rt, n, budget)).unwrap();
+    let mut w = Worker::new(rt, EngineConfig::default(), mk_requests(rt, n, budget)).unwrap();
     w.rollout_vanilla().unwrap();
     w.outputs()
+}
+
+fn coupled_cfg(method: DraftMethod, window: usize) -> EngineConfig {
+    EngineConfig { plan: SlotPlan::coupled(method, window), ..Default::default() }
 }
 
 #[test]
@@ -45,13 +54,9 @@ fn coupled_model_spec_equals_vanilla() {
     let rt = Runtime::load(art()).unwrap();
     let want = vanilla_outputs(&rt, 2, 20);
 
-    let cfg = EngineConfig {
-        mode: SpecMode::Coupled { window: 3 },
-        drafter: DraftMethod::Model("draft_small".to_string()),
-        ..Default::default()
-    };
+    let cfg = coupled_cfg(DraftMethod::Model("draft_small".to_string()), 3);
     let mut w = Worker::new(&rt, cfg, mk_requests(&rt, 2, 20)).unwrap();
-    let rep = w.rollout_coupled(3).unwrap();
+    let rep = w.rollout_planned().unwrap();
     assert_eq!(w.outputs(), want, "coupled(draft_small) diverged from vanilla");
     assert!(rep.drafted_tokens > 0);
     assert!(rep.accepted_tokens > 0, "acceptance was zero — drafter misconfigured");
@@ -61,13 +66,9 @@ fn coupled_model_spec_equals_vanilla() {
 fn coupled_mid_drafter_equals_vanilla() {
     let rt = Runtime::load(art()).unwrap();
     let want = vanilla_outputs(&rt, 2, 16);
-    let cfg = EngineConfig {
-        mode: SpecMode::Coupled { window: 3 },
-        drafter: DraftMethod::Model("draft_mid".to_string()),
-        ..Default::default()
-    };
+    let cfg = coupled_cfg(DraftMethod::Model("draft_mid".to_string()), 3);
     let mut w = Worker::new(&rt, cfg, mk_requests(&rt, 2, 16)).unwrap();
-    w.rollout_coupled(3).unwrap();
+    w.rollout_planned().unwrap();
     assert_eq!(w.outputs(), want, "coupled(draft_mid) diverged from vanilla");
 }
 
@@ -76,13 +77,9 @@ fn coupled_token_drafters_equal_vanilla() {
     let rt = Runtime::load(art()).unwrap();
     let want = vanilla_outputs(&rt, 2, 16);
     for method in [DraftMethod::Ngram, DraftMethod::Sam] {
-        let cfg = EngineConfig {
-            mode: SpecMode::Coupled { window: 3 },
-            drafter: method.clone(),
-            ..Default::default()
-        };
+        let cfg = coupled_cfg(method.clone(), 3);
         let mut w = Worker::new(&rt, cfg, mk_requests(&rt, 2, 16)).unwrap();
-        w.rollout_coupled(3).unwrap();
+        w.rollout_planned().unwrap();
         assert_eq!(w.outputs(), want, "coupled({method:?}) diverged from vanilla");
     }
 }
@@ -96,8 +93,7 @@ fn decoupled_equals_vanilla() {
         DraftMethod::Sam,
     ] {
         let cfg = EngineConfig {
-            mode: SpecMode::Decoupled { window: 3 },
-            drafter: method.clone(),
+            plan: SlotPlan::decoupled(method.clone(), 3),
             ..Default::default()
         };
         let mut reqs = mk_requests(&rt, 2, 16);
@@ -109,6 +105,79 @@ fn decoupled_equals_vanilla() {
     }
 }
 
+/// The tentpole invariant: a batch where slot A runs coupled SAM at w=2,
+/// slot B runs decoupled-discipline n-gram at w=4 and slot C decodes
+/// vanilla — three plans, one engine loop, one verify step per plan group —
+/// must be token-identical to uniform vanilla decoding.
+#[test]
+fn mixed_plan_batch_equals_vanilla() {
+    let rt = Runtime::load(art()).unwrap();
+    let want = vanilla_outputs(&rt, 3, 16);
+    let plans = vec![
+        SlotPlan::coupled(DraftMethod::Sam, 2),
+        SlotPlan::decoupled(DraftMethod::Ngram, 4),
+        SlotPlan::vanilla(),
+    ];
+    let mut w =
+        Worker::new_with_plans(&rt, EngineConfig::default(), mk_requests(&rt, 3, 16), plans)
+            .unwrap();
+    let rep = w.rollout_planned().unwrap();
+    assert_eq!(w.outputs(), want, "mixed-plan batch diverged from vanilla");
+    assert!(rep.drafted_tokens > 0, "speculative slots never drafted");
+    // per-slot accounting: both speculative slots drafted, the vanilla one
+    // never did
+    assert!(rep.per_slot.len() >= 2);
+    assert!(rep.per_slot[0].drafted > 0, "slot A (coupled sam) never drafted");
+    assert!(rep.per_slot[1].drafted > 0, "slot B (decoupled ngram) never drafted");
+    assert_eq!(
+        rep.per_slot.get(2).copied().unwrap_or_default().drafted,
+        0,
+        "vanilla slot must not draft"
+    );
+}
+
+/// Mid-rollout reconfiguration: start a batch on coupled SAM, then switch
+/// slot 0 to n-gram and slot 1 to the model drafter under decoupled
+/// discipline while generation is in flight. The drafter-state rebuild
+/// (token index re-fed from the verified prefix; draft-model cache row
+/// re-fed through catch-up) must be lossless.
+#[test]
+fn mid_rollout_method_switch_is_lossless() {
+    let rt = Runtime::load(art()).unwrap();
+    let want = vanilla_outputs(&rt, 2, 20);
+    let cfg = coupled_cfg(DraftMethod::Sam, 3);
+    let mut w = Worker::new(&rt, cfg, mk_requests(&rt, 2, 20)).unwrap();
+    let mut rep = EngineReport::default();
+    for _ in 0..3 {
+        assert!(w.round(&mut rep).unwrap() > 0, "batch drained before the switch");
+    }
+    w.set_plan(0, SlotPlan::coupled(DraftMethod::Ngram, 1)).unwrap();
+    w.set_plan(1, SlotPlan::decoupled(DraftMethod::Model("draft_small".to_string()), 3))
+        .unwrap();
+    w.rollout_planned().unwrap();
+    assert_eq!(w.outputs(), want, "mid-rollout method switch diverged from vanilla");
+}
+
+/// Plan-driven threaded decoupled rollout with heterogeneous per-slot
+/// windows, methods and disciplines.
+#[test]
+fn decoupled_mixed_plans_equal_vanilla() {
+    let rt = Runtime::load(art()).unwrap();
+    let want = vanilla_outputs(&rt, 3, 16);
+    let plans = vec![
+        SlotPlan::decoupled(DraftMethod::Sam, 3),
+        SlotPlan::decoupled(DraftMethod::Ngram, 1),
+        SlotPlan::coupled(DraftMethod::Sam, 3),
+    ];
+    let mut reqs = mk_requests(&rt, 3, 16);
+    let rep =
+        rollout_decoupled_planned(&rt, art(), &EngineConfig::default(), &mut reqs, &plans)
+            .unwrap();
+    let outs: Vec<Vec<i32>> = reqs.iter().map(|r| r.seq[r.prompt.len()..].to_vec()).collect();
+    assert_eq!(outs, want, "mixed-plan decoupled rollout diverged from vanilla");
+    assert!(rep.total_generated >= 3 * 16);
+}
+
 #[test]
 fn speculation_actually_accelerates_iterations() {
     // Not a wallclock assertion (CPU interpret mode) but an algorithmic
@@ -117,17 +186,12 @@ fn speculation_actually_accelerates_iterations() {
     let rt = Runtime::load(art()).unwrap();
     let budget = 24;
 
-    let cfg = EngineConfig { mode: SpecMode::Vanilla, ..Default::default() };
-    let mut wv = Worker::new(&rt, cfg, mk_requests(&rt, 2, budget)).unwrap();
+    let mut wv = Worker::new(&rt, EngineConfig::default(), mk_requests(&rt, 2, budget)).unwrap();
     let rep_v = wv.rollout_vanilla().unwrap();
 
-    let cfg = EngineConfig {
-        mode: SpecMode::Coupled { window: 3 },
-        drafter: DraftMethod::Model("draft_mid".to_string()),
-        ..Default::default()
-    };
+    let cfg = coupled_cfg(DraftMethod::Model("draft_mid".to_string()), 3);
     let mut wc = Worker::new(&rt, cfg, mk_requests(&rt, 2, budget)).unwrap();
-    let rep_c = wc.rollout_coupled(3).unwrap();
+    let rep_c = wc.rollout_planned().unwrap();
 
     assert!(
         rep_c.target_steps * 2 <= rep_v.target_steps,

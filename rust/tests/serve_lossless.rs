@@ -1,21 +1,26 @@
 //! Serving losslessness over the real AOT artifacts: continuous batching
 //! with staggered admits and retires must produce token-identical outputs
 //! to a static-batch rollout of the same requests — joining a batch
-//! mid-flight, waiting in the queue, or landing in a recycled slot must
-//! never change a request's tokens. The sampling tape is keyed by
-//! (seed, request id, position), never by slot or batch composition, so
-//! this is the serve-loop extension of `losslessness.rs`.
+//! mid-flight, waiting in the queue, landing in a recycled slot, or being
+//! re-planned (the serve loop now *applies* the replanner's method to
+//! every admission) must never change a request's tokens. The sampling
+//! tape is keyed by (seed, request id, position), never by slot or batch
+//! composition, so this is the serve-loop extension of `losslessness.rs`.
+//!
+//! The replanner in each test is profiled with a single method so the
+//! applied drafter family is pinned per test (token drafter vs model
+//! drafter) while still flowing through the ladder → Algorithm 1 → apply
+//! path.
 //!
 //! Requires `make artifacts`.
 
 use std::path::Path;
 
-use specactor::drafter::DraftMethod;
-use specactor::engine::{EngineConfig, Request, SpecMode, Worker};
+use specactor::coordinator::Reconfigurator;
+use specactor::engine::{EngineConfig, Request, Worker};
 use specactor::planner::costmodel::CostModel;
 use specactor::runtime::Runtime;
 use specactor::serve::{Batcher, Priority, Replanner};
-use specactor::sim::TraceConfig;
 
 fn art() -> std::path::PathBuf {
     Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
@@ -29,17 +34,18 @@ fn mk_requests(rt: &Runtime, n: usize, budget: usize) -> Vec<Request> {
 
 /// Static-batch vanilla rollout: the losslessness oracle.
 fn vanilla_outputs(rt: &Runtime, n: usize, budget: usize) -> Vec<Vec<i32>> {
-    let cfg = EngineConfig { mode: SpecMode::Vanilla, ..Default::default() };
-    let mut w = Worker::new(rt, cfg, mk_requests(rt, n, budget)).unwrap();
+    let mut w = Worker::new(rt, EngineConfig::default(), mk_requests(rt, n, budget)).unwrap();
     w.rollout_vanilla().unwrap();
     w.outputs()
 }
 
-fn replanner(rt: &Runtime) -> Replanner {
+/// Replanner whose ladder knows exactly one method: pins the drafter
+/// family the serve loop applies while exercising the full plan path.
+fn replanner(rt: &Runtime, method: &str, accept: f64) -> Replanner {
     Replanner::for_manifest(
         &rt.manifest,
         CostModel::paper_32b(),
-        TraceConfig::grpo_32b_20k().profiled_acceptance(),
+        vec![(method.to_string(), accept)],
         3,
     )
 }
@@ -48,15 +54,19 @@ fn replanner(rt: &Runtime) -> Replanner {
 /// arrivals (one request every `stagger` ticks), returning outputs by id.
 fn serve_outputs(
     rt: &Runtime,
-    cfg: EngineConfig,
+    replan: Replanner,
+    reconfig: Option<Reconfigurator>,
     capacity: usize,
     reqs: Vec<Request>,
     stagger: usize,
     spec: bool,
 ) -> Vec<Vec<i32>> {
     let n = reqs.len();
-    let worker = Worker::with_capacity(rt, cfg, capacity).unwrap();
-    let mut b = Batcher::new(worker, 2 * n.max(1), replanner(rt), spec);
+    let worker = Worker::with_capacity(rt, EngineConfig::default(), capacity).unwrap();
+    let mut b = Batcher::new(worker, 2 * n.max(1), replan, spec);
+    if let Some(rc) = reconfig {
+        b = b.with_reconfig(rc);
+    }
     let mut now = 0.0f64;
     let mut pending = reqs.into_iter();
     let mut next_at = 0usize;
@@ -97,12 +107,8 @@ fn serve_outputs(
 fn serialized_slot_reuse_is_lossless() {
     let rt = Runtime::load(&art()).unwrap();
     let want = vanilla_outputs(&rt, 3, 12);
-    let cfg = EngineConfig {
-        mode: SpecMode::Coupled { window: 3 },
-        drafter: DraftMethod::Sam,
-        ..Default::default()
-    };
-    let got = serve_outputs(&rt, cfg, 1, mk_requests(&rt, 3, 12), 1, true);
+    let replan = replanner(&rt, "ngram", 0.6);
+    let got = serve_outputs(&rt, replan, None, 1, mk_requests(&rt, 3, 12), 1, true);
     assert_eq!(got, want, "single-slot serve diverged from static vanilla");
 }
 
@@ -114,12 +120,8 @@ fn staggered_joins_are_lossless_with_token_drafter() {
     let rt = Runtime::load(&art()).unwrap();
     let n = 4;
     let want = vanilla_outputs(&rt, n, 14);
-    let cfg = EngineConfig {
-        mode: SpecMode::Coupled { window: 3 },
-        drafter: DraftMethod::Sam,
-        ..Default::default()
-    };
-    let got = serve_outputs(&rt, cfg, n, mk_requests(&rt, n, 14), 2, true);
+    let replan = replanner(&rt, "ngram", 0.6);
+    let got = serve_outputs(&rt, replan, None, n, mk_requests(&rt, n, 14), 2, true);
     assert_eq!(got, want, "staggered continuous batching diverged from static vanilla");
 }
 
@@ -131,12 +133,8 @@ fn staggered_joins_are_lossless_with_model_drafter() {
     let rt = Runtime::load(&art()).unwrap();
     let n = 3;
     let want = vanilla_outputs(&rt, n, 12);
-    let cfg = EngineConfig {
-        mode: SpecMode::Coupled { window: 3 },
-        drafter: DraftMethod::Model("draft_small".to_string()),
-        ..Default::default()
-    };
-    let got = serve_outputs(&rt, cfg, 2, mk_requests(&rt, n, 12), 3, true);
+    let replan = replanner(&rt, "draft_small", 0.74);
+    let got = serve_outputs(&rt, replan, None, 2, mk_requests(&rt, n, 12), 3, true);
     assert_eq!(got, want, "model-drafter continuous batching diverged from static vanilla");
 }
 
@@ -147,9 +145,23 @@ fn vanilla_serving_is_lossless() {
     let rt = Runtime::load(&art()).unwrap();
     let n = 3;
     let want = vanilla_outputs(&rt, n, 10);
-    let cfg = EngineConfig { mode: SpecMode::Vanilla, ..Default::default() };
-    let got = serve_outputs(&rt, cfg, 2, mk_requests(&rt, n, 10), 2, false);
+    let replan = replanner(&rt, "ngram", 0.6);
+    let got = serve_outputs(&rt, replan, None, 2, mk_requests(&rt, n, 10), 2, false);
     assert_eq!(got, want, "vanilla continuous batching diverged from static vanilla");
+}
+
+/// Algorithm 2 live in the serve loop: per-slot plans are rewritten while
+/// requests are in flight (window/mode re-derived from measured
+/// acceptance), and every output must still match static vanilla.
+#[test]
+fn reconfigured_serving_is_lossless() {
+    let rt = Runtime::load(&art()).unwrap();
+    let n = 4;
+    let want = vanilla_outputs(&rt, n, 14);
+    let replan = replanner(&rt, "ngram", 0.6);
+    let rc = Reconfigurator::for_manifest(&rt.manifest, CostModel::paper_32b(), 3, 2);
+    let got = serve_outputs(&rt, replan, Some(rc), n, mk_requests(&rt, n, 14), 2, true);
+    assert_eq!(got, want, "reconfigured continuous batching diverged from static vanilla");
 }
 
 /// The serve loop must actually exercise continuous batching: with fewer
@@ -159,13 +171,8 @@ fn vanilla_serving_is_lossless() {
 fn serve_loop_reports_progress() {
     let rt = Runtime::load(&art()).unwrap();
     let n = 3;
-    let cfg = EngineConfig {
-        mode: SpecMode::Coupled { window: 3 },
-        drafter: DraftMethod::Sam,
-        ..Default::default()
-    };
-    let worker = Worker::with_capacity(&rt, cfg, 1).unwrap();
-    let mut b = Batcher::new(worker, 8, replanner(&rt), true);
+    let worker = Worker::with_capacity(&rt, EngineConfig::default(), 1).unwrap();
+    let mut b = Batcher::new(worker, 8, replanner(&rt, "ngram", 0.6), true);
     for (i, r) in mk_requests(&rt, n, 10).into_iter().enumerate() {
         b.enqueue(r, Priority::Batch, i as f64 * 0.01);
     }
