@@ -1,0 +1,226 @@
+//! Fused vs grouped verification (the fused-ragged-verify tentpole A/B),
+//! written to `BENCH_fused.json` (the `BENCH_*.json` trajectory
+//! convention, see PERF.md).
+//!
+//! Hermetic: the plan-driven [`SyntheticEngine`] supplies the round
+//! trajectory (its per-request acceptance skew drains slots at different
+//! speeds, so the live plan mix changes as the batch empties) and the
+//! paper's analytic cost model prices every round under both disciplines:
+//!
+//! * **grouped** — the pre-fusion engine: one full-bucket target step per
+//!   `(method, window)` plan group plus a vanilla decode step, β per
+//!   group (`CostModel::verify`);
+//! * **fused** — the shipped engine: every group still drafts its own
+//!   window, then ONE ragged verify step runs at the bucket window
+//!   (smallest lowered step size covering the widest row), β once, with
+//!   the padding-waste term (`CostModel::verify_fused`).
+//!
+//! Step counts come from the discipline-aware synthetic engine itself
+//! (`EngineReport::target_steps`), and the acceptance criterion — a round
+//! with G speculative plan groups issues G+1 target steps grouped but
+//! exactly 1 fused — is asserted on a fresh mixed-plan round. Token
+//! output is discipline-invariant (asserted too: same seed, same tokens).
+//!
+//! Sweep: occupancy × window-spread (uniform / two-group split / ragged
+//! mix with vanilla riders), the regimes PERF.md §Per-slot planning names
+//! as the β-dominated tail vs the slope-dominated bulk.
+
+use std::path::Path;
+
+use specactor::drafter::DraftMethod;
+use specactor::engine::{EngineReport, Request, SlotPlan, VerifyDiscipline};
+use specactor::planner::costmodel::CostModel;
+use specactor::planner::tgs::step_up;
+use specactor::serve::{ServeEngine, SyntheticEngine};
+use specactor::util::benchkit::Bench;
+use specactor::util::cli::Args;
+use specactor::util::Json;
+
+/// Lowered step-window grid (input positions per row) of the default AOT
+/// artifact set — the grid the fused engine rounds its bucket window into.
+const STEP_GRID: [usize; 4] = [1, 2, 4, 8];
+
+/// Per-slot plans for one named window-spread.
+fn spread_plans(spread: &str, n: usize) -> Vec<SlotPlan> {
+    (0..n)
+        .map(|i| match spread {
+            "uniform w4" => SlotPlan::coupled(DraftMethod::Ngram, 4),
+            "split w2/w6" => {
+                SlotPlan::coupled(DraftMethod::Ngram, if i % 2 == 0 { 2 } else { 6 })
+            }
+            // three speculative groups + a vanilla rider per 4 slots
+            "ragged mix" => {
+                if i % 4 == 3 {
+                    SlotPlan::vanilla()
+                } else {
+                    SlotPlan::coupled(DraftMethod::Ngram, [1, 2, 4][i % 4])
+                }
+            }
+            other => panic!("unknown spread {other:?}"),
+        })
+        .collect()
+}
+
+/// Modelled wall time of the round the engine is about to run:
+/// (grouped, fused). Mirrors PERF.md §Per-slot planning's two cost models
+/// over the LIVE plan mix (done slots have dropped out).
+fn price_round(engine: &SyntheticEngine, m: &CostModel) -> (f64, f64) {
+    let b = engine.capacity();
+    let mut groups: Vec<usize> = Vec::new(); // distinct live windows (ngram family)
+    let mut vanilla = false;
+    let mut width_sum = 0usize; // Σ (w_i + 1) over live rows
+    let mut max_w = 0usize;
+    let mut live = 0usize;
+    for slot in 0..b {
+        if engine.is_done(slot) {
+            continue;
+        }
+        let Some(p) = engine.slot_plan(slot) else { continue };
+        live += 1;
+        width_sum += p.window + 1;
+        max_w = max_w.max(p.window);
+        if p.window == 0 {
+            vanilla = true;
+        } else if !groups.contains(&p.window) {
+            groups.push(p.window);
+        }
+    }
+    if live == 0 {
+        return (0.0, 0.0);
+    }
+    let mut grouped = 0.0;
+    let mut fused = 0.0;
+    if vanilla {
+        grouped += m.decode(b);
+    }
+    for &w in &groups {
+        // one β-paying full-bucket step per group, plus the group's
+        // drafts; the grouped engine rounds its verify window up into the
+        // lowered grid exactly like the fused one, so its steps pay the
+        // same per-step padding (a uniform-plan batch prices IDENTICAL
+        // under both disciplines — only heterogeneity costs grouped more)
+        grouped += w as f64 * m.draft("ngram", b)
+            + m.verify_fused(m.g_ref, (w + 1) as f64, step_up(&STEP_GRID, w + 1), b);
+        fused += w as f64 * m.draft("ngram", b);
+    }
+    // ONE ragged step at the bucket window; β once, padding-waste priced
+    let w_step = step_up(&STEP_GRID, max_w + 1);
+    fused += m.verify_fused(m.g_ref, width_sum as f64 / live as f64, w_step, b);
+    (grouped, fused)
+}
+
+struct RunOut {
+    steps: u64,
+    rounds: u64,
+    tokens: u64,
+    modelled_s: f64,
+    first_round_steps: u64,
+}
+
+fn run(
+    d: VerifyDiscipline,
+    n: usize,
+    budget: usize,
+    seed: u64,
+    plans: &[SlotPlan],
+    m: &CostModel,
+) -> RunOut {
+    let mut e = SyntheticEngine::new(n, seed).with_discipline(d);
+    for (i, p) in plans.iter().enumerate() {
+        e.admit(i, Request::new(i as u64, vec![0; 8], budget), p.clone())
+            .expect("admit");
+    }
+    let mut rep = EngineReport::default();
+    let mut modelled = 0.0;
+    let mut rounds = 0u64;
+    let mut first_round_steps = 0u64;
+    loop {
+        let (g, f) = price_round(&e, m);
+        let before = rep.target_steps;
+        if e.round(&mut rep).expect("round") == 0 {
+            break;
+        }
+        if rounds == 0 {
+            first_round_steps = rep.target_steps - before;
+        }
+        modelled += match d {
+            VerifyDiscipline::Grouped => g,
+            VerifyDiscipline::Fused => f,
+        };
+        rounds += 1;
+    }
+    RunOut {
+        steps: rep.target_steps,
+        rounds,
+        tokens: rep.total_generated,
+        modelled_s: modelled,
+        first_round_steps,
+    }
+}
+
+fn main() {
+    let mut args = Args::from_env().unwrap();
+    let budget = args.opt_parse("budget", 48usize);
+    let seed = args.opt_parse("seed", 7u64);
+    let json_out = args.opt("json-out", "BENCH_fused.json");
+    args.finish().unwrap();
+
+    let m = CostModel::paper_32b();
+    let mut bench = Bench::new(0, 1);
+    let mut extra: Vec<Vec<(&str, Json)>> = Vec::new();
+
+    for spread in ["uniform w4", "split w2/w6", "ragged mix"] {
+        for n in [2usize, 4, 8, 16] {
+            let plans = spread_plans(spread, n);
+            let grouped = run(VerifyDiscipline::Grouped, n, budget, seed, &plans, &m);
+            let fused = run(VerifyDiscipline::Fused, n, budget, seed, &plans, &m);
+            // token dynamics are discipline-invariant (losslessness);
+            // only the step count and the modelled round time differ
+            assert_eq!(fused.tokens, grouped.tokens, "{spread} n={n}: tokens diverged");
+            assert_eq!(fused.rounds, grouped.rounds, "{spread} n={n}: rounds diverged");
+            // acceptance criterion: the fresh mixed round issues exactly
+            // ONE fused target step; grouped issues one per plan group
+            assert_eq!(fused.first_round_steps, 1, "{spread} n={n}: fused round != 1 step");
+            let g0 = plans
+                .iter()
+                .filter(|p| p.window > 0)
+                .map(|p| p.window)
+                .collect::<std::collections::BTreeSet<_>>()
+                .len() as u64;
+            let v0 = u64::from(plans.iter().any(|p| p.window == 0));
+            assert_eq!(
+                grouped.first_round_steps,
+                g0 + v0,
+                "{spread} n={n}: grouped round != G spec groups + vanilla"
+            );
+            let speedup = grouped.modelled_s / fused.modelled_s;
+            println!(
+                "{spread:<12} n={n:<3} steps {:>4} -> {:>4}  modelled {:>8.4}s -> {:>8.4}s  \
+                 ({speedup:.2}x)  rounds {:>4}  tokens {:>5}",
+                grouped.steps, fused.steps, grouped.modelled_s, fused.modelled_s,
+                fused.rounds, fused.tokens
+            );
+            bench.record(&format!("fused {spread} n={n} budget={budget}"), fused.modelled_s);
+            extra.push(vec![
+                ("occupancy", Json::num(n as f64)),
+                ("spread", Json::str(spread)),
+                ("steps_grouped", Json::num(grouped.steps as f64)),
+                ("steps_fused", Json::num(fused.steps as f64)),
+                ("modelled_grouped_s", Json::num(grouped.modelled_s)),
+                ("modelled_fused_s", Json::num(fused.modelled_s)),
+                ("modelled_speedup", Json::num(speedup)),
+                ("rounds", Json::num(fused.rounds as f64)),
+                ("tokens", Json::num(fused.tokens as f64)),
+            ]);
+            assert!(
+                fused.steps <= grouped.steps,
+                "{spread} n={n}: fused used more target steps"
+            );
+            assert!(speedup.is_finite() && speedup > 0.0);
+        }
+    }
+    bench
+        .write_json(Path::new(&json_out), "fused_verify", &extra)
+        .expect("write BENCH_fused.json");
+    println!("wrote {json_out}");
+}

@@ -98,6 +98,7 @@ pub fn plan_initial(
             method: sel.clone(),
             max_window: 7,
             fixed_batch: None,
+            fused_windows: vec![],
         },
     );
     (sel, plan.map(|p| p.w).unwrap_or(3).clamp(1, 7))
@@ -150,6 +151,7 @@ pub fn rollout(
                     .collect();
                 let ecfg = EngineConfig {
                     plan: SlotPlan::coupled(to_engine_method(&method), window),
+                    verify: Default::default(),
                     temperature: temp,
                     seed,
                     draft_seed: seed.wrapping_add(1000),
@@ -252,6 +254,7 @@ pub fn race_methods(
     for meth in methods {
         let cfg = EngineConfig {
             plan: SlotPlan::coupled(to_engine_method(meth), window),
+            verify: Default::default(),
             temperature: 1.0,
             seed,
             draft_seed: seed.wrapping_add(1000),

@@ -17,9 +17,11 @@
 //!   place.
 
 use crate::drafter::DraftMethod;
-use crate::engine::{SlotAccept, SlotPlan};
+use crate::engine::{SlotAccept, SlotPlan, VerifyDiscipline};
 use crate::planner::costmodel::CostModel;
-use crate::planner::tgs::{tgs_coupled, tgs_decoupled};
+use crate::planner::tgs::{
+    step_up, tgs_coupled, tgs_coupled_fused, tgs_decoupled, tgs_decoupled_fused,
+};
 use crate::runtime::Manifest;
 
 /// Speculation mode flag in a per-request plan (paper's `m_r`) — the
@@ -36,7 +38,9 @@ pub struct RequestPlan {
     pub tgs: f64,
 }
 
-/// argmax_w TGS for one mode at batch 1.
+/// argmax_w TGS for one mode at batch 1. `fused_grid` prices each window
+/// as the fused engine runs it — rounded up into the lowered grid with
+/// the padding-waste term; `None` is the exact pre-fusion pricing.
 fn best_window(
     m: &CostModel,
     method: &str,
@@ -44,18 +48,44 @@ fn best_window(
     p: f64,
     max_w: usize,
     mode: Mode,
+    fused_grid: Option<&[usize]>,
 ) -> (usize, f64) {
     let mut best = (1usize, f64::MIN);
     for w in 1..=max_w {
-        let t = match mode {
-            Mode::Coupled => tgs_coupled(m, method, g_v, w, 1, p),
-            Mode::Decoupled => tgs_decoupled(m, method, g_v, w, 1, p),
+        let t = match (mode, fused_grid) {
+            (Mode::Coupled, None) => tgs_coupled(m, method, g_v, w, 1, p),
+            (Mode::Decoupled, None) => tgs_decoupled(m, method, g_v, w, 1, p),
+            (Mode::Coupled, Some(grid)) => {
+                tgs_coupled_fused(m, method, g_v, w, step_up(grid, w), 1, p)
+            }
+            (Mode::Decoupled, Some(grid)) => {
+                tgs_decoupled_fused(m, method, g_v, w, step_up(grid, w), 1, p)
+            }
         };
         if t > best.1 {
             best = (w, t);
         }
     }
     best
+}
+
+/// SelectBetter: model both modes at batch 1 and keep the faster plan.
+/// `fused_grid` as in [`best_window`].
+fn select_better(
+    m: &CostModel,
+    method: &str,
+    g_v: usize,
+    p: f64,
+    max_w: usize,
+    fused_grid: Option<&[usize]>,
+) -> RequestPlan {
+    let (wc, tc) = best_window(m, method, g_v, p, max_w, Mode::Coupled, fused_grid);
+    let (wd, td) = best_window(m, method, g_v, p, max_w, Mode::Decoupled, fused_grid);
+    if tc >= td {
+        RequestPlan { w: wc, mode: Mode::Coupled, tgs: tc }
+    } else {
+        RequestPlan { w: wd, mode: Mode::Decoupled, tgs: td }
+    }
 }
 
 /// Algorithm 2 for one request: profile → model both modes → SelectBetter.
@@ -66,13 +96,7 @@ pub fn reconfigure_request(
     measured_p: f64,
     max_w: usize,
 ) -> RequestPlan {
-    let (wc, tc) = best_window(m, method, g_v, measured_p, max_w, Mode::Coupled);
-    let (wd, td) = best_window(m, method, g_v, measured_p, max_w, Mode::Decoupled);
-    if tc >= td {
-        RequestPlan { w: wc, mode: Mode::Coupled, tgs: tc }
-    } else {
-        RequestPlan { w: wd, mode: Mode::Decoupled, tgs: td }
-    }
+    select_better(m, method, g_v, measured_p, max_w, None)
 }
 
 /// Algorithm 2 over a batch: reconfigure every request whose acceptance is
@@ -142,6 +166,15 @@ pub struct Reconfigurator {
     /// serve-loop constructors set this; deployments that route Decoupled
     /// slots to the threaded pipeline clear it.
     coupled_only: bool,
+    /// Verify discipline of the engine the plans land on. **Fused**
+    /// (default): heterogeneous windows share one β-amortised step, so a
+    /// straggler gets its exact argmax window over the full `1..=max_w`
+    /// grid, priced with the fused padding-waste term — aggressive
+    /// per-slot specialisation. **Grouped**: every distinct window is
+    /// another β-paying verify step, so the chosen window is snapped DOWN
+    /// into the lowered grid — the convergence pressure that herds
+    /// stragglers into existing plan groups.
+    discipline: VerifyDiscipline,
     /// Firings that changed at least one slot.
     pub fired: u64,
 }
@@ -166,6 +199,7 @@ impl Reconfigurator {
             rounds: 0,
             baseline: Vec::new(),
             coupled_only: true,
+            discipline: VerifyDiscipline::Fused,
             fired: 0,
         }
     }
@@ -174,6 +208,15 @@ impl Reconfigurator {
     /// the caller runs those slots on the real threaded pipeline).
     pub fn with_decoupled_modes(mut self) -> Self {
         self.coupled_only = false;
+        self
+    }
+
+    /// Target a grouped-verify engine (`--grouped-verify` A/B): derived
+    /// windows snap down into the lowered grid so stragglers coalesce
+    /// into existing `(method, window)` groups instead of each paying the
+    /// verify intercept β again.
+    pub fn for_discipline(mut self, d: VerifyDiscipline) -> Self {
+        self.discipline = d;
         self
     }
 
@@ -242,21 +285,49 @@ impl Reconfigurator {
             return Vec::new();
         }
         let avg = rates.iter().map(|(_, p)| p).sum::<f64>() / rates.len() as f64;
+        let fused = self.discipline == VerifyDiscipline::Fused;
+        // BOTH disciplines round an intermediate window up to the next
+        // lowered step size at verify time, so candidates are priced with
+        // that padding either way (matching the serve replanner); the
+        // disciplines differ only in what the argmax is snapped to below.
+        let grid = Some(self.allowed.as_slice());
+        // Enumerate only up to the largest verifiable draft window:
+        // beyond it `step_up` has no grid element to round into, so a
+        // larger candidate would be priced with NO padding waste (and
+        // still be clamped before application) — an optimistic phantom
+        // that could out-score every fairly-priced runnable window.
+        let cap = self.max_w.min(*self.allowed.last().unwrap());
         let mut out = Vec::new();
         for &(li, p) in rates.iter().filter(|(_, p)| *p < avg) {
             let ls = &live[li];
             let method = cost_method(&self.cost, &ls.method);
             let plan = if self.coupled_only {
                 let (w, tgs) =
-                    best_window(&self.cost, &method, self.g_v, p, self.max_w, Mode::Coupled);
+                    best_window(&self.cost, &method, self.g_v, p, cap, Mode::Coupled, grid);
                 RequestPlan { w, mode: Mode::Coupled, tgs }
             } else {
-                reconfigure_request(&self.cost, &method, self.g_v, p, self.max_w)
+                select_better(&self.cost, &method, self.g_v, p, cap, grid)
             };
-            // cap at the largest verifiable draft window (the engine rounds
-            // intermediate windows up to the next lowered step size, so the
-            // full 1..=cap grid is runnable — no grid snapping)
-            let w = plan.w.min(*self.allowed.last().unwrap());
+            let w = if fused {
+                // fused engine: heterogeneous windows are free of β, so
+                // the straggler keeps its exact argmax window over the
+                // full 1..=cap grid (intermediate windows round up at
+                // verify time and were priced with that padding)
+                plan.w
+            } else {
+                // grouped engine: every distinct window is another
+                // β-paying verify step — snap DOWN into the lowered grid
+                // so stragglers converge onto existing plan groups; a
+                // window below the whole grid keeps its argmax value
+                // (inflating a struggling slot's window would be worse
+                // than an extra group)
+                self.allowed
+                    .iter()
+                    .copied()
+                    .filter(|&a| a <= plan.w)
+                    .max()
+                    .unwrap_or(plan.w)
+            };
             out.push((
                 ls.slot,
                 SlotPlan { method: ls.method.clone(), window: w, mode: plan.mode },
@@ -391,6 +462,51 @@ mod tests {
         // slot 0's delta is 4/4 = 1.0, slot 1's is 1/4 = 0.25
         assert_eq!(plans.len(), 1);
         assert_eq!(plans[0].0, 1);
+    }
+
+    #[test]
+    fn grouped_discipline_snaps_windows_into_the_grid() {
+        // Target a grouped-verify engine: the straggler's window must land
+        // ON the lowered grid {1, 3, 7} (an off-grid window would open a
+        // fresh β-paying plan group), while the fused default may pick any
+        // window in 1..=7.
+        let live = vec![
+            LiveSlot { slot: 0, method: DraftMethod::Sam },
+            LiveSlot { slot: 1, method: DraftMethod::Sam },
+        ];
+        let counters = slot_counters(&[(20, 20), (20, 3)]);
+        let mut grouped =
+            Reconfigurator::synthetic(1).for_discipline(crate::engine::VerifyDiscipline::Grouped);
+        let plans = grouped.on_round(&counters, &live);
+        assert_eq!(plans.len(), 1);
+        assert!(
+            [1usize, 3, 7].contains(&plans[0].1.window),
+            "grouped discipline must snap window {} onto the lowered grid",
+            plans[0].1.window
+        );
+        let mut fused = Reconfigurator::synthetic(1);
+        let plans = fused.on_round(&counters, &live);
+        assert_eq!(plans.len(), 1);
+        assert!((1..=7).contains(&plans[0].1.window));
+    }
+
+    #[test]
+    fn windows_never_exceed_the_verifiable_grid() {
+        // max_w far above the verifiable grid: enumeration is capped, so
+        // no above-grid candidate (priced with zero padding waste — an
+        // optimistic phantom) can win and the applied window is runnable.
+        let mut rc = Reconfigurator::new(CostModel::paper_32b(), 4, 7, vec![1, 3], 1);
+        let live = vec![
+            LiveSlot { slot: 0, method: DraftMethod::Ngram },
+            LiveSlot { slot: 1, method: DraftMethod::Ngram },
+        ];
+        let plans = rc.on_round(&slot_counters(&[(20, 19), (20, 2)]), &live);
+        assert_eq!(plans.len(), 1);
+        assert!(
+            plans[0].1.window <= 3,
+            "window {} beyond the verifiable grid",
+            plans[0].1.window
+        );
     }
 
     #[test]

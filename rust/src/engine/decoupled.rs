@@ -466,8 +466,9 @@ pub fn rollout_decoupled_planned(
     let t0 = Instant::now();
     let mut rep = EngineReport::default();
     let mut pending: Vec<Option<Chunk>> = (0..n).map(|_| None).collect();
-    // verify-step inputs, reused every round
+    // verify-step inputs + per-row ragged widths, reused every round
     let mut vtoks = vec![pad; bucket * w];
+    let mut vwidths = vec![0usize; bucket];
 
     let active = |reqs: &Vec<Request>| reqs.iter().filter(|r| !r.done).count();
     while active(requests) > 0 {
@@ -507,15 +508,25 @@ pub fn rollout_decoupled_planned(
             pending[i] = Some(chunk);
         }
 
-        // Batched verify of all pending chunks (shorter chunks padded).
+        // One fused ragged verify of all pending chunks: shorter chunks
+        // are padded up to the shared step window, but each row's real
+        // width is its own chunk + seed token — the ragged scatter keeps
+        // padded KV out of short rows' caches and the guarded logits
+        // accessor refuses reads past each row's chunk (done/free rows
+        // ride along as zero-width padding).
         vtoks.fill(pad);
+        vwidths.clear();
+        vwidths.resize(bucket, 0);
         for i in 0..n {
             if let Some(c) = &pending[i] {
                 vtoks[i * w] = *requests[i].seq.last().unwrap();
                 vtoks[i * w + 1..i * w + 1 + c.tokens.len()].copy_from_slice(&c.tokens);
+                vwidths[i] = c.tokens.len() + 1;
             }
         }
-        let out = rt.step(&target, &vtoks, w, &mut cache)?;
+        // widths ownership rides through the StepOut and is reclaimed
+        // below — no per-step allocation
+        let mut out = rt.step_ragged(&target, &vtoks, w, &mut cache, vwidths)?;
         rep.target_steps += 1;
         rep.iterations += 1;
 
@@ -524,7 +535,10 @@ pub fn rollout_decoupled_planned(
             let seq_len = requests[i].seq.len();
             let id = requests[i].id;
             let outcome =
-                verify_exact(id, cfg.seed, cfg.temperature, seq_len, &c.tokens, |j| out.at(i, j));
+                verify_exact(id, cfg.seed, cfg.temperature, seq_len, &c.tokens, |j| {
+                    out.logits_at(i, j)
+                        .expect("verify reads stay inside the row's real window")
+                });
             let budget_left = requests[i].budget - requests[i].generated();
             let mut append = outcome.append;
             if outcome.full_accept && plans[i].mode == PlanMode::Decoupled {
@@ -565,6 +579,7 @@ pub fn rollout_decoupled_planned(
                 });
             }
         }
+        vwidths = out.widths.take().unwrap_or_default();
     }
     let _ = verdict_tx.send(Verdict::Shutdown);
     let _ = handle.join();

@@ -4,9 +4,12 @@
 //! (for model-based drafting) per-draft-model caches, and drives rollout
 //! under **per-slot speculation plans** ([`SlotPlan`]): each slot chooses
 //! its own draft method, window and coupled/decoupled discipline, and
-//! [`Worker::round`] batches the active slots into one verify step per
-//! `(method, window)` plan group. Whole-batch drivers remain as thin
-//! wrappers:
+//! [`Worker::round`] verifies the whole batch in **one fused ragged
+//! target step** per round ([`VerifyDiscipline::Fused`], the default —
+//! β once per round whatever the plan mix; the pre-fusion one-step-per-
+//! `(method, window)`-group engine stays behind
+//! [`VerifyDiscipline::Grouped`] for A/B). Whole-batch drivers remain as
+//! thin wrappers:
 //!
 //! * [`Worker::rollout_vanilla`] — plain auto-regressive decoding,
 //! * [`Worker::rollout_coupled`] — uniform draft-k-then-verify speculation
@@ -31,5 +34,5 @@ pub mod plan;
 pub mod worker;
 
 pub use decoupled::{rollout_decoupled, rollout_decoupled_planned};
-pub use plan::{same_group, PlanMode, SlotPlan};
+pub use plan::{same_group, PlanMode, SlotPlan, VerifyDiscipline};
 pub use worker::{EngineConfig, EngineReport, Request, SlotAccept, Worker};

@@ -10,15 +10,37 @@
 //! token stream).
 //!
 //! Plans are owned per slot by [`Worker`], applied by the serve loop on
-//! admission and at occupancy-bucket crossings, and rewritten in place by
-//! Algorithm 2 (`coordinator::reconfig::Reconfigurator`) and Algorithm 3
-//! (`coordinator::fon::slot_plans`). Slots sharing `(method, window)` are
-//! batched into one verify step per round regardless of `mode` — see
-//! PERF.md §Per-slot planning for the grouping cost model.
+//! admission, and rewritten in place by Algorithm 2
+//! (`coordinator::reconfig::Reconfigurator`) and Algorithm 3
+//! (`coordinator::fon::slot_plans`). Under the default
+//! [`VerifyDiscipline::Fused`] every active slot — whatever its plan —
+//! joins ONE ragged target step per round; under
+//! [`VerifyDiscipline::Grouped`] slots sharing `(method, window)` batch
+//! into one verify step per group (regardless of `mode`) — see PERF.md
+//! §Per-slot planning for both cost models.
 //!
 //! [`Worker`]: crate::engine::Worker
 
 use crate::drafter::DraftMethod;
+
+/// How the engine executes one round's verification over the batch's plan
+/// groups (SpecActor's fused scheduling vs the pre-fusion testbed).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum VerifyDiscipline {
+    /// **One fused ragged target step per round**, whatever the plan mix:
+    /// each slot drafts its own window `w_i`, rows are padded to a single
+    /// bucket window `W` (smallest lowered step window ≥ max active
+    /// `w_i + 1`), vanilla slots join as width-1 rows, and acceptance is
+    /// applied per row over its real `w_i` only. The verify intercept β is
+    /// paid once per round, so heterogeneous per-slot plans are free.
+    #[default]
+    Fused,
+    /// One full-bucket target step per `(method, window)` plan group plus
+    /// one vanilla decode step — β per extra group. Kept behind this flag
+    /// for A/B measurement (`benches/fused_verify.rs`,
+    /// `serve --grouped-verify`).
+    Grouped,
+}
 
 /// Verification discipline for a speculative slot (the paper's `m_r`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]

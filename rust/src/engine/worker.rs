@@ -9,10 +9,14 @@
 //! batching serve loop (`serve/batcher.rs`).
 //!
 //! Speculation is configured **per slot**, not per batch: every slot owns
-//! a [`SlotPlan`] `(method, window, mode)` and [`Worker::round`] partitions
-//! the active slots into plan groups — one vanilla decode step for all
-//! window-0 slots, plus one draft-and-verify step per `(method, window)`
-//! group. Plans are hot-swappable mid-rollout ([`Worker::set_plan`]):
+//! a [`SlotPlan`] `(method, window, mode)` and [`Worker::round`] runs the
+//! active slots under the config's [`VerifyDiscipline`] — by default one
+//! **fused ragged** target step per round (each slot drafts its own
+//! window, rows are padded to one bucket window, vanilla slots join as
+//! width-1 rows, acceptance applies per row over its real window), or,
+//! behind the `Grouped` A/B flag, one step per `(method, window)` plan
+//! group plus a vanilla decode step — the pre-fusion engine.
+//! Plans are hot-swappable mid-rollout ([`Worker::set_plan`]):
 //! token drafters are rebuilt from the slot's verified prefix, and a model
 //! drafter's cache row is re-fed through the ordinary catch-up path — so
 //! Algorithm 2 (request-level reconfiguration) and the serve replanner
@@ -32,10 +36,10 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::drafter::TokenDrafter;
 use crate::runtime::{KvCache, Runtime};
-use crate::spec::{decode_one, verify_exact, AcceptanceStats};
+use crate::spec::{decode_one, verify_exact, AcceptanceStats, VerifyOutcome};
 use crate::util::rng::{position_rng, sample_logits};
 
-use super::plan::{same_group, PlanMode, SlotPlan};
+use super::plan::{same_group, PlanMode, SlotPlan, VerifyDiscipline};
 
 /// One rollout request.
 #[derive(Clone, Debug)]
@@ -77,6 +81,10 @@ pub struct EngineConfig {
     /// explicit per-slot plan ([`Worker::new_with_plans`] /
     /// [`Worker::admit_with_plan`] override it).
     pub plan: SlotPlan,
+    /// How a round's verification executes: one fused ragged step for the
+    /// whole batch (default) or one step per plan group (pre-fusion
+    /// engine, kept for A/B). Token output is identical either way.
+    pub verify: VerifyDiscipline,
     pub temperature: f32,
     /// Sampling-tape seed shared by every mode (losslessness).
     pub seed: u64,
@@ -88,6 +96,7 @@ impl Default for EngineConfig {
     fn default() -> Self {
         EngineConfig {
             plan: SlotPlan::vanilla(),
+            verify: VerifyDiscipline::Fused,
             temperature: 1.0,
             seed: 7,
             draft_seed: 1007,
@@ -184,6 +193,10 @@ struct Scratch {
     group_reps: Vec<usize>,
     /// Member slots of each plan group (vec pool, reused across rounds).
     group_slots: Vec<Vec<usize>>,
+    /// Per-row real widths of the fused ragged step `[bucket]`.
+    widths: Vec<usize>,
+    /// Member slots of one fused per-model draft chain (reused).
+    model_slots: Vec<usize>,
 }
 
 /// Per-draft-model runtime state: one KV cache spanning the whole bucket
@@ -604,18 +617,34 @@ impl<'rt> Worker<'rt> {
     }
 
     /// One engine iteration over the currently-admitted unfinished slots,
-    /// driven by their [`SlotPlan`]s: the active slots are partitioned into
-    /// plan groups and each group runs one target step — a single vanilla
-    /// decode step for all window-0 slots, one draft-`w`-verify round per
-    /// `(method, window)` group. Returns the number of slots that
-    /// participated (0 = nothing to do).
+    /// driven by their [`SlotPlan`]s and the config's [`VerifyDiscipline`]:
+    ///
+    /// * **Fused** (default): every active slot drafts its own window,
+    ///   then the whole batch verifies in ONE ragged target step at the
+    ///   bucket window (vanilla slots ride along as width-1 rows) — the
+    ///   verify intercept is paid once per round whatever the plan mix;
+    /// * **Grouped** (A/B flag): one target step per `(method, window)`
+    ///   plan group plus a vanilla decode step, the pre-fusion engine.
+    ///
+    /// Returns the number of slots that participated (0 = nothing to do).
     pub fn round(&mut self, rep: &mut EngineReport) -> Result<usize> {
         let active = self.refresh_active();
         if active == 0 {
             return Ok(0);
         }
-        // Partition into plan groups, keyed by a representative member
-        // slot (comparing plans in place; no clones on the hot path).
+        match self.cfg.verify {
+            VerifyDiscipline::Fused => self.round_fused(rep)?,
+            VerifyDiscipline::Grouped => self.round_grouped(rep)?,
+        }
+        rep.iterations += 1;
+        Ok(active)
+    }
+
+    /// Partition `scratch.active` into plan groups keyed by a
+    /// representative member slot (comparing plans in place; no clones on
+    /// the hot path). Groups land in `scratch.group_reps` /
+    /// `scratch.group_slots`; returns the group count.
+    fn partition_groups(&mut self) -> usize {
         let mut reps = std::mem::take(&mut self.scratch.group_reps);
         let mut groups = std::mem::take(&mut self.scratch.group_slots);
         reps.clear();
@@ -639,27 +668,149 @@ impl<'rt> Worker<'rt> {
             };
             groups[gi].push(i);
         }
-        let n_groups = reps.len();
-        let mut result = Ok(());
+        let n = reps.len();
+        self.scratch.group_reps = reps;
+        self.scratch.group_slots = groups;
+        n
+    }
+
+    /// Grouped-discipline round: one target step per plan group.
+    fn round_grouped(&mut self, rep: &mut EngineReport) -> Result<()> {
+        let n_groups = self.partition_groups();
         for g in 0..n_groups {
-            let slots = std::mem::take(&mut groups[g]);
-            let window = self.plans[reps[g]].window;
+            let slots = std::mem::take(&mut self.scratch.group_slots[g]);
+            let window = self.plans[self.scratch.group_reps[g]].window;
             let r = if window == 0 {
                 self.vanilla_round(&slots, rep)
             } else {
                 self.coupled_round(window, &slots, rep)
             };
-            groups[g] = slots;
-            if r.is_err() {
-                result = r;
-                break;
+            self.scratch.group_slots[g] = slots;
+            r?;
+        }
+        Ok(())
+    }
+
+    /// Fused-discipline round: draft every speculative slot (token
+    /// drafters per `(method, window)` group, model drafters in one
+    /// ragged chain per model — no verification happens per group), then
+    /// verify the whole batch in one ragged target step.
+    fn round_fused(&mut self, rep: &mut EngineReport) -> Result<()> {
+        let n_groups = self.partition_groups();
+        // Bucket window: smallest lowered step window covering the widest
+        // active row (`w_i` drafts + the seed token). All-vanilla rounds
+        // are a plain width-1 decode step.
+        let mut max_k = 0usize;
+        for g in 0..n_groups {
+            max_k = max_k.max(self.plans[self.scratch.group_reps[g]].window);
+        }
+        let w = if max_k == 0 { 1 } else { self.verify_window_for(max_k)? };
+
+        let mut drafts = std::mem::take(&mut self.scratch.drafts);
+        let res = self.fused_draft_and_verify(n_groups, w, &mut drafts, rep);
+        self.scratch.drafts = drafts;
+        res
+    }
+
+    fn fused_draft_and_verify(
+        &mut self,
+        n_groups: usize,
+        w: usize,
+        drafts: &mut [Vec<i32>],
+        rep: &mut EngineReport,
+    ) -> Result<()> {
+        // 1. draft (no per-group verify). Token-drafter groups draft per
+        //    group as usual. Model drafting is fused per MODEL, across
+        //    groups: the fused round verifies only once at the end, so a
+        //    second same-model chain's full-bucket step would see the
+        //    first group's speculatively-advanced cache lens (the grouped
+        //    discipline rolls lens back at each group's verify) and could
+        //    trip the runtime's max_seq guard near a budget boundary.
+        for g in 0..n_groups {
+            let rep_slot = self.scratch.group_reps[g];
+            let k = self.plans[rep_slot].window;
+            if k == 0 {
+                continue;
+            }
+            if self.plans[rep_slot].method.is_model() {
+                let name = self.plans[rep_slot].method.model_name().unwrap();
+                // one chain per model: skip groups whose model an earlier
+                // group already drafted (its slots were chain members)
+                let drafted_already = (0..g).any(|h| {
+                    let r = self.scratch.group_reps[h];
+                    self.plans[r].window > 0
+                        && self.plans[r].method.model_name() == Some(name)
+                });
+                if drafted_already {
+                    continue;
+                }
+                self.draft_model_fused(rep_slot, drafts, rep)?;
+            } else {
+                let slots = std::mem::take(&mut self.scratch.group_slots[g]);
+                let r = self.draft_group(k, &slots, drafts, rep);
+                self.scratch.group_slots[g] = slots;
+                r?;
             }
         }
-        self.scratch.group_reps = reps;
-        self.scratch.group_slots = groups;
-        result?;
-        rep.iterations += 1;
-        Ok(active)
+
+        // 2. ONE fused ragged verify step across every active slot: row i
+        //    carries [last, d_0..d_{k_i-1}, pad...], real width k_i + 1;
+        //    free/done slots are zero-width padding rows whose cache the
+        //    ragged scatter never touches.
+        let mut toks = std::mem::take(&mut self.scratch.toks);
+        let mut widths = std::mem::take(&mut self.scratch.widths);
+        toks.clear();
+        toks.resize(self.bucket * w, self.pad);
+        widths.clear();
+        widths.resize(self.bucket, 0);
+        for &i in &self.scratch.active {
+            let k = self.plans[i].window;
+            toks[i * w] = *self.slots[i].as_ref().unwrap().seq.last().unwrap();
+            toks[i * w + 1..i * w + 1 + k].copy_from_slice(&drafts[i][..k]);
+            widths[i] = k + 1;
+        }
+        // widths ownership rides through the StepOut and is reclaimed
+        // after the outputs are read — no per-step allocation
+        let step = self.rt.step_ragged(&self.target, &toks, w, &mut self.cache, widths);
+        self.scratch.toks = toks;
+        let mut out = step?;
+        rep.target_steps += 1;
+
+        // 3. per-row outcomes over each row's REAL window only — the
+        //    guarded accessor refuses reads into the padded tail.
+        for idx in 0..self.scratch.active.len() {
+            let i = self.scratch.active[idx];
+            let k = self.plans[i].window;
+            let (id, seq_len) = {
+                let r = self.slots[i].as_ref().unwrap();
+                (r.id, r.seq.len())
+            };
+            if k == 0 {
+                let t = decode_one(
+                    id,
+                    self.cfg.seed,
+                    self.cfg.temperature,
+                    seq_len,
+                    out.logits_at(i, 0)?,
+                );
+                self.apply_decode(i, t, rep);
+            } else {
+                let outcome = verify_exact(
+                    id,
+                    self.cfg.seed,
+                    self.cfg.temperature,
+                    seq_len,
+                    &drafts[i],
+                    |j| {
+                        out.logits_at(i, j)
+                            .expect("verify reads stay inside the row's real window")
+                    },
+                );
+                self.apply_outcome(i, drafts[i].len(), outcome, rep);
+            }
+        }
+        self.scratch.widths = out.widths.take().unwrap_or_default();
+        Ok(())
     }
 
     /// One vanilla decode step for the window-0 group.
@@ -679,21 +830,90 @@ impl<'rt> Worker<'rt> {
                 (r.id, r.seq.len())
             };
             let t = decode_one(id, self.cfg.seed, self.cfg.temperature, seq_len, out.at(i, 0));
-            let r = self.slots[i].as_mut().unwrap();
-            r.seq.push(t);
-            r.iterations += 1;
-            self.cache.lens[i] += 1;
-            rep.total_generated += 1;
-            // keep token-drafter history in sync so vanilla rounds can be
-            // interleaved with speculative ones (plan switches)
-            if let Some(td) = &mut self.token_drafters[i] {
-                td.extend(std::slice::from_ref(&t));
-            }
-            self.finish_check(i);
+            self.apply_decode(i, t, rep);
         }
         // slots outside the group keep their lens frozen: the pad fed to
         // them is written at lens and overwritten by their own next step.
         Ok(())
+    }
+
+    /// Apply one vanilla-decoded token to `slot`: sequence push,
+    /// cache-lens advance, token-drafter sync, finish check, counters.
+    /// Shared by the grouped vanilla step and the fused step's width-1
+    /// rows so the two disciplines cannot drift.
+    fn apply_decode(&mut self, i: usize, t: i32, rep: &mut EngineReport) {
+        let r = self.slots[i].as_mut().unwrap();
+        r.seq.push(t);
+        r.iterations += 1;
+        self.cache.lens[i] += 1;
+        rep.total_generated += 1;
+        // keep token-drafter history in sync so vanilla rounds can be
+        // interleaved with speculative ones (plan switches)
+        if let Some(td) = &mut self.token_drafters[i] {
+            td.extend(std::slice::from_ref(&t));
+        }
+        self.finish_check(i);
+    }
+
+    /// Apply one slot's verify outcome: bonus-token discipline per the
+    /// slot's mode, budget truncation, target/draft cache-lens rollback,
+    /// token-drafter resync, finish check and counters. Shared by the
+    /// grouped and fused verify paths.
+    fn apply_outcome(
+        &mut self,
+        i: usize,
+        drafted: usize,
+        outcome: VerifyOutcome,
+        rep: &mut EngineReport,
+    ) {
+        let (seq_len, budget_left) = {
+            let r = self.slots[i].as_ref().unwrap();
+            (r.seq.len(), r.budget - r.generated())
+        };
+        let mut append = outcome.append;
+        if outcome.full_accept && self.plans[i].mode == PlanMode::Decoupled {
+            // Decoupled discipline takes no bonus token: the tape
+            // re-samples the identical token at that position later, so
+            // losslessness is unaffected (see engine::decoupled docs).
+            append.pop();
+        }
+        append.truncate(budget_left);
+        let advanced = append.len();
+        let req = self.slots[i].as_mut().unwrap();
+        req.seq.extend_from_slice(&append);
+        req.accept.observe(drafted, outcome.accepted);
+        req.iterations += 1;
+        let new_seq_len = req.seq.len();
+        // Invariant: the target cache has consumed exactly seq.len()-1
+        // tokens (the last token is the next step's input). The verify
+        // step wrote the row's real width; only the accepted prefix is
+        // valid, and that is exactly seq.len()-1 (budget truncation only
+        // lowers it, which is safe: stale slots are overwritten later).
+        self.cache.lens[i] = (new_seq_len - 1) as i32;
+        rep.total_generated += advanced as u64;
+        rep.accepted_tokens += outcome.accepted as u64;
+        rep.wasted_tokens += outcome.wasted as u64;
+        rep.slot_accept(i).accepted += outcome.accepted as u64;
+        if advanced > 1 {
+            rep.skipped_iterations += 1;
+        }
+        // Drafter cache rollback: the draft model consumed its own
+        // drafts while drafting; only those matching the accepted
+        // prefix remain valid.
+        if let Some(name) = self.plans[i].method.model_name() {
+            if let Some(st) = self.draft_models.get_mut(name) {
+                let rollback = (seq_len + outcome.accepted)
+                    .min(new_seq_len - 1)
+                    .min(st.consumed[i]);
+                st.consumed[i] = rollback;
+                st.cache.lens[i] = rollback as i32;
+            }
+        }
+        // token drafter resync: extend with the accepted tokens
+        if let Some(td) = &mut self.token_drafters[i] {
+            td.extend(&append);
+        }
+        self.finish_check(i);
     }
 
     /// Draft `k` tokens for every slot of one plan group into `drafts`
@@ -726,7 +946,7 @@ impl<'rt> Worker<'rt> {
                     .remove_entry(name)
                     .ok_or_else(|| anyhow!("draft model state missing for {name:?}"))?
             };
-            let res = self.draft_group_model(&name, &mut st, k, slots, drafts, rep);
+            let res = self.draft_group_model(&name, &mut st, slots, drafts, rep);
             self.draft_models.insert(name, st);
             res?;
         } else {
@@ -744,13 +964,18 @@ impl<'rt> Worker<'rt> {
         Ok(())
     }
 
-    /// Model-drafting body of [`Worker::draft_group`]: catch-up then `k`
-    /// sequential decode steps on draft model `name`.
+    /// Model-drafting chain shared by the grouped path (uniform member
+    /// windows — one `(method, window)` group) and the fused per-model
+    /// path (mixed member windows across groups): catch-up, then up to
+    /// the largest member window's sequential decode steps on draft model
+    /// `name`. Each slot stops consuming at its OWN window; a full-chunk
+    /// row rides the chain on its last token with its cache position
+    /// frozen (the decoupled drafter thread's discipline), so mixed and
+    /// uniform chains produce identical per-slot drafts.
     fn draft_group_model(
         &mut self,
         name: &str,
         st: &mut DraftModelState,
-        k: usize,
         slots: &[usize],
         drafts: &mut [Vec<i32>],
         rep: &mut EngineReport,
@@ -788,17 +1013,24 @@ impl<'rt> Worker<'rt> {
             }
             max_need = slots.iter().map(|&i| need[i]).max().unwrap_or(0);
         }
-        // 2. k sequential draft decode steps
+        // 2. ragged decode chain: up to the largest member window
+        let k_max = slots.iter().map(|&i| self.plans[i].window).max().unwrap_or(0);
         let mut last = std::mem::take(&mut self.scratch.last);
         last.clear();
         last.resize(self.bucket, self.pad);
         for &i in slots {
             last[i] = *self.slots[i].as_ref().unwrap().seq.last().unwrap();
         }
-        for _ in 0..k {
+        for _ in 0..k_max {
             let out = self.rt.step(name, &last, 1, &mut st.cache)?;
             rep.draft_steps += 1;
             for &i in slots {
+                if drafts[i].len() >= self.plans[i].window {
+                    // chunk full: this row was stepped with a stale token;
+                    // its cache position is not advanced and the written
+                    // entry is overwritten by the row's next real step
+                    continue;
+                }
                 let r = self.slots[i].as_ref().unwrap();
                 let pos = r.seq.len() + drafts[i].len();
                 let mut rng = position_rng(self.cfg.draft_seed, r.id, pos as u64);
@@ -813,8 +1045,47 @@ impl<'rt> Worker<'rt> {
         self.scratch.draft_toks = toks;
         self.scratch.need = need;
         // consumed now counts speculative tokens too; verification rolls
-        // it back to the accepted prefix in `coupled_round`.
+        // it back to the accepted prefix (`apply_outcome`).
         Ok(())
+    }
+
+    /// Fused-round model drafting: ONE [`Worker::draft_group_model`]
+    /// chain for EVERY active slot drafting with the model named by
+    /// `rep_slot`'s plan, whatever their windows. (Same-model plan groups
+    /// must share a chain in the fused round: lens rollback only happens
+    /// at the single end-of-round verify, so a second chain's full-bucket
+    /// step would see the first's speculatively-advanced cache lens.)
+    fn draft_model_fused(
+        &mut self,
+        rep_slot: usize,
+        drafts: &mut [Vec<i32>],
+        rep: &mut EngineReport,
+    ) -> Result<()> {
+        let (name, mut st) = {
+            let name = self.plans[rep_slot].method.model_name().unwrap();
+            self.draft_models
+                .remove_entry(name)
+                .ok_or_else(|| anyhow!("draft model state missing for {name:?}"))?
+        };
+        let mut members = std::mem::take(&mut self.scratch.model_slots);
+        members.clear();
+        for &i in &self.scratch.active {
+            if self.plans[i].window > 0 && self.plans[i].method.model_name() == Some(name.as_str())
+            {
+                drafts[i].clear();
+                members.push(i);
+            }
+        }
+        let res = self.draft_group_model(&name, &mut st, &members, drafts, rep);
+        if res.is_ok() {
+            for &i in &members {
+                rep.drafted_tokens += drafts[i].len() as u64;
+                rep.slot_accept(i).drafted += drafts[i].len() as u64;
+            }
+        }
+        self.scratch.model_slots = members;
+        self.draft_models.insert(name, st);
+        res
     }
 
     /// One speculation round for a `(method, window)` plan group: draft
@@ -850,58 +1121,15 @@ impl<'rt> Worker<'rt> {
         rep.target_steps += 1;
 
         for &i in slots {
-            let (id, seq_len, budget_left) = {
+            let (id, seq_len) = {
                 let r = self.slots[i].as_ref().unwrap();
-                (r.id, r.seq.len(), r.budget - r.generated())
+                (r.id, r.seq.len())
             };
             let outcome =
                 verify_exact(id, self.cfg.seed, self.cfg.temperature, seq_len, &drafts[i], |j| {
                     out.at(i, j)
                 });
-            let mut append = outcome.append;
-            if outcome.full_accept && self.plans[i].mode == PlanMode::Decoupled {
-                // Decoupled discipline takes no bonus token: the tape
-                // re-samples the identical token at that position later, so
-                // losslessness is unaffected (see engine::decoupled docs).
-                append.pop();
-            }
-            append.truncate(budget_left);
-            let advanced = append.len();
-            let req = self.slots[i].as_mut().unwrap();
-            req.seq.extend_from_slice(&append);
-            req.accept.observe(drafts[i].len(), outcome.accepted);
-            req.iterations += 1;
-            let new_seq_len = req.seq.len();
-            // Invariant: the target cache has consumed exactly seq.len()-1
-            // tokens (the last token is the next step's input). The verify
-            // step wrote w entries; only the accepted prefix is valid, and
-            // that is exactly seq.len()-1 (budget truncation only lowers it,
-            // which is safe: stale slots are overwritten later).
-            self.cache.lens[i] = (new_seq_len - 1) as i32;
-            rep.total_generated += advanced as u64;
-            rep.accepted_tokens += outcome.accepted as u64;
-            rep.wasted_tokens += outcome.wasted as u64;
-            rep.slot_accept(i).accepted += outcome.accepted as u64;
-            if advanced > 1 {
-                rep.skipped_iterations += 1;
-            }
-            // Drafter cache rollback: the draft model consumed its own
-            // drafts while drafting; only those matching the accepted
-            // prefix remain valid.
-            if let Some(name) = self.plans[i].method.model_name() {
-                if let Some(st) = self.draft_models.get_mut(name) {
-                    let rollback = (seq_len + outcome.accepted)
-                        .min(new_seq_len - 1)
-                        .min(st.consumed[i]);
-                    st.consumed[i] = rollback;
-                    st.cache.lens[i] = rollback as i32;
-                }
-            }
-            // token drafter resync: extend with the accepted tokens
-            if let Some(td) = &mut self.token_drafters[i] {
-                td.extend(&append);
-            }
-            self.finish_check(i);
+            self.apply_outcome(i, drafts[i].len(), outcome, rep);
         }
         Ok(())
     }

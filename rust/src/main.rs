@@ -15,7 +15,7 @@ use std::process::exit;
 use specactor::coordinator::global::{plan_initial, rollout, GlobalConfig};
 use specactor::coordinator::Reconfigurator;
 use specactor::drafter::DraftMethod;
-use specactor::engine::{EngineConfig, Request, SlotPlan, Worker};
+use specactor::engine::{EngineConfig, Request, SlotPlan, VerifyDiscipline, Worker};
 use specactor::ladder::Ladder;
 use specactor::planner::costmodel::{AffineCost, CostModel};
 use specactor::planner::plan::{search, PlanInput};
@@ -43,6 +43,8 @@ fn usage() -> ! {
                              auto = ladder picks per occupancy; applied, not advisory)\n\
            --reconfig-period N  run Algorithm 2 every N rounds (0 = off, default 0)\n\
            --vanilla         disable speculation (plain decode rounds)\n\
+           --grouped-verify  pre-fusion A/B: one target step per (method, window)\n\
+                             plan group instead of one fused ragged step per round\n\
            --smoke           synthetic engine, no artifacts needed (CI)\n\
          see README / PERF.md for the remaining subcommands' options"
     );
@@ -134,7 +136,9 @@ fn cmd_serve(mut args: Args) {
     let seed = args.opt_parse("seed", 7u64);
     let reconfig_period = args.opt_parse("reconfig-period", 0u64);
     let vanilla = args.flag("vanilla");
+    let grouped = args.flag("grouped-verify");
     let smoke = args.flag("smoke");
+    let discipline = if grouped { VerifyDiscipline::Grouped } else { VerifyDiscipline::Fused };
     args.finish().unwrap_or_else(|e| {
         eprintln!("{e}");
         usage()
@@ -160,8 +164,8 @@ fn cmd_serve(mut args: Args) {
             .map(|(i, &t)| (t, Request::new(i as u64, vec![0; 8], budget), prio_for(i as u64)))
             .collect();
         let replan = Replanner::synthetic();
-        let mut b =
-            Batcher::new(SyntheticEngine::new(capacity.max(1), seed), queue_cap, replan, !vanilla);
+        let engine = SyntheticEngine::new(capacity.max(1), seed).with_discipline(discipline);
+        let mut b = Batcher::new(engine, queue_cap, replan, !vanilla);
         if reconfig_period > 0 && !vanilla {
             b = b.with_reconfig(Reconfigurator::synthetic(reconfig_period));
         }
@@ -203,6 +207,7 @@ fn cmd_serve(mut args: Args) {
         } else {
             SlotPlan::coupled(DraftMethod::parse(&drafter), 3)
         },
+        verify: discipline,
         temperature: 1.0,
         seed,
         draft_seed: seed.wrapping_add(1000),
@@ -268,6 +273,7 @@ fn cmd_plan(mut args: Args) {
         method,
         max_window: 8,
         fixed_batch: None,
+        fused_windows: vec![],
     };
     match search(&m, &input) {
         Some(p) => println!(

@@ -60,6 +60,12 @@ pub struct CostModel {
     pub w_scale: f64,
     /// Window-independent part of β growth with w (kernel launch etc.).
     pub beta_w: f64,
+    /// Fraction of a REAL window position's marginal per-row slope that a
+    /// PADDED position of a fused ragged verify step still costs: the
+    /// position rides the lowered executable's dense compute, but its KV
+    /// scatter and logits reads are skipped host-side and its output is
+    /// never consumed. Used by [`CostModel::verify_fused`].
+    pub pad_waste: f64,
     /// Parallel-efficiency exponent for scaling the verifier across GPU
     /// configs: slope(g) = slope_ref · (g_ref / g)^eff.
     pub tp_eff: f64,
@@ -79,6 +85,7 @@ impl CostModel {
             verify1: AffineCost::new(vp, beta),
             w_scale: 0.30,
             beta_w: 0.1e-3,
+            pad_waste: 0.6,
             tp_eff: 0.85,
             g_ref: 4,
             drafts: vec![
@@ -149,6 +156,22 @@ impl CostModel {
         let slope = self.verify1.slope * (1.0 + self.w_scale * w1) * scale;
         let beta = self.verify1.intercept * scale.clamp(1.0, 1.2) + self.beta_w * w1;
         slope * b as f64 + beta
+    }
+
+    /// Cost of ONE fused ragged verify step — the engine's actual
+    /// discipline: rows with mean real window `w_mean` are padded up to
+    /// the lowered step window `w_step` they all share. The real load is
+    /// the paper's average-window fused verify ([`CostModel::verify_f`],
+    /// β paid exactly once); each padded position adds [`pad_waste`] of a
+    /// real position's marginal per-row slope. `w_mean == w_step` (no
+    /// padding) degenerates to `verify_f` exactly.
+    ///
+    /// [`pad_waste`]: CostModel::pad_waste
+    pub fn verify_fused(&self, g_v: usize, w_mean: f64, w_step: usize, b: usize) -> f64 {
+        let scale = (self.g_ref as f64 / g_v as f64).powf(self.tp_eff);
+        let pad = (w_step as f64 - w_mean).max(0.0);
+        self.verify_f(g_v, w_mean, b)
+            + self.pad_waste * self.w_scale * self.verify1.slope * scale * pad * b as f64
     }
 
     /// Decode (generation) cost of one token at batch `b` on the reference
@@ -241,6 +264,25 @@ mod tests {
         assert!((fit.slope - truth.slope).abs() < 1e-9);
         assert!((fit.intercept - truth.intercept).abs() < 1e-9);
         assert!(r2 > 0.999);
+    }
+
+    #[test]
+    fn verify_fused_anchors() {
+        let m = CostModel::paper_32b();
+        // no padding: degenerates to verify_f exactly
+        let a = m.verify_fused(4, 4.0, 4, 128);
+        let b = m.verify_f(4, 4.0, 128);
+        assert!((a - b).abs() < 1e-15, "{a} vs {b}");
+        // padding costs something, but less than running every row at the
+        // full step window (pad_waste < 1)
+        let padded = m.verify_fused(4, 2.0, 4, 128);
+        assert!(padded > m.verify_f(4, 2.0, 128), "padding must not be free");
+        assert!(padded < m.verify(4, 4, 128), "padded rows are cheaper than real ones");
+        // ONE fused step at mixed windows beats two grouped steps (2x β)
+        let grouped = m.verify(4, 1, 128) + m.verify(4, 3, 128);
+        assert!(padded < grouped, "fused {padded} >= grouped {grouped}");
+        // monotone in the step window (more padding, more waste)
+        assert!(m.verify_fused(4, 2.0, 6, 64) > m.verify_fused(4, 2.0, 4, 64));
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! `w ≤ w_max = max(⌈V'/D'⌉, ⌈β/α⌉)` (larger windows only add waste).
 
 use super::costmodel::CostModel;
-use super::tgs::{tgs_decoupled, tgs_vanilla};
+use super::tgs::{step_up, tgs_decoupled_fused, tgs_vanilla};
 
 /// Search output: the initial decoupled execution plan.
 #[derive(Clone, Debug, PartialEq)]
@@ -46,6 +46,14 @@ pub struct PlanInput {
     /// the GPU split (used when the deployment fixes worker batch sizes,
     /// e.g. the cluster simulator's drafter-piggyback configuration).
     pub fixed_batch: Option<usize>,
+    /// Verifiable draft-window grid of the FUSED engine (ascending): a
+    /// candidate window between grid sizes rounds UP to the next grid
+    /// window at verify time, so the search prices it with the
+    /// padding-waste term ([`CostModel::verify_fused`]) — grid-aligned
+    /// windows are favoured exactly as the engine runs them. Empty =
+    /// every window verifies exactly (no fusion padding), the pre-fusion
+    /// pricing.
+    pub fused_windows: Vec<usize>,
 }
 
 /// Paper's w_max prune: beyond this window the drafter outpaces any
@@ -76,9 +84,12 @@ pub fn search(m: &CostModel, input: &PlanInput) -> Option<Plan> {
             // line 5: prune arbitrarily large windows
             let wm = w_max(m, &input.method, g_v).min(input.max_window);
             for w in 1..=wm {
-                let tgs = tgs_decoupled(m, &input.method, g_v, w, b, input.accept_p)
-                    // drafter replica count is implied; model per-replica TGS
-                    ;
+                // per-replica TGS (drafter replica count is implied),
+                // priced as the fused engine actually runs the window:
+                // rounded up into the lowered grid, β once, padding waste
+                let w_step = step_up(&input.fused_windows, w);
+                let tgs =
+                    tgs_decoupled_fused(m, &input.method, g_v, w, w_step, b, input.accept_p);
                 let vanilla = tgs_vanilla(m, b);
                 let cand = Plan {
                     method: input.method.clone(),
@@ -113,6 +124,7 @@ mod tests {
             method: "draft_small".to_string(),
             max_window: 16,
             fixed_batch: None,
+            fused_windows: vec![],
         }
     }
 
@@ -151,6 +163,38 @@ mod tests {
     }
 
     #[test]
+    fn fused_grid_never_plans_worse_than_padded_offgrid() {
+        // Under the fused engine's lowered grid, any off-grid window the
+        // search might pick must still beat that window's padded TGS —
+        // i.e. the winner's priced TGS dominates every candidate at its
+        // own rounded step window (the plain no-grid search would compare
+        // unpadded TGS and could overvalue off-grid windows).
+        let m = CostModel::paper_32b();
+        let mut inp = input(8192, 0.85);
+        inp.fused_windows = vec![1, 3, 7];
+        let plan = search(&m, &inp).unwrap();
+        for w in 1..=inp.max_window {
+            for &g_v in &inp.verifier_configs {
+                let reps = inp.gpus / (1 + g_v);
+                if reps == 0 || w > w_max(&m, &inp.method, g_v) {
+                    continue;
+                }
+                let b = inp.global_batch.div_ceil(reps);
+                let t = tgs_decoupled_fused(
+                    &m,
+                    &inp.method,
+                    g_v,
+                    w,
+                    step_up(&inp.fused_windows, w),
+                    b,
+                    inp.accept_p,
+                );
+                assert!(plan.tgs >= t - 1e-12, "w={w} g_v={g_v}: {t} beats planned {}", plan.tgs);
+            }
+        }
+    }
+
+    #[test]
     fn w_max_prune_is_positive() {
         let m = CostModel::paper_32b();
         for method in ["draft_small", "draft_mid", "ngram"] {
@@ -170,6 +214,7 @@ mod tests {
                 method: ["draft_small", "draft_mid", "ngram"][g.usize_in(0, 3)].to_string(),
                 max_window: 1 + g.usize_in(0, 15),
                 fixed_batch: None,
+                fused_windows: if g.prob() < 0.5 { vec![] } else { vec![1, 3, 7] },
             };
             if let Some(p) = search(&m, &inp) {
                 prop_assert!(p.g_d >= 1 && p.g_d <= p.g_v, "g_d {} g_v {}", p.g_d, p.g_v);
@@ -186,7 +231,9 @@ mod tests {
                         let b = inp.global_batch.div_ceil(reps);
                         let wm = w_max(&m, &inp.method, g_v).min(inp.max_window);
                         for w in 1..=wm {
-                            let t = super::tgs_decoupled(&m, &inp.method, g_v, w, b, inp.accept_p);
+                            let ws = step_up(&inp.fused_windows, w);
+                            let t =
+                                tgs_decoupled_fused(&m, &inp.method, g_v, w, ws, b, inp.accept_p);
                             prop_assert!(
                                 t <= p.tgs + 1e-12,
                                 "missed better plan g_v={g_v} g_d={g_d} w={w}: {t} > {}",

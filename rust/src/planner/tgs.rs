@@ -79,6 +79,69 @@ pub fn tgs_vanilla(m: &CostModel, b: usize) -> f64 {
     1.0 / m.decode(b)
 }
 
+/// Smallest grid window ≥ `w` (ascending `grid`), or `w` itself when the
+/// grid is empty or `w` exceeds it — the planner-side mirror of the fused
+/// engine's round-up of an arbitrary window to the next lowered step size.
+pub fn step_up(grid: &[usize], w: usize) -> usize {
+    grid.iter().copied().find(|&g| g >= w).unwrap_or(w)
+}
+
+/// Iteration latency of one coupled round under the FUSED discipline:
+/// draft serially, then verify in a step padded up to the shared window
+/// `w_step` (≥ `w`; β once, padding-waste priced by
+/// [`CostModel::verify_fused`]). `w_step == w` degenerates to
+/// [`il_coupled`] exactly.
+pub fn il_coupled_fused(
+    m: &CostModel,
+    method: &str,
+    g_v: usize,
+    w: usize,
+    w_step: usize,
+    b: usize,
+) -> f64 {
+    w as f64 * m.draft(method, b) + m.verify_fused(g_v, w as f64, w_step.max(w), b)
+}
+
+/// Decoupled analogue of [`il_coupled_fused`]: drafter overlaps the fused
+/// verify step.
+pub fn il_decoupled_fused(
+    m: &CostModel,
+    method: &str,
+    g_v: usize,
+    w: usize,
+    w_step: usize,
+    b: usize,
+) -> f64 {
+    let draft = w as f64 * m.draft(method, b);
+    draft.max(m.verify_fused(g_v, w as f64, w_step.max(w), b))
+}
+
+/// TGS for coupled speculation under the fused ragged verify discipline.
+pub fn tgs_coupled_fused(
+    m: &CostModel,
+    method: &str,
+    g_v: usize,
+    w: usize,
+    w_step: usize,
+    b: usize,
+    p: f64,
+) -> f64 {
+    tau_coupled(w, p) / il_coupled_fused(m, method, g_v, w, w_step, b)
+}
+
+/// TGS for decoupled speculation under the fused ragged verify discipline.
+pub fn tgs_decoupled_fused(
+    m: &CostModel,
+    method: &str,
+    g_v: usize,
+    w: usize,
+    w_step: usize,
+    b: usize,
+    p: f64,
+) -> f64 {
+    tau_decoupled(w, p) / il_decoupled_fused(m, method, g_v, w, w_step, b)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -127,6 +190,34 @@ mod tests {
             prop_assert!(tc >= td, "coupled tau {tc} < decoupled {td}");
             Ok(())
         });
+    }
+
+    #[test]
+    fn step_up_rounds_into_the_grid() {
+        assert_eq!(step_up(&[1, 3, 7], 2), 3);
+        assert_eq!(step_up(&[1, 3, 7], 3), 3);
+        assert_eq!(step_up(&[1, 3, 7], 4), 7);
+        assert_eq!(step_up(&[1, 3, 7], 9), 9, "beyond the grid: identity");
+        assert_eq!(step_up(&[], 4), 4, "empty grid: identity");
+    }
+
+    #[test]
+    fn fused_tgs_degenerates_without_padding() {
+        let m = crate::planner::CostModel::paper_32b();
+        let (p, b) = (0.8, 64);
+        for w in 1..=6 {
+            let c = tgs_coupled(&m, "draft_small", 4, w, b, p);
+            let cf = tgs_coupled_fused(&m, "draft_small", 4, w, w, b, p);
+            assert!((c - cf).abs() < 1e-9 * c, "coupled w={w}: {c} vs {cf}");
+            let d = tgs_decoupled(&m, "draft_small", 4, w, b, p);
+            let df = tgs_decoupled_fused(&m, "draft_small", 4, w, w, b, p);
+            assert!((d - df).abs() < 1e-9 * d, "decoupled w={w}: {d} vs {df}");
+        }
+        // rounding up into a larger step window costs padding waste
+        assert!(
+            tgs_coupled_fused(&m, "draft_small", 4, 2, 4, b, p)
+                < tgs_coupled_fused(&m, "draft_small", 4, 2, 2, b, p)
+        );
     }
 
     #[test]

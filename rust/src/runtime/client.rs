@@ -37,13 +37,48 @@ pub struct StepOut {
     pub batch: usize,
     pub window: usize,
     pub vocab: usize,
+    /// Per-row REAL window under a fused ragged step
+    /// ([`Runtime::step_ragged`]): positions `widths[i]..window` of row `i`
+    /// were computed from padding inputs and are garbage. `None` = uniform
+    /// step, every position of every row is real.
+    pub widths: Option<Vec<usize>>,
 }
 
 impl StepOut {
-    /// Logits for batch slot `i`, window position `j`.
+    /// Logits for batch slot `i`, window position `j` — RAW positional
+    /// access with no ragged-width check; reads into a fused step's padded
+    /// tail return garbage. Use [`StepOut::logits_at`] anywhere a ragged
+    /// step can flow.
     pub fn at(&self, i: usize, j: usize) -> &[f32] {
         let off = (i * self.window + j) * self.vocab;
         &self.logits[off..off + self.vocab]
+    }
+
+    /// Real window of row `i`: the number of leading positions computed
+    /// from real tokens (0 for a padding row of a ragged step; `window`
+    /// for every row of a uniform step).
+    pub fn row_window(&self, i: usize) -> usize {
+        match &self.widths {
+            Some(ws) => ws.get(i).copied().unwrap_or(0),
+            None => self.window,
+        }
+    }
+
+    /// Ragged-safe logits access: errors instead of silently handing back
+    /// padded garbage when `j` lies outside row `i`'s real window.
+    pub fn logits_at(&self, i: usize, j: usize) -> Result<&[f32]> {
+        if i >= self.batch {
+            bail!("logits row {i} out of range (batch {})", self.batch);
+        }
+        let w = self.row_window(i);
+        if j >= w {
+            bail!(
+                "logits position {j} outside row {i}'s real window {w} \
+                 (step window {}): padded positions hold garbage",
+                self.window
+            );
+        }
+        Ok(self.at(i, j))
     }
 }
 
@@ -201,17 +236,61 @@ impl Runtime {
             cache.v.fill(0.0);
             cache.lens.fill(0);
         }
-        self.apply_kv(cache, k, v, p)?;
+        self.apply_kv(cache, k, v, p, None)?;
         for l in cache.lens.iter_mut() {
             *l = p as i32;
         }
-        Ok(StepOut { logits, batch: b, window: 1, vocab: info.vocab })
+        Ok(StepOut { logits, batch: b, window: 1, vocab: info.vocab, widths: None })
     }
 
     /// Run one decode/verify step. `tokens` is `[b, w]` row-major; the
     /// cache's `lens` field supplies per-slot positions and is advanced by
     /// the caller (engine) according to how many tokens were accepted.
     pub fn step(&self, model: &str, tokens: &[i32], window: usize, cache: &mut KvCache) -> Result<StepOut> {
+        self.step_inner(model, tokens, window, cache, None)
+    }
+
+    /// Run one **fused ragged** verify step: the executable runs at the
+    /// uniform `window` (short rows padded in `tokens`), but only the
+    /// leading `widths[i]` positions of row `i` carry real tokens.
+    /// Under [`KvProtocol::Window`] the KV hand-back is scattered per-row
+    /// ([`KvCache::scatter_window_rows`]) so a short row's cache never
+    /// receives its padded tail; under the legacy `Full` protocol the
+    /// whole cache comes back as always (padded entries land at
+    /// `lens..lens+window` and are overwritten by the row's next step,
+    /// exactly like the grouped discipline's off-group rows). The returned
+    /// [`StepOut`] carries the widths, so [`StepOut::logits_at`] refuses
+    /// reads into any row's padded tail.
+    ///
+    /// `widths` is taken by value and handed back inside the returned
+    /// [`StepOut`] — callers on the decode hot path reclaim the buffer
+    /// after reading the outputs (`out.widths.take()`) so the fused step
+    /// allocates nothing per call (PERF.md §Memory discipline).
+    pub fn step_ragged(
+        &self,
+        model: &str,
+        tokens: &[i32],
+        window: usize,
+        cache: &mut KvCache,
+        widths: Vec<usize>,
+    ) -> Result<StepOut> {
+        if widths.len() != cache.batch {
+            bail!("ragged widths len {} != batch {}", widths.len(), cache.batch);
+        }
+        if let Some((slot, &wi)) = widths.iter().enumerate().find(|(_, &wi)| wi > window) {
+            bail!("slot {slot}: ragged width {wi} exceeds step window {window}");
+        }
+        self.step_inner(model, tokens, window, cache, Some(widths))
+    }
+
+    fn step_inner(
+        &self,
+        model: &str,
+        tokens: &[i32],
+        window: usize,
+        cache: &mut KvCache,
+        widths: Option<Vec<usize>>,
+    ) -> Result<StepOut> {
         let info = self.manifest.model(model)?;
         let b = cache.batch;
         if tokens.len() != b * window {
@@ -247,8 +326,8 @@ impl Runtime {
         args.push(&v_lit);
 
         let (logits, k, v) = self.run3(&exe, &args, info, b, window)?;
-        self.apply_kv(cache, k, v, window)?;
-        Ok(StepOut { logits, batch: b, window, vocab: info.vocab })
+        self.apply_kv(cache, k, v, window, widths.as_deref())?;
+        Ok(StepOut { logits, batch: b, window, vocab: info.vocab, widths })
     }
 
     /// Fold an execution's KV output back into the host cache according to
@@ -257,11 +336,21 @@ impl Runtime {
     /// `Window`: `k`/`v` are the `[L, b, w, h, dh]` entries written this
     /// call; scatter them at each slot's `lens..lens+w` (two contiguous
     /// `copy_from_slice` runs per (layer, slot) — see
-    /// [`KvCache::scatter_window`]). `Full`: `k`/`v` are whole caches and
-    /// simply replace the host copies (a move, but the device→host
-    /// transfer behind it was O(max_seq) per step — the cost this protocol
-    /// retires).
-    fn apply_kv(&self, cache: &mut KvCache, k: Vec<f32>, v: Vec<f32>, window: usize) -> Result<()> {
+    /// [`KvCache::scatter_window`]), or only the leading `widths[i]`
+    /// positions per row for a ragged step
+    /// ([`KvCache::scatter_window_rows`]). `Full`: `k`/`v` are whole
+    /// caches and simply replace the host copies (a move, but the
+    /// device→host transfer behind it was O(max_seq) per step — the cost
+    /// this protocol retires); ragged widths are moot there, the padded
+    /// entries ride along and are overwritten by each row's next step.
+    fn apply_kv(
+        &self,
+        cache: &mut KvCache,
+        k: Vec<f32>,
+        v: Vec<f32>,
+        window: usize,
+        widths: Option<&[usize]>,
+    ) -> Result<()> {
         let t0 = Instant::now();
         match self.manifest.kv_protocol {
             KvProtocol::Full => {
@@ -276,7 +365,10 @@ impl Runtime {
                 cache.k = k;
                 cache.v = v;
             }
-            KvProtocol::Window => cache.scatter_window(&k, &v, window)?,
+            KvProtocol::Window => match widths {
+                Some(ws) => cache.scatter_window_rows(&k, &v, window, ws)?,
+                None => cache.scatter_window(&k, &v, window)?,
+            },
         }
         self.stats.borrow_mut().host_copy_s += t0.elapsed().as_secs_f64();
         Ok(())
@@ -323,5 +415,50 @@ impl Runtime {
             bail!("logits len {} != expected {}", logits.len(), want);
         }
         Ok((logits, kk, vv))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A fused step's StepOut: b=3, W=4, vocab=2, ragged widths [3, 1, 0]
+    /// (slot 0 verified a 2-draft window, slot 1 decoded vanilla, slot 2
+    /// is padding). Positions >= widths[i] were computed from pad inputs.
+    fn ragged_out() -> StepOut {
+        StepOut {
+            logits: (0..3 * 4 * 2).map(|x| x as f32).collect(),
+            batch: 3,
+            window: 4,
+            vocab: 2,
+            widths: Some(vec![3, 1, 0]),
+        }
+    }
+
+    #[test]
+    fn logits_at_refuses_padded_tail() {
+        // REGRESSION: under the fused ragged step, reading a window
+        // position past a row's real width used to silently return the
+        // padded garbage `at()` points at; it must be an error.
+        let out = ragged_out();
+        assert_eq!(out.logits_at(0, 2).unwrap(), out.at(0, 2));
+        assert!(out.logits_at(0, 3).is_err(), "padded tail read must error");
+        assert_eq!(out.logits_at(1, 0).unwrap(), out.at(1, 0));
+        assert!(out.logits_at(1, 1).is_err());
+        assert!(out.logits_at(2, 0).is_err(), "padding row has no real positions");
+        assert!(out.logits_at(9, 0).is_err(), "row out of range");
+    }
+
+    #[test]
+    fn uniform_step_exposes_full_window() {
+        let mut out = ragged_out();
+        out.widths = None;
+        for i in 0..3 {
+            for j in 0..4 {
+                assert_eq!(out.logits_at(i, j).unwrap(), out.at(i, j));
+            }
+        }
+        assert_eq!(out.row_window(1), 4);
+        assert_eq!(ragged_out().row_window(1), 1);
     }
 }

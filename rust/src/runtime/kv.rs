@@ -165,6 +165,71 @@ impl KvCache {
         Ok(())
     }
 
+    /// Per-row-width variant of [`scatter_window`] for **fused ragged**
+    /// verify steps (one target step per round over slots with mixed draft
+    /// windows): `k_win`/`v_win` are still row-major `[L, b, w, h, dh]` at
+    /// the uniform step window `w` the executable ran at, but only the
+    /// leading `widths[slot]` positions of each row are scattered — a
+    /// short row's padded tail never touches its cache, and zero-width
+    /// rows (free slots riding the fused step as padding) are skipped
+    /// entirely. Same guard discipline as [`clear_row`]/[`insert_row`]:
+    /// malformed geometry or `lens[slot] + widths[slot] > max_seq` is an
+    /// error, never a panic.
+    ///
+    /// `scatter_window(k, v, w)` ≡ `scatter_window_rows(k, v, w, [w; b])`
+    /// byte-for-byte (pinned by `scatter_window_rows_equals_uniform`).
+    ///
+    /// [`scatter_window`]: KvCache::scatter_window
+    /// [`clear_row`]: KvCache::clear_row
+    /// [`insert_row`]: KvCache::insert_row
+    pub fn scatter_window_rows(
+        &mut self,
+        k_win: &[f32],
+        v_win: &[f32],
+        w: usize,
+        widths: &[usize],
+    ) -> Result<()> {
+        let hd = self.n_heads * self.d_head;
+        let ws = w * hd;
+        if k_win.len() != self.n_layers * self.batch * ws || v_win.len() != k_win.len() {
+            bail!(
+                "kv window len {}/{} != L*b*w*h*dh = {}",
+                k_win.len(),
+                v_win.len(),
+                self.n_layers * self.batch * ws
+            );
+        }
+        if widths.len() != self.batch {
+            bail!("widths len {} != batch {}", widths.len(), self.batch);
+        }
+        for (slot, (&wi, &l)) in widths.iter().zip(self.lens.iter()).enumerate() {
+            if wi == 0 {
+                continue; // padding row: nothing scattered, lens untouched
+            }
+            if wi > w {
+                bail!("slot {slot}: row width {wi} exceeds step window {w}");
+            }
+            if l < 0 || (l as usize) + wi > self.max_seq {
+                bail!("slot {slot}: scatter at {l}+{wi} exceeds max_seq {}", self.max_seq);
+            }
+        }
+        let rs = self.row_stride();
+        let ls = self.layer_stride();
+        for l in 0..self.n_layers {
+            for slot in 0..self.batch {
+                let n = widths[slot] * hd;
+                if n == 0 {
+                    continue;
+                }
+                let src = (l * self.batch + slot) * ws;
+                let dst = l * ls + slot * rs + self.lens[slot] as usize * hd;
+                self.k[dst..dst + n].copy_from_slice(&k_win[src..src + n]);
+                self.v[dst..dst + n].copy_from_slice(&v_win[src..src + n]);
+            }
+        }
+        Ok(())
+    }
+
     /// Clear one slot (request finished/retired; the slot becomes free
     /// padding until the next admission reuses it).
     pub fn clear_row(&mut self, slot: usize) -> Result<()> {
@@ -384,6 +449,83 @@ mod tests {
         inc.scatter_window(&k_win, &v_win, w).unwrap();
         assert_eq!(inc.k, full.k);
         assert_eq!(inc.v, full.v);
+    }
+
+    #[test]
+    fn scatter_window_rows_equals_uniform() {
+        // widths all = w must be byte-identical to the uniform scatter
+        let mut a = filled_cache(); // lens [1, 2, 3], S=4 -> w=1 fits all
+        let mut b = a.clone();
+        let hd = 2;
+        let n = 2 * 3 * hd; // L * b * w*h*dh, w=1
+        let k_win: Vec<f32> = (0..n).map(|i| 500.0 + i as f32).collect();
+        let v_win: Vec<f32> = k_win.iter().map(|x| -x).collect();
+        a.scatter_window(&k_win, &v_win, 1).unwrap();
+        b.scatter_window_rows(&k_win, &v_win, 1, &[1, 1, 1]).unwrap();
+        assert_eq!(a.k, b.k);
+        assert_eq!(a.v, b.v);
+        assert_eq!(a.lens, b.lens);
+    }
+
+    #[test]
+    fn scatter_window_rows_short_rows_keep_their_tail() {
+        // ragged widths: slot 0 takes both positions, slot 1 one, slot 2
+        // none — the skipped tails/rows must stay byte-identical to the
+        // pre-scatter cache.
+        let mut c = KvCache::new(2, 3, 4, 1, 2);
+        for (i, x) in c.k.iter_mut().enumerate() {
+            *x = 0.25 * i as f32;
+        }
+        for (i, x) in c.v.iter_mut().enumerate() {
+            *x = -0.25 * i as f32;
+        }
+        c.lens = vec![0, 1, 2];
+        let pre = c.clone();
+        let hd = 2;
+        let ws = 2 * hd; // w=2
+        let n = 2 * 3 * ws;
+        let k_win: Vec<f32> = (0..n).map(|i| 9000.0 + i as f32).collect();
+        let v_win: Vec<f32> = k_win.iter().map(|x| -x).collect();
+        c.scatter_window_rows(&k_win, &v_win, 2, &[2, 1, 0]).unwrap();
+        let rs = 4 * hd;
+        let ls = 3 * rs;
+        for l in 0..2usize {
+            // slot 0: both positions written at lens 0
+            let src = (l * 3) * ws;
+            let dst = l * ls;
+            assert_eq!(&c.k[dst..dst + ws], &k_win[src..src + ws]);
+            // slot 1: exactly one position written at lens 1, tail kept
+            let src = (l * 3 + 1) * ws;
+            let dst = l * ls + rs + hd;
+            assert_eq!(&c.k[dst..dst + hd], &k_win[src..src + hd]);
+            assert_eq!(&c.k[dst + hd..dst + 2 * hd], &pre.k[dst + hd..dst + 2 * hd]);
+            // slot 2: zero-width row untouched
+            let dst = l * ls + 2 * rs;
+            assert_eq!(&c.k[dst..dst + rs], &pre.k[dst..dst + rs]);
+            assert_eq!(&c.v[dst..dst + rs], &pre.v[dst..dst + rs]);
+        }
+    }
+
+    #[test]
+    fn scatter_window_rows_guards() {
+        let mut c = KvCache::new(2, 3, 4, 1, 2);
+        c.lens = vec![3, 0, 0];
+        let win = vec![0.0f32; 2 * 3 * 2 * 2]; // w=2
+        // slot 0: 3 + 2 > max_seq 4 -> error
+        assert!(c.scatter_window_rows(&win, &win, 2, &[2, 1, 1]).is_err());
+        // zero width skips the over-full row entirely
+        assert!(c.scatter_window_rows(&win, &win, 2, &[0, 1, 1]).is_ok());
+        // width above the step window
+        assert!(c.scatter_window_rows(&win, &win, 2, &[0, 3, 0]).is_err());
+        // widths length mismatch
+        assert!(c.scatter_window_rows(&win, &win, 2, &[1, 1]).is_err());
+        // negative lens on a written row
+        c.lens = vec![0, -1, 0];
+        assert!(c.scatter_window_rows(&win, &win, 2, &[0, 1, 0]).is_err());
+        // ...but not on a skipped row
+        assert!(c.scatter_window_rows(&win, &win, 2, &[1, 0, 1]).is_ok());
+        // payload geometry mismatch
+        assert!(c.scatter_window_rows(&win[..4], &win, 2, &[0, 0, 0]).is_err());
     }
 
     #[test]

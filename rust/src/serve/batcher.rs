@@ -3,14 +3,19 @@
 //! Each [`Batcher::tick`] is one serving round:
 //!
 //! 1. **retire** finished requests (free their KV slots, record latency),
-//! 2. **admit** waiting requests from the [`AdmissionQueue`] into free
+//! 2. **replan** for the occupancy the pending admissions will produce
+//!    ([`Replanner`], bucket-granular): on a crossing, a grouped-verify
+//!    engine resets every live slot to the fresh common plan (β per plan
+//!    group), while the default fused engine leaves live slots' plans
+//!    standing — heterogeneity costs it nothing,
+//! 3. **admit** waiting requests from the [`AdmissionQueue`] into free
 //!    slots (prefill-join via `Worker::admit_with_plan` — the replanner's
-//!    ladder-selected method and window are **applied** to the new slot),
-//! 3. **replan** when the resulting occupancy crossed a bucket boundary
-//!    ([`Replanner`]): the fresh plan is applied to every live slot,
+//!    ladder-selected method and window are **applied** to the new slot,
+//!    so a burst that causes the crossing is admitted directly on the
+//!    crossing plan),
 //! 4. run one engine **round** over the live slots under their per-slot
-//!    plans (the engine groups them into one verify step per
-//!    `(method, window)`), and
+//!    plans (one fused ragged verify step — or one step per
+//!    `(method, window)` group on grouped engines), and
 //! 5. **reconfigure** (Algorithm 2, optional): every `period` rounds the
 //!    [`Reconfigurator`] re-derives window/mode for slots whose measured
 //!    acceptance fell below the live average and the new [`SlotPlan`]s are
@@ -32,7 +37,9 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::reconfig::{LiveSlot, Reconfigurator};
 use crate::drafter::DraftMethod;
-use crate::engine::{EngineReport, PlanMode, Request, SlotPlan, Worker};
+use crate::engine::{
+    same_group, EngineReport, PlanMode, Request, SlotPlan, VerifyDiscipline, Worker,
+};
 use crate::util::rng::position_rng;
 
 use super::metrics::ServeMetrics;
@@ -65,6 +72,14 @@ pub trait ServeEngine {
     fn slot_plan(&self, slot: usize) -> Option<SlotPlan>;
     /// Hot-swap the slot's plan (replanning / Algorithm 2).
     fn set_slot_plan(&mut self, slot: usize, plan: SlotPlan) -> Result<()>;
+    /// The verify discipline rounds run under. Fused engines pay the
+    /// verify intercept once per round whatever the plan mix, so the
+    /// serve loop lets heterogeneous per-slot plans stand at bucket
+    /// crossings; grouped engines get the pre-fusion reset-to-common-plan
+    /// behaviour (each extra plan group costs β again).
+    fn verify_discipline(&self) -> VerifyDiscipline {
+        VerifyDiscipline::Fused
+    }
 }
 
 impl ServeEngine for Worker<'_> {
@@ -98,6 +113,10 @@ impl ServeEngine for Worker<'_> {
 
     fn set_slot_plan(&mut self, slot: usize, plan: SlotPlan) -> Result<()> {
         Worker::set_plan(self, slot, plan)
+    }
+
+    fn verify_discipline(&self) -> VerifyDiscipline {
+        self.cfg.verify
     }
 }
 
@@ -146,8 +165,13 @@ pub struct Batcher<E: ServeEngine> {
 impl<E: ServeEngine> Batcher<E> {
     pub fn new(engine: E, queue_cap: usize, replan: Replanner, spec: bool) -> Self {
         let cap = engine.capacity();
+        // The engine's verify discipline is authoritative: align the
+        // replanner here (and the reconfigurator in `with_reconfig`) so
+        // a grouped engine always gets the snap-down planning its
+        // β-per-group cost model needs, without callers having to
+        // repeat the discipline in three places.
+        let replan = replan.for_discipline(engine.verify_discipline());
         Batcher {
-            engine,
             queue: AdmissionQueue::new(queue_cap),
             slots: SlotAllocator::new(cap),
             replan,
@@ -157,12 +181,14 @@ impl<E: ServeEngine> Batcher<E> {
             arrival_s: vec![0.0; cap],
             finished: Vec::new(),
             spec,
+            engine,
         }
     }
 
-    /// Enable request-level reconfiguration (Algorithm 2).
+    /// Enable request-level reconfiguration (Algorithm 2), aligned to the
+    /// engine's verify discipline.
     pub fn with_reconfig(mut self, rc: Reconfigurator) -> Self {
-        self.reconfig = Some(rc);
+        self.reconfig = Some(rc.for_discipline(self.engine.verify_discipline()));
         self
     }
 
@@ -203,7 +229,7 @@ impl<E: ServeEngine> Batcher<E> {
         }
     }
 
-    /// One serving round: retire → admit → replan → decode → reconfigure.
+    /// One serving round: retire → replan → admit → decode → reconfigure.
     pub fn tick(&mut self, now_s: f64) -> Result<TickReport> {
         let mut tr = TickReport::default();
 
@@ -219,8 +245,13 @@ impl<E: ServeEngine> Batcher<E> {
             }
         }
 
-        // 2. prefill-join waiting requests into free slots, each under the
-        //    replanner's currently-applied plan
+        // 2. replan for the occupancy the admissions are about to
+        //    produce, THEN prefill-join waiting requests under that plan:
+        //    a burst that crosses a bucket is admitted directly on the
+        //    crossing plan (no post-hoc rewrite, no drafter rebuild).
+        let free = self.engine.capacity() - self.slots.occupancy();
+        let predicted = self.slots.occupancy() + self.queue.len().min(free);
+        let mut crossed = predicted > 0 && self.replan.on_occupancy(predicted).is_some();
         let admission_plan = self.current_plan();
         while !self.slots.is_full() {
             let Some(q) = self.queue.pop() else { break };
@@ -247,18 +278,23 @@ impl<E: ServeEngine> Batcher<E> {
             tr.admitted += 1;
         }
 
-        // 3. concurrency-aware replanning at bucket granularity: a bucket
-        //    crossing re-derives (method, window) for the new occupancy
-        //    and applies it to every live slot; Algorithm 2 then
-        //    re-specialises individual slots from that common baseline.
+        // 3. the actual occupancy differs from the prediction only when
+        //    queued requests were rejected as invalid; correct the bucket
+        //    if so (same hysteresis — on_occupancy no-ops within a
+        //    bucket). On any crossing this tick, a GROUPED engine resets
+        //    every live slot ONCE to the final plan — heterogeneous plans
+        //    each pay β there, so convergence is worth the rewrite (a
+        //    no-op for slots already on it); the default FUSED engine
+        //    leaves live slots' Algorithm-2-specialised plans standing.
         let occ = self.slots.occupancy();
         if occ == 0 {
             return Ok(tr);
         }
-        if self.replan.on_occupancy(occ).is_some() {
+        crossed |= self.replan.on_occupancy(occ).is_some();
+        if crossed {
             self.metrics.replans += 1;
             tr.replanned = true;
-            if self.spec {
+            if self.spec && self.engine.verify_discipline() == VerifyDiscipline::Grouped {
                 let plan = self.current_plan();
                 for slot in 0..self.engine.capacity() {
                     if self.slots.is_live(slot) {
@@ -382,6 +418,11 @@ pub struct SyntheticEngine {
     plans: Vec<SlotPlan>,
     seed: u64,
     rounds: u64,
+    /// Modelled verify discipline: token output is identical, but
+    /// `target_steps` counts what the real engine would launch — 1 per
+    /// round when fused, one per plan group (plus a vanilla step) when
+    /// grouped — so benches can A/B the step count hermetically.
+    verify: VerifyDiscipline,
 }
 
 impl SyntheticEngine {
@@ -392,6 +433,37 @@ impl SyntheticEngine {
             plans: (0..capacity).map(|_| SlotPlan::vanilla()).collect(),
             seed,
             rounds: 0,
+            verify: VerifyDiscipline::Fused,
+        }
+    }
+
+    /// Model a grouped-verify engine instead (A/B step accounting).
+    pub fn with_discipline(mut self, d: VerifyDiscipline) -> Self {
+        self.verify = d;
+        self
+    }
+
+    /// Target steps the modelled engine launches for the CURRENT active
+    /// plan mix: fused = 1; grouped = one per `(method, window)` group
+    /// plus one shared vanilla decode step.
+    fn steps_for_round(&self) -> u64 {
+        let live: Vec<usize> = (0..self.slots.len())
+            .filter(|&i| self.slots[i].as_ref().map(|r| !r.done).unwrap_or(false))
+            .collect();
+        if live.is_empty() {
+            return 0;
+        }
+        match self.verify {
+            VerifyDiscipline::Fused => 1,
+            VerifyDiscipline::Grouped => {
+                let mut reps: Vec<usize> = Vec::new();
+                for &i in &live {
+                    if !reps.iter().any(|&r| same_group(&self.plans[r], &self.plans[i])) {
+                        reps.push(i);
+                    }
+                }
+                reps.len() as u64
+            }
         }
     }
 
@@ -433,6 +505,7 @@ impl ServeEngine for SyntheticEngine {
 
     fn round(&mut self, rep: &mut EngineReport) -> Result<usize> {
         self.rounds += 1;
+        rep.target_steps += self.steps_for_round();
         let mut active = 0usize;
         for i in 0..self.slots.len() {
             let Some(r) = &mut self.slots[i] else { continue };
@@ -472,7 +545,6 @@ impl ServeEngine for SyntheticEngine {
             }
         }
         if active > 0 {
-            rep.target_steps += 1;
             rep.iterations += 1;
         }
         Ok(active)
@@ -496,6 +568,10 @@ impl ServeEngine for SyntheticEngine {
         }
         self.plans[slot] = plan;
         Ok(())
+    }
+
+    fn verify_discipline(&self) -> VerifyDiscipline {
+        self.verify
     }
 }
 
@@ -582,6 +658,87 @@ mod tests {
             assert_eq!(applied.window, planned.window, "window must be applied");
         } else {
             assert!(applied.is_vanilla());
+        }
+    }
+
+    #[test]
+    fn synthetic_step_accounting_is_discipline_aware() {
+        // 3 live slots on distinct plans (two spec groups + vanilla): a
+        // grouped round launches 3 target steps, a fused round exactly 1.
+        let mk = |d: VerifyDiscipline| {
+            let mut e = SyntheticEngine::new(4, 3).with_discipline(d);
+            e.admit(0, req(0, 8), SlotPlan::coupled(DraftMethod::Sam, 2)).unwrap();
+            e.admit(1, req(1, 8), SlotPlan::decoupled(DraftMethod::Ngram, 4)).unwrap();
+            e.admit(2, req(2, 8), SlotPlan::vanilla()).unwrap();
+            e
+        };
+        let mut rep = EngineReport::default();
+        mk(VerifyDiscipline::Grouped).round(&mut rep).unwrap();
+        assert_eq!(rep.target_steps, 3, "grouped: G spec groups + vanilla");
+        let mut rep = EngineReport::default();
+        mk(VerifyDiscipline::Fused).round(&mut rep).unwrap();
+        assert_eq!(rep.target_steps, 1, "fused: one step per round");
+    }
+
+    #[test]
+    fn fused_bucket_crossings_keep_specialised_plans() {
+        // Specialise slot 0's plan by hand, then push occupancy across a
+        // bucket boundary. The fused serve loop must leave the special
+        // plan in place; the grouped loop must reset it to the common
+        // replanner plan.
+        for d in [VerifyDiscipline::Fused, VerifyDiscipline::Grouped] {
+            let mut b = Batcher::new(
+                SyntheticEngine::new(4, 11).with_discipline(d),
+                16,
+                replanner(),
+                true,
+            );
+            b.enqueue(req(0, 40), Priority::Batch, 0.0);
+            b.tick(0.0).unwrap();
+            let special = SlotPlan::coupled(DraftMethod::Sam, 5);
+            b.engine.set_slot_plan(0, special.clone()).unwrap();
+            for i in 1..4u64 {
+                b.enqueue(req(i, 40), Priority::Batch, 0.1);
+            }
+            let tr = b.tick(0.1).unwrap();
+            assert!(tr.replanned, "occupancy 1 -> 4 must cross a bucket");
+            let now = b.engine.slot_plan(0).unwrap();
+            match d {
+                VerifyDiscipline::Fused => assert_eq!(
+                    now, special,
+                    "fused crossing must not herd the specialised slot"
+                ),
+                VerifyDiscipline::Grouped => assert_ne!(
+                    now, special,
+                    "grouped crossing must reset to the common plan"
+                ),
+            }
+        }
+    }
+
+    #[test]
+    fn burst_admissions_get_the_crossing_plan() {
+        // A burst from idle crosses a replan bucket in the same tick that
+        // admits it: replanning runs BEFORE the admissions (on the
+        // occupancy they are about to produce), so every burst slot must
+        // come out of the tick on the plan its own occupancy implies —
+        // never the stale pre-burst plan.
+        let mut b = mk_batcher(4, 16);
+        for i in 0..4u64 {
+            b.enqueue(req(i, 40), Priority::Batch, 0.0);
+        }
+        let tr = b.tick(0.0).unwrap();
+        assert_eq!(tr.admitted, 4);
+        assert!(tr.replanned, "occupancy 0 -> 4 must establish the bucket-4 plan");
+        let want = b.replan.plan.clone();
+        for slot in 0..4usize {
+            let p = b.engine().slot_plan(slot).unwrap();
+            if want.window > 0 {
+                assert_eq!(p.window, want.window, "slot {slot} kept a stale window");
+                assert_eq!(p.method.label(), want.method, "slot {slot} kept a stale method");
+            } else {
+                assert!(p.is_vanilla(), "slot {slot} should run vanilla at this occupancy");
+            }
         }
     }
 

@@ -19,6 +19,7 @@
 //! catch-up pass, not a batch restart). Algorithm 2's reconfigurator then
 //! re-specialises individual slots from that common baseline.
 
+use crate::engine::VerifyDiscipline;
 use crate::ladder::Ladder;
 use crate::planner::costmodel::CostModel;
 use crate::planner::plan::{search, PlanInput};
@@ -52,6 +53,12 @@ pub struct Replanner {
     /// minus the bonus position), ascending.
     allowed_windows: Vec<usize>,
     max_window: usize,
+    /// Verify discipline of the engine the plan lands on: fused engines
+    /// run any window up to the grid's maximum (rounding up at verify
+    /// time, priced by the search); grouped engines get the searched
+    /// window snapped DOWN onto the grid so the common plan sits on a
+    /// group Algorithm 2's own snapping can coalesce stragglers into.
+    discipline: VerifyDiscipline,
     current: Option<usize>,
     pub plan: ServePlan,
 }
@@ -86,6 +93,7 @@ impl Replanner {
             buckets,
             allowed_windows,
             max_window: max_window.max(1),
+            discipline: VerifyDiscipline::Fused,
             current: None,
             plan: ServePlan {
                 method: String::new(),
@@ -98,6 +106,22 @@ impl Replanner {
         // on_occupancy call establishes the real bucket)
         r.plan = r.plan_for(r.buckets[0]);
         r
+    }
+
+    /// Plan for a grouped-verify engine (`--grouped-verify` A/B): the
+    /// applied window snaps down onto the verifiable grid instead of
+    /// running at the search's exact argmax. A no-op when the discipline
+    /// is unchanged (the common case — `Batcher::new` always aligns the
+    /// replanner to its engine), so established bucket state and the
+    /// seeded plan are kept.
+    pub fn for_discipline(mut self, d: VerifyDiscipline) -> Self {
+        if d == self.discipline {
+            return self;
+        }
+        self.discipline = d;
+        self.current = None;
+        self.plan = self.plan_for(self.buckets[0]);
+        self
     }
 
     /// Replanner wired to a lowered artifact set: occupancy buckets from
@@ -167,6 +191,15 @@ impl Replanner {
         let sel = ladder.select_initial();
         let method = sel.method.clone();
         let accept_p = sel.profiled_p;
+        // Enumerate only runnable windows: above the verifiable grid
+        // `step_up` has no step size to round into, so a larger candidate
+        // would be priced with NO padding waste — an optimistic phantom
+        // that could displace the fairly-priced argmax before the clamp
+        // below (same cap as `Reconfigurator::on_round`).
+        let max_window = match self.allowed_windows.last() {
+            Some(&m) => self.max_window.min(m),
+            None => self.max_window,
+        };
         let plan = search(
             &self.cost,
             &PlanInput {
@@ -176,18 +209,32 @@ impl Replanner {
                 verifier_configs: vec![self.cost.g_ref],
                 accept_p,
                 method: method.clone(),
-                max_window: self.max_window,
+                max_window,
                 fixed_batch: Some(b),
+                // price candidate windows as the fused engine runs them:
+                // rounded up into the verifiable grid, padding-waste term
+                fused_windows: self.allowed_windows.clone(),
             },
         );
         let (window, speedup) = match plan {
-            // clamp to a window the lowered executables can verify; when
-            // even the smallest verifiable window exceeds the plan, vanilla
-            // decoding is closer to the planner's intent than over-drafting
-            Some(p) => (
-                self.allowed_windows.iter().copied().filter(|&w| w <= p.w).max().unwrap_or(0),
-                p.speedup,
-            ),
+            Some(p) => match self.allowed_windows.last() {
+                // fused engine: any window up to the grid's maximum runs
+                // (rounding up at verify time), and the search priced
+                // exactly that padding (fused_windows) — apply the argmax
+                // as chosen instead of snapping it back onto the grid
+                Some(&max) if self.discipline == VerifyDiscipline::Fused => {
+                    (p.w.min(max), p.speedup)
+                }
+                // grouped engine: every distinct window is a β-paying
+                // verify step, so the common plan snaps DOWN onto the
+                // grid (when even the smallest grid window exceeds the
+                // plan, vanilla is closer to the planner's intent)
+                Some(_) => (
+                    self.allowed_windows.iter().copied().filter(|&w| w <= p.w).max().unwrap_or(0),
+                    p.speedup,
+                ),
+                None => (0, 1.0),
+            },
             // Algorithm 1 found no speculative plan beating vanilla
             // ("w = 0 encoded as None"): run plain decode rounds.
             None => (0, 1.0),
@@ -235,11 +282,13 @@ mod tests {
         let mut r = mk();
         for occ in [1usize, 3, 7, 12, 30, 100] {
             r.on_occupancy(occ);
-            // 0 = vanilla (no profitable speculative plan); otherwise the
-            // window must be one the lowered executables can verify
+            // 0 = vanilla (no profitable speculative plan); otherwise any
+            // window up to the largest verifiable draft window runs (the
+            // fused engine rounds intermediate windows up to the next
+            // lowered step size, and the search priced that padding)
             assert!(
-                [0usize, 1, 3, 7].contains(&r.plan.window),
-                "occ {occ}: window {} not lowered",
+                r.plan.window <= 7,
+                "occ {occ}: window {} beyond the verifiable grid",
                 r.plan.window
             );
             assert!(r.plan.bucket >= occ.min(32));
@@ -266,6 +315,42 @@ mod tests {
     }
 
     #[test]
+    fn grouped_discipline_snaps_the_common_plan_onto_the_grid() {
+        let mut r = mk().for_discipline(VerifyDiscipline::Grouped);
+        for occ in [1usize, 3, 7, 12, 30] {
+            r.on_occupancy(occ);
+            assert!(
+                [0usize, 1, 3, 7].contains(&r.plan.window),
+                "occ {occ}: grouped window {} off the lowered grid",
+                r.plan.window
+            );
+        }
+    }
+
+    #[test]
+    fn search_never_picks_a_phantom_above_grid_window() {
+        // A small verifiable grid with a large max_window: candidates
+        // above the grid would be priced with no padding waste (step_up
+        // identity) — the search domain must be capped so the applied
+        // window and its modelled speedup belong to a runnable plan.
+        let mut r = Replanner::new(
+            CostModel::paper_32b(),
+            profiled(),
+            vec![1, 4, 8],
+            vec![1, 3],
+            7,
+        );
+        for occ in [1usize, 2, 5, 9] {
+            r.on_occupancy(occ);
+            assert!(
+                r.plan.window <= 3,
+                "occ {occ}: window {} beyond the verifiable grid",
+                r.plan.window
+            );
+        }
+    }
+
+    #[test]
     fn no_verifiable_window_means_vanilla() {
         // artifacts lowering only the vanilla window (allowed = []) must
         // plan window 0 — plain decode rounds — never a window the engine
@@ -280,7 +365,7 @@ mod tests {
     fn synthetic_replanner_plans() {
         let mut r = Replanner::synthetic();
         r.on_occupancy(4);
-        assert!([0usize, 1, 3, 7].contains(&r.plan.window));
+        assert!(r.plan.window <= 7);
         assert!(!r.plan.method.is_empty());
     }
 }

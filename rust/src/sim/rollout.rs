@@ -201,6 +201,7 @@ pub fn simulate_step(cfg: &TraceConfig, policy: &Policy, step: usize, seed: u64)
                     method: sel.clone(),
                     max_window: 8,
                     fixed_batch: Some(cfg.per_worker_batch()),
+                    fused_windows: vec![],
                 },
             );
             let mut w = if *decoupled { plan.as_ref().map(|p| p.w).unwrap_or(4).clamp(1, 8) } else { 4 };

@@ -13,7 +13,7 @@ use std::path::Path;
 use specactor::drafter::DraftMethod;
 use specactor::engine::{
     rollout_decoupled, rollout_decoupled_planned, EngineConfig, EngineReport, Request, SlotPlan,
-    Worker,
+    VerifyDiscipline, Worker,
 };
 use specactor::runtime::Runtime;
 
@@ -176,6 +176,69 @@ fn decoupled_mixed_plans_equal_vanilla() {
     let outs: Vec<Vec<i32>> = reqs.iter().map(|r| r.seq[r.prompt.len()..].to_vec()).collect();
     assert_eq!(outs, want, "mixed-plan decoupled rollout diverged from vanilla");
     assert!(rep.total_generated >= 3 * 16);
+}
+
+/// The fused-verify acceptance criterion: a round with G speculative plan
+/// groups issues exactly ONE target step under the fused discipline where
+/// the grouped engine issues G + 1 — and both drain to token-identical
+/// output on the same mixed-plan batch (coupled w2 sam / decoupled w4
+/// ngram / vanilla).
+#[test]
+fn fused_round_is_one_step_and_token_identical_to_grouped() {
+    let rt = Runtime::load(art()).unwrap();
+    let want = vanilla_outputs(&rt, 3, 16);
+    let plans = vec![
+        SlotPlan::coupled(DraftMethod::Sam, 2),
+        SlotPlan::decoupled(DraftMethod::Ngram, 4),
+        SlotPlan::vanilla(),
+    ];
+
+    let gcfg = EngineConfig { verify: VerifyDiscipline::Grouped, ..Default::default() };
+    let mut wg =
+        Worker::new_with_plans(&rt, gcfg, mk_requests(&rt, 3, 16), plans.clone()).unwrap();
+    let mut rep_g = EngineReport::default();
+    assert!(wg.round(&mut rep_g).unwrap() > 0);
+    assert_eq!(
+        rep_g.target_steps, 3,
+        "grouped: 2 speculative groups + 1 vanilla step"
+    );
+
+    let fcfg = EngineConfig { verify: VerifyDiscipline::Fused, ..Default::default() };
+    let mut wf =
+        Worker::new_with_plans(&rt, fcfg, mk_requests(&rt, 3, 16), plans).unwrap();
+    let mut rep_f = EngineReport::default();
+    assert!(wf.round(&mut rep_f).unwrap() > 0);
+    assert_eq!(rep_f.target_steps, 1, "fused: ONE ragged target step per round");
+
+    wg.rollout_planned().unwrap();
+    wf.rollout_planned().unwrap();
+    assert_eq!(wf.outputs(), want, "fused diverged from vanilla");
+    assert_eq!(wg.outputs(), want, "grouped diverged from vanilla");
+}
+
+/// Mid-rollout WINDOW switches under the fused discipline: widening one
+/// slot (w2 → w5, forcing the shared bucket window up) and narrowing the
+/// other (w4 → w1) mid-flight must stay lossless — the ragged step's
+/// per-row widths track the live plans round by round.
+#[test]
+fn fused_mid_rollout_window_switch_is_lossless() {
+    let rt = Runtime::load(art()).unwrap();
+    let want = vanilla_outputs(&rt, 2, 20);
+    let plans = vec![
+        SlotPlan::coupled(DraftMethod::Sam, 2),
+        SlotPlan::decoupled(DraftMethod::Ngram, 4),
+    ];
+    let mut w =
+        Worker::new_with_plans(&rt, EngineConfig::default(), mk_requests(&rt, 2, 20), plans)
+            .unwrap();
+    let mut rep = EngineReport::default();
+    for _ in 0..3 {
+        assert!(w.round(&mut rep).unwrap() > 0, "batch drained before the switch");
+    }
+    w.set_plan(0, SlotPlan::coupled(DraftMethod::Sam, 5)).unwrap();
+    w.set_plan(1, SlotPlan::decoupled(DraftMethod::Ngram, 1)).unwrap();
+    w.rollout_planned().unwrap();
+    assert_eq!(w.outputs(), want, "fused mid-rollout window switch diverged from vanilla");
 }
 
 #[test]

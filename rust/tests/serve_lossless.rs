@@ -17,7 +17,7 @@
 use std::path::Path;
 
 use specactor::coordinator::Reconfigurator;
-use specactor::engine::{EngineConfig, Request, Worker};
+use specactor::engine::{EngineConfig, Request, VerifyDiscipline, Worker};
 use specactor::planner::costmodel::CostModel;
 use specactor::runtime::Runtime;
 use specactor::serve::{Batcher, Priority, Replanner};
@@ -61,8 +61,22 @@ fn serve_outputs(
     stagger: usize,
     spec: bool,
 ) -> Vec<Vec<i32>> {
+    serve_outputs_cfg(rt, EngineConfig::default(), replan, reconfig, capacity, reqs, stagger, spec)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn serve_outputs_cfg(
+    rt: &Runtime,
+    cfg: EngineConfig,
+    replan: Replanner,
+    reconfig: Option<Reconfigurator>,
+    capacity: usize,
+    reqs: Vec<Request>,
+    stagger: usize,
+    spec: bool,
+) -> Vec<Vec<i32>> {
     let n = reqs.len();
-    let worker = Worker::with_capacity(rt, EngineConfig::default(), capacity).unwrap();
+    let worker = Worker::with_capacity(rt, cfg, capacity).unwrap();
     let mut b = Batcher::new(worker, 2 * n.max(1), replan, spec);
     if let Some(rc) = reconfig {
         b = b.with_reconfig(rc);
@@ -162,6 +176,65 @@ fn reconfigured_serving_is_lossless() {
     let rc = Reconfigurator::for_manifest(&rt.manifest, CostModel::paper_32b(), 3, 2);
     let got = serve_outputs(&rt, replan, Some(rc), n, mk_requests(&rt, n, 14), 2, true);
     assert_eq!(got, want, "reconfigured continuous batching diverged from static vanilla");
+}
+
+/// Fused serving end-to-end: the default serve path (fused ragged verify,
+/// specialised plans left standing at bucket crossings) and the
+/// `--grouped-verify` A/B path must BOTH match static vanilla on the same
+/// staggered mixed-drafter schedule — and the fused engine must never
+/// need more target steps than the grouped one to get there.
+#[test]
+fn fused_serving_is_lossless_and_step_lean() {
+    let rt = Runtime::load(&art()).unwrap();
+    let n = 4;
+    let want = vanilla_outputs(&rt, n, 14);
+    let mut steps = Vec::new();
+    for d in [VerifyDiscipline::Fused, VerifyDiscipline::Grouped] {
+        let cfg = EngineConfig { verify: d, ..Default::default() };
+        // Batcher aligns replanner and reconfigurator to the engine's
+        // verify discipline automatically.
+        let replan = replanner(&rt, "ngram", 0.6);
+        let rc = Reconfigurator::for_manifest(&rt.manifest, CostModel::paper_32b(), 3, 2);
+        let worker = Worker::with_capacity(&rt, cfg, n).unwrap();
+        let mut b = Batcher::new(worker, 2 * n, replan, true).with_reconfig(rc);
+        let mut now = 0.0f64;
+        let mut pending = mk_requests(&rt, n, 14).into_iter();
+        let mut next_at = 0usize;
+        let mut tick_no = 0usize;
+        let mut remaining = n;
+        loop {
+            while remaining > 0 && tick_no >= next_at {
+                assert!(b.enqueue(pending.next().unwrap(), Priority::Batch, now));
+                remaining -= 1;
+                next_at += 2;
+            }
+            if remaining == 0 && b.idle() {
+                break;
+            }
+            if b.idle() {
+                tick_no = next_at;
+                now = next_at as f64 * 0.01;
+                continue;
+            }
+            b.tick(now).unwrap();
+            tick_no += 1;
+            now += 0.01;
+            assert!(tick_no < 10_000, "serve loop did not converge");
+        }
+        let mut fin = b.drain_finished();
+        assert_eq!(fin.len(), n);
+        fin.sort_by_key(|f| f.req.id);
+        let got: Vec<Vec<i32>> =
+            fin.iter().map(|f| f.req.seq[f.req.prompt.len()..].to_vec()).collect();
+        assert_eq!(got, want, "{d:?} serving diverged from static vanilla");
+        steps.push(b.report.target_steps);
+    }
+    assert!(
+        steps[0] <= steps[1],
+        "fused serving used more target steps ({}) than grouped ({})",
+        steps[0],
+        steps[1]
+    );
 }
 
 /// The serve loop must actually exercise continuous batching: with fewer
