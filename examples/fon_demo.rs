@@ -1,7 +1,15 @@
-//! Fastest-of-N demo on the REAL engine: race all three draft methods on
-//! the same straggler request, verify losslessness (all replicas emit the
-//! identical sequence), and report which method wins — the §4.2 mechanism
-//! at CPU scale.
+//! Fastest-of-N demo on the REAL engine, both ways:
+//!
+//! 1. **in-process race** (the production path): the straggler's primary
+//!    method plus replica forks of its live slot — one per raced method —
+//!    share ONE fused worker; the arbiter declares the first finisher,
+//!    cancels the losers and reports the replica waste;
+//! 2. **sequential baseline** (`race_methods`): each method on its own
+//!    single-slot worker, for per-method wall times the concurrent race
+//!    cannot observe (losers are cancelled early).
+//!
+//! Both assert losslessness: every replica emits the identical sequence —
+//! the §4.2 mechanism at CPU scale.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example fon_demo -- --budget 40
@@ -11,6 +19,9 @@ use std::path::PathBuf;
 
 use anyhow::Result;
 use specactor::coordinator::global::race_methods;
+use specactor::coordinator::race::race_in_process;
+use specactor::drafter::DraftMethod;
+use specactor::engine::{EngineConfig, SlotPlan};
 use specactor::runtime::Runtime;
 use specactor::util::cli::Args;
 
@@ -29,6 +40,34 @@ fn main() -> Result<()> {
     let prompt: Vec<i32> = (0..m.prompt_len)
         .map(|j| m.reserved + (start + j as i32) % (vocab - m.reserved))
         .collect();
+
+    let primary = SlotPlan::coupled(DraftMethod::Model("draft_mid".to_string()), window);
+    let replicas = vec![
+        SlotPlan::coupled(DraftMethod::Model("draft_small".to_string()), window),
+        SlotPlan::coupled(DraftMethod::Sam, window),
+    ];
+    println!(
+        "in-process race: draft_mid (primary) vs {{draft_small, sam}} replicas \
+         forked off its slot (budget {budget})..."
+    );
+    let out = race_in_process(
+        &rt,
+        42,
+        &prompt,
+        budget,
+        primary,
+        &replicas,
+        &EngineConfig::default(),
+    )?;
+    println!(
+        "  winner: {} ({}, resolved after {} rounds; {} replicas cancelled, \
+         {} replica-rounds wasted)",
+        out.winner_method,
+        if out.replica_won { "replica win — a fon_win" } else { "primary held on" },
+        out.rounds,
+        out.cancelled_replicas,
+        out.wasted_replica_rounds
+    );
     drop(rt); // race_methods opens its own runtime
 
     let methods = vec![
@@ -36,12 +75,16 @@ fn main() -> Result<()> {
         "draft_small".to_string(),
         "sam".to_string(),
     ];
-    println!("racing {methods:?} on a noisy-band straggler (budget {budget})...");
+    println!("sequential baseline (per-method wall times):");
     let (winner, tokens, times) = race_methods(&art, 42, &prompt, budget, &methods, window, 7)?;
     for (meth, t) in &times {
         let mark = if *meth == winner { "  <-- fastest" } else { "" };
         println!("  {meth:<14} {t:>7.2}s{mark}");
     }
+    assert_eq!(
+        tokens, out.tokens,
+        "in-process race and sequential baseline must agree token-for-token"
+    );
     println!("winner: {winner}; output ({} tokens) identical across replicas ✓", tokens.len());
     Ok(())
 }

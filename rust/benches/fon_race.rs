@@ -1,0 +1,148 @@
+//! Fastest-of-N racing gain: tail (p99) rollout makespan with `--fon-race`
+//! on vs off, across an occupancy × acceptance-skew grid, written to
+//! `BENCH_race.json` (the `BENCH_*.json` trajectory convention, PERF.md).
+//!
+//! Hermetic: the [`SyntheticEngine`]'s method-aware acceptance supplies
+//! the skew — every `tail`-th request accepts ~0.2 under the served
+//! methods but ~0.8 under the suffix-automaton drafter, the hidden
+//! fast-method Algorithm 3's race discovers. Each cell serves the SAME
+//! deterministic one-burst workload twice (racing off / on) through the
+//! full batcher (admission → replan → race → round → retire) on virtual
+//! 1-second ticks, so request latency is measured in engine rounds.
+//!
+//! In-bench assertions pin the acceptance criteria: racing must win races
+//! on the skewed trace (`fon_wins > 0`), must complete exactly the same
+//! request set, and must never worsen the p99 makespan — replicas spend
+//! only idle slots (races launch when the queue is empty and occupancy is
+//! below threshold) and admissions preempt them.
+
+use std::path::Path;
+
+use specactor::coordinator::race::RaceArbiter;
+use specactor::engine::Request;
+use specactor::serve::{Batcher, Priority, Replanner, SyntheticEngine};
+use specactor::util::benchkit::Bench;
+use specactor::util::cli::Args;
+use specactor::util::stats::percentile;
+use specactor::util::Json;
+
+struct RunOut {
+    completed: usize,
+    p50: f64,
+    p99: f64,
+    makespan: f64,
+    races: u64,
+    launches: u64,
+    wins: u64,
+    wins_sam: u64,
+    cancelled: u64,
+    wasted_rounds: u64,
+}
+
+fn run(capacity: usize, n: usize, budget: usize, tail: u64, seed: u64, racing: bool) -> RunOut {
+    let engine = SyntheticEngine::new(capacity, seed).with_tail_every(tail);
+    let mut b = Batcher::new(engine, n, Replanner::synthetic(), true);
+    if racing {
+        b = b.with_racing(RaceArbiter::synthetic());
+    }
+    // one burst at t = 0: the batch-drain regime where the long tail
+    // dominates rollout makespan
+    for i in 0..n as u64 {
+        assert!(b.enqueue(Request::new(i, vec![0; 8], budget), Priority::Batch, 0.0));
+    }
+    let mut now = 0.0f64;
+    let mut guard = 0u64;
+    while !b.idle() {
+        b.tick(now).expect("tick");
+        now += 1.0; // virtual 1 s per tick: latency in engine rounds
+        guard += 1;
+        assert!(guard < 100_000, "bench serve loop did not converge");
+    }
+    let fin = b.drain_finished();
+    let lat: Vec<f64> = fin.iter().map(|f| f.finished_s - f.arrival_s).collect();
+    let makespan = fin.iter().map(|f| f.finished_s).fold(0.0f64, f64::max);
+    RunOut {
+        completed: fin.len(),
+        p50: percentile(&lat, 50.0),
+        p99: percentile(&lat, 99.0),
+        makespan,
+        races: b.metrics.races,
+        launches: b.metrics.race_launches,
+        wins: b.metrics.race_wins,
+        wins_sam: b.metrics.race_wins_by_method.get("sam").copied().unwrap_or(0),
+        cancelled: b.metrics.race_cancelled_replicas,
+        wasted_rounds: b.metrics.race_wasted_rounds,
+    }
+}
+
+fn main() {
+    let mut args = Args::from_env().unwrap();
+    let n = args.opt_parse("requests", 16usize);
+    let budget = args.opt_parse("budget", 48usize);
+    let seed = args.opt_parse("seed", 7u64);
+    let json_out = args.opt("json-out", "BENCH_race.json");
+    args.finish().unwrap();
+
+    let mut bench = Bench::new(0, 1);
+    let mut extra: Vec<Vec<(&str, Json)>> = Vec::new();
+    let mut total_wins = 0u64;
+
+    println!(
+        "{:<26} {:>5} {:>8} {:>8} {:>9} {:>6} {:>5} {:>7}",
+        "cell", "done", "p50", "p99", "makespan", "races", "wins", "wasted"
+    );
+    for &capacity in &[4usize, 8, 16] {
+        for &tail in &[2u64, 4, 8] {
+            let off = run(capacity, n, budget, tail, seed, false);
+            let on = run(capacity, n, budget, tail, seed, true);
+            assert_eq!(
+                off.completed, n,
+                "cap {capacity} tail 1/{tail}: baseline lost requests"
+            );
+            assert_eq!(
+                on.completed, n,
+                "cap {capacity} tail 1/{tail}: racing changed the completed count"
+            );
+            assert!(
+                on.p99 <= off.p99,
+                "cap {capacity} tail 1/{tail}: racing worsened p99 ({} > {})",
+                on.p99,
+                off.p99
+            );
+            assert_eq!(off.races, 0, "racing-off run must launch nothing");
+            total_wins += on.wins;
+            for (label, r) in [("off", &off), ("on", &on)] {
+                println!(
+                    "cap{capacity:<3} tail1/{tail:<2} race={label:<4} {:>5} {:>8.1} {:>8.1} \
+                     {:>9.1} {:>6} {:>5} {:>7}",
+                    r.completed, r.p50, r.p99, r.makespan, r.races, r.wins, r.wasted_rounds
+                );
+                bench.record(
+                    &format!("fon_race cap={capacity} tail=1/{tail} racing={label}"),
+                    r.p99,
+                );
+                extra.push(vec![
+                    ("capacity", Json::num(capacity as f64)),
+                    ("tail_every", Json::num(tail as f64)),
+                    ("racing", Json::str(label)),
+                    ("completed", Json::num(r.completed as f64)),
+                    ("latency_p50_rounds", Json::num(r.p50)),
+                    ("latency_p99_rounds", Json::num(r.p99)),
+                    ("makespan_rounds", Json::num(r.makespan)),
+                    ("races", Json::num(r.races as f64)),
+                    ("replica_launches", Json::num(r.launches as f64)),
+                    ("fon_wins", Json::num(r.wins as f64)),
+                    ("fon_wins_sam", Json::num(r.wins_sam as f64)),
+                    ("replicas_cancelled", Json::num(r.cancelled as f64)),
+                    ("replica_rounds_wasted", Json::num(r.wasted_rounds as f64)),
+                ]);
+            }
+        }
+    }
+    // the acceptance criterion: the skewed trace must produce real wins
+    assert!(total_wins > 0, "fon_wins == 0 across the whole skew grid");
+    bench
+        .write_json(Path::new(&json_out), "fon_race_tail_makespan", &extra)
+        .expect("write BENCH_race.json");
+    println!("wrote {json_out}");
+}

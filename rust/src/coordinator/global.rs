@@ -10,11 +10,14 @@
 //!   and the serve loop applies on admission).
 //! * When workers finish their batches, Algorithm 3 ([`fon::assign`])
 //!   maps next-best draft methods for the lowest-acceptance requests onto
-//!   the freed workers and the resulting assignment is routed into racing
-//!   [`SlotPlan`] replicas ([`fon::slot_plans`]): the first replica to
-//!   finish wins. Losslessness makes the race safe — both replicas
-//!   generate the identical sequence, so "fastest of N" can never change
-//!   the rollout output (asserted in the coordinator integration test).
+//!   the freed workers, the assignment is routed into racing [`SlotPlan`]
+//!   replicas ([`fon::slot_plans`]) and the races are **executed
+//!   in-process** ([`race::race_in_process`]): the straggler's primary
+//!   method and its replicas share one fused worker and the first
+//!   finisher wins, so `fon_wins` is measured. Losslessness makes the
+//!   race safe — every replica generates the identical sequence, so
+//!   "fastest of N" can never change the rollout output (asserted both
+//!   here and in the race arbiter).
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -25,7 +28,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::coordinator::fon;
+use crate::coordinator::{fon, race};
 use crate::drafter::DraftMethod;
 use crate::engine::{EngineConfig, EngineReport, Request, SlotPlan, Worker};
 use crate::ladder::Ladder;
@@ -47,14 +50,33 @@ pub struct RequestOutcome {
 
 #[derive(Clone, Debug, Default)]
 pub struct RolloutSummary {
+    /// Wall time of the worker rollout itself. The CPU-scale FoN race
+    /// phase (which re-runs stragglers that a real cluster would still
+    /// have in flight) is timed separately in [`fon_race_s`] so rollout
+    /// throughput/speedup numbers are not diluted by the measurement.
+    ///
+    /// [`fon_race_s`]: RolloutSummary::fon_race_s
     pub wall_s: f64,
+    /// Wall time spent executing the in-process Fastest-of-N races.
+    pub fon_race_s: f64,
     pub outcomes: Vec<RequestOutcome>,
     pub per_worker: Vec<EngineReport>,
+    /// Racing replicas actually forked by the in-process races.
     pub fon_launches: usize,
+    /// Races a replica (a next-best method) finished strictly before the
+    /// straggler's primary method — **measured** by the race arbiter, not
+    /// planned.
     pub fon_wins: usize,
-    /// Racing replicas Algorithm 3 planned: (request, freed worker, plan).
-    /// At CPU scale the race itself is exercised by `race_methods` /
-    /// `fon_demo`; the plans are what a GPU deployment would launch.
+    /// Replicas cancelled when their race resolved.
+    pub fon_cancelled_replicas: usize,
+    /// Engine rounds burned by cancelled replicas (the speculation waste
+    /// racing pays for its tail win).
+    pub fon_wasted_replica_rounds: u64,
+    /// Racing replicas Algorithm 3 assigned: (request, freed worker,
+    /// plan). Each plan is then executed in-process by
+    /// [`race::race_in_process`] — the counters above measure the result.
+    ///
+    /// [`race::race_in_process`]: crate::coordinator::race::race_in_process
     pub fon_plans: Vec<(u64, usize, SlotPlan)>,
 }
 
@@ -194,14 +216,22 @@ pub fn rollout(
         h.join().map_err(|_| anyhow!("worker panicked"))??;
     }
 
-    // FoN phase (Algorithm 3): on real clusters this fires while stragglers
-    // are still decoding; at CPU scale every batch has drained by the time
-    // workers report, so we plan the races the deployment *would* launch —
-    // lowest-acceptance requests first, next-best methods from the given
-    // rank — and surface them as SlotPlans. `race_methods` / `fon_demo`
-    // exercise the race itself.
+    // FoN phase (Algorithm 3): plan races for the lowest-acceptance
+    // requests on the freed workers, then EXECUTE them in-process — each
+    // straggler raced under its primary method plus the assigned
+    // next-best methods inside one fused worker (`race::race_in_process`),
+    // first finisher wins. On real clusters this fires while stragglers
+    // are still decoding; at CPU scale every batch has drained by the
+    // time workers report, so the race re-runs the straggler from its
+    // prompt — losslessness makes the re-run token-identical to the
+    // recorded outcome (asserted below), and the round counts make
+    // `fon_wins` a measurement, not a plan.
+    let rollout_wall_s = t0.elapsed().as_secs_f64();
+    let race_t0 = Instant::now();
     let mut fon_launches = 0usize;
-    let fon_wins = 0usize;
+    let mut fon_wins = 0usize;
+    let mut fon_cancelled_replicas = 0usize;
+    let mut fon_wasted_replica_rounds = 0u64;
     let mut fon_plans = Vec::new();
     if cfg.fon && method_rank.len() > 1 && !outcomes.is_empty() {
         let mean_p = outcomes.values().map(|o| o.accept_rate).sum::<f64>()
@@ -220,23 +250,71 @@ pub fn rollout(
             .map(|&id| fon::FreeWorker { id, capacity: per.max(1), method: None, load: 0 })
             .collect();
         let assignment = fon::assign(&mut stragglers, method_rank, &mut free, per.max(1));
-        fon_launches = assignment.len();
         fon_plans = fon::slot_plans(&assignment, method_rank, window);
+
+        let mut by_req: BTreeMap<u64, Vec<SlotPlan>> = BTreeMap::new();
+        for (req, _wid, plan) in &fon_plans {
+            by_req.entry(*req).or_default().push(plan.clone());
+        }
+        if !by_req.is_empty() {
+            let rt = Runtime::load(&cfg.artifacts)?;
+            let ecfg = EngineConfig {
+                plan: SlotPlan::coupled(to_engine_method(&primary), window),
+                verify: Default::default(),
+                temperature: cfg.temperature,
+                seed: cfg.seed,
+                draft_seed: cfg.seed.wrapping_add(1000),
+            };
+            for (id, replicas) in by_req {
+                let prompt = prompts
+                    .iter()
+                    .find(|(pid, _)| *pid == id)
+                    .map(|(_, p)| p.clone())
+                    .ok_or_else(|| anyhow!("raced request {id} has no prompt"))?;
+                let out = race::race_in_process(
+                    &rt,
+                    id,
+                    &prompt,
+                    budget,
+                    ecfg.plan.clone(),
+                    &replicas,
+                    &ecfg,
+                )?;
+                fon_launches += out.launches;
+                fon_cancelled_replicas += out.cancelled_replicas;
+                fon_wasted_replica_rounds += out.wasted_replica_rounds;
+                let o = outcomes.get_mut(&id).expect("raced request has an outcome");
+                if out.tokens != o.tokens {
+                    return Err(anyhow!(
+                        "losslessness violated: FoN race output diverged for request {id}"
+                    ));
+                }
+                if out.replica_won {
+                    fon_wins += 1;
+                    o.finished_by = format!("fon:{}", out.winner_method);
+                }
+            }
+        }
     }
 
     Ok(RolloutSummary {
-        wall_s: t0.elapsed().as_secs_f64(),
+        wall_s: rollout_wall_s,
+        fon_race_s: race_t0.elapsed().as_secs_f64(),
         outcomes: outcomes.into_values().collect(),
         per_worker,
         fon_launches,
         fon_wins,
+        fon_cancelled_replicas,
+        fon_wasted_replica_rounds,
         fon_plans,
     })
 }
 
-/// Race `methods` on the same request (sequentially at CPU scale),
-/// returning (winning method, tokens, per-method wall seconds). Each
-/// replica is a single-slot worker on its own coupled [`SlotPlan`].
+/// Race `methods` on the same request **sequentially** — one single-slot
+/// worker per method, returning (winning method, tokens, per-method wall
+/// seconds). Kept as the measurement baseline for per-method wall times
+/// (the in-process concurrent race, [`race::race_in_process`], cancels
+/// losers early and therefore cannot report their full times).
 /// Losslessness means every replica yields identical tokens; the "win" is
 /// purely about speed — exactly the paper's fastest-of-N semantics.
 pub fn race_methods(

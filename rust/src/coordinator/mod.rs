@@ -5,16 +5,22 @@
 //!   [`Reconfigurator`] the serve loop fires every `period` rounds.
 //! * [`fon`] — Algorithm 3: greedy Fastest-of-N drafter assignment onto
 //!   freed workers, routed into racing [`SlotPlan`]s.
+//! * [`race`] — Algorithm 3 **executed**: the [`RaceArbiter`] forks
+//!   stragglers into replica slots (`Worker::fork`), prices launches
+//!   ([`race::race_gain`]), detects the first finisher, cancels losers
+//!   and enforces the losslessness invariant across race members.
 //! * [`global`] — the real-engine orchestration used by the e2e example:
-//!   plan → per-worker rollout → FoN planning for stragglers.
+//!   plan → per-worker rollout → FoN races run in-process for stragglers.
 //!
 //! [`SlotPlan`]: crate::engine::SlotPlan
 
 pub mod fon;
 pub mod global;
+pub mod race;
 pub mod reconfig;
 
 pub use fon::{assign, slot_plans, Assignment, FreeWorker, Straggler};
+pub use race::{race_in_process, RaceArbiter, RaceConfig, RaceFinish};
 pub use reconfig::{
     cost_method, reconfigure_batch, reconfigure_request, LiveSlot, Mode, Reconfigurator,
     RequestPlan,

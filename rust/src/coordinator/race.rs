@@ -1,0 +1,734 @@
+//! Algorithm 3 executed **in-process**: fork a straggler into replica
+//! slots, race draft methods, first finisher wins.
+//!
+//! `fon::assign` decides *which* methods chase *which* stragglers; this
+//! module makes the race real. A racing replica is a [`Worker::fork`] of
+//! the straggler's live slot — the verified-prefix KV row copied through
+//! the `extract_row`/`insert_row` migration path plus the request state,
+//! with its own [`SlotPlan`] naming the raced draft method. Because the
+//! sampling tape is keyed by (seed, request id, position), every member
+//! of a race generates the IDENTICAL token stream; only round counts
+//! differ, so "fastest of N" can never change the rollout output. The
+//! [`RaceArbiter`] enforces that invariant at resolution time: finished
+//! members must agree exactly and unfinished members must hold a prefix
+//! of the winner's sequence — a divergence is a hard losslessness error,
+//! not a metric.
+//!
+//! Races are *priced before launch* ([`race_gain`]): rounds saved by the
+//! replica's profiled acceptance × the fused round time, minus the fork
+//! cost ([`CostModel::fork_cost`]), the replica's extra verify row riding
+//! every fused step ([`CostModel::replica_overhead`] — β-free, the whole
+//! reason racing on freed capacity is cheap) and its own drafting.
+//! Algorithm 3 only launches races it expects to win.
+//!
+//! Drivers: the serve loop (`serve::Batcher` with `--fon-race`) spends
+//! idle slots on tail races when occupancy drops; the global coordinator
+//! (`coordinator::global::rollout`) and `examples/fon_demo.rs` race via
+//! [`race_in_process`]. Everything is generic over [`ServeEngine`], so
+//! the arbiter runs identically on the real [`Worker`] and the hermetic
+//! `SyntheticEngine` (unit tests, `serve --smoke --fon-race`, CI).
+//!
+//! [`Worker`]: crate::engine::Worker
+//! [`Worker::fork`]: crate::engine::Worker::fork
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::reconfig::cost_method;
+use crate::drafter::DraftMethod;
+use crate::engine::{EngineConfig, EngineReport, Request, SlotPlan, Worker};
+use crate::planner::costmodel::CostModel;
+use crate::planner::tgs::{step_up, tau_coupled};
+use crate::runtime::{Manifest, Runtime};
+use crate::serve::ServeEngine;
+
+/// Race-launch policy knobs.
+#[derive(Clone, Debug)]
+pub struct RaceConfig {
+    /// Launch races only while occupancy (requests + replicas) is at or
+    /// below this fraction of engine capacity: races spend *idle* slots,
+    /// they never crowd out admissions (which also preempt them — see
+    /// `Batcher::tick`).
+    pub occupancy_frac: f64,
+    /// Replicas a single race may fork (Algorithm 3's `b_max` at slot
+    /// scale).
+    pub max_replicas: usize,
+    /// Skip requests with fewer remaining tokens than this: a fork cannot
+    /// pay for itself on an almost-finished request.
+    pub min_remaining: usize,
+    /// Absolute measured acceptance below which a slot is raceable even
+    /// without a below-mean comparison: the flagship FoN case is the LAST
+    /// straggler decoding alone on idle capacity (or N equal-rate tails),
+    /// where no slot can be *strictly below* the live mean.
+    pub solo_accept: f64,
+    /// Ladder rank best-first: (method label, profiled acceptance). The
+    /// race skips the straggler's current method and walks down the rank.
+    pub rank: Vec<(String, f64)>,
+    /// Verifiable draft windows (ascending) for fused pricing
+    /// (`step_up`).
+    pub windows: Vec<usize>,
+}
+
+impl RaceConfig {
+    pub fn new(rank: Vec<(String, f64)>, windows: Vec<usize>) -> Self {
+        RaceConfig {
+            occupancy_frac: 0.5,
+            max_replicas: 2,
+            min_remaining: 4,
+            solo_accept: 0.5,
+            rank,
+            windows,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+struct Replica {
+    slot: usize,
+    method: String,
+    /// `Request::iterations` at fork time: the replica's rounds since are
+    /// pure waste if it loses.
+    rounds_at_fork: u64,
+}
+
+/// One in-flight race: the straggler's original slot plus its replicas.
+#[derive(Clone, Debug)]
+pub struct Race {
+    pub request: u64,
+    pub primary: usize,
+    replicas: Vec<Replica>,
+}
+
+/// A resolved race.
+#[derive(Clone, Debug)]
+pub struct RaceFinish {
+    pub request: u64,
+    pub primary: usize,
+    pub winner_slot: usize,
+    /// Winning member's draft-method label (the primary's own method when
+    /// it held on).
+    pub winner_method: String,
+    /// True when a replica finished strictly before the primary — the
+    /// paper's `fon_win`.
+    pub replica_won: bool,
+    /// The winner's retired request (tokens, acceptance stats).
+    pub req: Request,
+    /// Replicas cancelled by this resolution.
+    pub cancelled: usize,
+    /// Replica rounds thrown away by this resolution.
+    pub wasted_rounds: u64,
+    /// Every slot this resolution freed (winner + cancelled members).
+    pub freed: Vec<usize>,
+}
+
+/// Cancelled-race accounting (admission preemption).
+#[derive(Clone, Debug, Default)]
+pub struct Cancelled {
+    pub freed: Vec<usize>,
+    pub replicas: usize,
+    pub wasted_rounds: u64,
+}
+
+/// Steps races to resolution: detects the first finisher, cancels the
+/// losers, retires the winner, and keeps the launch/win/waste ledger.
+pub struct RaceArbiter {
+    cost: CostModel,
+    pub cfg: RaceConfig,
+    races: Vec<Race>,
+    /// Races started.
+    pub races_started: u64,
+    /// Replicas forked.
+    pub launches: u64,
+    /// Races a replica finished strictly first.
+    pub wins: u64,
+    pub wins_by_method: BTreeMap<String, u64>,
+    pub cancelled_replicas: u64,
+    pub wasted_replica_rounds: u64,
+}
+
+impl RaceArbiter {
+    pub fn new(cost: CostModel, cfg: RaceConfig) -> Self {
+        RaceArbiter {
+            cost,
+            cfg,
+            races: Vec::new(),
+            races_started: 0,
+            launches: 0,
+            wins: 0,
+            wins_by_method: BTreeMap::new(),
+            cancelled_replicas: 0,
+            wasted_replica_rounds: 0,
+        }
+    }
+
+    /// Arbiter for externally-forked races only ([`RaceArbiter::register`]
+    /// — `race_in_process`, tests): an empty rank disables `consider`.
+    pub fn manual() -> Self {
+        Self::new(CostModel::paper_32b(), RaceConfig::new(Vec::new(), vec![1, 3, 7]))
+    }
+
+    /// Arbiter wired to a lowered artifact set: verifiable draft windows
+    /// from the manifest, rank from the caller's profiled ladder.
+    pub fn for_manifest(m: &Manifest, cost: CostModel, rank: Vec<(String, f64)>) -> Self {
+        let cfg = RaceConfig::new(rank, m.draft_windows());
+        Self::new(cost, cfg)
+    }
+
+    /// Default arbiter for the synthetic smoke engine: the paper cost
+    /// model, the default AOT window grid, and the profiled model ladder
+    /// extended with the token drafters every worker can host (best
+    /// profiled acceptance first, as `fon::assign` expects).
+    pub fn synthetic() -> Self {
+        let rank = vec![
+            ("draft_mid".to_string(), 0.82),
+            ("sam".to_string(), 0.80),
+            ("draft_small".to_string(), 0.74),
+            ("ngram".to_string(), 0.40),
+        ];
+        Self::new(CostModel::paper_32b(), RaceConfig::new(rank, vec![1, 3, 7]))
+    }
+
+    /// Is `slot` part of an in-flight race (primary or replica)?
+    pub fn is_member(&self, slot: usize) -> bool {
+        self.races
+            .iter()
+            .any(|r| r.primary == slot || r.replicas.iter().any(|x| x.slot == slot))
+    }
+
+    pub fn active_races(&self) -> usize {
+        self.races.len()
+    }
+
+    /// Register an externally-forked race (the caller already forked
+    /// `replica_slots` off `primary`).
+    pub fn register<E: ServeEngine>(
+        &mut self,
+        engine: &E,
+        primary: usize,
+        replica_slots: &[usize],
+    ) -> Result<()> {
+        let id = engine
+            .request(primary)
+            .ok_or_else(|| anyhow!("race primary slot {primary} is empty"))?
+            .id;
+        let mut replicas = Vec::with_capacity(replica_slots.len());
+        for &slot in replica_slots {
+            let r = engine
+                .request(slot)
+                .ok_or_else(|| anyhow!("race replica slot {slot} is empty"))?;
+            let method = engine
+                .slot_plan(slot)
+                .ok_or_else(|| anyhow!("race replica slot {slot} has no plan"))?
+                .method
+                .label();
+            replicas.push(Replica { slot, method, rounds_at_fork: r.iterations });
+        }
+        if replicas.is_empty() {
+            bail!("a race needs at least one replica");
+        }
+        self.races_started += 1;
+        self.launches += replicas.len() as u64;
+        self.races.push(Race { request: id, primary, replicas });
+        Ok(())
+    }
+
+    /// Consider launching ONE race on idle capacity: pick the live
+    /// speculative slot with the worst measured acceptance — raceable
+    /// when strictly below the live mean, or absolutely bad
+    /// ([`RaceConfig::solo_accept`], the lone-last-straggler case) — and
+    /// enough work left, then fork one replica per positively-priced
+    /// next-rank method into the caller-provided `pool` slots (a prefix
+    /// is consumed; the caller releases the rest). Returns the number of
+    /// pool slots used.
+    pub fn consider<E: ServeEngine>(
+        &mut self,
+        engine: &mut E,
+        occupancy: usize,
+        pool: &[usize],
+    ) -> Result<usize> {
+        if pool.is_empty() || self.cfg.rank.len() < 2 {
+            return Ok(0);
+        }
+        let cap = engine.capacity();
+        if occupancy as f64 > cap as f64 * self.cfg.occupancy_frac {
+            return Ok(0);
+        }
+        // gather live speculative slots with acceptance evidence and
+        // enough remaining work to be worth rescuing
+        let mut rates: Vec<(usize, f64)> = Vec::new();
+        for slot in 0..cap {
+            if self.is_member(slot) || engine.is_done(slot) {
+                continue;
+            }
+            let Some(r) = engine.request(slot) else { continue };
+            let Some(p) = engine.slot_plan(slot) else { continue };
+            if p.window == 0 || r.accept.proposed == 0 {
+                continue;
+            }
+            if r.budget - r.generated() < self.cfg.min_remaining {
+                continue;
+            }
+            rates.push((slot, r.accept.rate()));
+        }
+        // the worst-acceptance slot is raceable when it stands out below
+        // the live mean, OR when it is absolutely bad (`solo_accept`) —
+        // the latter covers the last straggler decoding alone and a tail
+        // of equal-rate stragglers, where nothing is strictly below mean
+        let Some(&(primary, p_cur)) =
+            rates.iter().min_by(|a, b| a.1.total_cmp(&b.1))
+        else {
+            return Ok(0);
+        };
+        let mean = rates.iter().map(|(_, p)| p).sum::<f64>() / rates.len() as f64;
+        let stands_out = rates.len() >= 2 && p_cur < mean;
+        if !stands_out && p_cur >= self.cfg.solo_accept {
+            return Ok(0);
+        }
+
+        let plan = engine.slot_plan(primary).expect("candidate has a plan");
+        let cur_label = plan.method.label();
+        let (id, remaining) = {
+            let r = engine.request(primary).expect("candidate is live");
+            (r.id, r.budget - r.generated())
+        };
+        let w = plan.window.max(1);
+        let w_step = step_up(&self.cfg.windows, w);
+        let b = occupancy.max(1);
+        let mut used = 0usize;
+        let mut replicas = Vec::new();
+        for (method, p_new) in &self.cfg.rank {
+            if used >= pool.len() || replicas.len() >= self.cfg.max_replicas {
+                break;
+            }
+            if *method == cur_label {
+                continue;
+            }
+            // launch gate: only races the model expects to win (priced
+            // with the cost family the method maps to — sam borrows the
+            // n-gram curve, unknown drafters too)
+            let cost_key = cost_method(&self.cost, &DraftMethod::parse(method));
+            let gain = race_gain(
+                &self.cost,
+                &cost_key,
+                self.cost.g_ref,
+                w,
+                w_step,
+                b,
+                p_cur,
+                *p_new,
+                remaining,
+            );
+            if gain <= 0.0 {
+                continue;
+            }
+            let dst = pool[used];
+            // A failed fork leaves `dst` unoccupied (Worker::fork mutates
+            // the slot table only after every fallible step), so degrade
+            // to racing whatever was already forked instead of erroring —
+            // an Err here would orphan live replicas (no race registered)
+            // and leak the caller's pool slots.
+            if engine
+                .fork(primary, dst, SlotPlan::coupled(DraftMethod::parse(method), w))
+                .is_err()
+            {
+                break;
+            }
+            let rounds_at_fork = engine.request(dst).map(|r| r.iterations).unwrap_or(0);
+            replicas.push(Replica { slot: dst, method: method.clone(), rounds_at_fork });
+            used += 1;
+        }
+        if replicas.is_empty() {
+            return Ok(0);
+        }
+        self.races_started += 1;
+        self.launches += replicas.len() as u64;
+        self.races.push(Race { request: id, primary, replicas });
+        Ok(used)
+    }
+
+    /// Resolve every race with a finished member: first finisher wins
+    /// (ties go to the primary — a replica win must be strictly earlier),
+    /// losers are cancelled, the winner is retired and returned. Verifies
+    /// the losslessness invariant across members before touching anything.
+    pub fn resolve<E: ServeEngine>(&mut self, engine: &mut E) -> Result<Vec<RaceFinish>> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.races.len() {
+            let race = &self.races[i];
+            let any_done = engine.is_done(race.primary)
+                || race.replicas.iter().any(|r| engine.is_done(r.slot));
+            if !any_done {
+                i += 1;
+                continue;
+            }
+            let race = self.races.swap_remove(i);
+            out.push(self.finish(engine, race)?);
+        }
+        Ok(out)
+    }
+
+    fn finish<E: ServeEngine>(&mut self, engine: &mut E, race: Race) -> Result<RaceFinish> {
+        let winner = if engine.is_done(race.primary) {
+            None
+        } else {
+            race.replicas.iter().position(|r| engine.is_done(r.slot))
+        };
+        let winner_slot = winner.map(|ri| race.replicas[ri].slot).unwrap_or(race.primary);
+        // losslessness gate: finished members must agree exactly with the
+        // winner; unfinished members must hold a prefix of its sequence
+        let win_seq = engine
+            .request(winner_slot)
+            .ok_or_else(|| anyhow!("race winner slot {winner_slot} is empty"))?
+            .seq
+            .clone();
+        let members = std::iter::once(race.primary).chain(race.replicas.iter().map(|r| r.slot));
+        for slot in members {
+            let r = engine
+                .request(slot)
+                .ok_or_else(|| anyhow!("race member slot {slot} is empty"))?;
+            let ok = if engine.is_done(slot) {
+                r.seq == win_seq
+            } else {
+                win_seq.len() >= r.seq.len() && win_seq[..r.seq.len()] == r.seq[..]
+            };
+            if !ok {
+                bail!(
+                    "losslessness violated: race member in slot {slot} diverged from the \
+                     winner for request {}",
+                    race.request
+                );
+            }
+        }
+        // cancel losing replicas (their rounds since the fork are waste)
+        let mut freed = Vec::with_capacity(1 + race.replicas.len());
+        let mut cancelled = 0usize;
+        let mut wasted = 0u64;
+        for (ri, rep) in race.replicas.iter().enumerate() {
+            if winner == Some(ri) {
+                continue;
+            }
+            let req = engine.retire(rep.slot)?;
+            wasted += req.iterations.saturating_sub(rep.rounds_at_fork);
+            cancelled += 1;
+            freed.push(rep.slot);
+        }
+        let (winner_method, replica_won) = match winner {
+            Some(ri) => (race.replicas[ri].method.clone(), true),
+            None => {
+                let label = engine
+                    .slot_plan(race.primary)
+                    .map(|p| p.method.label())
+                    .unwrap_or_default();
+                (label, false)
+            }
+        };
+        if replica_won {
+            // the primary lost: retire it too (its pre-fork rounds were
+            // necessary work, so they are not counted as replica waste)
+            engine.retire(race.primary)?;
+            freed.push(race.primary);
+        }
+        let req = engine.retire(winner_slot)?;
+        freed.push(winner_slot);
+        self.cancelled_replicas += cancelled as u64;
+        self.wasted_replica_rounds += wasted;
+        if replica_won {
+            self.wins += 1;
+            *self.wins_by_method.entry(winner_method.clone()).or_insert(0) += 1;
+        }
+        Ok(RaceFinish {
+            request: race.request,
+            primary: race.primary,
+            winner_slot,
+            winner_method,
+            replica_won,
+            req,
+            cancelled,
+            wasted_rounds: wasted,
+            freed,
+        })
+    }
+
+    /// Cancel the most recent race outright: replica slots are freed, the
+    /// primary keeps decoding as an ordinary slot. The serve loop preempts
+    /// races this way when real admissions need the capacity.
+    pub fn cancel_one<E: ServeEngine>(&mut self, engine: &mut E) -> Result<Cancelled> {
+        let Some(race) = self.races.pop() else {
+            return Ok(Cancelled::default());
+        };
+        let mut out = Cancelled::default();
+        for rep in &race.replicas {
+            let req = engine.retire(rep.slot)?;
+            out.wasted_rounds += req.iterations.saturating_sub(rep.rounds_at_fork);
+            out.replicas += 1;
+            out.freed.push(rep.slot);
+        }
+        self.cancelled_replicas += out.replicas as u64;
+        self.wasted_replica_rounds += out.wasted_rounds;
+        Ok(out)
+    }
+}
+
+/// Modelled net gain (seconds) of racing `method_new` (cost-model key)
+/// against the incumbent on a straggler with `remaining` tokens left:
+/// rounds saved × the fused round time, minus the replica's costs — the
+/// fork ([`CostModel::fork_cost`]), its extra verify row riding every
+/// fused step ([`CostModel::replica_overhead`]; β-free) and its own
+/// drafting at b = 1. Positive gain = a race Algorithm 3 expects to win.
+#[allow(clippy::too_many_arguments)]
+pub fn race_gain(
+    m: &CostModel,
+    method_new: &str,
+    g_v: usize,
+    w: usize,
+    w_step: usize,
+    b: usize,
+    p_cur: f64,
+    p_new: f64,
+    remaining: usize,
+) -> f64 {
+    let w = w.max(1);
+    let w_step = w_step.max(w);
+    let b = b.max(1);
+    let tokens_per_round = |p: f64| tau_coupled(w, p.clamp(0.0, 1.0)).max(1e-9);
+    let t_round = m.verify_fused(g_v, w as f64, w_step, b);
+    let rounds_cur = remaining as f64 / tokens_per_round(p_cur);
+    let rounds_new = remaining as f64 / tokens_per_round(p_new);
+    let overhead = m.fork_cost
+        + rounds_new * m.replica_overhead(g_v, w as f64, w_step, b)
+        + rounds_new * w as f64 * m.draft(method_new, 1);
+    (rounds_cur - rounds_new) * t_round - overhead
+}
+
+/// Outcome of one [`race_in_process`] run.
+#[derive(Clone, Debug)]
+pub struct RaceRunOut {
+    /// Winning member's method label.
+    pub winner_method: String,
+    pub replica_won: bool,
+    /// Generated tokens of the winner (prompt excluded).
+    pub tokens: Vec<i32>,
+    /// Engine rounds until resolution.
+    pub rounds: u64,
+    pub launches: usize,
+    pub cancelled_replicas: usize,
+    pub wasted_replica_rounds: u64,
+}
+
+/// Race `replica_plans` against `primary` for one request inside a single
+/// fused worker: admit the primary, fork one replica per plan, round
+/// until the first member finishes. The global coordinator
+/// (`coordinator::global::rollout`) and `examples/fon_demo.rs` drive
+/// Algorithm 3's planned races through this.
+pub fn race_in_process(
+    rt: &Runtime,
+    id: u64,
+    prompt: &[i32],
+    budget: usize,
+    primary: SlotPlan,
+    replica_plans: &[SlotPlan],
+    ecfg: &EngineConfig,
+) -> Result<RaceRunOut> {
+    if replica_plans.is_empty() {
+        bail!("no replica plans to race");
+    }
+    let mut w = Worker::with_capacity(rt, ecfg.clone(), 1 + replica_plans.len())?;
+    w.admit_with_plan(0, Request::new(id, prompt.to_vec(), budget), primary)?;
+    let mut replica_slots = Vec::with_capacity(replica_plans.len());
+    for (k, plan) in replica_plans.iter().enumerate() {
+        w.fork(0, k + 1, plan.clone())?;
+        replica_slots.push(k + 1);
+    }
+    let mut ar = RaceArbiter::manual();
+    ar.register(&w, 0, &replica_slots)?;
+    let mut rep = EngineReport::default();
+    let fin = loop {
+        if w.round(&mut rep)? == 0 {
+            bail!("race drained without a finisher for request {id}");
+        }
+        if let Some(f) = ar.resolve(&mut w)?.pop() {
+            break f;
+        }
+    };
+    Ok(RaceRunOut {
+        winner_method: fin.winner_method,
+        replica_won: fin.replica_won,
+        tokens: fin.req.seq[fin.req.prompt.len()..].to_vec(),
+        rounds: rep.iterations,
+        launches: replica_slots.len(),
+        cancelled_replicas: fin.cancelled,
+        wasted_replica_rounds: fin.wasted_rounds,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::PlanMode;
+    use crate::serve::SyntheticEngine;
+
+    fn spec_plan(method: DraftMethod, w: usize) -> SlotPlan {
+        SlotPlan { method, window: w, mode: PlanMode::Coupled }
+    }
+
+    /// Engine with a healthy request (id 0) and a tail straggler (id 3 —
+    /// `SyntheticEngine` tails accept 0.2 everywhere except sam's 0.8),
+    /// stepped until acceptance evidence accumulates.
+    fn skewed_engine(budget: usize) -> (SyntheticEngine, EngineReport) {
+        let mut e = SyntheticEngine::new(8, 42);
+        e.admit(0, Request::new(0, vec![1; 4], budget), spec_plan(DraftMethod::Ngram, 3))
+            .unwrap();
+        e.admit(1, Request::new(3, vec![1; 4], budget), spec_plan(DraftMethod::Ngram, 3))
+            .unwrap();
+        let mut rep = EngineReport::default();
+        for _ in 0..4 {
+            e.round(&mut rep).unwrap();
+        }
+        (e, rep)
+    }
+
+    #[test]
+    fn race_gain_prices_uplift_and_overheads() {
+        let m = CostModel::paper_32b();
+        // a big acceptance uplift on a long remaining tail pays
+        assert!(race_gain(&m, "ngram", 4, 3, 3, 4, 0.2, 0.8, 64) > 0.0);
+        // no uplift = pure overhead
+        assert!(race_gain(&m, "ngram", 4, 3, 3, 4, 0.8, 0.8, 64) < 0.0);
+        // an almost-finished request cannot amortise the fork
+        let short = race_gain(&m, "ngram", 4, 3, 3, 4, 0.2, 0.8, 1);
+        let long = race_gain(&m, "ngram", 4, 3, 3, 4, 0.2, 0.8, 64);
+        assert!(long > short);
+    }
+
+    #[test]
+    fn consider_races_the_tail_and_replica_wins() {
+        let (mut e, _rep) = skewed_engine(40);
+        let mut ar = RaceArbiter::synthetic();
+        // id 3's measured acceptance (~0.2) is far below the mean
+        let used = ar.consider(&mut e, 2, &[4, 5]).unwrap();
+        assert!(used > 0, "the tail straggler must be raced");
+        assert_eq!(ar.races_started, 1);
+        assert_eq!(ar.launches as usize, used);
+        assert!(ar.is_member(1), "primary is a race member");
+        assert!(ar.is_member(4), "first pool slot hosts a replica");
+        // the sam replica accepts 0.8 on the tail id: it must finish first
+        let mut rep = EngineReport::default();
+        let fin = loop {
+            e.round(&mut rep).unwrap();
+            if let Some(f) = ar.resolve(&mut e).unwrap().pop() {
+                break f;
+            }
+        };
+        assert_eq!(fin.request, 3);
+        assert!(fin.replica_won, "sam must beat the 0.2-acceptance primary");
+        assert_eq!(fin.winner_method, "sam");
+        assert_eq!(ar.wins, 1);
+        assert_eq!(ar.wins_by_method.get("sam"), Some(&1));
+        // everything the race touched is freed, the winner's output kept
+        assert_eq!(fin.freed.len(), 1 + fin.cancelled + 1); // replicas + primary + winner
+        assert_eq!(fin.req.generated(), 40);
+        assert!(ar.resolve(&mut e).unwrap().is_empty());
+        assert_eq!(ar.active_races(), 0);
+    }
+
+    #[test]
+    fn primary_win_counts_no_fon_win() {
+        // race a HEALTHY slot by hand: the ngram replica advances exactly
+        // as fast as its ngram primary (same id, same tape), so they
+        // finish in the same round — and ties go to the primary
+        let (mut e, _rep) = skewed_engine(40);
+        e.retire(1).unwrap(); // drop the tail; race the healthy slot 0
+        let mut ar = RaceArbiter::manual();
+        e.fork(0, 4, spec_plan(DraftMethod::Ngram, 3)).unwrap();
+        ar.register(&e, 0, &[4]).unwrap();
+        let mut rep = EngineReport::default();
+        let fin = loop {
+            e.round(&mut rep).unwrap();
+            if let Some(f) = ar.resolve(&mut e).unwrap().pop() {
+                break f;
+            }
+        };
+        assert!(!fin.replica_won, "a tie must go to the primary");
+        assert_eq!(ar.wins, 0);
+        assert_eq!(ar.cancelled_replicas, 1);
+        assert!(ar.wasted_replica_rounds > 0);
+    }
+
+    #[test]
+    fn consider_skips_high_occupancy_and_negative_gain() {
+        let (mut e, _r) = skewed_engine(40);
+        let mut ar = RaceArbiter::synthetic();
+        // occupancy above the threshold: no race even with a tail
+        assert_eq!(ar.consider(&mut e, 7, &[4, 5]).unwrap(), 0);
+        assert_eq!(ar.races_started, 0);
+        // a rank with zero profiled acceptance can never save a round:
+        // every candidate race prices negative and the launch gate holds
+        let mut ar2 = RaceArbiter::synthetic();
+        ar2.cfg.rank = vec![("draft_small".to_string(), 0.0), ("sam".to_string(), 0.0)];
+        assert_eq!(ar2.consider(&mut e, 2, &[4, 5]).unwrap(), 0);
+        assert_eq!(ar2.races_started, 0);
+    }
+
+    #[test]
+    fn cancel_one_frees_replicas_and_keeps_the_primary() {
+        let (mut e, _r) = skewed_engine(40);
+        let mut ar = RaceArbiter::synthetic();
+        let used = ar.consider(&mut e, 2, &[4, 5]).unwrap();
+        assert!(used > 0);
+        let c = ar.cancel_one(&mut e).unwrap();
+        assert_eq!(c.replicas, used);
+        assert_eq!(c.freed.len(), used);
+        assert_eq!(ar.active_races(), 0);
+        assert!(!ar.is_member(1), "primary reverts to an ordinary slot");
+        assert!(e.request(1).is_some(), "primary keeps decoding");
+        assert!(e.request(4).is_none(), "replica slot is freed");
+    }
+
+    #[test]
+    fn lone_last_straggler_is_raceable() {
+        // the flagship FoN case: one tail request decoding alone on an
+        // otherwise idle engine. There is no live mean to stand out from,
+        // but its absolute acceptance is terrible (`solo_accept`), so the
+        // idle capacity must still be spent on the race.
+        let mut e = SyntheticEngine::new(8, 13);
+        e.admit(0, Request::new(3, vec![1; 4], 40), spec_plan(DraftMethod::Ngram, 3))
+            .unwrap();
+        let mut rep = EngineReport::default();
+        for _ in 0..4 {
+            e.round(&mut rep).unwrap();
+        }
+        let mut ar = RaceArbiter::synthetic();
+        let used = ar.consider(&mut e, 1, &[4, 5]).unwrap();
+        assert!(used > 0, "a lone straggler below solo_accept must be raced");
+        let mut guard = 0;
+        let fin = loop {
+            e.round(&mut rep).unwrap();
+            if let Some(f) = ar.resolve(&mut e).unwrap().pop() {
+                break f;
+            }
+            guard += 1;
+            assert!(guard < 500, "lone-straggler race did not resolve");
+        };
+        assert!(fin.replica_won);
+        assert_eq!(fin.winner_method, "sam");
+        // a lone HEALTHY slot must not race (0.85 is above solo_accept)
+        let mut h = SyntheticEngine::new(8, 13);
+        h.admit(0, Request::new(0, vec![1; 4], 40), spec_plan(DraftMethod::Ngram, 3))
+            .unwrap();
+        let mut rep2 = EngineReport::default();
+        for _ in 0..4 {
+            h.round(&mut rep2).unwrap();
+        }
+        let mut ar2 = RaceArbiter::synthetic();
+        assert_eq!(ar2.consider(&mut h, 1, &[4, 5]).unwrap(), 0);
+    }
+
+    #[test]
+    fn min_remaining_gates_launches() {
+        let (mut e, _r) = skewed_engine(40);
+        let mut ar = RaceArbiter::synthetic();
+        ar.cfg.min_remaining = 1_000; // nothing has that much left
+        assert_eq!(ar.consider(&mut e, 2, &[4, 5]).unwrap(), 0);
+    }
+}

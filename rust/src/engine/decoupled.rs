@@ -12,10 +12,11 @@
 //! The rollout is **plan-driven** ([`rollout_decoupled_planned`]): every
 //! slot carries its own [`SlotPlan`], so chunk size (`window`), draft
 //! method and discipline vary per slot within one batch. Token drafters
-//! (sam/ngram) mix freely; model-based slots must share ONE draft model
-//! per rollout (the thread hosts a single model runtime — the paper's
-//! one-drafter-per-worker deployment; heterogeneous model batches route
-//! through `Worker::round`'s plan groups instead). A `Coupled`-mode slot
+//! (sam/ngram) mix freely, and the drafter thread hosts **multiple draft
+//! model families at once** — one KV cache per model (mirroring the
+//! worker's `draft_models` map), with one catch-up + decode chain per
+//! family per round — so Fastest-of-N replicas racing different model
+//! drafters share a single drafter thread. A `Coupled`-mode slot
 //! runs with pipeline depth 1 and keeps the bonus token — the same token
 //! dynamics as `Worker`'s coupled groups — while `Decoupled` slots run
 //! ahead and forgo the bonus.
@@ -36,6 +37,7 @@
 //! * `Verdict::Done` stops drafting for a finished request; `Shutdown`
 //!   ends the drafter thread.
 
+use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::time::Instant;
@@ -133,11 +135,14 @@ fn drafter_thread(
         })
         .collect();
 
-    // Model-based drafting state (own runtime + cache) for the single
-    // model family the plans may name, plus per-slot token drafters.
-    let model_slots: Vec<usize> =
-        (0..n).filter(|&i| specs[i].method.is_model()).collect();
-    let mut model_rt: Option<(Runtime, String, crate::runtime::KvCache, Vec<usize>)> = None;
+    // Model-based drafting state: ONE runtime shared by the thread, one
+    // KV cache + consumed counters per draft model family named by any
+    // slot's plan (the worker's `draft_models` map, thread-side), plus
+    // per-slot token drafters.
+    struct ThreadDraftModel {
+        cache: crate::runtime::KvCache,
+        consumed: Vec<usize>,
+    }
     let mut token_drafters: Vec<Option<Box<dyn TokenDrafter>>> = (0..n)
         .map(|i| {
             let mut td = specs[i].method.new_token_drafter();
@@ -147,30 +152,47 @@ fn drafter_thread(
             td
         })
         .collect();
-    if let Some(&first) = model_slots.first() {
-        let name = specs[first].method.model_name().unwrap().to_string();
+    let mut model_names: Vec<String> = Vec::new();
+    for s in &specs {
+        if let Some(name) = s.method.model_name() {
+            if !model_names.iter().any(|m| m == name) {
+                model_names.push(name.to_string());
+            }
+        }
+    }
+    let mut model_rt: Option<(Runtime, BTreeMap<String, ThreadDraftModel>)> = None;
+    if !model_names.is_empty() {
         let rt = Runtime::load(&art_dir)?;
         let bucket = rt.manifest.bucket_for(n)?;
         let p = rt.manifest.prompt_len;
-        let mut cache = rt.new_cache(&name, bucket)?;
         let pad = rt.manifest.pad_id;
-        let mut toks = vec![pad; bucket * p];
-        for &i in &model_slots {
-            toks[i * p..(i + 1) * p].copy_from_slice(&specs[i].prompt);
-        }
-        rt.prefill(&name, &toks, &mut cache)?;
-        let mut consumed = vec![0usize; bucket];
-        for (i, l) in cache.lens.iter_mut().enumerate() {
-            if model_slots.contains(&i) {
-                *l = (p - 1) as i32;
-                consumed[i] = p - 1;
-            } else {
-                // non-model rows hold prefill junk; zero their lens so the
-                // runtime's max_seq guard never trips on them
-                *l = 0;
+        let mut models = BTreeMap::new();
+        // one batched prefill per model family, covering exactly its slots
+        for name in &model_names {
+            let mut cache = rt.new_cache(name, bucket)?;
+            let mut toks = vec![pad; bucket * p];
+            let mut users = vec![false; bucket];
+            for i in 0..n {
+                if specs[i].method.model_name() == Some(name.as_str()) {
+                    toks[i * p..(i + 1) * p].copy_from_slice(&specs[i].prompt);
+                    users[i] = true;
+                }
             }
+            rt.prefill(name, &toks, &mut cache)?;
+            let mut consumed = vec![0usize; bucket];
+            for (i, l) in cache.lens.iter_mut().enumerate() {
+                if users.get(i).copied().unwrap_or(false) {
+                    *l = (p - 1) as i32;
+                    consumed[i] = p - 1;
+                } else {
+                    // non-user rows hold prefill junk; zero their lens so
+                    // the runtime's max_seq guard never trips on them
+                    *l = 0;
+                }
+            }
+            models.insert(name.clone(), ThreadDraftModel { cache, consumed });
         }
-        model_rt = Some((rt, name, cache, consumed));
+        model_rt = Some((rt, models));
     }
 
     // Round-reused buffers (allocated once; see module docs).
@@ -231,11 +253,19 @@ fn drafter_thread(
         for &i in &draftable {
             proposals[i].clear();
         }
-        if let Some((rt, name, cache, consumed)) = &mut model_rt {
-            draftable_model.clear();
-            draftable_model
-                .extend(draftable.iter().copied().filter(|&i| specs[i].method.is_model()));
-            if !draftable_model.is_empty() {
+        if let Some((rt, models)) = &mut model_rt {
+            for (name, st) in models.iter_mut() {
+                let (cache, consumed) = (&mut st.cache, &mut st.consumed);
+                draftable_model.clear();
+                draftable_model.extend(
+                    draftable
+                        .iter()
+                        .copied()
+                        .filter(|&i| specs[i].method.model_name() == Some(name.as_str())),
+                );
+                if draftable_model.is_empty() {
+                    continue;
+                }
                 let bucket = cache.batch;
                 let pad = rt.manifest.pad_id;
                 // catch-up: consume mirror tokens (seq + ahead, minus the
@@ -390,22 +420,13 @@ pub fn rollout_decoupled_planned(
         bail!("{} plans for {n} requests", plans.len());
     }
     let mut max_k = 0usize;
-    let mut model: Option<&str> = None;
     for p in plans {
         if p.window == 0 {
             bail!("vanilla slots belong in Worker::round, not the drafter thread");
         }
         max_k = max_k.max(p.window);
         if let Some(name) = p.method.model_name() {
-            match model {
-                None => model = Some(name),
-                Some(prev) if prev == name => {}
-                Some(prev) => bail!(
-                    "decoupled drafter thread hosts one model family: {prev:?} vs {name:?} \
-                     (mix token drafters freely; heterogeneous model batches route through \
-                     Worker::round)"
-                ),
-            }
+            m.model(name)?; // fail fast before the thread spawns
         }
     }
     // verify window: smallest lowered step window covering the largest

@@ -19,10 +19,13 @@
 //!   on separate threads with bounded per-slot draft windows (§4.1).
 //!
 //! The batch is **slot-dynamic**: [`Worker::admit`] prefill-joins a new
-//! request into a free slot mid-flight and [`Worker::retire`] frees a
-//! finished one, so the serve loop (`serve/`) can keep occupancy high
-//! under open-loop arrivals; plans are hot-swapped in place by
-//! [`Worker::set_plan`] (Algorithm 2 reconfiguration, serve replanning).
+//! request into a free slot mid-flight, [`Worker::retire`] frees a
+//! finished one, and [`Worker::fork`] clones a live slot (request state +
+//! verified-prefix KV row) into a free slot as a Fastest-of-N racing
+//! replica (`coordinator::race`), so the serve loop (`serve/`) can keep
+//! occupancy high under open-loop arrivals and spend idle slots on tail
+//! races; plans are hot-swapped in place by [`Worker::set_plan`]
+//! (Algorithm 2 reconfiguration, serve replanning).
 //!
 //! All modes produce **identical token sequences** for the same seed (the
 //! losslessness invariant; enforced by `rust/tests/losslessness.rs` —

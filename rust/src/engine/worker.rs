@@ -519,6 +519,56 @@ impl<'rt> Worker<'rt> {
         Ok(())
     }
 
+    /// Fork the live request in `src` into the **free** slot `dst` under
+    /// `plan` — the engine half of Fastest-of-N racing (Algorithm 3). The
+    /// replica clones the request state and copies the verified-prefix KV
+    /// row through the same `extract_row`/`insert_row` migration path
+    /// admissions use; its drafter state is rebuilt from the verified
+    /// prefix (a token drafter re-indexes `seq`, a model drafter's cache
+    /// row is re-fed lazily through the next round's catch-up, exactly
+    /// like [`Worker::set_plan`]). Because the sampling tape is keyed by
+    /// (seed, request id, position) — never by slot — primary and replica
+    /// generate IDENTICAL tokens from here on; only their round counts
+    /// differ, which is what the race arbiter measures. A fork is a
+    /// control-plane cost: one KV row copy, no prefill.
+    pub fn fork(&mut self, src: usize, dst: usize, plan: SlotPlan) -> Result<()> {
+        if src >= self.bucket || dst >= self.bucket {
+            bail!("fork {src} -> {dst} out of range (bucket {})", self.bucket);
+        }
+        if src == dst {
+            bail!("fork source and destination are both slot {src}");
+        }
+        let Some(req) = self.slots[src].clone() else {
+            bail!("fork source slot {src} is empty");
+        };
+        if req.done {
+            bail!("fork source request {} already finished", req.id);
+        }
+        if self.slots[dst].is_some() {
+            bail!("fork destination slot {dst} already occupied");
+        }
+        self.validate_plan(&plan)?;
+        let row = self.cache.extract_row(src)?;
+        self.cache.insert_row(dst, &row)?;
+        self.token_drafters[dst] = if plan.window > 0 {
+            if let Some(name) = plan.method.model_name() {
+                // consumed stays 0: the next draft round's catch-up feeds
+                // the whole verified prefix in windowed steps
+                self.ensure_draft_model(name)?;
+                None
+            } else {
+                let mut td = plan.method.new_token_drafter().expect("token method");
+                td.extend(&req.seq);
+                Some(td)
+            }
+        } else {
+            None
+        };
+        self.plans[dst] = plan;
+        self.slots[dst] = Some(req);
+        Ok(())
+    }
+
     /// Remove the request occupying `slot` and free its cache rows (target
     /// and every draft model) for reuse by a later admission.
     pub fn retire(&mut self, slot: usize) -> Result<Request> {

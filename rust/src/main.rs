@@ -13,7 +13,7 @@ use std::path::PathBuf;
 use std::process::exit;
 
 use specactor::coordinator::global::{plan_initial, rollout, GlobalConfig};
-use specactor::coordinator::Reconfigurator;
+use specactor::coordinator::{RaceArbiter, Reconfigurator};
 use specactor::drafter::DraftMethod;
 use specactor::engine::{EngineConfig, Request, SlotPlan, VerifyDiscipline, Worker};
 use specactor::ladder::Ladder;
@@ -42,6 +42,9 @@ fn usage() -> ! {
            --drafter D       sam | ngram | draft_small | draft_mid | auto (default sam;\n\
                              auto = ladder picks per occupancy; applied, not advisory)\n\
            --reconfig-period N  run Algorithm 2 every N rounds (0 = off, default 0)\n\
+           --fon-race        race tail stragglers in-process (Algorithm 3): fork the\n\
+                             worst below-mean slot into idle slots under next-best\n\
+                             draft methods; first finisher wins, admissions preempt\n\
            --vanilla         disable speculation (plain decode rounds)\n\
            --grouped-verify  pre-fusion A/B: one target step per (method, window)\n\
                              plan group instead of one fused ragged step per round\n\
@@ -122,6 +125,23 @@ fn print_serve_summary<E: ServeEngine>(engine: &str, b: &Batcher<E>, rep: &OpenL
             m.reconfigured_slots
         );
     }
+    if b.race.is_some() {
+        let by_method: Vec<String> = m
+            .race_wins_by_method
+            .iter()
+            .map(|(k, v)| format!("{k}:{v}"))
+            .collect();
+        println!(
+            "  fon races (Algorithm 3): {} launched ({} replicas), {} replica wins [{}], \
+             {} replicas cancelled ({} rounds wasted)",
+            m.races,
+            m.race_launches,
+            m.race_wins,
+            by_method.join(" "),
+            m.race_cancelled_replicas,
+            m.race_wasted_rounds
+        );
+    }
 }
 
 fn cmd_serve(mut args: Args) {
@@ -135,6 +155,7 @@ fn cmd_serve(mut args: Args) {
     let drafter = args.opt("drafter", "sam");
     let seed = args.opt_parse("seed", 7u64);
     let reconfig_period = args.opt_parse("reconfig-period", 0u64);
+    let fon_race = args.flag("fon-race");
     let vanilla = args.flag("vanilla");
     let grouped = args.flag("grouped-verify");
     let smoke = args.flag("smoke");
@@ -168,6 +189,9 @@ fn cmd_serve(mut args: Args) {
         let mut b = Batcher::new(engine, queue_cap, replan, !vanilla);
         if reconfig_period > 0 && !vanilla {
             b = b.with_reconfig(Reconfigurator::synthetic(reconfig_period));
+        }
+        if fon_race && !vanilla {
+            b = b.with_racing(RaceArbiter::synthetic());
         }
         match drive_open_loop(&mut b, arrivals, Some(1.0e-3)) {
             Ok(rep) => print_serve_summary("synthetic", &b, &rep),
@@ -221,7 +245,7 @@ fn cmd_serve(mut args: Args) {
     // way the replanner's choice is APPLIED to slots on admission.
     let profiled_all = TraceConfig::grpo_32b_20k().profiled_acceptance();
     let profiled = if drafter == "auto" {
-        profiled_all
+        profiled_all.clone()
     } else {
         let p = profiled_all
             .iter()
@@ -239,6 +263,23 @@ fn cmd_serve(mut args: Args) {
             7,
             reconfig_period,
         ));
+    }
+    if fon_race && !vanilla {
+        // race rank: every profiled method this artifact set can serve
+        // (token drafters always qualify; sam joins even unprofiled —
+        // the suffix automaton piggybacks on any worker), best-first
+        let mut rank: Vec<(String, f64)> = profiled_all
+            .iter()
+            .filter(|(n, _)| {
+                matches!(n.as_str(), "ngram" | "sam") || m.models.contains_key(n)
+            })
+            .cloned()
+            .collect();
+        if !rank.iter().any(|(n, _)| n == "sam") {
+            rank.push(("sam".to_string(), 0.6));
+        }
+        rank.sort_by(|x, y| y.1.total_cmp(&x.1));
+        b = b.with_racing(RaceArbiter::for_manifest(&m, CostModel::paper_32b(), rank));
     }
     match drive_open_loop(&mut b, arrivals, None) {
         Ok(rep) => {
@@ -411,7 +452,11 @@ fn cmd_rollout(mut args: Args) {
         seed: 7,
         fon: true,
     };
-    let summary = rollout(&gcfg, prompts, budget, &[method], window).unwrap();
+    // full ladder rank (primary first) so Algorithm 3 has methods to race
+    let rank: Vec<String> = std::iter::once(method.clone())
+        .chain(profiled.iter().map(|(n, _)| n.clone()).filter(|x| *x != method))
+        .collect();
+    let summary = rollout(&gcfg, prompts, budget, &rank, window).unwrap();
     let tokens: usize = summary.outcomes.iter().map(|o| o.tokens.len()).sum();
     println!(
         "rollout finished: {} requests, {} tokens, {:.2}s ({:.1} tok/s)",
@@ -420,10 +465,15 @@ fn cmd_rollout(mut args: Args) {
         summary.wall_s,
         tokens as f64 / summary.wall_s
     );
-    if !summary.fon_plans.is_empty() {
+    if summary.fon_launches > 0 {
         println!(
-            "fon: Algorithm 3 planned {} racing replica(s) on freed workers",
-            summary.fon_plans.len()
+            "fon: {} replicas raced in-process in {:.2}s, {} replica wins, {} cancelled \
+             ({} replica-rounds wasted)",
+            summary.fon_launches,
+            summary.fon_race_s,
+            summary.fon_wins,
+            summary.fon_cancelled_replicas,
+            summary.fon_wasted_replica_rounds
         );
     }
 }

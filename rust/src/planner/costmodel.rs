@@ -66,6 +66,14 @@ pub struct CostModel {
     /// scatter and logits reads are skipped host-side and its output is
     /// never consumed. Used by [`CostModel::verify_fused`].
     pub pad_waste: f64,
+    /// Control-plane cost (seconds) of forking one Fastest-of-N racing
+    /// replica: the verified-prefix KV row copy through the
+    /// `extract_row`/`insert_row` migration path plus drafter-state
+    /// rebuild — no prefill, so it is far below an admission's cost. Used
+    /// by the race launch gate ([`race_gain`]).
+    ///
+    /// [`race_gain`]: crate::coordinator::race::race_gain
+    pub fork_cost: f64,
     /// Parallel-efficiency exponent for scaling the verifier across GPU
     /// configs: slope(g) = slope_ref · (g_ref / g)^eff.
     pub tp_eff: f64,
@@ -86,6 +94,7 @@ impl CostModel {
             w_scale: 0.30,
             beta_w: 0.1e-3,
             pad_waste: 0.6,
+            fork_cost: 1.0e-3,
             tp_eff: 0.85,
             g_ref: 4,
             drafts: vec![
@@ -174,6 +183,15 @@ impl CostModel {
             + self.pad_waste * self.w_scale * self.verify1.slope * scale * pad * b as f64
     }
 
+    /// Marginal cost of ONE extra racing-replica row riding every fused
+    /// verify step: the batch-slope increment of the fused step at
+    /// `b → b + 1` (β is already paid — a replica never adds an
+    /// intercept, which is precisely why Fastest-of-N racing on freed
+    /// capacity is cheap under the fused discipline).
+    pub fn replica_overhead(&self, g_v: usize, w_mean: f64, w_step: usize, b: usize) -> f64 {
+        self.verify_fused(g_v, w_mean, w_step, b + 1) - self.verify_fused(g_v, w_mean, w_step, b)
+    }
+
     /// Decode (generation) cost of one token at batch `b` on the reference
     /// config — i.e. vanilla rollout's per-iteration latency.
     pub fn decode(&self, b: usize) -> f64 {
@@ -259,7 +277,8 @@ mod tests {
     #[test]
     fn fit_recovers_affine() {
         let truth = AffineCost::new(2e-4, 5e-3);
-        let pts: Vec<(usize, f64)> = [1, 2, 4, 8, 16, 32].iter().map(|&b| (b, truth.eval(b))).collect();
+        let pts: Vec<(usize, f64)> =
+            [1, 2, 4, 8, 16, 32].iter().map(|&b| (b, truth.eval(b))).collect();
         let (fit, r2) = AffineCost::fit(&pts);
         assert!((fit.slope - truth.slope).abs() < 1e-9);
         assert!((fit.intercept - truth.intercept).abs() < 1e-9);
@@ -283,6 +302,20 @@ mod tests {
         assert!(padded < grouped, "fused {padded} >= grouped {grouped}");
         // monotone in the step window (more padding, more waste)
         assert!(m.verify_fused(4, 2.0, 6, 64) > m.verify_fused(4, 2.0, 4, 64));
+    }
+
+    #[test]
+    fn replica_overhead_is_marginal_and_beta_free() {
+        let m = CostModel::paper_32b();
+        // adding one replica row costs the batch slope, never the intercept
+        let over = m.replica_overhead(4, 3.0, 4, 16);
+        assert!(over > 0.0);
+        assert!(
+            over < m.verify_fused(4, 3.0, 4, 1),
+            "replica overhead {over} must be below a whole b=1 step (β-free)"
+        );
+        // fork cost is a control-plane constant well under one decode step
+        assert!(m.fork_cost > 0.0 && m.fork_cost < m.decode(1));
     }
 
     #[test]

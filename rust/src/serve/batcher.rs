@@ -13,13 +13,22 @@
 //!    ladder-selected method and window are **applied** to the new slot,
 //!    so a burst that causes the crossing is admitted directly on the
 //!    crossing plan),
-//! 4. run one engine **round** over the live slots under their per-slot
+//! 4. **race** (Algorithm 3, optional): resolve finished Fastest-of-N
+//!    races (first member wins; losers cancelled; losslessness asserted),
+//!    preempt replicas when admissions need their slots, and — when the
+//!    queue is empty and occupancy sits below the [`RaceArbiter`]'s
+//!    threshold — fork the worst below-mean straggler into idle slots
+//!    under the next-best draft methods (launches priced by
+//!    `race::race_gain`: fork cost + extra fused verify rows vs expected
+//!    rounds saved),
+//! 5. run one engine **round** over the live slots under their per-slot
 //!    plans (one fused ragged verify step — or one step per
 //!    `(method, window)` group on grouped engines), and
-//! 5. **reconfigure** (Algorithm 2, optional): every `period` rounds the
+//! 6. **reconfigure** (Algorithm 2, optional): every `period` rounds the
 //!    [`Reconfigurator`] re-derives window/mode for slots whose measured
 //!    acceptance fell below the live average and the new [`SlotPlan`]s are
-//!    hot-swapped in place.
+//!    hot-swapped in place (race members excluded — the arbiter owns
+//!    them).
 //!
 //! The batcher is generic over a [`ServeEngine`] so the loop's admission /
 //! retirement / replanning / reconfiguration / telemetry logic is
@@ -35,6 +44,7 @@
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::coordinator::race::RaceArbiter;
 use crate::coordinator::reconfig::{LiveSlot, Reconfigurator};
 use crate::drafter::DraftMethod;
 use crate::engine::{
@@ -80,6 +90,19 @@ pub trait ServeEngine {
     fn verify_discipline(&self) -> VerifyDiscipline {
         VerifyDiscipline::Fused
     }
+    /// Read access to the request occupying `slot` — the race arbiter's
+    /// window into acceptance rates, remaining budget and generated
+    /// tokens. Engines that return `None` simply never race.
+    fn request(&self, _slot: usize) -> Option<&Request> {
+        None
+    }
+    /// Fork the live request in `src` into the free slot `dst` under
+    /// `plan` (a Fastest-of-N racing replica sharing `src`'s verified
+    /// prefix — `Worker::fork`). Engines without forking support error,
+    /// which the arbiter treats as "cannot race here".
+    fn fork(&mut self, _src: usize, _dst: usize, _plan: SlotPlan) -> Result<()> {
+        bail!("engine does not support replica forking")
+    }
 }
 
 impl ServeEngine for Worker<'_> {
@@ -118,6 +141,14 @@ impl ServeEngine for Worker<'_> {
     fn verify_discipline(&self) -> VerifyDiscipline {
         self.cfg.verify
     }
+
+    fn request(&self, slot: usize) -> Option<&Request> {
+        Worker::request(self, slot)
+    }
+
+    fn fork(&mut self, src: usize, dst: usize, plan: SlotPlan) -> Result<()> {
+        Worker::fork(self, src, dst, plan)
+    }
 }
 
 /// A retired request plus its serving timeline.
@@ -141,6 +172,8 @@ pub struct TickReport {
     pub replanned: bool,
     /// Slots Algorithm 2 rewrote this tick.
     pub reconfigured: usize,
+    /// Racing replicas Algorithm 3 forked this tick.
+    pub raced: usize,
 }
 
 /// The continuous-batching loop state.
@@ -155,6 +188,10 @@ pub struct Batcher<E: ServeEngine> {
     /// Request-level reconfiguration (Algorithm 2), fired every
     /// `period` rounds when present.
     pub reconfig: Option<Reconfigurator>,
+    /// In-process Fastest-of-N racing (Algorithm 3, `--fon-race`): tail
+    /// stragglers are forked into idle slots and raced under other draft
+    /// methods; the first finisher wins, admissions preempt replicas.
+    pub race: Option<RaceArbiter>,
     /// Per-slot arrival timestamp of the occupying request.
     arrival_s: Vec<f64>,
     finished: Vec<FinishedRequest>,
@@ -178,6 +215,7 @@ impl<E: ServeEngine> Batcher<E> {
             metrics: ServeMetrics::new(),
             report: EngineReport::default(),
             reconfig: None,
+            race: None,
             arrival_s: vec![0.0; cap],
             finished: Vec::new(),
             spec,
@@ -189,6 +227,14 @@ impl<E: ServeEngine> Batcher<E> {
     /// engine's verify discipline.
     pub fn with_reconfig(mut self, rc: Reconfigurator) -> Self {
         self.reconfig = Some(rc.for_discipline(self.engine.verify_discipline()));
+        self
+    }
+
+    /// Enable in-process Fastest-of-N racing (Algorithm 3): the arbiter
+    /// spends idle slots on tail races when occupancy is low and the
+    /// priced launch gate passes; real admissions preempt replicas.
+    pub fn with_racing(mut self, ar: RaceArbiter) -> Self {
+        self.race = Some(ar);
         self
     }
 
@@ -229,12 +275,42 @@ impl<E: ServeEngine> Batcher<E> {
         }
     }
 
-    /// One serving round: retire → replan → admit → decode → reconfigure.
+    /// One serving round: resolve races → retire → replan → admit →
+    /// race-launch → decode → reconfigure.
     pub fn tick(&mut self, now_s: f64) -> Result<TickReport> {
         let mut tr = TickReport::default();
 
-        // 1. retire finished requests, freeing their slots
+        // 0. resolve finished races: the first member to finish wins, the
+        //    losers are cancelled, and the winner retires as the race's
+        //    single completion (losslessness is asserted inside resolve)
+        if let Some(ar) = self.race.as_mut() {
+            for fin in ar.resolve(&mut self.engine)? {
+                for &s in &fin.freed {
+                    self.slots.release(s)?;
+                }
+                let arrival = self.arrival_s[fin.primary];
+                self.metrics.on_race_finish(
+                    fin.replica_won,
+                    &fin.winner_method,
+                    fin.cancelled,
+                    fin.wasted_rounds,
+                );
+                self.metrics.on_finish(now_s - arrival);
+                self.finished.push(FinishedRequest {
+                    req: fin.req,
+                    arrival_s: arrival,
+                    finished_s: now_s,
+                });
+                tr.retired += 1;
+            }
+        }
+
+        // 1. retire finished requests, freeing their slots (race members
+        //    are the arbiter's to retire, never the plain path's)
         for slot in 0..self.engine.capacity() {
+            if self.race.as_ref().is_some_and(|a| a.is_member(slot)) {
+                continue;
+            }
             if self.slots.is_live(slot) && self.engine.is_done(slot) {
                 let req = self.engine.retire(slot)?;
                 self.slots.release(slot)?;
@@ -242,6 +318,19 @@ impl<E: ServeEngine> Batcher<E> {
                 self.metrics.on_finish(now_s - arrival);
                 self.finished.push(FinishedRequest { req, arrival_s: arrival, finished_s: now_s });
                 tr.retired += 1;
+            }
+        }
+
+        // 1b. racing replicas yield to real work: while requests wait and
+        //     no slot is free, cancel races (replica slots only — the
+        //     primary keeps decoding) to make room for admissions
+        if let Some(ar) = self.race.as_mut() {
+            while !self.queue.is_empty() && self.slots.is_full() && ar.active_races() > 0 {
+                let c = ar.cancel_one(&mut self.engine)?;
+                for &s in &c.freed {
+                    self.slots.release(s)?;
+                }
+                self.metrics.on_race_cancel(c.replicas, c.wasted_rounds);
             }
         }
 
@@ -297,6 +386,11 @@ impl<E: ServeEngine> Batcher<E> {
             if self.spec && self.engine.verify_discipline() == VerifyDiscipline::Grouped {
                 let plan = self.current_plan();
                 for slot in 0..self.engine.capacity() {
+                    // race members keep their raced methods: rewriting a
+                    // replica's plan would corrupt the race's semantics
+                    if self.race.as_ref().is_some_and(|a| a.is_member(slot)) {
+                        continue;
+                    }
                     if self.slots.is_live(slot) {
                         self.engine.set_slot_plan(slot, plan.clone())?;
                     }
@@ -304,11 +398,45 @@ impl<E: ServeEngine> Batcher<E> {
             }
         }
 
+        // 3b. spend idle capacity on tail races (Algorithm 3): only when
+        //     nothing waits for admission and occupancy sits below the
+        //     arbiter's threshold; the launch gate prices each replica
+        //     (fork + extra fused verify row vs expected rounds saved)
+        if self.spec && self.race.is_some() && self.queue.is_empty() && !self.slots.is_full() {
+            let occ_now = self.slots.occupancy();
+            let want = self.race.as_ref().unwrap().cfg.max_replicas;
+            let mut pool = Vec::with_capacity(want);
+            while pool.len() < want {
+                match self.slots.alloc() {
+                    Some(s) => pool.push(s),
+                    None => break,
+                }
+            }
+            let ar = self.race.as_mut().unwrap();
+            let considered = ar.consider(&mut self.engine, occ_now, &pool);
+            // whatever happened, unused pool slots go back to the
+            // allocator BEFORE any error propagates — an early `?` here
+            // would leak them for the rest of the serve run
+            let used = match &considered {
+                Ok(u) => *u,
+                Err(_) => 0,
+            };
+            for &s in &pool[used..] {
+                self.slots.release(s)?;
+            }
+            let used = considered?;
+            if used > 0 {
+                self.metrics.on_race_launch(used);
+                tr.raced = used;
+            }
+        }
+
         // 4. one engine round under the live slot plans
         let before = self.report.total_generated;
         tr.active = self.engine.round(&mut self.report)?;
         tr.generated = self.report.total_generated - before;
-        self.metrics.on_round(occ, tr.generated);
+        // occupancy re-read: freshly-forked replicas are live rows too
+        self.metrics.on_round(self.slots.occupancy(), tr.generated);
 
         // 5. request-level reconfiguration (Algorithm 2) on schedule.
         //    Live-slot state (plan clones) is gathered only on firing
@@ -319,6 +447,12 @@ impl<E: ServeEngine> Batcher<E> {
                 if rc.due() {
                     for slot in 0..self.engine.capacity() {
                         if !self.slots.is_live(slot) || self.engine.is_done(slot) {
+                            continue;
+                        }
+                        // race members are off-limits to Algorithm 2: a
+                        // method rewrite mid-race would break win
+                        // attribution (the arbiter owns those slots)
+                        if self.race.as_ref().is_some_and(|a| a.is_member(slot)) {
                             continue;
                         }
                         if let Some(p) = self.engine.slot_plan(slot) {
@@ -423,6 +557,9 @@ pub struct SyntheticEngine {
     /// round when fused, one per plan group (plus a vanilla step) when
     /// grouped — so benches can A/B the step count hermetically.
     verify: VerifyDiscipline,
+    /// Tail modulus: request ids with `id % tail_mod == tail_mod - 1`
+    /// form the low-acceptance tail (`with_tail_every` varies the skew).
+    tail_mod: u64,
 }
 
 impl SyntheticEngine {
@@ -434,12 +571,20 @@ impl SyntheticEngine {
             seed,
             rounds: 0,
             verify: VerifyDiscipline::Fused,
+            tail_mod: 4,
         }
     }
 
     /// Model a grouped-verify engine instead (A/B step accounting).
     pub fn with_discipline(mut self, d: VerifyDiscipline) -> Self {
         self.verify = d;
+        self
+    }
+
+    /// Make every `m`-th request a low-acceptance tail request instead of
+    /// every 4th (the acceptance-skew axis of `benches/fon_race.rs`).
+    pub fn with_tail_every(mut self, m: u64) -> Self {
+        self.tail_mod = m.max(2);
         self
     }
 
@@ -467,12 +612,23 @@ impl SyntheticEngine {
         }
     }
 
-    /// Intrinsic per-request acceptance probability: a skewed mix — three
-    /// quarters of requests draft well, one quarter is a low-acceptance
-    /// tail (the regime where Algorithm 2 pays off).
-    pub fn accept_p(id: u64) -> f64 {
-        if id % 4 == 3 {
-            0.2
+    fn is_tail(&self, id: u64) -> bool {
+        id % self.tail_mod == self.tail_mod - 1
+    }
+
+    /// Intrinsic method-aware acceptance probability: a skewed mix — most
+    /// requests draft ~0.85 whatever the method, while the `1/tail_mod`
+    /// tail minority drafts poorly under every method EXCEPT the
+    /// suffix-automaton drafter (the hidden skew Algorithm 2 reacts to
+    /// and a Fastest-of-N race exploits: a tail straggler raced onto sam
+    /// finishes fast).
+    fn accept_for(&self, id: u64, method: &DraftMethod) -> f64 {
+        if self.is_tail(id) {
+            if *method == DraftMethod::Sam {
+                0.8
+            } else {
+                0.2
+            }
         } else {
             0.85
         }
@@ -508,21 +664,25 @@ impl ServeEngine for SyntheticEngine {
         rep.target_steps += self.steps_for_round();
         let mut active = 0usize;
         for i in 0..self.slots.len() {
-            let Some(r) = &mut self.slots[i] else { continue };
-            if r.done {
+            let Some((id, done)) = self.slots[i].as_ref().map(|r| (r.id, r.done)) else {
+                continue;
+            };
+            if done {
                 continue;
             }
             active += 1;
             let w = self.plans[i].window;
+            let p = self.accept_for(id, &self.plans[i].method);
+            let r = self.slots[i].as_mut().unwrap();
             let mut adv = 1usize;
             if w > 0 {
                 let mut rng = position_rng(self.seed, r.id, self.rounds);
-                let p = Self::accept_p(r.id);
                 let mut acc = 0usize;
                 while acc < w && rng.bernoulli(p) {
                     acc += 1;
                 }
                 adv += acc;
+                r.accept.observe(w, acc);
                 rep.drafted_tokens += w as u64;
                 rep.accepted_tokens += acc as u64;
                 rep.wasted_tokens += (w - acc) as u64;
@@ -572,6 +732,28 @@ impl ServeEngine for SyntheticEngine {
 
     fn verify_discipline(&self) -> VerifyDiscipline {
         self.verify
+    }
+
+    fn request(&self, slot: usize) -> Option<&Request> {
+        self.slots.get(slot).and_then(|s| s.as_ref())
+    }
+
+    fn fork(&mut self, src: usize, dst: usize, plan: SlotPlan) -> Result<()> {
+        if src >= self.slots.len() || dst >= self.slots.len() {
+            bail!("fork {src} -> {dst} out of range");
+        }
+        let Some(req) = self.slots[src].clone() else {
+            bail!("fork source slot {src} is empty");
+        };
+        if req.done {
+            bail!("fork source request {} already finished", req.id);
+        }
+        if self.slots[dst].is_some() {
+            bail!("fork destination slot {dst} already occupied");
+        }
+        self.plans[dst] = plan;
+        self.slots[dst] = Some(req);
+        Ok(())
     }
 }
 
@@ -743,6 +925,72 @@ mod tests {
     }
 
     #[test]
+    fn tail_race_wins_and_everything_completes() {
+        use crate::coordinator::race::RaceArbiter;
+        // ids 0..2 accept ~0.85 under every method; id 3 is the tail
+        // (0.2) whose hidden good method is sam. With racing enabled the
+        // tail must be forked onto sam and the replica must win, without
+        // duplicating or losing any request.
+        let mut b = Batcher::new(SyntheticEngine::new(8, 99), 16, replanner(), true)
+            .with_racing(RaceArbiter::synthetic());
+        for i in 0..4u64 {
+            b.enqueue(req(i, 40), Priority::Batch, 0.0);
+        }
+        let mut now = 0.0;
+        let mut guard = 0;
+        while !b.idle() {
+            b.tick(now).unwrap();
+            now += 0.01;
+            guard += 1;
+            assert!(guard < 2000, "racing serve loop did not converge");
+        }
+        assert!(b.metrics.races > 0, "the tail straggler was never raced");
+        assert!(b.metrics.race_launches >= b.metrics.races);
+        assert!(b.metrics.race_wins >= 1, "the sam replica must win the tail race");
+        assert_eq!(b.metrics.race_wins_by_method.get("sam"), Some(&b.metrics.race_wins));
+        assert!(b.metrics.race_cancelled_replicas > 0, "losing replicas must be cancelled");
+        let mut done: Vec<u64> = b.drain_finished().iter().map(|f| f.req.id).collect();
+        done.sort_unstable();
+        assert_eq!(done, vec![0, 1, 2, 3], "races must not lose or duplicate requests");
+        assert_eq!(b.metrics.completed, 4);
+        assert_eq!(b.slots.occupancy(), 0, "race slots must all be freed");
+    }
+
+    #[test]
+    fn admissions_preempt_racing_replicas() {
+        use crate::coordinator::race::RaceArbiter;
+        let mut b = Batcher::new(SyntheticEngine::new(4, 5), 16, replanner(), true)
+            .with_racing(RaceArbiter::synthetic());
+        // id 3 (tail) + id 0: occupancy 2 of 4 = at the race threshold
+        b.enqueue(req(3, 40), Priority::Batch, 0.0);
+        b.enqueue(req(0, 40), Priority::Batch, 0.0);
+        b.tick(0.0).unwrap(); // admit + first round (acceptance evidence)
+        let mut raced = 0;
+        for i in 1..6 {
+            raced += b.tick(i as f64 * 0.01).unwrap().raced;
+        }
+        assert!(raced > 0, "idle slots must be spent on the tail race");
+        assert!(b.slots.is_full(), "replicas occupy the free slots");
+        // a real request arrives while replicas hold every slot: the race
+        // must be preempted so the admission goes through
+        b.enqueue(req(8, 10), Priority::Batch, 0.1);
+        let tr = b.tick(0.1).unwrap();
+        assert_eq!(tr.admitted, 1, "preemption must free a slot for the admission");
+        assert!(b.metrics.race_cancelled_replicas > 0);
+        assert_eq!(b.race.as_ref().unwrap().active_races(), 0);
+        let mut now = 0.2;
+        let mut guard = 0;
+        while !b.idle() {
+            b.tick(now).unwrap();
+            now += 0.01;
+            guard += 1;
+            assert!(guard < 2000, "post-preemption serving did not converge");
+        }
+        let done = b.drain_finished().len();
+        assert_eq!(done, 3, "all three requests must complete");
+    }
+
+    #[test]
     fn priorities_jump_the_queue() {
         let mut b = mk_batcher(1, 16);
         b.enqueue(req(0, 6), Priority::Batch, 0.0);
@@ -776,7 +1024,7 @@ mod tests {
     #[test]
     fn reconfiguration_rewrites_straggler_plans() {
         use crate::coordinator::reconfig::Reconfigurator;
-        // ids 0..2 accept at 0.85, id 3 at 0.2 (SyntheticEngine::accept_p):
+        // ids 0..2 accept at 0.85, id 3 at 0.2 (the synthetic tail skew):
         // the below-average tail must be re-planned by Algorithm 2 while
         // the batch drains, and serving must still complete everything.
         let mut b = mk_batcher(4, 16).with_reconfig(Reconfigurator::synthetic(2));

@@ -7,6 +7,8 @@
 //! of requests served (a serving loop can't afford per-request sample
 //! vectors).
 
+use std::collections::BTreeMap;
+
 use crate::util::json::Json;
 use crate::util::stats::{P2Quantile, Welford};
 
@@ -31,6 +33,20 @@ pub struct ServeMetrics {
     pub reconfigs: u64,
     /// Individual slot plans rewritten by Algorithm 2.
     pub reconfigured_slots: u64,
+    /// Fastest-of-N races started (Algorithm 3 in-process).
+    pub races: u64,
+    /// Racing replicas forked across all races.
+    pub race_launches: u64,
+    /// Races a replica finished strictly before the primary.
+    pub race_wins: u64,
+    /// Replica wins keyed by draft-method label (bounded by the ladder
+    /// size, so the telemetry block stays O(1) in requests served).
+    pub race_wins_by_method: BTreeMap<String, u64>,
+    /// Replicas cancelled (race lost or preempted by admissions).
+    pub race_cancelled_replicas: u64,
+    /// Engine rounds spent by replicas that were then cancelled — the
+    /// speculation waste racing pays for its tail-latency win.
+    pub race_wasted_rounds: u64,
     queue_wait: Welford,
     latency_p50: P2Quantile,
     latency_p99: P2Quantile,
@@ -49,6 +65,12 @@ impl Default for ServeMetrics {
             invalid: 0,
             reconfigs: 0,
             reconfigured_slots: 0,
+            races: 0,
+            race_launches: 0,
+            race_wins: 0,
+            race_wins_by_method: BTreeMap::new(),
+            race_cancelled_replicas: 0,
+            race_wasted_rounds: 0,
             queue_wait: Welford::default(),
             latency_p50: P2Quantile::new(0.5),
             latency_p99: P2Quantile::new(0.99),
@@ -85,6 +107,39 @@ impl ServeMetrics {
         self.rounds += 1;
         self.tokens += generated;
         self.occupancy.add(occupancy as f64);
+    }
+
+    /// One race launched with `replicas` forked replicas.
+    pub fn on_race_launch(&mut self, replicas: usize) {
+        self.races += 1;
+        self.race_launches += replicas as u64;
+    }
+
+    /// A race resolved: `replica_won` with `winner_method`, cancelling
+    /// `cancelled` replicas that had burned `wasted_rounds` rounds.
+    pub fn on_race_finish(
+        &mut self,
+        replica_won: bool,
+        winner_method: &str,
+        cancelled: usize,
+        wasted_rounds: u64,
+    ) {
+        if replica_won {
+            self.race_wins += 1;
+            *self
+                .race_wins_by_method
+                .entry(winner_method.to_string())
+                .or_insert(0) += 1;
+        }
+        self.race_cancelled_replicas += cancelled as u64;
+        self.race_wasted_rounds += wasted_rounds;
+    }
+
+    /// A race was preempted for admissions: `cancelled` replicas freed
+    /// after `wasted_rounds` rounds.
+    pub fn on_race_cancel(&mut self, cancelled: usize, wasted_rounds: u64) {
+        self.race_cancelled_replicas += cancelled as u64;
+        self.race_wasted_rounds += wasted_rounds;
     }
 
     pub fn mean_queue_wait_s(&self) -> f64 {
@@ -128,6 +183,20 @@ impl ServeMetrics {
             ("invalid", Json::num(self.invalid as f64)),
             ("reconfigs", Json::num(self.reconfigs as f64)),
             ("reconfigured_slots", Json::num(self.reconfigured_slots as f64)),
+            ("races", Json::num(self.races as f64)),
+            ("race_launches", Json::num(self.race_launches as f64)),
+            ("race_wins", Json::num(self.race_wins as f64)),
+            (
+                "race_wins_by_method",
+                Json::Obj(
+                    self.race_wins_by_method
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::num(*v as f64)))
+                        .collect(),
+                ),
+            ),
+            ("race_cancelled_replicas", Json::num(self.race_cancelled_replicas as f64)),
+            ("race_wasted_rounds", Json::num(self.race_wasted_rounds as f64)),
             ("tokens_per_s", Json::num(self.tokens_per_second(wall_s))),
             ("mean_queue_wait_s", Json::num(self.mean_queue_wait_s())),
             ("latency_p50_s", Json::num(self.latency_p50_s())),
@@ -178,6 +247,26 @@ mod tests {
         assert_eq!(j.get("tokens").as_f64(), Some(12.0));
         assert_eq!(j.get("tokens_per_s").as_f64(), Some(6.0));
         assert_eq!(j.get("mean_occupancy").as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn race_counters_accumulate() {
+        let mut m = ServeMetrics::new();
+        m.on_race_launch(2);
+        m.on_race_launch(1);
+        m.on_race_finish(true, "sam", 1, 7);
+        m.on_race_finish(false, "ngram", 1, 3);
+        m.on_race_cancel(1, 2);
+        assert_eq!(m.races, 2);
+        assert_eq!(m.race_launches, 3);
+        assert_eq!(m.race_wins, 1);
+        assert_eq!(m.race_wins_by_method.get("sam"), Some(&1));
+        assert_eq!(m.race_wins_by_method.get("ngram"), None, "losing methods score nothing");
+        assert_eq!(m.race_cancelled_replicas, 3);
+        assert_eq!(m.race_wasted_rounds, 12);
+        let j = m.to_json(1.0);
+        assert_eq!(j.get("race_wins").as_f64(), Some(1.0));
+        assert_eq!(j.get("race_wins_by_method").get("sam").as_f64(), Some(1.0));
     }
 
     #[test]

@@ -11,8 +11,11 @@
 //! slots' `SlotPlan`s — whenever occupancy crosses a bucket boundary
 //! ([`Replanner`]), re-specialises individual below-average slots with
 //! Algorithm 2 (`coordinator::reconfig::Reconfigurator`, every
-//! `--reconfig-period` rounds), and reports rolling
-//! latency/throughput/occupancy telemetry ([`ServeMetrics`]).
+//! `--reconfig-period` rounds), races tail stragglers in-process with
+//! Algorithm 3 (`coordinator::race::RaceArbiter`, `--fon-race`: idle
+//! slots host forked replicas under next-best draft methods, the first
+//! finisher wins, admissions preempt), and reports rolling
+//! latency/throughput/occupancy/race telemetry ([`ServeMetrics`]).
 //!
 //! Losslessness survives continuous batching: the sampling tape is keyed
 //! by (seed, request id, position), never by slot or batch composition,

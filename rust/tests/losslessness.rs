@@ -10,6 +10,7 @@
 
 use std::path::Path;
 
+use specactor::coordinator::race::RaceArbiter;
 use specactor::drafter::DraftMethod;
 use specactor::engine::{
     rollout_decoupled, rollout_decoupled_planned, EngineConfig, EngineReport, Request, SlotPlan,
@@ -239,6 +240,79 @@ fn fused_mid_rollout_window_switch_is_lossless() {
     w.set_plan(1, SlotPlan::decoupled(DraftMethod::Ngram, 1)).unwrap();
     w.rollout_planned().unwrap();
     assert_eq!(w.outputs(), want, "fused mid-rollout window switch diverged from vanilla");
+}
+
+/// Fastest-of-N racing is lossless: fork a MID-FLIGHT slot into three
+/// replicas — sam, ngram and a model drafter — race all four members in
+/// one worker, and the winner (whoever it is) must emit exactly the
+/// uninterrupted-vanilla sequence. Exercised under both verify
+/// disciplines; the arbiter additionally asserts member-vs-member
+/// prefix/equality at resolution time.
+#[test]
+fn forked_race_is_lossless_in_both_disciplines() {
+    let rt = Runtime::load(art()).unwrap();
+    let want = vanilla_outputs(&rt, 1, 20);
+    for discipline in [VerifyDiscipline::Fused, VerifyDiscipline::Grouped] {
+        let cfg = EngineConfig { verify: discipline, ..Default::default() };
+        let mut w = Worker::with_capacity(&rt, cfg, 4).unwrap();
+        w.admit_with_plan(
+            0,
+            mk_requests(&rt, 1, 20).pop().unwrap(),
+            SlotPlan::coupled(DraftMethod::Model("draft_small".to_string()), 3),
+        )
+        .unwrap();
+        let mut rep = EngineReport::default();
+        for _ in 0..3 {
+            assert!(w.round(&mut rep).unwrap() > 0, "request drained before the fork");
+        }
+        w.fork(0, 1, SlotPlan::coupled(DraftMethod::Sam, 2)).unwrap();
+        w.fork(0, 2, SlotPlan::coupled(DraftMethod::Ngram, 4)).unwrap();
+        w.fork(0, 3, SlotPlan::coupled(DraftMethod::Model("draft_mid".to_string()), 3))
+            .unwrap();
+        let mut ar = RaceArbiter::manual();
+        ar.register(&w, 0, &[1, 2, 3]).unwrap();
+        let mut guard = 0;
+        let fin = loop {
+            assert!(w.round(&mut rep).unwrap() > 0, "race drained without a finisher");
+            if let Some(f) = ar.resolve(&mut w).unwrap().pop() {
+                break f;
+            }
+            guard += 1;
+            assert!(guard < 200, "race did not resolve ({discipline:?})");
+        };
+        let out = fin.req.seq[fin.req.prompt.len()..].to_vec();
+        assert_eq!(
+            out, want[0],
+            "{discipline:?}: race winner ({}) diverged from vanilla",
+            fin.winner_method
+        );
+        assert_eq!(fin.freed.len(), 4, "every race slot must be freed");
+        assert_eq!(w.occupancy(), 0);
+    }
+}
+
+/// Multi-model drafter threads: a single decoupled drafter thread hosting
+/// TWO model families (draft_small + draft_mid) alongside sam and ngram
+/// slots — the mixed plan set the Fastest-of-N replicas produce — must
+/// roll out token-identical to vanilla.
+#[test]
+fn decoupled_two_model_families_on_one_thread_equal_vanilla() {
+    let rt = Runtime::load(art()).unwrap();
+    let want = vanilla_outputs(&rt, 4, 16);
+    let plans = vec![
+        SlotPlan::decoupled(DraftMethod::Model("draft_small".to_string()), 3),
+        SlotPlan::decoupled(DraftMethod::Model("draft_mid".to_string()), 2),
+        SlotPlan::decoupled(DraftMethod::Sam, 3),
+        SlotPlan::coupled(DraftMethod::Ngram, 2),
+    ];
+    let mut reqs = mk_requests(&rt, 4, 16);
+    let rep =
+        rollout_decoupled_planned(&rt, art(), &EngineConfig::default(), &mut reqs, &plans)
+            .unwrap();
+    let outs: Vec<Vec<i32>> = reqs.iter().map(|r| r.seq[r.prompt.len()..].to_vec()).collect();
+    assert_eq!(outs, want, "two-model-family decoupled rollout diverged from vanilla");
+    assert!(rep.total_generated >= 4 * 16, "under-generated");
+    assert!(rep.drafted_tokens > 0);
 }
 
 #[test]
