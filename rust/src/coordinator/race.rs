@@ -37,7 +37,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::reconfig::cost_method;
 use crate::drafter::DraftMethod;
-use crate::engine::{EngineConfig, EngineReport, Request, SlotPlan, Worker};
+use crate::engine::{EngineConfig, EngineReport, Request, SlotPlan, SpecError, Worker};
 use crate::planner::costmodel::CostModel;
 use crate::planner::tgs::{step_up, tau_coupled};
 use crate::runtime::{Manifest, Runtime};
@@ -286,10 +286,25 @@ impl RaceArbiter {
             return Ok(0);
         }
 
-        let plan = engine.slot_plan(primary).expect("candidate has a plan");
+        // the candidate was scanned live with a plan just above, so a
+        // miss here means the engine's slot table is inconsistent — a
+        // typed SlotFatal, not a panic (the batcher quarantines it)
+        let Some(plan) = engine.slot_plan(primary) else {
+            return Err(SpecError::RequestStateInconsistent {
+                slot: primary,
+                detail: "race candidate lost its plan between scan and fork".into(),
+            }
+            .into());
+        };
         let cur_label = plan.method.label();
         let (id, remaining) = {
-            let r = engine.request(primary).expect("candidate is live");
+            let Some(r) = engine.request(primary) else {
+                return Err(SpecError::RequestStateInconsistent {
+                    slot: primary,
+                    detail: "race candidate is no longer live".into(),
+                }
+                .into());
+            };
             (r.id, r.budget - r.generated())
         };
         let w = plan.window.max(1);

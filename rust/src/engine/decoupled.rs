@@ -45,10 +45,11 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Result};
 
 use crate::drafter::{DraftMethod, TokenDrafter};
-use crate::runtime::Runtime;
-use crate::spec::{verify_exact, DraftWindow};
+use crate::runtime::{KvCache, Runtime};
+use crate::spec::{decode_one, verify_exact, DraftWindow};
 use crate::util::rng::{position_rng, sample_logits};
 
+use super::fault::SpecError;
 use super::plan::{PlanMode, SlotPlan};
 use super::worker::{EngineConfig, EngineReport, Request};
 
@@ -492,7 +493,7 @@ pub fn rollout_decoupled_planned(
     let mut vwidths = vec![0usize; bucket];
 
     let active = |reqs: &Vec<Request>| reqs.iter().filter(|r| !r.done).count();
-    while active(requests) > 0 {
+    'serve: while active(requests) > 0 {
         // Gather one fresh chunk per active slot (discard stale ones).
         loop {
             let missing = (0..n)
@@ -501,9 +502,21 @@ pub fn rollout_decoupled_planned(
             if missing == 0 {
                 break;
             }
-            let chunk = chunk_rx
-                .recv()
-                .map_err(|_| anyhow!("drafter thread died"))?;
+            let chunk = match chunk_rx.recv() {
+                Ok(c) => c,
+                Err(_) => {
+                    // Drafter thread died (panicked or dropped its
+                    // sender). Speculation is an accelerator, never a
+                    // correctness dependency: degrade instead of
+                    // aborting and finish every unfinished request with
+                    // plain width-1 decode on the same target cache and
+                    // sampling tape — token-identical output, per the
+                    // (seed, request, position) tape invariant.
+                    rep.drafter_degrades += 1;
+                    finish_vanilla(rt, &target, cfg, requests, &mut cache, pad, eos, &mut rep)?;
+                    break 'serve;
+                }
+            };
             let i = chunk.slot;
             if requests[i].done {
                 continue;
@@ -555,10 +568,20 @@ pub fn rollout_decoupled_planned(
             let Some(c) = pending[i].take() else { continue };
             let seq_len = requests[i].seq.len();
             let id = requests[i].id;
+            if out.logits_at(i, c.tokens.len()).is_err() {
+                return Err(SpecError::KvRowInvalid {
+                    slot: i,
+                    detail: format!(
+                        "verify row narrower than its chunk ({} tokens)",
+                        c.tokens.len()
+                    ),
+                }
+                .into());
+            }
             let outcome =
                 verify_exact(id, cfg.seed, cfg.temperature, seq_len, &c.tokens, |j| {
                     out.logits_at(i, j)
-                        .expect("verify reads stay inside the row's real window")
+                        .expect("guarded above: j <= chunk len is inside the row")
                 });
             let budget_left = requests[i].budget - requests[i].generated();
             let mut append = outcome.append;
@@ -606,4 +629,52 @@ pub fn rollout_decoupled_planned(
     let _ = handle.join();
     rep.wall_s = t0.elapsed().as_secs_f64();
     Ok(rep)
+}
+
+/// Drafter-death fallback: finish every unfinished request with plain
+/// width-1 decode on the (already-consistent) target cache. The sampling
+/// tape is keyed by (seed, request id, position), so the tokens emitted
+/// here are identical to the ones speculation would have produced — the
+/// degradation costs throughput, never correctness.
+#[allow(clippy::too_many_arguments)]
+fn finish_vanilla(
+    rt: &Runtime,
+    target: &str,
+    cfg: &EngineConfig,
+    requests: &mut [Request],
+    cache: &mut KvCache,
+    pad: i32,
+    eos: i32,
+    rep: &mut EngineReport,
+) -> Result<()> {
+    let bucket = cache.batch;
+    let mut toks = vec![pad; bucket];
+    loop {
+        let live: Vec<usize> =
+            (0..requests.len()).filter(|&i| !requests[i].done).collect();
+        if live.is_empty() {
+            return Ok(());
+        }
+        toks.fill(pad);
+        for &i in &live {
+            toks[i] = *requests[i].seq.last().unwrap();
+        }
+        // done/free rows ride along as pad: their lens stay frozen, so
+        // the garbage KV written at lens is overwritten by any real step
+        let out = rt.step(target, &toks, 1, cache)?;
+        rep.target_steps += 1;
+        rep.iterations += 1;
+        for &i in &live {
+            let (id, seq_len) = (requests[i].id, requests[i].seq.len());
+            let t = decode_one(id, cfg.seed, cfg.temperature, seq_len, out.at(i, 0));
+            let r = &mut requests[i];
+            r.seq.push(t);
+            r.iterations += 1;
+            cache.lens[i] += 1;
+            rep.total_generated += 1;
+            if r.generated() >= r.budget || r.seq.last() == Some(&eos) {
+                r.done = true;
+            }
+        }
+    }
 }

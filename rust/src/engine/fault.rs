@@ -1,0 +1,163 @@
+//! Typed fault taxonomy for the speculation layer.
+//!
+//! SpecActor's core contract is that speculation is an *accelerator,
+//! never a correctness dependency* — so every failure raised by the
+//! drafting/verification machinery is classified by what the serve loop
+//! may safely do about it:
+//!
+//! * [`Severity::Degradable`] — the slot's (or the whole batch's)
+//!   speculative apparatus failed, but the verified prefix and the
+//!   target-model row are intact. The batcher force-replans the affected
+//!   slot(s) to `SlotPlan::vanilla()` (window 0 — plain decode, provably
+//!   lossless: the sampling tape is keyed by (seed, request, position),
+//!   never by plan) and re-promotes them with exponential backoff.
+//! * [`Severity::SlotFatal`] — one slot's state (KV row, request
+//!   bookkeeping) can no longer be trusted. The batcher quarantines the
+//!   slot: retire, re-enqueue the request at the front of its lane with
+//!   its already-verified output tokens preserved, and re-admit through
+//!   the ordinary staging-prefill + catch-up path, bounded by a
+//!   per-request retry budget.
+//! * [`Severity::WorkerFatal`] — the engine itself is broken (runtime
+//!   error, geometry violation); the serve loop propagates the error.
+//!
+//! Errors are raised as `anyhow::Error` wrapping a [`SpecError`] (so the
+//! existing `Result<_, anyhow::Error>` plumbing is unchanged) and
+//! recovered in `Batcher::tick` via `downcast_ref::<SpecError>()` —
+//! untyped errors stay fatal, exactly as before this layer existed.
+
+use std::fmt;
+
+/// What the serve loop may safely do about a [`SpecError`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Severity {
+    /// Speculation state lost; verified prefix intact → degrade to
+    /// vanilla decode (lossless), re-promote with backoff.
+    Degradable,
+    /// One slot's state is untrustworthy → quarantine + re-prefill.
+    SlotFatal,
+    /// The engine is broken → propagate.
+    WorkerFatal,
+}
+
+/// A classified speculation-layer failure.
+#[derive(Clone, Debug)]
+pub enum SpecError {
+    /// The decoupled drafter thread died (panic / channel closed). All
+    /// of its slots degrade; the fused verify path carries them.
+    DrafterDead { detail: String },
+    /// A draft-model cache catch-up failed for one slot.
+    DraftCatchUp { slot: usize, detail: String },
+    /// Forking a racing replica failed; the race degrades to the
+    /// members already forked (never dooms the primary).
+    ForkFailed { src: usize, dst: usize, detail: String },
+    /// A draft-model cache row is corrupt for one slot.
+    DraftRowCorrupt { slot: usize, detail: String },
+    /// The slot's target KV row is invalid — the verified prefix can no
+    /// longer be trusted in place.
+    KvRowInvalid { slot: usize, detail: String },
+    /// The slot's request bookkeeping is inconsistent with the engine.
+    RequestStateInconsistent { slot: usize, detail: String },
+    /// The engine itself failed (runtime step error, geometry).
+    Worker { detail: String },
+}
+
+impl SpecError {
+    /// The recovery class this failure belongs to.
+    pub fn severity(&self) -> Severity {
+        match self {
+            SpecError::DrafterDead { .. }
+            | SpecError::DraftCatchUp { .. }
+            | SpecError::ForkFailed { .. }
+            | SpecError::DraftRowCorrupt { .. } => Severity::Degradable,
+            SpecError::KvRowInvalid { .. } | SpecError::RequestStateInconsistent { .. } => {
+                Severity::SlotFatal
+            }
+            SpecError::Worker { .. } => Severity::WorkerFatal,
+        }
+    }
+
+    /// The slot the failure is scoped to (None = batch-wide, e.g. a dead
+    /// drafter thread).
+    pub fn slot(&self) -> Option<usize> {
+        match self {
+            SpecError::DrafterDead { .. } | SpecError::Worker { .. } => None,
+            SpecError::ForkFailed { dst, .. } => Some(*dst),
+            SpecError::DraftCatchUp { slot, .. }
+            | SpecError::DraftRowCorrupt { slot, .. }
+            | SpecError::KvRowInvalid { slot, .. }
+            | SpecError::RequestStateInconsistent { slot, .. } => Some(*slot),
+        }
+    }
+}
+
+impl fmt::Display for SpecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SpecError::DrafterDead { detail } => write!(f, "drafter thread died: {detail}"),
+            SpecError::DraftCatchUp { slot, detail } => {
+                write!(f, "draft-cache catch-up failed for slot {slot}: {detail}")
+            }
+            SpecError::ForkFailed { src, dst, detail } => {
+                write!(f, "race fork {src} -> {dst} failed: {detail}")
+            }
+            SpecError::DraftRowCorrupt { slot, detail } => {
+                write!(f, "draft model row corrupt for slot {slot}: {detail}")
+            }
+            SpecError::KvRowInvalid { slot, detail } => {
+                write!(f, "KV row invalid for slot {slot}: {detail}")
+            }
+            SpecError::RequestStateInconsistent { slot, detail } => {
+                write!(f, "request state inconsistent for slot {slot}: {detail}")
+            }
+            SpecError::Worker { detail } => write!(f, "worker failure: {detail}"),
+        }
+    }
+}
+
+impl std::error::Error for SpecError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn severity_classification() {
+        let deg = [
+            SpecError::DrafterDead { detail: "x".into() },
+            SpecError::DraftCatchUp { slot: 1, detail: "x".into() },
+            SpecError::ForkFailed { src: 0, dst: 2, detail: "x".into() },
+            SpecError::DraftRowCorrupt { slot: 3, detail: "x".into() },
+        ];
+        assert!(deg.iter().all(|e| e.severity() == Severity::Degradable));
+        let fatal = [
+            SpecError::KvRowInvalid { slot: 1, detail: "x".into() },
+            SpecError::RequestStateInconsistent { slot: 2, detail: "x".into() },
+        ];
+        assert!(fatal.iter().all(|e| e.severity() == Severity::SlotFatal));
+        assert_eq!(
+            SpecError::Worker { detail: "x".into() }.severity(),
+            Severity::WorkerFatal
+        );
+    }
+
+    #[test]
+    fn slot_scoping() {
+        assert_eq!(SpecError::DrafterDead { detail: "x".into() }.slot(), None);
+        assert_eq!(SpecError::Worker { detail: "x".into() }.slot(), None);
+        assert_eq!(
+            SpecError::ForkFailed { src: 0, dst: 5, detail: "x".into() }.slot(),
+            Some(5)
+        );
+        assert_eq!(SpecError::KvRowInvalid { slot: 3, detail: "x".into() }.slot(), Some(3));
+    }
+
+    #[test]
+    fn downcasts_through_anyhow() {
+        // The recovery path in Batcher::tick depends on this round-trip.
+        let err: anyhow::Error = SpecError::DraftCatchUp { slot: 4, detail: "boom".into() }.into();
+        let se = err.downcast_ref::<SpecError>().expect("typed error survives anyhow");
+        assert_eq!(se.severity(), Severity::Degradable);
+        assert_eq!(se.slot(), Some(4));
+        assert!(err.to_string().contains("slot 4"));
+    }
+}

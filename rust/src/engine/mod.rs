@@ -33,9 +33,11 @@
 //! across staggered admits/retires, `rust/tests/serve_lossless.rs`).
 
 pub mod decoupled;
+pub mod fault;
 pub mod plan;
 pub mod worker;
 
 pub use decoupled::{rollout_decoupled, rollout_decoupled_planned};
+pub use fault::{Severity, SpecError};
 pub use plan::{same_group, PlanMode, SlotPlan, VerifyDiscipline};
 pub use worker::{EngineConfig, EngineReport, Request, SlotAccept, Worker};

@@ -39,6 +39,7 @@ use crate::runtime::{KvCache, Runtime};
 use crate::spec::{decode_one, verify_exact, AcceptanceStats, VerifyOutcome};
 use crate::util::rng::{position_rng, sample_logits};
 
+use super::fault::SpecError;
 use super::plan::{same_group, PlanMode, SlotPlan, VerifyDiscipline};
 
 /// One rollout request.
@@ -139,6 +140,10 @@ pub struct EngineReport {
     /// iterations" in the paper's §5.2 metric).
     pub skipped_iterations: u64,
     pub iterations: u64,
+    /// Drafter-death degradations survived: rollouts that lost their
+    /// drafter mid-flight and finished on plain decode (token-identical
+    /// by the sampling-tape invariant, just slower).
+    pub drafter_degrades: u64,
     /// Per-slot drafted/accepted counters, indexed by batch slot (grown on
     /// first use; cumulative across the report's lifetime — consumers
     /// wanting recent rates take deltas).
@@ -438,7 +443,7 @@ impl<'rt> Worker<'rt> {
                 Some(r) if self.plans[i].window > 0 => {
                     let mut td = self.plans[i].method.new_token_drafter();
                     if let Some(t) = td.as_mut() {
-                        t.extend(&r.prompt);
+                        t.extend(&r.seq);
                     }
                     td
                 }
@@ -483,6 +488,24 @@ impl<'rt> Worker<'rt> {
         let stage = self.stage.as_mut().unwrap();
         self.rt.prefill(&self.target, &toks, stage)?;
         stage.lens[0] = (p - 1) as i32;
+        // Quarantine re-admission: a request carrying verified output
+        // beyond its prompt replays the rest of its sequence through the
+        // staging cache in windowed catch-up steps, so the migrated row
+        // holds exactly seq.len() - 1 consumed tokens — byte-identical to
+        // a row that never faulted. Fresh requests (seq == prompt) skip
+        // this loop entirely.
+        let want = req.seq.len() - 1;
+        let mut consumed = p - 1;
+        while consumed < want {
+            let w = self.rt.manifest.window_for(want - consumed)?;
+            let take = (want - consumed).min(w);
+            toks.clear();
+            toks.resize(sb * w, self.pad);
+            toks[..take].copy_from_slice(&req.seq[consumed..consumed + take]);
+            self.rt.step(&self.target, &toks, w, stage)?;
+            stage.lens[0] += take as i32;
+            consumed += take;
+        }
         let row = stage.extract_row(0)?;
         self.cache.insert_row(slot, &row)?;
 
@@ -496,6 +519,11 @@ impl<'rt> Worker<'rt> {
                     st.stage = Some(rt.new_cache(&name, sb)?);
                 }
                 let sd = st.stage.as_mut().unwrap();
+                // the target catch-up above may have repurposed `toks`;
+                // lay the prompt out again for the draft prefill
+                toks.clear();
+                toks.resize(sb * p, self.pad);
+                toks[..p].copy_from_slice(&req.prompt);
                 rt.prefill(&name, &toks, sd)?;
                 sd.lens[0] = (p - 1) as i32;
                 let drow = sd.extract_row(0)?;
@@ -508,7 +536,10 @@ impl<'rt> Worker<'rt> {
         self.token_drafters[slot] = if plan.window > 0 {
             let mut td = plan.method.new_token_drafter();
             if let Some(t) = td.as_mut() {
-                t.extend(&req.prompt);
+                // the whole verified sequence, not just the prompt: a
+                // re-admitted (quarantined) request drafts from its full
+                // history exactly as it did before the fault
+                t.extend(&req.seq);
             }
             td
         } else {
@@ -845,16 +876,25 @@ impl<'rt> Worker<'rt> {
                 );
                 self.apply_decode(i, t, rep);
             } else {
+                // Typed guard instead of a panic inside the closure: the
+                // verify reads j in 0..=k and the row was stepped at
+                // width k + 1, so a short row means the KV row no longer
+                // matches the request — a quarantinable fault, not an
+                // engine abort.
+                if out.logits_at(i, k).is_err() {
+                    return Err(SpecError::KvRowInvalid {
+                        slot: i,
+                        detail: format!("verify row narrower than its window {k}"),
+                    }
+                    .into());
+                }
                 let outcome = verify_exact(
                     id,
                     self.cfg.seed,
                     self.cfg.temperature,
                     seq_len,
                     &drafts[i],
-                    |j| {
-                        out.logits_at(i, j)
-                            .expect("verify reads stay inside the row's real window")
-                    },
+                    |j| out.logits_at(i, j).expect("guarded above: j <= k is inside the row"),
                 );
                 self.apply_outcome(i, drafts[i].len(), outcome, rep);
             }
@@ -1221,6 +1261,38 @@ impl<'rt> Worker<'rt> {
             self.set_plan(i, p)?;
         }
         self.rollout_planned()
+    }
+
+    /// Weight-update invalidation hook (the serve loop's
+    /// `ServeEngine::invalidate_draft_state`): the policy weights changed
+    /// mid-wave, so every draft-side cache is stale. Draft-model rows are
+    /// invalidated in place (`consumed = 0` — the next draft round's
+    /// catch-up re-feeds each verified prefix in windowed steps, exactly
+    /// like a plan switch) and token drafters are rebuilt from the
+    /// verified sequences. Target-side state belongs to the new weights
+    /// and is not touched here. Lossless by construction: drafts only
+    /// *propose* — verification against the target decides every token.
+    pub fn invalidate_draft_state(&mut self) -> Result<()> {
+        for st in self.draft_models.values_mut() {
+            for slot in 0..self.bucket {
+                st.cache.clear_row(slot)?;
+                st.consumed[slot] = 0;
+            }
+        }
+        for slot in 0..self.bucket {
+            let Some(r) = self.slots[slot].as_ref() else {
+                continue;
+            };
+            if self.plans[slot].window == 0 || self.plans[slot].method.is_model() {
+                continue;
+            }
+            let mut td = self.plans[slot].method.new_token_drafter().ok_or_else(|| {
+                anyhow!("plan method for slot {slot} names no token drafter")
+            })?;
+            td.extend(&r.seq);
+            self.token_drafters[slot] = Some(td);
+        }
+        Ok(())
     }
 
     /// The request occupying `slot`, if any.

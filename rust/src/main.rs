@@ -21,8 +21,8 @@ use specactor::planner::costmodel::{AffineCost, CostModel};
 use specactor::planner::plan::{search, PlanInput};
 use specactor::runtime::Runtime;
 use specactor::serve::{
-    drive_open_loop, Batcher, OpenLoopReport, Priority, Replanner, ServeEngine, ServeMetrics,
-    SyntheticEngine,
+    drive_open_loop, Batcher, ChaosEngine, FaultPlan, OpenLoopReport, Priority, Replanner,
+    ServeEngine, ServeMetrics, SyntheticEngine,
 };
 use specactor::sim::{scaled, simulate_step, ArrivalProcess, Policy, TraceConfig};
 use specactor::util::benchkit::fmt_s;
@@ -48,6 +48,9 @@ fn usage() -> ! {
            --vanilla         disable speculation (plain decode rounds)\n\
            --grouped-verify  pre-fusion A/B: one target step per (method, window)\n\
                              plan group instead of one fused ragged step per round\n\
+           --chaos SPEC      seeded fault injection, e.g.\n\
+                             seed=7,step=0.05,drafter=0.02,slot=0.01,fork=0.05,pause=40\n\
+                             (per-round rates; pause = weight-update period in rounds)\n\
            --smoke           synthetic engine, no artifacts needed (CI)\n\
          see README / PERF.md for the remaining subcommands' options"
     );
@@ -142,6 +145,33 @@ fn print_serve_summary<E: ServeEngine>(engine: &str, b: &Batcher<E>, rep: &OpenL
             m.race_wasted_rounds
         );
     }
+    println!(
+        "  rejections: {} shed, {} malformed, {} retry-exhausted",
+        b.queue.rejected_shed, m.invalid, b.queue.rejected_retry_exhausted
+    );
+    println!(
+        "  faults: {} degradations ({} re-promotions), {} quarantines \
+         ({} requeues, {} recoveries), {} lost",
+        m.degradations, m.repromotions, m.quarantines, m.requeues, m.recoveries, m.lost
+    );
+}
+
+/// Injection accounting for a `--chaos` run (silent when the plan is
+/// inactive, so fault-free output is unchanged).
+fn print_chaos_summary<E: ServeEngine>(ce: &ChaosEngine<E>) {
+    if !ce.plan.is_active() {
+        return;
+    }
+    println!(
+        "  chaos[{}]: {} faults injected ({} step, {} drafter, {} slot, {} fork), {} pauses",
+        ce.plan.label(),
+        ce.injected(),
+        ce.injected_step,
+        ce.injected_drafter,
+        ce.injected_slot,
+        ce.injected_fork,
+        ce.pauses
+    );
 }
 
 fn cmd_serve(mut args: Args) {
@@ -159,11 +189,21 @@ fn cmd_serve(mut args: Args) {
     let vanilla = args.flag("vanilla");
     let grouped = args.flag("grouped-verify");
     let smoke = args.flag("smoke");
+    let chaos = args.opt_maybe("chaos");
     let discipline = if grouped { VerifyDiscipline::Grouped } else { VerifyDiscipline::Fused };
     args.finish().unwrap_or_else(|e| {
         eprintln!("{e}");
         usage()
     });
+    // No --chaos means an inactive plan: ChaosEngine is then a pure
+    // pass-through, so both branches keep a single engine type.
+    let fplan = match chaos.as_deref().map(FaultPlan::parse).transpose() {
+        Ok(p) => p.unwrap_or_default(),
+        Err(e) => {
+            eprintln!("bad --chaos spec: {e}");
+            usage()
+        }
+    };
 
     let proc_ = match arrival.as_str() {
         // same long-run offered load as poisson at the same --rate
@@ -186,6 +226,7 @@ fn cmd_serve(mut args: Args) {
             .collect();
         let replan = Replanner::synthetic();
         let engine = SyntheticEngine::new(capacity.max(1), seed).with_discipline(discipline);
+        let engine = ChaosEngine::new(engine, fplan);
         let mut b = Batcher::new(engine, queue_cap, replan, !vanilla);
         if reconfig_period > 0 && !vanilla {
             b = b.with_reconfig(Reconfigurator::synthetic(reconfig_period));
@@ -194,7 +235,10 @@ fn cmd_serve(mut args: Args) {
             b = b.with_racing(RaceArbiter::synthetic());
         }
         match drive_open_loop(&mut b, arrivals, Some(1.0e-3)) {
-            Ok(rep) => print_serve_summary("synthetic", &b, &rep),
+            Ok(rep) => {
+                print_serve_summary("synthetic", &b, &rep);
+                print_chaos_summary(b.engine());
+            }
             Err(e) => {
                 eprintln!("serve --smoke failed: {e}");
                 exit(1);
@@ -240,6 +284,7 @@ fn cmd_serve(mut args: Args) {
         eprintln!("worker: {e}");
         exit(1)
     });
+    let worker = ChaosEngine::new(worker, fplan);
     // --drafter pins the served method (single-rung ladder); `auto` hands
     // method selection to the ladder over the full profiled table. Either
     // way the replanner's choice is APPLIED to slots on admission.
@@ -284,6 +329,7 @@ fn cmd_serve(mut args: Args) {
     match drive_open_loop(&mut b, arrivals, None) {
         Ok(rep) => {
             print_serve_summary("pjrt", &b, &rep);
+            print_chaos_summary(b.engine());
             println!(
                 "  engine: {} target steps, {} draft steps, acceptance {:.2}",
                 b.report.target_steps,

@@ -42,18 +42,21 @@
 //! lossless test (`rust/tests/serve_lossless.rs`) replays identical
 //! admission schedules under both static and continuous batching.
 
+use std::collections::BTreeMap;
+
 use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::race::RaceArbiter;
 use crate::coordinator::reconfig::{LiveSlot, Reconfigurator};
 use crate::drafter::DraftMethod;
 use crate::engine::{
-    same_group, EngineReport, PlanMode, Request, SlotPlan, VerifyDiscipline, Worker,
+    same_group, EngineReport, PlanMode, Request, Severity, SlotPlan, SpecError, VerifyDiscipline,
+    Worker,
 };
 use crate::util::rng::position_rng;
 
 use super::metrics::ServeMetrics;
-use super::queue::{AdmissionQueue, Priority};
+use super::queue::{AdmissionQueue, Priority, RejectReason};
 use super::replan::Replanner;
 use super::slots::SlotAllocator;
 
@@ -103,6 +106,16 @@ pub trait ServeEngine {
     fn fork(&mut self, _src: usize, _dst: usize, _plan: SlotPlan) -> Result<()> {
         bail!("engine does not support replica forking")
     }
+    /// Weight-update invalidation hook: the policy weights changed
+    /// mid-wave, so every draft-side cache (draft-model KV rows, token
+    /// drafter indices) is stale and must be rebuilt from the verified
+    /// sequences before the next round. Target-side state is the new
+    /// weights' problem, not this hook's. Lossless by construction —
+    /// drafts only *propose*; verification decides every token. Default
+    /// no-op for engines without draft-side state.
+    fn invalidate_draft_state(&mut self) -> Result<()> {
+        Ok(())
+    }
 }
 
 impl ServeEngine for Worker<'_> {
@@ -149,6 +162,10 @@ impl ServeEngine for Worker<'_> {
     fn fork(&mut self, src: usize, dst: usize, plan: SlotPlan) -> Result<()> {
         Worker::fork(self, src, dst, plan)
     }
+
+    fn invalidate_draft_state(&mut self) -> Result<()> {
+        Worker::invalidate_draft_state(self)
+    }
 }
 
 /// A retired request plus its serving timeline.
@@ -194,6 +211,24 @@ pub struct Batcher<E: ServeEngine> {
     pub race: Option<RaceArbiter>,
     /// Per-slot arrival timestamp of the occupying request.
     arrival_s: Vec<f64>,
+    /// Per-slot priority class of the occupying request (quarantined
+    /// requests requeue at the front of their ORIGINAL lane).
+    prio_s: Vec<Priority>,
+    /// Degradation-ladder state: consecutive `Degradable` faults the
+    /// slot's occupant has absorbed (resets on admit/retire) and the tick
+    /// after which a degraded slot may retry speculation (None = not
+    /// degraded). Exponential backoff: 2, 4, 8, ... ticks.
+    degrade_attempts: Vec<u32>,
+    degrade_until: Vec<Option<u64>>,
+    /// Quarantine retry counts per request id (entries cleared on
+    /// completion; a retired-for-quarantine request keeps its entry so
+    /// repeat faults walk toward the budget).
+    retries: BTreeMap<u64, u32>,
+    /// Quarantine retry budget per request: one admission + this many
+    /// re-admissions, then the request is rejected with a typed reason.
+    pub retry_budget: u32,
+    /// Ticks seen — the degradation ladder's backoff clock.
+    ticks: u64,
     finished: Vec<FinishedRequest>,
     /// Run speculative rounds (false = vanilla decode every round).
     spec: bool,
@@ -217,10 +252,22 @@ impl<E: ServeEngine> Batcher<E> {
             reconfig: None,
             race: None,
             arrival_s: vec![0.0; cap],
+            prio_s: vec![Priority::Batch; cap],
+            degrade_attempts: vec![0; cap],
+            degrade_until: vec![None; cap],
+            retries: BTreeMap::new(),
+            retry_budget: 3,
+            ticks: 0,
             finished: Vec::new(),
             spec,
             engine,
         }
+    }
+
+    /// Read access to the wrapped engine (e.g. to report a
+    /// [`super::ChaosEngine`]'s injection counters after a run).
+    pub fn engine(&self) -> &E {
+        &self.engine
     }
 
     /// Enable request-level reconfiguration (Algorithm 2), aligned to the
@@ -279,6 +326,7 @@ impl<E: ServeEngine> Batcher<E> {
     /// race-launch → decode → reconfigure.
     pub fn tick(&mut self, now_s: f64) -> Result<TickReport> {
         let mut tr = TickReport::default();
+        self.ticks += 1;
 
         // 0. resolve finished races: the first member to finish wins, the
         //    losers are cancelled, and the winner retires as the race's
@@ -287,7 +335,9 @@ impl<E: ServeEngine> Batcher<E> {
             for fin in ar.resolve(&mut self.engine)? {
                 for &s in &fin.freed {
                     self.slots.release(s)?;
+                    self.reset_degrade(s);
                 }
+                self.retries.remove(&fin.req.id);
                 let arrival = self.arrival_s[fin.primary];
                 self.metrics.on_race_finish(
                     fin.replica_won,
@@ -314,6 +364,8 @@ impl<E: ServeEngine> Batcher<E> {
             if self.slots.is_live(slot) && self.engine.is_done(slot) {
                 let req = self.engine.retire(slot)?;
                 self.slots.release(slot)?;
+                self.reset_degrade(slot);
+                self.retries.remove(&req.id);
                 let arrival = self.arrival_s[slot];
                 self.metrics.on_finish(now_s - arrival);
                 self.finished.push(FinishedRequest { req, arrival_s: arrival, finished_s: now_s });
@@ -331,6 +383,32 @@ impl<E: ServeEngine> Batcher<E> {
                     self.slots.release(s)?;
                 }
                 self.metrics.on_race_cancel(c.replicas, c.wasted_rounds);
+            }
+        }
+
+        // 1c. degradation-ladder re-promotion: degraded slots whose
+        //     backoff expired retry speculation under the current
+        //     replanner plan; a repeat fault re-degrades them with a
+        //     doubled backoff (capped), so a persistently broken drafter
+        //     converges to near-permanent vanilla without ever being
+        //     given up on.
+        if self.spec {
+            let plan = self.current_plan();
+            for slot in 0..self.engine.capacity() {
+                if !self.degrade_until[slot].is_some_and(|t| self.ticks >= t) {
+                    continue;
+                }
+                self.degrade_until[slot] = None;
+                if !self.slots.is_live(slot) || self.engine.is_done(slot) {
+                    continue;
+                }
+                if self.race.as_ref().is_some_and(|a| a.is_member(slot)) {
+                    continue;
+                }
+                if plan.window > 0 {
+                    self.engine.set_slot_plan(slot, plan.clone())?;
+                    self.metrics.repromotions += 1;
+                }
             }
         }
 
@@ -354,6 +432,7 @@ impl<E: ServeEngine> Batcher<E> {
                 .slots
                 .alloc()
                 .ok_or_else(|| anyhow!("slot allocator full despite free check"))?;
+            let id = q.req.id;
             if let Err(e) = self.engine.admit(slot, q.req, admission_plan.clone()) {
                 // a failed admission must not leak the slot
                 self.slots.release(slot)?;
@@ -363,6 +442,13 @@ impl<E: ServeEngine> Batcher<E> {
                 rc.on_admit(slot, &self.report.per_slot);
             }
             self.arrival_s[slot] = q.enqueued_s;
+            self.prio_s[slot] = q.prio;
+            self.reset_degrade(slot);
+            // a quarantined request re-entering a slot is a recovery: its
+            // verified output survived the fault and decoding resumes
+            if self.retries.contains_key(&id) {
+                self.metrics.recoveries += 1;
+            }
             self.metrics.on_admit(now_s - q.enqueued_s);
             tr.admitted += 1;
         }
@@ -424,16 +510,36 @@ impl<E: ServeEngine> Batcher<E> {
             for &s in &pool[used..] {
                 self.slots.release(s)?;
             }
-            let used = considered?;
+            let used = match considered {
+                Ok(u) => u,
+                // a Degradable fork failure degrades the race to the
+                // members already forked (possibly none) — never the
+                // serve loop; the primary keeps decoding either way
+                Err(e)
+                    if e.downcast_ref::<SpecError>().map(|se| se.severity())
+                        == Some(Severity::Degradable) =>
+                {
+                    self.metrics.degradations += 1;
+                    0
+                }
+                Err(e) => return Err(e),
+            };
             if used > 0 {
                 self.metrics.on_race_launch(used);
                 tr.raced = used;
             }
         }
 
-        // 4. one engine round under the live slot plans
+        // 4. one engine round under the live slot plans; typed
+        //    speculation faults are absorbed here — Degradable slots
+        //    fall down the ladder to vanilla, SlotFatal slots are
+        //    quarantined — and only untyped / WorkerFatal errors abort
+        //    the serve loop
         let before = self.report.total_generated;
-        tr.active = self.engine.round(&mut self.report)?;
+        tr.active = match self.engine.round(&mut self.report) {
+            Ok(n) => n,
+            Err(e) => self.on_round_error(e)?,
+        };
         tr.generated = self.report.total_generated - before;
         // occupancy re-read: freshly-forked replicas are live rows too
         self.metrics.on_round(self.slots.occupancy(), tr.generated);
@@ -455,6 +561,11 @@ impl<E: ServeEngine> Batcher<E> {
                         if self.race.as_ref().is_some_and(|a| a.is_member(slot)) {
                             continue;
                         }
+                        // degraded slots sit out Algorithm 2 until the
+                        // ladder re-promotes them (backoff owns them)
+                        if self.degrade_until[slot].is_some() {
+                            continue;
+                        }
                         if let Some(p) = self.engine.slot_plan(slot) {
                             if p.window > 0 {
                                 live.push(LiveSlot { slot, method: p.method });
@@ -474,6 +585,121 @@ impl<E: ServeEngine> Batcher<E> {
             }
         }
         Ok(tr)
+    }
+
+    fn reset_degrade(&mut self, slot: usize) {
+        self.degrade_attempts[slot] = 0;
+        self.degrade_until[slot] = None;
+    }
+
+    /// Route a typed engine-round failure through the recovery ladder.
+    /// Untyped and [`Severity::WorkerFatal`] errors stay fatal exactly as
+    /// before the taxonomy existed. Returns the post-recovery occupancy
+    /// (standing in for the aborted round's active-slot count).
+    fn on_round_error(&mut self, e: anyhow::Error) -> Result<usize> {
+        let (sev, slot) = match e.downcast_ref::<SpecError>() {
+            Some(se) => (se.severity(), se.slot()),
+            None => return Err(e),
+        };
+        match sev {
+            Severity::WorkerFatal => return Err(e),
+            Severity::Degradable => match slot {
+                Some(s) => self.degrade_slot(s)?,
+                None => {
+                    // batch-wide (a dead decoupled drafter thread): every
+                    // live slot degrades to vanilla; the fused verify
+                    // path carries them all in one target step per round
+                    for s in 0..self.engine.capacity() {
+                        self.degrade_slot(s)?;
+                    }
+                }
+            },
+            Severity::SlotFatal => {
+                let s = slot.ok_or(e)?;
+                self.quarantine(s)?;
+            }
+        }
+        Ok(self.slots.occupancy())
+    }
+
+    /// Degradation ladder, down-rung: force the slot to vanilla decode
+    /// (window 0 — provably lossless, the sampling tape is keyed by
+    /// (seed, request, position), never by plan) and schedule an
+    /// exponentially backed-off re-promotion attempt. Races touching the
+    /// slot are cancelled first — a fault inside the speculation
+    /// machinery is not worth preserving speculative races for.
+    fn degrade_slot(&mut self, slot: usize) -> Result<()> {
+        if !self.slots.is_live(slot) {
+            return Ok(());
+        }
+        self.uncouple_from_races(slot)?;
+        if !self.slots.is_live(slot) || self.engine.is_done(slot) {
+            // the slot was a cancelled replica (or finished): nothing
+            // left to degrade — the primary decodes on unaffected
+            return Ok(());
+        }
+        if let Some(p) = self.engine.slot_plan(slot) {
+            if p.window > 0 {
+                self.engine.set_slot_plan(slot, SlotPlan::vanilla())?;
+            }
+        }
+        let n = self.degrade_attempts[slot] + 1;
+        self.degrade_attempts[slot] = n;
+        // backoff 2, 4, 8, ... 64 ticks of guaranteed-progress vanilla
+        self.degrade_until[slot] = Some(self.ticks + (2u64 << (n - 1).min(5)));
+        self.metrics.degradations += 1;
+        Ok(())
+    }
+
+    /// Quarantine, the SlotFatal rung: the slot's state can no longer be
+    /// trusted in place, so retire it and re-enqueue the request at the
+    /// FRONT of its original priority lane with its verified output
+    /// preserved — re-admission replays the whole sequence through the
+    /// ordinary prefill + catch-up path into a fresh row. Bounded by the
+    /// per-request retry budget; exhaustion is a typed rejection, never a
+    /// silent loss.
+    fn quarantine(&mut self, slot: usize) -> Result<()> {
+        if !self.slots.is_live(slot) {
+            return Ok(());
+        }
+        self.uncouple_from_races(slot)?;
+        if !self.slots.is_live(slot) {
+            return Ok(()); // cancelled replica: the primary carries on
+        }
+        let req = self.engine.retire(slot)?;
+        self.slots.release(slot)?;
+        let prio = self.prio_s[slot];
+        let arrival = self.arrival_s[slot];
+        self.reset_degrade(slot);
+        self.metrics.quarantines += 1;
+        let n = self.retries.entry(req.id).or_insert(0);
+        *n += 1;
+        if *n > self.retry_budget {
+            self.retries.remove(&req.id);
+            self.queue.note_reject(RejectReason::RetryExhausted);
+        } else {
+            self.queue.requeue_front(req, prio, arrival);
+            self.metrics.requeues += 1;
+        }
+        Ok(())
+    }
+
+    /// Cancel races until `slot` is no longer a member (replica slots are
+    /// freed; a race's primary keeps decoding). `cancel_one` pops races
+    /// newest-first, so uncoupling an early member may cancel younger
+    /// races too — conservative, and only on the fault path.
+    fn uncouple_from_races(&mut self, slot: usize) -> Result<()> {
+        let Some(ar) = self.race.as_mut() else {
+            return Ok(());
+        };
+        while ar.is_member(slot) && ar.active_races() > 0 {
+            let c = ar.cancel_one(&mut self.engine)?;
+            for &s in &c.freed {
+                self.slots.release(s)?;
+            }
+            self.metrics.on_race_cancel(c.replicas, c.wasted_rounds);
+        }
+        Ok(())
     }
 }
 
@@ -560,6 +786,10 @@ pub struct SyntheticEngine {
     /// Tail modulus: request ids with `id % tail_mod == tail_mod - 1`
     /// form the low-acceptance tail (`with_tail_every` varies the skew).
     tail_mod: u64,
+    /// Draft-state invalidations received (weight-update hook calls) —
+    /// the synthetic engine has no draft caches to rebuild, so the hook
+    /// just counts, letting tests assert the pause protocol fired.
+    pub invalidations: u64,
 }
 
 impl SyntheticEngine {
@@ -572,6 +802,7 @@ impl SyntheticEngine {
             rounds: 0,
             verify: VerifyDiscipline::Fused,
             tail_mod: 4,
+            invalidations: 0,
         }
     }
 
@@ -753,6 +984,11 @@ impl ServeEngine for SyntheticEngine {
         }
         self.plans[dst] = plan;
         self.slots[dst] = Some(req);
+        Ok(())
+    }
+
+    fn invalidate_draft_state(&mut self) -> Result<()> {
+        self.invalidations += 1;
         Ok(())
     }
 }
@@ -1162,5 +1398,180 @@ mod tests {
         b.enqueue(req(0, 4), Priority::Batch, 0.0);
         assert!(b.tick(0.0).is_err());
         assert_eq!(b.slots.occupancy(), 0, "slot leaked by failed admit");
+    }
+
+    /// SyntheticEngine wrapper that raises typed faults from `round`:
+    /// one-shot faults keyed by round number, or the same fault every
+    /// round (`every`). Faulted rounds never reach the inner engine, so
+    /// no partial state is left behind — like the real injection sites.
+    struct Faulty {
+        e: SyntheticEngine,
+        faults: Vec<(u64, SpecError)>,
+        every: Option<SpecError>,
+        rounds: u64,
+    }
+
+    impl Faulty {
+        fn new(e: SyntheticEngine) -> Self {
+            Faulty { e, faults: Vec::new(), every: None, rounds: 0 }
+        }
+    }
+
+    impl ServeEngine for Faulty {
+        fn capacity(&self) -> usize {
+            self.e.capacity()
+        }
+        fn admit(&mut self, slot: usize, req: Request, plan: SlotPlan) -> Result<()> {
+            self.e.admit(slot, req, plan)
+        }
+        fn retire(&mut self, slot: usize) -> Result<Request> {
+            self.e.retire(slot)
+        }
+        fn round(&mut self, rep: &mut EngineReport) -> Result<usize> {
+            self.rounds += 1;
+            let now = self.rounds;
+            if let Some(pos) = self.faults.iter().position(|(r, _)| *r == now) {
+                let (_, se) = self.faults.remove(pos);
+                return Err(se.into());
+            }
+            if let Some(se) = &self.every {
+                return Err(se.clone().into());
+            }
+            self.e.round(rep)
+        }
+        fn is_done(&self, slot: usize) -> bool {
+            self.e.is_done(slot)
+        }
+        fn slot_plan(&self, slot: usize) -> Option<SlotPlan> {
+            self.e.slot_plan(slot)
+        }
+        fn set_slot_plan(&mut self, slot: usize, plan: SlotPlan) -> Result<()> {
+            self.e.set_slot_plan(slot, plan)
+        }
+        fn request(&self, slot: usize) -> Option<&Request> {
+            self.e.request(slot)
+        }
+    }
+
+    /// The synthetic token stream is a pure function of (id, position) —
+    /// the whole point: any completed request must carry exactly this
+    /// sequence, whatever faults were survived along the way.
+    fn expected_seq(id: u64, prompt: &[i32], budget: usize) -> Vec<i32> {
+        let mut seq = prompt.to_vec();
+        for _ in 0..budget {
+            let t = (id as i32).wrapping_mul(31).wrapping_add(seq.len() as i32) & 0x7fff;
+            seq.push(t);
+        }
+        seq
+    }
+
+    fn drain_to_idle<E: ServeEngine>(b: &mut Batcher<E>, from_s: f64) -> Vec<FinishedRequest> {
+        let mut now = from_s;
+        let mut guard = 0;
+        while !b.idle() {
+            b.tick(now).unwrap();
+            now += 0.01;
+            guard += 1;
+            assert!(guard < 3000, "serve loop did not converge");
+        }
+        b.drain_finished()
+    }
+
+    #[test]
+    fn degradable_fault_degrades_to_vanilla_and_completes() {
+        let mut f = Faulty::new(SyntheticEngine::new(2, 99));
+        f.faults.push((2, SpecError::DraftCatchUp { slot: 0, detail: "lost".into() }));
+        let mut b = Batcher::new(f, 8, replanner(), true);
+        b.enqueue(req(0, 20), Priority::Batch, 0.0);
+        b.enqueue(req(2, 20), Priority::Batch, 0.0);
+        b.tick(0.0).unwrap(); // admit + round 1
+        b.tick(0.01).unwrap(); // round 2 faults: slot 0 degrades
+        assert_eq!(b.metrics.degradations, 1);
+        assert!(b.engine().slot_plan(0).unwrap().is_vanilla(), "slot 0 must run vanilla");
+        assert!(b.degrade_until[0].is_some(), "slot 0 must be in backoff");
+        assert!(b.degrade_until[1].is_none(), "slot 1 is unaffected");
+        let mut fin = drain_to_idle(&mut b, 0.02);
+        fin.sort_by_key(|f| f.req.id);
+        assert_eq!(fin.len(), 2, "the degraded request must still complete");
+        for f in &fin {
+            assert_eq!(f.req.seq, expected_seq(f.req.id, &[1, 2, 3, 4], 20), "tokens diverged");
+        }
+        assert_eq!(b.metrics.lost, 0);
+    }
+
+    #[test]
+    fn batch_wide_degradable_fault_degrades_every_live_slot() {
+        let mut f = Faulty::new(SyntheticEngine::new(4, 7));
+        f.faults.push((2, SpecError::DrafterDead { detail: "thread died".into() }));
+        let mut b = Batcher::new(f, 8, replanner(), true);
+        for i in 0..3u64 {
+            b.enqueue(req(i, 16), Priority::Batch, 0.0);
+        }
+        b.tick(0.0).unwrap();
+        b.tick(0.01).unwrap(); // drafter dies: all three slots degrade
+        assert_eq!(b.metrics.degradations, 3);
+        for slot in 0..3 {
+            assert!(b.engine().slot_plan(slot).unwrap().is_vanilla());
+        }
+        let fin = drain_to_idle(&mut b, 0.02);
+        assert_eq!(fin.len(), 3, "fused verify must carry degraded slots to completion");
+    }
+
+    #[test]
+    fn slot_fatal_fault_quarantines_and_preserves_tokens() {
+        let mut f = Faulty::new(SyntheticEngine::new(1, 13));
+        f.faults.push((3, SpecError::KvRowInvalid { slot: 0, detail: "row gone".into() }));
+        let mut b = Batcher::new(f, 8, replanner(), true);
+        b.enqueue(req(0, 24), Priority::Batch, 0.0);
+        let fin = drain_to_idle(&mut b, 0.0);
+        assert_eq!(fin.len(), 1, "quarantine must neither lose nor duplicate the request");
+        assert_eq!(fin[0].req.seq, expected_seq(0, &[1, 2, 3, 4], 24), "verified output lost");
+        assert_eq!(b.metrics.quarantines, 1);
+        assert_eq!(b.metrics.requeues, 1);
+        assert_eq!(b.metrics.recoveries, 1, "re-admission must be counted as a recovery");
+        assert_eq!(b.queue.rejected, 0);
+        assert_eq!(b.metrics.lost, 0);
+    }
+
+    #[test]
+    fn retry_budget_exhaustion_is_a_typed_rejection() {
+        let mut f = Faulty::new(SyntheticEngine::new(1, 3));
+        f.every = Some(SpecError::KvRowInvalid { slot: 0, detail: "always".into() });
+        let mut b = Batcher::new(f, 8, replanner(), true);
+        b.enqueue(req(0, 10), Priority::Batch, 0.0);
+        let fin = drain_to_idle(&mut b, 0.0);
+        assert!(fin.is_empty(), "a permanently faulting slot cannot complete its request");
+        // initial admission + retry_budget re-admissions, each quarantined
+        assert_eq!(b.metrics.quarantines, b.retry_budget as u64 + 1);
+        assert_eq!(b.metrics.requeues, b.retry_budget as u64);
+        assert_eq!(b.queue.rejected_retry_exhausted, 1, "exhaustion must be a typed rejection");
+        assert_eq!(b.queue.rejected, 1);
+        assert!(b.retries.is_empty(), "rejection must clear the retry ledger");
+    }
+
+    #[test]
+    fn degraded_slot_is_repromoted_after_backoff() {
+        let mut b = mk_batcher(2, 8);
+        b.enqueue(req(0, 60), Priority::Batch, 0.0);
+        b.tick(0.0).unwrap();
+        b.degrade_slot(0).unwrap();
+        assert_eq!(b.metrics.degradations, 1);
+        assert_eq!(b.degrade_until[0], Some(b.ticks + 2), "first backoff is 2 ticks");
+        let spec_planned = b.replan.plan.window > 0;
+        let mut now = 0.01;
+        for _ in 0..3 {
+            b.tick(now).unwrap();
+            now += 0.01;
+        }
+        assert!(b.degrade_until[0].is_none(), "backoff must expire");
+        if spec_planned {
+            assert_eq!(b.metrics.repromotions, 1, "the slot must retry speculation");
+            assert!(!b.engine().slot_plan(0).unwrap().is_vanilla());
+        }
+        // a second degrade doubles the backoff
+        b.degrade_slot(0).unwrap();
+        assert_eq!(b.degrade_until[0], Some(b.ticks + 4), "second backoff is 4 ticks");
+        drain_to_idle(&mut b, now);
+        assert_eq!(b.metrics.completed, 1);
     }
 }

@@ -1,0 +1,379 @@
+//! Seeded chaos harness: deterministic fault injection for the serve
+//! loop's recovery ladder.
+//!
+//! [`FaultPlan`] is parsed from a compact `key=value` spec (the
+//! `specactor serve --chaos` flag) and drawn from xoshiro streams keyed
+//! by `(seed, site, round)` — like `ArrivalProcess`, the same spec
+//! always injects the same faults at the same rounds, so chaos runs are
+//! replayable and CI-stable. [`ChaosEngine`] wraps any [`ServeEngine`]
+//! and injects **before** delegating: a faulted round never reaches the
+//! inner engine, so no partial state is left behind and losslessness is
+//! preserved by construction — exactly the contract of the real fault
+//! sites (a dead drafter thread, a failed catch-up) that the taxonomy in
+//! `engine::fault` classifies.
+//!
+//! Injected faults:
+//!
+//! * `step` — per-round probability of a Degradable draft-cache fault
+//!   scoped to one live slot ([`SpecError::DraftCatchUp`]),
+//! * `drafter` — per-round probability the decoupled drafter thread dies
+//!   ([`SpecError::DrafterDead`], batch-wide Degradable),
+//! * `slot` — per-round probability of a SlotFatal KV-row fault on one
+//!   live slot ([`SpecError::KvRowInvalid`] → quarantine + re-prefill),
+//! * `fork` — per-fork probability a racing replica fork fails
+//!   ([`SpecError::ForkFailed`], the race degrades, the primary lives),
+//! * `pause` — every `pause` rounds a mid-wave weight-update pause
+//!   fires: the round boundary has already drained verification, so the
+//!   pause just invalidates every draft-side cache
+//!   ([`ServeEngine::invalidate_draft_state`]) and resumes — the
+//!   per-wave invalidation protocol online draft learning needs.
+
+use anyhow::{bail, Result};
+
+use crate::engine::{EngineReport, Request, SlotPlan, SpecError, VerifyDiscipline};
+use crate::util::rng::{splitmix64, Rng};
+
+use super::batcher::ServeEngine;
+
+/// Injection-site keys for the per-(site, round) fault streams: distinct
+/// constants so the sites draw from independent tapes.
+const SITE_STEP: u64 = 0x5345_5250;
+const SITE_DRAFTER: u64 = 0x4452_4654;
+const SITE_SLOT: u64 = 0x534C_4F54;
+const SITE_FORK: u64 = 0x464F_524B;
+const SITE_PICK: u64 = 0x5049_434B;
+
+/// A deterministic fault-injection schedule (see module docs).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// Per-round probability of a Degradable step fault on a live slot.
+    pub step: f64,
+    /// Per-round probability the decoupled drafter thread dies.
+    pub drafter: f64,
+    /// Per-round probability of a SlotFatal KV fault on a live slot.
+    pub slot: f64,
+    /// Per-fork probability a racing replica fork fails.
+    pub fork: f64,
+    /// Weight-update pause period in rounds (0 = never).
+    pub pause: u64,
+}
+
+fn rate(key: &str, v: &str) -> Result<f64> {
+    let p: f64 = v
+        .trim()
+        .parse()
+        .map_err(|e| anyhow::anyhow!("chaos rate `{key}={v}`: {e}"))?;
+    if !(0.0..=1.0).contains(&p) {
+        bail!("chaos rate `{key}={v}` outside [0, 1]");
+    }
+    Ok(p)
+}
+
+impl FaultPlan {
+    /// Parse a `--chaos` spec: comma-separated `key=value` pairs, e.g.
+    /// `seed=7,step=0.05,drafter=0.02,slot=0.01,fork=0.05,pause=40`.
+    /// Omitted keys default to off (rate 0 / pause never); unknown keys
+    /// are errors, not silently ignored faults.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut p = FaultPlan::default();
+        for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let Some((k, v)) = part.split_once('=') else {
+                bail!("chaos spec entry `{part}` is not key=value");
+            };
+            match k.trim() {
+                "seed" => {
+                    p.seed = v
+                        .trim()
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("chaos seed `{v}`: {e}"))?
+                }
+                "step" => p.step = rate("step", v)?,
+                "drafter" => p.drafter = rate("drafter", v)?,
+                "slot" => p.slot = rate("slot", v)?,
+                "fork" => p.fork = rate("fork", v)?,
+                "pause" => {
+                    p.pause = v
+                        .trim()
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("chaos pause `{v}`: {e}"))?
+                }
+                other => bail!(
+                    "unknown chaos key `{other}` (expected seed, step, drafter, slot, \
+                     fork or pause)"
+                ),
+            }
+        }
+        Ok(p)
+    }
+
+    /// Compact one-line rendering for serve summaries and bench JSON.
+    pub fn label(&self) -> String {
+        format!(
+            "seed={} step={} drafter={} slot={} fork={} pause={}",
+            self.seed, self.step, self.drafter, self.slot, self.fork, self.pause
+        )
+    }
+
+    /// Does this plan inject anything at all?
+    pub fn is_active(&self) -> bool {
+        self.step > 0.0 || self.drafter > 0.0 || self.slot > 0.0 || self.fork > 0.0
+            || self.pause > 0
+    }
+}
+
+/// [`ServeEngine`] wrapper that injects the [`FaultPlan`]'s faults ahead
+/// of the wrapped engine (see module docs). Per-site injection counters
+/// are public so tests and benches can assert the schedule actually
+/// fired.
+pub struct ChaosEngine<E: ServeEngine> {
+    pub inner: E,
+    pub plan: FaultPlan,
+    rounds: u64,
+    forks: u64,
+    pub injected_step: u64,
+    pub injected_drafter: u64,
+    pub injected_slot: u64,
+    pub injected_fork: u64,
+    /// Weight-update pauses fired (each one invalidated draft state).
+    pub pauses: u64,
+}
+
+impl<E: ServeEngine> ChaosEngine<E> {
+    pub fn new(inner: E, plan: FaultPlan) -> Self {
+        ChaosEngine {
+            inner,
+            plan,
+            rounds: 0,
+            forks: 0,
+            injected_step: 0,
+            injected_drafter: 0,
+            injected_slot: 0,
+            injected_fork: 0,
+            pauses: 0,
+        }
+    }
+
+    /// Faults injected across all sites.
+    pub fn injected(&self) -> u64 {
+        self.injected_step + self.injected_drafter + self.injected_slot + self.injected_fork
+    }
+
+    /// The deterministic draw stream for `(site, n)`: same plan seed,
+    /// site and sequence number → same draw, whatever else happened.
+    fn stream(&self, site: u64, n: u64) -> Rng {
+        Rng::new(splitmix64(
+            self.plan.seed ^ splitmix64(site.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ n),
+        ))
+    }
+
+    /// Pick a deterministic victim among the currently live, unfinished
+    /// slots (None when nothing is live — the fault has no target).
+    fn pick_live_slot(&self, n: u64) -> Option<usize> {
+        let live: Vec<usize> = (0..self.inner.capacity())
+            .filter(|&s| self.inner.request(s).is_some() && !self.inner.is_done(s))
+            .collect();
+        if live.is_empty() {
+            return None;
+        }
+        let i = self.stream(SITE_PICK, n).below(live.len() as u64) as usize;
+        Some(live[i])
+    }
+}
+
+impl<E: ServeEngine> ServeEngine for ChaosEngine<E> {
+    fn capacity(&self) -> usize {
+        self.inner.capacity()
+    }
+
+    fn validate(&self, req: &Request) -> Result<()> {
+        self.inner.validate(req)
+    }
+
+    fn admit(&mut self, slot: usize, req: Request, plan: SlotPlan) -> Result<()> {
+        self.inner.admit(slot, req, plan)
+    }
+
+    fn retire(&mut self, slot: usize) -> Result<Request> {
+        self.inner.retire(slot)
+    }
+
+    fn round(&mut self, rep: &mut EngineReport) -> Result<usize> {
+        self.rounds += 1;
+        let n = self.rounds;
+        // Weight-update pause first: at a round boundary verification is
+        // already drained (the batcher retired before calling round), so
+        // the pause is exactly "invalidate draft caches, resume".
+        if self.plan.pause > 0 && n % self.plan.pause == 0 {
+            self.inner.invalidate_draft_state()?;
+            self.pauses += 1;
+        }
+        if self.plan.drafter > 0.0 && self.stream(SITE_DRAFTER, n).bernoulli(self.plan.drafter)
+        {
+            self.injected_drafter += 1;
+            return Err(SpecError::DrafterDead {
+                detail: format!("chaos injection, round {n}"),
+            }
+            .into());
+        }
+        if self.plan.step > 0.0 && self.stream(SITE_STEP, n).bernoulli(self.plan.step) {
+            if let Some(s) = self.pick_live_slot(n) {
+                self.injected_step += 1;
+                return Err(SpecError::DraftCatchUp {
+                    slot: s,
+                    detail: format!("chaos injection, round {n}"),
+                }
+                .into());
+            }
+        }
+        if self.plan.slot > 0.0 && self.stream(SITE_SLOT, n).bernoulli(self.plan.slot) {
+            if let Some(s) = self.pick_live_slot(n ^ SITE_SLOT) {
+                self.injected_slot += 1;
+                return Err(SpecError::KvRowInvalid {
+                    slot: s,
+                    detail: format!("chaos injection, round {n}"),
+                }
+                .into());
+            }
+        }
+        self.inner.round(rep)
+    }
+
+    fn is_done(&self, slot: usize) -> bool {
+        self.inner.is_done(slot)
+    }
+
+    fn slot_plan(&self, slot: usize) -> Option<SlotPlan> {
+        self.inner.slot_plan(slot)
+    }
+
+    fn set_slot_plan(&mut self, slot: usize, plan: SlotPlan) -> Result<()> {
+        self.inner.set_slot_plan(slot, plan)
+    }
+
+    fn verify_discipline(&self) -> VerifyDiscipline {
+        self.inner.verify_discipline()
+    }
+
+    fn request(&self, slot: usize) -> Option<&Request> {
+        self.inner.request(slot)
+    }
+
+    fn fork(&mut self, src: usize, dst: usize, plan: SlotPlan) -> Result<()> {
+        self.forks += 1;
+        if self.plan.fork > 0.0 && self.stream(SITE_FORK, self.forks).bernoulli(self.plan.fork)
+        {
+            self.injected_fork += 1;
+            return Err(SpecError::ForkFailed {
+                src,
+                dst,
+                detail: format!("chaos injection, fork {}", self.forks),
+            }
+            .into());
+        }
+        self.inner.fork(src, dst, plan)
+    }
+
+    fn invalidate_draft_state(&mut self) -> Result<()> {
+        self.inner.invalidate_draft_state()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::batcher::SyntheticEngine;
+
+    #[test]
+    fn parses_the_full_grammar() {
+        let p = FaultPlan::parse("seed=7, step=0.05,drafter=0.02,slot=0.01,fork=0.5,pause=40")
+            .unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.step, 0.05);
+        assert_eq!(p.drafter, 0.02);
+        assert_eq!(p.slot, 0.01);
+        assert_eq!(p.fork, 0.5);
+        assert_eq!(p.pause, 40);
+        assert!(p.is_active());
+        // omitted keys default to off
+        let q = FaultPlan::parse("seed=3").unwrap();
+        assert_eq!(q.seed, 3);
+        assert!(!q.is_active());
+        assert!(q.label().contains("seed=3"));
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        assert!(FaultPlan::parse("bogus=1").is_err(), "unknown keys must error");
+        assert!(FaultPlan::parse("step").is_err(), "missing `=` must error");
+        assert!(FaultPlan::parse("step=1.5").is_err(), "rates beyond 1 must error");
+        assert!(FaultPlan::parse("step=-0.1").is_err(), "negative rates must error");
+        assert!(FaultPlan::parse("seed=x").is_err(), "non-numeric seed must error");
+    }
+
+    #[test]
+    fn injection_is_deterministic_per_seed() {
+        let run = |seed: u64| {
+            let plan = FaultPlan { seed, step: 0.3, drafter: 0.1, slot: 0.1, ..Default::default() };
+            let mut e = ChaosEngine::new(SyntheticEngine::new(2, 5), plan);
+            e.admit(0, Request::new(1, vec![1, 2], 64), SlotPlan::vanilla()).unwrap();
+            let mut rep = EngineReport::default();
+            let mut pattern = Vec::new();
+            for _ in 0..64 {
+                pattern.push(e.round(&mut rep).is_err());
+            }
+            (pattern, e.injected())
+        };
+        let (a, na) = run(9);
+        let (b, nb) = run(9);
+        assert_eq!(a, b, "same seed must inject the same schedule");
+        assert_eq!(na, nb);
+        assert!(na > 0, "rates this high must inject something in 64 rounds");
+        let (c, _) = run(10);
+        assert_ne!(a, c, "different seeds must differ (with overwhelming probability)");
+    }
+
+    #[test]
+    fn faulted_rounds_never_reach_the_inner_engine() {
+        // drafter=1: every round faults before delegation, so the inner
+        // engine generates nothing and no partial state can exist
+        let plan = FaultPlan { seed: 1, drafter: 1.0, ..Default::default() };
+        let mut e = ChaosEngine::new(SyntheticEngine::new(1, 5), plan);
+        e.admit(0, Request::new(1, vec![1, 2], 8), SlotPlan::vanilla()).unwrap();
+        let mut rep = EngineReport::default();
+        for _ in 0..5 {
+            assert!(e.round(&mut rep).is_err());
+        }
+        assert_eq!(rep.total_generated, 0);
+        assert_eq!(e.request(0).unwrap().seq, vec![1, 2]);
+        assert_eq!(e.injected_drafter, 5);
+    }
+
+    #[test]
+    fn pause_fires_on_schedule_and_invalidates() {
+        let plan = FaultPlan { seed: 1, pause: 3, ..Default::default() };
+        let mut e = ChaosEngine::new(SyntheticEngine::new(1, 5), plan);
+        e.admit(0, Request::new(1, vec![1, 2], 64), SlotPlan::vanilla()).unwrap();
+        let mut rep = EngineReport::default();
+        for _ in 0..9 {
+            e.round(&mut rep).unwrap();
+        }
+        assert_eq!(e.pauses, 3, "rounds 3, 6, 9");
+        assert_eq!(e.inner.invalidations, 3, "each pause must invalidate draft state");
+    }
+
+    #[test]
+    fn slot_faults_target_live_slots_only() {
+        let plan = FaultPlan { seed: 4, slot: 1.0, ..Default::default() };
+        let mut e = ChaosEngine::new(SyntheticEngine::new(4, 5), plan);
+        let mut rep = EngineReport::default();
+        // nothing live: the fault has no victim and the round proceeds
+        assert!(e.round(&mut rep).is_ok());
+        assert_eq!(e.injected_slot, 0);
+        e.admit(2, Request::new(1, vec![1, 2], 8), SlotPlan::vanilla()).unwrap();
+        let err = e.round(&mut rep).unwrap_err();
+        let se = err.downcast_ref::<SpecError>().expect("typed");
+        assert_eq!(se.slot(), Some(2), "the only live slot must be the victim");
+        assert_eq!(e.injected_slot, 1);
+    }
+}

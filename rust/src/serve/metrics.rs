@@ -47,6 +47,25 @@ pub struct ServeMetrics {
     /// Engine rounds spent by replicas that were then cancelled — the
     /// speculation waste racing pays for its tail-latency win.
     pub race_wasted_rounds: u64,
+    /// Slots demoted to vanilla decode by a recovered `Degradable` fault
+    /// (the degradation ladder — speculation lost, tokens preserved).
+    pub degradations: u64,
+    /// Degraded slots re-promoted to a speculative plan after their
+    /// exponential backoff expired.
+    pub repromotions: u64,
+    /// Slots retired by a `SlotFatal` fault (KV row / request state
+    /// untrustworthy in place).
+    pub quarantines: u64,
+    /// Quarantined requests re-enqueued at the front of their lane with
+    /// verified output preserved (`quarantines - requeues` exhausted
+    /// their retry budget and were rejected with a typed reason).
+    pub requeues: u64,
+    /// Quarantined requests successfully re-admitted via re-prefill.
+    pub recoveries: u64,
+    /// Requests that vanished without completing OR being rejected with
+    /// a typed reason. Recovery guarantees this stays 0; the chaos bench
+    /// and fault-tolerance tests assert it.
+    pub lost: u64,
     queue_wait: Welford,
     latency_p50: P2Quantile,
     latency_p99: P2Quantile,
@@ -71,6 +90,12 @@ impl Default for ServeMetrics {
             race_wins_by_method: BTreeMap::new(),
             race_cancelled_replicas: 0,
             race_wasted_rounds: 0,
+            degradations: 0,
+            repromotions: 0,
+            quarantines: 0,
+            requeues: 0,
+            recoveries: 0,
+            lost: 0,
             queue_wait: Welford::default(),
             latency_p50: P2Quantile::new(0.5),
             latency_p99: P2Quantile::new(0.99),
@@ -197,6 +222,12 @@ impl ServeMetrics {
             ),
             ("race_cancelled_replicas", Json::num(self.race_cancelled_replicas as f64)),
             ("race_wasted_rounds", Json::num(self.race_wasted_rounds as f64)),
+            ("degradations", Json::num(self.degradations as f64)),
+            ("repromotions", Json::num(self.repromotions as f64)),
+            ("quarantines", Json::num(self.quarantines as f64)),
+            ("requeues", Json::num(self.requeues as f64)),
+            ("recoveries", Json::num(self.recoveries as f64)),
+            ("lost", Json::num(self.lost as f64)),
             ("tokens_per_s", Json::num(self.tokens_per_second(wall_s))),
             ("mean_queue_wait_s", Json::num(self.mean_queue_wait_s())),
             ("latency_p50_s", Json::num(self.latency_p50_s())),
@@ -267,6 +298,23 @@ mod tests {
         let j = m.to_json(1.0);
         assert_eq!(j.get("race_wins").as_f64(), Some(1.0));
         assert_eq!(j.get("race_wins_by_method").get("sam").as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn fault_counters_in_json_snapshot() {
+        let mut m = ServeMetrics::new();
+        m.degradations = 3;
+        m.repromotions = 2;
+        m.quarantines = 1;
+        m.requeues = 1;
+        m.recoveries = 1;
+        let j = m.to_json(1.0);
+        assert_eq!(j.get("degradations").as_f64(), Some(3.0));
+        assert_eq!(j.get("repromotions").as_f64(), Some(2.0));
+        assert_eq!(j.get("quarantines").as_f64(), Some(1.0));
+        assert_eq!(j.get("requeues").as_f64(), Some(1.0));
+        assert_eq!(j.get("recoveries").as_f64(), Some(1.0));
+        assert_eq!(j.get("lost").as_f64(), Some(0.0));
     }
 
     #[test]

@@ -28,6 +28,7 @@
 //! §Serving for the slot lifecycle and the occupancy→replan policy.
 
 pub mod batcher;
+pub mod chaos;
 pub mod metrics;
 pub mod queue;
 pub mod replan;
@@ -37,7 +38,8 @@ pub use batcher::{
     drive_open_loop, Batcher, FinishedRequest, OpenLoopReport, ServeEngine, SyntheticEngine,
     TickReport,
 };
+pub use chaos::{ChaosEngine, FaultPlan};
 pub use metrics::ServeMetrics;
-pub use queue::{AdmissionQueue, Priority};
+pub use queue::{AdmissionQueue, Priority, RejectReason};
 pub use replan::{Replanner, ServePlan};
 pub use slots::SlotAllocator;

@@ -46,13 +46,33 @@ pub struct Queued {
     pub enqueued_s: f64,
 }
 
+/// Why a request was turned away — the typed split of the `rejected`
+/// total (`rejected == rejected_shed + rejected_retry_exhausted`;
+/// malformed requests are counted separately by `ServeMetrics::invalid`
+/// because they are rejected at admission, after leaving the queue).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// Backpressure: queue full, shed outright or evicted by a
+    /// higher-priority arrival.
+    Shed,
+    /// The engine cannot serve the request at all (bad prompt geometry,
+    /// oversized budget).
+    Malformed,
+    /// The quarantine retry budget ran out (fault recovery gave up).
+    RetryExhausted,
+}
+
 /// Bounded multi-lane admission queue.
 #[derive(Debug)]
 pub struct AdmissionQueue {
     cap: usize,
     lanes: [VecDeque<Queued>; 3],
-    /// Requests turned away (or evicted) by backpressure.
+    /// Requests turned away — total across all typed reasons below.
     pub rejected: u64,
+    /// `rejected` from backpressure (shed outright or evicted).
+    pub rejected_shed: u64,
+    /// `rejected` because the quarantine retry budget was exhausted.
+    pub rejected_retry_exhausted: u64,
     /// Requests ever accepted into the queue.
     pub enqueued: u64,
 }
@@ -64,6 +84,8 @@ impl AdmissionQueue {
             cap,
             lanes: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
             rejected: 0,
+            rejected_shed: 0,
+            rejected_retry_exhausted: 0,
             enqueued: 0,
         }
     }
@@ -95,10 +117,10 @@ impl AdmissionQueue {
             match victim {
                 Some(l) => {
                     self.lanes[l].pop_back();
-                    self.rejected += 1;
+                    self.note_reject(RejectReason::Shed);
                 }
                 None => {
-                    self.rejected += 1;
+                    self.note_reject(RejectReason::Shed);
                     return false;
                 }
             }
@@ -106,6 +128,35 @@ impl AdmissionQueue {
         self.lanes[prio.lane()].push_back(Queued { req, prio, enqueued_s: now_s });
         self.enqueued += 1;
         true
+    }
+
+    /// Re-enqueue a quarantined request at the FRONT of its original
+    /// lane, bypassing the capacity check: the request was already
+    /// admitted once (it holds verified output tokens), so fault
+    /// recovery must never lose it to backpressure. The momentary
+    /// over-capacity drains on the next shed. Does not count as a fresh
+    /// `enqueued` — the request was offered exactly once.
+    pub fn requeue_front(&mut self, req: Request, prio: Priority, enqueued_s: f64) {
+        self.lanes[prio.lane()].push_front(Queued { req, prio, enqueued_s });
+    }
+
+    /// Record a typed rejection (quarantine gave up, backpressure shed).
+    /// `Malformed` is tracked by `ServeMetrics::invalid`, not here —
+    /// those requests already left the queue when validation rejected
+    /// them, so counting them again would double-book the
+    /// `completed + rejected + invalid == offered` reconciliation.
+    pub fn note_reject(&mut self, reason: RejectReason) {
+        match reason {
+            RejectReason::Shed => {
+                self.rejected += 1;
+                self.rejected_shed += 1;
+            }
+            RejectReason::RetryExhausted => {
+                self.rejected += 1;
+                self.rejected_retry_exhausted += 1;
+            }
+            RejectReason::Malformed => {}
+        }
     }
 
     /// Next request to admit: highest-priority non-empty lane, FIFO.
@@ -170,6 +221,34 @@ mod tests {
         assert!(!q.push(req(2), Priority::Background, 0.0));
         assert!(!q.push(req(3), Priority::Interactive, 0.0)); // equal class: no shed
         assert_eq!(q.pop().unwrap().req.id, 1);
+    }
+
+    #[test]
+    fn requeue_front_jumps_its_lane_and_bypasses_capacity() {
+        let mut q = AdmissionQueue::new(2);
+        assert!(q.push(req(1), Priority::Batch, 0.0));
+        assert!(q.push(req(2), Priority::Batch, 0.1));
+        // full — an ordinary push would shed, a quarantine requeue won't
+        q.requeue_front(req(3), Priority::Batch, 0.05);
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.rejected, 0, "requeue must never count as backpressure");
+        assert_eq!(q.enqueued, 2, "requeue is not a fresh offer");
+        // front of its lane, but still behind higher-priority traffic
+        assert!(q.push(req(4), Priority::Interactive, 0.2));
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|x| x.req.id).collect();
+        assert_eq!(order, vec![4, 3, 1, 2]);
+    }
+
+    #[test]
+    fn typed_rejection_reasons_split_the_total() {
+        let mut q = AdmissionQueue::new(1);
+        assert!(q.push(req(1), Priority::Batch, 0.0));
+        assert!(!q.push(req(2), Priority::Batch, 0.1)); // shed
+        q.note_reject(RejectReason::RetryExhausted);
+        q.note_reject(RejectReason::Malformed); // tracked elsewhere: no-op
+        assert_eq!(q.rejected_shed, 1);
+        assert_eq!(q.rejected_retry_exhausted, 1);
+        assert_eq!(q.rejected, q.rejected_shed + q.rejected_retry_exhausted);
     }
 
     #[test]
