@@ -55,6 +55,56 @@ fn run_one<E: ServeEngine>(
     RunResult { elapsed_s: rep.elapsed_s, row }
 }
 
+/// Traced-vs-untraced A/B on the synthetic engine: the same workload runs
+/// with the flight recorder off and on (`with_tracing`), wall-clock
+/// measured min-of-3, and the relative overhead lands in the JSON row.
+/// The ≤2% instrumentation budget (PERF.md §Observability) is set against
+/// the real engine, where a round costs milliseconds; the synthetic
+/// engine's virtual-time ticks are orders of magnitude cheaper, so this
+/// row is a pessimistic upper bound, not a gate.
+fn trace_overhead_row(
+    n: usize,
+    budget: usize,
+    capacity: usize,
+    seed: u64,
+    rate: f64,
+) -> Vec<(&'static str, Json)> {
+    let mut rng = Rng::new(seed);
+    let times = ArrivalProcess::Poisson { rate }.sample(n, &mut rng);
+    let mut run = |traced: bool| -> f64 {
+        let mut best = f64::INFINITY;
+        for _ in 0..3 {
+            let arrivals: Vec<(f64, Request, Priority)> = times
+                .iter()
+                .enumerate()
+                .map(|(i, &t)| (t, Request::new(i as u64, vec![0; 8], budget), Priority::Batch))
+                .collect();
+            let mut b = Batcher::new(
+                SyntheticEngine::new(capacity.max(1), seed),
+                4 * n,
+                Replanner::synthetic(),
+                true,
+            );
+            if traced {
+                b = b.with_tracing(4096);
+            }
+            let t0 = std::time::Instant::now();
+            drive_open_loop(&mut b, arrivals, Some(1.0e-3)).expect("serve run failed");
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        best
+    };
+    let base_s = run(false);
+    let traced_s = run(true);
+    let overhead = (traced_s - base_s) / base_s.max(1e-12);
+    vec![
+        ("engine", Json::str("synthetic-trace-ab")),
+        ("untraced_wall_s", Json::num(base_s)),
+        ("traced_wall_s", Json::num(traced_s)),
+        ("trace_overhead_frac", Json::num(overhead)),
+    ]
+}
+
 fn main() {
     let mut args = Args::from_env().unwrap();
     let n = args.opt_parse("requests", 24usize);
@@ -118,6 +168,15 @@ fn main() {
         extra.push(result.row);
     }
 
+    let ab = trace_overhead_row(n, budget, capacity, seed, rate);
+    let pick = |k: &str| ab.iter().find(|(n, _)| *n == k).and_then(|(_, v)| v.as_f64());
+    println!(
+        "trace overhead (synthetic A/B, min-of-3): {:+.2}%",
+        pick("trace_overhead_frac").unwrap_or(0.0) * 100.0
+    );
+    bench.record("serve trace-overhead A/B (synthetic)", pick("traced_wall_s").unwrap_or(0.0));
+    extra.push(ab);
+
     if rt.is_none() {
         println!("artifacts missing; measured the synthetic serve engine instead");
     }
@@ -126,6 +185,9 @@ fn main() {
         let get = |k: &str| {
             row.iter().find(|(n, _)| *n == k).and_then(|(_, v)| v.as_f64()).unwrap_or(0.0)
         };
+        if row.iter().all(|(k, _)| *k != "tokens_per_s") {
+            continue; // the trace-overhead A/B row has its own print above
+        }
         println!(
             "  {:>9.1} tok/s  p50 {:>8.4}s  p99 {:>8.4}s  occ {:>5.2} (peak {:.0})  \
              replans {:.0}  rejected {:.0}",

@@ -200,6 +200,51 @@ impl RaceArbiter {
         self.races.len()
     }
 
+    /// Register the arbiter's own launch/win/waste ledger into a scrape
+    /// snapshot (`specactor_race_*`) — the arbiter-side counterpart of
+    /// the `ServeMetrics` race series, kept separate so the two ledgers
+    /// can be reconciled against each other.
+    pub fn register_metrics(&self, reg: &mut crate::obs::MetricRegistry) {
+        reg.counter(
+            "specactor_race_started",
+            "Fastest-of-N races started by the arbiter",
+            self.races_started as f64,
+        );
+        reg.counter(
+            "specactor_race_replicas_forked",
+            "Replicas forked across all races",
+            self.launches as f64,
+        );
+        reg.counter(
+            "specactor_race_replica_wins",
+            "Races a replica finished strictly first",
+            self.wins as f64,
+        );
+        for (method, v) in &self.wins_by_method {
+            reg.counter_l(
+                "specactor_race_replica_wins_by_method",
+                "Replica wins per draft method",
+                &[("method", method)],
+                *v as f64,
+            );
+        }
+        reg.counter(
+            "specactor_race_replicas_cancelled",
+            "Replicas cancelled (race lost or preempted)",
+            self.cancelled_replicas as f64,
+        );
+        reg.counter(
+            "specactor_race_wasted_replica_rounds",
+            "Rounds spent by replicas that were then cancelled",
+            self.wasted_replica_rounds as f64,
+        );
+        reg.gauge(
+            "specactor_race_active",
+            "Races currently in flight",
+            self.races.len() as f64,
+        );
+    }
+
     /// Register an externally-forked race (the caller already forked
     /// `replica_slots` off `primary`).
     pub fn register<E: ServeEngine>(

@@ -45,6 +45,7 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Result};
 
 use crate::drafter::{DraftMethod, TokenDrafter};
+use crate::obs::{Phase, Tracer};
 use crate::runtime::{KvCache, Runtime};
 use crate::spec::{decode_one, verify_exact, DraftWindow};
 use crate::util::rng::{position_rng, sample_logits};
@@ -412,6 +413,22 @@ pub fn rollout_decoupled_planned(
     requests: &mut Vec<Request>,
     plans: &[SlotPlan],
 ) -> Result<EngineReport> {
+    rollout_decoupled_planned_traced(rt, art_dir, cfg, requests, plans, None)
+}
+
+/// [`rollout_decoupled_planned`] with verifier-side span recording. The
+/// drafter runs on its own thread and [`Tracer`] is deliberately
+/// single-threaded (`Rc`), so the Draft phase recorded here measures the
+/// verifier's *wait* for fresh chunks — the pipeline-stall signal — while
+/// Verify/Apply time the fused ragged step and the outcome application.
+pub fn rollout_decoupled_planned_traced(
+    rt: &Runtime,
+    art_dir: &std::path::Path,
+    cfg: &EngineConfig,
+    requests: &mut Vec<Request>,
+    plans: &[SlotPlan],
+    tracer: Option<&Tracer>,
+) -> Result<EngineReport> {
     let m = &rt.manifest;
     let n = requests.len();
     if n == 0 {
@@ -493,7 +510,13 @@ pub fn rollout_decoupled_planned(
     let mut vwidths = vec![0usize; bucket];
 
     let active = |reqs: &Vec<Request>| reqs.iter().filter(|r| !r.done).count();
+    let mut round = 0u64;
     'serve: while active(requests) > 0 {
+        round += 1;
+        if let Some(t) = tracer {
+            t.begin_round(round);
+        }
+        let mut mark = tracer.map(|t| t.now_us());
         // Gather one fresh chunk per active slot (discard stale ones).
         loop {
             let missing = (0..n)
@@ -541,6 +564,10 @@ pub fn rollout_decoupled_planned(
             }
             pending[i] = Some(chunk);
         }
+        if let (Some(t), Some(m)) = (tracer, mark) {
+            t.record(Phase::Draft, m, n as u32);
+            mark = Some(t.now_us());
+        }
 
         // One fused ragged verify of all pending chunks: shorter chunks
         // are padded up to the shared step window, but each row's real
@@ -563,6 +590,10 @@ pub fn rollout_decoupled_planned(
         let mut out = rt.step_ragged(&target, &vtoks, w, &mut cache, vwidths)?;
         rep.target_steps += 1;
         rep.iterations += 1;
+        if let (Some(t), Some(m)) = (tracer, mark) {
+            t.record(Phase::Verify, m, w as u32);
+            mark = Some(t.now_us());
+        }
 
         for i in 0..n {
             let Some(c) = pending[i].take() else { continue };
@@ -622,6 +653,9 @@ pub fn rollout_decoupled_planned(
                     full: outcome.full_accept,
                 });
             }
+        }
+        if let (Some(t), Some(m)) = (tracer, mark) {
+            t.record(Phase::Apply, m, n as u32);
         }
         vwidths = out.widths.take().unwrap_or_default();
     }

@@ -37,7 +37,9 @@ pub mod fault;
 pub mod plan;
 pub mod worker;
 
-pub use decoupled::{rollout_decoupled, rollout_decoupled_planned};
+pub use decoupled::{
+    rollout_decoupled, rollout_decoupled_planned, rollout_decoupled_planned_traced,
+};
 pub use fault::{Severity, SpecError};
 pub use plan::{same_group, PlanMode, SlotPlan, VerifyDiscipline};
 pub use worker::{EngineConfig, EngineReport, Request, SlotAccept, Worker};

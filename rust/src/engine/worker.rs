@@ -35,6 +35,7 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Result};
 
 use crate::drafter::TokenDrafter;
+use crate::obs::{Phase, Tracer};
 use crate::runtime::{KvCache, Runtime};
 use crate::spec::{decode_one, verify_exact, AcceptanceStats, VerifyOutcome};
 use crate::util::rng::{position_rng, sample_logits};
@@ -239,6 +240,10 @@ pub struct Worker<'rt> {
     pad: i32,
     /// Cache-capacity cap on a request's generation budget.
     max_new: usize,
+    /// Per-phase span recorder (None → zero-cost: every record site is
+    /// behind an `if let`). Installed by the serve loop's observability
+    /// wiring; the worker never allocates on a record.
+    tracer: Option<Tracer>,
 }
 
 impl<'rt> Worker<'rt> {
@@ -273,9 +278,18 @@ impl<'rt> Worker<'rt> {
             target,
             bucket,
             max_new,
+            tracer: None,
         };
         w.validate_plan(&w.cfg.plan)?;
         Ok(w)
+    }
+
+    /// Install a span recorder: subsequent rounds emit Draft/Verify/Apply
+    /// spans plus KV-copy spans derived from [`RuntimeStats`] deltas.
+    ///
+    /// [`RuntimeStats`]: crate::runtime::RuntimeStats
+    pub fn set_tracer(&mut self, t: Tracer) {
+        self.tracer = Some(t);
     }
 
     /// Create a worker for `requests` (all sharing the manifest prompt
@@ -800,6 +814,9 @@ impl<'rt> Worker<'rt> {
         drafts: &mut [Vec<i32>],
         rep: &mut EngineReport,
     ) -> Result<()> {
+        // Rc handle so span recording can interleave with `&mut self`
+        // draft calls; cloning an Option<Tracer> is a refcount bump.
+        let tracer = self.tracer.clone();
         // 1. draft (no per-group verify). Token-drafter groups draft per
         //    group as usual. Model drafting is fused per MODEL, across
         //    groups: the fused round verifies only once at the end, so a
@@ -813,6 +830,7 @@ impl<'rt> Worker<'rt> {
             if k == 0 {
                 continue;
             }
+            let t0 = tracer.as_ref().map(|t| t.now_us());
             if self.plans[rep_slot].method.is_model() {
                 let name = self.plans[rep_slot].method.model_name().unwrap();
                 // one chain per model: skip groups whose model an earlier
@@ -831,6 +849,9 @@ impl<'rt> Worker<'rt> {
                 let r = self.draft_group(k, &slots, drafts, rep);
                 self.scratch.group_slots[g] = slots;
                 r?;
+            }
+            if let (Some(t), Some(t0)) = (&tracer, t0) {
+                t.record(Phase::Draft, t0, g as u32);
             }
         }
 
@@ -852,13 +873,35 @@ impl<'rt> Worker<'rt> {
         }
         // widths ownership rides through the StepOut and is reclaimed
         // after the outputs are read — no per-step allocation
+        let (t_verify, kv0) = match &tracer {
+            Some(t) => {
+                let st = self.rt.stats.borrow();
+                (Some(t.now_us()), Some((st.kv_h2d_s, st.kv_d2h_s)))
+            }
+            None => (None, None),
+        };
         let step = self.rt.step_ragged(&self.target, &toks, w, &mut self.cache, widths);
+        if let (Some(t), Some(t0), Some((h0, d0))) = (&tracer, t_verify, kv0) {
+            t.record(Phase::Verify, t0, w as u32);
+            // KV copy time is nested inside the verify step; carve it out
+            // as sub-spans from the runtime's directional copy ledger.
+            let st = self.rt.stats.borrow();
+            let h2d = ((st.kv_h2d_s - h0) * 1e6) as u64;
+            let d2h = ((st.kv_d2h_s - d0) * 1e6) as u64;
+            if h2d > 0 {
+                t.record_with_dur(Phase::KvH2d, t0, h2d, 0);
+            }
+            if d2h > 0 {
+                t.record_with_dur(Phase::KvD2h, t0 + h2d, d2h, 0);
+            }
+        }
         self.scratch.toks = toks;
         let mut out = step?;
         rep.target_steps += 1;
 
         // 3. per-row outcomes over each row's REAL window only — the
         //    guarded accessor refuses reads into the padded tail.
+        let t_apply = tracer.as_ref().map(|t| t.now_us());
         for idx in 0..self.scratch.active.len() {
             let i = self.scratch.active[idx];
             let k = self.plans[i].window;
@@ -898,6 +941,9 @@ impl<'rt> Worker<'rt> {
                 );
                 self.apply_outcome(i, drafts[i].len(), outcome, rep);
             }
+        }
+        if let (Some(t), Some(t0)) = (&tracer, t_apply) {
+            t.record(Phase::Apply, t0, self.scratch.active.len() as u32);
         }
         self.scratch.widths = out.widths.take().unwrap_or_default();
         Ok(())

@@ -18,6 +18,7 @@ pub mod coordinator;
 pub mod drafter;
 pub mod engine;
 pub mod ladder;
+pub mod obs;
 pub mod planner;
 pub mod runtime;
 pub mod serve;

@@ -17,6 +17,7 @@ use specactor::coordinator::{RaceArbiter, Reconfigurator};
 use specactor::drafter::DraftMethod;
 use specactor::engine::{EngineConfig, Request, SlotPlan, VerifyDiscipline, Worker};
 use specactor::ladder::Ladder;
+use specactor::obs::{chrome_trace, MetricsExporter};
 use specactor::planner::costmodel::{AffineCost, CostModel};
 use specactor::planner::plan::{search, PlanInput};
 use specactor::runtime::Runtime;
@@ -51,6 +52,14 @@ fn usage() -> ! {
            --chaos SPEC      seeded fault injection, e.g.\n\
                              seed=7,step=0.05,drafter=0.02,slot=0.01,fork=0.05,pause=40\n\
                              (per-round rates; pause = weight-update period in rounds)\n\
+           --metrics-addr A  serve Prometheus text at http://A/metrics (+ /healthz),\n\
+                             e.g. 127.0.0.1:9464; snapshot-based, never blocks ticks\n\
+           --trace-out FILE  write per-phase round spans + fault post-mortems as\n\
+                             chrome://tracing JSON (load in chrome://tracing/Perfetto)\n\
+           --tick-pace-us N  sleep N us of real time per tick (0 = off) so external\n\
+                             scrapers can watch a smoke run; virtual time unaffected\n\
+           --metrics-hold-ms N  keep the scrape endpoint up N ms after the run ends\n\
+                             with the final snapshot published (CI scrape window)\n\
            --smoke           synthetic engine, no artifacts needed (CI)\n\
          see README / PERF.md for the remaining subcommands' options"
     );
@@ -154,6 +163,75 @@ fn print_serve_summary<E: ServeEngine>(engine: &str, b: &Batcher<E>, rep: &OpenL
          ({} requeues, {} recoveries), {} lost",
         m.degradations, m.repromotions, m.quarantines, m.requeues, m.recoveries, m.lost
     );
+    let by_method = m.method_acceptance();
+    if !by_method.is_empty() {
+        let parts: Vec<String> = by_method
+            .iter()
+            .map(|(meth, rate, acc, dr)| format!("{meth} {rate:.2} ({acc}/{dr})"))
+            .collect();
+        println!("  acceptance by method: {}", parts.join("  "));
+    }
+}
+
+/// Wire the observability surface onto a constructed batcher: per-phase
+/// span tracing (on when either flag asks for it), the Prometheus scrape
+/// endpoint, and the real-time pacing sleep CI uses to scrape mid-run.
+fn wire_observability<E: ServeEngine>(
+    mut b: Batcher<E>,
+    metrics_addr: Option<&str>,
+    trace_out: Option<&str>,
+    pace_us: u64,
+) -> Batcher<E> {
+    if metrics_addr.is_some() || trace_out.is_some() {
+        b = b.with_tracing(4096);
+    }
+    if let Some(addr) = metrics_addr {
+        match MetricsExporter::bind(addr) {
+            Ok(ex) => {
+                eprintln!("metrics: http://{}/metrics", ex.addr);
+                b = b.with_exporter(ex);
+            }
+            Err(e) => {
+                eprintln!("metrics exporter: {e:#}");
+                exit(1);
+            }
+        }
+    }
+    if pace_us > 0 {
+        b = b.with_pace(pace_us);
+    }
+    b
+}
+
+/// End-of-run observability: publish the final scrape snapshot (holding
+/// the endpoint open for `hold_ms` so a CI scraper has a window), and
+/// write the chrome://tracing export when `--trace-out` was given.
+fn finish_observability<E: ServeEngine>(
+    b: &Batcher<E>,
+    rep: &OpenLoopReport,
+    trace_out: Option<&str>,
+    hold_ms: u64,
+) {
+    b.publish_final(rep.elapsed_s);
+    if let Some(path) = trace_out {
+        let Some(t) = b.tracer() else { return };
+        let j = chrome_trace(&t.events(), &b.fault_dumps);
+        match std::fs::write(path, j.to_string()) {
+            Ok(()) => eprintln!(
+                "trace: {path} ({} spans held of {} recorded, {} fault dumps)",
+                t.len(),
+                t.total(),
+                b.fault_dumps.len()
+            ),
+            Err(e) => {
+                eprintln!("trace write {path}: {e}");
+                exit(1);
+            }
+        }
+    }
+    if hold_ms > 0 {
+        std::thread::sleep(std::time::Duration::from_millis(hold_ms));
+    }
 }
 
 /// Injection accounting for a `--chaos` run (silent when the plan is
@@ -190,6 +268,10 @@ fn cmd_serve(mut args: Args) {
     let grouped = args.flag("grouped-verify");
     let smoke = args.flag("smoke");
     let chaos = args.opt_maybe("chaos");
+    let metrics_addr = args.opt_maybe("metrics-addr");
+    let trace_out = args.opt_maybe("trace-out");
+    let pace_us = args.opt_parse("tick-pace-us", 0u64);
+    let hold_ms = args.opt_parse("metrics-hold-ms", 0u64);
     let discipline = if grouped { VerifyDiscipline::Grouped } else { VerifyDiscipline::Fused };
     args.finish().unwrap_or_else(|e| {
         eprintln!("{e}");
@@ -234,10 +316,12 @@ fn cmd_serve(mut args: Args) {
         if fon_race && !vanilla {
             b = b.with_racing(RaceArbiter::synthetic());
         }
+        b = wire_observability(b, metrics_addr.as_deref(), trace_out.as_deref(), pace_us);
         match drive_open_loop(&mut b, arrivals, Some(1.0e-3)) {
             Ok(rep) => {
                 print_serve_summary("synthetic", &b, &rep);
                 print_chaos_summary(b.engine());
+                finish_observability(&b, &rep, trace_out.as_deref(), hold_ms);
             }
             Err(e) => {
                 eprintln!("serve --smoke failed: {e}");
@@ -326,6 +410,7 @@ fn cmd_serve(mut args: Args) {
         rank.sort_by(|x, y| y.1.total_cmp(&x.1));
         b = b.with_racing(RaceArbiter::for_manifest(&m, CostModel::paper_32b(), rank));
     }
+    b = wire_observability(b, metrics_addr.as_deref(), trace_out.as_deref(), pace_us);
     match drive_open_loop(&mut b, arrivals, None) {
         Ok(rep) => {
             print_serve_summary("pjrt", &b, &rep);
@@ -336,6 +421,7 @@ fn cmd_serve(mut args: Args) {
                 b.report.draft_steps,
                 b.report.acceptance_rate()
             );
+            finish_observability(&b, &rep, trace_out.as_deref(), hold_ms);
         }
         Err(e) => {
             eprintln!("serve failed: {e}");

@@ -1,0 +1,129 @@
+//! Background-thread Prometheus scrape server (`GET /metrics`,
+//! `GET /healthz`) behind `specactor serve --metrics-addr HOST:PORT`.
+//!
+//! Snapshot-based so the tick loop never blocks on a scraper: the batcher
+//! renders a [`super::MetricRegistry`] snapshot every few ticks and
+//! `publish`es the string; the listener thread serves whatever snapshot
+//! is current. The only shared state is an `Arc<Mutex<String>>` swapped
+//! whole — a slow or stalled scraper can at worst read a stale snapshot,
+//! never hold up a round.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+pub struct MetricsExporter {
+    snapshot: Arc<Mutex<String>>,
+    shutdown: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+    /// Actual bound address (port 0 resolves here — tests bind ephemeral).
+    pub addr: SocketAddr,
+}
+
+impl MetricsExporter {
+    /// Bind `addr` (e.g. `127.0.0.1:9464`) and start the listener thread.
+    pub fn bind(addr: &str) -> Result<Self> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("bind --metrics-addr {addr}"))?;
+        let local = listener.local_addr().context("local_addr")?;
+        listener.set_nonblocking(true).context("set_nonblocking")?;
+        let snapshot = Arc::new(Mutex::new(String::new()));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let snap = Arc::clone(&snapshot);
+        let stop = Arc::clone(&shutdown);
+        let handle = std::thread::Builder::new()
+            .name("metrics-exporter".to_string())
+            .spawn(move || serve_loop(listener, snap, stop))
+            .context("spawn metrics-exporter")?;
+        Ok(MetricsExporter { snapshot, shutdown, handle: Some(handle), addr: local })
+    }
+
+    /// Swap in a freshly rendered exposition snapshot (cheap: one String
+    /// move under a lock the listener holds only to clone).
+    pub fn publish(&self, rendered: String) {
+        *self.snapshot.lock().unwrap() = rendered;
+    }
+}
+
+impl Drop for MetricsExporter {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn serve_loop(listener: TcpListener, snapshot: Arc<Mutex<String>>, shutdown: Arc<AtomicBool>) {
+    while !shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                // per-connection failures (scraper hung up mid-request)
+                // must never take the exporter down
+                let _ = handle_conn(stream, &snapshot);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+}
+
+fn handle_conn(mut stream: TcpStream, snapshot: &Arc<Mutex<String>>) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(500)))?;
+    stream.set_write_timeout(Some(Duration::from_millis(500)))?;
+    let mut buf = [0u8; 1024];
+    let n = stream.read(&mut buf)?;
+    let req = String::from_utf8_lossy(&buf[..n]);
+    let path = req.split_whitespace().nth(1).unwrap_or("");
+    let (status, ctype, body) = match path {
+        "/metrics" => {
+            let body = snapshot.lock().unwrap().clone();
+            ("200 OK", "text/plain; version=0.0.4; charset=utf-8", body)
+        }
+        "/healthz" => ("200 OK", "text/plain; charset=utf-8", "ok\n".to_string()),
+        _ => ("404 Not Found", "text/plain; charset=utf-8", "not found\n".to_string()),
+    };
+    write!(
+        stream,
+        "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn get(addr: SocketAddr, path: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn serves_published_snapshot_and_healthz() {
+        let exp = MetricsExporter::bind("127.0.0.1:0").unwrap();
+        exp.publish("# TYPE up gauge\nup 1\n".to_string());
+        let resp = get(exp.addr, "/metrics");
+        assert!(resp.starts_with("HTTP/1.1 200 OK"));
+        assert!(resp.contains("version=0.0.4"));
+        assert!(resp.ends_with("up 1\n"));
+        let health = get(exp.addr, "/healthz");
+        assert!(health.contains("200 OK") && health.ends_with("ok\n"));
+        let missing = get(exp.addr, "/nope");
+        assert!(missing.contains("404"));
+        // a later publish replaces the snapshot whole
+        exp.publish("up 0\n".to_string());
+        assert!(get(exp.addr, "/metrics").ends_with("up 0\n"));
+    }
+}

@@ -1,0 +1,18 @@
+//! Observability: metric registry + Prometheus exposition
+//! ([`registry`]), scrape server ([`exporter`]), and per-round span
+//! tracing with a flight recorder for chaos post-mortems ([`trace`]).
+//!
+//! Design rule: the hot path only bumps counters it already owns and
+//! records fixed-size spans into a preallocated ring; everything that
+//! allocates (rendering, export, fault dumps) happens on scrape, on
+//! error, or after the run. `Batcher::collect_registry` is the single
+//! assembly point — the `/metrics` scrape and the end-of-run JSON both
+//! render from it, so they cannot drift.
+
+pub mod exporter;
+pub mod registry;
+pub mod trace;
+
+pub use exporter::MetricsExporter;
+pub use registry::{FixedHistogram, MetricRegistry};
+pub use trace::{chrome_trace, FaultDump, Phase, SpanEvent, Tracer};

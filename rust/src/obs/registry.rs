@@ -1,0 +1,368 @@
+//! Std-only metric registry with Prometheus text exposition.
+//!
+//! The registry is a **snapshot builder**: every scrape (and every
+//! end-of-run JSON summary) rebuilds it from the live owners of the
+//! numbers — `ServeMetrics`, the queue's rejection ledger, the
+//! `RaceArbiter` ledger, `RuntimeStats`, the chaos fault ledger and the
+//! tracer's phase histograms — so the scrape and `to_json` render from
+//! one source of truth instead of two drifting copies. Building a
+//! snapshot is a cold-path cost (it allocates); the hot path only bumps
+//! the plain counters it already owned.
+//!
+//! Exposition follows the Prometheus text format v0.0.4: one `# HELP` +
+//! `# TYPE` header per family (in registration order), label values
+//! escaped (`\\`, `\"`, `\n`), histograms rendered as monotone
+//! cumulative `_bucket{le="..."}` series ending in `+Inf` == `_count`,
+//! plus `_sum`.
+
+use std::fmt::Write as _;
+
+/// Label sets per family are bounded (the ladder has finitely many draft
+/// methods); beyond this a family silently keeps its first sets so a
+/// label-cardinality bug cannot grow the scrape without bound.
+pub const MAX_SERIES_PER_FAMILY: usize = 64;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Kind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl Kind {
+    fn name(self) -> &'static str {
+        match self {
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+            Kind::Histogram => "histogram",
+        }
+    }
+}
+
+/// Fixed-bucket histogram with O(1), allocation-free `observe` — the
+/// live accumulator behind per-phase round-time series. `bounds` are
+/// ascending upper bounds; the implicit last bucket is `+Inf`.
+#[derive(Clone, Debug)]
+pub struct FixedHistogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    sum: f64,
+    count: u64,
+}
+
+impl FixedHistogram {
+    pub fn new(mut bounds: Vec<f64>) -> Self {
+        bounds.retain(|b| b.is_finite());
+        bounds.sort_by(|a, b| a.total_cmp(b));
+        bounds.dedup();
+        let n = bounds.len();
+        FixedHistogram { bounds, counts: vec![0; n + 1], sum: 0.0, count: 0 }
+    }
+
+    /// Default buckets for round-phase durations in seconds: 1-2-5 decades
+    /// from 1 µs to 1 s (engine rounds on this CPU runtime span µs for the
+    /// synthetic engine to tens of ms for PJRT steps).
+    pub fn time_buckets() -> Self {
+        let mut bounds = Vec::with_capacity(19);
+        for exp in -6i32..=-1 {
+            let base = 10f64.powi(exp);
+            bounds.extend([base, 2.0 * base, 5.0 * base]);
+        }
+        bounds.push(1.0);
+        Self::new(bounds)
+    }
+
+    /// O(1) per event, no allocation (PERF.md hot-path rule): a binary
+    /// search over the fixed bounds plus two adds.
+    pub fn observe(&mut self, v: f64) {
+        let idx = self.bounds.partition_point(|&b| b < v);
+        self.counts[idx] += 1;
+        self.sum += v;
+        self.count += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+}
+
+#[derive(Clone, Debug)]
+enum Value {
+    Scalar(f64),
+    Hist { bounds: Vec<f64>, cumulative: Vec<u64>, sum: f64, count: u64 },
+}
+
+#[derive(Clone, Debug)]
+struct Series {
+    labels: Vec<(String, String)>,
+    value: Value,
+}
+
+#[derive(Clone, Debug)]
+struct Family {
+    name: String,
+    help: String,
+    kind: Kind,
+    series: Vec<Series>,
+}
+
+/// A rendered-on-demand snapshot of every registered metric family.
+#[derive(Clone, Debug, Default)]
+pub struct MetricRegistry {
+    families: Vec<Family>,
+}
+
+impl MetricRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Monotone cumulative counter (unlabeled).
+    pub fn counter(&mut self, name: &str, help: &str, v: f64) {
+        self.push(name, help, Kind::Counter, &[], Value::Scalar(v));
+    }
+
+    /// Counter series under `labels`; same-name calls join one family.
+    pub fn counter_l(&mut self, name: &str, help: &str, labels: &[(&str, &str)], v: f64) {
+        self.push(name, help, Kind::Counter, labels, Value::Scalar(v));
+    }
+
+    /// Point-in-time gauge (unlabeled).
+    pub fn gauge(&mut self, name: &str, help: &str, v: f64) {
+        self.push(name, help, Kind::Gauge, &[], Value::Scalar(v));
+    }
+
+    pub fn gauge_l(&mut self, name: &str, help: &str, labels: &[(&str, &str)], v: f64) {
+        self.push(name, help, Kind::Gauge, labels, Value::Scalar(v));
+    }
+
+    /// Snapshot a [`FixedHistogram`] (unlabeled).
+    pub fn histogram(&mut self, name: &str, help: &str, h: &FixedHistogram) {
+        self.histogram_l(name, help, &[], h);
+    }
+
+    /// Snapshot a [`FixedHistogram`] under `labels` (e.g. `phase="draft"`);
+    /// buckets are converted to the cumulative form the text format wants.
+    pub fn histogram_l(
+        &mut self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        h: &FixedHistogram,
+    ) {
+        let mut cumulative = Vec::with_capacity(h.counts.len());
+        let mut acc = 0u64;
+        for &c in &h.counts {
+            acc += c;
+            cumulative.push(acc);
+        }
+        let v = Value::Hist { bounds: h.bounds.clone(), cumulative, sum: h.sum, count: h.count };
+        self.push(name, help, Kind::Histogram, labels, v);
+    }
+
+    fn push(&mut self, name: &str, help: &str, kind: Kind, labels: &[(&str, &str)], v: Value) {
+        let series = Series {
+            labels: labels.iter().map(|(k, val)| (k.to_string(), val.to_string())).collect(),
+            value: v,
+        };
+        if let Some(f) = self.families.iter_mut().find(|f| f.name == name) {
+            // a family's kind is fixed by its first registration; a
+            // mismatched re-registration is a programming error we keep
+            // visible in tests but must not corrupt a production scrape
+            debug_assert_eq!(f.kind, kind, "metric family {name} re-registered as {kind:?}");
+            if f.kind == kind && f.series.len() < MAX_SERIES_PER_FAMILY {
+                f.series.push(series);
+            }
+            return;
+        }
+        self.families.push(Family {
+            name: name.to_string(),
+            help: help.to_string(),
+            kind,
+            series: vec![series],
+        });
+    }
+
+    /// Total number of exposed series (histograms count every bucket line
+    /// plus `_sum` and `_count`) — the scrape-size figure the acceptance
+    /// criteria and the CI checker bound.
+    pub fn series_count(&self) -> usize {
+        self.families
+            .iter()
+            .flat_map(|f| &f.series)
+            .map(|s| match &s.value {
+                Value::Scalar(_) => 1,
+                Value::Hist { cumulative, .. } => cumulative.len() + 2,
+            })
+            .sum()
+    }
+
+    /// Scalar lookup for tests and the JSON-reconciliation check.
+    pub fn find(&self, name: &str, labels: &[(&str, &str)]) -> Option<f64> {
+        let f = self.families.iter().find(|f| f.name == name)?;
+        f.series
+            .iter()
+            .find(|s| {
+                s.labels.len() == labels.len()
+                    && labels
+                        .iter()
+                        .all(|(k, v)| s.labels.iter().any(|(sk, sv)| sk == k && sv == v))
+            })
+            .and_then(|s| match &s.value {
+                Value::Scalar(v) => Some(*v),
+                Value::Hist { .. } => None,
+            })
+    }
+
+    /// Prometheus text exposition (format version 0.0.4).
+    pub fn render(&self) -> String {
+        let mut out = String::with_capacity(4096 + 128 * self.series_count());
+        for f in &self.families {
+            let _ = writeln!(out, "# HELP {} {}", f.name, escape_help(&f.help));
+            let _ = writeln!(out, "# TYPE {} {}", f.name, f.kind.name());
+            for s in &f.series {
+                match &s.value {
+                    Value::Scalar(v) => {
+                        out.push_str(&f.name);
+                        write_labels(&mut out, &s.labels, None);
+                        let _ = writeln!(out, " {}", fmt_value(*v));
+                    }
+                    Value::Hist { bounds, cumulative, sum, count } => {
+                        for (i, cum) in cumulative.iter().enumerate() {
+                            let le = bounds.get(i).map(|b| fmt_value(*b));
+                            out.push_str(&f.name);
+                            out.push_str("_bucket");
+                            let le = le.as_deref().unwrap_or("+Inf");
+                            write_labels(&mut out, &s.labels, Some(le));
+                            let _ = writeln!(out, " {cum}");
+                        }
+                        out.push_str(&f.name);
+                        out.push_str("_sum");
+                        write_labels(&mut out, &s.labels, None);
+                        let _ = writeln!(out, " {}", fmt_value(*sum));
+                        out.push_str(&f.name);
+                        out.push_str("_count");
+                        write_labels(&mut out, &s.labels, None);
+                        let _ = writeln!(out, " {count}");
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// `{k="v",...}` with escaped values; `le` (when given) renders last so
+/// bucket lines read naturally. Empty label sets emit no braces.
+fn write_labels(out: &mut String, labels: &[(String, String)], le: Option<&str>) {
+    if labels.is_empty() && le.is_none() {
+        return;
+    }
+    out.push('{');
+    let mut first = true;
+    for (k, v) in labels {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        let _ = write!(out, "{k}=\"{}\"", escape_label(v));
+    }
+    if let Some(le) = le {
+        if !first {
+            out.push(',');
+        }
+        let _ = write!(out, "le=\"{le}\"");
+    }
+    out.push('}');
+}
+
+/// Label-value escaping per the exposition format: `\` `"` and newline.
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// HELP text escapes only `\` and newline (quotes are legal there).
+fn escape_help(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Integers render without a fraction (matching `util::json`), floats with
+/// Rust's shortest roundtrip form — both are valid exposition floats.
+fn fmt_value(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_partition() {
+        let mut h = FixedHistogram::new(vec![1.0, 2.0, 5.0]);
+        for v in [0.5, 1.0, 1.5, 3.0, 100.0] {
+            h.observe(v);
+        }
+        // le=1: 0.5 and the exact 1.0 boundary; +Inf overflow holds 100.0
+        assert_eq!(h.counts, vec![2, 1, 1, 1]);
+        assert_eq!(h.count(), 5);
+        assert!((h.sum() - 106.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn families_merge_and_cap() {
+        let mut r = MetricRegistry::new();
+        for i in 0..(MAX_SERIES_PER_FAMILY + 10) {
+            let v = i.to_string();
+            r.counter_l("m", "h", &[("i", v.as_str())], 1.0);
+        }
+        assert_eq!(r.series_count(), MAX_SERIES_PER_FAMILY);
+        let rendered = r.render();
+        assert_eq!(rendered.matches("# TYPE m counter").count(), 1);
+    }
+
+    #[test]
+    fn find_matches_labels_exactly() {
+        let mut r = MetricRegistry::new();
+        r.counter_l("x", "h", &[("a", "1")], 3.0);
+        r.counter_l("x", "h", &[("a", "2")], 4.0);
+        assert_eq!(r.find("x", &[("a", "2")]), Some(4.0));
+        assert_eq!(r.find("x", &[]), None);
+        assert_eq!(r.find("y", &[]), None);
+    }
+
+    #[test]
+    fn time_buckets_are_strictly_ascending() {
+        let h = FixedHistogram::time_buckets();
+        assert!(h.bounds.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(h.counts.len(), h.bounds.len() + 1);
+    }
+}

@@ -1,0 +1,400 @@
+//! Per-round span tracing + the flight recorder.
+//!
+//! The serve tick and the engine's hot path record one [`SpanEvent`] per
+//! phase that did work (draft per plan-group, the fused ragged verify,
+//! apply, derived KV h2d/d2h copy time, replan/admit/reconfig/race
+//! launch). Events land in a **preallocated ring buffer** — O(1) per
+//! event, no allocation on the hot path, oldest-first overwrite — so the
+//! recorder's cost is a couple of `Instant` reads per phase and its
+//! memory is fixed at construction (PERF.md §Memory discipline).
+//!
+//! Two consumers read the ring:
+//! * `--trace-out FILE` exports the whole ring as chrome://tracing JSON
+//!   ([`chrome_trace`]) after the run;
+//! * on any `SpecError` the batcher snapshots the last K rounds of spans
+//!   plus the victim slot's plan/acceptance state into a [`FaultDump`],
+//!   so a chaos failure is debuggable post-mortem even though recovery
+//!   immediately rewrites the live state.
+//!
+//! Durations also feed per-phase [`FixedHistogram`]s, exported as
+//! `specactor_phase_seconds{phase=...}` — the draft/verify/copy breakdown
+//! the ROADMAP's overlapped-execution item is benchmarked against.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+use super::registry::{FixedHistogram, MetricRegistry};
+
+/// Hot-path phase a span measures. Serve-tick phases come first, then the
+/// engine-round sub-phases.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Tick phase 0: resolving finished Fastest-of-N races.
+    Resolve,
+    /// Tick phase 1: retiring finished slots.
+    Retire,
+    /// Tick phase 2: occupancy-bucket replanning (Algorithm 1).
+    Replan,
+    /// Tick phase 2: admissions (prefill-join).
+    Admit,
+    /// Tick phase 3b: forking replicas for a race (Algorithm 3).
+    RaceLaunch,
+    /// Tick phase 4: the whole engine round.
+    Round,
+    /// Tick phase 5: Algorithm 2 reconfiguration.
+    Reconfig,
+    /// Engine round: drafting one plan group.
+    Draft,
+    /// Engine round: the fused ragged verify step.
+    Verify,
+    /// Engine round: applying per-row outcomes.
+    Apply,
+    /// KV host→device staging time inside the verify step (derived from
+    /// `RuntimeStats` deltas — the copies happen inside the runtime).
+    KvH2d,
+    /// KV/logits device→host readback time inside the verify step
+    /// (derived from `RuntimeStats` deltas).
+    KvD2h,
+}
+
+pub const N_PHASES: usize = 12;
+
+impl Phase {
+    pub const ALL: [Phase; N_PHASES] = [
+        Phase::Resolve,
+        Phase::Retire,
+        Phase::Replan,
+        Phase::Admit,
+        Phase::RaceLaunch,
+        Phase::Round,
+        Phase::Reconfig,
+        Phase::Draft,
+        Phase::Verify,
+        Phase::Apply,
+        Phase::KvH2d,
+        Phase::KvD2h,
+    ];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Phase::Resolve => "resolve",
+            Phase::Retire => "retire",
+            Phase::Replan => "replan",
+            Phase::Admit => "admit",
+            Phase::RaceLaunch => "race_launch",
+            Phase::Round => "round",
+            Phase::Reconfig => "reconfig",
+            Phase::Draft => "draft",
+            Phase::Verify => "verify",
+            Phase::Apply => "apply",
+            Phase::KvH2d => "kv_h2d",
+            Phase::KvD2h => "kv_d2h",
+        }
+    }
+
+    fn index(self) -> usize {
+        Phase::ALL.iter().position(|&p| p == self).unwrap()
+    }
+}
+
+/// One recorded span. `Copy` and fixed-size so the ring never allocates.
+#[derive(Clone, Copy, Debug)]
+pub struct SpanEvent {
+    pub phase: Phase,
+    /// Serve round (tick) the span belongs to.
+    pub round: u64,
+    /// Start offset from the tracer's epoch, microseconds.
+    pub t_start_us: u64,
+    pub dur_us: u64,
+    /// Phase-specific payload: slots touched, plan group index, replicas
+    /// forked — whatever the recording site finds cheap and useful.
+    pub detail: u32,
+}
+
+struct TraceBuffer {
+    /// Ring storage: grows (within pre-reserved capacity) until full,
+    /// then `head` walks the overwrite position.
+    buf: Vec<SpanEvent>,
+    cap: usize,
+    head: usize,
+    total: u64,
+    round: u64,
+    epoch: Instant,
+    phase_hist: Vec<FixedHistogram>,
+}
+
+/// Cloneable recording handle (single-threaded interior mutability: the
+/// batcher and the engine share one buffer; the exporter thread only ever
+/// sees rendered strings).
+#[derive(Clone)]
+pub struct Tracer(Rc<RefCell<TraceBuffer>>);
+
+impl Tracer {
+    /// `capacity` is the flight-recorder depth in events; memory is fixed
+    /// here and never grows afterwards.
+    pub fn new(capacity: usize) -> Self {
+        let cap = capacity.max(16);
+        Tracer(Rc::new(RefCell::new(TraceBuffer {
+            buf: Vec::with_capacity(cap),
+            cap,
+            head: 0,
+            total: 0,
+            round: 0,
+            epoch: Instant::now(),
+            phase_hist: (0..N_PHASES).map(|_| FixedHistogram::time_buckets()).collect(),
+        })))
+    }
+
+    /// Microseconds since the tracer's epoch — span start timestamps.
+    pub fn now_us(&self) -> u64 {
+        self.0.borrow().epoch.elapsed().as_micros() as u64
+    }
+
+    /// Tag subsequent spans with serve round `r`.
+    pub fn begin_round(&self, r: u64) {
+        self.0.borrow_mut().round = r;
+    }
+
+    /// Record a span that started at `t0_us` and ends now.
+    pub fn record(&self, phase: Phase, t0_us: u64, detail: u32) {
+        let now = self.now_us();
+        self.record_with_dur(phase, t0_us, now.saturating_sub(t0_us), detail);
+    }
+
+    /// Record a span with an externally measured duration (the derived KV
+    /// copy spans use `RuntimeStats` deltas). O(1), allocation-free: the
+    /// ring either appends into pre-reserved capacity or overwrites.
+    pub fn record_with_dur(&self, phase: Phase, t0_us: u64, dur_us: u64, detail: u32) {
+        let mut b = self.0.borrow_mut();
+        let ev =
+            SpanEvent { phase, round: b.round, t_start_us: t0_us, dur_us, detail };
+        if b.buf.len() < b.cap {
+            b.buf.push(ev);
+        } else {
+            let h = b.head;
+            b.buf[h] = ev;
+            b.head = (h + 1) % b.cap;
+        }
+        b.total += 1;
+        b.phase_hist[phase.index()].observe(dur_us as f64 * 1e-6);
+    }
+
+    /// Events recorded over the tracer's lifetime (>= `len` once the ring
+    /// has wrapped).
+    pub fn total(&self) -> u64 {
+        self.0.borrow().total
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.borrow().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.borrow().buf.is_empty()
+    }
+
+    /// Ring contents, oldest first (cold path: allocates the result).
+    pub fn events(&self) -> Vec<SpanEvent> {
+        let b = self.0.borrow();
+        let mut out = Vec::with_capacity(b.buf.len());
+        out.extend_from_slice(&b.buf[b.head..]);
+        out.extend_from_slice(&b.buf[..b.head]);
+        out
+    }
+
+    /// Spans from the last `k_rounds` serve rounds, oldest first — the
+    /// fault-dump window.
+    pub fn recent_spans(&self, k_rounds: u64) -> Vec<SpanEvent> {
+        let current = self.0.borrow().round;
+        let cutoff = current.saturating_sub(k_rounds.saturating_sub(1));
+        self.events().into_iter().filter(|e| e.round >= cutoff).collect()
+    }
+
+    /// Register the per-phase duration histograms (and the recorder's own
+    /// ledger) into a scrape snapshot. Phases that never fired are
+    /// skipped so an untraced path exports no empty series.
+    pub fn register_metrics(&self, reg: &mut MetricRegistry) {
+        let b = self.0.borrow();
+        for p in Phase::ALL {
+            let h = &b.phase_hist[p.index()];
+            if h.is_empty() {
+                continue;
+            }
+            reg.histogram_l(
+                "specactor_phase_seconds",
+                "Time spent per hot-path phase, per span",
+                &[("phase", p.label())],
+                h,
+            );
+        }
+        reg.counter(
+            "specactor_trace_events_total",
+            "Spans recorded by the flight recorder (ring overwrites included)",
+            b.total as f64,
+        );
+    }
+}
+
+/// Post-mortem snapshot taken by the batcher when a `SpecError` surfaces:
+/// the error, the victim slot's plan/acceptance state at fault time, and
+/// the last K rounds of spans from the flight recorder.
+#[derive(Clone, Debug)]
+pub struct FaultDump {
+    pub round: u64,
+    pub error: String,
+    /// `SpecError::severity()` label (degradable / slot_fatal / worker_fatal).
+    pub severity: String,
+    pub slot: Option<usize>,
+    /// Victim slot's plan label (`method:window`), when a slot is named.
+    pub plan: String,
+    /// Victim slot's cumulative drafted/accepted counters at fault time.
+    pub drafted: u64,
+    pub accepted: u64,
+    pub spans: Vec<SpanEvent>,
+}
+
+impl FaultDump {
+    fn args_json(&self) -> Json {
+        Json::obj(vec![
+            ("round", Json::num(self.round as f64)),
+            ("error", Json::str(&self.error)),
+            ("severity", Json::str(&self.severity)),
+            (
+                "slot",
+                match self.slot {
+                    Some(s) => Json::num(s as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("plan", Json::str(&self.plan)),
+            ("drafted", Json::num(self.drafted as f64)),
+            ("accepted", Json::num(self.accepted as f64)),
+            ("spans_captured", Json::num(self.spans.len() as f64)),
+        ])
+    }
+}
+
+fn span_json(e: &SpanEvent) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(e.phase.label())),
+        ("cat", Json::str("specactor")),
+        ("ph", Json::str("X")),
+        ("ts", Json::num(e.t_start_us as f64)),
+        ("dur", Json::num(e.dur_us as f64)),
+        ("pid", Json::num(1.0)),
+        ("tid", Json::num(1.0)),
+        (
+            "args",
+            Json::obj(vec![
+                ("round", Json::num(e.round as f64)),
+                ("detail", Json::num(e.detail as f64)),
+            ]),
+        ),
+    ])
+}
+
+/// chrome://tracing JSON object format: complete (`"ph":"X"`) events for
+/// every span, global instant events (`"ph":"i"`) for fault dumps. Load
+/// the written file in `chrome://tracing` or Perfetto.
+pub fn chrome_trace(events: &[SpanEvent], dumps: &[FaultDump]) -> Json {
+    let mut items: Vec<Json> = events.iter().map(span_json).collect();
+    for d in dumps {
+        let ts = d.spans.last().map(|s| s.t_start_us + s.dur_us).unwrap_or(0);
+        items.push(Json::obj(vec![
+            ("name", Json::str(&format!("fault: {}", d.severity))),
+            ("cat", Json::str("fault")),
+            ("ph", Json::str("i")),
+            ("s", Json::str("g")),
+            ("ts", Json::num(ts as f64)),
+            ("pid", Json::num(1.0)),
+            ("tid", Json::num(1.0)),
+            ("args", d.args_json()),
+        ]));
+        // the dump's span window rides along on its own track so the
+        // pre-fault timeline survives even after the main ring wraps
+        for s in &d.spans {
+            let mut j = span_json(s);
+            if let Json::Obj(o) = &mut j {
+                o.insert("tid".to_string(), Json::num(2.0));
+                o.insert("cat".to_string(), Json::str("fault_window"));
+            }
+            items.push(j);
+        }
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(items)),
+        ("displayTimeUnit", Json::str("ms")),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_overwrites_oldest_first() {
+        let t = Tracer::new(16);
+        for i in 0..40u32 {
+            t.record_with_dur(Phase::Round, i as u64, 1, i);
+        }
+        assert_eq!(t.len(), 16);
+        assert_eq!(t.total(), 40);
+        let evs = t.events();
+        let details: Vec<u32> = evs.iter().map(|e| e.detail).collect();
+        let expect: Vec<u32> = (24..40).collect();
+        assert_eq!(details, expect, "ring must keep the newest events, oldest first");
+    }
+
+    #[test]
+    fn recent_spans_window_by_round() {
+        let t = Tracer::new(64);
+        for r in 0..10u64 {
+            t.begin_round(r);
+            t.record_with_dur(Phase::Round, 0, 1, 0);
+            t.record_with_dur(Phase::Verify, 0, 1, 0);
+        }
+        let recent = t.recent_spans(3);
+        assert_eq!(recent.len(), 6);
+        assert!(recent.iter().all(|e| e.round >= 7));
+    }
+
+    #[test]
+    fn phase_histograms_register_only_fired_phases() {
+        let t = Tracer::new(16);
+        t.record_with_dur(Phase::Verify, 0, 1500, 0);
+        let mut reg = MetricRegistry::new();
+        t.register_metrics(&mut reg);
+        let rendered = reg.render();
+        assert!(rendered.contains("phase=\"verify\""));
+        assert!(!rendered.contains("phase=\"draft\""));
+        assert!(rendered.contains("specactor_trace_events_total 1"));
+    }
+
+    #[test]
+    fn chrome_trace_roundtrips_through_the_json_parser() {
+        let t = Tracer::new(16);
+        t.begin_round(3);
+        t.record_with_dur(Phase::Draft, 10, 5, 1);
+        t.record_with_dur(Phase::Verify, 15, 7, 0);
+        let dump = FaultDump {
+            round: 3,
+            error: "kv row invalid".into(),
+            severity: "slot_fatal".into(),
+            slot: Some(2),
+            plan: "sam:3".into(),
+            drafted: 12,
+            accepted: 9,
+            spans: t.recent_spans(2),
+        };
+        let j = chrome_trace(&t.events(), &[dump]);
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        let evs = parsed.get("traceEvents").as_arr().unwrap();
+        // 2 ring spans + 1 instant + 2 fault-window spans
+        assert_eq!(evs.len(), 5);
+        assert!(evs.iter().any(|e| e.get("ph").as_str() == Some("i")));
+        assert!(evs.iter().all(|e| e.get("ts").as_f64().is_some()));
+    }
+}

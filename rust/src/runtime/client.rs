@@ -92,6 +92,14 @@ pub struct RuntimeStats {
     /// Wall time spent building KV input literals, copying results back to
     /// host vectors and scattering KV windows into the cache.
     pub host_copy_s: f64,
+    /// The host→device share of `host_copy_s`: staging KV input literals.
+    /// Split out so the serve loop's tracer can attribute copy time per
+    /// direction (the overlapped-execution ROADMAP item hides exactly
+    /// this share behind compute).
+    pub kv_h2d_s: f64,
+    /// The device→host share of `host_copy_s`: logits/KV readback plus
+    /// the window scatter into the host cache.
+    pub kv_d2h_s: f64,
     /// KV bytes staged host→device per call (the full cache must travel
     /// down every step because CPU-PJRT gives us no persistent device-side
     /// cache buffers — see PERF.md §Incremental-KV protocol).
@@ -102,6 +110,32 @@ pub struct RuntimeStats {
     pub kv_d2h_bytes: u64,
     /// Logits bytes copied device→host per call.
     pub logits_d2h_bytes: u64,
+}
+
+impl RuntimeStats {
+    /// Register the runtime's execution/copy ledger into a scrape
+    /// snapshot (`specactor_runtime_*`) — all cumulative, so counters.
+    pub fn register_metrics(&self, reg: &mut crate::obs::MetricRegistry) {
+        let series: [(&str, &str, f64); 9] = [
+            ("compiles", "Executable compilations", self.compiles as f64),
+            ("compile_seconds", "Wall time compiling executables", self.compile_s),
+            ("executions", "Executable invocations", self.executions as f64),
+            ("execute_seconds", "Wall time inside PJRT execution", self.execute_s),
+            ("host_copy_seconds", "Wall time in host-side copies", self.host_copy_s),
+            ("kv_h2d_seconds", "Host to device share of host_copy_seconds", self.kv_h2d_s),
+            ("kv_d2h_seconds", "Device to host share of host_copy_seconds", self.kv_d2h_s),
+            ("kv_h2d_bytes", "KV bytes staged host to device", self.kv_h2d_bytes as f64),
+            ("kv_d2h_bytes", "KV bytes copied device to host", self.kv_d2h_bytes as f64),
+        ];
+        for (name, help, v) in series {
+            reg.counter(&format!("specactor_runtime_{name}"), help, v);
+        }
+        reg.counter(
+            "specactor_runtime_logits_d2h_bytes",
+            "Logits bytes copied device to host",
+            self.logits_d2h_bytes as f64,
+        );
+    }
 }
 
 pub struct Runtime {
@@ -316,8 +350,10 @@ impl Runtime {
         let k_lit = Self::lit_f32(&cache.k, &dims)?;
         let v_lit = Self::lit_f32(&cache.v, &dims)?;
         {
+            let dt = t0.elapsed().as_secs_f64();
             let mut st = self.stats.borrow_mut();
-            st.host_copy_s += t0.elapsed().as_secs_f64();
+            st.host_copy_s += dt;
+            st.kv_h2d_s += dt;
             st.kv_h2d_bytes += cache.bytes() as u64;
         }
         args.push(&tok_lit);
@@ -370,7 +406,12 @@ impl Runtime {
                 None => cache.scatter_window(&k, &v, window)?,
             },
         }
-        self.stats.borrow_mut().host_copy_s += t0.elapsed().as_secs_f64();
+        {
+            let dt = t0.elapsed().as_secs_f64();
+            let mut st = self.stats.borrow_mut();
+            st.host_copy_s += dt;
+            st.kv_d2h_s += dt;
+        }
         Ok(())
     }
 
@@ -405,8 +446,10 @@ impl Runtime {
         let kk: Vec<f32> = k.to_vec().map_err(|e| anyhow!("k to_vec: {e:?}"))?;
         let vv: Vec<f32> = v.to_vec().map_err(|e| anyhow!("v to_vec: {e:?}"))?;
         {
+            let dt = t1.elapsed().as_secs_f64();
             let mut st = self.stats.borrow_mut();
-            st.host_copy_s += t1.elapsed().as_secs_f64();
+            st.host_copy_s += dt;
+            st.kv_d2h_s += dt;
             st.logits_d2h_bytes += (logits.len() * std::mem::size_of::<f32>()) as u64;
             st.kv_d2h_bytes += ((kk.len() + vv.len()) * std::mem::size_of::<f32>()) as u64;
         }

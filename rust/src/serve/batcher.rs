@@ -50,9 +50,10 @@ use crate::coordinator::race::RaceArbiter;
 use crate::coordinator::reconfig::{LiveSlot, Reconfigurator};
 use crate::drafter::DraftMethod;
 use crate::engine::{
-    same_group, EngineReport, PlanMode, Request, Severity, SlotPlan, SpecError, VerifyDiscipline,
-    Worker,
+    same_group, EngineReport, PlanMode, Request, Severity, SlotAccept, SlotPlan, SpecError,
+    VerifyDiscipline, Worker,
 };
+use crate::obs::{FaultDump, MetricRegistry, MetricsExporter, Phase, Tracer};
 use crate::util::rng::position_rng;
 
 use super::metrics::ServeMetrics;
@@ -116,6 +117,13 @@ pub trait ServeEngine {
     fn invalidate_draft_state(&mut self) -> Result<()> {
         Ok(())
     }
+    /// Install a per-phase span recorder: subsequent rounds emit
+    /// Draft/Verify/Apply (and KV-copy) spans into the shared flight
+    /// recorder. Default no-op for engines without instrumentation.
+    fn attach_tracer(&mut self, _t: Tracer) {}
+    /// Contribute engine-side series (runtime copy/execute ledger, chaos
+    /// injection counters, ...) to a scrape snapshot. Default no-op.
+    fn collect_metrics(&self, _reg: &mut MetricRegistry) {}
 }
 
 impl ServeEngine for Worker<'_> {
@@ -165,6 +173,14 @@ impl ServeEngine for Worker<'_> {
 
     fn invalidate_draft_state(&mut self) -> Result<()> {
         Worker::invalidate_draft_state(self)
+    }
+
+    fn attach_tracer(&mut self, t: Tracer) {
+        Worker::set_tracer(self, t)
+    }
+
+    fn collect_metrics(&self, reg: &mut MetricRegistry) {
+        self.rt.stats.borrow().register_metrics(reg);
     }
 }
 
@@ -232,7 +248,35 @@ pub struct Batcher<E: ServeEngine> {
     finished: Vec<FinishedRequest>,
     /// Run speculative rounds (false = vanilla decode every round).
     spec: bool,
+    /// Per-phase span recorder, shared with the engine (None = off).
+    tracer: Option<Tracer>,
+    /// Prometheus scrape endpoint; the tick loop re-publishes a rendered
+    /// snapshot periodically so scrapers never block serving.
+    exporter: Option<MetricsExporter>,
+    /// Flight-recorder post-mortems captured on engine-round faults
+    /// (bounded; oldest dropped).
+    pub fault_dumps: Vec<FaultDump>,
+    /// Pre-round `report.per_slot` snapshot — the delta after the round
+    /// is attributed to each slot's draft method (reused buffer).
+    prev_per_slot: Vec<SlotAccept>,
+    /// Optional real-time pacing sleep per tick (µs) so an external
+    /// scraper can observe a smoke run mid-flight. Virtual serving time
+    /// (`now_s`) is caller-injected and unaffected — determinism holds.
+    pace_us: u64,
+    /// The latest tick's `now_s`: the wall clock scrape-snapshot rates
+    /// (tokens/s) are rendered against.
+    last_now_s: f64,
 }
+
+/// Re-publish the scrape snapshot every this many ticks (when unpaced —
+/// a paced run publishes every tick, it has real time to spend).
+const PUBLISH_EVERY_TICKS: u64 = 16;
+
+/// Fault dumps kept for the post-mortem trace (oldest dropped).
+const MAX_FAULT_DUMPS: usize = 8;
+
+/// Rounds of spans snapshotted into each fault dump.
+const FAULT_DUMP_ROUNDS: u64 = 4;
 
 impl<E: ServeEngine> Batcher<E> {
     pub fn new(engine: E, queue_cap: usize, replan: Replanner, spec: bool) -> Self {
@@ -260,6 +304,12 @@ impl<E: ServeEngine> Batcher<E> {
             ticks: 0,
             finished: Vec::new(),
             spec,
+            tracer: None,
+            exporter: None,
+            fault_dumps: Vec::new(),
+            prev_per_slot: Vec::new(),
+            pace_us: 0,
+            last_now_s: 0.0,
             engine,
         }
     }
@@ -285,6 +335,39 @@ impl<E: ServeEngine> Batcher<E> {
         self
     }
 
+    /// Enable per-phase round tracing into a flight recorder holding the
+    /// most recent `capacity` spans; the recorder is shared with the
+    /// engine (Draft/Verify/Apply/KV sub-spans) via `attach_tracer`.
+    pub fn with_tracing(mut self, capacity: usize) -> Self {
+        let t = Tracer::new(capacity);
+        self.engine.attach_tracer(t.clone());
+        self.tracer = Some(t);
+        self
+    }
+
+    /// Attach a Prometheus scrape endpoint: the tick loop re-publishes a
+    /// rendered [`MetricRegistry`] snapshot (every tick when paced, every
+    /// [`PUBLISH_EVERY_TICKS`] otherwise) — scrapers read the snapshot,
+    /// never the live loop.
+    pub fn with_exporter(mut self, ex: MetricsExporter) -> Self {
+        self.exporter = Some(ex);
+        self
+    }
+
+    /// Sleep `pace_us` of real time after each tick (0 = off): stretches
+    /// a smoke run so external scrapers can observe it mid-flight
+    /// without touching the injected virtual clock.
+    pub fn with_pace(mut self, pace_us: u64) -> Self {
+        self.pace_us = pace_us;
+        self
+    }
+
+    /// The installed span recorder, if tracing is on (the serve CLI
+    /// exports its contents as a chrome://tracing JSON after the run).
+    pub fn tracer(&self) -> Option<&Tracer> {
+        self.tracer.as_ref()
+    }
+
     /// Offer a request to the admission queue (false = backpressure).
     pub fn enqueue(&mut self, req: Request, prio: Priority, now_s: f64) -> bool {
         self.queue.push(req, prio, now_s)
@@ -293,10 +376,6 @@ impl<E: ServeEngine> Batcher<E> {
     /// Nothing queued, nothing in flight.
     pub fn idle(&self) -> bool {
         self.queue.is_empty() && self.slots.occupancy() == 0
-    }
-
-    pub fn engine(&self) -> &E {
-        &self.engine
     }
 
     /// Completed requests retired so far (draining resets the list).
@@ -323,10 +402,31 @@ impl<E: ServeEngine> Batcher<E> {
     }
 
     /// One serving round: resolve races → retire → replan → admit →
-    /// race-launch → decode → reconfigure.
+    /// race-launch → decode → reconfigure. Publishes the scrape snapshot
+    /// and applies the pacing sleep after the round — on faulted ticks
+    /// too, so a scraper sees the failure counters, not a stale success.
     pub fn tick(&mut self, now_s: f64) -> Result<TickReport> {
+        self.last_now_s = now_s;
+        let res = self.tick_inner(now_s);
+        if let Some(ex) = &self.exporter {
+            if self.pace_us > 0 || self.ticks % PUBLISH_EVERY_TICKS == 1 {
+                ex.publish(self.collect_registry(now_s).render());
+            }
+        }
+        if self.pace_us > 0 {
+            std::thread::sleep(std::time::Duration::from_micros(self.pace_us));
+        }
+        res
+    }
+
+    fn tick_inner(&mut self, now_s: f64) -> Result<TickReport> {
         let mut tr = TickReport::default();
         self.ticks += 1;
+        let tracer = self.tracer.clone();
+        if let Some(t) = &tracer {
+            t.begin_round(self.ticks);
+        }
+        let mut mark = tracer.as_ref().map(|t| t.now_us());
 
         // 0. resolve finished races: the first member to finish wins, the
         //    losers are cancelled, and the winner retires as the race's
@@ -353,6 +453,10 @@ impl<E: ServeEngine> Batcher<E> {
                 });
                 tr.retired += 1;
             }
+        }
+        if let (Some(t), Some(m)) = (&tracer, mark) {
+            t.record(Phase::Resolve, m, tr.retired as u32);
+            mark = Some(t.now_us());
         }
 
         // 1. retire finished requests, freeing their slots (race members
@@ -411,6 +515,10 @@ impl<E: ServeEngine> Batcher<E> {
                 }
             }
         }
+        if let (Some(t), Some(m)) = (&tracer, mark) {
+            t.record(Phase::Retire, m, tr.retired as u32);
+            mark = Some(t.now_us());
+        }
 
         // 2. replan for the occupancy the admissions are about to
         //    produce, THEN prefill-join waiting requests under that plan:
@@ -452,6 +560,10 @@ impl<E: ServeEngine> Batcher<E> {
             self.metrics.on_admit(now_s - q.enqueued_s);
             tr.admitted += 1;
         }
+        if let (Some(t), Some(m)) = (&tracer, mark) {
+            t.record(Phase::Admit, m, tr.admitted as u32);
+            mark = Some(t.now_us());
+        }
 
         // 3. the actual occupancy differs from the prediction only when
         //    queued requests were rejected as invalid; correct the bucket
@@ -482,6 +594,10 @@ impl<E: ServeEngine> Batcher<E> {
                     }
                 }
             }
+        }
+        if let (Some(t), Some(m)) = (&tracer, mark) {
+            t.record(Phase::Replan, m, crossed as u32);
+            mark = Some(t.now_us());
         }
 
         // 3b. spend idle capacity on tail races (Algorithm 3): only when
@@ -529,6 +645,10 @@ impl<E: ServeEngine> Batcher<E> {
                 tr.raced = used;
             }
         }
+        if let (Some(t), Some(m)) = (&tracer, mark) {
+            t.record(Phase::RaceLaunch, m, tr.raced as u32);
+            mark = Some(t.now_us());
+        }
 
         // 4. one engine round under the live slot plans; typed
         //    speculation faults are absorbed here — Degradable slots
@@ -536,11 +656,17 @@ impl<E: ServeEngine> Batcher<E> {
         //    quarantined — and only untyped / WorkerFatal errors abort
         //    the serve loop
         let before = self.report.total_generated;
+        self.prev_per_slot.clone_from(&self.report.per_slot);
         tr.active = match self.engine.round(&mut self.report) {
             Ok(n) => n,
             Err(e) => self.on_round_error(e)?,
         };
         tr.generated = self.report.total_generated - before;
+        if let (Some(t), Some(m)) = (&tracer, mark) {
+            t.record(Phase::Round, m, tr.active as u32);
+            mark = Some(t.now_us());
+        }
+        self.attribute_round_delta();
         // occupancy re-read: freshly-forked replicas are live rows too
         self.metrics.on_round(self.slots.occupancy(), tr.generated);
 
@@ -584,7 +710,95 @@ impl<E: ServeEngine> Batcher<E> {
                 }
             }
         }
+        if let (Some(t), Some(m)) = (&tracer, mark) {
+            t.record(Phase::Reconfig, m, tr.reconfigured as u32);
+        }
         Ok(tr)
+    }
+
+    /// Attribute this round's per-slot drafted/accepted deltas to each
+    /// slot's draft method — the per-method acceptance telemetry. Reads
+    /// the pre-round snapshot taken in `tick_inner`; slots that drafted
+    /// nothing (vanilla, idle) contribute nothing.
+    fn attribute_round_delta(&mut self) {
+        for (slot, cur) in self.report.per_slot.iter().enumerate() {
+            let prev = self.prev_per_slot.get(slot).copied().unwrap_or_default();
+            let drafted = cur.drafted - prev.drafted;
+            let accepted = cur.accepted - prev.accepted;
+            if drafted == 0 && accepted == 0 {
+                continue;
+            }
+            if let Some(p) = self.engine.slot_plan(slot) {
+                self.metrics.on_method_tokens(&p.method.label(), drafted, accepted);
+            }
+        }
+    }
+
+    /// Assemble the complete scrape snapshot: serve counters, the
+    /// queue's rejection ledger, racing telemetry, engine-side series
+    /// (runtime copy/execute ledger, chaos injections), slot gauges and
+    /// the tracer's per-phase histograms — the same numbers `to_json`
+    /// renders, in Prometheus form, from one source of truth.
+    pub fn collect_registry(&self, wall_s: f64) -> MetricRegistry {
+        let mut reg = MetricRegistry::new();
+        self.metrics.register(&mut reg, wall_s);
+        self.queue.register_metrics(&mut reg);
+        if let Some(ar) = &self.race {
+            ar.register_metrics(&mut reg);
+        }
+        let rep = &self.report;
+        let engine_counters: [(&str, &str, u64); 8] = [
+            ("target_steps", "Target model steps launched", rep.target_steps),
+            ("draft_steps", "Draft model steps launched", rep.draft_steps),
+            ("drafted_tokens", "Tokens proposed by drafters", rep.drafted_tokens),
+            ("accepted_tokens", "Drafted tokens accepted by verification", rep.accepted_tokens),
+            ("wasted_tokens", "Drafted tokens rejected by verification", rep.wasted_tokens),
+            ("generated_tokens", "Tokens emitted into sequences", rep.total_generated),
+            ("iterations", "Engine iterations run", rep.iterations),
+            (
+                "skipped_iterations",
+                "Iterations advancing more than one token",
+                rep.skipped_iterations,
+            ),
+        ];
+        for (name, help, v) in engine_counters {
+            reg.counter(&format!("specactor_engine_{name}"), help, v as f64);
+        }
+        reg.counter("specactor_serve_ticks", "Serve-loop ticks run", self.ticks as f64);
+        reg.gauge(
+            "specactor_slots_occupancy",
+            "Batch slots currently live",
+            self.slots.occupancy() as f64,
+        );
+        reg.gauge(
+            "specactor_slots_high_water",
+            "Peak concurrent slot occupancy",
+            self.slots.high_water as f64,
+        );
+        reg.gauge(
+            "specactor_slots_capacity",
+            "Batch slot capacity",
+            self.engine.capacity() as f64,
+        );
+        reg.gauge(
+            "specactor_fault_dumps",
+            "Flight-recorder post-mortems held (bounded, oldest dropped)",
+            self.fault_dumps.len() as f64,
+        );
+        self.engine.collect_metrics(&mut reg);
+        if let Some(t) = &self.tracer {
+            t.register_metrics(&mut reg);
+        }
+        reg
+    }
+
+    /// Publish the end-of-run scrape snapshot (no-op without an
+    /// exporter) so a scraper arriving after the last tick still sees
+    /// the final totals rather than a mid-run snapshot.
+    pub fn publish_final(&self, wall_s: f64) {
+        if let Some(ex) = &self.exporter {
+            ex.publish(self.collect_registry(wall_s).render());
+        }
     }
 
     fn reset_degrade(&mut self, slot: usize) {
@@ -601,6 +815,7 @@ impl<E: ServeEngine> Batcher<E> {
             Some(se) => (se.severity(), se.slot()),
             None => return Err(e),
         };
+        self.capture_fault_dump(&e, sev, slot);
         match sev {
             Severity::WorkerFatal => return Err(e),
             Severity::Degradable => match slot {
@@ -620,6 +835,46 @@ impl<E: ServeEngine> Batcher<E> {
             }
         }
         Ok(self.slots.occupancy())
+    }
+
+    /// Flight-recorder post-mortem: on a typed engine-round fault,
+    /// snapshot the last [`FAULT_DUMP_ROUNDS`] rounds of spans plus the
+    /// victim slot's plan and acceptance timeline BEFORE recovery mutates
+    /// them. No-op when tracing is off; the dump list is bounded.
+    fn capture_fault_dump(&mut self, e: &anyhow::Error, sev: Severity, slot: Option<usize>) {
+        let Some(t) = &self.tracer else {
+            return;
+        };
+        let severity = match sev {
+            Severity::Degradable => "degradable",
+            Severity::SlotFatal => "slot_fatal",
+            Severity::WorkerFatal => "worker_fatal",
+        };
+        let (plan, drafted, accepted) = match slot {
+            Some(s) => {
+                let plan = self
+                    .engine
+                    .slot_plan(s)
+                    .map(|p| format!("{}:{}", p.method.label(), p.window))
+                    .unwrap_or_else(|| "?".to_string());
+                let acc = self.report.per_slot.get(s).copied().unwrap_or_default();
+                (plan, acc.drafted, acc.accepted)
+            }
+            None => ("batch".to_string(), self.report.drafted_tokens, self.report.accepted_tokens),
+        };
+        if self.fault_dumps.len() >= MAX_FAULT_DUMPS {
+            self.fault_dumps.remove(0);
+        }
+        self.fault_dumps.push(FaultDump {
+            round: self.ticks,
+            error: format!("{e:#}"),
+            severity: severity.to_string(),
+            slot,
+            plan,
+            drafted,
+            accepted,
+            spans: t.recent_spans(FAULT_DUMP_ROUNDS),
+        });
     }
 
     /// Degradation ladder, down-rung: force the slot to vanilla decode
@@ -1190,6 +1445,12 @@ mod tests {
         assert_eq!(done, vec![0, 1, 2, 3], "races must not lose or duplicate requests");
         assert_eq!(b.metrics.completed, 4);
         assert_eq!(b.slots.occupancy(), 0, "race slots must all be freed");
+        // every launched race ends exactly once: resolved or preempted
+        assert_eq!(
+            b.metrics.races,
+            b.metrics.race_resolutions + b.metrics.race_preemptions,
+            "race accounting must reconcile"
+        );
     }
 
     #[test]
@@ -1224,6 +1485,12 @@ mod tests {
         }
         let done = b.drain_finished().len();
         assert_eq!(done, 3, "all three requests must complete");
+        assert!(b.metrics.race_preemptions > 0, "the preempted race must be counted");
+        assert_eq!(
+            b.metrics.races,
+            b.metrics.race_resolutions + b.metrics.race_preemptions,
+            "race accounting must reconcile after preemption"
+        );
     }
 
     #[test]

@@ -277,6 +277,33 @@ impl<E: ServeEngine> ServeEngine for ChaosEngine<E> {
     fn invalidate_draft_state(&mut self) -> Result<()> {
         self.inner.invalidate_draft_state()
     }
+
+    fn attach_tracer(&mut self, t: crate::obs::Tracer) {
+        self.inner.attach_tracer(t)
+    }
+
+    fn collect_metrics(&self, reg: &mut crate::obs::MetricRegistry) {
+        let sites: [(&str, u64); 4] = [
+            ("step", self.injected_step),
+            ("drafter", self.injected_drafter),
+            ("slot", self.injected_slot),
+            ("fork", self.injected_fork),
+        ];
+        for (site, v) in sites {
+            reg.counter_l(
+                "specactor_chaos_injected",
+                "Chaos faults injected",
+                &[("site", site)],
+                v as f64,
+            );
+        }
+        reg.counter(
+            "specactor_chaos_pauses",
+            "Weight-update pauses fired (each invalidated draft state)",
+            self.pauses as f64,
+        );
+        self.inner.collect_metrics(reg);
+    }
 }
 
 #[cfg(test)]

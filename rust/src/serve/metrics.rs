@@ -9,8 +9,15 @@
 
 use std::collections::BTreeMap;
 
+use crate::obs::MetricRegistry;
 use crate::util::json::Json;
 use crate::util::stats::{P2Quantile, Welford};
+
+/// Prometheus family-name prefix for every serve-telemetry series: the
+/// scrape name of a `to_json` field `k` is `specactor_serve_<k>`, so the
+/// two snapshots reconcile mechanically (asserted field-for-field by
+/// `rust/tests/observability.rs`).
+pub const PROM_PREFIX: &str = "specactor_serve_";
 
 /// Telemetry accumulated by the batcher.
 #[derive(Clone, Debug)]
@@ -39,6 +46,16 @@ pub struct ServeMetrics {
     pub race_launches: u64,
     /// Races a replica finished strictly before the primary.
     pub race_wins: u64,
+    /// Races that ran to resolution (a member finished; replica or
+    /// primary). Together with [`ServeMetrics::race_preemptions`] this
+    /// reconciles the ledger: `races == race_resolutions +
+    /// race_preemptions`, and primary wins are `race_resolutions -
+    /// race_wins` — the "losses" the summary used to leave implicit.
+    pub race_resolutions: u64,
+    /// Races cancelled before resolution (admissions preempting replica
+    /// slots). These used to bump only `race_cancelled_replicas`, leaving
+    /// `races != wins + losses`.
+    pub race_preemptions: u64,
     /// Replica wins keyed by draft-method label (bounded by the ladder
     /// size, so the telemetry block stays O(1) in requests served).
     pub race_wins_by_method: BTreeMap<String, u64>,
@@ -66,6 +83,13 @@ pub struct ServeMetrics {
     /// a typed reason. Recovery guarantees this stays 0; the chaos bench
     /// and fault-tolerance tests assert it.
     pub lost: u64,
+    /// Tokens drafted, keyed by the drafting slot's plan-method label
+    /// (window-0 slots count under "vanilla" with 0 drafted). Algorithm 2
+    /// keys off per-method acceptance; these make it visible outside the
+    /// engine. Bounded by ladder size, like `race_wins_by_method`.
+    pub method_drafted: BTreeMap<String, u64>,
+    /// Tokens accepted per plan-method label (see `method_drafted`).
+    pub method_accepted: BTreeMap<String, u64>,
     queue_wait: Welford,
     latency_p50: P2Quantile,
     latency_p99: P2Quantile,
@@ -87,6 +111,8 @@ impl Default for ServeMetrics {
             races: 0,
             race_launches: 0,
             race_wins: 0,
+            race_resolutions: 0,
+            race_preemptions: 0,
             race_wins_by_method: BTreeMap::new(),
             race_cancelled_replicas: 0,
             race_wasted_rounds: 0,
@@ -96,6 +122,8 @@ impl Default for ServeMetrics {
             requeues: 0,
             recoveries: 0,
             lost: 0,
+            method_drafted: BTreeMap::new(),
+            method_accepted: BTreeMap::new(),
             queue_wait: Welford::default(),
             latency_p50: P2Quantile::new(0.5),
             latency_p99: P2Quantile::new(0.99),
@@ -149,6 +177,7 @@ impl ServeMetrics {
         cancelled: usize,
         wasted_rounds: u64,
     ) {
+        self.race_resolutions += 1;
         if replica_won {
             self.race_wins += 1;
             *self
@@ -163,8 +192,32 @@ impl ServeMetrics {
     /// A race was preempted for admissions: `cancelled` replicas freed
     /// after `wasted_rounds` rounds.
     pub fn on_race_cancel(&mut self, cancelled: usize, wasted_rounds: u64) {
+        self.race_preemptions += 1;
         self.race_cancelled_replicas += cancelled as u64;
         self.race_wasted_rounds += wasted_rounds;
+    }
+
+    /// One round drafted `drafted` and accepted `accepted` tokens on a
+    /// slot whose plan carries `method` — the per-method acceptance feed
+    /// (the batcher attributes `EngineReport.per_slot` deltas here).
+    pub fn on_method_tokens(&mut self, method: &str, drafted: u64, accepted: u64) {
+        if drafted == 0 && accepted == 0 {
+            return;
+        }
+        *self.method_drafted.entry(method.to_string()).or_insert(0) += drafted;
+        *self.method_accepted.entry(method.to_string()).or_insert(0) += accepted;
+    }
+
+    /// Measured acceptance per method, `(method, accepted/drafted)`.
+    pub fn method_acceptance(&self) -> Vec<(String, f64, u64, u64)> {
+        self.method_drafted
+            .iter()
+            .map(|(m, &d)| {
+                let a = self.method_accepted.get(m).copied().unwrap_or(0);
+                let rate = if d > 0 { a as f64 / d as f64 } else { 0.0 };
+                (m.clone(), rate, a, d)
+            })
+            .collect()
     }
 
     pub fn mean_queue_wait_s(&self) -> f64 {
@@ -197,44 +250,128 @@ impl ServeMetrics {
         }
     }
 
+    /// Monotone (counter-typed) series — the single enumeration both
+    /// [`ServeMetrics::to_json`] and [`ServeMetrics::register`] render
+    /// from, so the JSON summary and the `/metrics` scrape cannot drift.
+    fn counter_series(&self) -> [(&'static str, u64); 21] {
+        [
+            ("admitted", self.admitted),
+            ("completed", self.completed),
+            ("tokens", self.tokens),
+            ("rounds", self.rounds),
+            ("replans", self.replans),
+            ("invalid", self.invalid),
+            ("reconfigs", self.reconfigs),
+            ("reconfigured_slots", self.reconfigured_slots),
+            ("races", self.races),
+            ("race_launches", self.race_launches),
+            ("race_wins", self.race_wins),
+            ("race_resolutions", self.race_resolutions),
+            ("race_preemptions", self.race_preemptions),
+            ("race_cancelled_replicas", self.race_cancelled_replicas),
+            ("race_wasted_rounds", self.race_wasted_rounds),
+            ("degradations", self.degradations),
+            ("repromotions", self.repromotions),
+            ("quarantines", self.quarantines),
+            ("requeues", self.requeues),
+            ("recoveries", self.recoveries),
+            ("lost", self.lost),
+        ]
+    }
+
+    /// Derived point-in-time (gauge-typed) series; same sharing rule as
+    /// [`ServeMetrics::counter_series`].
+    fn gauge_series(&self, wall_s: f64) -> [(&'static str, f64); 6] {
+        [
+            ("tokens_per_s", self.tokens_per_second(wall_s)),
+            ("mean_queue_wait_s", self.mean_queue_wait_s()),
+            ("latency_p50_s", self.latency_p50_s()),
+            ("latency_p99_s", self.latency_p99_s()),
+            ("mean_latency_s", self.mean_latency_s()),
+            ("mean_occupancy", self.mean_occupancy()),
+        ]
+    }
+
+    /// Labeled (per-method) counter maps; shared like the series above.
+    fn map_series(&self) -> [(&'static str, &BTreeMap<String, u64>); 3] {
+        [
+            ("race_wins_by_method", &self.race_wins_by_method),
+            ("method_drafted", &self.method_drafted),
+            ("method_accepted", &self.method_accepted),
+        ]
+    }
+
     /// Machine-readable snapshot (BENCH_serve.json rows, demo output).
+    /// Rendered from the same series lists as [`ServeMetrics::register`].
     pub fn to_json(&self, wall_s: f64) -> Json {
-        Json::obj(vec![
-            ("admitted", Json::num(self.admitted as f64)),
-            ("completed", Json::num(self.completed as f64)),
-            ("tokens", Json::num(self.tokens as f64)),
-            ("rounds", Json::num(self.rounds as f64)),
-            ("replans", Json::num(self.replans as f64)),
-            ("invalid", Json::num(self.invalid as f64)),
-            ("reconfigs", Json::num(self.reconfigs as f64)),
-            ("reconfigured_slots", Json::num(self.reconfigured_slots as f64)),
-            ("races", Json::num(self.races as f64)),
-            ("race_launches", Json::num(self.race_launches as f64)),
-            ("race_wins", Json::num(self.race_wins as f64)),
-            (
-                "race_wins_by_method",
-                Json::Obj(
-                    self.race_wins_by_method
-                        .iter()
-                        .map(|(k, v)| (k.clone(), Json::num(*v as f64)))
-                        .collect(),
-                ),
-            ),
-            ("race_cancelled_replicas", Json::num(self.race_cancelled_replicas as f64)),
-            ("race_wasted_rounds", Json::num(self.race_wasted_rounds as f64)),
-            ("degradations", Json::num(self.degradations as f64)),
-            ("repromotions", Json::num(self.repromotions as f64)),
-            ("quarantines", Json::num(self.quarantines as f64)),
-            ("requeues", Json::num(self.requeues as f64)),
-            ("recoveries", Json::num(self.recoveries as f64)),
-            ("lost", Json::num(self.lost as f64)),
-            ("tokens_per_s", Json::num(self.tokens_per_second(wall_s))),
-            ("mean_queue_wait_s", Json::num(self.mean_queue_wait_s())),
-            ("latency_p50_s", Json::num(self.latency_p50_s())),
-            ("latency_p99_s", Json::num(self.latency_p99_s())),
-            ("mean_latency_s", Json::num(self.mean_latency_s())),
-            ("mean_occupancy", Json::num(self.mean_occupancy())),
-        ])
+        let mut fields: Vec<(&str, Json)> = Vec::new();
+        for (k, v) in self.counter_series() {
+            fields.push((k, Json::num(v as f64)));
+        }
+        for (k, map) in self.map_series() {
+            fields.push((
+                k,
+                Json::Obj(map.iter().map(|(m, v)| (m.clone(), Json::num(*v as f64))).collect()),
+            ));
+        }
+        for (k, v) in self.gauge_series(wall_s) {
+            fields.push((k, Json::num(v)));
+        }
+        Json::obj(fields)
+    }
+
+    /// Register every serve-telemetry series into a scrape snapshot under
+    /// [`PROM_PREFIX`] — the other renderer of the shared series lists.
+    pub fn register(&self, reg: &mut MetricRegistry, wall_s: f64) {
+        for (k, v) in self.counter_series() {
+            reg.counter(&format!("{PROM_PREFIX}{k}"), serve_help(k), v as f64);
+        }
+        for (k, map) in self.map_series() {
+            let name = format!("{PROM_PREFIX}{k}");
+            for (method, v) in map {
+                reg.counter_l(&name, serve_help(k), &[("method", method)], *v as f64);
+            }
+        }
+        for (k, v) in self.gauge_series(wall_s) {
+            reg.gauge(&format!("{PROM_PREFIX}{k}"), serve_help(k), v);
+        }
+    }
+}
+
+/// HELP text per serve series (keys of the shared series lists).
+fn serve_help(k: &str) -> &'static str {
+    match k {
+        "admitted" => "Requests admitted into slots",
+        "completed" => "Requests finished and retired",
+        "tokens" => "Tokens generated across all rounds",
+        "rounds" => "Engine rounds executed",
+        "replans" => "Plans applied by the occupancy-bucket replanner",
+        "invalid" => "Requests rejected as unservable at admission",
+        "reconfigs" => "Algorithm 2 firings that rewrote at least one slot plan",
+        "reconfigured_slots" => "Individual slot plans rewritten by Algorithm 2",
+        "races" => "Fastest-of-N races started",
+        "race_launches" => "Racing replicas forked across all races",
+        "race_wins" => "Races a replica finished strictly before the primary",
+        "race_resolutions" => "Races that ran to resolution (replica or primary finished)",
+        "race_preemptions" => "Races cancelled before resolution by admissions",
+        "race_cancelled_replicas" => "Replicas cancelled (race lost or preempted)",
+        "race_wasted_rounds" => "Replica rounds spent by cancelled replicas",
+        "degradations" => "Slots demoted to vanilla by a Degradable fault",
+        "repromotions" => "Degraded slots re-promoted after backoff",
+        "quarantines" => "Slots retired by a SlotFatal fault",
+        "requeues" => "Quarantined requests re-enqueued front-of-lane",
+        "recoveries" => "Quarantined requests re-admitted via re-prefill",
+        "lost" => "Requests lost without completion or typed rejection",
+        "race_wins_by_method" => "Replica wins per draft method",
+        "method_drafted" => "Tokens drafted per plan method",
+        "method_accepted" => "Tokens accepted per plan method",
+        "tokens_per_s" => "Sustained generation throughput",
+        "mean_queue_wait_s" => "Mean admission-queue wait",
+        "latency_p50_s" => "Request latency p50 (P2 estimator)",
+        "latency_p99_s" => "Request latency p99 (P2 estimator)",
+        "mean_latency_s" => "Mean request latency",
+        "mean_occupancy" => "Round-weighted mean live batch size",
+        _ => "Serve telemetry",
     }
 }
 
@@ -295,9 +432,64 @@ mod tests {
         assert_eq!(m.race_wins_by_method.get("ngram"), None, "losing methods score nothing");
         assert_eq!(m.race_cancelled_replicas, 3);
         assert_eq!(m.race_wasted_rounds, 12);
+        // ledger reconciliation: every started race either resolved or
+        // was preempted — no third way out
+        assert_eq!(m.race_resolutions, 2);
+        assert_eq!(m.race_preemptions, 1);
+        m.on_race_launch(1); // the preempted race
+        assert_eq!(m.races, m.race_resolutions + m.race_preemptions);
         let j = m.to_json(1.0);
         assert_eq!(j.get("race_wins").as_f64(), Some(1.0));
         assert_eq!(j.get("race_wins_by_method").get("sam").as_f64(), Some(1.0));
+        assert_eq!(j.get("race_resolutions").as_f64(), Some(2.0));
+        assert_eq!(j.get("race_preemptions").as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn per_method_acceptance_accumulates() {
+        let mut m = ServeMetrics::new();
+        m.on_method_tokens("sam", 10, 8);
+        m.on_method_tokens("sam", 10, 6);
+        m.on_method_tokens("ngram", 5, 1);
+        m.on_method_tokens("vanilla", 0, 0); // no-op: nothing drafted
+        let acc = m.method_acceptance();
+        assert_eq!(acc.len(), 2);
+        let sam = acc.iter().find(|(name, ..)| name == "sam").unwrap();
+        assert!((sam.1 - 0.7).abs() < 1e-12);
+        assert_eq!((sam.2, sam.3), (14, 20));
+        let j = m.to_json(1.0);
+        assert_eq!(j.get("method_drafted").get("sam").as_f64(), Some(20.0));
+        assert_eq!(j.get("method_accepted").get("ngram").as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn registry_snapshot_matches_json_snapshot() {
+        let mut m = ServeMetrics::new();
+        m.on_admit(0.1);
+        m.on_round(2, 9);
+        m.on_finish(0.5);
+        m.on_race_launch(2);
+        m.on_race_finish(true, "sam", 1, 4);
+        m.on_method_tokens("sam", 12, 7);
+        let mut reg = MetricRegistry::new();
+        m.register(&mut reg, 3.0);
+        let j = m.to_json(3.0);
+        for (k, v) in j.as_obj().unwrap() {
+            let name = format!("{PROM_PREFIX}{k}");
+            match v {
+                Json::Num(n) => assert_eq!(reg.find(&name, &[]), Some(*n), "series {name}"),
+                Json::Obj(o) => {
+                    for (method, mv) in o {
+                        assert_eq!(
+                            reg.find(&name, &[("method", method)]),
+                            mv.as_f64(),
+                            "series {name}{{method={method}}}"
+                        );
+                    }
+                }
+                other => panic!("unexpected to_json field type for {k}: {other:?}"),
+            }
+        }
     }
 
     #[test]

@@ -22,6 +22,13 @@
 //! so a request's tokens are identical whether it ran in a static batch
 //! or joined mid-flight (`rust/tests/serve_lossless.rs`).
 //!
+//! Observability (`crate::obs`, PERF.md §Observability): the loop can
+//! carry a per-phase span [`Tracer`](crate::obs::Tracer) (flight
+//! recorder + chrome://tracing export via `--trace-out`) and publish a
+//! Prometheus scrape snapshot (`Batcher::collect_registry` →
+//! [`MetricsExporter`](crate::obs::MetricsExporter), `--metrics-addr`) —
+//! both assembled from the same counters `ServeMetrics::to_json` renders.
+//!
 //! Entry points: `specactor serve` (open-loop arrivals from
 //! `sim::traces::ArrivalProcess`), `examples/serve_demo.rs`, and
 //! `benches/serve_throughput.rs` (BENCH_serve.json). See PERF.md

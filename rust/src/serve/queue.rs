@@ -12,6 +12,7 @@
 use std::collections::VecDeque;
 
 use crate::engine::Request;
+use crate::obs::MetricRegistry;
 
 /// Admission priority class, highest first.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
@@ -163,6 +164,43 @@ impl AdmissionQueue {
     pub fn pop(&mut self) -> Option<Queued> {
         self.lanes.iter_mut().find_map(|l| l.pop_front())
     }
+
+    /// Register the rejection ledger and live lane depths into a scrape
+    /// snapshot (`specactor_queue_*`).
+    pub fn register_metrics(&self, reg: &mut MetricRegistry) {
+        reg.counter(
+            "specactor_queue_enqueued",
+            "Requests accepted into the admission queue",
+            self.enqueued as f64,
+        );
+        let rej = "specactor_queue_rejected";
+        let help = "Requests turned away, by typed reason";
+        reg.counter_l(rej, help, &[("reason", "shed")], self.rejected_shed as f64);
+        reg.counter_l(
+            rej,
+            help,
+            &[("reason", "retry_exhausted")],
+            self.rejected_retry_exhausted as f64,
+        );
+        reg.gauge(
+            "specactor_queue_capacity",
+            "Admission queue bound",
+            self.cap as f64,
+        );
+        for prio in Priority::ALL {
+            let lane = match prio {
+                Priority::Interactive => "interactive",
+                Priority::Batch => "batch",
+                Priority::Background => "background",
+            };
+            reg.gauge_l(
+                "specactor_queue_depth",
+                "Waiting requests per priority lane",
+                &[("lane", lane)],
+                self.depth(prio) as f64,
+            );
+        }
+    }
 }
 
 #[cfg(test)]
@@ -264,5 +302,22 @@ mod tests {
         let first = q.pop().unwrap();
         assert_eq!(first.enqueued_s, 0.5);
         assert_eq!(first.prio, Priority::Batch);
+    }
+
+    #[test]
+    fn registry_snapshot_carries_the_typed_split_and_depths() {
+        let mut q = AdmissionQueue::new(1);
+        q.push(req(1), Priority::Batch, 0.0);
+        q.push(req(2), Priority::Batch, 0.1); // shed
+        q.note_reject(RejectReason::RetryExhausted);
+        let mut reg = MetricRegistry::new();
+        q.register_metrics(&mut reg);
+        assert_eq!(reg.find("specactor_queue_rejected", &[("reason", "shed")]), Some(1.0));
+        assert_eq!(
+            reg.find("specactor_queue_rejected", &[("reason", "retry_exhausted")]),
+            Some(1.0)
+        );
+        assert_eq!(reg.find("specactor_queue_depth", &[("lane", "batch")]), Some(1.0));
+        assert_eq!(reg.find("specactor_queue_enqueued", &[]), Some(1.0));
     }
 }

@@ -1,0 +1,303 @@
+//! Observability-layer integration tests: the serve loop's scrape
+//! snapshot must reconcile field-for-field with `ServeMetrics::to_json`,
+//! the Prometheus text rendering must be format-clean (HELP/TYPE
+//! ordering, label escaping, cumulative monotone histogram buckets with
+//! `+Inf` == `_count`), the flight recorder must capture fault
+//! post-mortems, the chrome://tracing export must be valid JSON, and the
+//! whole surface must be reachable over a real TCP scrape.
+//!
+//! Everything runs on the hermetic [`SyntheticEngine`] — no artifacts.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+use specactor::engine::Request;
+use specactor::obs::{chrome_trace, MetricsExporter, Phase};
+use specactor::serve::metrics::PROM_PREFIX;
+use specactor::serve::{
+    drive_open_loop, Batcher, ChaosEngine, FaultPlan, Priority, Replanner, SyntheticEngine,
+};
+use specactor::util::json::Json;
+
+fn req(id: u64, budget: usize) -> Request {
+    Request::new(id, vec![1, 2, 3, 4], budget)
+}
+
+/// A served batcher with tracing on: racing + chaos exercised so the
+/// scrape carries race, chaos and fault series too.
+fn served_batcher(chaos: &str) -> (Batcher<ChaosEngine<SyntheticEngine>>, f64) {
+    use specactor::coordinator::race::RaceArbiter;
+    let plan = FaultPlan::parse(chaos).expect("chaos spec");
+    let engine = ChaosEngine::new(SyntheticEngine::new(8, 99), plan);
+    let mut b = Batcher::new(engine, 16, Replanner::synthetic(), true)
+        .with_racing(RaceArbiter::synthetic())
+        .with_tracing(4096);
+    let arrivals: Vec<(f64, Request, Priority)> =
+        (0..6u64).map(|i| (i as f64 * 0.005, req(i, 24), Priority::Batch)).collect();
+    let rep = drive_open_loop(&mut b, arrivals, Some(1.0e-3)).expect("serve run");
+    (b, rep.elapsed_s)
+}
+
+#[test]
+fn scrape_snapshot_reconciles_with_to_json_field_for_field() {
+    let (b, wall_s) = served_batcher("seed=3");
+    let reg = b.collect_registry(wall_s);
+    let json = b.metrics.to_json(wall_s);
+    let obj = json.as_obj().expect("to_json is an object");
+    assert!(!obj.is_empty());
+    for (k, v) in obj {
+        let name = format!("{PROM_PREFIX}{k}");
+        match v {
+            Json::Num(want) => {
+                let got = reg
+                    .find(&name, &[])
+                    .unwrap_or_else(|| panic!("scrape snapshot is missing `{name}`"));
+                assert_eq!(got, *want, "`{name}` diverges from to_json");
+            }
+            Json::Obj(map) => {
+                for (method, mv) in map {
+                    let want = mv.as_f64().expect("map values are numbers");
+                    let got = reg
+                        .find(&name, &[("method", method)])
+                        .unwrap_or_else(|| {
+                            panic!("scrape snapshot is missing `{name}{{method={method}}}`")
+                        });
+                    assert_eq!(got, want, "`{name}{{method={method}}}` diverges");
+                }
+            }
+            other => panic!("unexpected to_json field shape for `{k}`: {other}"),
+        }
+    }
+    // acceptance criterion: one smoke run exposes a real surface, with
+    // per-phase histograms and per-method acceptance included
+    assert!(
+        reg.series_count() >= 30,
+        "expected >= 30 series, got {}",
+        reg.series_count()
+    );
+    let rendered = reg.render();
+    assert!(rendered.contains("specactor_phase_seconds_bucket"), "phase histograms missing");
+    assert!(
+        rendered.contains(&format!("{PROM_PREFIX}method_accepted")),
+        "per-method acceptance missing"
+    );
+    assert!(rendered.contains("specactor_queue_enqueued"), "queue ledger missing");
+    assert!(rendered.contains("specactor_race_started"), "race telemetry missing");
+}
+
+/// Split a sample's series part (`name{k="v",...}`) into the metric name
+/// and its label pairs, honouring `\\`, `\"` and `\n` escapes inside
+/// label values.
+fn split_series(series: &str) -> (String, Vec<(String, String)>) {
+    let Some((name, rest)) = series.split_once('{') else {
+        return (series.to_string(), vec![]);
+    };
+    let inner = rest.strip_suffix('}').unwrap_or(rest);
+    let mut labels = Vec::new();
+    let (mut key, mut val) = (String::new(), String::new());
+    let (mut in_val, mut esc) = (false, false);
+    let mut chars = inner.chars();
+    while let Some(c) = chars.next() {
+        if in_val {
+            if esc {
+                val.push(if c == 'n' { '\n' } else { c });
+                esc = false;
+            } else {
+                match c {
+                    '\\' => esc = true,
+                    '"' => {
+                        in_val = false;
+                        labels.push((std::mem::take(&mut key), std::mem::take(&mut val)));
+                    }
+                    _ => val.push(c),
+                }
+            }
+        } else {
+            match c {
+                '=' => {
+                    assert_eq!(chars.next(), Some('"'), "label value must be quoted: {series}");
+                    in_val = true;
+                }
+                ',' => {}
+                _ => key.push(c),
+            }
+        }
+    }
+    assert!(!in_val, "unterminated label value in: {series}");
+    (name.to_string(), labels)
+}
+
+/// Minimal Prometheus text-format checker, mirroring
+/// `tools/check_metrics.py`: every family's HELP/TYPE precede its
+/// samples, each family is typed once, histogram buckets are
+/// cumulative-monotone in rendering order, and every histogram's `+Inf`
+/// bucket equals its `_count`.
+fn assert_format_clean(text: &str) {
+    use std::collections::BTreeMap;
+    let mut typed: Vec<String> = Vec::new();
+    let mut last_bucket: BTreeMap<String, f64> = BTreeMap::new();
+    let mut inf_bucket: BTreeMap<String, f64> = BTreeMap::new();
+    let mut hist_count: BTreeMap<String, f64> = BTreeMap::new();
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let fam = rest.split_whitespace().next().unwrap().to_string();
+            assert!(!typed.contains(&fam), "family `{fam}` typed twice");
+            typed.push(fam);
+            continue;
+        }
+        if line.starts_with("# HELP ") {
+            continue;
+        }
+        assert!(!line.starts_with('#'), "unknown comment line: {line}");
+        let (series, value) = line.rsplit_once(' ').expect("sample line has a value");
+        let v: f64 = value.parse().unwrap_or_else(|_| panic!("bad value in: {line}"));
+        let (name, labels) = split_series(series);
+        let mut family = name.clone();
+        for suf in ["_bucket", "_sum", "_count"] {
+            if let Some(f) = name.strip_suffix(suf) {
+                if typed.iter().any(|t| t == f) {
+                    family = f.to_string();
+                }
+            }
+        }
+        assert!(typed.contains(&family), "sample `{name}` precedes its # TYPE");
+        if name.ends_with("_bucket") && family != name {
+            let le = labels
+                .iter()
+                .find(|(k, _)| k == "le")
+                .map(|(_, v)| v.clone())
+                .expect("bucket sample without le");
+            let sans: Vec<&(String, String)> =
+                labels.iter().filter(|(k, _)| k != "le").collect();
+            let key = format!("{family}|{sans:?}");
+            let last = last_bucket.get(&key).copied().unwrap_or(-1.0);
+            assert!(v >= last, "bucket counts must be cumulative: {key} le={le}");
+            last_bucket.insert(key.clone(), v);
+            if le == "+Inf" {
+                inf_bucket.insert(key, v);
+            }
+        } else if name.ends_with("_count") && family != name {
+            let refs: Vec<&(String, String)> = labels.iter().collect();
+            hist_count.insert(format!("{family}|{refs:?}"), v);
+        }
+    }
+    assert!(!typed.is_empty(), "no metric families rendered");
+    for (key, c) in &hist_count {
+        let inf = inf_bucket
+            .get(key)
+            .unwrap_or_else(|| panic!("histogram {key} lacks a +Inf bucket"));
+        assert_eq!(inf, c, "+Inf bucket must equal _count for {key}");
+    }
+}
+
+#[test]
+fn rendered_metrics_text_is_format_clean() {
+    let (b, wall_s) = served_batcher("seed=3");
+    let text = b.collect_registry(wall_s).render();
+    assert!(!text.is_empty());
+    assert_format_clean(&text);
+}
+
+#[test]
+fn label_values_are_escaped_in_the_rendering() {
+    use specactor::obs::MetricRegistry;
+    let mut reg = MetricRegistry::new();
+    reg.counter_l("evil", "quote \" and newline", &[("method", "a\"b\\c\nd")], 1.0);
+    let text = reg.render();
+    assert!(
+        text.contains(r#"method="a\"b\\c\nd""#),
+        "label escaping broken in: {text}"
+    );
+    assert!(text.contains("# HELP evil quote \" and newline\n") || text.contains("\\n"));
+    assert_format_clean(&text);
+}
+
+#[test]
+fn chaos_faults_are_captured_as_flight_recorder_dumps() {
+    // slot faults every round: quarantines fire, each captured as a dump
+    let (b, _) = served_batcher("seed=5,step=0.3,slot=0.2");
+    assert!(
+        !b.fault_dumps.is_empty(),
+        "chaos faults must leave flight-recorder post-mortems"
+    );
+    assert!(b.fault_dumps.len() <= 8, "dump list must stay bounded");
+    for d in &b.fault_dumps {
+        assert!(matches!(d.severity.as_str(), "degradable" | "slot_fatal" | "worker_fatal"));
+        assert!(!d.error.is_empty());
+        assert!(d.round > 0);
+    }
+    // at least one dump should carry a span window from the recorder
+    assert!(
+        b.fault_dumps.iter().any(|d| !d.spans.is_empty()),
+        "dumps must snapshot recent spans"
+    );
+}
+
+#[test]
+fn chrome_trace_export_is_valid_and_carries_phases_and_faults() {
+    let (b, _) = served_batcher("seed=5,step=0.3,slot=0.2");
+    let t = b.tracer().expect("tracing was enabled");
+    assert!(!t.is_empty(), "the serve run must have recorded spans");
+    let j = chrome_trace(&t.events(), &b.fault_dumps);
+    let parsed = Json::parse(&j.to_string()).expect("chrome trace must be valid JSON");
+    let events = parsed.get("traceEvents").as_arr().expect("traceEvents array");
+    assert!(!events.is_empty());
+    assert_eq!(parsed.get("displayTimeUnit").as_str(), Some("ms"));
+    let names: Vec<&str> = events.iter().filter_map(|e| e.get("name").as_str()).collect();
+    for phase in [Phase::Round, Phase::Retire, Phase::Admit] {
+        assert!(
+            names.contains(&phase.label()),
+            "phase `{}` missing from the trace",
+            phase.label()
+        );
+    }
+    assert!(
+        names.iter().any(|n| n.starts_with("fault:")),
+        "fault instants missing from the trace"
+    );
+    // complete events must carry ts + dur; instants carry scope "g"
+    for e in events {
+        match e.get("ph").as_str() {
+            Some("X") => {
+                assert!(e.get("ts").as_f64().is_some());
+                assert!(e.get("dur").as_f64().is_some());
+            }
+            Some("i") => assert_eq!(e.get("s").as_str(), Some("g")),
+            other => panic!("unexpected event phase {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn batcher_snapshot_is_scrapable_over_tcp() {
+    let ex = MetricsExporter::bind("127.0.0.1:0").expect("bind");
+    let addr = ex.addr;
+    let plan = FaultPlan::parse("seed=3").unwrap();
+    let engine = ChaosEngine::new(SyntheticEngine::new(4, 7), plan);
+    let mut b = Batcher::new(engine, 16, Replanner::synthetic(), true)
+        .with_tracing(1024)
+        .with_exporter(ex);
+    let arrivals: Vec<(f64, Request, Priority)> =
+        (0..3u64).map(|i| (0.0, req(i, 16), Priority::Batch)).collect();
+    let rep = drive_open_loop(&mut b, arrivals, Some(1.0e-3)).expect("serve run");
+    b.publish_final(rep.elapsed_s);
+
+    let mut conn = TcpStream::connect(addr).expect("connect");
+    conn.write_all(b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+    let mut resp = String::new();
+    conn.read_to_string(&mut resp).unwrap();
+    assert!(resp.starts_with("HTTP/1.1 200 OK"), "bad response: {resp}");
+    let body = resp.split("\r\n\r\n").nth(1).expect("body");
+    assert!(body.contains(&format!("{PROM_PREFIX}completed")), "serve counters missing");
+    assert_format_clean(body);
+
+    let mut conn = TcpStream::connect(addr).expect("connect 2");
+    conn.write_all(b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+    let mut resp = String::new();
+    conn.read_to_string(&mut resp).unwrap();
+    assert!(resp.starts_with("HTTP/1.1 200 OK"));
+    assert!(resp.ends_with("ok\n"));
+}

@@ -1,0 +1,153 @@
+#!/usr/bin/env python3
+"""Prometheus text-exposition format checker for the specactor scrape
+endpoint. Stdlib-only (urllib) so CI needs no extra dependencies.
+
+Fetches ``--url`` (retrying while the serve process warms up), then
+asserts the body is format-clean:
+
+* non-empty, and at least ``--min-series`` sample lines;
+* every sample's family has a ``# TYPE`` line before its first sample,
+  and no family is typed twice;
+* every ``# TYPE`` is immediately preceded by its ``# HELP``;
+* label values are quoted, with ``\\``, ``\"`` and ``\n`` escaped;
+* histogram buckets are cumulative-monotone in rendering order and each
+  histogram's ``+Inf`` bucket equals its ``_count``.
+
+Exit status 0 on success; 1 with a diagnostic on the first violation.
+Mirrors the in-repo Rust checker in rust/tests/observability.rs.
+"""
+
+import argparse
+import sys
+import time
+import urllib.error
+import urllib.request
+
+
+def fetch(url: str, retries: int, delay_s: float) -> str:
+    last = None
+    for _ in range(retries):
+        try:
+            with urllib.request.urlopen(url, timeout=5) as resp:
+                return resp.read().decode("utf-8")
+        except (urllib.error.URLError, OSError) as e:
+            last = e
+            time.sleep(delay_s)
+    raise SystemExit(f"check_metrics: could not fetch {url} after {retries} tries: {last}")
+
+
+def split_series(series: str) -> tuple[str, list[tuple[str, str]]]:
+    """Split ``name{k="v",...}`` into (name, label pairs), honouring
+    backslash escapes inside label values."""
+    if "{" not in series:
+        return series, []
+    name, _, rest = series.partition("{")
+    inner = rest[:-1] if rest.endswith("}") else rest
+    labels: list[tuple[str, str]] = []
+    key, val = [], []
+    in_val = esc = False
+    it = iter(inner)
+    for c in it:
+        if in_val:
+            if esc:
+                val.append("\n" if c == "n" else c)
+                esc = False
+            elif c == "\\":
+                esc = True
+            elif c == '"':
+                in_val = False
+                labels.append(("".join(key), "".join(val)))
+                key, val = [], []
+            else:
+                val.append(c)
+        elif c == "=":
+            if next(it, None) != '"':
+                raise SystemExit(f"check_metrics: unquoted label value in: {series}")
+            in_val = True
+        elif c != ",":
+            key.append(c)
+    if in_val:
+        raise SystemExit(f"check_metrics: unterminated label value in: {series}")
+    return name, labels
+
+
+def check(text: str, min_series: int) -> int:
+    def fail(msg: str):
+        raise SystemExit(f"check_metrics: {msg}")
+
+    typed: list[str] = []
+    helped: set[str] = set()
+    samples = 0
+    last_bucket: dict[str, float] = {}
+    inf_bucket: dict[str, float] = {}
+    hist_count: dict[str, float] = {}
+    for line in text.splitlines():
+        if not line:
+            continue
+        if line.startswith("# HELP "):
+            helped.add(line.split()[2])
+            continue
+        if line.startswith("# TYPE "):
+            fam = line.split()[2]
+            if fam in typed:
+                fail(f"family `{fam}` typed twice")
+            if fam not in helped:
+                fail(f"family `{fam}` has # TYPE without a preceding # HELP")
+            typed.append(fam)
+            continue
+        if line.startswith("#"):
+            fail(f"unknown comment line: {line}")
+        series, _, value = line.rpartition(" ")
+        if not series:
+            fail(f"sample line without a value: {line}")
+        try:
+            v = float(value)
+        except ValueError:
+            fail(f"bad sample value in: {line}")
+        name, labels = split_series(series)
+        family = name
+        for suf in ("_bucket", "_sum", "_count"):
+            if name.endswith(suf) and name[: -len(suf)] in typed:
+                family = name[: -len(suf)]
+        if family not in typed:
+            fail(f"sample `{name}` precedes its # TYPE")
+        samples += 1
+        if name.endswith("_bucket") and family != name:
+            le = dict(labels).get("le")
+            if le is None:
+                fail(f"bucket sample without le label: {line}")
+            sans = [(k, lv) for (k, lv) in labels if k != "le"]
+            key = f"{family}|{sans!r}"
+            if v < last_bucket.get(key, -1.0):
+                fail(f"bucket counts not cumulative for {key} at le={le}")
+            last_bucket[key] = v
+            if le == "+Inf":
+                inf_bucket[key] = v
+        elif name.endswith("_count") and family != name:
+            hist_count[f"{family}|{labels!r}"] = v
+    if samples < min_series:
+        fail(f"only {samples} series rendered, wanted >= {min_series}")
+    for key, c in hist_count.items():
+        if key not in inf_bucket:
+            fail(f"histogram {key} lacks a +Inf bucket")
+        if inf_bucket[key] != c:
+            fail(f"+Inf bucket ({inf_bucket[key]}) != _count ({c}) for {key}")
+    return samples
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--url", default="http://127.0.0.1:9464/metrics")
+    ap.add_argument("--retries", type=int, default=50)
+    ap.add_argument("--retry-delay-s", type=float, default=0.2)
+    ap.add_argument("--min-series", type=int, default=30)
+    args = ap.parse_args()
+    text = fetch(args.url, args.retries, args.retry_delay_s)
+    if not text.strip():
+        raise SystemExit("check_metrics: empty /metrics body")
+    n = check(text, args.min_series)
+    print(f"check_metrics: OK — {n} series, format clean ({args.url})")
+
+
+if __name__ == "__main__":
+    main()
