@@ -40,11 +40,11 @@ fn main() {
             // positions and the closure is exactly one step of work. (A
             // previous version cloned the cache inside the closure, so the
             // bench timed a multi-MB memcpy instead of the step.)
-            let st0 = rt.stats.borrow().clone();
+            let st0 = rt.stats.snapshot();
             bench.run(&format!("target step b={b} w={w}"), || {
                 let _ = rt.step(&m.target, &toks, w, &mut cache).unwrap();
             });
-            let st1 = rt.stats.borrow().clone();
+            let st1 = rt.stats.snapshot();
             let steps = (st1.executions - st0.executions).max(1) as f64;
             let kv_d2h = (st1.kv_d2h_bytes - st0.kv_d2h_bytes) as f64 / steps;
             let kv_h2d = (st1.kv_h2d_bytes - st0.kv_h2d_bytes) as f64 / steps;
@@ -72,7 +72,7 @@ fn main() {
             get("kv_h2d_bytes_per_step"),
         );
     }
-    let st = rt.stats.borrow();
+    let st = rt.stats.snapshot();
     println!(
         "breakdown: {} executes {:.3}s total, host copies {:.3}s ({:.0}% of execute)",
         st.executions,

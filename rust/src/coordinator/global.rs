@@ -177,6 +177,7 @@ pub fn rollout(
                     temperature: temp,
                     seed,
                     draft_seed: seed.wrapping_add(1000),
+                    overlap: false,
                 };
                 let mut w = Worker::new(&rt, ecfg, reqs)?;
                 let rep = w.rollout_planned()?;
@@ -264,6 +265,7 @@ pub fn rollout(
                 temperature: cfg.temperature,
                 seed: cfg.seed,
                 draft_seed: cfg.seed.wrapping_add(1000),
+                overlap: false,
             };
             for (id, replicas) in by_req {
                 let prompt = prompts
@@ -336,6 +338,7 @@ pub fn race_methods(
             temperature: 1.0,
             seed,
             draft_seed: seed.wrapping_add(1000),
+            overlap: false,
         };
         let reqs = vec![Request::new(id, prompt.to_vec(), budget)];
         let mut w = Worker::new(&rt, cfg, reqs)?;

@@ -45,6 +45,10 @@ pub enum SpecError {
     /// The decoupled drafter thread died (panic / channel closed). All
     /// of its slots degrade; the fused verify path carries them.
     DrafterDead { detail: String },
+    /// The overlapped round's prefetch thread died (panic / channel
+    /// closed). Purely an accelerator: the worker falls back to
+    /// sequential in-round drafting, losing overlap but no tokens.
+    PrefetchDead { detail: String },
     /// A draft-model cache catch-up failed for one slot.
     DraftCatchUp { slot: usize, detail: String },
     /// Forking a racing replica failed; the race degrades to the
@@ -66,6 +70,7 @@ impl SpecError {
     pub fn severity(&self) -> Severity {
         match self {
             SpecError::DrafterDead { .. }
+            | SpecError::PrefetchDead { .. }
             | SpecError::DraftCatchUp { .. }
             | SpecError::ForkFailed { .. }
             | SpecError::DraftRowCorrupt { .. } => Severity::Degradable,
@@ -80,7 +85,9 @@ impl SpecError {
     /// drafter thread).
     pub fn slot(&self) -> Option<usize> {
         match self {
-            SpecError::DrafterDead { .. } | SpecError::Worker { .. } => None,
+            SpecError::DrafterDead { .. }
+            | SpecError::PrefetchDead { .. }
+            | SpecError::Worker { .. } => None,
             SpecError::ForkFailed { dst, .. } => Some(*dst),
             SpecError::DraftCatchUp { slot, .. }
             | SpecError::DraftRowCorrupt { slot, .. }
@@ -94,6 +101,9 @@ impl fmt::Display for SpecError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
             SpecError::DrafterDead { detail } => write!(f, "drafter thread died: {detail}"),
+            SpecError::PrefetchDead { detail } => {
+                write!(f, "prefetch thread died: {detail}")
+            }
             SpecError::DraftCatchUp { slot, detail } => {
                 write!(f, "draft-cache catch-up failed for slot {slot}: {detail}")
             }
@@ -124,6 +134,7 @@ mod tests {
     fn severity_classification() {
         let deg = [
             SpecError::DrafterDead { detail: "x".into() },
+            SpecError::PrefetchDead { detail: "x".into() },
             SpecError::DraftCatchUp { slot: 1, detail: "x".into() },
             SpecError::ForkFailed { src: 0, dst: 2, detail: "x".into() },
             SpecError::DraftRowCorrupt { slot: 3, detail: "x".into() },
@@ -143,6 +154,7 @@ mod tests {
     #[test]
     fn slot_scoping() {
         assert_eq!(SpecError::DrafterDead { detail: "x".into() }.slot(), None);
+        assert_eq!(SpecError::PrefetchDead { detail: "x".into() }.slot(), None);
         assert_eq!(SpecError::Worker { detail: "x".into() }.slot(), None);
         assert_eq!(
             SpecError::ForkFailed { src: 0, dst: 5, detail: "x".into() }.slot(),

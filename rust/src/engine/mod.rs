@@ -34,6 +34,7 @@
 
 pub mod decoupled;
 pub mod fault;
+pub mod overlap;
 pub mod plan;
 pub mod worker;
 
@@ -41,5 +42,6 @@ pub use decoupled::{
     rollout_decoupled, rollout_decoupled_planned, rollout_decoupled_planned_traced,
 };
 pub use fault::{Severity, SpecError};
+pub use overlap::{PrefetchChunk, Prefetcher, ResetSpec};
 pub use plan::{same_group, PlanMode, SlotPlan, VerifyDiscipline};
 pub use worker::{EngineConfig, EngineReport, Request, SlotAccept, Worker};

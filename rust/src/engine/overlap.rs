@@ -1,0 +1,344 @@
+//! Speculative draft prefetch: hide round R+1's drafting behind round
+//! R's target verify step.
+//!
+//! The fused round serializes `draft → verify → apply`. Token drafters
+//! (ngram / SAM) run on the worker's CPU, so while the accelerator is
+//! busy with the ragged verify step the host is idle — exactly the slack
+//! the [`Prefetcher`] spends. It owns a *mirror* of each eligible slot's
+//! token-drafter state on a worker thread and, as soon as round R's
+//! drafts are chosen, begins drafting round R+1 under the **predicted
+//! full-accept** outcome (speculation on the speculation). When round R
+//! resolves, the worker reconciles:
+//!
+//! * prediction held (full accept) → the prefetched chunk is used as-is
+//!   next round; its drafting cost was hidden behind the verify step;
+//! * prediction missed (partial accept) → the mirror **rolls back**: the
+//!   mirrored history is truncated to the verified base and replayed
+//!   from the actually-accepted tokens (frozen-chain discipline — the
+//!   real drafter state in the worker is never touched by predictions,
+//!   so rollback is purely the mirror's problem), and the stale chunk is
+//!   discarded. The worker re-drafts synchronously, exactly as without
+//!   overlap.
+//!
+//! Eligibility is deliberately narrow: Decoupled-mode token-drafter
+//! slots only. Coupled full-accept appends a target-sampled bonus token
+//! the mirror cannot predict, and model drafters need the (non-`Send`)
+//! runtime. Everything else falls back to the sequential path, which is
+//! why overlap can never change tokens: drafts only *propose* — the
+//! verifier decides every token either way (losslessness invariant).
+//!
+//! The thread is an accelerator, never a dependency: if it dies, the
+//! worker silently reverts to sequential in-round drafting (counted in
+//! [`EngineReport::prefetch_deaths`]) and serving continues lossless —
+//! the chaos harness injects exactly this via `SpecError::PrefetchDead`.
+//!
+//! [`EngineReport::prefetch_deaths`]: crate::engine::EngineReport
+
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::drafter::{DraftMethod, TokenDrafter};
+
+/// Rebuild instruction for one slot's drafter mirror (admit / plan swap).
+#[derive(Clone, Debug)]
+pub struct ResetSpec {
+    /// Token-drafter method mirrored for the slot.
+    pub method: DraftMethod,
+    /// Draft window `k` to prefetch per round.
+    pub window: usize,
+    /// Full verified token history at reset time.
+    pub seq: Vec<i32>,
+}
+
+/// Commands from the worker to the prefetch thread. One FIFO channel
+/// carries both the per-round `Predict`/`Resolve` pair and lifecycle
+/// resets, so ordering races are impossible by construction.
+enum PrefetchCmd {
+    /// (Re)build the slot mirror, or clear it (`None` = ineligible).
+    Reset { slot: usize, spec: Option<Box<ResetSpec>> },
+    /// Round R chose `drafts` for the slot: assume full accept, extend
+    /// the mirror, and draft round R+1 now. The `stamp` rides back on
+    /// the chunk so the worker can match it against the round whose
+    /// prediction actually held (a pure length check is unsound: a
+    /// round that accepts `k - 1` drafts plus the correction token
+    /// lands on the same history *length* as a full accept, with
+    /// different *content*).
+    Predict { slot: usize, stamp: u64, drafts: Vec<i32> },
+    /// Round R resolved: the slot's verified history is `base_len` old
+    /// tokens plus `appended`. Reconcile the mirror (rollback replay on
+    /// mismatch).
+    Resolve { slot: usize, base_len: usize, appended: Vec<i32> },
+    /// Join politely (Drop).
+    Shutdown,
+}
+
+/// A round-R+1 draft produced ahead of time for one slot.
+#[derive(Clone, Debug)]
+pub struct PrefetchChunk {
+    /// Slot the chunk was drafted for.
+    pub slot: usize,
+    /// Echo of the producing `Predict`'s stamp: the worker consumes the
+    /// chunk only when this matches the stamp of the round it verified
+    /// as a full accept.
+    pub stamp: u64,
+    /// Mirror's history length when drafting — the chunk is usable only
+    /// if the slot's real verified history has exactly this length next
+    /// round (full-accept prediction held).
+    pub base_len: usize,
+    /// Predicted round-R+1 draft tokens (length = slot window, padded).
+    pub tokens: Vec<i32>,
+    /// Wall time the mirror spent drafting, in microseconds — the cost
+    /// hidden behind the verify step when the chunk hits.
+    pub draft_us: u64,
+}
+
+/// One slot's drafter mirror on the prefetch thread.
+struct SlotMirror {
+    drafter: Box<dyn TokenDrafter>,
+    seq: Vec<i32>,
+    window: usize,
+}
+
+fn prefetch_loop(
+    cmd_rx: Receiver<PrefetchCmd>,
+    chunk_tx: Sender<PrefetchChunk>,
+    bucket: usize,
+    pad: i32,
+) {
+    let mut slots: Vec<Option<SlotMirror>> = (0..bucket).map(|_| None).collect();
+    let mut toks: Vec<i32> = Vec::new();
+    while let Ok(cmd) = cmd_rx.recv() {
+        match cmd {
+            PrefetchCmd::Reset { slot, spec } => {
+                if slot >= slots.len() {
+                    continue;
+                }
+                slots[slot] = spec.and_then(|s| {
+                    let mut drafter = s.method.new_token_drafter()?;
+                    drafter.extend(&s.seq);
+                    Some(SlotMirror { drafter, seq: s.seq, window: s.window })
+                });
+            }
+            PrefetchCmd::Predict { slot, stamp, drafts } => {
+                let Some(st) = slots.get_mut(slot).and_then(|s| s.as_mut()) else {
+                    continue;
+                };
+                // assume every drafted token verifies (full accept)
+                st.seq.extend_from_slice(&drafts);
+                st.drafter.extend(&drafts);
+                let t0 = Instant::now();
+                st.drafter.draft_into(st.window, &mut toks);
+                toks.resize(st.window, pad);
+                let draft_us = t0.elapsed().as_micros() as u64;
+                let chunk = PrefetchChunk {
+                    slot,
+                    stamp,
+                    base_len: st.seq.len(),
+                    tokens: toks.clone(),
+                    draft_us,
+                };
+                if chunk_tx.send(chunk).is_err() {
+                    return; // worker gone
+                }
+            }
+            PrefetchCmd::Resolve { slot, base_len, appended } => {
+                let Some(st) = slots.get_mut(slot).and_then(|s| s.as_mut()) else {
+                    continue;
+                };
+                let hit = st.seq.len() == base_len + appended.len()
+                    && st.seq[base_len.min(st.seq.len())..] == appended[..];
+                if hit {
+                    continue; // prediction held: mirror already current
+                }
+                if st.seq.len() >= base_len {
+                    // rollback: truncate to the verified base and replay
+                    // the actually-accepted tokens over a fresh index
+                    st.seq.truncate(base_len);
+                    st.seq.extend_from_slice(&appended);
+                    st.drafter.reset();
+                    st.drafter.extend(&st.seq);
+                } else {
+                    // mirror is behind the verified base: it missed a
+                    // lifecycle event — drop it until the next Reset
+                    slots[slot] = None;
+                }
+            }
+            PrefetchCmd::Shutdown => return,
+        }
+    }
+}
+
+/// Handle to the prefetch thread. All sends report success as `bool`
+/// (`false` = thread dead); the worker reacts by disabling overlap, not
+/// by erroring — losing the prefetcher loses performance, never tokens.
+pub struct Prefetcher {
+    cmd_tx: Sender<PrefetchCmd>,
+    chunk_rx: Receiver<PrefetchChunk>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Prefetcher {
+    /// Spawn the mirror thread for a `bucket`-slot worker.
+    pub fn new(bucket: usize, pad: i32) -> Prefetcher {
+        let (cmd_tx, cmd_rx) = channel();
+        let (chunk_tx, chunk_rx) = channel();
+        let handle = std::thread::Builder::new()
+            .name("specactor-prefetch".to_string())
+            .spawn(move || prefetch_loop(cmd_rx, chunk_tx, bucket, pad))
+            .expect("spawn prefetch thread");
+        Prefetcher { cmd_tx, chunk_rx, handle: Some(handle) }
+    }
+
+    /// Rebuild (Some) or clear (None) one slot's mirror.
+    pub fn reset(&self, slot: usize, spec: Option<ResetSpec>) -> bool {
+        self.cmd_tx
+            .send(PrefetchCmd::Reset { slot, spec: spec.map(Box::new) })
+            .is_ok()
+    }
+
+    /// Hand round R's chosen drafts to the mirror; it drafts round R+1
+    /// under the full-accept prediction and sends back a chunk echoing
+    /// `stamp`.
+    pub fn predict(&self, slot: usize, stamp: u64, drafts: Vec<i32>) -> bool {
+        self.cmd_tx
+            .send(PrefetchCmd::Predict { slot, stamp, drafts })
+            .is_ok()
+    }
+
+    /// Reconcile the mirror with round R's verified outcome.
+    pub fn resolve(&self, slot: usize, base_len: usize, appended: Vec<i32>) -> bool {
+        self.cmd_tx
+            .send(PrefetchCmd::Resolve { slot, base_len, appended })
+            .is_ok()
+    }
+
+    /// Non-blocking poll for finished chunks.
+    pub fn try_recv(&self) -> Result<PrefetchChunk, TryRecvError> {
+        self.chunk_rx.try_recv()
+    }
+}
+
+impl Drop for Prefetcher {
+    fn drop(&mut self) {
+        let _ = self.cmd_tx.send(PrefetchCmd::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::drafter::DraftMethod;
+
+    fn spec(seq: &[i32]) -> ResetSpec {
+        ResetSpec { method: DraftMethod::Ngram, window: 4, seq: seq.to_vec() }
+    }
+
+    fn recv_chunk(p: &Prefetcher) -> PrefetchChunk {
+        for _ in 0..2000 {
+            match p.try_recv() {
+                Ok(c) => return c,
+                Err(TryRecvError::Empty) => {
+                    std::thread::sleep(std::time::Duration::from_micros(50))
+                }
+                Err(TryRecvError::Disconnected) => panic!("prefetch thread died"),
+            }
+        }
+        panic!("no chunk within timeout");
+    }
+
+    /// A repeating history makes the ngram mirror's prediction exactly
+    /// reproducible: the prefetched chunk must equal what a synchronous
+    /// drafter with the same (full-accept) history would draft.
+    #[test]
+    fn predicted_chunk_matches_synchronous_draft() {
+        let hist: Vec<i32> = (0..40).map(|i| i % 5).collect();
+        let p = Prefetcher::new(2, -1);
+        assert!(p.reset(0, Some(spec(&hist))));
+        let drafts = vec![0, 1, 2, 3]; // continues the period-5 pattern
+        assert!(p.predict(0, 1, drafts.clone()));
+        let c = recv_chunk(&p);
+        assert_eq!(c.slot, 0);
+        assert_eq!(c.stamp, 1);
+        assert_eq!(c.base_len, hist.len() + drafts.len());
+        let mut oracle = DraftMethod::Ngram.new_token_drafter().unwrap();
+        oracle.extend(&hist);
+        oracle.extend(&drafts);
+        let mut want = oracle.draft(4);
+        want.resize(4, -1);
+        assert_eq!(c.tokens, want, "mirror must draft exactly like a sync drafter");
+    }
+
+    /// Partial accept: Resolve must roll the mirror back to the verified
+    /// base and replay, after which a fresh Predict drafts from the
+    /// corrected history (not the mis-speculated one).
+    #[test]
+    fn resolve_rolls_back_mispredicted_history() {
+        let hist: Vec<i32> = (0..40).map(|i| i % 5).collect();
+        let p = Prefetcher::new(1, -1);
+        assert!(p.reset(0, Some(spec(&hist))));
+        assert!(p.predict(0, 1, vec![0, 1, 2, 3]));
+        let _stale = recv_chunk(&p);
+        // verifier accepted only [0, 1] and decoded a correction token 9
+        let appended = vec![0, 1, 9];
+        assert!(p.resolve(0, hist.len(), appended.clone()));
+        // next round drafts from the corrected history
+        assert!(p.predict(0, 2, vec![9, 9, 9, 9]));
+        let c = recv_chunk(&p);
+        assert_eq!(c.base_len, hist.len() + appended.len() + 4);
+        let mut oracle = DraftMethod::Ngram.new_token_drafter().unwrap();
+        oracle.extend(&hist);
+        oracle.extend(&appended);
+        oracle.extend(&[9, 9, 9, 9]);
+        let mut want = oracle.draft(4);
+        want.resize(4, -1);
+        assert_eq!(c.tokens, want, "rollback must replay the verified history");
+    }
+
+    /// Full accept: Resolve with exactly the predicted tokens is a no-op
+    /// (the mirror stays warm — no reset, no replay).
+    #[test]
+    fn resolve_on_full_accept_keeps_mirror_warm() {
+        let hist: Vec<i32> = (0..30).map(|i| i % 3).collect();
+        let p = Prefetcher::new(1, -1);
+        assert!(p.reset(0, Some(spec(&hist))));
+        let drafts = vec![0, 1, 2, 0];
+        assert!(p.predict(0, 1, drafts.clone()));
+        let c1 = recv_chunk(&p);
+        assert!(p.resolve(0, hist.len(), drafts.clone()));
+        assert!(p.predict(0, 2, c1.tokens.clone()));
+        let c2 = recv_chunk(&p);
+        assert_eq!(c2.stamp, 2);
+        assert_eq!(c2.base_len, c1.base_len + 4);
+    }
+
+    /// Reset(None) clears the mirror: Predicts for the slot are ignored.
+    #[test]
+    fn cleared_slot_produces_no_chunks() {
+        let p = Prefetcher::new(1, -1);
+        assert!(p.reset(0, Some(spec(&[1, 2, 3, 1, 2, 3, 1, 2]))));
+        assert!(p.reset(0, None));
+        assert!(p.predict(0, 1, vec![3, 1]));
+        // flush with a second slot-less command and check emptiness
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        assert!(matches!(p.try_recv(), Err(TryRecvError::Empty)));
+    }
+
+    /// Out-of-range slots must be ignored, not panic the thread.
+    #[test]
+    fn out_of_range_slot_is_ignored() {
+        let p = Prefetcher::new(1, -1);
+        assert!(p.reset(7, Some(spec(&[1, 2, 3]))));
+        assert!(p.predict(7, 1, vec![1]));
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        assert!(matches!(p.try_recv(), Err(TryRecvError::Empty)));
+        // thread still alive and serving valid slots
+        assert!(p.reset(0, Some(spec(&(0..20).map(|i| i % 4).collect::<Vec<i32>>()))));
+        assert!(p.predict(0, 2, vec![0, 1]));
+        let c = recv_chunk(&p);
+        assert_eq!(c.slot, 0);
+    }
+}

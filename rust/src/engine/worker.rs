@@ -30,6 +30,7 @@
 //! [`StepOut`]: crate::runtime::StepOut
 
 use std::collections::BTreeMap;
+use std::sync::mpsc::TryRecvError;
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
@@ -41,6 +42,7 @@ use crate::spec::{decode_one, verify_exact, AcceptanceStats, VerifyOutcome};
 use crate::util::rng::{position_rng, sample_logits};
 
 use super::fault::SpecError;
+use super::overlap::{PrefetchChunk, Prefetcher, ResetSpec};
 use super::plan::{same_group, PlanMode, SlotPlan, VerifyDiscipline};
 
 /// One rollout request.
@@ -92,6 +94,12 @@ pub struct EngineConfig {
     pub seed: u64,
     /// Drafter's own tape seed (draft sampling is independent).
     pub draft_seed: u64,
+    /// Overlapped execution: prefetch round R+1's token drafts behind
+    /// round R's fused verify step on a mirror thread
+    /// (`engine::overlap`) and split the verify into submit/await
+    /// halves. Off by default — the sequential path is the A/B
+    /// baseline; both produce identical tokens (drafts only propose).
+    pub overlap: bool,
 }
 
 impl Default for EngineConfig {
@@ -102,6 +110,7 @@ impl Default for EngineConfig {
             temperature: 1.0,
             seed: 7,
             draft_seed: 1007,
+            overlap: false,
         }
     }
 }
@@ -145,6 +154,20 @@ pub struct EngineReport {
     /// drafter mid-flight and finished on plain decode (token-identical
     /// by the sampling-tape invariant, just slower).
     pub drafter_degrades: u64,
+    /// Overlap: prefetched draft chunks consumed as-is (the full-accept
+    /// prediction held, so the round's drafting cost was hidden behind
+    /// the previous verify step).
+    pub prefetch_hits: u64,
+    /// Overlap: mis-speculated predictions — the mirror rolled its
+    /// drafter state back to the verified base and the stale chunk was
+    /// discarded (the slot re-drafted synchronously, as without overlap).
+    pub prefetch_rollbacks: u64,
+    /// Overlap: prefetch-thread deaths survived by silently falling
+    /// back to sequential in-round drafting (never an abort).
+    pub prefetch_deaths: u64,
+    /// Overlap: drafting wall time hidden behind verify steps (the sum
+    /// of consumed chunks' draft times).
+    pub draft_hidden_s: f64,
     /// Per-slot drafted/accepted counters, indexed by batch slot (grown on
     /// first use; cumulative across the report's lifetime — consumers
     /// wanting recent rates take deltas).
@@ -244,6 +267,22 @@ pub struct Worker<'rt> {
     /// behind an `if let`). Installed by the serve loop's observability
     /// wiring; the worker never allocates on a record.
     tracer: Option<Tracer>,
+    /// Round-R+1 draft prefetcher (`Some` only under `cfg.overlap`):
+    /// mirrors eligible slots' token drafters on a worker thread and
+    /// drafts the next round behind the verify step (`engine::overlap`).
+    prefetch: Option<Prefetcher>,
+    /// Latest prefetched chunk per slot (taken or invalidated per round).
+    prefetched: Vec<Option<PrefetchChunk>>,
+    /// Stamp of the last `Predict` sent per slot (0 = none outstanding).
+    pf_sent: Vec<u64>,
+    /// Stamp whose full-accept prediction the verifier confirmed per
+    /// slot (0 = no valid chunk); only a chunk echoing this stamp may be
+    /// consumed.
+    pf_valid: Vec<u64>,
+    /// Monotonic `Predict` stamp source (shared across slots).
+    pf_stamp: u64,
+    /// Prefetch-thread deaths not yet surfaced into an [`EngineReport`].
+    prefetch_deaths_pending: u64,
 }
 
 impl<'rt> Worker<'rt> {
@@ -273,6 +312,12 @@ impl<'rt> Worker<'rt> {
             },
             eos: m.eos_id,
             pad: m.pad_id,
+            prefetch: if cfg.overlap { Some(Prefetcher::new(bucket, m.pad_id)) } else { None },
+            prefetched: (0..bucket).map(|_| None).collect(),
+            pf_sent: vec![0; bucket],
+            pf_valid: vec![0; bucket],
+            pf_stamp: 0,
+            prefetch_deaths_pending: 0,
             rt,
             cfg,
             target,
@@ -464,6 +509,9 @@ impl<'rt> Worker<'rt> {
                 _ => None,
             };
         }
+        for i in 0..self.bucket {
+            self.prefetch_reset(i);
+        }
         Ok(())
     }
 
@@ -561,6 +609,7 @@ impl<'rt> Worker<'rt> {
         };
         self.plans[slot] = plan;
         self.slots[slot] = Some(req);
+        self.prefetch_reset(slot);
         Ok(())
     }
 
@@ -611,6 +660,7 @@ impl<'rt> Worker<'rt> {
         };
         self.plans[dst] = plan;
         self.slots[dst] = Some(req);
+        self.prefetch_reset(dst);
         Ok(())
     }
 
@@ -630,6 +680,7 @@ impl<'rt> Worker<'rt> {
         }
         self.token_drafters[slot] = None;
         self.plans[slot] = self.cfg.plan.clone();
+        self.prefetch_reset(slot);
         Ok(req)
     }
 
@@ -687,7 +738,119 @@ impl<'rt> Worker<'rt> {
             }
         }
         self.plans[slot] = plan;
+        self.prefetch_reset(slot);
         Ok(())
+    }
+
+    /// True when `slot` can be served by the draft prefetcher: overlap
+    /// is on, the thread is alive, and the slot runs a live
+    /// Decoupled-mode token-drafter plan. Coupled full-accept appends a
+    /// target-sampled bonus token the mirror cannot predict, and model
+    /// drafters need the (thread-bound) runtime — both fall back to
+    /// sequential in-round drafting, which is always correct.
+    fn prefetch_eligible(&self, slot: usize) -> bool {
+        if self.prefetch.is_none() {
+            return false;
+        }
+        let Some(r) = self.slots.get(slot).and_then(|s| s.as_ref()) else {
+            return false;
+        };
+        let p = &self.plans[slot];
+        !r.done && p.window > 0 && !p.method.is_model() && p.mode == PlanMode::Decoupled
+    }
+
+    /// Rebuild (or clear) the slot's drafter mirror after any lifecycle
+    /// event that invalidates its history: admission, retire, fork,
+    /// plan swap, weight-update invalidation.
+    fn prefetch_reset(&mut self, slot: usize) {
+        if self.prefetch.is_none() {
+            return;
+        }
+        self.prefetched[slot] = None;
+        self.pf_sent[slot] = 0;
+        self.pf_valid[slot] = 0;
+        let spec = if self.prefetch_eligible(slot) {
+            Some(ResetSpec {
+                method: self.plans[slot].method.clone(),
+                window: self.plans[slot].window,
+                seq: self.slots[slot].as_ref().unwrap().seq.clone(),
+            })
+        } else {
+            None
+        };
+        if !self.prefetch.as_ref().unwrap().reset(slot, spec) {
+            self.disable_prefetch();
+        }
+    }
+
+    /// The prefetch thread died: drop the handle (joins it), forget all
+    /// chunks, and count the death. Rounds keep running on sequential
+    /// in-round drafting — the prefetcher is an accelerator, never a
+    /// correctness dependency, so this is a silent performance fallback
+    /// rather than an error.
+    fn disable_prefetch(&mut self) {
+        self.prefetch = None;
+        self.prefetch_deaths_pending += 1;
+        for c in self.prefetched.iter_mut() {
+            *c = None;
+        }
+        for s in self.pf_sent.iter_mut() {
+            *s = 0;
+        }
+        for v in self.pf_valid.iter_mut() {
+            *v = 0;
+        }
+    }
+
+    /// Pull every finished chunk off the prefetch channel (non-blocking;
+    /// called at round start and inside the submit/await window). A
+    /// disconnected channel means the thread died → disable. Chunk
+    /// spans are back-dated by their measured draft time, so in the
+    /// chrome trace they land inside the verify step they hid behind.
+    fn drain_prefetch(&mut self, tracer: Option<&Tracer>) {
+        let mut died = false;
+        if let Some(pf) = &self.prefetch {
+            loop {
+                match pf.try_recv() {
+                    Ok(c) => {
+                        if let Some(t) = tracer {
+                            let now = t.now_us();
+                            t.record_with_dur(
+                                Phase::PrefetchDraft,
+                                now.saturating_sub(c.draft_us),
+                                c.draft_us.max(1),
+                                c.slot as u32,
+                            );
+                        }
+                        if c.slot < self.prefetched.len() {
+                            self.prefetched[c.slot] = Some(c);
+                        }
+                    }
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        died = true;
+                        break;
+                    }
+                }
+            }
+        }
+        if died {
+            self.disable_prefetch();
+        }
+    }
+
+    /// Take the slot's prefetched chunk if it is consumable this round:
+    /// its stamp matches the verifier-confirmed prediction, its window
+    /// matches the plan, and its base equals the slot's verified
+    /// history. One-shot: valid or not, the chunk and stamp are cleared.
+    fn take_prefetched(&mut self, slot: usize, k: usize) -> Option<PrefetchChunk> {
+        let c = self.prefetched.get_mut(slot).and_then(|s| s.take())?;
+        let confirmed = std::mem::take(&mut self.pf_valid[slot]);
+        let usable = confirmed != 0
+            && c.stamp == confirmed
+            && c.tokens.len() == k
+            && self.slots[slot].as_ref().map(|r| r.seq.len()) == Some(c.base_len);
+        usable.then_some(c)
     }
 
     /// Recompute the active-slot list into scratch (no allocation in the
@@ -727,6 +890,7 @@ impl<'rt> Worker<'rt> {
         if active == 0 {
             return Ok(0);
         }
+        rep.prefetch_deaths += std::mem::take(&mut self.prefetch_deaths_pending);
         match self.cfg.verify {
             VerifyDiscipline::Fused => self.round_fused(rep)?,
             VerifyDiscipline::Grouped => self.round_grouped(rep)?,
@@ -817,6 +981,10 @@ impl<'rt> Worker<'rt> {
         // Rc handle so span recording can interleave with `&mut self`
         // draft calls; cloning an Option<Tracer> is a refcount bump.
         let tracer = self.tracer.clone();
+        // 0. collect chunks the mirror finished during the previous
+        //    round's verify (or between rounds) — the draft loop below
+        //    consumes confirmed ones instead of drafting synchronously.
+        self.drain_prefetch(tracer.as_ref());
         // 1. draft (no per-group verify). Token-drafter groups draft per
         //    group as usual. Model drafting is fused per MODEL, across
         //    groups: the fused round verifies only once at the end, so a
@@ -855,6 +1023,33 @@ impl<'rt> Worker<'rt> {
             }
         }
 
+        // 1b. hand this round's drafts to the prefetcher: the mirror
+        //     assumes a full accept and drafts round R+1 while the
+        //     verify step below occupies the accelerator. Mis-predicted
+        //     chunks are rolled back at apply time; the real drafter
+        //     state is never touched by predictions (frozen-chain
+        //     discipline), so overlap cannot change tokens.
+        if self.prefetch.is_some() {
+            let mut died = false;
+            for idx in 0..self.scratch.active.len() {
+                let i = self.scratch.active[idx];
+                if !self.prefetch_eligible(i) {
+                    continue;
+                }
+                let k = self.plans[i].window;
+                self.pf_stamp += 1;
+                self.pf_sent[i] = self.pf_stamp;
+                let pf = self.prefetch.as_ref().unwrap();
+                if !pf.predict(i, self.pf_stamp, drafts[i][..k].to_vec()) {
+                    died = true;
+                    break;
+                }
+            }
+            if died {
+                self.disable_prefetch();
+            }
+        }
+
         // 2. ONE fused ragged verify step across every active slot: row i
         //    carries [last, d_0..d_{k_i-1}, pad...], real width k_i + 1;
         //    free/done slots are zero-width padding rows whose cache the
@@ -874,20 +1069,31 @@ impl<'rt> Worker<'rt> {
         // widths ownership rides through the StepOut and is reclaimed
         // after the outputs are read — no per-step allocation
         let (t_verify, kv0) = match &tracer {
-            Some(t) => {
-                let st = self.rt.stats.borrow();
-                (Some(t.now_us()), Some((st.kv_h2d_s, st.kv_d2h_s)))
-            }
+            Some(t) => (
+                Some(t.now_us()),
+                Some((self.rt.stats.kv_h2d_s(), self.rt.stats.kv_d2h_s())),
+            ),
             None => (None, None),
         };
-        let step = self.rt.step_ragged(&self.target, &toks, w, &mut self.cache, widths);
+        // Submit/await split: staging + dispatch, then — while the
+        // accelerator executes — drain chunks the mirror finishes, then
+        // block on the outputs. Without overlap the two halves run
+        // back-to-back, which is exactly the old `step_ragged`.
+        let step = match self.rt.submit_ragged(&self.target, &toks, w, &self.cache, widths) {
+            Ok(fl) => {
+                if self.prefetch.is_some() {
+                    self.drain_prefetch(tracer.as_ref());
+                }
+                self.rt.await_step(fl, &mut self.cache)
+            }
+            Err(e) => Err(e),
+        };
         if let (Some(t), Some(t0), Some((h0, d0))) = (&tracer, t_verify, kv0) {
             t.record(Phase::Verify, t0, w as u32);
             // KV copy time is nested inside the verify step; carve it out
             // as sub-spans from the runtime's directional copy ledger.
-            let st = self.rt.stats.borrow();
-            let h2d = ((st.kv_h2d_s - h0) * 1e6) as u64;
-            let d2h = ((st.kv_d2h_s - d0) * 1e6) as u64;
+            let h2d = ((self.rt.stats.kv_h2d_s() - h0) * 1e6) as u64;
+            let d2h = ((self.rt.stats.kv_d2h_s() - d0) * 1e6) as u64;
             if h2d > 0 {
                 t.record_with_dur(Phase::KvH2d, t0, h2d, 0);
             }
@@ -1049,6 +1255,30 @@ impl<'rt> Worker<'rt> {
         if let Some(td) = &mut self.token_drafters[i] {
             td.extend(&append);
         }
+        // Prefetch reconciliation: settle this round's prediction and
+        // hand the verified outcome to the mirror. The prediction held
+        // only on an untruncated decoupled full accept (the mirror
+        // assumed exactly the k drafts, no bonus); anything else is a
+        // mis-speculation — the chunk drafted from the wrong history is
+        // condemned and the mirror rolls back to the verified base.
+        if self.prefetch.is_some() && self.prefetch_eligible(i) {
+            if self.pf_sent[i] != 0 {
+                let held = outcome.full_accept
+                    && self.plans[i].mode == PlanMode::Decoupled
+                    && advanced == drafted;
+                if held {
+                    self.pf_valid[i] = self.pf_sent[i];
+                } else {
+                    self.pf_valid[i] = 0;
+                    rep.prefetch_rollbacks += 1;
+                }
+                self.pf_sent[i] = 0;
+            }
+            let pf = self.prefetch.as_ref().unwrap();
+            if !pf.resolve(i, seq_len, append.clone()) {
+                self.disable_prefetch();
+            }
+        }
         self.finish_check(i);
     }
 
@@ -1087,7 +1317,17 @@ impl<'rt> Worker<'rt> {
             res?;
         } else {
             for &i in slots {
-                if let Some(td) = &mut self.token_drafters[i] {
+                // A confirmed prefetched chunk replaces the synchronous
+                // draft: its cost was paid behind the previous verify
+                // step. The chunk is byte-identical to what draft_into
+                // would produce (the mirror ran the same drafter over
+                // the same confirmed history), so consuming it cannot
+                // change tokens — only wall time.
+                if let Some(c) = self.take_prefetched(i, k) {
+                    drafts[i].extend_from_slice(&c.tokens);
+                    rep.prefetch_hits += 1;
+                    rep.draft_hidden_s += c.draft_us as f64 * 1e-6;
+                } else if let Some(td) = &mut self.token_drafters[i] {
                     td.draft_into(k, &mut drafts[i]);
                 }
                 drafts[i].resize(k, self.pad); // pad empty/short proposals
@@ -1337,6 +1577,11 @@ impl<'rt> Worker<'rt> {
             })?;
             td.extend(&r.seq);
             self.token_drafters[slot] = Some(td);
+        }
+        // mirrors indexed the pre-update drafts; rebuild them from the
+        // verified sequences exactly like the worker-side drafters
+        for slot in 0..self.bucket {
+            self.prefetch_reset(slot);
         }
         Ok(())
     }

@@ -47,10 +47,15 @@ fn usage() -> ! {
                              worst below-mean slot into idle slots under next-best\n\
                              draft methods; first finisher wins, admissions preempt\n\
            --vanilla         disable speculation (plain decode rounds)\n\
+           --overlap         overlapped execution: prefetch next-round drafts behind\n\
+                             the fused verify step, stage KV double-buffered, and run\n\
+                             admissions/replanning off the decode critical path;\n\
+                             token-identical to the sequential default (A/B baseline)\n\
            --grouped-verify  pre-fusion A/B: one target step per (method, window)\n\
                              plan group instead of one fused ragged step per round\n\
            --chaos SPEC      seeded fault injection, e.g.\n\
-                             seed=7,step=0.05,drafter=0.02,slot=0.01,fork=0.05,pause=40\n\
+                             seed=7,step=0.05,drafter=0.02,slot=0.01,fork=0.05,\n\
+                             prefetch=0.02,pause=40\n\
                              (per-round rates; pause = weight-update period in rounds)\n\
            --metrics-addr A  serve Prometheus text at http://A/metrics (+ /healthz),\n\
                              e.g. 127.0.0.1:9464; snapshot-based, never blocks ticks\n\
@@ -154,6 +159,14 @@ fn print_serve_summary<E: ServeEngine>(engine: &str, b: &Batcher<E>, rep: &OpenL
             m.race_wasted_rounds
         );
     }
+    if m.prefetch_hits > 0 || m.prefetch_rollbacks > 0 {
+        println!(
+            "  overlap: {} prefetch hits, {} rollbacks, {} draft time hidden",
+            m.prefetch_hits,
+            m.prefetch_rollbacks,
+            fmt_s(b.report.draft_hidden_s)
+        );
+    }
     println!(
         "  rejections: {} shed, {} malformed, {} retry-exhausted",
         b.queue.rejected_shed, m.invalid, b.queue.rejected_retry_exhausted
@@ -241,13 +254,15 @@ fn print_chaos_summary<E: ServeEngine>(ce: &ChaosEngine<E>) {
         return;
     }
     println!(
-        "  chaos[{}]: {} faults injected ({} step, {} drafter, {} slot, {} fork), {} pauses",
+        "  chaos[{}]: {} faults injected ({} step, {} drafter, {} slot, {} fork, \
+         {} prefetch), {} pauses",
         ce.plan.label(),
         ce.injected(),
         ce.injected_step,
         ce.injected_drafter,
         ce.injected_slot,
         ce.injected_fork,
+        ce.injected_prefetch,
         ce.pauses
     );
 }
@@ -265,6 +280,7 @@ fn cmd_serve(mut args: Args) {
     let reconfig_period = args.opt_parse("reconfig-period", 0u64);
     let fon_race = args.flag("fon-race");
     let vanilla = args.flag("vanilla");
+    let overlap = args.flag("overlap") && !vanilla;
     let grouped = args.flag("grouped-verify");
     let smoke = args.flag("smoke");
     let chaos = args.opt_maybe("chaos");
@@ -307,9 +323,15 @@ fn cmd_serve(mut args: Args) {
             .map(|(i, &t)| (t, Request::new(i as u64, vec![0; 8], budget), prio_for(i as u64)))
             .collect();
         let replan = Replanner::synthetic();
-        let engine = SyntheticEngine::new(capacity.max(1), seed).with_discipline(discipline);
+        let mut engine = SyntheticEngine::new(capacity.max(1), seed).with_discipline(discipline);
+        if overlap {
+            engine = engine.with_overlap();
+        }
         let engine = ChaosEngine::new(engine, fplan);
         let mut b = Batcher::new(engine, queue_cap, replan, !vanilla);
+        if overlap {
+            b = b.with_overlap();
+        }
         if reconfig_period > 0 && !vanilla {
             b = b.with_reconfig(Reconfigurator::synthetic(reconfig_period));
         }
@@ -363,6 +385,7 @@ fn cmd_serve(mut args: Args) {
         temperature: 1.0,
         seed,
         draft_seed: seed.wrapping_add(1000),
+        overlap,
     };
     let worker = Worker::with_capacity(&rt, ecfg, capacity).unwrap_or_else(|e| {
         eprintln!("worker: {e}");
@@ -383,15 +406,22 @@ fn cmd_serve(mut args: Args) {
             .unwrap_or(0.6);
         vec![(drafter.clone(), p)]
     };
-    let replan = Replanner::for_manifest(&m, CostModel::paper_32b(), profiled, 7);
+    // --overlap prices plans with the overlap-efficiency term: the
+    // hidden share of the serialized draft time (see PERF.md) shifts
+    // the planner toward larger windows the overlapped engine can
+    // afford; the sequential baseline keeps the eff=0 model.
+    let cost = if overlap {
+        CostModel::paper_32b().with_overlap_eff(0.6)
+    } else {
+        CostModel::paper_32b()
+    };
+    let replan = Replanner::for_manifest(&m, cost.clone(), profiled, 7);
     let mut b = Batcher::new(worker, queue_cap, replan, !vanilla);
+    if overlap {
+        b = b.with_overlap();
+    }
     if reconfig_period > 0 && !vanilla {
-        b = b.with_reconfig(Reconfigurator::for_manifest(
-            &m,
-            CostModel::paper_32b(),
-            7,
-            reconfig_period,
-        ));
+        b = b.with_reconfig(Reconfigurator::for_manifest(&m, cost.clone(), 7, reconfig_period));
     }
     if fon_race && !vanilla {
         // race rank: every profiled method this artifact set can serve
@@ -408,7 +438,7 @@ fn cmd_serve(mut args: Args) {
             rank.push(("sam".to_string(), 0.6));
         }
         rank.sort_by(|x, y| y.1.total_cmp(&x.1));
-        b = b.with_racing(RaceArbiter::for_manifest(&m, CostModel::paper_32b(), rank));
+        b = b.with_racing(RaceArbiter::for_manifest(&m, cost.clone(), rank));
     }
     b = wire_observability(b, metrics_addr.as_deref(), trace_out.as_deref(), pace_us);
     match drive_open_loop(&mut b, arrivals, None) {

@@ -58,9 +58,17 @@ pub enum Phase {
     /// KV/logits device→host readback time inside the verify step
     /// (derived from `RuntimeStats` deltas).
     KvD2h,
+    /// Overlapped round: next-round drafting done by the prefetch thread
+    /// while this round's verify was in flight (duration reported by the
+    /// prefetcher; rendered on its own chrome track so the concurrency
+    /// with [`Phase::Verify`] is visible).
+    PrefetchDraft,
+    /// Overlapped round: next-round h2d staging overlapped with this
+    /// round's execute via the split submit/await runtime step.
+    PrefetchKvH2d,
 }
 
-pub const N_PHASES: usize = 12;
+pub const N_PHASES: usize = 14;
 
 impl Phase {
     pub const ALL: [Phase; N_PHASES] = [
@@ -76,6 +84,8 @@ impl Phase {
         Phase::Apply,
         Phase::KvH2d,
         Phase::KvD2h,
+        Phase::PrefetchDraft,
+        Phase::PrefetchKvH2d,
     ];
 
     pub fn label(self) -> &'static str {
@@ -92,6 +102,18 @@ impl Phase {
             Phase::Apply => "apply",
             Phase::KvH2d => "kv_h2d",
             Phase::KvD2h => "kv_d2h",
+            Phase::PrefetchDraft => "prefetch_draft",
+            Phase::PrefetchKvH2d => "prefetch_kv_h2d",
+        }
+    }
+
+    /// chrome://tracing track: main-thread phases on tid 1, prefetch
+    /// phases on tid 3 (tid 2 is the fault-dump window) so overlapped
+    /// spans render concurrent with the verify they hide behind.
+    fn chrome_tid(self) -> f64 {
+        match self {
+            Phase::PrefetchDraft | Phase::PrefetchKvH2d => 3.0,
+            _ => 1.0,
         }
     }
 
@@ -285,7 +307,7 @@ fn span_json(e: &SpanEvent) -> Json {
         ("ts", Json::num(e.t_start_us as f64)),
         ("dur", Json::num(e.dur_us as f64)),
         ("pid", Json::num(1.0)),
-        ("tid", Json::num(1.0)),
+        ("tid", Json::num(e.phase.chrome_tid())),
         (
             "args",
             Json::obj(vec![
@@ -371,6 +393,29 @@ mod tests {
         assert!(rendered.contains("phase=\"verify\""));
         assert!(!rendered.contains("phase=\"draft\""));
         assert!(rendered.contains("specactor_trace_events_total 1"));
+    }
+
+    #[test]
+    fn prefetch_spans_render_on_their_own_track() {
+        // The acceptance criterion for the overlapped round: prefetch
+        // draft/h2d spans must land on a separate chrome tid so their
+        // concurrency with the in-flight verify is visible in the trace.
+        let t = Tracer::new(16);
+        t.record_with_dur(Phase::Verify, 0, 10, 0);
+        t.record_with_dur(Phase::PrefetchDraft, 2, 5, 0);
+        t.record_with_dur(Phase::PrefetchKvH2d, 4, 3, 0);
+        let j = chrome_trace(&t.events(), &[]);
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        let evs = parsed.get("traceEvents").as_arr().unwrap();
+        let tid_of = |name: &str| {
+            evs.iter()
+                .find(|e| e.get("name").as_str() == Some(name))
+                .and_then(|e| e.get("tid").as_f64())
+                .unwrap()
+        };
+        assert_eq!(tid_of("verify"), 1.0);
+        assert_eq!(tid_of("prefetch_draft"), 3.0);
+        assert_eq!(tid_of("prefetch_kv_h2d"), 3.0);
     }
 
     #[test]

@@ -74,6 +74,15 @@ pub struct CostModel {
     ///
     /// [`race_gain`]: crate::coordinator::race::race_gain
     pub fork_cost: f64,
+    /// Fraction of a round's serialized in-round draft time hidden by
+    /// the overlapped execution path (draft prefetch behind the fused
+    /// verify step's submit/await window; `EngineConfig::overlap`).
+    /// 0.0 = sequential engine (the default and the A/B baseline); the
+    /// serve loop sets it when serving with `--overlap`. Consumed by
+    /// the FUSED iteration-latency functions in `planner::tgs` —
+    /// `il_*_fused` price the draft term at `(1 − overlap_eff)` — so
+    /// eff = 0 reproduces the sequential formulas exactly.
+    pub overlap_eff: f64,
     /// Parallel-efficiency exponent for scaling the verifier across GPU
     /// configs: slope(g) = slope_ref · (g_ref / g)^eff.
     pub tp_eff: f64,
@@ -95,6 +104,7 @@ impl CostModel {
             beta_w: 0.1e-3,
             pad_waste: 0.6,
             fork_cost: 1.0e-3,
+            overlap_eff: 0.0,
             tp_eff: 0.85,
             g_ref: 4,
             drafts: vec![
@@ -149,6 +159,14 @@ impl CostModel {
             },
         ];
         m
+    }
+
+    /// Price plans for the overlapped engine: `eff` of the serialized
+    /// in-round draft time is hidden behind the fused verify step (see
+    /// [`CostModel::overlap_eff`]). Clamped to [0, 1].
+    pub fn with_overlap_eff(mut self, eff: f64) -> CostModel {
+        self.overlap_eff = eff.clamp(0.0, 1.0);
+        self
     }
 
     /// Verification cost of a `w`-token window at batch `b` on `g_v` GPUs.

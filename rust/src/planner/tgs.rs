@@ -89,8 +89,13 @@ pub fn step_up(grid: &[usize], w: usize) -> usize {
 /// Iteration latency of one coupled round under the FUSED discipline:
 /// draft serially, then verify in a step padded up to the shared window
 /// `w_step` (≥ `w`; β once, padding-waste priced by
-/// [`CostModel::verify_fused`]). `w_step == w` degenerates to
-/// [`il_coupled`] exactly.
+/// [`CostModel::verify_fused`]). `w_step == w` with
+/// `overlap_eff == 0` degenerates to [`il_coupled`] exactly.
+///
+/// With `CostModel::overlap_eff > 0` the overlapped engine hides that
+/// share of the serialized in-round draft time behind the previous
+/// round's fused verify step (next-round prefetch), so only
+/// `(1 − eff) · w · D(b)` stays on the critical path.
 pub fn il_coupled_fused(
     m: &CostModel,
     method: &str,
@@ -99,11 +104,14 @@ pub fn il_coupled_fused(
     w_step: usize,
     b: usize,
 ) -> f64 {
-    w as f64 * m.draft(method, b) + m.verify_fused(g_v, w as f64, w_step.max(w), b)
+    let serial = 1.0 - m.overlap_eff.clamp(0.0, 1.0);
+    serial * w as f64 * m.draft(method, b) + m.verify_fused(g_v, w as f64, w_step.max(w), b)
 }
 
 /// Decoupled analogue of [`il_coupled_fused`]: drafter overlaps the fused
-/// verify step.
+/// verify step; the overlap-efficiency term additionally discounts the
+/// draft arm (prefetch hides part of it behind the *previous* verify),
+/// tightening the max toward the verify floor.
 pub fn il_decoupled_fused(
     m: &CostModel,
     method: &str,
@@ -112,7 +120,8 @@ pub fn il_decoupled_fused(
     w_step: usize,
     b: usize,
 ) -> f64 {
-    let draft = w as f64 * m.draft(method, b);
+    let serial = 1.0 - m.overlap_eff.clamp(0.0, 1.0);
+    let draft = serial * w as f64 * m.draft(method, b);
     draft.max(m.verify_fused(g_v, w as f64, w_step.max(w), b))
 }
 
@@ -217,6 +226,42 @@ mod tests {
         assert!(
             tgs_coupled_fused(&m, "draft_small", 4, 2, 4, b, p)
                 < tgs_coupled_fused(&m, "draft_small", 4, 2, 2, b, p)
+        );
+    }
+
+    #[test]
+    fn overlap_eff_discounts_only_the_fused_draft_term() {
+        let m0 = crate::planner::CostModel::paper_32b();
+        let m1 = crate::planner::CostModel::paper_32b().with_overlap_eff(0.6);
+        let (p, b, w) = (0.8, 64, 4);
+        // eff = 0 is the sequential engine: identical to the base model.
+        assert_eq!(
+            il_coupled_fused(&m0, "draft_small", 4, w, w, b),
+            il_coupled(&m0, "draft_small", 4, w, b)
+        );
+        // eff > 0 strictly shrinks coupled fused latency (draft is serial
+        // there), so TGS strictly rises.
+        let c0 = tgs_coupled_fused(&m0, "draft_small", 4, w, w, b, p);
+        let c1 = tgs_coupled_fused(&m1, "draft_small", 4, w, w, b, p);
+        assert!(c1 > c0, "overlap_eff did not raise coupled fused TGS: {c1} <= {c0}");
+        // Decoupled fused latency never rises and is floored by verify.
+        let d0 = il_decoupled_fused(&m0, "draft_small", 4, w, w, b);
+        let d1 = il_decoupled_fused(&m1, "draft_small", 4, w, w, b);
+        assert!(d1 <= d0);
+        assert!(d1 >= m0.verify_fused(4, w as f64, w, b) - 1e-12);
+        // eff = 1 hides the whole draft: coupled fused collapses to the
+        // bare fused verify step.
+        let mfull = crate::planner::CostModel::paper_32b().with_overlap_eff(1.0);
+        let full = il_coupled_fused(&mfull, "draft_small", 4, w, w, b);
+        assert!((full - m0.verify_fused(4, w as f64, w, b)).abs() < 1e-12);
+        // Pre-fusion (grouped) latencies are untouched by the knob.
+        assert_eq!(
+            il_coupled(&m1, "draft_small", 4, w, b),
+            il_coupled(&m0, "draft_small", 4, w, b)
+        );
+        assert_eq!(
+            il_decoupled(&m1, "draft_small", 4, w, b),
+            il_decoupled(&m0, "draft_small", 4, w, b)
         );
     }
 

@@ -21,6 +21,7 @@ use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
 use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
@@ -83,36 +84,154 @@ impl StepOut {
 }
 
 /// Cumulative execution counters (perf accounting; see PERF.md).
-#[derive(Clone, Debug, Default)]
+///
+/// Every field is an atomic: under the overlapped round (PR 8) round
+/// R+1's h2d staging is accounted while round R's d2h readback may still
+/// be in flight on another thread, so the directional copy counters must
+/// tolerate concurrent increment without losing updates. Durations are
+/// stored as integer nanoseconds so they ride the same relaxed
+/// `fetch_add` as the byte counters; read them back through the seconds
+/// accessors or a coherent [`RuntimeStatsSnapshot`].
+#[derive(Debug, Default)]
 pub struct RuntimeStats {
-    pub compiles: usize,
+    compiles: AtomicU64,
+    compile_ns: AtomicU64,
+    executions: AtomicU64,
+    execute_ns: AtomicU64,
+    host_copy_ns: AtomicU64,
+    kv_h2d_ns: AtomicU64,
+    kv_d2h_ns: AtomicU64,
+    kv_h2d_bytes: AtomicU64,
+    kv_d2h_bytes: AtomicU64,
+    logits_d2h_bytes: AtomicU64,
+}
+
+/// Plain-data copy of [`RuntimeStats`] at one instant — what benches,
+/// tests and the metrics registry consume. Field meanings:
+///
+/// - `host_copy_s`: wall time building KV input literals, copying results
+///   back to host vectors and scattering KV windows into the cache.
+/// - `kv_h2d_s` / `kv_d2h_s`: the directional split of `host_copy_s`
+///   (staging input literals vs readback + window scatter) — the serve
+///   tracer attributes copy time per direction from these, and the
+///   overlapped round hides exactly the h2d share behind compute.
+/// - `kv_h2d_bytes`: KV bytes staged host→device per call (the full cache
+///   travels down every step; CPU-PJRT has no persistent device-side cache
+///   buffers — see PERF.md §Incremental-KV protocol).
+/// - `kv_d2h_bytes`: KV bytes copied device→host per call; under
+///   [`KvProtocol::Window`] this is O(L·b·w·h·dh) per step — the
+///   incremental-KV win — versus O(L·b·S·h·dh) under the legacy protocol.
+#[derive(Clone, Debug, Default)]
+pub struct RuntimeStatsSnapshot {
+    pub compiles: u64,
     pub compile_s: f64,
-    pub executions: usize,
+    pub executions: u64,
     pub execute_s: f64,
-    /// Wall time spent building KV input literals, copying results back to
-    /// host vectors and scattering KV windows into the cache.
     pub host_copy_s: f64,
-    /// The host→device share of `host_copy_s`: staging KV input literals.
-    /// Split out so the serve loop's tracer can attribute copy time per
-    /// direction (the overlapped-execution ROADMAP item hides exactly
-    /// this share behind compute).
     pub kv_h2d_s: f64,
-    /// The device→host share of `host_copy_s`: logits/KV readback plus
-    /// the window scatter into the host cache.
     pub kv_d2h_s: f64,
-    /// KV bytes staged host→device per call (the full cache must travel
-    /// down every step because CPU-PJRT gives us no persistent device-side
-    /// cache buffers — see PERF.md §Incremental-KV protocol).
     pub kv_h2d_bytes: u64,
-    /// KV bytes copied device→host per call. Under [`KvProtocol::Window`]
-    /// this is O(L·b·w·h·dh) per step — the incremental-KV win — versus
-    /// O(L·b·S·h·dh) under the legacy full-cache protocol.
     pub kv_d2h_bytes: u64,
-    /// Logits bytes copied device→host per call.
     pub logits_d2h_bytes: u64,
 }
 
 impl RuntimeStats {
+    #[inline]
+    fn add_ns(cell: &AtomicU64, secs: f64) {
+        cell.fetch_add((secs * 1e9).round() as u64, Ordering::Relaxed);
+    }
+
+    #[inline]
+    fn secs(cell: &AtomicU64) -> f64 {
+        cell.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    /// Account one executable compilation.
+    pub fn record_compile(&self, secs: f64) {
+        self.compiles.fetch_add(1, Ordering::Relaxed);
+        Self::add_ns(&self.compile_ns, secs);
+    }
+
+    /// Account one executable invocation (submission side).
+    pub fn record_execute(&self, secs: f64) {
+        self.executions.fetch_add(1, Ordering::Relaxed);
+        Self::add_ns(&self.execute_ns, secs);
+    }
+
+    /// Account time blocked waiting on an already-submitted execution
+    /// ([`Runtime::await_step`]'s device sync) — execute wall time with no
+    /// extra invocation counted.
+    pub fn record_execute_wait(&self, secs: f64) {
+        Self::add_ns(&self.execute_ns, secs);
+    }
+
+    /// Account a host→device staging copy (KV input literal build).
+    pub fn record_h2d(&self, secs: f64, bytes: u64) {
+        Self::add_ns(&self.host_copy_ns, secs);
+        Self::add_ns(&self.kv_h2d_ns, secs);
+        self.kv_h2d_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Account a device→host readback or cache scatter. The scatter half
+    /// passes 0 bytes: it moves bytes the readback already counted.
+    pub fn record_d2h(&self, secs: f64, kv_bytes: u64, logits_bytes: u64) {
+        Self::add_ns(&self.host_copy_ns, secs);
+        Self::add_ns(&self.kv_d2h_ns, secs);
+        self.kv_d2h_bytes.fetch_add(kv_bytes, Ordering::Relaxed);
+        self.logits_d2h_bytes.fetch_add(logits_bytes, Ordering::Relaxed);
+    }
+
+    pub fn compiles(&self) -> u64 {
+        self.compiles.load(Ordering::Relaxed)
+    }
+
+    pub fn executions(&self) -> u64 {
+        self.executions.load(Ordering::Relaxed)
+    }
+
+    pub fn execute_s(&self) -> f64 {
+        Self::secs(&self.execute_ns)
+    }
+
+    pub fn host_copy_s(&self) -> f64 {
+        Self::secs(&self.host_copy_ns)
+    }
+
+    pub fn kv_h2d_s(&self) -> f64 {
+        Self::secs(&self.kv_h2d_ns)
+    }
+
+    pub fn kv_d2h_s(&self) -> f64 {
+        Self::secs(&self.kv_d2h_ns)
+    }
+
+    pub fn kv_h2d_bytes(&self) -> u64 {
+        self.kv_h2d_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn kv_d2h_bytes(&self) -> u64 {
+        self.kv_d2h_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Coherent-enough plain copy of every counter (relaxed loads; exact
+    /// once concurrent staging has quiesced).
+    pub fn snapshot(&self) -> RuntimeStatsSnapshot {
+        RuntimeStatsSnapshot {
+            compiles: self.compiles.load(Ordering::Relaxed),
+            compile_s: Self::secs(&self.compile_ns),
+            executions: self.executions.load(Ordering::Relaxed),
+            execute_s: Self::secs(&self.execute_ns),
+            host_copy_s: Self::secs(&self.host_copy_ns),
+            kv_h2d_s: Self::secs(&self.kv_h2d_ns),
+            kv_d2h_s: Self::secs(&self.kv_d2h_ns),
+            kv_h2d_bytes: self.kv_h2d_bytes.load(Ordering::Relaxed),
+            kv_d2h_bytes: self.kv_d2h_bytes.load(Ordering::Relaxed),
+            logits_d2h_bytes: self.logits_d2h_bytes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl RuntimeStatsSnapshot {
     /// Register the runtime's execution/copy ledger into a scrape
     /// snapshot (`specactor_runtime_*`) — all cumulative, so counters.
     pub fn register_metrics(&self, reg: &mut crate::obs::MetricRegistry) {
@@ -144,7 +263,22 @@ pub struct Runtime {
     exes: RefCell<HashMap<ArtifactKey, Rc<xla::PjRtLoadedExecutable>>>,
     /// model name -> ordered weight literals (manifest order).
     weights: RefCell<HashMap<String, Rc<Vec<xla::Literal>>>>,
-    pub stats: RefCell<RuntimeStats>,
+    pub stats: RuntimeStats,
+}
+
+/// One submitted step whose results have not been read back yet: the
+/// device buffers from `execute` plus the shape metadata `await_step`
+/// needs to validate and scatter them. Holding two of these against two
+/// distinct caches is the double-buffered staging the overlapped round
+/// uses — round R+1's [`Runtime::submit_ragged`] h2d staging runs while
+/// round R's `InFlightStep` still owns its un-read buffers, so upload and
+/// readback of adjacent rounds overlap instead of serializing.
+pub struct InFlightStep {
+    out: Vec<Vec<xla::PjRtBuffer>>,
+    batch: usize,
+    window: usize,
+    vocab: usize,
+    widths: Option<Vec<usize>>,
 }
 
 impl Runtime {
@@ -156,7 +290,7 @@ impl Runtime {
             client,
             exes: RefCell::new(HashMap::new()),
             weights: RefCell::new(HashMap::new()),
-            stats: RefCell::new(RuntimeStats::default()),
+            stats: RuntimeStats::default(),
         })
     }
 
@@ -178,10 +312,7 @@ impl Runtime {
             .client
             .compile(&comp)
             .map_err(|e| anyhow!("compile {:?}: {e:?}", entry.file))?;
-        let mut st = self.stats.borrow_mut();
-        st.compiles += 1;
-        st.compile_s += t0.elapsed().as_secs_f64();
-        drop(st);
+        self.stats.record_compile(t0.elapsed().as_secs_f64());
         let rc = Rc::new(exe);
         self.exes.borrow_mut().insert(key.clone(), rc.clone());
         Ok(rc)
@@ -281,7 +412,8 @@ impl Runtime {
     /// cache's `lens` field supplies per-slot positions and is advanced by
     /// the caller (engine) according to how many tokens were accepted.
     pub fn step(&self, model: &str, tokens: &[i32], window: usize, cache: &mut KvCache) -> Result<StepOut> {
-        self.step_inner(model, tokens, window, cache, None)
+        let fl = self.submit_inner(model, tokens, window, cache, None)?;
+        self.await_step(fl, cache)
     }
 
     /// Run one **fused ragged** verify step: the executable runs at the
@@ -308,23 +440,43 @@ impl Runtime {
         cache: &mut KvCache,
         widths: Vec<usize>,
     ) -> Result<StepOut> {
+        let fl = self.submit_ragged(model, tokens, window, cache, widths)?;
+        self.await_step(fl, cache)
+    }
+
+    /// The submit half of [`Runtime::step_ragged`]: validate, stage the
+    /// h2d literals and launch the execution, returning an
+    /// [`InFlightStep`] whose readback is deferred to
+    /// [`Runtime::await_step`]. Between submit and await the caller is
+    /// free to draft, stage another cache, or run serve-tick bookkeeping —
+    /// that is the overlap window the pipelined round exploits. The cache
+    /// is borrowed immutably here; it must not be mutated before the
+    /// matching `await_step` scatters the step's KV window into it.
+    pub fn submit_ragged(
+        &self,
+        model: &str,
+        tokens: &[i32],
+        window: usize,
+        cache: &KvCache,
+        widths: Vec<usize>,
+    ) -> Result<InFlightStep> {
         if widths.len() != cache.batch {
             bail!("ragged widths len {} != batch {}", widths.len(), cache.batch);
         }
         if let Some((slot, &wi)) = widths.iter().enumerate().find(|(_, &wi)| wi > window) {
             bail!("slot {slot}: ragged width {wi} exceeds step window {window}");
         }
-        self.step_inner(model, tokens, window, cache, Some(widths))
+        self.submit_inner(model, tokens, window, cache, Some(widths))
     }
 
-    fn step_inner(
+    fn submit_inner(
         &self,
         model: &str,
         tokens: &[i32],
         window: usize,
-        cache: &mut KvCache,
+        cache: &KvCache,
         widths: Option<Vec<usize>>,
-    ) -> Result<StepOut> {
+    ) -> Result<InFlightStep> {
         let info = self.manifest.model(model)?;
         let b = cache.batch;
         if tokens.len() != b * window {
@@ -349,21 +501,48 @@ impl Runtime {
         let t0 = Instant::now();
         let k_lit = Self::lit_f32(&cache.k, &dims)?;
         let v_lit = Self::lit_f32(&cache.v, &dims)?;
-        {
-            let dt = t0.elapsed().as_secs_f64();
-            let mut st = self.stats.borrow_mut();
-            st.host_copy_s += dt;
-            st.kv_h2d_s += dt;
-            st.kv_h2d_bytes += cache.bytes() as u64;
-        }
+        self.stats.record_h2d(t0.elapsed().as_secs_f64(), cache.bytes() as u64);
         args.push(&tok_lit);
         args.push(&lens_lit);
         args.push(&k_lit);
         args.push(&v_lit);
 
-        let (logits, k, v) = self.run3(&exe, &args, info, b, window)?;
-        self.apply_kv(cache, k, v, window, widths.as_deref())?;
-        Ok(StepOut { logits, batch: b, window, vocab: info.vocab, widths })
+        let t1 = Instant::now();
+        let out = exe
+            .execute::<&xla::Literal>(&args)
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        self.stats.record_execute(t1.elapsed().as_secs_f64());
+        Ok(InFlightStep { out, batch: b, window, vocab: info.vocab, widths })
+    }
+
+    /// The await half of the split step: sync the device buffers, read
+    /// logits/KV back to host and scatter the KV window into `cache`
+    /// (which must be the cache the step was submitted against).
+    pub fn await_step(&self, fl: InFlightStep, cache: &mut KvCache) -> Result<StepOut> {
+        let InFlightStep { out, batch, window, vocab, widths } = fl;
+        let t0 = Instant::now();
+        let tup = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        self.stats.record_execute_wait(t0.elapsed().as_secs_f64());
+        let t1 = Instant::now();
+        let (lg, k, v) = tup
+            .to_tuple3()
+            .map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let logits: Vec<f32> = lg.to_vec().map_err(|e| anyhow!("logits to_vec: {e:?}"))?;
+        let kk: Vec<f32> = k.to_vec().map_err(|e| anyhow!("k to_vec: {e:?}"))?;
+        let vv: Vec<f32> = v.to_vec().map_err(|e| anyhow!("v to_vec: {e:?}"))?;
+        self.stats.record_d2h(
+            t1.elapsed().as_secs_f64(),
+            ((kk.len() + vv.len()) * std::mem::size_of::<f32>()) as u64,
+            (logits.len() * std::mem::size_of::<f32>()) as u64,
+        );
+        let want = batch * window * vocab;
+        if logits.len() != want {
+            bail!("logits len {} != expected {}", logits.len(), want);
+        }
+        self.apply_kv(cache, kk, vv, window, widths.as_deref())?;
+        Ok(StepOut { logits, batch, window, vocab, widths })
     }
 
     /// Fold an execution's KV output back into the host cache according to
@@ -406,12 +585,7 @@ impl Runtime {
                 None => cache.scatter_window(&k, &v, window)?,
             },
         }
-        {
-            let dt = t0.elapsed().as_secs_f64();
-            let mut st = self.stats.borrow_mut();
-            st.host_copy_s += dt;
-            st.kv_d2h_s += dt;
-        }
+        self.stats.record_d2h(t0.elapsed().as_secs_f64(), 0, 0);
         Ok(())
     }
 
@@ -433,11 +607,7 @@ impl Runtime {
         let tup = out[0][0]
             .to_literal_sync()
             .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-        {
-            let mut st = self.stats.borrow_mut();
-            st.executions += 1;
-            st.execute_s += t0.elapsed().as_secs_f64();
-        }
+        self.stats.record_execute(t0.elapsed().as_secs_f64());
         let t1 = Instant::now();
         let (lg, k, v) = tup
             .to_tuple3()
@@ -445,14 +615,11 @@ impl Runtime {
         let logits: Vec<f32> = lg.to_vec().map_err(|e| anyhow!("logits to_vec: {e:?}"))?;
         let kk: Vec<f32> = k.to_vec().map_err(|e| anyhow!("k to_vec: {e:?}"))?;
         let vv: Vec<f32> = v.to_vec().map_err(|e| anyhow!("v to_vec: {e:?}"))?;
-        {
-            let dt = t1.elapsed().as_secs_f64();
-            let mut st = self.stats.borrow_mut();
-            st.host_copy_s += dt;
-            st.kv_d2h_s += dt;
-            st.logits_d2h_bytes += (logits.len() * std::mem::size_of::<f32>()) as u64;
-            st.kv_d2h_bytes += ((kk.len() + vv.len()) * std::mem::size_of::<f32>()) as u64;
-        }
+        self.stats.record_d2h(
+            t1.elapsed().as_secs_f64(),
+            ((kk.len() + vv.len()) * std::mem::size_of::<f32>()) as u64,
+            (logits.len() * std::mem::size_of::<f32>()) as u64,
+        );
         let want = batch * window * info.vocab;
         if logits.len() != want {
             bail!("logits len {} != expected {}", logits.len(), want);
@@ -503,5 +670,47 @@ mod tests {
         }
         assert_eq!(out.row_window(1), 4);
         assert_eq!(ragged_out().row_window(1), 1);
+    }
+
+    #[test]
+    fn concurrent_staging_loses_no_increments() {
+        // REGRESSION: RuntimeStats used to live in a RefCell and assume
+        // single-threaded mutation; the overlapped round accounts round
+        // R+1's h2d staging while round R's d2h readback is still being
+        // recorded. Hammer the directional counters from many threads and
+        // require exact totals — a lost fetch_add fails the equality.
+        let st = RuntimeStats::default();
+        const THREADS: u64 = 8;
+        const ITERS: u64 = 1000;
+        std::thread::scope(|s| {
+            for t in 0..THREADS {
+                let st = &st;
+                s.spawn(move || {
+                    for i in 0..ITERS {
+                        // 1ms per op keeps ns→s rounding exact.
+                        st.record_h2d(1e-3, t * ITERS + i);
+                        st.record_d2h(1e-3, 2, 1);
+                        if i % 4 == 0 {
+                            st.record_execute(1e-3);
+                        } else {
+                            st.record_execute_wait(1e-3);
+                        }
+                    }
+                });
+            }
+        });
+        let snap = st.snapshot();
+        // Sum over t of ITERS*t*ITERS + (0+1+..+ITERS-1)
+        let h2d_bytes: u64 =
+            (0..THREADS).map(|t| t * ITERS * ITERS + ITERS * (ITERS - 1) / 2).sum();
+        assert_eq!(snap.kv_h2d_bytes, h2d_bytes, "lost h2d byte increments");
+        assert_eq!(snap.kv_d2h_bytes, 2 * THREADS * ITERS, "lost d2h byte increments");
+        assert_eq!(snap.logits_d2h_bytes, THREADS * ITERS);
+        assert_eq!(snap.executions, THREADS * ITERS / 4);
+        let n = (THREADS * ITERS) as f64;
+        assert!((snap.kv_h2d_s - n * 1e-3).abs() < 1e-9, "lost h2d seconds");
+        assert!((snap.kv_d2h_s - n * 1e-3).abs() < 1e-9, "lost d2h seconds");
+        assert!((snap.execute_s - n * 1e-3).abs() < 1e-9, "lost execute seconds");
+        assert!((snap.host_copy_s - 2.0 * n * 1e-3).abs() < 1e-9);
     }
 }

@@ -7,6 +7,6 @@ pub mod client;
 pub mod kv;
 pub mod manifest;
 
-pub use client::{Runtime, RuntimeStats, StepOut};
+pub use client::{InFlightStep, Runtime, RuntimeStats, RuntimeStatsSnapshot, StepOut};
 pub use kv::{KvCache, KvRow};
 pub use manifest::{ArtifactKey, FnKind, KvProtocol, Manifest, ModelInfo};

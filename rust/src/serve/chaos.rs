@@ -22,6 +22,10 @@
 //!   live slot ([`SpecError::KvRowInvalid`] → quarantine + re-prefill),
 //! * `fork` — per-fork probability a racing replica fork fails
 //!   ([`SpecError::ForkFailed`], the race degrades, the primary lives),
+//! * `prefetch` — per-round probability the overlapped engine's prefetch
+//!   thread dies ([`SpecError::PrefetchDead`], batch-wide Degradable:
+//!   overlap is an accelerator, so recovery is "lose the overlap, keep
+//!   every token" — the ladder degrades and re-promotes, never aborts),
 //! * `pause` — every `pause` rounds a mid-wave weight-update pause
 //!   fires: the round boundary has already drained verification, so the
 //!   pause just invalidates every draft-side cache
@@ -42,6 +46,7 @@ const SITE_DRAFTER: u64 = 0x4452_4654;
 const SITE_SLOT: u64 = 0x534C_4F54;
 const SITE_FORK: u64 = 0x464F_524B;
 const SITE_PICK: u64 = 0x5049_434B;
+const SITE_PREFETCH: u64 = 0x5052_4654;
 
 /// A deterministic fault-injection schedule (see module docs).
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -55,6 +60,8 @@ pub struct FaultPlan {
     pub slot: f64,
     /// Per-fork probability a racing replica fork fails.
     pub fork: f64,
+    /// Per-round probability the overlapped prefetch thread dies.
+    pub prefetch: f64,
     /// Weight-update pause period in rounds (0 = never).
     pub pause: u64,
 }
@@ -92,6 +99,7 @@ impl FaultPlan {
                 "drafter" => p.drafter = rate("drafter", v)?,
                 "slot" => p.slot = rate("slot", v)?,
                 "fork" => p.fork = rate("fork", v)?,
+                "prefetch" => p.prefetch = rate("prefetch", v)?,
                 "pause" => {
                     p.pause = v
                         .trim()
@@ -100,7 +108,7 @@ impl FaultPlan {
                 }
                 other => bail!(
                     "unknown chaos key `{other}` (expected seed, step, drafter, slot, \
-                     fork or pause)"
+                     fork, prefetch or pause)"
                 ),
             }
         }
@@ -110,15 +118,15 @@ impl FaultPlan {
     /// Compact one-line rendering for serve summaries and bench JSON.
     pub fn label(&self) -> String {
         format!(
-            "seed={} step={} drafter={} slot={} fork={} pause={}",
-            self.seed, self.step, self.drafter, self.slot, self.fork, self.pause
+            "seed={} step={} drafter={} slot={} fork={} prefetch={} pause={}",
+            self.seed, self.step, self.drafter, self.slot, self.fork, self.prefetch, self.pause
         )
     }
 
     /// Does this plan inject anything at all?
     pub fn is_active(&self) -> bool {
         self.step > 0.0 || self.drafter > 0.0 || self.slot > 0.0 || self.fork > 0.0
-            || self.pause > 0
+            || self.prefetch > 0.0 || self.pause > 0
     }
 }
 
@@ -135,6 +143,7 @@ pub struct ChaosEngine<E: ServeEngine> {
     pub injected_drafter: u64,
     pub injected_slot: u64,
     pub injected_fork: u64,
+    pub injected_prefetch: u64,
     /// Weight-update pauses fired (each one invalidated draft state).
     pub pauses: u64,
 }
@@ -150,6 +159,7 @@ impl<E: ServeEngine> ChaosEngine<E> {
             injected_drafter: 0,
             injected_slot: 0,
             injected_fork: 0,
+            injected_prefetch: 0,
             pauses: 0,
         }
     }
@@ -157,6 +167,7 @@ impl<E: ServeEngine> ChaosEngine<E> {
     /// Faults injected across all sites.
     pub fn injected(&self) -> u64 {
         self.injected_step + self.injected_drafter + self.injected_slot + self.injected_fork
+            + self.injected_prefetch
     }
 
     /// The deterministic draw stream for `(site, n)`: same plan seed,
@@ -236,6 +247,15 @@ impl<E: ServeEngine> ServeEngine for ChaosEngine<E> {
                 .into());
             }
         }
+        if self.plan.prefetch > 0.0
+            && self.stream(SITE_PREFETCH, n).bernoulli(self.plan.prefetch)
+        {
+            self.injected_prefetch += 1;
+            return Err(SpecError::PrefetchDead {
+                detail: format!("chaos injection, round {n}"),
+            }
+            .into());
+        }
         self.inner.round(rep)
     }
 
@@ -283,11 +303,12 @@ impl<E: ServeEngine> ServeEngine for ChaosEngine<E> {
     }
 
     fn collect_metrics(&self, reg: &mut crate::obs::MetricRegistry) {
-        let sites: [(&str, u64); 4] = [
+        let sites: [(&str, u64); 5] = [
             ("step", self.injected_step),
             ("drafter", self.injected_drafter),
             ("slot", self.injected_slot),
             ("fork", self.injected_fork),
+            ("prefetch", self.injected_prefetch),
         ];
         for (site, v) in sites {
             reg.counter_l(
@@ -387,6 +408,22 @@ mod tests {
         }
         assert_eq!(e.pauses, 3, "rounds 3, 6, 9");
         assert_eq!(e.inner.invalidations, 3, "each pause must invalidate draft state");
+    }
+
+    #[test]
+    fn prefetch_faults_are_batchwide_degradable() {
+        let plan = FaultPlan::parse("seed=2,prefetch=1").unwrap();
+        assert!(plan.is_active());
+        assert!(plan.label().contains("prefetch=1"));
+        let mut e = ChaosEngine::new(SyntheticEngine::new(2, 5).with_overlap(), plan);
+        e.admit(0, Request::new(1, vec![1, 2], 8), SlotPlan::vanilla()).unwrap();
+        let mut rep = EngineReport::default();
+        let err = e.round(&mut rep).unwrap_err();
+        let se = err.downcast_ref::<SpecError>().expect("typed");
+        assert_eq!(se.severity(), crate::engine::Severity::Degradable);
+        assert_eq!(se.slot(), None, "a dead prefetch thread is batch-wide, not slot-scoped");
+        assert_eq!(e.injected_prefetch, 1);
+        assert_eq!(e.injected(), 1);
     }
 
     #[test]

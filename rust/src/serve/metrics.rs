@@ -83,6 +83,13 @@ pub struct ServeMetrics {
     /// a typed reason. Recovery guarantees this stays 0; the chaos bench
     /// and fault-tolerance tests assert it.
     pub lost: u64,
+    /// Overlapped-round prefetched draft chunks consumed in place of a
+    /// serialized in-round draft — the rounds whose draft time the
+    /// overlap engine hid behind the previous fused verify step.
+    pub prefetch_hits: u64,
+    /// Prefetch mirrors rolled back because the full-accept prediction
+    /// mis-speculated (a partial accept landed instead).
+    pub prefetch_rollbacks: u64,
     /// Tokens drafted, keyed by the drafting slot's plan-method label
     /// (window-0 slots count under "vanilla" with 0 drafted). Algorithm 2
     /// keys off per-method acceptance; these make it visible outside the
@@ -122,6 +129,8 @@ impl Default for ServeMetrics {
             requeues: 0,
             recoveries: 0,
             lost: 0,
+            prefetch_hits: 0,
+            prefetch_rollbacks: 0,
             method_drafted: BTreeMap::new(),
             method_accepted: BTreeMap::new(),
             queue_wait: Welford::default(),
@@ -253,7 +262,7 @@ impl ServeMetrics {
     /// Monotone (counter-typed) series — the single enumeration both
     /// [`ServeMetrics::to_json`] and [`ServeMetrics::register`] render
     /// from, so the JSON summary and the `/metrics` scrape cannot drift.
-    fn counter_series(&self) -> [(&'static str, u64); 21] {
+    fn counter_series(&self) -> [(&'static str, u64); 23] {
         [
             ("admitted", self.admitted),
             ("completed", self.completed),
@@ -276,6 +285,8 @@ impl ServeMetrics {
             ("requeues", self.requeues),
             ("recoveries", self.recoveries),
             ("lost", self.lost),
+            ("prefetch_hits", self.prefetch_hits),
+            ("prefetch_rollbacks", self.prefetch_rollbacks),
         ]
     }
 
@@ -362,6 +373,8 @@ fn serve_help(k: &str) -> &'static str {
         "requeues" => "Quarantined requests re-enqueued front-of-lane",
         "recoveries" => "Quarantined requests re-admitted via re-prefill",
         "lost" => "Requests lost without completion or typed rejection",
+        "prefetch_hits" => "Rounds served from a prefetched draft chunk",
+        "prefetch_rollbacks" => "Prefetch mirrors rolled back on mis-speculation",
         "race_wins_by_method" => "Replica wins per draft method",
         "method_drafted" => "Tokens drafted per plan method",
         "method_accepted" => "Tokens accepted per plan method",
@@ -507,6 +520,21 @@ mod tests {
         assert_eq!(j.get("requeues").as_f64(), Some(1.0));
         assert_eq!(j.get("recoveries").as_f64(), Some(1.0));
         assert_eq!(j.get("lost").as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn prefetch_counters_in_json_snapshot() {
+        let mut m = ServeMetrics::new();
+        m.prefetch_hits = 9;
+        m.prefetch_rollbacks = 2;
+        let j = m.to_json(1.0);
+        assert_eq!(j.get("prefetch_hits").as_f64(), Some(9.0));
+        assert_eq!(j.get("prefetch_rollbacks").as_f64(), Some(2.0));
+        // and through the registry renderer under the shared prefix
+        let mut reg = MetricRegistry::new();
+        m.register(&mut reg, 1.0);
+        assert_eq!(reg.find("specactor_serve_prefetch_hits", &[]), Some(9.0));
+        assert_eq!(reg.find("specactor_serve_prefetch_rollbacks", &[]), Some(2.0));
     }
 
     #[test]

@@ -315,6 +315,84 @@ fn decoupled_two_model_families_on_one_thread_equal_vanilla() {
     assert!(rep.drafted_tokens > 0);
 }
 
+/// Overlapped execution (EngineConfig.overlap): the prefetch thread
+/// drafts round R+1 behind round R's fused verify and the verify step is
+/// split into submit/await halves — and the token output must still be
+/// IDENTICAL to vanilla, in both verify disciplines. Under the fused
+/// discipline the prefetcher must actually fire (hits > 0) and must
+/// never die (deaths == 0): the overlap is exercised, not vacuously
+/// bypassed.
+#[test]
+fn overlapped_engine_equals_vanilla_in_both_disciplines() {
+    let rt = Runtime::load(art()).unwrap();
+    let want = vanilla_outputs(&rt, 3, 20);
+    let plans = vec![
+        SlotPlan::decoupled(DraftMethod::Sam, 1),
+        SlotPlan::decoupled(DraftMethod::Ngram, 4),
+        SlotPlan::vanilla(),
+    ];
+    for discipline in [VerifyDiscipline::Fused, VerifyDiscipline::Grouped] {
+        let cfg = EngineConfig { overlap: true, verify: discipline, ..Default::default() };
+        let mut w =
+            Worker::new_with_plans(&rt, cfg, mk_requests(&rt, 3, 20), plans.clone()).unwrap();
+        let rep = w.rollout_planned().unwrap();
+        assert_eq!(w.outputs(), want, "{discipline:?}: overlapped rollout diverged");
+        assert_eq!(rep.prefetch_deaths, 0, "{discipline:?}: prefetch thread died");
+        if discipline == VerifyDiscipline::Fused {
+            assert!(rep.prefetch_hits > 0, "fused overlap never consumed a prefetched chunk");
+        }
+    }
+}
+
+/// Forced mis-speculation: a single low-acceptance decoupled n-gram slot
+/// at w=4 partial-accepts constantly, so every held full-accept
+/// prediction the prefetcher made gets invalidated — the rollback
+/// (frozen-chain truncate + drafter replay) path must run and must not
+/// cost a single token.
+#[test]
+fn overlapped_prefetch_rollback_is_lossless() {
+    let rt = Runtime::load(art()).unwrap();
+    let want = vanilla_outputs(&rt, 1, 24);
+    let cfg = EngineConfig { overlap: true, ..Default::default() };
+    let mut w = Worker::new_with_plans(
+        &rt,
+        cfg,
+        mk_requests(&rt, 1, 24),
+        vec![SlotPlan::decoupled(DraftMethod::Ngram, 4)],
+    )
+    .unwrap();
+    let rep = w.rollout_planned().unwrap();
+    assert_eq!(w.outputs(), want, "rollback path diverged from vanilla");
+    assert!(
+        rep.prefetch_rollbacks > 0,
+        "mis-speculation never exercised the prefetch rollback path"
+    );
+    assert_eq!(rep.prefetch_deaths, 0);
+}
+
+/// Overlap + mid-rollout plan switches: hot-swapping a slot's method and
+/// window invalidates the prefetch mirror (a stale chunk for the old
+/// drafter must never be consumed) — set_plan resets it, and the output
+/// stays vanilla-identical.
+#[test]
+fn overlapped_mid_rollout_switch_is_lossless() {
+    let rt = Runtime::load(art()).unwrap();
+    let want = vanilla_outputs(&rt, 2, 20);
+    let cfg = EngineConfig { overlap: true, ..Default::default() };
+    let plans =
+        vec![SlotPlan::decoupled(DraftMethod::Sam, 2), SlotPlan::decoupled(DraftMethod::Ngram, 3)];
+    let mut w =
+        Worker::new_with_plans(&rt, cfg, mk_requests(&rt, 2, 20), plans).unwrap();
+    let mut rep = EngineReport::default();
+    for _ in 0..3 {
+        assert!(w.round(&mut rep).unwrap() > 0, "batch drained before the switch");
+    }
+    w.set_plan(0, SlotPlan::decoupled(DraftMethod::Ngram, 4)).unwrap();
+    w.set_plan(1, SlotPlan::decoupled(DraftMethod::Sam, 1)).unwrap();
+    w.rollout_planned().unwrap();
+    assert_eq!(w.outputs(), want, "overlapped mid-rollout switch diverged from vanilla");
+}
+
 #[test]
 fn speculation_actually_accelerates_iterations() {
     // Not a wallclock assertion (CPU interpret mode) but an algorithmic

@@ -85,6 +85,51 @@ fn scrape_snapshot_reconciles_with_to_json_field_for_field() {
     assert!(rendered.contains("specactor_race_started"), "race telemetry missing");
 }
 
+/// Overlapped serving: the engine's prefetch ledger
+/// (`specactor_engine_prefetch_{hits,rollbacks}` plus
+/// `specactor_engine_draft_hidden_seconds_total`) and the serve-layer
+/// mirrors under `specactor_serve_` must agree on one scrape, and the
+/// chaos prefetch site must surface its own injection counter.
+#[test]
+fn overlap_series_reconcile_between_engine_and_serve_ledgers() {
+    let engine = SyntheticEngine::new(8, 99).with_overlap();
+    let mut b =
+        Batcher::new(engine, 16, Replanner::synthetic(), true).with_overlap().with_tracing(4096);
+    let arrivals: Vec<(f64, Request, Priority)> =
+        (0..6u64).map(|i| (i as f64 * 0.005, req(i, 24), Priority::Batch)).collect();
+    let rep = drive_open_loop(&mut b, arrivals, Some(1.0e-3)).expect("serve run");
+    let reg = b.collect_registry(rep.elapsed_s);
+
+    let hits = reg.find("specactor_engine_prefetch_hits", &[]).expect("engine prefetch_hits");
+    assert!(hits > 0.0, "overlapped run must land prefetch hits");
+    assert_eq!(
+        reg.find(&format!("{PROM_PREFIX}prefetch_hits"), &[]),
+        Some(hits),
+        "serve mirror diverges from the engine prefetch-hit ledger"
+    );
+    let rb = reg
+        .find("specactor_engine_prefetch_rollbacks", &[])
+        .expect("engine prefetch_rollbacks");
+    assert_eq!(
+        reg.find(&format!("{PROM_PREFIX}prefetch_rollbacks"), &[]),
+        Some(rb),
+        "serve mirror diverges from the engine rollback ledger"
+    );
+    let hidden = reg
+        .find("specactor_engine_draft_hidden_seconds_total", &[])
+        .expect("draft_hidden_seconds_total");
+    assert!(hidden > 0.0, "hidden-draft seconds must accrue on hits");
+    assert_format_clean(&reg.render());
+
+    // prefetch faults get their own chaos injection site on the scrape
+    let (cb, wall_s) = served_batcher("seed=5,prefetch=0.3");
+    let creg = cb.collect_registry(wall_s);
+    let injected = creg
+        .find("specactor_chaos_injected", &[("site", "prefetch")])
+        .expect("prefetch chaos site missing from scrape");
+    assert!(injected > 0.0, "prefetch=0.3 over a full run must inject");
+}
+
 /// Split a sample's series part (`name{k="v",...}`) into the metric name
 /// and its label pairs, honouring `\\`, `\"` and `\n` escapes inside
 /// label values.

@@ -127,13 +127,12 @@ fn executable_cache_hits() {
     let mut cache = rt.new_cache(&m.target, 1).unwrap();
     rt.prefill(&m.target, &toks, &mut cache).unwrap();
     cache.lens[0] = (m.prompt_len - 1) as i32;
-    let compiles_before = rt.stats.borrow().compiles;
+    let compiles_before = rt.stats.compiles();
     for _ in 0..3 {
         let _ = rt.step(&m.target, &[5], 1, &mut cache).unwrap();
         cache.lens[0] += 1;
     }
-    let st = rt.stats.borrow();
-    assert_eq!(st.compiles, compiles_before + 1, "step executable recompiled");
+    assert_eq!(rt.stats.compiles(), compiles_before + 1, "step executable recompiled");
 }
 
 /// KV row migration across caches preserves generation (KVCache scale).

@@ -76,8 +76,14 @@ fn serve_outputs_cfg(
     spec: bool,
 ) -> Vec<Vec<i32>> {
     let n = reqs.len();
+    // an overlapped engine gets the overlapped tick order too — exactly
+    // what `serve --overlap` wires up
+    let overlap = cfg.overlap;
     let worker = Worker::with_capacity(rt, cfg, capacity).unwrap();
     let mut b = Batcher::new(worker, 2 * n.max(1), replan, spec);
+    if overlap {
+        b = b.with_overlap();
+    }
     if let Some(rc) = reconfig {
         b = b.with_reconfig(rc);
     }
@@ -235,6 +241,48 @@ fn fused_serving_is_lossless_and_step_lean() {
         steps[0],
         steps[1]
     );
+}
+
+/// Overlapped serving (`serve --overlap`): the worker prefetches
+/// next-round drafts behind the fused verify, the verify step runs in
+/// submit/await halves, and the batcher runs its bookkeeping after the
+/// round — and the staggered schedule must still be token-identical to
+/// static vanilla under BOTH verify disciplines, with the prefetch
+/// thread surviving the whole run.
+#[test]
+fn overlapped_serving_is_lossless_in_both_disciplines() {
+    let rt = Runtime::load(&art()).unwrap();
+    let n = 4;
+    let want = vanilla_outputs(&rt, n, 14);
+    for d in [VerifyDiscipline::Fused, VerifyDiscipline::Grouped] {
+        let cfg = EngineConfig { verify: d, overlap: true, ..Default::default() };
+        let replan = replanner(&rt, "ngram", 0.6);
+        let got =
+            serve_outputs_cfg(&rt, cfg, replan, None, n, mk_requests(&rt, n, 14), 2, true);
+        assert_eq!(got, want, "{d:?} overlapped serving diverged from static vanilla");
+    }
+}
+
+/// Overlap + Algorithm 2: mid-serve plan rewrites (which can flip a slot
+/// to decoupled discipline, making it prefetch-eligible, and back) must
+/// reset the prefetch mirror every time — priced with the overlap
+/// cost-model term, outputs still static-vanilla-identical.
+#[test]
+fn overlapped_reconfigured_serving_is_lossless() {
+    let rt = Runtime::load(&art()).unwrap();
+    let n = 4;
+    let want = vanilla_outputs(&rt, n, 14);
+    let replan = replanner(&rt, "ngram", 0.6);
+    let rc = Reconfigurator::for_manifest(
+        &rt.manifest,
+        CostModel::paper_32b().with_overlap_eff(0.6),
+        3,
+        2,
+    );
+    let cfg = EngineConfig { overlap: true, ..Default::default() };
+    let got =
+        serve_outputs_cfg(&rt, cfg, replan, Some(rc), n, mk_requests(&rt, n, 14), 2, true);
+    assert_eq!(got, want, "overlapped+reconfigured serving diverged from static vanilla");
 }
 
 /// The serve loop must actually exercise continuous batching: with fewer
