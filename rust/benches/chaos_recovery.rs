@@ -54,6 +54,7 @@ fn run(capacity: usize, n: usize, budget: usize, seed: u64, rate: f64) -> RunOut
         slot: 0.2 * rate,
         fork: rate,
         pause: if rate > 0.0 { 25 } else { 0 },
+        ..FaultPlan::default()
     };
     let engine = ChaosEngine::new(SyntheticEngine::new(capacity, seed), plan);
     let mut b = Batcher::new(engine, n, Replanner::synthetic(), true);

@@ -1,0 +1,191 @@
+//! Cluster failover sweep: the SAME deterministic one-burst workload is
+//! served by 1-, 2- and 3-worker clusters, then the 3-worker cell is
+//! re-run with worker 0 killed mid-wave (at half the fault-free tick
+//! count). Results go to `BENCH_cluster.json`.
+//!
+//! Hermetic: plain [`SyntheticEngine`] workers under a [`Cluster`] on
+//! virtual 1-second ticks, so throughput is tokens per cluster tick and
+//! every cell is exactly reproducible. In-bench assertions pin the
+//! ISSUE's acceptance criteria: every cell completes the full workload
+//! with zero lost, zero rejected and zero duplicated requests, every
+//! finished sequence is token-identical to the fault-free vanilla
+//! stream, adding workers never slows the wave down, and the mid-wave
+//! kill keeps at least (N-1)/N of the fault-free 3-worker throughput —
+//! losing a third of the fleet is a capacity tax, never a correctness
+//! one.
+
+use std::path::Path;
+
+use specactor::engine::Request;
+use specactor::serve::{Batcher, Cluster, Priority, Replanner, SyntheticEngine, WorkerHealth};
+use specactor::util::benchkit::Bench;
+use specactor::util::cli::Args;
+use specactor::util::Json;
+
+struct RunOut {
+    completed: usize,
+    rejected: u64,
+    lost: u64,
+    tokens: u64,
+    ticks: f64,
+    tok_per_tick: f64,
+    deaths: u64,
+    evacuations: u64,
+    frames: u64,
+    retries: u64,
+}
+
+/// Fault-free oracle: the synthetic stream is a pure function of
+/// (id, position) — migration and failover may never change it.
+fn expected_seq(id: u64, prompt: &[i32], budget: usize) -> Vec<i32> {
+    let mut seq = prompt.to_vec();
+    for _ in 0..budget {
+        let t = (id as i32).wrapping_mul(31).wrapping_add(seq.len() as i32) & 0x7fff;
+        seq.push(t);
+    }
+    seq
+}
+
+fn cluster(workers: usize, capacity: usize, seed: u64) -> Cluster<SyntheticEngine> {
+    let batchers = (0..workers)
+        .map(|_| {
+            Batcher::new(SyntheticEngine::new(capacity, seed), 64, Replanner::synthetic(), true)
+        })
+        .collect();
+    Cluster::new(batchers, 64)
+}
+
+/// Serve the burst to completion; `kill_at` kills worker 0 once that
+/// many ticks have elapsed (None = fault-free).
+fn run(workers: usize, capacity: usize, n: usize, budget: usize, kill_at: Option<u64>) -> RunOut {
+    let mut c = cluster(workers, capacity, 7);
+    for i in 0..n as u64 {
+        assert!(c.enqueue(Request::new(i, vec![0; 8], budget), Priority::Batch, 0.0));
+    }
+    let mut now = 0.0f64;
+    let mut ticks = 0u64;
+    let mut killed = false;
+    while !c.idle() {
+        if let Some(k) = kill_at {
+            if !killed && ticks >= k {
+                c.kill_worker(0).expect("mid-wave kill with live survivors");
+                killed = true;
+            }
+        }
+        c.tick(now).expect("failover must be absorbed, not surfaced");
+        now += 1.0; // virtual 1 s per tick: throughput in cluster ticks
+        ticks += 1;
+        assert!(ticks < 100_000, "cluster serve loop did not converge");
+    }
+    let mut fin = c.drain_finished();
+    fin.sort_by_key(|f| f.req.id);
+    let ids: Vec<u64> = fin.iter().map(|f| f.req.id).collect();
+    assert_eq!(ids, (0..n as u64).collect::<Vec<_>>(), "lost or duplicated requests");
+    for f in &fin {
+        assert_eq!(
+            f.req.seq,
+            expected_seq(f.req.id, &f.req.prompt, budget),
+            "request {} drifted from the fault-free stream",
+            f.req.id
+        );
+    }
+    if killed {
+        assert_eq!(c.health()[0], WorkerHealth::Dead, "the killed worker must stay dead");
+        assert_eq!(c.alive(), workers - 1, "the survivors must degrade to N-1");
+    }
+    let lost: u64 = c.workers().iter().map(|b| b.metrics.lost).sum();
+    let tokens: u64 = c.workers().iter().map(|b| b.metrics.tokens).sum();
+    assert_eq!(c.metrics.dup_completions, 0, "race/migration duplicated a completion");
+    RunOut {
+        completed: fin.len(),
+        rejected: c.rejected(),
+        lost,
+        tokens,
+        ticks: ticks as f64,
+        tok_per_tick: tokens as f64 / (ticks as f64).max(1.0),
+        deaths: c.metrics.worker_deaths,
+        evacuations: c.metrics.evacuations.iter().sum(),
+        frames: c.transport.frames,
+        retries: c.transport.retries,
+    }
+}
+
+fn main() {
+    let mut args = Args::from_env().unwrap();
+    let capacity = args.opt_parse("capacity", 4usize);
+    let n = args.opt_parse("requests", 18usize);
+    let budget = args.opt_parse("budget", 32usize);
+    let json_out = args.opt("json-out", "BENCH_cluster.json");
+    args.finish().unwrap();
+
+    let mut bench = Bench::new(0, 1);
+    let mut extra: Vec<Vec<(&str, Json)>> = Vec::new();
+    let mut fault_free = vec![0.0f64; 4]; // tok/tick by worker count
+    let mut ff_ticks = vec![0u64; 4]; // fault-free ticks by worker count
+
+    println!(
+        "{:<26} {:>5} {:>7} {:>9} {:>7} {:>6} {:>7}",
+        "cell", "done", "ticks", "tok/tick", "deaths", "evacs", "frames"
+    );
+    let mut cells: Vec<(String, usize, bool)> =
+        (1..=3usize).map(|w| (format!("cluster workers={w}"), w, false)).collect();
+    cells.push(("cluster workers=3 kill=mid".to_string(), 3, true));
+
+    for (name, workers, kill) in cells {
+        // kill worker 0 halfway through the fault-free 3-worker wave
+        let kill_at = if kill { Some((ff_ticks[3] / 2).max(1)) } else { None };
+        let r = run(workers, capacity, n, budget, kill_at);
+        assert_eq!(r.completed, n, "{name}: workload did not complete");
+        assert_eq!(r.rejected, 0, "{name}: requests were rejected");
+        assert_eq!(r.lost, 0, "{name}: requests were lost");
+        if kill_at.is_none() {
+            assert_eq!(r.deaths, 0, "{name}: fault-free cell saw a death");
+            fault_free[workers] = r.tok_per_tick;
+            ff_ticks[workers] = r.ticks as u64;
+            if workers > 1 {
+                assert!(
+                    r.tok_per_tick >= fault_free[workers - 1],
+                    "{name}: adding a worker slowed the wave down"
+                );
+            }
+        } else {
+            assert_eq!(r.deaths, 1, "{name}: exactly one worker must die");
+            assert!(r.evacuations >= 1, "{name}: the dead worker's slots never evacuated");
+            // the acceptance criterion: a mid-wave kill of 1-of-3 keeps
+            // at least (N-1)/N of the fault-free 3-worker throughput
+            let floor = fault_free[3] * 2.0 / 3.0;
+            assert!(
+                r.tok_per_tick >= floor,
+                "mid-wave kill kept only {:.0}% of fault-free throughput",
+                100.0 * r.tok_per_tick / fault_free[3]
+            );
+        }
+        println!(
+            "{:<26} {:>5} {:>7.0} {:>9.2} {:>7} {:>6} {:>7}",
+            name, r.completed, r.ticks, r.tok_per_tick, r.deaths, r.evacuations, r.frames
+        );
+        bench.record(&name, r.ticks);
+        extra.push(vec![
+            ("workers", Json::num(workers as f64)),
+            ("mid_wave_kill", Json::num(if kill_at.is_some() { 1.0 } else { 0.0 })),
+            ("completed", Json::num(r.completed as f64)),
+            ("rejected", Json::num(r.rejected as f64)),
+            ("lost", Json::num(r.lost as f64)),
+            ("tokens", Json::num(r.tokens as f64)),
+            ("ticks", Json::num(r.ticks)),
+            ("tok_per_tick", Json::num(r.tok_per_tick)),
+            ("worker_deaths", Json::num(r.deaths as f64)),
+            ("evacuations", Json::num(r.evacuations as f64)),
+            ("transport_frames", Json::num(r.frames as f64)),
+            ("transport_retries", Json::num(r.retries as f64)),
+            (
+                "goodput_vs_fault_free",
+                Json::num(r.tok_per_tick / fault_free[workers].max(1e-12)),
+            ),
+        ]);
+    }
+    bench
+        .write_json(Path::new(&json_out), "cluster_failover_throughput", &extra)
+        .expect("write BENCH_cluster.json");
+    println!("wrote {json_out}");
+}

@@ -622,6 +622,42 @@ pub fn race_in_process(
     })
 }
 
+/// Pick the slot most worth racing ACROSS workers: among the engine's
+/// live, unfinished slots that are not already race members, the one with
+/// the worst lifetime acceptance rate whose remaining budget still
+/// justifies a fork (`min_remaining`, the same floor [`RaceConfig`]
+/// applies in-process). The cluster supervisor calls this per source
+/// worker and forks the winner onto a *remote* idle slot — Algorithm 3's
+/// Fastest-of-N at fleet scale, where the spare capacity lives on a
+/// different runtime.
+pub fn cross_race_candidate<E: ServeEngine>(
+    engine: &E,
+    is_member: impl Fn(usize) -> bool,
+    min_remaining: usize,
+) -> Option<usize> {
+    let mut best: Option<(usize, f64)> = None;
+    for s in 0..engine.capacity() {
+        if is_member(s) || engine.is_done(s) {
+            continue;
+        }
+        let Some(r) = engine.request(s) else {
+            continue;
+        };
+        if r.done || r.budget.saturating_sub(r.generated()) < min_remaining {
+            continue;
+        }
+        let rate = r.accept.rate();
+        let better = match best {
+            None => true,
+            Some((_, b)) => rate < b,
+        };
+        if better {
+            best = Some((s, rate));
+        }
+    }
+    best.map(|(s, _)| s)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -61,8 +61,18 @@ pub enum SpecError {
     KvRowInvalid { slot: usize, detail: String },
     /// The slot's request bookkeeping is inconsistent with the engine.
     RequestStateInconsistent { slot: usize, detail: String },
+    /// A cross-worker migration frame failed integrity checks (bad
+    /// magic, version mismatch, truncation, checksum). Degradable: the
+    /// payload still exists at the source, so `RowTransport` retries
+    /// under exponential backoff before the cluster falls back to the
+    /// quarantine-style re-prefill path.
+    TransportCorrupt { detail: String },
     /// The engine itself failed (runtime step error, geometry).
     Worker { detail: String },
+    /// A cluster worker was declared dead — either a `Worker`-severity
+    /// fault propagated out of its serve loop or its heartbeat deadline
+    /// lapsed. The `Cluster` evacuates its slots instead of aborting.
+    WorkerDead { worker: usize },
 }
 
 impl SpecError {
@@ -73,11 +83,12 @@ impl SpecError {
             | SpecError::PrefetchDead { .. }
             | SpecError::DraftCatchUp { .. }
             | SpecError::ForkFailed { .. }
-            | SpecError::DraftRowCorrupt { .. } => Severity::Degradable,
+            | SpecError::DraftRowCorrupt { .. }
+            | SpecError::TransportCorrupt { .. } => Severity::Degradable,
             SpecError::KvRowInvalid { .. } | SpecError::RequestStateInconsistent { .. } => {
                 Severity::SlotFatal
             }
-            SpecError::Worker { .. } => Severity::WorkerFatal,
+            SpecError::Worker { .. } | SpecError::WorkerDead { .. } => Severity::WorkerFatal,
         }
     }
 
@@ -87,7 +98,9 @@ impl SpecError {
         match self {
             SpecError::DrafterDead { .. }
             | SpecError::PrefetchDead { .. }
-            | SpecError::Worker { .. } => None,
+            | SpecError::TransportCorrupt { .. }
+            | SpecError::Worker { .. }
+            | SpecError::WorkerDead { .. } => None,
             SpecError::ForkFailed { dst, .. } => Some(*dst),
             SpecError::DraftCatchUp { slot, .. }
             | SpecError::DraftRowCorrupt { slot, .. }
@@ -119,7 +132,11 @@ impl fmt::Display for SpecError {
             SpecError::RequestStateInconsistent { slot, detail } => {
                 write!(f, "request state inconsistent for slot {slot}: {detail}")
             }
+            SpecError::TransportCorrupt { detail } => {
+                write!(f, "migration frame corrupt: {detail}")
+            }
             SpecError::Worker { detail } => write!(f, "worker failure: {detail}"),
+            SpecError::WorkerDead { worker } => write!(f, "worker {worker} declared dead"),
         }
     }
 }
@@ -138,6 +155,7 @@ mod tests {
             SpecError::DraftCatchUp { slot: 1, detail: "x".into() },
             SpecError::ForkFailed { src: 0, dst: 2, detail: "x".into() },
             SpecError::DraftRowCorrupt { slot: 3, detail: "x".into() },
+            SpecError::TransportCorrupt { detail: "x".into() },
         ];
         assert!(deg.iter().all(|e| e.severity() == Severity::Degradable));
         let fatal = [
@@ -149,6 +167,7 @@ mod tests {
             SpecError::Worker { detail: "x".into() }.severity(),
             Severity::WorkerFatal
         );
+        assert_eq!(SpecError::WorkerDead { worker: 2 }.severity(), Severity::WorkerFatal);
     }
 
     #[test]
@@ -156,6 +175,8 @@ mod tests {
         assert_eq!(SpecError::DrafterDead { detail: "x".into() }.slot(), None);
         assert_eq!(SpecError::PrefetchDead { detail: "x".into() }.slot(), None);
         assert_eq!(SpecError::Worker { detail: "x".into() }.slot(), None);
+        assert_eq!(SpecError::TransportCorrupt { detail: "x".into() }.slot(), None);
+        assert_eq!(SpecError::WorkerDead { worker: 1 }.slot(), None);
         assert_eq!(
             SpecError::ForkFailed { src: 0, dst: 5, detail: "x".into() }.slot(),
             Some(5)

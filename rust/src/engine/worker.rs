@@ -37,7 +37,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::drafter::TokenDrafter;
 use crate::obs::{Phase, Tracer};
-use crate::runtime::{KvCache, Runtime};
+use crate::runtime::{KvCache, KvRow, Runtime};
 use crate::spec::{decode_one, verify_exact, AcceptanceStats, VerifyOutcome};
 use crate::util::rng::{position_rng, sample_logits};
 
@@ -661,6 +661,61 @@ impl<'rt> Worker<'rt> {
         self.plans[dst] = plan;
         self.slots[dst] = Some(req);
         self.prefetch_reset(dst);
+        Ok(())
+    }
+
+    /// Clone the slot's verified-prefix target KV row for cross-worker
+    /// migration (`runtime::transport` frames it alongside the request
+    /// state). Non-destructive — the slot keeps running: pair with
+    /// [`Worker::retire`] to move the request, or leave it in place to
+    /// stage a cross-worker race replica while the source verifies.
+    pub fn migration_row(&self, slot: usize) -> Result<KvRow> {
+        if slot >= self.bucket {
+            bail!("slot {slot} out of range (bucket {})", self.bucket);
+        }
+        if self.slots[slot].is_none() {
+            bail!("slot {slot} is empty");
+        }
+        self.cache.extract_row(slot)
+    }
+
+    /// Admit a migrated request whose verified-prefix KV row travelled
+    /// with it: insert the row directly — no prefill, no target catch-up
+    /// — and rebuild drafter state from the verified sequence, exactly
+    /// the destination half of [`Worker::fork`] but across runtimes. A
+    /// model drafter's cache is re-fed lazily through the next round's
+    /// catch-up (`consumed` stays 0); a token drafter re-indexes `seq`.
+    pub fn admit_with_row(
+        &mut self,
+        slot: usize,
+        req: Request,
+        plan: SlotPlan,
+        row: &KvRow,
+    ) -> Result<()> {
+        if slot >= self.bucket {
+            bail!("slot {slot} out of range (bucket {})", self.bucket);
+        }
+        if self.slots[slot].is_some() {
+            bail!("slot {slot} already occupied");
+        }
+        self.validate_request(&req)?;
+        self.validate_plan(&plan)?;
+        self.cache.insert_row(slot, row)?;
+        self.token_drafters[slot] = if plan.window > 0 {
+            if let Some(name) = plan.method.model_name() {
+                self.ensure_draft_model(name)?;
+                None
+            } else {
+                let mut td = plan.method.new_token_drafter().expect("token method");
+                td.extend(&req.seq);
+                Some(td)
+            }
+        } else {
+            None
+        };
+        self.plans[slot] = plan;
+        self.slots[slot] = Some(req);
+        self.prefetch_reset(slot);
         Ok(())
     }
 

@@ -22,8 +22,8 @@ use specactor::planner::costmodel::{AffineCost, CostModel};
 use specactor::planner::plan::{search, PlanInput};
 use specactor::runtime::Runtime;
 use specactor::serve::{
-    drive_open_loop, Batcher, ChaosEngine, FaultPlan, OpenLoopReport, Priority, Replanner,
-    ServeEngine, ServeMetrics, SyntheticEngine,
+    drive_cluster_open_loop, drive_open_loop, Batcher, ChaosEngine, Cluster, FaultPlan,
+    OpenLoopReport, Priority, Replanner, ServeEngine, ServeMetrics, SyntheticEngine, WorkerHealth,
 };
 use specactor::sim::{scaled, simulate_step, ArrivalProcess, Policy, TraceConfig};
 use specactor::util::benchkit::fmt_s;
@@ -53,10 +53,15 @@ fn usage() -> ! {
                              token-identical to the sequential default (A/B baseline)\n\
            --grouped-verify  pre-fusion A/B: one target step per (method, window)\n\
                              plan group instead of one fused ragged step per round\n\
-           --chaos SPEC      seeded fault injection, e.g.\n\
+           --workers N       serve with N engine workers behind one global queue\n\
+                             (heartbeat supervision, slot migration, WorkerFatal\n\
+                             recovery by evacuation; default 1 = single-worker loop)\n\
+           --chaos SPEC      seeded fault injection; sites (all optional):\n\
                              seed=7,step=0.05,drafter=0.02,slot=0.01,fork=0.05,\n\
-                             prefetch=0.02,pause=40\n\
-                             (per-round rates; pause = weight-update period in rounds)\n\
+                             prefetch=0.02,worker=0.01,transport=0.05,pause=40\n\
+                             (per-round rates; worker = kill a worker mid-wave, at\n\
+                             most once per worker; transport = flip a bit in a\n\
+                             migration frame; pause = weight-update period, rounds)\n\
            --metrics-addr A  serve Prometheus text at http://A/metrics (+ /healthz),\n\
                              e.g. 127.0.0.1:9464; snapshot-based, never blocks ticks\n\
            --trace-out FILE  write per-phase round spans + fault post-mortems as\n\
@@ -255,7 +260,7 @@ fn print_chaos_summary<E: ServeEngine>(ce: &ChaosEngine<E>) {
     }
     println!(
         "  chaos[{}]: {} faults injected ({} step, {} drafter, {} slot, {} fork, \
-         {} prefetch), {} pauses",
+         {} prefetch, {} worker, {} transport), {} pauses",
         ce.plan.label(),
         ce.injected(),
         ce.injected_step,
@@ -263,8 +268,79 @@ fn print_chaos_summary<E: ServeEngine>(ce: &ChaosEngine<E>) {
         ce.injected_slot,
         ce.injected_fork,
         ce.injected_prefetch,
+        ce.injected_worker,
+        ce.injected_transport,
         ce.pauses
     );
+}
+
+/// Post-run report for a `--workers N` cluster run: global accounting,
+/// the migration/evacuation/transport ledgers, and one line per worker.
+fn print_cluster_summary<E: ServeEngine>(
+    tag: &str,
+    c: &Cluster<ChaosEngine<E>>,
+    rep: &OpenLoopReport,
+) {
+    let cm = &c.metrics;
+    println!(
+        "serve[{tag} x{}]: offered {}  rejected {}  completed {}  in {} ({} ticks)",
+        c.len(),
+        rep.offered,
+        rep.rejected,
+        cm.completed,
+        fmt_s(rep.elapsed_s),
+        rep.ticks
+    );
+    let tokens: u64 = c.workers().iter().map(|b| b.metrics.tokens).sum();
+    println!(
+        "  tokens {}  sustained {:.1} tok/s  workers alive {}/{}",
+        tokens,
+        tokens as f64 / rep.elapsed_s.max(1e-9),
+        c.alive(),
+        c.len()
+    );
+    println!(
+        "  cluster: {} deaths, {} last-survivor holds, evacuations {} extracted / {} salvaged \
+         / {} requeued, {} dup completions dropped",
+        cm.worker_deaths,
+        cm.last_survivor_holds,
+        cm.evac_extracted,
+        cm.evac_salvaged,
+        cm.evac_requeued,
+        cm.dup_completions
+    );
+    println!(
+        "  transport: {} frames, {} corruptions, {} retries, {} escalations, {} backoff ticks",
+        c.transport.frames,
+        c.transport.corruptions,
+        c.transport.retries,
+        c.transport.escalations,
+        c.transport.backoff_ticks
+    );
+    if cm.cross_races > 0 || cm.stage_rollbacks > 0 {
+        println!(
+            "  cross-worker races: {} staged, {} remote wins, {} cancels, {} stage rollbacks",
+            cm.cross_races, cm.cross_race_wins, cm.cross_race_cancels, cm.stage_rollbacks
+        );
+    }
+    for (w, b) in c.workers().iter().enumerate() {
+        let health = match c.health()[w] {
+            WorkerHealth::Healthy => "healthy",
+            WorkerHealth::Suspect => "suspect",
+            WorkerHealth::Dead => "dead",
+        };
+        println!(
+            "  worker {w} [{health}]: completed {}  tokens {}  migrations {}>out {}<in  \
+             evacuated {}  heartbeat misses {}",
+            b.metrics.completed,
+            b.metrics.tokens,
+            cm.migrations_out[w],
+            cm.migrations_in[w],
+            cm.evacuations[w],
+            cm.heartbeat_misses[w]
+        );
+        print_chaos_summary(b.engine());
+    }
 }
 
 fn cmd_serve(mut args: Args) {
@@ -283,6 +359,7 @@ fn cmd_serve(mut args: Args) {
     let overlap = args.flag("overlap") && !vanilla;
     let grouped = args.flag("grouped-verify");
     let smoke = args.flag("smoke");
+    let workers_n = args.opt_parse("workers", 1usize).max(1);
     let chaos = args.opt_maybe("chaos");
     let metrics_addr = args.opt_maybe("metrics-addr");
     let trace_out = args.opt_maybe("trace-out");
@@ -322,6 +399,60 @@ fn cmd_serve(mut args: Args) {
             .enumerate()
             .map(|(i, &t)| (t, Request::new(i as u64, vec![0; 8], budget), prio_for(i as u64)))
             .collect();
+        if workers_n > 1 {
+            // multi-worker cluster: same seed on every engine (the
+            // sampling tape is keyed by (seed, request, position), so
+            // tokens are identical wherever a request lands); chaos gets
+            // a per-worker stream via `for_worker`
+            let batchers: Vec<_> = (0..workers_n)
+                .map(|w| {
+                    let mut e =
+                        SyntheticEngine::new(capacity.max(1), seed).with_discipline(discipline);
+                    if overlap {
+                        e = e.with_overlap();
+                    }
+                    let e = ChaosEngine::new(e, fplan.for_worker(w));
+                    let mut b = Batcher::new(e, queue_cap, Replanner::synthetic(), !vanilla);
+                    if overlap {
+                        b = b.with_overlap();
+                    }
+                    if reconfig_period > 0 && !vanilla {
+                        b = b.with_reconfig(Reconfigurator::synthetic(reconfig_period));
+                    }
+                    b
+                })
+                .collect();
+            let mut c = Cluster::new(batchers, queue_cap);
+            if fon_race && !vanilla {
+                c = c.with_cross_racing();
+            }
+            let exporter = metrics_addr.as_deref().map(|addr| {
+                MetricsExporter::bind(addr).unwrap_or_else(|e| {
+                    eprintln!("metrics exporter: {e:#}");
+                    exit(1)
+                })
+            });
+            if let Some(ex) = &exporter {
+                eprintln!("metrics: http://{}/metrics", ex.addr);
+            }
+            match drive_cluster_open_loop(&mut c, arrivals, Some(1.0e-3)) {
+                Ok(rep) => {
+                    let _ = c.drain_finished();
+                    print_cluster_summary("synthetic", &c, &rep);
+                    if let Some(ex) = &exporter {
+                        ex.publish(c.collect_registry().render());
+                    }
+                    if hold_ms > 0 {
+                        std::thread::sleep(std::time::Duration::from_millis(hold_ms));
+                    }
+                }
+                Err(e) => {
+                    eprintln!("serve --smoke --workers {workers_n} failed: {e}");
+                    exit(1);
+                }
+            }
+            return;
+        }
         let replan = Replanner::synthetic();
         let mut engine = SyntheticEngine::new(capacity.max(1), seed).with_discipline(discipline);
         if overlap {
@@ -387,11 +518,6 @@ fn cmd_serve(mut args: Args) {
         draft_seed: seed.wrapping_add(1000),
         overlap,
     };
-    let worker = Worker::with_capacity(&rt, ecfg, capacity).unwrap_or_else(|e| {
-        eprintln!("worker: {e}");
-        exit(1)
-    });
-    let worker = ChaosEngine::new(worker, fplan);
     // --drafter pins the served method (single-rung ladder); `auto` hands
     // method selection to the ladder over the full profiled table. Either
     // way the replanner's choice is APPLIED to slots on admission.
@@ -415,6 +541,72 @@ fn cmd_serve(mut args: Args) {
     } else {
         CostModel::paper_32b()
     };
+
+    if workers_n > 1 {
+        // multi-worker cluster over one runtime: every worker shares the
+        // artifacts and the sampling seed (tokens are position-keyed, so
+        // identical wherever a request lands); chaos streams split per
+        // worker. `--fon-race` here means CROSS-WORKER racing.
+        let batchers: Vec<_> = (0..workers_n)
+            .map(|w| {
+                let wk = Worker::with_capacity(&rt, ecfg.clone(), capacity).unwrap_or_else(|e| {
+                    eprintln!("worker {w}: {e}");
+                    exit(1)
+                });
+                let wk = ChaosEngine::new(wk, fplan.for_worker(w));
+                let replan = Replanner::for_manifest(&m, cost.clone(), profiled.clone(), 7);
+                let mut b = Batcher::new(wk, queue_cap, replan, !vanilla);
+                if overlap {
+                    b = b.with_overlap();
+                }
+                if reconfig_period > 0 && !vanilla {
+                    b = b.with_reconfig(Reconfigurator::for_manifest(
+                        &m,
+                        cost.clone(),
+                        7,
+                        reconfig_period,
+                    ));
+                }
+                b
+            })
+            .collect();
+        let mut c = Cluster::new(batchers, queue_cap);
+        if fon_race && !vanilla {
+            c = c.with_cross_racing();
+        }
+        let exporter = metrics_addr.as_deref().map(|addr| {
+            MetricsExporter::bind(addr).unwrap_or_else(|e| {
+                eprintln!("metrics exporter: {e:#}");
+                exit(1)
+            })
+        });
+        if let Some(ex) = &exporter {
+            eprintln!("metrics: http://{}/metrics", ex.addr);
+        }
+        match drive_cluster_open_loop(&mut c, arrivals, None) {
+            Ok(rep) => {
+                let _ = c.drain_finished();
+                print_cluster_summary("pjrt", &c, &rep);
+                if let Some(ex) = &exporter {
+                    ex.publish(c.collect_registry().render());
+                }
+                if hold_ms > 0 {
+                    std::thread::sleep(std::time::Duration::from_millis(hold_ms));
+                }
+            }
+            Err(e) => {
+                eprintln!("serve --workers {workers_n} failed: {e}");
+                exit(1);
+            }
+        }
+        return;
+    }
+
+    let worker = Worker::with_capacity(&rt, ecfg, capacity).unwrap_or_else(|e| {
+        eprintln!("worker: {e}");
+        exit(1)
+    });
+    let worker = ChaosEngine::new(worker, fplan);
     let replan = Replanner::for_manifest(&m, cost.clone(), profiled, 7);
     let mut b = Batcher::new(worker, queue_cap, replan, !vanilla);
     if overlap {

@@ -6,7 +6,9 @@
 pub mod client;
 pub mod kv;
 pub mod manifest;
+pub mod transport;
 
 pub use client::{InFlightStep, Runtime, RuntimeStats, RuntimeStatsSnapshot, StepOut};
 pub use kv::{KvCache, KvRow};
 pub use manifest::{ArtifactKey, FnKind, KvProtocol, Manifest, ModelInfo};
+pub use transport::{MigrationPayload, RowTransport, TRANSPORT_VERSION};

@@ -1,0 +1,520 @@
+//! `RowTransport`: framed serialization of a slot's migration payload
+//! for **cross-runtime** movement.
+//!
+//! In-process slot migration (admission catch-up, Fastest-of-N forks,
+//! quarantine re-prefill) moves a request plus its verified-prefix KV
+//! row through `KvCache::extract_row` / `insert_row` directly. A
+//! multi-worker [`Cluster`](crate::serve::cluster::Cluster) moves the
+//! same payload between *engines*, so it must survive a wire: this
+//! module frames a [`MigrationPayload`] into a length-prefixed,
+//! checksummed, versioned byte frame and decodes it back **byte-exact**
+//! (floats round-trip through their bit patterns, never through text).
+//!
+//! Frame layout (all little-endian):
+//!
+//! ```text
+//! offset 0   magic        u32   0x5350_5254 ("SPRT")
+//! offset 4   version      u16   TRANSPORT_VERSION
+//! offset 6   flags        u16   bit 0 = KV row present
+//! offset 8   payload_len  u64
+//! offset 16  payload      [payload_len bytes]
+//! ...        checksum     u64   FNV-1a over bytes [0, 16 + payload_len)
+//! ```
+//!
+//! Every integrity failure — bad magic, version mismatch, truncation,
+//! length overrun, checksum mismatch, or a payload that does not parse
+//! exactly — is a typed [`SpecError::TransportCorrupt`] (Degradable:
+//! the payload still exists at the source, so the cluster retries the
+//! transfer under [`RowTransport`]'s exponential-backoff budget before
+//! escalating to the quarantine-style re-prefill path). Decoding never
+//! panics on hostile bytes: every read is bounds-checked, exactly what
+//! the seeded `transport=p` chaos site exercises with random bit flips.
+
+use anyhow::Result;
+
+use crate::engine::{Request, SpecError};
+use crate::spec::AcceptanceStats;
+
+use super::kv::KvRow;
+
+/// Frame format version; bumped on any layout change. A frame with a
+/// different version is typed corrupt (never mis-parsed).
+pub const TRANSPORT_VERSION: u16 = 1;
+
+/// Frame magic ("SPRT").
+const MAGIC: u32 = 0x5350_5254;
+
+/// Fixed header bytes ahead of the payload (magic, version, flags, len).
+const HEADER: usize = 16;
+
+/// Trailing checksum bytes.
+const TRAILER: usize = 8;
+
+/// Flag bit: the optional KV row is present.
+const FLAG_ROW: u16 = 1;
+
+/// Everything a slot needs to resume on another worker: the request
+/// (id, prompt, verified sequence, budget, acceptance stats) and — when
+/// the source engine exposes one — its verified-prefix KV row. Engines
+/// without an extractable row (or a row lost to the fault being
+/// recovered from) ship `row: None`; the destination re-materializes
+/// the row through the ordinary prefill + catch-up replay, which is
+/// byte-identical by construction.
+#[derive(Clone, Debug)]
+pub struct MigrationPayload {
+    pub req: Request,
+    pub row: Option<KvRow>,
+}
+
+impl MigrationPayload {
+    /// A row-less payload (re-prefill on the destination).
+    pub fn new(req: Request) -> Self {
+        MigrationPayload { req, row: None }
+    }
+
+    /// The sampling-tape position the payload resumes from: generated
+    /// tokens so far. The tape is keyed by (seed, request id, position)
+    /// — never by slot or worker — which is why migration is lossless.
+    pub fn tape_pos(&self) -> u64 {
+        self.req.seq.len().saturating_sub(self.req.prompt.len()) as u64
+    }
+}
+
+/// FNV-1a 64-bit over `data`.
+fn fnv1a(data: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn corrupt(detail: impl Into<String>) -> anyhow::Error {
+    SpecError::TransportCorrupt { detail: detail.into() }.into()
+}
+
+/// Bounds-checked little-endian reader over a frame payload.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| corrupt(format!("payload truncated at byte {}", self.pos)))?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn i32_vec(&mut self) -> Result<Vec<i32>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n.checked_mul(4).ok_or_else(|| corrupt("i32 vec overflow"))?)?;
+        Ok(raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn f32_vec(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n.checked_mul(4).ok_or_else(|| corrupt("f32 vec overflow"))?)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())))
+            .collect())
+    }
+
+    fn done(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_i32s(out: &mut Vec<u8>, v: &[i32]) {
+    put_u32(out, v.len() as u32);
+    for &x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_f32s(out: &mut Vec<u8>, v: &[f32]) {
+    put_u32(out, v.len() as u32);
+    for &x in v {
+        out.extend_from_slice(&x.to_bits().to_le_bytes());
+    }
+}
+
+/// Serialize/deserialize migration frames and account the retry ledger
+/// for transfers that hit corruption in flight. One transport instance
+/// serves a whole cluster; its counters feed `specactor_cluster_*`.
+#[derive(Clone, Debug)]
+pub struct RowTransport {
+    /// Re-transmissions allowed per transfer beyond the first attempt;
+    /// exhaustion escalates the typed `TransportCorrupt` to the caller
+    /// (which falls back to re-prefill — still lossless).
+    pub retry_budget: u32,
+    /// Frames encoded and put on the wire (one per attempt).
+    pub frames: u64,
+    /// Frames that failed integrity checks on receive.
+    pub corruptions: u64,
+    /// Re-transmissions performed after a corrupt receive.
+    pub retries: u64,
+    /// Transfers abandoned after the retry budget (caller re-prefills).
+    pub escalations: u64,
+    /// Virtual backoff ticks accrued across retries (1, 2, 4, ... per
+    /// attempt, capped at 32) — the cluster's recovery-cost ledger.
+    pub backoff_ticks: u64,
+}
+
+impl Default for RowTransport {
+    fn default() -> Self {
+        RowTransport {
+            retry_budget: 3,
+            frames: 0,
+            corruptions: 0,
+            retries: 0,
+            escalations: 0,
+            backoff_ticks: 0,
+        }
+    }
+}
+
+impl RowTransport {
+    pub fn new(retry_budget: u32) -> Self {
+        RowTransport { retry_budget, ..Default::default() }
+    }
+
+    /// Frame `p` for the wire.
+    pub fn encode(&self, p: &MigrationPayload) -> Vec<u8> {
+        let mut payload = Vec::with_capacity(
+            64 + 4 * (p.req.prompt.len() + p.req.seq.len())
+                + p.row.as_ref().map(|r| 8 * r.k.len() + 32).unwrap_or(0),
+        );
+        put_u64(&mut payload, p.req.id);
+        put_u64(&mut payload, p.req.budget as u64);
+        payload.push(p.req.done as u8);
+        put_u64(&mut payload, p.req.iterations);
+        put_u64(&mut payload, p.req.accept.proposed);
+        put_u64(&mut payload, p.req.accept.accepted);
+        put_u64(&mut payload, p.req.accept.ewma.to_bits());
+        put_u64(&mut payload, p.tape_pos());
+        put_i32s(&mut payload, &p.req.prompt);
+        put_i32s(&mut payload, &p.req.seq);
+        if let Some(row) = &p.row {
+            put_u32(&mut payload, row.n_layers as u32);
+            put_u32(&mut payload, row.max_seq as u32);
+            put_u32(&mut payload, row.n_heads as u32);
+            put_u32(&mut payload, row.d_head as u32);
+            payload.extend_from_slice(&row.len.to_le_bytes());
+            put_f32s(&mut payload, &row.k);
+            put_f32s(&mut payload, &row.v);
+        }
+
+        let flags: u16 = if p.row.is_some() { FLAG_ROW } else { 0 };
+        let mut frame = Vec::with_capacity(HEADER + payload.len() + TRAILER);
+        put_u32(&mut frame, MAGIC);
+        frame.extend_from_slice(&TRANSPORT_VERSION.to_le_bytes());
+        frame.extend_from_slice(&flags.to_le_bytes());
+        put_u64(&mut frame, payload.len() as u64);
+        frame.extend_from_slice(&payload);
+        let sum = fnv1a(&frame);
+        put_u64(&mut frame, sum);
+        frame
+    }
+
+    /// Parse a frame back into a payload. Every integrity failure is a
+    /// typed [`SpecError::TransportCorrupt`]; hostile bytes never panic.
+    pub fn decode(&self, frame: &[u8]) -> Result<MigrationPayload> {
+        if frame.len() < HEADER + TRAILER {
+            return Err(corrupt(format!("frame too short ({} bytes)", frame.len())));
+        }
+        let mut hdr = Cursor::new(&frame[..HEADER]);
+        if hdr.u32()? != MAGIC {
+            return Err(corrupt("bad magic"));
+        }
+        let version = u16::from_le_bytes([frame[4], frame[5]]);
+        hdr.take(2)?;
+        if version != TRANSPORT_VERSION {
+            return Err(corrupt(format!(
+                "version mismatch: frame v{version}, expected v{TRANSPORT_VERSION}"
+            )));
+        }
+        let flags = u16::from_le_bytes([frame[6], frame[7]]);
+        hdr.take(2)?;
+        let plen = hdr.u64()? as usize;
+        if HEADER + plen + TRAILER != frame.len() {
+            return Err(corrupt(format!(
+                "length mismatch: header says {plen}, frame carries {}",
+                frame.len().saturating_sub(HEADER + TRAILER)
+            )));
+        }
+        let body_end = HEADER + plen;
+        let want = u64::from_le_bytes(frame[body_end..].try_into().unwrap());
+        let got = fnv1a(&frame[..body_end]);
+        if want != got {
+            return Err(corrupt(format!("checksum mismatch ({got:#018x} != {want:#018x})")));
+        }
+
+        let mut c = Cursor::new(&frame[HEADER..body_end]);
+        let id = c.u64()?;
+        let budget = c.u64()? as usize;
+        let done = match c.u8()? {
+            0 => false,
+            1 => true,
+            other => return Err(corrupt(format!("bad done byte {other}"))),
+        };
+        let iterations = c.u64()?;
+        let (proposed, accepted) = (c.u64()?, c.u64()?);
+        let accept = AcceptanceStats::from_ledger(proposed, accepted, f64::from_bits(c.u64()?));
+        let tape_pos = c.u64()?;
+        let prompt = c.i32_vec()?;
+        let seq = c.i32_vec()?;
+        if seq.len() < prompt.len() || seq[..prompt.len()] != prompt[..] {
+            return Err(corrupt("sequence does not extend its prompt"));
+        }
+        if tape_pos != (seq.len() - prompt.len()) as u64 {
+            return Err(corrupt(format!(
+                "sampling-tape position {tape_pos} != generated {}",
+                seq.len() - prompt.len()
+            )));
+        }
+        let row = if flags & FLAG_ROW != 0 {
+            let n_layers = c.u32()? as usize;
+            let max_seq = c.u32()? as usize;
+            let n_heads = c.u32()? as usize;
+            let d_head = c.u32()? as usize;
+            let len = i32::from_le_bytes(c.take(4)?.try_into().unwrap());
+            let k = c.f32_vec()?;
+            let v = c.f32_vec()?;
+            if k.len() != v.len() {
+                return Err(corrupt("row k/v length mismatch"));
+            }
+            Some(KvRow { n_layers, max_seq, n_heads, d_head, k, v, len })
+        } else {
+            None
+        };
+        if !c.done() {
+            return Err(corrupt("trailing bytes after payload"));
+        }
+        let req = Request { id, prompt, seq, budget, done, accept, iterations };
+        Ok(MigrationPayload { req, row })
+    }
+
+    /// Move `p` across `wire` (a function that may corrupt the frame in
+    /// flight — identity in production, a seeded Bernoulli bit-flipper
+    /// under `--chaos transport=p`). Each corrupt receive re-encodes
+    /// from the source payload and retries under exponential backoff
+    /// until the budget runs out, at which point the typed error
+    /// escalates to the caller's re-prefill fallback.
+    pub fn deliver(
+        &mut self,
+        p: &MigrationPayload,
+        wire: &mut dyn FnMut(Vec<u8>) -> Vec<u8>,
+    ) -> Result<MigrationPayload> {
+        let mut attempt: u32 = 0;
+        loop {
+            self.frames += 1;
+            let frame = wire(self.encode(p));
+            match self.decode(&frame) {
+                Ok(out) => return Ok(out),
+                Err(e) => {
+                    let is_corrupt = e
+                        .downcast_ref::<SpecError>()
+                        .map(|s| matches!(s, SpecError::TransportCorrupt { .. }))
+                        .unwrap_or(false);
+                    if !is_corrupt {
+                        return Err(e);
+                    }
+                    self.corruptions += 1;
+                    if attempt >= self.retry_budget {
+                        self.escalations += 1;
+                        return Err(e);
+                    }
+                    self.backoff_ticks += 1u64 << attempt.min(5);
+                    self.retries += 1;
+                    attempt += 1;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::Severity;
+
+    fn payload(row: bool) -> MigrationPayload {
+        let mut req = Request::new(42, vec![1, 2, 3, 4], 64);
+        req.seq.extend_from_slice(&[7, -9, 32000]);
+        req.iterations = 5;
+        req.accept.observe(8, 6);
+        let row = row.then(|| KvRow {
+            n_layers: 2,
+            max_seq: 8,
+            n_heads: 2,
+            d_head: 4,
+            k: vec![0.5, -1.25, f32::NAN, 3.0e-20, 1.0, 0.0, -0.0, 9.9],
+            v: vec![1.0; 8],
+            len: 6,
+        });
+        MigrationPayload { req, row }
+    }
+
+    fn assert_same(a: &MigrationPayload, b: &MigrationPayload) {
+        assert_eq!(a.req.id, b.req.id);
+        assert_eq!(a.req.prompt, b.req.prompt);
+        assert_eq!(a.req.seq, b.req.seq);
+        assert_eq!(a.req.budget, b.req.budget);
+        assert_eq!(a.req.done, b.req.done);
+        assert_eq!(a.req.iterations, b.req.iterations);
+        assert_eq!(a.req.accept.proposed, b.req.accept.proposed);
+        assert_eq!(a.req.accept.accepted, b.req.accept.accepted);
+        assert_eq!(a.req.accept.ewma.to_bits(), b.req.accept.ewma.to_bits());
+        match (&a.row, &b.row) {
+            (None, None) => {}
+            (Some(x), Some(y)) => {
+                assert_eq!(x.n_layers, y.n_layers);
+                assert_eq!(x.max_seq, y.max_seq);
+                assert_eq!(x.n_heads, y.n_heads);
+                assert_eq!(x.d_head, y.d_head);
+                assert_eq!(x.len, y.len);
+                // bit-exact, including NaN payloads and signed zeros
+                let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&x.k), bits(&y.k));
+                assert_eq!(bits(&x.v), bits(&y.v));
+            }
+            _ => panic!("row presence mismatch"),
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_byte_exact() {
+        let t = RowTransport::default();
+        for with_row in [false, true] {
+            let p = payload(with_row);
+            let frame = t.encode(&p);
+            let q = t.decode(&frame).unwrap();
+            assert_same(&p, &q);
+            // and the re-encoded frame is identical (canonical encoding)
+            assert_eq!(frame, t.encode(&q));
+        }
+    }
+
+    #[test]
+    fn every_single_bit_flip_is_detected_and_typed() {
+        let t = RowTransport::default();
+        let p = payload(true);
+        let frame = t.encode(&p);
+        // flip one bit per byte across the whole frame: decode must fail
+        // with a typed Degradable TransportCorrupt and must never panic
+        for i in 0..frame.len() {
+            let mut bad = frame.clone();
+            bad[i] ^= 1 << (i % 8);
+            let err = t.decode(&bad).expect_err("corruption must not decode");
+            let se = err.downcast_ref::<SpecError>().expect("typed error");
+            assert!(matches!(se, SpecError::TransportCorrupt { .. }));
+            assert_eq!(se.severity(), Severity::Degradable);
+        }
+    }
+
+    #[test]
+    fn truncation_and_version_mismatch_are_typed() {
+        let t = RowTransport::default();
+        let frame = t.encode(&payload(true));
+        for cut in [0, 1, HEADER - 1, HEADER, frame.len() - 1] {
+            assert!(t.decode(&frame[..cut]).is_err());
+        }
+        let mut vbad = frame.clone();
+        vbad[4] = TRANSPORT_VERSION as u8 + 1; // bump version field
+        let err = t.decode(&vbad).unwrap_err();
+        assert!(err.to_string().contains("version mismatch"), "got: {err:#}");
+    }
+
+    #[test]
+    fn deliver_retries_through_transient_corruption() {
+        let mut t = RowTransport::new(3);
+        let p = payload(true);
+        let mut drops = 2; // corrupt the first two attempts
+        let out = t
+            .deliver(&p, &mut |mut f: Vec<u8>| {
+                if drops > 0 {
+                    drops -= 1;
+                    let n = f.len();
+                    f[n / 2] ^= 0x40;
+                }
+                f
+            })
+            .unwrap();
+        assert_same(&p, &out);
+        assert_eq!(t.corruptions, 2);
+        assert_eq!(t.retries, 2);
+        assert_eq!(t.frames, 3);
+        assert_eq!(t.escalations, 0);
+        assert_eq!(t.backoff_ticks, 1 + 2, "exponential: 1 then 2 ticks");
+    }
+
+    #[test]
+    fn deliver_escalates_after_the_budget() {
+        let mut t = RowTransport::new(2);
+        let p = payload(false);
+        let err = t
+            .deliver(&p, &mut |mut f: Vec<u8>| {
+                let n = f.len();
+                f[n - 1] ^= 1; // checksum never verifies
+                f
+            })
+            .expect_err("permanent corruption must escalate");
+        let se = err.downcast_ref::<SpecError>().expect("typed");
+        assert!(matches!(se, SpecError::TransportCorrupt { .. }));
+        assert_eq!(t.frames, 3, "initial attempt + 2 retries");
+        assert_eq!(t.corruptions, 3);
+        assert_eq!(t.retries, 2);
+        assert_eq!(t.escalations, 1);
+    }
+
+    #[test]
+    fn tape_position_guard_catches_spliced_frames() {
+        // a frame whose seq/prompt relationship is inconsistent (e.g. a
+        // spliced payload that still checksums) must not decode: rebuild
+        // a frame with a lying tape_pos and a fresh checksum
+        let t = RowTransport::default();
+        let p = payload(false);
+        let mut frame = t.encode(&p);
+        // tape_pos lives after id/budget/done/iterations/accept(3):
+        // 8+8+1+8 + 24 = 49 bytes into the payload
+        let off = HEADER + 49;
+        frame[off..off + 8].copy_from_slice(&999u64.to_le_bytes());
+        let body_end = frame.len() - TRAILER;
+        let sum = fnv1a(&frame[..body_end]);
+        frame[body_end..].copy_from_slice(&sum.to_le_bytes());
+        let err = t.decode(&frame).unwrap_err();
+        assert!(err.to_string().contains("sampling-tape position"), "got: {err:#}");
+    }
+}

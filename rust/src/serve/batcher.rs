@@ -42,7 +42,7 @@
 //! lossless test (`rust/tests/serve_lossless.rs`) replays identical
 //! admission schedules under both static and continuous batching.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use anyhow::{anyhow, bail, Result};
 
@@ -54,6 +54,7 @@ use crate::engine::{
     VerifyDiscipline, Worker,
 };
 use crate::obs::{FaultDump, MetricRegistry, MetricsExporter, Phase, Tracer};
+use crate::runtime::MigrationPayload;
 use crate::util::rng::position_rng;
 
 use super::metrics::ServeMetrics;
@@ -124,6 +125,41 @@ pub trait ServeEngine {
     /// Contribute engine-side series (runtime copy/execute ledger, chaos
     /// injection counters, ...) to a scrape snapshot. Default no-op.
     fn collect_metrics(&self, _reg: &mut MetricRegistry) {}
+    /// Extract the slot's full migration payload for cross-worker
+    /// transport — the request plus, where the engine owns one, its
+    /// verified-prefix KV row — freeing the slot (the cross-runtime
+    /// sibling of [`ServeEngine::retire`]). Default: retire only, no
+    /// row; the destination re-materializes state through admission's
+    /// prefill + catch-up replay (byte-identical, just slower).
+    fn extract_payload(&mut self, slot: usize) -> Result<MigrationPayload> {
+        Ok(MigrationPayload::new(self.retire(slot)?))
+    }
+    /// Snapshot the live slot's migration payload WITHOUT freeing it —
+    /// the cross-worker race-fork path: the source keeps verifying while
+    /// the staged copy travels (stamp/rollback, the `engine/overlap.rs`
+    /// discipline at cluster scale). Default: clone the request, ship no
+    /// row.
+    fn snapshot_payload(&self, slot: usize) -> Result<MigrationPayload> {
+        let req = self
+            .request(slot)
+            .cloned()
+            .ok_or_else(|| anyhow!("slot {slot} empty (payload snapshot)"))?;
+        Ok(MigrationPayload::new(req))
+    }
+    /// Install a migrated payload into the free slot `slot` — the
+    /// inverse of [`ServeEngine::extract_payload`]. Default: ordinary
+    /// admission (the prefill + catch-up replay rebuilds the row from
+    /// the verified sequence; engines with row support insert directly).
+    fn insert_payload(&mut self, slot: usize, p: MigrationPayload, plan: SlotPlan) -> Result<()> {
+        self.admit(slot, p.req, plan)
+    }
+    /// Chaos hook: possibly mangle an outbound migration frame in flight
+    /// (returns true when the frame was corrupted). The identity wire in
+    /// production; a seeded Bernoulli bit-flipper under
+    /// `--chaos transport=p`.
+    fn corrupt_frame(&mut self, _frame: &mut [u8]) -> bool {
+        false
+    }
 }
 
 impl ServeEngine for Worker<'_> {
@@ -181,6 +217,29 @@ impl ServeEngine for Worker<'_> {
 
     fn collect_metrics(&self, reg: &mut MetricRegistry) {
         self.rt.stats.snapshot().register_metrics(reg);
+    }
+
+    fn extract_payload(&mut self, slot: usize) -> Result<MigrationPayload> {
+        // Row first (non-destructive) so an extract failure leaves the
+        // slot intact for the caller's salvage path.
+        let row = Worker::migration_row(self, slot)?;
+        Ok(MigrationPayload { req: Worker::retire(self, slot)?, row: Some(row) })
+    }
+
+    fn snapshot_payload(&self, slot: usize) -> Result<MigrationPayload> {
+        let req = Worker::request(self, slot)
+            .cloned()
+            .ok_or_else(|| anyhow!("slot {slot} empty (payload snapshot)"))?;
+        Ok(MigrationPayload { row: Some(Worker::migration_row(self, slot)?), req })
+    }
+
+    fn insert_payload(&mut self, slot: usize, p: MigrationPayload, plan: SlotPlan) -> Result<()> {
+        match p.row {
+            Some(row) => Worker::admit_with_row(self, slot, p.req, plan, &row),
+            // row-less payload (source salvaged request state only):
+            // rebuild through the ordinary prefill + catch-up replay
+            None => Worker::admit_with_plan(self, slot, p.req, plan),
+        }
     }
 }
 
@@ -1271,6 +1330,248 @@ impl<E: ServeEngine> Batcher<E> {
             self.metrics.on_race_cancel(c.replicas, c.wasted_rounds);
         }
         Ok(())
+    }
+}
+
+/// How a request left its worker during migration / evacuation — the
+/// discriminator for what the destination must do (and whether the hop
+/// charges the quarantine retry budget).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvacKind {
+    /// Full payload extracted — the KV row (where the engine owns one)
+    /// migrates via `RowTransport`; the destination inserts it directly,
+    /// no re-prefill, no retry charge.
+    Extracted,
+    /// The engine's extract path no longer answered; the request state
+    /// was salvaged by cloning and must re-prefill at the destination
+    /// under the retry budget (front-of-lane, like a quarantine).
+    Salvaged,
+    /// Never admitted — it was still waiting in the dead worker's local
+    /// queue; re-routes to a survivor without touching the retry budget.
+    Queued,
+}
+
+/// One request stripped off a worker by [`Batcher::evacuate`] or
+/// [`Batcher::extract_slot`], with the scheduling bookkeeping the
+/// destination needs to adopt it faithfully (latency is measured from the
+/// original arrival, and quarantine retries travel with the request so
+/// the budget is global, not per-worker).
+#[derive(Clone, Debug)]
+pub struct Evacuee {
+    pub payload: MigrationPayload,
+    pub prio: Priority,
+    pub arrival_s: f64,
+    /// Quarantine retries already consumed by this request.
+    pub retries: u32,
+    pub kind: EvacKind,
+}
+
+// ---- cluster support ----------------------------------------------------
+//
+// `serve::cluster::Cluster` composes one batcher per worker; these
+// methods are the supervisor's surface for slot migration, dead-worker
+// evacuation and cross-worker racing. They live here because they need
+// the batcher's private bookkeeping (arrival stamps, priority lanes,
+// degrade state, the retry ledger).
+impl<E: ServeEngine> Batcher<E> {
+    /// Mutable engine access (the cluster's transport/chaos wire hook).
+    pub fn engine_mut(&mut self) -> &mut E {
+        &mut self.engine
+    }
+
+    /// Scheduling load: occupied slots plus locally queued requests —
+    /// the cluster's least-loaded routing key.
+    pub fn load(&self) -> usize {
+        self.slots.occupancy() + self.queue.len()
+    }
+
+    /// Ticks this batcher has served (its heartbeat clock).
+    pub fn ticks(&self) -> u64 {
+        self.ticks
+    }
+
+    /// Is `slot` currently a member of a local Fastest-of-N race?
+    pub fn is_race_member(&self, slot: usize) -> bool {
+        self.race.as_ref().is_some_and(|a| a.is_member(slot))
+    }
+
+    /// The occupying request's (priority, arrival) bookkeeping, `None`
+    /// for free slots.
+    pub fn slot_meta(&self, slot: usize) -> Option<(Priority, f64)> {
+        self.slots.is_live(slot).then(|| (self.prio_s[slot], self.arrival_s[slot]))
+    }
+
+    /// Work-stealing extract on a HEALTHY worker: pull one live slot's
+    /// migration payload (local races uncoupled first), freeing the
+    /// slot. Returns `None` when the slot is not migratable — empty,
+    /// finished, or cancelled out from under us by race uncoupling. An
+    /// engine extract failure also returns `None` and leaves the slot
+    /// running in place: the destructive salvage fallback is reserved
+    /// for evacuating the dead ([`Batcher::evacuate`]).
+    pub fn extract_slot(&mut self, slot: usize) -> Result<Option<Evacuee>> {
+        if !self.slots.is_live(slot) || self.engine.is_done(slot) {
+            return Ok(None);
+        }
+        self.uncouple_from_races(slot)?;
+        if !self.slots.is_live(slot) || self.engine.is_done(slot) {
+            return Ok(None);
+        }
+        let (prio, arrival_s) = (self.prio_s[slot], self.arrival_s[slot]);
+        let payload = match self.engine.extract_payload(slot) {
+            Ok(p) => p,
+            Err(_) => return Ok(None),
+        };
+        self.slots.release(slot)?;
+        self.reset_degrade(slot);
+        let retries = self.retries.remove(&payload.req.id).unwrap_or(0);
+        Ok(Some(Evacuee { payload, prio, arrival_s, retries, kind: EvacKind::Extracted }))
+    }
+
+    /// Death-path evacuation: strip EVERY live slot and the local queue
+    /// off a worker declared dead. Local races are cancelled first;
+    /// where the engine's extract path still answers, the full payload
+    /// (row included) is taken, otherwise the request state is salvaged
+    /// by cloning for front-of-lane re-prefill — zero requests are lost
+    /// either way. Duplicate ids (an uncancellable race replica on a
+    /// dying engine) are dropped after the first copy.
+    pub fn evacuate(&mut self) -> Vec<Evacuee> {
+        let mut out: Vec<Evacuee> = Vec::new();
+        if let Some(ar) = self.race.as_mut() {
+            while ar.active_races() > 0 {
+                match ar.cancel_one(&mut self.engine) {
+                    Ok(c) => {
+                        for &s in &c.freed {
+                            let _ = self.slots.release(s);
+                        }
+                        self.metrics.on_race_cancel(c.replicas, c.wasted_rounds);
+                    }
+                    // the dying engine refused the cancel: fall through —
+                    // the id-dedup below keeps one copy per request
+                    Err(_) => break,
+                }
+            }
+        }
+        let mut seen: BTreeSet<u64> = BTreeSet::new();
+        for slot in 0..self.engine.capacity() {
+            if !self.slots.is_live(slot) {
+                continue;
+            }
+            let (prio, arrival_s) = (self.prio_s[slot], self.arrival_s[slot]);
+            let (payload, kind) = match self.engine.extract_payload(slot) {
+                Ok(p) => (p, EvacKind::Extracted),
+                Err(_) => match self.engine.request(slot).cloned() {
+                    Some(req) => (MigrationPayload::new(req), EvacKind::Salvaged),
+                    None => {
+                        let _ = self.slots.release(slot);
+                        continue;
+                    }
+                },
+            };
+            let _ = self.slots.release(slot);
+            self.reset_degrade(slot);
+            if !seen.insert(payload.req.id) {
+                continue;
+            }
+            let retries = self.retries.remove(&payload.req.id).unwrap_or(0);
+            out.push(Evacuee { payload, prio, arrival_s, retries, kind });
+        }
+        while let Some(q) = self.queue.pop() {
+            if !seen.insert(q.req.id) {
+                continue;
+            }
+            let retries = self.retries.remove(&q.req.id).unwrap_or(0);
+            out.push(Evacuee {
+                payload: MigrationPayload::new(q.req),
+                prio: q.prio,
+                arrival_s: q.enqueued_s,
+                retries,
+                kind: EvacKind::Queued,
+            });
+        }
+        out
+    }
+
+    /// Adopt a migrated payload into a free slot (the destination half
+    /// of slot migration / evacuation / cross-worker race forks) and
+    /// return the slot it landed in. Not an admission for metrics
+    /// purposes — the request was admitted once already, at its source;
+    /// its arrival stamp and retry ledger carry over.
+    pub fn adopt(&mut self, e: &Evacuee) -> Result<usize> {
+        let Some(slot) = self.slots.alloc() else {
+            bail!("no free slot to adopt request {}", e.payload.req.id)
+        };
+        let plan = self.current_plan();
+        if let Err(err) = self.engine.insert_payload(slot, e.payload.clone(), plan) {
+            let _ = self.slots.release(slot);
+            return Err(err);
+        }
+        self.prio_s[slot] = e.prio;
+        self.arrival_s[slot] = e.arrival_s;
+        self.reset_degrade(slot);
+        if e.retries > 0 {
+            self.retries.insert(e.payload.req.id, e.retries);
+        }
+        Ok(slot)
+    }
+
+    /// Front-of-lane requeue of a recovered request (evacuation fallback
+    /// / transport escalation). `charge` walks the quarantine retry
+    /// budget — the re-prefill path costs a retry exactly as an
+    /// in-process quarantine does; a row that merely needs a free slot
+    /// re-queues uncharged. Exhaustion is a typed rejection, never a
+    /// silent loss. Returns false when the budget rejected the request.
+    pub fn readmit(
+        &mut self,
+        req: Request,
+        prio: Priority,
+        arrival_s: f64,
+        prior_retries: u32,
+        charge: bool,
+    ) -> bool {
+        let n = prior_retries + u32::from(charge);
+        if n > self.retry_budget {
+            self.retries.remove(&req.id);
+            self.queue.note_reject(RejectReason::RetryExhausted);
+            return false;
+        }
+        if n > 0 {
+            self.retries.insert(req.id, n);
+        }
+        self.queue.requeue_front(req, prio, arrival_s);
+        self.metrics.requeues += 1;
+        true
+    }
+
+    /// Force-cancel a live slot (a cluster-level race loser). The
+    /// request state is retired and RETURNED, not completed — the loser
+    /// of a Fastest-of-N race produced the same tokens as the winner
+    /// (the sampling tape is keyed by (seed, request, position)), so
+    /// dropping it loses nothing.
+    pub fn cancel_slot(&mut self, slot: usize) -> Result<Option<Request>> {
+        if !self.slots.is_live(slot) {
+            return Ok(None);
+        }
+        self.uncouple_from_races(slot)?;
+        if !self.slots.is_live(slot) {
+            return Ok(None);
+        }
+        let req = self.engine.retire(slot)?;
+        self.slots.release(slot)?;
+        self.reset_degrade(slot);
+        self.retries.remove(&req.id);
+        Ok(Some(req))
+    }
+
+    /// Record a fault post-mortem into the flight recorder on behalf of
+    /// the cluster: heartbeat-deadline deaths never pass through
+    /// `on_round_error` (which captures the in-band faults), so the
+    /// supervisor dumps them here before evacuating.
+    pub fn record_fault(&mut self, e: &anyhow::Error) {
+        let (sev, slot) = match e.downcast_ref::<SpecError>() {
+            Some(se) => (se.severity(), se.slot()),
+            None => (Severity::WorkerFatal, None),
+        };
+        self.capture_fault_dump(e, sev, slot);
     }
 }
 

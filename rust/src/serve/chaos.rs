@@ -30,11 +30,19 @@
 //!   fires: the round boundary has already drained verification, so the
 //!   pause just invalidates every draft-side cache
 //!   ([`ServeEngine::invalidate_draft_state`]) and resumes — the
-//!   per-wave invalidation protocol online draft learning needs.
+//!   per-wave invalidation protocol online draft learning needs,
+//! * `worker` — per-round probability the whole engine dies
+//!   ([`SpecError::Worker`], WorkerFatal). Fires at most once — death is
+//!   permanent — and leaves a `killed` scar that makes the subsequent
+//!   evacuation extract path flaky (the cluster's salvage fallback),
+//! * `transport` — per-frame probability an outbound migration frame is
+//!   bit-flipped in flight ([`ServeEngine::corrupt_frame`] → a typed
+//!   `SpecError::TransportCorrupt` on decode, retried by `RowTransport`).
 
 use anyhow::{bail, Result};
 
 use crate::engine::{EngineReport, Request, SlotPlan, SpecError, VerifyDiscipline};
+use crate::runtime::MigrationPayload;
 use crate::util::rng::{splitmix64, Rng};
 
 use super::batcher::ServeEngine;
@@ -47,6 +55,8 @@ const SITE_SLOT: u64 = 0x534C_4F54;
 const SITE_FORK: u64 = 0x464F_524B;
 const SITE_PICK: u64 = 0x5049_434B;
 const SITE_PREFETCH: u64 = 0x5052_4654;
+const SITE_WORKER: u64 = 0x574F_524B;
+const SITE_TRANSPORT: u64 = 0x5452_4E53;
 
 /// A deterministic fault-injection schedule (see module docs).
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -64,6 +74,10 @@ pub struct FaultPlan {
     pub prefetch: f64,
     /// Weight-update pause period in rounds (0 = never).
     pub pause: u64,
+    /// Per-round probability the whole engine dies (fires at most once).
+    pub worker: f64,
+    /// Per-frame probability an outbound migration frame is corrupted.
+    pub transport: f64,
 }
 
 fn rate(key: &str, v: &str) -> Result<f64> {
@@ -100,6 +114,8 @@ impl FaultPlan {
                 "slot" => p.slot = rate("slot", v)?,
                 "fork" => p.fork = rate("fork", v)?,
                 "prefetch" => p.prefetch = rate("prefetch", v)?,
+                "worker" => p.worker = rate("worker", v)?,
+                "transport" => p.transport = rate("transport", v)?,
                 "pause" => {
                     p.pause = v
                         .trim()
@@ -108,7 +124,7 @@ impl FaultPlan {
                 }
                 other => bail!(
                     "unknown chaos key `{other}` (expected seed, step, drafter, slot, \
-                     fork, prefetch or pause)"
+                     fork, prefetch, worker, transport or pause)"
                 ),
             }
         }
@@ -118,15 +134,26 @@ impl FaultPlan {
     /// Compact one-line rendering for serve summaries and bench JSON.
     pub fn label(&self) -> String {
         format!(
-            "seed={} step={} drafter={} slot={} fork={} prefetch={} pause={}",
-            self.seed, self.step, self.drafter, self.slot, self.fork, self.prefetch, self.pause
+            "seed={} step={} drafter={} slot={} fork={} prefetch={} worker={} transport={} \
+             pause={}",
+            self.seed, self.step, self.drafter, self.slot, self.fork, self.prefetch,
+            self.worker, self.transport, self.pause
         )
     }
 
     /// Does this plan inject anything at all?
     pub fn is_active(&self) -> bool {
         self.step > 0.0 || self.drafter > 0.0 || self.slot > 0.0 || self.fork > 0.0
-            || self.prefetch > 0.0 || self.pause > 0
+            || self.prefetch > 0.0 || self.worker > 0.0 || self.transport > 0.0
+            || self.pause > 0
+    }
+
+    /// Derive the per-worker plan for cluster serving: same rates, a
+    /// worker-unique seed — so workers draw from independent fault tapes
+    /// instead of dying in lockstep, while the whole cluster run is still
+    /// replayable from the one CLI seed.
+    pub fn for_worker(&self, worker: usize) -> FaultPlan {
+        FaultPlan { seed: self.seed ^ splitmix64(worker as u64 + 1), ..self.clone() }
     }
 }
 
@@ -139,13 +166,21 @@ pub struct ChaosEngine<E: ServeEngine> {
     pub plan: FaultPlan,
     rounds: u64,
     forks: u64,
+    frames: u64,
+    extracts: u64,
     pub injected_step: u64,
     pub injected_drafter: u64,
     pub injected_slot: u64,
     pub injected_fork: u64,
     pub injected_prefetch: u64,
+    pub injected_worker: u64,
+    pub injected_transport: u64,
     /// Weight-update pauses fired (each one invalidated draft state).
     pub pauses: u64,
+    /// Set once the `worker` site fired: death is permanent, and a dead
+    /// runtime's row-extract path answers only *sometimes* — the flaky
+    /// half exercises the cluster's salvage (re-prefill) fallback.
+    pub killed: bool,
 }
 
 impl<E: ServeEngine> ChaosEngine<E> {
@@ -155,19 +190,24 @@ impl<E: ServeEngine> ChaosEngine<E> {
             plan,
             rounds: 0,
             forks: 0,
+            frames: 0,
+            extracts: 0,
             injected_step: 0,
             injected_drafter: 0,
             injected_slot: 0,
             injected_fork: 0,
             injected_prefetch: 0,
+            injected_worker: 0,
+            injected_transport: 0,
             pauses: 0,
+            killed: false,
         }
     }
 
     /// Faults injected across all sites.
     pub fn injected(&self) -> u64 {
         self.injected_step + self.injected_drafter + self.injected_slot + self.injected_fork
-            + self.injected_prefetch
+            + self.injected_prefetch + self.injected_worker + self.injected_transport
     }
 
     /// The deterministic draw stream for `(site, n)`: same plan seed,
@@ -212,7 +252,22 @@ impl<E: ServeEngine> ServeEngine for ChaosEngine<E> {
     fn round(&mut self, rep: &mut EngineReport) -> Result<usize> {
         self.rounds += 1;
         let n = self.rounds;
-        // Weight-update pause first: at a round boundary verification is
+        // Worker kill first — a dead engine runs nothing else. At most
+        // one injection per engine (death is permanent): the supervisor
+        // either evacuates the worker or, as the last survivor, refuses
+        // the kill and keeps serving; the `killed` scar stays either way.
+        if !self.killed
+            && self.plan.worker > 0.0
+            && self.stream(SITE_WORKER, n).bernoulli(self.plan.worker)
+        {
+            self.killed = true;
+            self.injected_worker += 1;
+            return Err(SpecError::Worker {
+                detail: format!("chaos injection: worker killed, round {n}"),
+            }
+            .into());
+        }
+        // Weight-update pause next: at a round boundary verification is
         // already drained (the batcher retired before calling round), so
         // the pause is exactly "invalidate draft caches, resume".
         if self.plan.pause > 0 && n % self.plan.pause == 0 {
@@ -298,17 +353,57 @@ impl<E: ServeEngine> ServeEngine for ChaosEngine<E> {
         self.inner.invalidate_draft_state()
     }
 
+    fn extract_payload(&mut self, slot: usize) -> Result<MigrationPayload> {
+        self.extracts += 1;
+        // A killed runtime answers the extract path only half the time:
+        // the failing half drives the cluster's clone-and-salvage
+        // fallback (front-of-lane re-prefill under the retry budget).
+        if self.killed && self.stream(SITE_WORKER, self.extracts ^ 0x4558_5452).bernoulli(0.5) {
+            return Err(SpecError::Worker {
+                detail: format!("dead runtime refused row extract for slot {slot}"),
+            }
+            .into());
+        }
+        self.inner.extract_payload(slot)
+    }
+
+    fn snapshot_payload(&self, slot: usize) -> Result<MigrationPayload> {
+        self.inner.snapshot_payload(slot)
+    }
+
+    fn insert_payload(&mut self, slot: usize, p: MigrationPayload, plan: SlotPlan) -> Result<()> {
+        self.inner.insert_payload(slot, p, plan)
+    }
+
+    fn corrupt_frame(&mut self, frame: &mut [u8]) -> bool {
+        self.frames += 1;
+        if self.plan.transport > 0.0
+            && self.stream(SITE_TRANSPORT, self.frames).bernoulli(self.plan.transport)
+        {
+            self.injected_transport += 1;
+            if !frame.is_empty() {
+                let i = self.stream(SITE_TRANSPORT, self.frames ^ 0x464C_4950)
+                    .below(frame.len() as u64) as usize;
+                frame[i] ^= 0x40;
+            }
+            return true;
+        }
+        self.inner.corrupt_frame(frame)
+    }
+
     fn attach_tracer(&mut self, t: crate::obs::Tracer) {
         self.inner.attach_tracer(t)
     }
 
     fn collect_metrics(&self, reg: &mut crate::obs::MetricRegistry) {
-        let sites: [(&str, u64); 5] = [
+        let sites: [(&str, u64); 7] = [
             ("step", self.injected_step),
             ("drafter", self.injected_drafter),
             ("slot", self.injected_slot),
             ("fork", self.injected_fork),
             ("prefetch", self.injected_prefetch),
+            ("worker", self.injected_worker),
+            ("transport", self.injected_transport),
         ];
         for (site, v) in sites {
             reg.counter_l(
@@ -334,15 +429,27 @@ mod tests {
 
     #[test]
     fn parses_the_full_grammar() {
-        let p = FaultPlan::parse("seed=7, step=0.05,drafter=0.02,slot=0.01,fork=0.5,pause=40")
-            .unwrap();
+        let p = FaultPlan::parse(
+            "seed=7, step=0.05,drafter=0.02,slot=0.01,fork=0.5,worker=0.03,transport=0.2,pause=40",
+        )
+        .unwrap();
         assert_eq!(p.seed, 7);
         assert_eq!(p.step, 0.05);
         assert_eq!(p.drafter, 0.02);
         assert_eq!(p.slot, 0.01);
         assert_eq!(p.fork, 0.5);
+        assert_eq!(p.worker, 0.03);
+        assert_eq!(p.transport, 0.2);
         assert_eq!(p.pause, 40);
         assert!(p.is_active());
+        assert!(p.label().contains("worker=0.03"));
+        assert!(p.label().contains("transport=0.2"));
+        // per-worker derivation varies the seed, nothing else
+        let w1 = p.for_worker(1);
+        assert_ne!(w1.seed, p.seed);
+        assert_ne!(w1.seed, p.for_worker(2).seed);
+        assert_eq!(w1.worker, p.worker);
+        assert_eq!(w1.transport, p.transport);
         // omitted keys default to off
         let q = FaultPlan::parse("seed=3").unwrap();
         assert_eq!(q.seed, 3);
@@ -424,6 +531,66 @@ mod tests {
         assert_eq!(se.slot(), None, "a dead prefetch thread is batch-wide, not slot-scoped");
         assert_eq!(e.injected_prefetch, 1);
         assert_eq!(e.injected(), 1);
+    }
+
+    #[test]
+    fn worker_site_kills_once_and_scars_the_extract_path() {
+        let plan = FaultPlan { seed: 3, worker: 1.0, ..Default::default() };
+        let mut e = ChaosEngine::new(SyntheticEngine::new(2, 5), plan);
+        e.admit(0, Request::new(1, vec![1, 2], 64), SlotPlan::vanilla()).unwrap();
+        e.admit(1, Request::new(2, vec![3, 4], 64), SlotPlan::vanilla()).unwrap();
+        let mut rep = EngineReport::default();
+        let err = e.round(&mut rep).unwrap_err();
+        let se = err.downcast_ref::<SpecError>().expect("typed");
+        assert_eq!(se.severity(), crate::engine::Severity::WorkerFatal);
+        assert!(e.killed);
+        assert_eq!(e.injected_worker, 1);
+        // death is permanent: the site never re-fires, so the only
+        // further failures come from the scarred extract path
+        for _ in 0..5 {
+            let _ = e.round(&mut rep);
+        }
+        assert_eq!(e.injected_worker, 1, "the worker site fires at most once");
+        // a dead runtime's extract path is flaky, not gone: over many
+        // draws both halves (payload served / refused) must appear
+        let (mut served, mut refused) = (0, 0);
+        for _ in 0..64 {
+            match e.extract_payload(0) {
+                Ok(p) => {
+                    served += 1;
+                    // non-destructive re-install so the next draw has a target
+                    e.insert_payload(0, p, SlotPlan::vanilla()).unwrap();
+                }
+                Err(_) => refused += 1,
+            }
+        }
+        assert!(served > 0, "salvageable extracts must sometimes succeed");
+        assert!(refused > 0, "a dead runtime must sometimes refuse");
+    }
+
+    #[test]
+    fn transport_site_flips_frames_deterministically() {
+        let plan = FaultPlan { seed: 11, transport: 0.5, ..Default::default() };
+        let run = |plan: FaultPlan| {
+            let mut e = ChaosEngine::new(SyntheticEngine::new(1, 5), plan);
+            let mut pattern = Vec::new();
+            for _ in 0..32 {
+                let mut frame = vec![0u8; 64];
+                let hit = e.corrupt_frame(&mut frame);
+                assert_eq!(hit, frame.iter().any(|&b| b != 0), "hit must mean a real flip");
+                pattern.push(hit);
+            }
+            (pattern, e.injected_transport)
+        };
+        let (a, na) = run(plan.clone());
+        let (b, nb) = run(plan);
+        assert_eq!(a, b, "same seed, same corruption schedule");
+        assert_eq!(na, nb);
+        assert!(na > 0 && na < 32, "rate 0.5 must corrupt some frames, not all");
+        // an inactive site never touches frames
+        let (c, nc) = run(FaultPlan { seed: 11, ..Default::default() });
+        assert!(c.iter().all(|&h| !h));
+        assert_eq!(nc, 0);
     }
 
     #[test]

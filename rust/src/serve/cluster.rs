@@ -1,0 +1,1222 @@
+//! Multi-worker cluster serving: N [`ServeEngine`] workers — each wrapped
+//! in its own [`Batcher`] — behind ONE global [`AdmissionQueue`], under a
+//! supervisor that makes worker death a degraded mode instead of an
+//! abort.
+//!
+//! The single-worker serve loop already survives everything below
+//! `Severity::WorkerFatal` (degrade ladder, quarantine + re-prefill);
+//! this layer closes the last gap. Per tick the [`Cluster`]:
+//!
+//! 1. **commits** the cross-worker race frame staged last tick (the
+//!    destination adopts the row only if the source is still the same
+//!    live, unfinished request — stamp/rollback, `engine/overlap.rs`'s
+//!    discipline at cluster scale),
+//! 2. **routes** global admissions to the least-loaded alive worker
+//!    (only while that worker has genuine headroom, so per-worker queues
+//!    never shed what the global queue could hold),
+//! 3. **ticks** every alive worker. A `WorkerFatal` error no longer
+//!    propagates: the worker is declared [`WorkerHealth::Dead`] and
+//!    every live request is *evacuated* — the full migration payload
+//!    (request + verified-prefix KV row) is pulled where the runtime
+//!    still answers and shipped through [`RowTransport`] (checksummed
+//!    frames, bounded exponential-backoff retries on corruption);
+//!    where extraction fails the request state is salvaged by cloning
+//!    and re-prefilled front-of-lane under the existing quarantine
+//!    retry budget. Zero requests are lost; capacity degrades to N−1.
+//!    The LAST alive worker is never killed — the kill is refused and
+//!    the worker held in `Suspect` (`last_survivor_holds`), so a chaos
+//!    schedule can never abort the wave,
+//! 4. **supervises** heartbeats: a worker that is occupied but made no
+//!    token progress for `suspect_after` consecutive ticks turns
+//!    `Suspect` (progress clears it); `dead_after` further stalled ticks
+//!    lapse the deadline and the worker is declared dead via
+//!    [`SpecError::WorkerDead`] — same evacuation path, plus a flight-
+//!    recorder post-mortem,
+//! 5. **resolves** cross-worker Fastest-of-N races (first finisher wins,
+//!    the loser's slot is cancelled — both sides generated identical
+//!    tokens because the sampling tape is keyed by (seed, request,
+//!    position), never by worker), **stages** a new race fork of the
+//!    worst-acceptance straggler onto a remote idle slot, and
+//! 6. **balances**: when a worker drains while another still holds a
+//!    deep batch, one slot is work-stolen per tick through the same
+//!    transport path.
+//!
+//! Completion is deduplicated by request id at [`Cluster::drain_finished`]
+//! — belt-and-braces for the one race where both sides of a cross-worker
+//! fork retire in the same tick.
+
+use std::collections::BTreeSet;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::race::cross_race_candidate;
+use crate::engine::{Request, Severity, SpecError};
+use crate::obs::MetricRegistry;
+use crate::runtime::{MigrationPayload, RowTransport};
+
+use super::batcher::{Batcher, EvacKind, Evacuee, FinishedRequest, OpenLoopReport, ServeEngine};
+use super::queue::{AdmissionQueue, Priority};
+
+/// Prometheus family prefix for cluster-level series.
+const PROM_CLUSTER: &str = "specactor_cluster_";
+
+/// Skip cross-worker race forks for requests with fewer remaining tokens
+/// than this (the same floor `RaceConfig::min_remaining` applies
+/// in-process — a fork cannot pay for itself on an almost-done request).
+const MIN_RACE_REMAINING: usize = 4;
+
+/// Worker health as the heartbeat supervisor sees it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkerHealth {
+    Healthy,
+    /// Missed its progress deadline (or survived a refused kill); still
+    /// serving, watched closely — progress restores `Healthy`.
+    Suspect,
+    /// Declared dead: slots evacuated, never ticked again, cluster
+    /// capacity degraded to the survivors.
+    Dead,
+}
+
+impl WorkerHealth {
+    /// Gauge encoding for scrapes: 0 healthy, 1 suspect, 2 dead.
+    pub fn code(self) -> f64 {
+        match self {
+            WorkerHealth::Healthy => 0.0,
+            WorkerHealth::Suspect => 1.0,
+            WorkerHealth::Dead => 2.0,
+        }
+    }
+}
+
+/// Cluster-level counters. Per-worker series are indexed by worker id
+/// (the `{worker="i"}` label on scrapes); `counter_series` /
+/// `worker_series` are the single source both `to_json` and `register`
+/// render from, so the scrape and the summary reconcile by construction.
+#[derive(Clone, Debug, Default)]
+pub struct ClusterMetrics {
+    /// Slots migrated off each worker (work-stealing + evacuation rows).
+    pub migrations_out: Vec<u64>,
+    /// Migrated payloads adopted by each worker.
+    pub migrations_in: Vec<u64>,
+    /// Requests evacuated off each worker at death.
+    pub evacuations: Vec<u64>,
+    /// Stalled-tick heartbeat misses observed per worker.
+    pub heartbeat_misses: Vec<u64>,
+    pub worker_deaths: u64,
+    /// Evacuees whose full payload (row included) moved over transport.
+    pub evac_extracted: u64,
+    /// Evacuees salvaged by cloning → front-of-lane re-prefill.
+    pub evac_salvaged: u64,
+    /// Evacuees that were still queued on the dead worker → re-routed.
+    pub evac_requeued: u64,
+    /// Cross-worker race forks staged.
+    pub cross_races: u64,
+    /// Races the remote replica won (finished before the source).
+    pub cross_race_wins: u64,
+    /// Race sides cancelled at resolution (losers + invalidated sides).
+    pub cross_race_cancels: u64,
+    /// Staged race frames rolled back (source finished/moved/died, frame
+    /// corrupt, or the destination slot was taken by an admission).
+    pub stage_rollbacks: u64,
+    /// Kills refused because the victim was the last alive worker.
+    pub last_survivor_holds: u64,
+    /// Unique requests completed across the cluster.
+    pub completed: u64,
+    /// Duplicate completions dropped at drain (same-tick race ties).
+    pub dup_completions: u64,
+}
+
+impl ClusterMetrics {
+    fn new(n: usize) -> Self {
+        ClusterMetrics {
+            migrations_out: vec![0; n],
+            migrations_in: vec![0; n],
+            evacuations: vec![0; n],
+            heartbeat_misses: vec![0; n],
+            ..Default::default()
+        }
+    }
+
+    /// Cluster-wide counters as (key, value) pairs — transport counters
+    /// ride along so one series covers the whole migration path.
+    pub fn counter_series(&self, t: &RowTransport) -> [(&'static str, u64); 16] {
+        [
+            ("worker_deaths", self.worker_deaths),
+            ("evac_extracted", self.evac_extracted),
+            ("evac_salvaged", self.evac_salvaged),
+            ("evac_requeued", self.evac_requeued),
+            ("cross_races", self.cross_races),
+            ("cross_race_wins", self.cross_race_wins),
+            ("cross_race_cancels", self.cross_race_cancels),
+            ("stage_rollbacks", self.stage_rollbacks),
+            ("last_survivor_holds", self.last_survivor_holds),
+            ("completed", self.completed),
+            ("dup_completions", self.dup_completions),
+            ("transport_frames", t.frames),
+            ("transport_retries", t.retries),
+            ("transport_corruptions", t.corruptions),
+            ("transport_escalations", t.escalations),
+            ("transport_backoff_ticks", t.backoff_ticks),
+        ]
+    }
+
+    /// Per-worker counters as (key, per-worker values) pairs.
+    pub fn worker_series(&self) -> [(&'static str, &[u64]); 4] {
+        [
+            ("migrations_out", &self.migrations_out),
+            ("migrations_in", &self.migrations_in),
+            ("evacuations", &self.evacuations),
+            ("heartbeat_misses", &self.heartbeat_misses),
+        ]
+    }
+
+    fn help(key: &str) -> &'static str {
+        match key {
+            "worker_deaths" => "Workers declared dead (fault or heartbeat lapse)",
+            "evac_extracted" => "Evacuees migrated with their KV row over transport",
+            "evac_salvaged" => "Evacuees salvaged by cloning (front-of-lane re-prefill)",
+            "evac_requeued" => "Evacuees re-routed straight from the dead worker's queue",
+            "cross_races" => "Cross-worker Fastest-of-N race forks staged",
+            "cross_race_wins" => "Cross-worker races won by the remote replica",
+            "cross_race_cancels" => "Cross-worker race sides cancelled at resolution",
+            "stage_rollbacks" => "Staged race frames rolled back before commit",
+            "last_survivor_holds" => "Worker kills refused to keep the last survivor",
+            "completed" => "Unique requests completed across the cluster",
+            "dup_completions" => "Duplicate race completions dropped at drain",
+            "transport_frames" => "Migration frames put on the wire",
+            "transport_retries" => "Corrupt frames retried under backoff",
+            "transport_corruptions" => "Migration frames that failed integrity checks",
+            "transport_escalations" => "Deliveries abandoned after the retry budget",
+            "transport_backoff_ticks" => "Ticks spent in transport retry backoff",
+            "migrations_out" => "Slots migrated off this worker",
+            "migrations_in" => "Migrated payloads adopted by this worker",
+            "evacuations" => "Requests evacuated off this worker at death",
+            "heartbeat_misses" => "Stalled ticks observed on this worker",
+            _ => "Cluster counter",
+        }
+    }
+
+    /// Compact JSON rendering (same numbers the scrape publishes).
+    pub fn to_json(&self, t: &RowTransport, health: &[WorkerHealth]) -> String {
+        let mut s = String::from("{");
+        for (i, (k, v)) in self.counter_series(t).iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!("\"{k}\":{v}"));
+        }
+        for (k, vs) in self.worker_series() {
+            s.push_str(&format!(",\"{k}\":["));
+            for (i, v) in vs.iter().enumerate() {
+                if i > 0 {
+                    s.push(',');
+                }
+                s.push_str(&v.to_string());
+            }
+            s.push(']');
+        }
+        s.push_str(",\"health\":[");
+        for (i, h) in health.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&(h.code() as u64).to_string());
+        }
+        s.push_str("]}");
+        s
+    }
+
+    /// Contribute every cluster series to a scrape snapshot.
+    pub fn register(&self, reg: &mut MetricRegistry, t: &RowTransport, health: &[WorkerHealth]) {
+        for (k, v) in self.counter_series(t) {
+            reg.counter(&format!("{PROM_CLUSTER}{k}"), Self::help(k), v as f64);
+        }
+        for (k, vs) in self.worker_series() {
+            let name = format!("{PROM_CLUSTER}{k}_worker");
+            for (w, &v) in vs.iter().enumerate() {
+                reg.counter_l(&name, Self::help(k), &[("worker", &w.to_string())], v as f64);
+            }
+        }
+        for (w, h) in health.iter().enumerate() {
+            reg.gauge_l(
+                "specactor_cluster_worker_health",
+                "Worker health (0 healthy, 1 suspect, 2 dead)",
+                &[("worker", &w.to_string())],
+                h.code(),
+            );
+        }
+        let alive = health.iter().filter(|h| **h != WorkerHealth::Dead).count();
+        reg.gauge(
+            "specactor_cluster_workers_alive",
+            "Workers currently serving (not Dead)",
+            alive as f64,
+        );
+        reg.gauge(
+            "specactor_cluster_workers",
+            "Workers the cluster was built with",
+            health.len() as f64,
+        );
+    }
+}
+
+/// A cross-worker race frame staged last tick, committed (or rolled
+/// back) at the start of this one.
+struct StagedFork {
+    /// The encoded (possibly chaos-corrupted) migration frame.
+    frame: Vec<u8>,
+    /// Source (worker, slot) still running the primary.
+    src: (usize, usize),
+    /// Destination worker holding the idle slot.
+    dst: usize,
+    id: u64,
+    prio: Priority,
+    arrival_s: f64,
+}
+
+/// A live cross-worker Fastest-of-N race: the same request decoding on
+/// two workers; the first finisher wins.
+struct CrossRace {
+    id: u64,
+    src: (usize, usize),
+    dst: (usize, usize),
+}
+
+/// The multi-worker supervisor (see module docs).
+pub struct Cluster<E: ServeEngine> {
+    workers: Vec<Batcher<E>>,
+    health: Vec<WorkerHealth>,
+    /// Consecutive occupied-but-zero-progress ticks per worker.
+    stalls: Vec<u64>,
+    /// `report.total_generated` at the last observed beat.
+    last_gen: Vec<u64>,
+    /// The one global admission queue all arrivals enter through.
+    pub queue: AdmissionQueue,
+    /// The migration codec + its retry/corruption ledger.
+    pub transport: RowTransport,
+    pub metrics: ClusterMetrics,
+    staged: Option<StagedFork>,
+    races: Vec<CrossRace>,
+    /// Cross-worker racing enabled (`with_cross_racing`).
+    racing: bool,
+    /// Ids already drained as finished (the dedup set).
+    done_ids: BTreeSet<u64>,
+    ticks: u64,
+    /// Stalled ticks on an occupied worker before it turns Suspect.
+    pub suspect_after: u64,
+    /// Further stalled ticks before a Suspect worker's deadline lapses.
+    pub dead_after: u64,
+}
+
+impl<E: ServeEngine> Cluster<E> {
+    /// Build a cluster over pre-configured per-worker batchers and a
+    /// global admission queue bound.
+    pub fn new(workers: Vec<Batcher<E>>, queue_cap: usize) -> Self {
+        assert!(!workers.is_empty(), "cluster needs at least one worker");
+        let n = workers.len();
+        Cluster {
+            health: vec![WorkerHealth::Healthy; n],
+            stalls: vec![0; n],
+            last_gen: vec![0; n],
+            queue: AdmissionQueue::new(queue_cap),
+            transport: RowTransport::default(),
+            metrics: ClusterMetrics::new(n),
+            staged: None,
+            races: Vec::new(),
+            racing: false,
+            done_ids: BTreeSet::new(),
+            ticks: 0,
+            suspect_after: 4,
+            dead_after: 4,
+            workers,
+        }
+    }
+
+    /// Enable cross-worker Fastest-of-N race forks.
+    pub fn with_cross_racing(mut self) -> Self {
+        self.racing = true;
+        self
+    }
+
+    /// Override the heartbeat policy (stalled ticks to Suspect, further
+    /// stalled ticks to Dead).
+    pub fn with_heartbeat(mut self, suspect_after: u64, dead_after: u64) -> Self {
+        self.suspect_after = suspect_after.max(1);
+        self.dead_after = dead_after.max(1);
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.workers.is_empty()
+    }
+
+    pub fn workers(&self) -> &[Batcher<E>] {
+        &self.workers
+    }
+
+    pub fn worker_mut(&mut self, w: usize) -> &mut Batcher<E> {
+        &mut self.workers[w]
+    }
+
+    pub fn health(&self) -> &[WorkerHealth] {
+        &self.health
+    }
+
+    /// Workers currently serving (not Dead).
+    pub fn alive(&self) -> usize {
+        self.health.iter().filter(|h| **h != WorkerHealth::Dead).count()
+    }
+
+    pub fn ticks(&self) -> u64 {
+        self.ticks
+    }
+
+    /// Offer a request to the global queue (false = backpressure).
+    pub fn enqueue(&mut self, req: Request, prio: Priority, now_s: f64) -> bool {
+        self.queue.push(req, prio, now_s)
+    }
+
+    /// Nothing queued anywhere, nothing in flight, nothing staged.
+    pub fn idle(&self) -> bool {
+        self.queue.is_empty()
+            && self.staged.is_none()
+            && self.workers.iter().all(|b| b.idle())
+    }
+
+    /// Typed rejections across the cluster: global-queue sheds plus every
+    /// worker's sheds and retry exhaustions. Together with completions
+    /// and invalid screens this accounts for every offered request —
+    /// nothing is ever silently lost.
+    pub fn rejected(&self) -> u64 {
+        self.queue.rejected + self.workers.iter().map(|b| b.queue.rejected).sum::<u64>()
+    }
+
+    /// Completed requests drained off every worker, deduplicated by
+    /// request id (a cross-worker race tie can retire both sides in the
+    /// same tick; the copies are token-identical, so the second is
+    /// dropped and counted, never double-delivered).
+    pub fn drain_finished(&mut self) -> Vec<FinishedRequest> {
+        let mut out = Vec::new();
+        for b in &mut self.workers {
+            for f in b.drain_finished() {
+                if self.done_ids.insert(f.req.id) {
+                    self.metrics.completed += 1;
+                    out.push(f);
+                } else {
+                    self.metrics.dup_completions += 1;
+                }
+            }
+        }
+        out
+    }
+
+    /// One cluster round (see module docs for the phase order).
+    pub fn tick(&mut self, now_s: f64) -> Result<()> {
+        self.ticks += 1;
+        self.commit_staged()?;
+        self.route();
+        for w in 0..self.workers.len() {
+            if self.health[w] == WorkerHealth::Dead {
+                continue;
+            }
+            match self.workers[w].tick(now_s) {
+                Ok(_) => self.observe_beat(w),
+                Err(e) => {
+                    let fatal = e
+                        .downcast_ref::<SpecError>()
+                        .map(|s| s.severity() == Severity::WorkerFatal)
+                        .unwrap_or(false);
+                    if !fatal {
+                        // sub-fatal severities are recovered inside the
+                        // batcher; anything escaping is a real bug
+                        return Err(e);
+                    }
+                    // already captured by the batcher's on_round_error
+                    self.on_worker_fatal(w, e, true)?;
+                }
+            }
+        }
+        self.check_heartbeats()?;
+        self.resolve_races()?;
+        if self.racing && self.workers.len() > 1 {
+            self.stage_race();
+        }
+        self.balance()?;
+        Ok(())
+    }
+
+    /// Per-tick heartbeat observation: token progress (or an empty
+    /// worker) is a beat; an occupied worker that generated nothing
+    /// accumulates stall ticks and heartbeat misses.
+    fn observe_beat(&mut self, w: usize) {
+        let gen = self.workers[w].report.total_generated;
+        let occupied = self.workers[w].slots.occupancy() > 0;
+        if gen > self.last_gen[w] || !occupied {
+            self.last_gen[w] = gen;
+            self.stalls[w] = 0;
+            if self.health[w] == WorkerHealth::Suspect {
+                self.health[w] = WorkerHealth::Healthy;
+            }
+        } else {
+            self.stalls[w] += 1;
+            self.metrics.heartbeat_misses[w] += 1;
+        }
+    }
+
+    /// Deadline supervision: `suspect_after` stalls → Suspect;
+    /// `dead_after` more → declared dead ([`SpecError::WorkerDead`]) and
+    /// evacuated exactly like an in-band WorkerFatal.
+    fn check_heartbeats(&mut self) -> Result<()> {
+        for w in 0..self.workers.len() {
+            match self.health[w] {
+                WorkerHealth::Dead => {}
+                WorkerHealth::Healthy => {
+                    if self.stalls[w] >= self.suspect_after {
+                        self.health[w] = WorkerHealth::Suspect;
+                    }
+                }
+                WorkerHealth::Suspect => {
+                    if self.stalls[w] >= self.suspect_after + self.dead_after {
+                        let e: anyhow::Error = SpecError::WorkerDead { worker: w }.into();
+                        self.on_worker_fatal(w, e, false)?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// A worker-fatal event: evacuate and degrade — unless the victim is
+    /// the last alive worker, in which case the kill is REFUSED (there
+    /// is nowhere to evacuate to): the worker is held in Suspect and
+    /// keeps serving, so no chaos schedule can abort the wave. `dumped`
+    /// says whether the batcher already captured the post-mortem.
+    fn on_worker_fatal(&mut self, w: usize, e: anyhow::Error, dumped: bool) -> Result<()> {
+        if !dumped {
+            self.workers[w].record_fault(&e);
+        }
+        if self.alive() <= 1 {
+            self.health[w] = WorkerHealth::Suspect;
+            self.stalls[w] = 0;
+            self.metrics.last_survivor_holds += 1;
+            return Ok(());
+        }
+        self.kill_worker(w)
+    }
+
+    /// Declare `w` dead and run the evacuation protocol: cancel races
+    /// touching it (the surviving side carries the request alone), roll
+    /// back any staged frame involving it, then strip every live slot
+    /// and queued request off it and redistribute to the survivors.
+    pub fn kill_worker(&mut self, w: usize) -> Result<()> {
+        if self.health[w] == WorkerHealth::Dead {
+            return Ok(());
+        }
+        if self.alive() <= 1 {
+            bail!("refusing to kill worker {w}: it is the last one alive");
+        }
+        self.health[w] = WorkerHealth::Dead;
+        self.metrics.worker_deaths += 1;
+        // Cross-worker races with a side on the dead worker: the
+        // surviving side keeps decoding the request alone; the dead
+        // side's copy must be skipped during evacuation so the request
+        // is neither double-served nor lost.
+        let mut skip: BTreeSet<u64> = BTreeSet::new();
+        let cancels = &mut self.metrics.cross_race_cancels;
+        self.races.retain(|r| {
+            if r.src.0 == w || r.dst.0 == w {
+                skip.insert(r.id);
+                *cancels += 1;
+                false
+            } else {
+                true
+            }
+        });
+        if let Some(s) = &self.staged {
+            if s.src.0 == w || s.dst == w {
+                self.metrics.stage_rollbacks += 1;
+                self.staged = None;
+            }
+        }
+        let evacuees = self.workers[w].evacuate();
+        for e in evacuees {
+            if skip.contains(&e.payload.req.id) {
+                continue;
+            }
+            self.metrics.evacuations[w] += 1;
+            self.place_evacuee(w, e)?;
+        }
+        Ok(())
+    }
+
+    /// Re-home one evacuee according to how it left the dead worker.
+    fn place_evacuee(&mut self, from: usize, e: Evacuee) -> Result<()> {
+        match e.kind {
+            // Never admitted: plain re-route, no retry charge. If every
+            // survivor is saturated it parks on the global queue.
+            EvacKind::Queued => {
+                self.metrics.evac_requeued += 1;
+                match self.pick_route_worker() {
+                    Some(w) => {
+                        self.workers[w].enqueue(e.payload.req, e.prio, e.arrival_s);
+                    }
+                    None => {
+                        self.queue.requeue_front(e.payload.req, e.prio, e.arrival_s);
+                    }
+                }
+                Ok(())
+            }
+            // The dead runtime would not give the row back: clone-based
+            // salvage → front-of-lane re-prefill, charged one retry.
+            EvacKind::Salvaged => {
+                let w = self
+                    .least_loaded_alive()
+                    .ok_or_else(|| anyhow!("no surviving worker for salvage"))?;
+                self.metrics.evac_salvaged += 1;
+                self.workers[w].readmit(e.payload.req, e.prio, e.arrival_s, e.retries, true);
+                Ok(())
+            }
+            // Full payload: ship the row over the wire to a survivor
+            // with a free slot. Transport escalation (budget exhausted)
+            // falls back to the charged re-prefill path; a full cluster
+            // re-queues the intact state uncharged.
+            EvacKind::Extracted => {
+                if let Some(w) = self.pick_adopt_worker() {
+                    match self.transfer(w, &e.payload) {
+                        Ok(p) => {
+                            let adopted = Evacuee { payload: p, ..e.clone() };
+                            if self.workers[w].adopt(&adopted).is_ok() {
+                                self.metrics.evac_extracted += 1;
+                                self.metrics.migrations_out[from] += 1;
+                                self.metrics.migrations_in[w] += 1;
+                                return Ok(());
+                            }
+                        }
+                        Err(_) => {
+                            let w2 = self
+                                .least_loaded_alive()
+                                .ok_or_else(|| anyhow!("no surviving worker"))?;
+                            self.metrics.evac_salvaged += 1;
+                            self.workers[w2].readmit(
+                                e.payload.req,
+                                e.prio,
+                                e.arrival_s,
+                                e.retries,
+                                true,
+                            );
+                            return Ok(());
+                        }
+                    }
+                }
+                // no survivor has a free slot right now (or the adopt
+                // refused): the extracted state is intact and replayable,
+                // so it re-queues front-of-lane uncharged
+                let w = self
+                    .least_loaded_alive()
+                    .ok_or_else(|| anyhow!("no surviving worker"))?;
+                self.metrics.evac_requeued += 1;
+                self.workers[w].readmit(e.payload.req, e.prio, e.arrival_s, e.retries, false);
+                Ok(())
+            }
+        }
+    }
+
+    /// One frame over the wire to worker `to`: encode → (chaos) corrupt
+    /// → decode, retried by [`RowTransport::deliver`] under exponential
+    /// backoff within its budget. The destination engine's
+    /// `corrupt_frame` hook models in-flight corruption.
+    fn transfer(&mut self, to: usize, p: &MigrationPayload) -> Result<MigrationPayload> {
+        let (transport, workers) = (&mut self.transport, &mut self.workers);
+        let engine = workers[to].engine_mut();
+        transport.deliver(p, &mut |mut f: Vec<u8>| {
+            engine.corrupt_frame(&mut f);
+            f
+        })
+    }
+
+    /// Route global admissions: pop while some alive worker has genuine
+    /// headroom (load strictly under slot capacity, so its local queue
+    /// can never shed what the global queue would have held).
+    fn route(&mut self) {
+        loop {
+            let Some(w) = self.pick_route_worker() else {
+                break;
+            };
+            let Some(q) = self.queue.pop() else {
+                break;
+            };
+            // arrival time is preserved: queue-wait latency measures
+            // from the global enqueue, not the hop
+            self.workers[w].enqueue(q.req, q.prio, q.enqueued_s);
+        }
+    }
+
+    /// Least-loaded alive worker with headroom (load < slot capacity).
+    fn pick_route_worker(&self) -> Option<usize> {
+        (0..self.workers.len())
+            .filter(|&w| self.health[w] != WorkerHealth::Dead)
+            .filter(|&w| self.workers[w].load() < self.workers[w].slots.capacity())
+            .min_by_key(|&w| self.workers[w].load())
+    }
+
+    /// Least-loaded alive worker, headroom or not.
+    fn least_loaded_alive(&self) -> Option<usize> {
+        (0..self.workers.len())
+            .filter(|&w| self.health[w] != WorkerHealth::Dead)
+            .min_by_key(|&w| self.workers[w].load())
+    }
+
+    /// Least-loaded alive worker with a free slot right now.
+    fn pick_adopt_worker(&self) -> Option<usize> {
+        (0..self.workers.len())
+            .filter(|&w| self.health[w] != WorkerHealth::Dead)
+            .filter(|&w| self.workers[w].slots.occupancy() < self.workers[w].slots.capacity())
+            .min_by_key(|&w| self.workers[w].load())
+    }
+
+    /// Is (worker, slot) a side of a live cross-worker race or the
+    /// staged fork?
+    fn in_cross_race(&self, w: usize, s: usize) -> bool {
+        self.races.iter().any(|r| r.src == (w, s) || r.dst == (w, s))
+            || self.staged.as_ref().is_some_and(|f| f.src == (w, s))
+    }
+
+    /// A race side is valid while its worker is alive, the slot is live,
+    /// and the slot still holds the raced request.
+    fn side_valid(&self, w: usize, s: usize, id: u64) -> bool {
+        self.health[w] != WorkerHealth::Dead
+            && self.workers[w].slots.is_live(s)
+            && self.workers[w].engine().request(s).map(|r| r.id) == Some(id)
+    }
+
+    /// Resolve cross-worker races: first finisher wins, the loser's slot
+    /// is cancelled (identical tokens — the tape is keyed by (seed,
+    /// request, position)). A side that left its slot (finished and
+    /// retired, quarantined, or migrated) forfeits: the OTHER side is
+    /// cancelled so exactly one copy of the request survives.
+    fn resolve_races(&mut self) -> Result<()> {
+        let races = std::mem::take(&mut self.races);
+        for r in races {
+            let sv = self.side_valid(r.src.0, r.src.1, r.id);
+            let dv = self.side_valid(r.dst.0, r.dst.1, r.id);
+            match (sv, dv) {
+                (true, true) => {
+                    let sd = self.workers[r.src.0].engine().is_done(r.src.1);
+                    let dd = self.workers[r.dst.0].engine().is_done(r.dst.1);
+                    if sd || dd {
+                        // tie goes to the source (either copy is correct)
+                        let (lw, ls) = if sd { r.dst } else { r.src };
+                        if dd && !sd {
+                            self.metrics.cross_race_wins += 1;
+                        }
+                        self.workers[lw].cancel_slot(ls)?;
+                        self.metrics.cross_race_cancels += 1;
+                    } else {
+                        self.races.push(r);
+                    }
+                }
+                (true, false) => {
+                    self.workers[r.src.0].cancel_slot(r.src.1)?;
+                    self.metrics.cross_race_cancels += 1;
+                }
+                (false, true) => {
+                    self.workers[r.dst.0].cancel_slot(r.dst.1)?;
+                    self.metrics.cross_race_cancels += 1;
+                }
+                (false, false) => {
+                    self.metrics.cross_race_cancels += 1;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Stage a cross-worker race fork: snapshot the worst-acceptance
+    /// straggler's payload, put the frame on the wire NOW, commit next
+    /// tick — the source verifies one more round while the frame
+    /// travels, exactly the overlap discipline `engine/overlap.rs` uses
+    /// in-process. One race at a time; racing never displaces
+    /// admissions (the destination must be idle-slotted with no
+    /// backlog and the global queue empty).
+    fn stage_race(&mut self) {
+        if self.staged.is_some() || !self.races.is_empty() || !self.queue.is_empty() {
+            return;
+        }
+        let Some(dst) = (0..self.workers.len())
+            .filter(|&w| self.health[w] == WorkerHealth::Healthy)
+            .filter(|&w| self.workers[w].queue.is_empty())
+            .filter(|&w| self.workers[w].slots.occupancy() < self.workers[w].slots.capacity())
+            .min_by_key(|&w| self.workers[w].load())
+        else {
+            return;
+        };
+        let mut cand: Option<(usize, usize, f64)> = None;
+        for w in 0..self.workers.len() {
+            if w == dst || self.health[w] == WorkerHealth::Dead {
+                continue;
+            }
+            let b = &self.workers[w];
+            let member = |s: usize| b.is_race_member(s) || self.in_cross_race(w, s);
+            let Some(s) = cross_race_candidate(b.engine(), member, MIN_RACE_REMAINING) else {
+                continue;
+            };
+            let rate = b.engine().request(s).map(|r| r.accept.rate()).unwrap_or(1.0);
+            let better = match cand {
+                None => true,
+                Some((_, _, c)) => rate < c,
+            };
+            if better {
+                cand = Some((w, s, rate));
+            }
+        }
+        let Some((sw, ss, _)) = cand else {
+            return;
+        };
+        let Some((prio, arrival_s)) = self.workers[sw].slot_meta(ss) else {
+            return;
+        };
+        let Ok(p) = self.workers[sw].engine().snapshot_payload(ss) else {
+            return;
+        };
+        let id = p.req.id;
+        let frame = {
+            let (transport, workers) = (&mut self.transport, &mut self.workers);
+            transport.frames += 1;
+            let mut f = transport.encode(&p);
+            workers[dst].engine_mut().corrupt_frame(&mut f);
+            f
+        };
+        self.staged = Some(StagedFork { frame, src: (sw, ss), dst, id, prio, arrival_s });
+        self.metrics.cross_races += 1;
+    }
+
+    /// Commit (or roll back) the race frame staged last tick. Rollback
+    /// cases: the source finished/moved/died while the frame travelled
+    /// (stale stamp), the destination died or its slot was taken by an
+    /// admission, or the frame arrived corrupt — the source still has
+    /// everything, so a corrupt frame just counts a transport retry and
+    /// the next stage re-snapshots (a re-transmission).
+    fn commit_staged(&mut self) -> Result<()> {
+        let Some(s) = self.staged.take() else {
+            return Ok(());
+        };
+        if !self.side_valid(s.src.0, s.src.1, s.id)
+            || self.workers[s.src.0].engine().is_done(s.src.1)
+            || self.health[s.dst] == WorkerHealth::Dead
+        {
+            self.metrics.stage_rollbacks += 1;
+            return Ok(());
+        }
+        let payload = match self.transport.decode(&s.frame) {
+            Ok(p) => p,
+            Err(_) => {
+                self.transport.corruptions += 1;
+                self.transport.retries += 1;
+                self.metrics.stage_rollbacks += 1;
+                return Ok(());
+            }
+        };
+        let ev = Evacuee {
+            payload,
+            prio: s.prio,
+            arrival_s: s.arrival_s,
+            retries: 0,
+            kind: EvacKind::Extracted,
+        };
+        match self.workers[s.dst].adopt(&ev) {
+            Ok(rslot) => {
+                self.races.push(CrossRace { id: s.id, src: s.src, dst: (s.dst, rslot) });
+            }
+            Err(_) => {
+                // destination full (an admission won the slot): the
+                // primary is untouched, the race just didn't launch
+                self.metrics.stage_rollbacks += 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// Work-stealing balance: when a worker sits fully idle while
+    /// another still holds two or more live slots, migrate ONE slot per
+    /// tick through the transport path (a control-plane cost: one frame,
+    /// one row insert).
+    fn balance(&mut self) -> Result<()> {
+        if !self.queue.is_empty() || self.workers.len() < 2 {
+            return Ok(());
+        }
+        let Some(dw) = (0..self.workers.len())
+            .filter(|&w| self.health[w] == WorkerHealth::Healthy)
+            .find(|&w| self.workers[w].load() == 0)
+        else {
+            return Ok(());
+        };
+        let Some(sw) = (0..self.workers.len())
+            .filter(|&w| w != dw && self.health[w] != WorkerHealth::Dead)
+            .filter(|&w| self.workers[w].slots.occupancy() >= 2)
+            .max_by_key(|&w| self.workers[w].slots.occupancy())
+        else {
+            return Ok(());
+        };
+        // steal the live slot with the most remaining work (it benefits
+        // most from a dedicated worker), skipping race members
+        let cap = self.workers[sw].slots.capacity();
+        let mut pick: Option<(usize, usize)> = None;
+        for s in 0..cap {
+            if !self.workers[sw].slots.is_live(s)
+                || self.workers[sw].engine().is_done(s)
+                || self.workers[sw].is_race_member(s)
+                || self.in_cross_race(sw, s)
+            {
+                continue;
+            }
+            let Some(r) = self.workers[sw].engine().request(s) else {
+                continue;
+            };
+            let remaining = r.budget.saturating_sub(r.generated());
+            if remaining == 0 {
+                continue;
+            }
+            let better = match pick {
+                None => true,
+                Some((_, best)) => remaining > best,
+            };
+            if better {
+                pick = Some((s, remaining));
+            }
+        }
+        let Some((slot, _)) = pick else {
+            return Ok(());
+        };
+        let Some(ev) = self.workers[sw].extract_slot(slot)? else {
+            return Ok(());
+        };
+        match self.transfer(dw, &ev.payload) {
+            Ok(p) => {
+                let adopted = Evacuee { payload: p, ..ev.clone() };
+                if self.workers[dw].adopt(&adopted).is_ok() {
+                    self.metrics.migrations_out[sw] += 1;
+                    self.metrics.migrations_in[dw] += 1;
+                } else {
+                    // destination refused: re-prefill there, uncharged
+                    // (the extracted state is intact and replayable)
+                    self.workers[dw].readmit(
+                        ev.payload.req,
+                        ev.prio,
+                        ev.arrival_s,
+                        ev.retries,
+                        false,
+                    );
+                }
+            }
+            Err(_) => {
+                // transport escalated past its budget (counted in the
+                // transport ledger): charged re-prefill at the source's
+                // side of the wire never happens — the state was already
+                // extracted — so it re-prefills at the destination
+                self.workers[dw].readmit(ev.payload.req, ev.prio, ev.arrival_s, ev.retries, true);
+            }
+        }
+        Ok(())
+    }
+
+    /// Assemble the cluster scrape snapshot: cluster + transport series,
+    /// per-worker health gauges, and the global queue's counters.
+    pub fn collect_registry(&self) -> MetricRegistry {
+        let mut reg = MetricRegistry::new();
+        self.metrics.register(&mut reg, &self.transport, &self.health);
+        self.queue.register_metrics(&mut reg);
+        reg
+    }
+
+    /// Compact JSON rendering of the cluster counters (same numbers the
+    /// scrape publishes).
+    pub fn to_json(&self) -> String {
+        self.metrics.to_json(&self.transport, &self.health)
+    }
+}
+
+/// Drive a cluster through an open-loop arrival schedule — the
+/// multi-worker sibling of [`drive_open_loop`]; same contract: arrivals
+/// are (absolute seconds, request, priority) ascending by time, `dt`
+/// fixes virtual time per tick (None = measured wall time).
+///
+/// [`drive_open_loop`]: super::batcher::drive_open_loop
+pub fn drive_cluster_open_loop<E: ServeEngine>(
+    c: &mut Cluster<E>,
+    arrivals: Vec<(f64, Request, Priority)>,
+    dt: Option<f64>,
+) -> Result<OpenLoopReport> {
+    if arrivals.windows(2).any(|w| w[1].0 < w[0].0) {
+        bail!("arrivals must be sorted by time");
+    }
+    let mut rep = OpenLoopReport { offered: arrivals.len(), ..Default::default() };
+    let rejected0 = c.rejected();
+    let mut now = 0.0f64;
+    let mut pending = arrivals.into_iter().peekable();
+    loop {
+        while pending.peek().map(|(t, _, _)| *t <= now).unwrap_or(false) {
+            let (t, req, prio) = pending.next().unwrap();
+            c.enqueue(req, prio, t);
+        }
+        if c.idle() {
+            match pending.peek() {
+                Some((t, _, _)) => {
+                    now = *t;
+                    continue;
+                }
+                None => break,
+            }
+        }
+        let t0 = std::time::Instant::now();
+        c.tick(now)?;
+        rep.ticks += 1;
+        now += dt.unwrap_or_else(|| t0.elapsed().as_secs_f64());
+    }
+    rep.elapsed_s = now;
+    rep.rejected = (c.rejected() - rejected0) as usize;
+    Ok(rep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    use crate::engine::{EngineReport, SlotPlan};
+    use crate::serve::batcher::{drive_open_loop, SyntheticEngine};
+    use crate::serve::replan::Replanner;
+
+    fn mk_batcher(cap: usize, seed: u64) -> Batcher<SyntheticEngine> {
+        Batcher::new(SyntheticEngine::new(cap, seed), 64, Replanner::synthetic(), true)
+    }
+
+    fn arrivals(n: usize, budget: usize) -> Vec<(f64, Request, Priority)> {
+        (0..n)
+            .map(|i| {
+                (i as f64 * 1e-3, Request::new(i as u64, vec![0; 8], budget), Priority::Batch)
+            })
+            .collect()
+    }
+
+    fn by_id(done: Vec<FinishedRequest>) -> Vec<(u64, Vec<i32>)> {
+        let mut v: Vec<(u64, Vec<i32>)> =
+            done.into_iter().map(|f| (f.req.id, f.req.seq.clone())).collect();
+        v.sort_by_key(|x| x.0);
+        v
+    }
+
+    #[test]
+    fn cluster_tokens_match_single_worker() {
+        let mut b = mk_batcher(4, 7);
+        drive_open_loop(&mut b, arrivals(12, 16), Some(1e-3)).unwrap();
+        let want = by_id(b.drain_finished());
+        assert_eq!(want.len(), 12);
+
+        let mut c = Cluster::new((0..3).map(|_| mk_batcher(4, 7)).collect(), 64);
+        let rep = drive_cluster_open_loop(&mut c, arrivals(12, 16), Some(1e-3)).unwrap();
+        assert_eq!(rep.rejected, 0);
+        let got = by_id(c.drain_finished());
+        assert_eq!(got, want);
+        assert_eq!(c.metrics.completed, 12);
+        assert_eq!(c.metrics.dup_completions, 0);
+    }
+
+    #[test]
+    fn mid_wave_kill_is_lossless() {
+        let mut b = mk_batcher(4, 7);
+        drive_open_loop(&mut b, arrivals(12, 16), Some(1e-3)).unwrap();
+        let want = by_id(b.drain_finished());
+
+        let mut c = Cluster::new((0..3).map(|_| mk_batcher(4, 7)).collect(), 64);
+        for (t, r, p) in arrivals(12, 16) {
+            assert!(c.enqueue(r, p, t));
+        }
+        for _ in 0..3 {
+            c.tick(0.0).unwrap();
+        }
+        c.kill_worker(0).unwrap();
+        assert_eq!(c.health()[0], WorkerHealth::Dead);
+        let mut guard = 0;
+        while !c.idle() {
+            c.tick(0.0).unwrap();
+            guard += 1;
+            assert!(guard < 10_000, "cluster failed to drain after a worker kill");
+        }
+        let got = by_id(c.drain_finished());
+        assert_eq!(got, want, "a mid-wave worker kill must stay token-identical");
+        assert_eq!(c.metrics.worker_deaths, 1);
+        assert_eq!(c.rejected(), 0, "zero requests lost to the kill");
+        // every evacuee left through exactly one typed path
+        assert_eq!(
+            c.metrics.evacuations[0],
+            c.metrics.evac_extracted + c.metrics.evac_salvaged + c.metrics.evac_requeued
+        );
+    }
+
+    #[test]
+    fn last_survivor_is_held_not_killed() {
+        let mut c = Cluster::new((0..2).map(|_| mk_batcher(2, 3)).collect(), 16);
+        c.kill_worker(0).unwrap();
+        assert!(c.kill_worker(1).is_err(), "direct kill of the last survivor must refuse");
+        let e: anyhow::Error = SpecError::WorkerDead { worker: 1 }.into();
+        c.on_worker_fatal(1, e, true).unwrap();
+        assert_eq!(c.metrics.last_survivor_holds, 1);
+        assert_eq!(c.health()[1], WorkerHealth::Suspect);
+        assert_eq!(c.alive(), 1);
+    }
+
+    #[test]
+    fn balance_steals_work_onto_an_idle_worker() {
+        let mut b = mk_batcher(4, 7);
+        drive_open_loop(&mut b, arrivals(6, 16), Some(1e-3)).unwrap();
+        let want = by_id(b.drain_finished());
+
+        let mut c = Cluster::new((0..2).map(|_| mk_batcher(4, 7)).collect(), 64);
+        // load every request onto worker 0's local queue so worker 1
+        // starts fully idle — the balancer must work-steal
+        for (t, r, p) in arrivals(6, 16) {
+            c.worker_mut(0).enqueue(r, p, t);
+        }
+        let mut guard = 0;
+        while !c.idle() {
+            c.tick(0.0).unwrap();
+            guard += 1;
+            assert!(guard < 10_000);
+        }
+        assert!(c.metrics.migrations_in[1] > 0, "expected at least one stolen slot");
+        assert_eq!(c.transport.frames, c.metrics.migrations_in[1]);
+        assert_eq!(c.transport.corruptions, 0);
+        let got = by_id(c.drain_finished());
+        assert_eq!(got, want, "work-stealing migration must stay token-identical");
+    }
+
+    #[test]
+    fn cross_worker_race_is_lossless() {
+        let mut b = mk_batcher(4, 7);
+        drive_open_loop(&mut b, arrivals(4, 24), Some(1e-3)).unwrap();
+        let want = by_id(b.drain_finished());
+
+        let mut c = Cluster::new((0..2).map(|_| mk_batcher(4, 7)).collect(), 64)
+            .with_cross_racing();
+        // park everything on worker 0: worker 1 stays an idle race host
+        for (t, r, p) in arrivals(4, 24) {
+            c.worker_mut(0).enqueue(r, p, t);
+        }
+        let mut guard = 0;
+        while !c.idle() {
+            c.tick(0.0).unwrap();
+            guard += 1;
+            assert!(guard < 10_000);
+        }
+        let got = by_id(c.drain_finished());
+        assert_eq!(got, want, "cross-worker racing must stay token-identical");
+        assert_eq!(c.metrics.completed, 4);
+        assert_eq!(c.metrics.dup_completions, 0);
+        // id 3 is the synthetic tail straggler: with an idle remote
+        // worker and an empty queue at least one fork must have staged
+        // (work-stealing may still beat racing to the idle slot)
+        assert!(
+            c.metrics.cross_races + c.metrics.migrations_in[1] > 0,
+            "neither a race nor a steal reached the idle worker"
+        );
+    }
+
+    /// Minimal engine whose slots stop making progress on demand — the
+    /// heartbeat supervisor's quarry.
+    struct StallEngine {
+        slots: Vec<Option<Request>>,
+        stalled: bool,
+    }
+
+    impl StallEngine {
+        fn new(cap: usize, stalled: bool) -> Self {
+            StallEngine { slots: (0..cap).map(|_| None).collect(), stalled }
+        }
+    }
+
+    impl ServeEngine for StallEngine {
+        fn capacity(&self) -> usize {
+            self.slots.len()
+        }
+
+        fn admit(&mut self, slot: usize, req: Request, _plan: SlotPlan) -> Result<()> {
+            if self.slots[slot].is_some() {
+                bail!("slot {slot} occupied");
+            }
+            self.slots[slot] = Some(req);
+            Ok(())
+        }
+
+        fn retire(&mut self, slot: usize) -> Result<Request> {
+            self.slots[slot].take().ok_or_else(|| anyhow!("slot {slot} empty"))
+        }
+
+        fn round(&mut self, rep: &mut EngineReport) -> Result<usize> {
+            let stalled = self.stalled;
+            let mut active = 0;
+            for r in self.slots.iter_mut().flatten() {
+                if r.done {
+                    continue;
+                }
+                active += 1;
+                if stalled {
+                    continue;
+                }
+                let t = (r.id as i32).wrapping_mul(31).wrapping_add(r.seq.len() as i32) & 0x7fff;
+                r.seq.push(t);
+                rep.total_generated += 1;
+                if r.generated() >= r.budget {
+                    r.done = true;
+                }
+            }
+            Ok(active)
+        }
+
+        fn is_done(&self, slot: usize) -> bool {
+            self.slots.get(slot).and_then(|s| s.as_ref()).map(|r| r.done).unwrap_or(false)
+        }
+
+        fn slot_plan(&self, _slot: usize) -> Option<SlotPlan> {
+            Some(SlotPlan::vanilla())
+        }
+
+        fn set_slot_plan(&mut self, _slot: usize, _plan: SlotPlan) -> Result<()> {
+            Ok(())
+        }
+
+        fn request(&self, slot: usize) -> Option<&Request> {
+            self.slots.get(slot).and_then(|s| s.as_ref())
+        }
+    }
+
+    #[test]
+    fn heartbeat_lapse_declares_death_and_relocates_the_request() {
+        let mk = |stalled| {
+            // tracing on: the death must leave a flight-recorder dump
+            Batcher::new(StallEngine::new(2, stalled), 16, Replanner::synthetic(), false)
+                .with_tracing(64)
+        };
+        let mut c = Cluster::new(vec![mk(true), mk(false)], 16).with_heartbeat(3, 2);
+        // worker 0 is less loaded at route time, so the request lands on
+        // the staller and wedges there
+        c.worker_mut(0).enqueue(Request::new(0, vec![0; 4], 8), Priority::Batch, 0.0);
+        let mut guard = 0;
+        while !c.idle() {
+            c.tick(0.0).unwrap();
+            guard += 1;
+            assert!(guard < 1_000, "stalled request never relocated");
+        }
+        assert_eq!(c.health()[0], WorkerHealth::Dead);
+        assert_eq!(c.metrics.worker_deaths, 1);
+        assert!(c.metrics.heartbeat_misses[0] >= 5);
+        let done = c.drain_finished();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].req.id, 0);
+        assert_eq!(done[0].req.seq.len(), 4 + 8);
+        // the heartbeat death left a post-mortem in the flight recorder
+        assert_eq!(c.workers()[0].fault_dumps.len(), 1);
+        assert_eq!(c.rejected(), 0);
+    }
+}

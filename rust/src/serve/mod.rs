@@ -29,6 +29,13 @@
 //! [`MetricsExporter`](crate::obs::MetricsExporter), `--metrics-addr`) —
 //! both assembled from the same counters `ServeMetrics::to_json` renders.
 //!
+//! Multi-worker serving (`--workers N`): [`cluster::Cluster`] puts N of
+//! these loops behind one global queue with heartbeat supervision,
+//! work-stealing slot migration over checksummed
+//! [`RowTransport`](crate::runtime::RowTransport) frames, cross-worker
+//! Fastest-of-N race forks, and WorkerFatal recovery by slot evacuation
+//! (capacity degrades to N−1; no request is ever lost).
+//!
 //! Entry points: `specactor serve` (open-loop arrivals from
 //! `sim::traces::ArrivalProcess`), `examples/serve_demo.rs`, and
 //! `benches/serve_throughput.rs` (BENCH_serve.json). See PERF.md
@@ -36,15 +43,17 @@
 
 pub mod batcher;
 pub mod chaos;
+pub mod cluster;
 pub mod metrics;
 pub mod queue;
 pub mod replan;
 pub mod slots;
 
 pub use batcher::{
-    drive_open_loop, Batcher, FinishedRequest, OpenLoopReport, ServeEngine, SyntheticEngine,
-    TickReport,
+    drive_open_loop, Batcher, EvacKind, Evacuee, FinishedRequest, OpenLoopReport, ServeEngine,
+    SyntheticEngine, TickReport,
 };
+pub use cluster::{drive_cluster_open_loop, Cluster, ClusterMetrics, WorkerHealth};
 pub use chaos::{ChaosEngine, FaultPlan};
 pub use metrics::ServeMetrics;
 pub use queue::{AdmissionQueue, Priority, RejectReason};

@@ -111,6 +111,13 @@ impl Default for AcceptanceStats {
 }
 
 impl AcceptanceStats {
+    /// Rebuild stats from a serialized ledger (cross-worker migration:
+    /// `runtime::transport` round-trips the three public fields; the
+    /// smoothing factor is a constant, not request state).
+    pub fn from_ledger(proposed: u64, accepted: u64, ewma: f64) -> Self {
+        AcceptanceStats { proposed, accepted, ewma, ..Default::default() }
+    }
+
     pub fn observe(&mut self, proposed: usize, accepted: usize) {
         self.proposed += proposed as u64;
         self.accepted += accepted as u64;

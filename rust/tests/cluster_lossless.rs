@@ -1,0 +1,313 @@
+//! Multi-worker cluster losslessness: N workers behind one global queue
+//! must serve EXACTLY the token streams a fault-free single-worker
+//! vanilla rollout would have produced — through routing, work-stealing
+//! migration, cross-worker race forks, transport corruption, and
+//! mid-wave worker death. The synthetic stream is a pure function of
+//! (request id, position), so `expected_seq` is the oracle and no
+//! baseline run is needed; every request offered must either complete
+//! token-identical or be rejected through a TYPED counter — never lost.
+
+use anyhow::Result;
+
+use specactor::engine::{EngineReport, Request, SlotPlan};
+use specactor::planner::costmodel::CostModel;
+use specactor::runtime::MigrationPayload;
+use specactor::serve::{
+    drive_cluster_open_loop, Batcher, ChaosEngine, Cluster, FaultPlan, FinishedRequest, Priority,
+    Replanner, ServeEngine, SyntheticEngine, WorkerHealth,
+};
+
+/// Same single-family ladder the batcher's own tests pin.
+fn replanner() -> Replanner {
+    Replanner::new(
+        CostModel::paper_32b(),
+        vec![
+            ("draft_mid".to_string(), 0.82),
+            ("draft_small".to_string(), 0.74),
+            ("ngram".to_string(), 0.40),
+        ],
+        vec![1, 2, 4],
+        vec![1, 3, 7],
+        7,
+    )
+}
+
+/// Fault-free oracle: the synthetic stream is a pure function of
+/// (id, position), independent of worker, slot, plan and faults.
+fn expected_seq(id: u64, prompt: &[i32], budget: usize) -> Vec<i32> {
+    let mut seq = prompt.to_vec();
+    for _ in 0..budget {
+        let t = (id as i32).wrapping_mul(31).wrapping_add(seq.len() as i32) & 0x7fff;
+        seq.push(t);
+    }
+    seq
+}
+
+/// N chaos-wrapped synthetic workers behind one global queue. Every
+/// worker shares the engine seed (tokens are position-keyed) while the
+/// chaos plan splits into per-worker streams via `for_worker`.
+fn chaos_cluster(
+    workers: usize,
+    capacity: usize,
+    engine_seed: u64,
+    spec: &str,
+) -> Cluster<ChaosEngine<SyntheticEngine>> {
+    let plan = FaultPlan::parse(spec).expect("test chaos spec parses");
+    let batchers = (0..workers)
+        .map(|w| {
+            let e =
+                ChaosEngine::new(SyntheticEngine::new(capacity, engine_seed), plan.for_worker(w));
+            Batcher::new(e, 32, replanner(), true)
+        })
+        .collect();
+    Cluster::new(batchers, 64)
+}
+
+fn drain<E: ServeEngine>(c: &mut Cluster<E>, from_s: f64) -> Vec<FinishedRequest> {
+    let mut now = from_s;
+    let mut guard = 0;
+    while !c.idle() {
+        c.tick(now).expect("cluster must absorb worker faults, not surface them");
+        now += 0.01;
+        guard += 1;
+        assert!(guard < 5000, "cluster serve loop did not converge");
+    }
+    let mut fin = c.drain_finished();
+    fin.sort_by_key(|f| f.req.id);
+    fin
+}
+
+fn assert_exact(fin: &[FinishedRequest], budget: usize) {
+    for f in fin {
+        assert_eq!(
+            f.req.seq,
+            expected_seq(f.req.id, &f.req.prompt, budget),
+            "request {} completed but its tokens drifted from vanilla",
+            f.req.id
+        );
+    }
+}
+
+fn assert_nothing_lost<E: ServeEngine>(c: &Cluster<E>) {
+    assert_eq!(c.rejected(), 0, "no typed rejections expected in this scenario");
+    for (w, b) in c.workers().iter().enumerate() {
+        assert_eq!(b.metrics.lost, 0, "worker {w} lost a request silently");
+    }
+}
+
+/// (i) Fault-free N-worker serving is token-identical to the static
+/// vanilla oracle, and every offered request completes exactly once.
+#[test]
+fn three_workers_match_static_vanilla() {
+    let budget = 16;
+    let offered = 12usize;
+    let mut c = chaos_cluster(3, 4, 7, "seed=1");
+    let arrivals: Vec<(f64, Request, Priority)> = (0..offered)
+        .map(|i| {
+            (i as f64 * 1e-3, Request::new(i as u64, vec![1, 2, 3, 4], budget), Priority::Batch)
+        })
+        .collect();
+    let rep = drive_cluster_open_loop(&mut c, arrivals, Some(1e-3)).expect("fault-free drive");
+    assert_eq!(rep.offered, offered);
+    assert_eq!(rep.rejected, 0);
+    let fin = drain(&mut c, rep.elapsed_s);
+    assert_eq!(fin.len(), offered, "every request must complete exactly once");
+    assert_exact(&fin, budget);
+    assert_eq!(c.metrics.completed as usize, offered);
+    assert_eq!(c.metrics.dup_completions, 0);
+    assert_nothing_lost(&c);
+}
+
+/// (ii) `worker=1.0` chaos: every worker's kill site fires on its first
+/// round, so deaths cascade deterministically until the last-survivor
+/// hold refuses the final kill. The wave must still complete
+/// token-identical with zero lost requests, every evacuation typed.
+#[test]
+fn mid_wave_worker_kills_lose_nothing() {
+    let budget = 16;
+    let offered = 6u64;
+    let mut c = chaos_cluster(3, 4, 7, "seed=9,worker=1.0");
+    for i in 0..offered {
+        assert!(c.enqueue(Request::new(i, vec![1, 2, 3, 4], budget), Priority::Batch, 0.0));
+    }
+    let fin = drain(&mut c, 0.0);
+    assert_eq!(fin.len(), offered as usize, "a worker kill must never drop a request");
+    assert_exact(&fin, budget);
+    assert_nothing_lost(&c);
+    // two deaths, then the last survivor is held instead of killed
+    assert_eq!(c.metrics.worker_deaths, 2);
+    assert!(c.metrics.last_survivor_holds >= 1);
+    assert_eq!(c.alive(), 1);
+    assert_eq!(c.health().iter().filter(|h| **h == WorkerHealth::Dead).count(), 2);
+    // each dead worker's evacuees all left through a typed path
+    let evacs: u64 = c.metrics.evacuations.iter().sum();
+    assert_eq!(
+        evacs,
+        c.metrics.evac_extracted + c.metrics.evac_salvaged + c.metrics.evac_requeued,
+        "every evacuation must be accounted extracted/salvaged/requeued"
+    );
+    // the kill sites each fired exactly once (death is permanent)
+    for b in c.workers() {
+        assert!(b.engine().injected_worker <= 1);
+    }
+}
+
+/// (iii) `transport=1.0` corrupts every migration frame on every
+/// attempt: deliveries exhaust the retry budget and escalate to the
+/// charged re-prefill fallback — still token-identical, still zero
+/// lost, with the whole story in the transport ledger.
+#[test]
+fn transport_escalation_falls_back_to_reprefill_losslessly() {
+    let budget = 16;
+    let offered = 4u64;
+    let mut c = chaos_cluster(2, 4, 7, "seed=5,transport=1.0");
+    // park everything on worker 0, decode a little, then kill it: the
+    // evacuation MUST try the transport path (worker 1 has free slots)
+    for i in 0..offered {
+        c.worker_mut(0).enqueue(
+            Request::new(i, vec![1, 2, 3, 4], budget),
+            Priority::Batch,
+            0.0,
+        );
+    }
+    c.tick(0.0).expect("warm-up tick");
+    c.tick(0.01).expect("warm-up tick");
+    c.kill_worker(0).expect("kill with a live survivor");
+    let fin = drain(&mut c, 0.02);
+    assert_eq!(fin.len(), offered as usize);
+    assert_exact(&fin, budget);
+    assert_nothing_lost(&c);
+    assert!(c.transport.corruptions >= 1, "transport chaos never corrupted a frame");
+    assert!(c.transport.retries >= 1, "corrupt frames must be retried before escalating");
+    assert!(c.transport.escalations >= 1, "rate-1.0 corruption must exhaust the budget");
+    assert!(c.transport.backoff_ticks >= 1, "retries must pay exponential backoff");
+    assert!(c.metrics.evac_salvaged >= 1, "escalation must fall back to charged re-prefill");
+}
+
+/// Delegating engine that corrupts the FIRST inbound migration frame
+/// only: the retried delivery must succeed and be byte-identical.
+struct CorruptOnce {
+    inner: SyntheticEngine,
+    fired: bool,
+}
+
+impl ServeEngine for CorruptOnce {
+    fn capacity(&self) -> usize {
+        self.inner.capacity()
+    }
+
+    fn admit(&mut self, slot: usize, req: Request, plan: SlotPlan) -> Result<()> {
+        self.inner.admit(slot, req, plan)
+    }
+
+    fn retire(&mut self, slot: usize) -> Result<Request> {
+        self.inner.retire(slot)
+    }
+
+    fn round(&mut self, rep: &mut EngineReport) -> Result<usize> {
+        self.inner.round(rep)
+    }
+
+    fn is_done(&self, slot: usize) -> bool {
+        self.inner.is_done(slot)
+    }
+
+    fn slot_plan(&self, slot: usize) -> Option<SlotPlan> {
+        self.inner.slot_plan(slot)
+    }
+
+    fn set_slot_plan(&mut self, slot: usize, plan: SlotPlan) -> Result<()> {
+        self.inner.set_slot_plan(slot, plan)
+    }
+
+    fn request(&self, slot: usize) -> Option<&Request> {
+        self.inner.request(slot)
+    }
+
+    fn extract_payload(&mut self, slot: usize) -> Result<MigrationPayload> {
+        self.inner.extract_payload(slot)
+    }
+
+    fn snapshot_payload(&self, slot: usize) -> Result<MigrationPayload> {
+        self.inner.snapshot_payload(slot)
+    }
+
+    fn insert_payload(&mut self, slot: usize, p: MigrationPayload, plan: SlotPlan) -> Result<()> {
+        self.inner.insert_payload(slot, p, plan)
+    }
+
+    fn corrupt_frame(&mut self, frame: &mut [u8]) -> bool {
+        if self.fired || frame.is_empty() {
+            return false;
+        }
+        self.fired = true;
+        let mid = frame.len() / 2;
+        frame[mid] ^= 0x10;
+        true
+    }
+}
+
+/// (iv) A corrupt-then-clean delivery: the first work-stealing frame is
+/// mangled in flight, the retry goes through, and the migrated request
+/// finishes byte-identical — one corruption, one retry, no escalation.
+#[test]
+fn transport_retry_recovers_byte_identical() {
+    let budget = 20;
+    let offered = 6u64;
+    let mk = || {
+        Batcher::new(
+            CorruptOnce { inner: SyntheticEngine::new(4, 7), fired: false },
+            32,
+            replanner(),
+            true,
+        )
+    };
+    let mut c = Cluster::new(vec![mk(), mk()], 64);
+    // park everything on worker 0 so worker 1 sits idle: the balancer
+    // must steal a slot through the (corrupting) transport
+    for i in 0..offered {
+        c.worker_mut(0).enqueue(
+            Request::new(i, vec![1, 2, 3, 4], budget),
+            Priority::Batch,
+            0.0,
+        );
+    }
+    let fin = drain(&mut c, 0.0);
+    assert_eq!(fin.len(), offered as usize);
+    assert_exact(&fin, budget);
+    assert_nothing_lost(&c);
+    assert!(c.metrics.migrations_in[1] >= 1, "expected at least one stolen slot");
+    assert_eq!(c.transport.corruptions, 1, "exactly the first frame was mangled");
+    assert_eq!(c.transport.retries, 1, "one retry redelivers the frame");
+    assert_eq!(c.transport.escalations, 0, "the retry must succeed within budget");
+}
+
+/// (v) Cross-worker Fastest-of-N race forks (through the full
+/// ChaosEngine wrapper stack, chaos inactive): the straggler's twin
+/// races on the remote worker, exactly one copy of every request
+/// completes, and the tokens never drift.
+#[test]
+fn cross_worker_race_fork_is_lossless() {
+    let budget = 24;
+    let offered = 4u64;
+    let mut c = chaos_cluster(2, 4, 7, "seed=1").with_cross_racing();
+    for i in 0..offered {
+        c.worker_mut(0).enqueue(
+            Request::new(i, vec![1, 2, 3, 4], budget),
+            Priority::Batch,
+            0.0,
+        );
+    }
+    let fin = drain(&mut c, 0.0);
+    assert_eq!(fin.len(), offered as usize, "racing must not drop or duplicate requests");
+    assert_exact(&fin, budget);
+    assert_nothing_lost(&c);
+    assert_eq!(c.metrics.completed, offered);
+    assert_eq!(c.metrics.dup_completions, 0);
+    // with an idle remote worker, either a race fork or a work-steal
+    // must have used the transport path
+    assert!(
+        c.metrics.cross_races + c.metrics.migrations_in[1] > 0,
+        "the idle worker was never used"
+    );
+}

@@ -346,3 +346,104 @@ fn batcher_snapshot_is_scrapable_over_tcp() {
     assert!(resp.starts_with("HTTP/1.1 200 OK"));
     assert!(resp.ends_with("ok\n"));
 }
+
+/// A served 2-worker cluster under kill + transport chaos (tracing on),
+/// driven to idle: deaths, holds, evacuations and transport retries all
+/// land on the counters so the scrape has a real surface to reconcile.
+fn served_cluster(chaos: &str) -> specactor::serve::Cluster<ChaosEngine<SyntheticEngine>> {
+    use specactor::serve::Cluster;
+    let plan = FaultPlan::parse(chaos).expect("chaos spec");
+    let batchers = (0..2)
+        .map(|w| {
+            let e = ChaosEngine::new(SyntheticEngine::new(4, 7), plan.for_worker(w));
+            Batcher::new(e, 16, Replanner::synthetic(), true).with_tracing(1024)
+        })
+        .collect();
+    let mut c = Cluster::new(batchers, 32).with_cross_racing();
+    for i in 0..6u64 {
+        assert!(c.enqueue(req(i, 24), Priority::Batch, 0.0));
+    }
+    let (mut now, mut guard) = (0.0, 0);
+    while !c.idle() {
+        c.tick(now).expect("the cluster absorbs worker faults");
+        now += 0.01;
+        guard += 1;
+        assert!(guard < 5000, "cluster run did not converge");
+    }
+    let _ = c.drain_finished();
+    c
+}
+
+/// The cluster scrape must reconcile field-for-field with
+/// `Cluster::to_json`: scalar counters, per-worker labelled series
+/// (`specactor_cluster_*_worker{worker="i"}`) and the health gauges.
+#[test]
+fn cluster_scrape_reconciles_with_to_json_field_for_field() {
+    let c = served_cluster("seed=3,worker=1.0,transport=0.5");
+    let reg = c.collect_registry();
+    let json = c.to_json();
+    let parsed = Json::parse(&json).expect("cluster to_json parses");
+    let obj = parsed.as_obj().expect("cluster to_json is an object");
+    assert!(!obj.is_empty());
+    for (k, v) in obj {
+        if k == "health" {
+            for (w, hv) in v.as_arr().expect("health is an array").iter().enumerate() {
+                let want = hv.as_f64().expect("health codes are numbers");
+                let got = reg
+                    .find("specactor_cluster_worker_health", &[("worker", &w.to_string())])
+                    .unwrap_or_else(|| panic!("scrape missing health gauge for worker {w}"));
+                assert_eq!(got, want, "worker {w} health diverges from to_json");
+            }
+        } else if let Some(arr) = v.as_arr() {
+            let name = format!("specactor_cluster_{k}_worker");
+            for (w, wv) in arr.iter().enumerate() {
+                let want = wv.as_f64().expect("per-worker values are numbers");
+                let got = reg
+                    .find(&name, &[("worker", &w.to_string())])
+                    .unwrap_or_else(|| panic!("scrape missing `{name}` for worker {w}"));
+                assert_eq!(got, want, "`{name}{{worker={w}}}` diverges from to_json");
+            }
+        } else {
+            let want = v.as_f64().unwrap_or_else(|| panic!("`{k}` is not a number"));
+            let name = format!("specactor_cluster_{k}");
+            let got = reg
+                .find(&name, &[])
+                .unwrap_or_else(|| panic!("scrape snapshot is missing `{name}`"));
+            assert_eq!(got, want, "`{name}` diverges from to_json");
+        }
+    }
+    // the chaos schedule makes the interesting counters real
+    assert!(reg.find("specactor_cluster_worker_deaths", &[]).unwrap() >= 1.0);
+    assert!(reg.find("specactor_cluster_last_survivor_holds", &[]).unwrap() >= 1.0);
+    // every evacuee leaves over the wire or through the salvage lane —
+    // which one is seed-dependent (the death scar makes extraction
+    // flaky), but at least one of the two ledgers must move
+    let wired = reg.find("specactor_cluster_transport_frames", &[]).unwrap()
+        + reg.find("specactor_cluster_evac_salvaged", &[]).unwrap();
+    assert!(wired >= 1.0, "evacuation used neither transport nor salvage");
+    assert_eq!(reg.find("specactor_cluster_workers", &[]), Some(2.0));
+    assert_eq!(reg.find("specactor_cluster_workers_alive", &[]), Some(1.0));
+    // the global admission queue rides on the same snapshot
+    let text = reg.render();
+    assert!(text.contains("specactor_queue_enqueued"), "global queue ledger missing");
+    assert_format_clean(&text);
+}
+
+/// A worker death must leave a `worker_fatal` post-mortem in the dying
+/// worker's flight recorder — both for the in-band chaos kill (captured
+/// by the round-error path) and for the survivor's refused kill.
+#[test]
+fn worker_death_leaves_a_flight_recorder_post_mortem() {
+    let c = served_cluster("seed=3,worker=1.0");
+    assert_eq!(c.metrics.worker_deaths, 1, "one worker dies, the survivor is held");
+    assert!(c.metrics.last_survivor_holds >= 1);
+    for (w, b) in c.workers().iter().enumerate() {
+        assert!(
+            b.fault_dumps.iter().any(|d| d.severity == "worker_fatal"),
+            "worker {w} has no worker_fatal post-mortem"
+        );
+        for d in &b.fault_dumps {
+            assert!(!d.error.is_empty());
+        }
+    }
+}
