@@ -1,0 +1,260 @@
+//! Wave-global corpus gain sweep: the SAME deterministic one-burst
+//! workload is served cold (no corpus) and seeded (corpus pre-warmed
+//! with the wave's verified streams) at two occupancies, plus a
+//! mid-wave weight-update cell in two arms — decay-on-invalidate
+//! (default) vs `persist_across_updates()` (the stale-corpus control) —
+//! written to `BENCH_corpus.json`.
+//!
+//! Hermetic: [`ChaosEngine`] over [`SyntheticEngine`] on virtual
+//! 1-second ticks, so throughput is tokens per engine round and the
+//! seeded-drafter acceptance boost is the engine's modelled
+//! admission-time corpus peek. In-bench assertions pin the acceptance
+//! criteria: every cell completes losslessly with token-identical
+//! output, seeding lifts measured acceptance at admission without
+//! costing steady-state rounds, and under a mid-wave pause the decay
+//! arm never drains slower than the stale arm (decay prevents the
+//! stale-corpus collapse; staleness is a throughput tax, never a
+//! correctness one).
+
+use std::path::Path;
+
+use specactor::drafter::DraftCorpus;
+use specactor::engine::Request;
+use specactor::planner::costmodel::CostModel;
+use specactor::serve::{Batcher, ChaosEngine, FaultPlan, Priority, Replanner, SyntheticEngine};
+use specactor::util::benchkit::Bench;
+use specactor::util::cli::Args;
+use specactor::util::Json;
+
+/// Which corpus (if any) the cell's batcher serves under.
+#[derive(Clone, Copy, PartialEq)]
+enum CorpusMode {
+    /// No corpus at all — the cold baseline.
+    Off,
+    /// Pre-warmed publisher corpus, default decay-on-invalidate.
+    Seeded,
+    /// Pre-warmed publisher corpus that skips decay on weight updates —
+    /// the stale-corpus control arm.
+    SeededPersist,
+}
+
+struct RunOut {
+    completed: usize,
+    rejected: u64,
+    lost: u64,
+    tokens: u64,
+    rounds: f64,
+    tok_per_round: f64,
+    acceptance: f64,
+    accepted: u64,
+    drafted: u64,
+    corpus_seeds: u64,
+    corpus_publishes: u64,
+    corpus_decays: u64,
+    corpus_tokens: u64,
+    pauses: u64,
+}
+
+/// The synthetic stream is a pure function of (id, position) — seeding
+/// and staleness may change acceptance, never the tokens.
+fn expected_seq(id: u64, prompt: &[i32], budget: usize) -> Vec<i32> {
+    let mut seq = prompt.to_vec();
+    for _ in 0..budget {
+        let t = (id as i32).wrapping_mul(31).wrapping_add(seq.len() as i32) & 0x7fff;
+        seq.push(t);
+    }
+    seq
+}
+
+/// An ngram-winning replanner: the corpus seeds token drafters only, so
+/// the sweep must not depend on `Replanner::synthetic` picking a model
+/// method.
+fn replanner() -> Replanner {
+    Replanner::new(
+        CostModel::paper_32b(),
+        vec![("ngram".to_string(), 0.90), ("draft_small".to_string(), 0.60)],
+        vec![1, 2, 4],
+        vec![1, 3, 7],
+        7,
+    )
+}
+
+fn run(capacity: usize, n: usize, budget: usize, seed: u64, mode: CorpusMode, pause: u64) -> RunOut {
+    let plan = FaultPlan { seed, pause, ..FaultPlan::default() };
+    let engine = ChaosEngine::new(SyntheticEngine::new(capacity, seed), plan);
+    let mut b = Batcher::new(engine, n, replanner(), true);
+    if mode != CorpusMode::Off {
+        // pre-warm with the wave's own verified streams: the published
+        // snapshot is exactly what a previous wave would have harvested
+        let mut c = DraftCorpus::new();
+        for i in 0..n as u64 {
+            c.add_segment(&expected_seq(i, &[1, 2, 3, 4], budget));
+        }
+        assert!(c.publish() > 0, "pre-warm publish must fold tokens");
+        if mode == CorpusMode::SeededPersist {
+            c = c.persist_across_updates();
+        }
+        b = b.with_corpus(c);
+    }
+    for i in 0..n as u64 {
+        assert!(b.enqueue(Request::new(i, vec![1, 2, 3, 4], budget), Priority::Batch, 0.0));
+    }
+    let mut now = 0.0f64;
+    let mut guard = 0u64;
+    while !b.idle() {
+        b.tick(now).expect("corpus cells inject pauses only, never faults");
+        now += 1.0; // virtual 1 s per tick: throughput in engine rounds
+        guard += 1;
+        assert!(guard < 100_000, "corpus serve loop did not converge");
+    }
+    let mut fin = b.drain_finished();
+    fin.sort_by_key(|f| f.req.id);
+    let ids: Vec<u64> = fin.iter().map(|f| f.req.id).collect();
+    assert_eq!(ids, (0..n as u64).collect::<Vec<_>>(), "lost or duplicated requests");
+    for f in &fin {
+        assert_eq!(
+            f.req.seq,
+            expected_seq(f.req.id, &f.req.prompt, budget),
+            "request {} drifted: the corpus must never change tokens",
+            f.req.id
+        );
+    }
+    let accepted: u64 = b.metrics.method_accepted.values().sum();
+    let drafted: u64 = b.metrics.method_drafted.values().sum();
+    let rounds = guard as f64;
+    RunOut {
+        completed: fin.len(),
+        rejected: b.queue.rejected,
+        lost: b.metrics.lost,
+        tokens: b.metrics.tokens,
+        rounds,
+        tok_per_round: b.metrics.tokens as f64 / rounds.max(1.0),
+        acceptance: accepted as f64 / (drafted.max(1)) as f64,
+        accepted,
+        drafted,
+        corpus_seeds: b.metrics.corpus_seeds,
+        corpus_publishes: b.metrics.corpus_publishes,
+        corpus_decays: b.metrics.corpus_decays,
+        corpus_tokens: b.metrics.corpus_tokens,
+        pauses: b.engine().pauses,
+    }
+}
+
+fn main() {
+    let mut args = Args::from_env().unwrap();
+    let n = args.opt_parse("requests", 24usize);
+    let budget = args.opt_parse("budget", 12usize);
+    let seed = args.opt_parse("seed", 7u64);
+    let pause = args.opt_parse("pause", 3u64);
+    let json_out = args.opt("json-out", "BENCH_corpus.json");
+    args.finish().unwrap();
+
+    let cells: Vec<(String, usize, CorpusMode, u64)> = vec![
+        ("corpus off cap=4".to_string(), 4, CorpusMode::Off, 0),
+        ("corpus seeded cap=4".to_string(), 4, CorpusMode::Seeded, 0),
+        ("corpus off cap=8".to_string(), 8, CorpusMode::Off, 0),
+        ("corpus seeded cap=8".to_string(), 8, CorpusMode::Seeded, 0),
+        (format!("corpus decay pause={pause}"), 4, CorpusMode::Seeded, pause),
+        (format!("corpus stale pause={pause}"), 4, CorpusMode::SeededPersist, pause),
+    ];
+
+    let mut bench = Bench::new(0, 1);
+    let mut extra: Vec<Vec<(&str, Json)>> = Vec::new();
+    // cold baselines per capacity, for the uplift ratios
+    let mut cold: Vec<(usize, f64, f64)> = Vec::new(); // (cap, rounds, acceptance)
+    let mut results: Vec<RunOut> = Vec::new();
+
+    println!(
+        "{:<24} {:>4} {:>5} {:>7} {:>9} {:>7} {:>6} {:>5} {:>6}",
+        "cell", "cap", "done", "rounds", "tok/round", "accept", "seeds", "pub", "decay"
+    );
+    for (name, cap, mode, cell_pause) in &cells {
+        let r = run(*cap, n, budget, seed, *mode, *cell_pause);
+        assert_eq!(r.completed, n, "{name}: workload did not complete");
+        assert_eq!(r.rejected, 0, "{name}: requests were rejected");
+        assert_eq!(r.lost, 0, "{name}: requests were lost");
+        if *mode == CorpusMode::Off {
+            assert_eq!(r.corpus_seeds, 0, "{name}: the cold arm has no corpus");
+            cold.push((*cap, r.rounds, r.acceptance));
+        } else {
+            assert!(r.corpus_seeds > 0, "{name}: warm admissions must seed");
+            assert!(r.corpus_publishes >= 2, "{name}: pre-warm + harvest epochs");
+            assert!(r.corpus_tokens > 0, "{name}: harvest must keep the corpus warm");
+        }
+        if *cell_pause > 0 {
+            assert!(r.pauses >= 1, "{name}: the pause schedule never fired");
+        }
+        let base = cold.iter().find(|(c, _, _)| c == cap);
+        let (rounds_vs_cold, accept_uplift) = match (mode, base) {
+            (CorpusMode::Off, _) | (_, None) => (1.0, 0.0),
+            (_, Some((_, br, ba))) => (r.rounds / br.max(1.0), r.acceptance - ba),
+        };
+        // the acceptance criteria: seeding lifts measured acceptance at
+        // admission and never costs steady-state rounds
+        if *mode == CorpusMode::Seeded && *cell_pause == 0 {
+            assert!(
+                accept_uplift > 0.0,
+                "{name}: seeded acceptance {:.3} did not beat cold",
+                r.acceptance
+            );
+            assert!(
+                rounds_vs_cold <= 1.0,
+                "{name}: seeding cost rounds ({:.0} vs cold {:.0})",
+                r.rounds,
+                base.unwrap().1
+            );
+        }
+        println!(
+            "{:<24} {:>4} {:>5} {:>7.0} {:>9.2} {:>7.3} {:>6} {:>5} {:>6}",
+            name, cap, r.completed, r.rounds, r.tok_per_round, r.acceptance,
+            r.corpus_seeds, r.corpus_publishes, r.corpus_decays
+        );
+        bench.record(name, r.rounds);
+        extra.push(vec![
+            ("capacity", Json::num(*cap as f64)),
+            ("seeded", Json::num(if *mode == CorpusMode::Off { 0.0 } else { 1.0 })),
+            ("persist_stale_arm", Json::num(if *mode == CorpusMode::SeededPersist { 1.0 } else { 0.0 })),
+            ("pause_every", Json::num(*cell_pause as f64)),
+            ("completed", Json::num(r.completed as f64)),
+            ("tokens", Json::num(r.tokens as f64)),
+            ("rounds", Json::num(r.rounds)),
+            ("tok_per_round", Json::num(r.tok_per_round)),
+            ("acceptance", Json::num(r.acceptance)),
+            ("accepted", Json::num(r.accepted as f64)),
+            ("drafted", Json::num(r.drafted as f64)),
+            ("accept_uplift_vs_cold", Json::num(accept_uplift)),
+            ("rounds_vs_cold", Json::num(rounds_vs_cold)),
+            ("corpus_seeds", Json::num(r.corpus_seeds as f64)),
+            ("corpus_publishes", Json::num(r.corpus_publishes as f64)),
+            ("corpus_decays", Json::num(r.corpus_decays as f64)),
+            ("corpus_tokens", Json::num(r.corpus_tokens as f64)),
+            ("pauses", Json::num(r.pauses as f64)),
+        ]);
+        results.push(r);
+    }
+
+    // the mid-wave pause criterion: the decay arm fired its decays, the
+    // persist arm never did, and decay drains no slower than stale —
+    // decay-on-invalidate is what prevents the stale-corpus collapse
+    let stale = results.pop().unwrap();
+    let decay = results.pop().unwrap();
+    assert!(decay.corpus_decays >= 1, "pause must decay the default arm");
+    assert_eq!(stale.corpus_decays, 0, "persist arm must never decay");
+    assert!(
+        decay.rounds <= stale.rounds,
+        "decay arm ({:.0} rounds) drained slower than the stale arm ({:.0})",
+        decay.rounds,
+        stale.rounds
+    );
+    assert!(
+        decay.acceptance >= stale.acceptance,
+        "decay arm acceptance {:.3} fell below the stale arm {:.3}",
+        decay.acceptance,
+        stale.acceptance
+    );
+
+    bench
+        .write_json(Path::new(&json_out), "corpus_gain_rounds", &extra)
+        .expect("write BENCH_corpus.json");
+    println!("wrote {json_out}");
+}

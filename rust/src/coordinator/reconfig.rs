@@ -121,10 +121,13 @@ pub fn reconfigure_batch(
 }
 
 /// Cost-model key for an engine draft method. Model drafters are named by
-/// their model; token drafters without their own profiled cost curve (sam)
+/// their model; token drafters without their own profiled cost curve
 /// borrow the n-gram curve — both are O(1)-per-token CPU lookups the paper
 /// piggybacks on the worker, and the cost model only needs the family's
-/// order of magnitude.
+/// order of magnitude. The suffix-automaton drafter starts in that
+/// fallback but graduates to its OWN key once live acceptance evidence
+/// arrives and [`Reconfigurator::feed_measured`] installs a dedicated
+/// "sam" curve ([`CostModel::install_sam_curve`]).
 pub fn cost_method(cost: &CostModel, method: &DraftMethod) -> String {
     let label = method.label();
     if cost.methods().iter().any(|m| *m == label) {
@@ -175,6 +178,11 @@ pub struct Reconfigurator {
     /// into the lowered grid — the convergence pressure that herds
     /// stragglers into existing plan groups.
     discipline: VerifyDiscipline,
+    /// Set by [`Reconfigurator::note_decay`] at a policy-weight-update
+    /// boundary: the next round re-baselines EVERY slot's counters and
+    /// skips that firing, so no measurement window straddles the update
+    /// (the old policy's acceptance says nothing about the new weights).
+    rewiden: bool,
     /// Firings that changed at least one slot.
     pub fired: u64,
 }
@@ -200,6 +208,7 @@ impl Reconfigurator {
             baseline: Vec::new(),
             coupled_only: true,
             discipline: VerifyDiscipline::Fused,
+            rewiden: false,
             fired: 0,
         }
     }
@@ -255,6 +264,32 @@ impl Reconfigurator {
         self.baseline[slot] = per_slot.get(slot).copied().unwrap_or_default();
     }
 
+    /// A policy weight update landed (`invalidate_draft_state`): the
+    /// measured acceptance gathered so far described the OLD weights. The
+    /// next round re-baselines every slot and skips its firing, so
+    /// Algorithm 2 only ever acts on post-update evidence.
+    pub fn note_decay(&mut self) {
+        self.rewiden = true;
+    }
+
+    /// Fold wave-measured per-method acceptance
+    /// (`ServeMetrics::method_acceptance` tuples) into the COST side of
+    /// Algorithm 2: once the suffix-automaton drafter has real drafted
+    /// evidence, install its own cost curve so [`cost_method`] stops
+    /// borrowing the n-gram key and windows for sam slots are priced on
+    /// sam's own curve. Returns true when the cost model changed.
+    pub fn feed_measured(&mut self, measured: &[(String, f64, u64, u64)]) -> bool {
+        let mut changed = false;
+        for (method, _rate, _accepted, drafted) in measured {
+            if method == "sam"
+                && *drafted >= crate::serve::replan::MIN_MEASURED_DRAFTED
+            {
+                changed |= self.cost.install_sam_curve();
+            }
+        }
+        changed
+    }
+
     /// Note one engine round. Every `period`-th round, run Algorithm 2
     /// over the live speculative slots' measured (delta) acceptance rates
     /// and return the plans to apply; otherwise an empty vec.
@@ -264,6 +299,13 @@ impl Reconfigurator {
         live: &[LiveSlot],
     ) -> Vec<(usize, SlotPlan)> {
         self.rounds += 1;
+        if self.rewiden {
+            // drop pre-update evidence: every slot measures from the
+            // current counters on, and this firing (if due) is skipped
+            self.baseline = per_slot.to_vec();
+            self.rewiden = false;
+            return Vec::new();
+        }
         if self.rounds % self.period != 0 {
             return Vec::new();
         }
@@ -390,8 +432,9 @@ mod tests {
 
     #[test]
     fn cost_method_maps_known_and_falls_back_unknown() {
-        let m = CostModel::paper_32b();
-        // sam has no profiled curve: it borrows the n-gram cost key
+        let mut m = CostModel::paper_32b();
+        // sam starts with no profiled curve: it borrows the n-gram cost
+        // key until measured evidence installs its own
         assert_eq!(cost_method(&m, &DraftMethod::Sam), "ngram");
         assert_eq!(cost_method(&m, &DraftMethod::Ngram), "ngram");
         assert_eq!(
@@ -402,6 +445,42 @@ mod tests {
             cost_method(&m, &DraftMethod::Model("mystery_9b".into())),
             "ngram"
         );
+        // once the sam curve is installed, sam graduates to its own key
+        assert!(m.install_sam_curve());
+        assert_eq!(cost_method(&m, &DraftMethod::Sam), "sam");
+    }
+
+    #[test]
+    fn measured_sam_evidence_installs_the_sam_cost_key() {
+        let mut rc = Reconfigurator::synthetic(1);
+        // thin evidence: still borrowing ngram
+        assert!(!rc.feed_measured(&[("sam".to_string(), 0.8, 10, 12)]));
+        assert_eq!(cost_method(&rc.cost, &DraftMethod::Sam), "ngram");
+        // a wave of evidence: dedicated curve installed, own key
+        assert!(rc.feed_measured(&[("sam".to_string(), 0.8, 400, 500)]));
+        assert_eq!(cost_method(&rc.cost, &DraftMethod::Sam), "sam");
+        // idempotent on repeated cumulative feeds
+        assert!(!rc.feed_measured(&[("sam".to_string(), 0.8, 800, 1000)]));
+    }
+
+    #[test]
+    fn decay_rebaselines_and_skips_the_straddling_firing() {
+        let mut rc = Reconfigurator::synthetic(1);
+        let live = vec![
+            LiveSlot { slot: 0, method: DraftMethod::Ngram },
+            LiveSlot { slot: 1, method: DraftMethod::Ngram },
+        ];
+        let _ = rc.on_round(&slot_counters(&[(10, 9), (10, 9)]), &live);
+        // a weight update lands: slot 1's awful pre-update window must not
+        // be measured across the boundary
+        rc.note_decay();
+        let plans = rc.on_round(&slot_counters(&[(20, 10), (20, 9)]), &live);
+        assert!(plans.is_empty(), "straddling firing must be skipped: {plans:?}");
+        // post-update evidence only: slot 0 accepted everything since the
+        // rebaseline, slot 1 nothing — slot 1 is the straggler
+        let plans = rc.on_round(&slot_counters(&[(30, 20), (30, 9)]), &live);
+        assert_eq!(plans.len(), 1);
+        assert_eq!(plans[0].0, 1, "post-decay deltas must rank slot 1 as the straggler");
     }
 
     fn slot_counters(pairs: &[(u64, u64)]) -> Vec<SlotAccept> {

@@ -1,0 +1,510 @@
+//! Wave-global draft corpus: online draft learning across requests.
+//!
+//! RL rollout waves are the ideal workload for cross-request draft
+//! sharing — one policy, one prompt distribution, massive redundancy —
+//! yet per-slot token drafters learn only from their own sequence, so
+//! every admission cold-starts at near-zero acceptance. The corpus fixes
+//! that: every completed request's verified tokens are folded into ONE
+//! shared suffix automaton + gram table, and new admissions seed their
+//! drafters from it instead of from empty state.
+//!
+//! Concurrency discipline (the whole point of the design):
+//!
+//! * **Snapshots are immutable.** A [`CorpusSnapshot`] owns fully-built
+//!   [`SamDrafter`]/[`NgramDrafter`] state behind an `Arc`. Seeding a
+//!   slot CLONES the builders out of the snapshot — after that the slot
+//!   drafter is exclusively owned, so the per-token draft hot path
+//!   touches **no shared state and takes no locks**, exactly like an
+//!   unseeded drafter.
+//! * **Publication is epoch-swapped.** [`DraftCorpus`] accumulates
+//!   accepted segments off the critical path and, at round boundaries,
+//!   folds them into its builders and swaps a fresh `Arc` into the
+//!   shared [`CorpusHandle`] (Arc-swap style: readers grab the current
+//!   pointer; in-flight drafting on the previous snapshot is never
+//!   perturbed — it owns its clones).
+//! * **Decay on weight updates.** Post-training changes the policy every
+//!   iteration, so corpus content goes stale exactly when
+//!   `ServeEngine::invalidate_draft_state` fires. [`DraftCorpus::decay`]
+//!   drops the accumulated wave, publishes an empty epoch, and the serve
+//!   loop reseeds from the live verified prefixes (still-valid context
+//!   the new policy must continue from) and re-widens measured priors.
+//!
+//! Losslessness is untouched by construction: the corpus only changes
+//! what drafters *propose*; verification against the target decides
+//! every token, and the sampling tape is keyed by (seed, request id,
+//! position) — never by drafter state.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+use super::ngram::NgramDrafter;
+use super::sam::SamDrafter;
+use super::{DraftMethod, TokenDrafter};
+
+/// Separator folded before every corpus segment (and appended when
+/// seeding, before the request's own history) so suffix matches never
+/// bridge two unrelated requests. Far outside any vocab id; drafting it
+/// is possible but harmless — drafts only propose, verification rejects.
+pub const SEGMENT_SEP: i32 = i32::MIN + 0x5A17;
+
+/// Corpus tokens retained before the oldest segments are evicted: bounds
+/// both snapshot memory and the rebuild cost an eviction pays.
+pub const DEFAULT_CAP_TOKENS: usize = 1 << 15;
+
+/// Immutable, epoch-stamped view of the corpus: prebuilt drafter state
+/// ready to be cloned into admitted slots.
+#[derive(Clone)]
+pub struct CorpusSnapshot {
+    /// Monotone publication epoch (0 = the empty pre-wave snapshot).
+    pub epoch: u64,
+    /// Corpus tokens indexed by this snapshot (excludes separators).
+    pub tokens: u64,
+    /// Segments (completed requests / reseeded prefixes) folded in.
+    pub segments: u64,
+    sam: SamDrafter,
+    ngram: NgramDrafter,
+}
+
+impl CorpusSnapshot {
+    /// The empty snapshot at `epoch`. Hyper-parameters MUST match
+    /// [`DraftMethod::new_token_drafter`] so a seeded and an unseeded
+    /// drafter are the same structure, differing only in history.
+    pub fn empty(epoch: u64) -> Self {
+        CorpusSnapshot {
+            epoch,
+            tokens: 0,
+            segments: 0,
+            sam: SamDrafter::new(16),
+            ngram: NgramDrafter::new(3),
+        }
+    }
+
+    /// Does this snapshot hold any corpus content worth seeding from?
+    pub fn is_warm(&self) -> bool {
+        self.tokens > 0
+    }
+
+    /// Fold one accepted segment into the builders (separator first, so
+    /// patterns never span segment boundaries).
+    fn fold(&mut self, seg: &[i32]) {
+        if seg.is_empty() {
+            return;
+        }
+        self.sam.extend(&[SEGMENT_SEP]);
+        self.ngram.extend(&[SEGMENT_SEP]);
+        self.sam.extend(seg);
+        self.ngram.extend(seg);
+        self.segments += 1;
+        self.tokens += seg.len() as u64;
+    }
+
+    /// Clone-seed a token drafter for `method` from this snapshot (None
+    /// for model methods, which live in KV caches, and for cold
+    /// snapshots, where an empty drafter is cheaper than a clone). The
+    /// clone ends with a segment separator, so the caller's
+    /// `extend(&req.seq)` continues a fresh segment: a seeded drafter is
+    /// byte-for-byte the drafter that indexed
+    /// `SEP·seg1·…·SEP·segN·SEP·req.seq` from scratch — the differential
+    /// identity `rust/tests/drafter_differential.rs` pins.
+    pub fn seed_token_drafter(&self, method: &DraftMethod) -> Option<Box<dyn TokenDrafter>> {
+        if !self.is_warm() {
+            return None;
+        }
+        let mut td: Box<dyn TokenDrafter> = match method {
+            DraftMethod::Model(_) => return None,
+            DraftMethod::Ngram => Box::new(self.ngram.clone()),
+            DraftMethod::Sam => Box::new(self.sam.clone()),
+        };
+        td.extend(&[SEGMENT_SEP]);
+        Some(td)
+    }
+}
+
+/// Cheap clonable reader handle to the latest published snapshot.
+///
+/// `load` is one mutex-guarded `Arc` clone — a pointer load plus a
+/// refcount bump, performed at SEED and lifecycle-reset time only, never
+/// per drafted token (slot drafters own their clones outright). std has
+/// no atomic `Arc` swap, so the single pointer cell is mutex-guarded;
+/// the critical section is the clone itself and publication is rare
+/// (round boundaries), so the guard is never contended on a hot path.
+#[derive(Clone)]
+pub struct CorpusHandle {
+    cur: Arc<Mutex<Arc<CorpusSnapshot>>>,
+}
+
+impl Default for CorpusHandle {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CorpusHandle {
+    pub fn new() -> Self {
+        CorpusHandle { cur: Arc::new(Mutex::new(Arc::new(CorpusSnapshot::empty(0)))) }
+    }
+
+    /// The latest published snapshot (immutable; in-flight users of
+    /// older epochs are unaffected by later publishes).
+    pub fn load(&self) -> Arc<CorpusSnapshot> {
+        match self.cur.lock() {
+            Ok(g) => g.clone(),
+            // a poisoned cell only ever holds a fully-published snapshot
+            Err(p) => p.into_inner().clone(),
+        }
+    }
+
+    fn publish(&self, snap: Arc<CorpusSnapshot>) {
+        match self.cur.lock() {
+            Ok(mut g) => *g = snap,
+            Err(p) => *p.into_inner() = snap,
+        }
+    }
+
+    /// Epoch of the latest published snapshot.
+    pub fn epoch(&self) -> u64 {
+        self.load().epoch
+    }
+}
+
+/// Corpus telemetry, mirrored into `ServeMetrics` each tick (the single
+/// enumeration both the JSON summary and the scrape render from).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CorpusStats {
+    /// Corpus tokens indexed by the latest published snapshot.
+    pub tokens: u64,
+    /// Admissions whose drafters were seeded from a warm snapshot.
+    pub seeds: u64,
+    /// Snapshot epochs published (decay epochs included).
+    pub publishes: u64,
+    /// Segments evicted by the retention cap.
+    pub evictions: u64,
+    /// Weight-update decays (wave resets).
+    pub decays: u64,
+}
+
+/// The mutable half: accumulates accepted segments and publishes
+/// immutable epochs into a [`CorpusHandle`].
+///
+/// Two roles share the type: a **publisher** (standalone serve loop, or
+/// the cluster supervisor) owns the retained segment window and the
+/// incremental builders; a **tap** (per-worker batcher under a cluster)
+/// only buffers segments and decay events for the supervisor to drain —
+/// publication stays single-writer, and replication to every worker is
+/// the shared handle itself (all engines read the same epoch).
+pub struct DraftCorpus {
+    handle: CorpusHandle,
+    /// Retained segments, oldest first (publisher only): the eviction
+    /// window the builders are rebuilt from when the cap trips.
+    segments: VecDeque<Vec<i32>>,
+    /// Builders already folded over `segments`; publish clones them into
+    /// the next snapshot, so steady-state publish cost is O(new tokens)
+    /// plus the clone — paid at a round boundary, never per token.
+    built: CorpusSnapshot,
+    /// Segments accepted since the last publish/drain.
+    pending: Vec<Vec<i32>>,
+    epoch: u64,
+    cap_tokens: usize,
+    publisher: bool,
+    decay_on_invalidate: bool,
+    decay_flag: bool,
+    pub stats: CorpusStats,
+}
+
+impl DraftCorpus {
+    /// A publishing corpus with the default retention cap.
+    pub fn new() -> Self {
+        Self::with_cap(DEFAULT_CAP_TOKENS)
+    }
+
+    /// A publishing corpus retaining at most `cap_tokens` corpus tokens.
+    pub fn with_cap(cap_tokens: usize) -> Self {
+        DraftCorpus {
+            handle: CorpusHandle::new(),
+            segments: VecDeque::new(),
+            built: CorpusSnapshot::empty(0),
+            pending: Vec::new(),
+            epoch: 0,
+            cap_tokens: cap_tokens.max(1),
+            publisher: true,
+            decay_on_invalidate: true,
+            decay_flag: false,
+            stats: CorpusStats::default(),
+        }
+    }
+
+    /// A non-publishing tap feeding a cluster supervisor's publisher
+    /// through the SAME handle (see type docs).
+    pub fn tap(handle: CorpusHandle) -> Self {
+        let mut c = Self::new();
+        c.handle = handle;
+        c.publisher = false;
+        c
+    }
+
+    /// Keep the corpus across weight updates (A/B knob for the bench's
+    /// stale-corpus cell — production serving wants the default decay).
+    pub fn persist_across_updates(mut self) -> Self {
+        self.decay_on_invalidate = false;
+        self
+    }
+
+    /// Reader handle for engines / drafter threads.
+    pub fn handle(&self) -> CorpusHandle {
+        self.handle.clone()
+    }
+
+    /// Should `invalidate_draft_state` decay this corpus?
+    pub fn decay_on_invalidate(&self) -> bool {
+        self.decay_on_invalidate
+    }
+
+    /// Is the published snapshot warm (worth counting a seed against)?
+    pub fn is_warm(&self) -> bool {
+        self.handle.load().is_warm()
+    }
+
+    /// Current publication epoch.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// An admission seeded its drafters from the warm snapshot.
+    pub fn note_seed(&mut self) {
+        self.stats.seeds += 1;
+    }
+
+    /// Queue one accepted segment (a completed request's verified
+    /// sequence, or a live prefix at reseed) for the next publish.
+    pub fn add_segment(&mut self, seg: &[i32]) {
+        if seg.is_empty() {
+            return;
+        }
+        self.pending.push(seg.to_vec());
+    }
+
+    /// Anything queued for the next epoch?
+    pub fn publish_due(&self) -> bool {
+        self.publisher && !self.pending.is_empty()
+    }
+
+    /// Fold pending segments, apply the retention cap, and swap the next
+    /// epoch into the handle. Returns the token count folded (0 for taps
+    /// and empty publishes). O(new tokens + clone) without eviction; an
+    /// eviction rebuilds the builders over the retained window.
+    pub fn publish(&mut self) -> u64 {
+        if !self.publisher || self.pending.is_empty() {
+            return 0;
+        }
+        let mut folded = 0u64;
+        for seg in self.pending.drain(..) {
+            folded += seg.len() as u64;
+            self.built.fold(&seg);
+            self.segments.push_back(seg);
+        }
+        let mut total: usize = self.segments.iter().map(|s| s.len()).sum();
+        if total > self.cap_tokens {
+            while total > self.cap_tokens && self.segments.len() > 1 {
+                let dropped = self.segments.pop_front().map(|s| s.len()).unwrap_or(0);
+                total -= dropped;
+                self.stats.evictions += 1;
+            }
+            let mut rebuilt = CorpusSnapshot::empty(self.epoch);
+            for seg in &self.segments {
+                rebuilt.fold(seg);
+            }
+            self.built = rebuilt;
+        }
+        self.epoch += 1;
+        self.built.epoch = self.epoch;
+        self.stats.publishes += 1;
+        self.stats.tokens = self.built.tokens;
+        self.handle.publish(Arc::new(self.built.clone()));
+        folded
+    }
+
+    /// Weight-update decay: the accumulated wave indexed the OLD
+    /// policy's continuations — drop it. A publisher publishes an empty
+    /// epoch immediately (readers go cold at the next pointer load); a
+    /// tap records the event for the supervisor to act on.
+    pub fn decay(&mut self) {
+        self.stats.decays += 1;
+        self.pending.clear();
+        if !self.publisher {
+            self.decay_flag = true;
+            return;
+        }
+        self.segments.clear();
+        self.epoch += 1;
+        self.built = CorpusSnapshot::empty(self.epoch);
+        self.stats.publishes += 1;
+        self.stats.tokens = 0;
+        self.handle.publish(Arc::new(self.built.clone()));
+    }
+
+    /// Drain buffered segments (cluster supervisor pulling from a tap).
+    pub fn drain_pending(&mut self) -> Vec<Vec<i32>> {
+        std::mem::take(&mut self.pending)
+    }
+
+    /// Take-and-clear the tap's decay event flag.
+    pub fn take_decay_flag(&mut self) -> bool {
+        std::mem::take(&mut self.decay_flag)
+    }
+}
+
+impl Default for DraftCorpus {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seg(vals: &[i32]) -> Vec<i32> {
+        vals.to_vec()
+    }
+
+    #[test]
+    fn publish_bumps_epoch_and_warms_the_handle() {
+        let mut c = DraftCorpus::new();
+        let h = c.handle();
+        assert_eq!(h.epoch(), 0);
+        assert!(!h.load().is_warm());
+        c.add_segment(&seg(&[1, 2, 3, 1, 2, 3]));
+        assert!(c.publish_due());
+        assert_eq!(c.publish(), 6);
+        let s = h.load();
+        assert_eq!(s.epoch, 1);
+        assert!(s.is_warm());
+        assert_eq!(s.tokens, 6);
+        assert_eq!(c.stats.publishes, 1);
+        assert!(!c.publish_due(), "pending drained by publish");
+    }
+
+    #[test]
+    fn seeded_drafter_matches_from_scratch_over_concatenated_stream() {
+        let mut c = DraftCorpus::new();
+        let segs = [seg(&[5, 6, 7, 5, 6, 7, 5, 6]), seg(&[9, 9, 3, 9, 9, 3])];
+        for s in &segs {
+            c.add_segment(s);
+        }
+        c.publish();
+        let snap = c.handle().load();
+        let req: Vec<i32> = vec![5, 6, 7, 5, 6];
+        for method in [DraftMethod::Sam, DraftMethod::Ngram] {
+            let mut seeded = snap.seed_token_drafter(&method).expect("warm snapshot seeds");
+            seeded.extend(&req);
+            let mut scratch = method.new_token_drafter().unwrap();
+            for s in &segs {
+                scratch.extend(&[SEGMENT_SEP]);
+                scratch.extend(s);
+            }
+            scratch.extend(&[SEGMENT_SEP]);
+            scratch.extend(&req);
+            assert_eq!(seeded.len(), scratch.len(), "{method:?} history length");
+            assert_eq!(
+                seeded.draft(8),
+                scratch.draft(8),
+                "{} seeded vs from-scratch proposals diverged",
+                method.label()
+            );
+        }
+    }
+
+    #[test]
+    fn publication_never_perturbs_prior_epoch_clones() {
+        let mut c = DraftCorpus::new();
+        c.add_segment(&seg(&[1, 2, 3, 1, 2, 3, 1, 2]));
+        c.publish();
+        let h = c.handle();
+        let mut in_flight = h.load().seed_token_drafter(&DraftMethod::Ngram).unwrap();
+        in_flight.extend(&[1, 2, 3, 1]);
+        let before = in_flight.draft(4);
+        // a later epoch lands while the clone is mid-request
+        c.add_segment(&seg(&[7, 7, 7, 7, 7, 7]));
+        c.publish();
+        assert_eq!(h.epoch(), 2);
+        assert_eq!(in_flight.draft(4), before, "in-flight clone saw the publish");
+    }
+
+    #[test]
+    fn cold_snapshot_seeds_nothing_and_models_never_seed() {
+        let c = DraftCorpus::new();
+        let snap = c.handle().load();
+        assert!(snap.seed_token_drafter(&DraftMethod::Sam).is_none());
+        let mut warm = DraftCorpus::new();
+        warm.add_segment(&[4, 4, 4, 4]);
+        warm.publish();
+        let snap = warm.handle().load();
+        assert!(snap.seed_token_drafter(&DraftMethod::Model("draft_small".into())).is_none());
+        assert!(snap.seed_token_drafter(&DraftMethod::Sam).is_some());
+    }
+
+    #[test]
+    fn decay_publishes_a_cold_epoch_and_counts() {
+        let mut c = DraftCorpus::new();
+        c.add_segment(&[1, 2, 1, 2, 1, 2]);
+        c.publish();
+        let h = c.handle();
+        assert!(h.load().is_warm());
+        c.decay();
+        let s = h.load();
+        assert_eq!(s.epoch, 2, "decay is its own epoch");
+        assert!(!s.is_warm(), "decayed snapshot must be cold");
+        assert_eq!(c.stats.decays, 1);
+        assert_eq!(c.stats.tokens, 0);
+        // the wave restarts cleanly afterwards
+        c.add_segment(&[8, 8, 8, 8]);
+        c.publish();
+        assert!(h.load().is_warm());
+        assert_eq!(h.epoch(), 3);
+    }
+
+    #[test]
+    fn cap_evicts_oldest_segments_and_rebuilds() {
+        let mut c = DraftCorpus::with_cap(10);
+        c.add_segment(&seg(&[1; 6]));
+        c.publish();
+        c.add_segment(&seg(&[2; 6]));
+        c.publish();
+        // 12 > 10: the oldest segment must go
+        assert_eq!(c.stats.evictions, 1);
+        assert_eq!(c.stats.tokens, 6);
+        let snap = c.handle().load();
+        assert_eq!(snap.tokens, 6);
+        // the rebuilt builders index only the retained segment
+        let mut td = snap.seed_token_drafter(&DraftMethod::Sam).unwrap();
+        td.extend(&[2, 2, 2]);
+        assert!(td.draft(3).iter().all(|&t| t == 2));
+    }
+
+    #[test]
+    fn tap_buffers_for_the_supervisor_and_never_publishes() {
+        let mut master = DraftCorpus::new();
+        let mut tap = DraftCorpus::tap(master.handle());
+        tap.add_segment(&[3, 1, 4, 1, 5]);
+        assert!(!tap.publish_due());
+        assert_eq!(tap.publish(), 0, "taps never publish");
+        assert_eq!(master.handle().epoch(), 0);
+        for s in tap.drain_pending() {
+            master.add_segment(&s);
+        }
+        master.publish();
+        assert_eq!(tap.handle().epoch(), 1, "replication is the shared handle");
+        assert!(tap.is_warm());
+        tap.decay();
+        assert!(tap.take_decay_flag(), "tap decay is an event for the supervisor");
+        assert!(!tap.take_decay_flag());
+        assert_eq!(master.handle().epoch(), 1, "tap decay must not publish");
+    }
+
+    #[test]
+    fn persist_knob_disables_decay_wiring() {
+        let c = DraftCorpus::new().persist_across_updates();
+        assert!(!c.decay_on_invalidate());
+        assert!(DraftCorpus::new().decay_on_invalidate());
+    }
+}

@@ -11,9 +11,11 @@
 //! worker's CPU (the paper piggybacks them on existing workers the same
 //! way).
 
+pub mod corpus;
 pub mod ngram;
 pub mod sam;
 
+pub use corpus::{CorpusHandle, CorpusSnapshot, CorpusStats, DraftCorpus, SEGMENT_SEP};
 pub use ngram::NgramDrafter;
 pub use sam::SamDrafter;
 

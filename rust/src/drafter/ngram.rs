@@ -96,6 +96,9 @@ impl GramTable {
     }
 }
 
+/// `Clone` supports corpus snapshot seeding: a prebuilt table is cloned
+/// out of the published corpus snapshot into an admitted slot.
+#[derive(Clone)]
 pub struct NgramDrafter {
     /// n-gram order (falls back to shorter grams down to 1).
     pub max_n: usize,

@@ -109,6 +109,9 @@ struct State {
     end_pos: u32,
 }
 
+/// `Clone` supports corpus snapshot seeding: a prebuilt automaton is
+/// cloned out of the published corpus snapshot into a slot.
+#[derive(Clone)]
 pub struct SamDrafter {
     states: Vec<State>,
     trans: TransArena,

@@ -40,10 +40,12 @@
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::drafter::corpus::{CorpusHandle, CorpusSnapshot};
 use crate::drafter::{DraftMethod, TokenDrafter};
 use crate::obs::{Phase, Tracer};
 use crate::runtime::{KvCache, Runtime};
@@ -77,6 +79,10 @@ struct SlotSpec {
     /// Coupled discipline: depth-1 pipeline, bonus token on full accept.
     coupled: bool,
     method: DraftMethod,
+    /// Wave-global corpus snapshot to seed the slot's token drafter from
+    /// (None = cold start / model method). Loaded ONCE at spawn — the
+    /// drafter thread's per-token path never touches shared state.
+    seed: Option<Arc<CorpusSnapshot>>,
 }
 
 /// Drafter-thread state for one slot.
@@ -147,7 +153,13 @@ fn drafter_thread(
     }
     let mut token_drafters: Vec<Option<Box<dyn TokenDrafter>>> = (0..n)
         .map(|i| {
-            let mut td = specs[i].method.new_token_drafter();
+            // seeded clone of the corpus snapshot when provided, cold
+            // constructor otherwise — identical structure either way
+            let mut td = specs[i]
+                .seed
+                .as_ref()
+                .and_then(|s| s.seed_token_drafter(&specs[i].method))
+                .or_else(|| specs[i].method.new_token_drafter());
             if let Some(t) = td.as_mut() {
                 t.extend(&specs[i].prompt);
             }
@@ -429,6 +441,25 @@ pub fn rollout_decoupled_planned_traced(
     plans: &[SlotPlan],
     tracer: Option<&Tracer>,
 ) -> Result<EngineReport> {
+    rollout_decoupled_planned_corpus(rt, art_dir, cfg, requests, plans, tracer, None)
+}
+
+/// [`rollout_decoupled_planned_traced`] seeding token drafters from a
+/// wave-global corpus: the published snapshot is loaded ONCE here (a
+/// pointer load) and cloned into each token-method slot's drafter on the
+/// drafter thread, so every slot starts warm while the per-token draft
+/// path stays lock-free. Seeding changes only what drafters *propose* —
+/// verification still decides every token on the shared sampling tape,
+/// so output is token-identical to the unseeded rollout.
+pub fn rollout_decoupled_planned_corpus(
+    rt: &Runtime,
+    art_dir: &std::path::Path,
+    cfg: &EngineConfig,
+    requests: &mut Vec<Request>,
+    plans: &[SlotPlan],
+    tracer: Option<&Tracer>,
+    corpus: Option<&CorpusHandle>,
+) -> Result<EngineReport> {
     let m = &rt.manifest;
     let n = requests.len();
     if n == 0 {
@@ -483,6 +514,7 @@ pub fn rollout_decoupled_planned_traced(
 
     let (chunk_tx, chunk_rx) = channel::<Chunk>();
     let (verdict_tx, verdict_rx) = channel::<Verdict>();
+    let snap = corpus.map(|h| h.load()).filter(|s| s.is_warm());
     let specs: Vec<SlotSpec> = requests
         .iter()
         .zip(plans)
@@ -492,6 +524,7 @@ pub fn rollout_decoupled_planned_traced(
             k: pl.window,
             coupled: pl.mode == PlanMode::Coupled,
             method: pl.method.clone(),
+            seed: if pl.method.is_model() { None } else { snap.clone() },
         })
         .collect();
     let art = art_dir.to_path_buf();

@@ -39,7 +39,8 @@ pub mod plan;
 pub mod worker;
 
 pub use decoupled::{
-    rollout_decoupled, rollout_decoupled_planned, rollout_decoupled_planned_traced,
+    rollout_decoupled, rollout_decoupled_planned, rollout_decoupled_planned_corpus,
+    rollout_decoupled_planned_traced,
 };
 pub use fault::{Severity, SpecError};
 pub use overlap::{PrefetchChunk, Prefetcher, ResetSpec};

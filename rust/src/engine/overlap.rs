@@ -35,13 +35,15 @@
 //! [`EngineReport::prefetch_deaths`]: crate::engine::EngineReport
 
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
+use crate::drafter::corpus::CorpusSnapshot;
 use crate::drafter::{DraftMethod, TokenDrafter};
 
 /// Rebuild instruction for one slot's drafter mirror (admit / plan swap).
-#[derive(Clone, Debug)]
+#[derive(Clone)]
 pub struct ResetSpec {
     /// Token-drafter method mirrored for the slot.
     pub method: DraftMethod,
@@ -49,6 +51,11 @@ pub struct ResetSpec {
     pub window: usize,
     /// Full verified token history at reset time.
     pub seq: Vec<i32>,
+    /// Corpus snapshot the slot's real drafter was seeded from (None =
+    /// cold start). The mirror must build — and rebuild on rollback —
+    /// from this exact snapshot, or it predicts different chunks than
+    /// the worker-side drafter would draft.
+    pub seed: Option<Arc<CorpusSnapshot>>,
 }
 
 /// Commands from the worker to the prefetch thread. One FIFO channel
@@ -98,6 +105,23 @@ struct SlotMirror {
     drafter: Box<dyn TokenDrafter>,
     seq: Vec<i32>,
     window: usize,
+    /// Method + seeding snapshot, kept so a rollback can rebuild the
+    /// drafter exactly as it was first built (a bare `reset()` would
+    /// silently drop the corpus seed and diverge from the worker).
+    method: DraftMethod,
+    seed: Option<Arc<CorpusSnapshot>>,
+}
+
+/// Build a mirror drafter the same way the worker built the slot's
+/// drafter: seeded clone of `seed` when present, cold constructor
+/// otherwise (the snapshot fallback covers a cold/model-method seed
+/// defensively — the worker never sends one).
+fn mirror_drafter(
+    method: &DraftMethod,
+    seed: Option<&Arc<CorpusSnapshot>>,
+) -> Option<Box<dyn TokenDrafter>> {
+    seed.and_then(|snap| snap.seed_token_drafter(method))
+        .or_else(|| method.new_token_drafter())
 }
 
 fn prefetch_loop(
@@ -115,9 +139,15 @@ fn prefetch_loop(
                     continue;
                 }
                 slots[slot] = spec.and_then(|s| {
-                    let mut drafter = s.method.new_token_drafter()?;
+                    let mut drafter = mirror_drafter(&s.method, s.seed.as_ref())?;
                     drafter.extend(&s.seq);
-                    Some(SlotMirror { drafter, seq: s.seq, window: s.window })
+                    Some(SlotMirror {
+                        drafter,
+                        seq: s.seq,
+                        window: s.window,
+                        method: s.method,
+                        seed: s.seed,
+                    })
                 });
             }
             PrefetchCmd::Predict { slot, stamp, drafts } => {
@@ -153,11 +183,20 @@ fn prefetch_loop(
                 }
                 if st.seq.len() >= base_len {
                     // rollback: truncate to the verified base and replay
-                    // the actually-accepted tokens over a fresh index
+                    // the actually-accepted tokens over a fresh index,
+                    // rebuilt from the original seeding snapshot
                     st.seq.truncate(base_len);
                     st.seq.extend_from_slice(&appended);
-                    st.drafter.reset();
-                    st.drafter.extend(&st.seq);
+                    match mirror_drafter(&st.method, st.seed.as_ref()) {
+                        Some(mut d) => {
+                            d.extend(&st.seq);
+                            st.drafter = d;
+                        }
+                        None => {
+                            st.drafter.reset();
+                            st.drafter.extend(&st.seq);
+                        }
+                    }
                 } else {
                     // mirror is behind the verified base: it missed a
                     // lifecycle event — drop it until the next Reset
@@ -234,7 +273,7 @@ mod tests {
     use crate::drafter::DraftMethod;
 
     fn spec(seq: &[i32]) -> ResetSpec {
-        ResetSpec { method: DraftMethod::Ngram, window: 4, seq: seq.to_vec() }
+        ResetSpec { method: DraftMethod::Ngram, window: 4, seq: seq.to_vec(), seed: None }
     }
 
     fn recv_chunk(p: &Prefetcher) -> PrefetchChunk {
@@ -325,6 +364,37 @@ mod tests {
         // flush with a second slot-less command and check emptiness
         std::thread::sleep(std::time::Duration::from_millis(10));
         assert!(matches!(p.try_recv(), Err(TryRecvError::Empty)));
+    }
+
+    /// A corpus-seeded mirror must draft exactly like a seeded sync
+    /// drafter — including after a rollback, which must rebuild from the
+    /// SAME snapshot the slot was originally seeded with.
+    #[test]
+    fn seeded_mirror_matches_seeded_sync_drafter_across_rollback() {
+        use crate::drafter::corpus::DraftCorpus;
+        let mut corpus = DraftCorpus::new();
+        corpus.add_segment(&(0..40).map(|i| i % 5).collect::<Vec<i32>>());
+        corpus.publish();
+        let snap = corpus.handle().load();
+        let hist: Vec<i32> = (0..10).map(|i| i % 5).collect();
+        let mut sp = spec(&hist);
+        sp.seed = Some(snap.clone());
+        let p = Prefetcher::new(1, -1);
+        assert!(p.reset(0, Some(sp)));
+        assert!(p.predict(0, 1, vec![0, 1, 2, 3]));
+        let _stale = recv_chunk(&p);
+        // verifier accepted only [0] and decoded a correction token 7
+        let appended = vec![0, 7];
+        assert!(p.resolve(0, hist.len(), appended.clone()));
+        assert!(p.predict(0, 2, vec![2, 3, 4, 0]));
+        let c = recv_chunk(&p);
+        let mut oracle = snap.seed_token_drafter(&DraftMethod::Ngram).unwrap();
+        oracle.extend(&hist);
+        oracle.extend(&appended);
+        oracle.extend(&[2, 3, 4, 0]);
+        let mut want = oracle.draft(4);
+        want.resize(4, -1);
+        assert_eq!(c.tokens, want, "rollback must rebuild from the seeding snapshot");
     }
 
     /// Out-of-range slots must be ignored, not panic the thread.

@@ -31,11 +31,13 @@
 
 use std::collections::BTreeMap;
 use std::sync::mpsc::TryRecvError;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::drafter::TokenDrafter;
+use crate::drafter::corpus::{CorpusHandle, CorpusSnapshot};
+use crate::drafter::{DraftMethod, TokenDrafter};
 use crate::obs::{Phase, Tracer};
 use crate::runtime::{KvCache, KvRow, Runtime};
 use crate::spec::{decode_one, verify_exact, AcceptanceStats, VerifyOutcome};
@@ -283,6 +285,17 @@ pub struct Worker<'rt> {
     pf_stamp: u64,
     /// Prefetch-thread deaths not yet surfaced into an [`EngineReport`].
     prefetch_deaths_pending: u64,
+    /// Wave-global draft corpus reader (the serve loop installs it).
+    /// Consulted only at slot lifecycle events — admission, fork,
+    /// migration, plan swap — never per drafted token.
+    corpus: Option<CorpusHandle>,
+    /// Snapshot each slot's token drafter was seeded from (None = cold
+    /// start). The prefetch mirror must rebuild from the SAME snapshot
+    /// the worker-side drafter used, or mirror and worker diverge.
+    seeded_from: Vec<Option<Arc<CorpusSnapshot>>>,
+    /// Weight-update invalidations served; the serve loop polls the
+    /// delta to trigger corpus decay at the drained round boundary.
+    invalidations: u64,
 }
 
 impl<'rt> Worker<'rt> {
@@ -318,6 +331,9 @@ impl<'rt> Worker<'rt> {
             pf_valid: vec![0; bucket],
             pf_stamp: 0,
             prefetch_deaths_pending: 0,
+            corpus: None,
+            seeded_from: (0..bucket).map(|_| None).collect(),
+            invalidations: 0,
             rt,
             cfg,
             target,
@@ -335,6 +351,36 @@ impl<'rt> Worker<'rt> {
     /// [`RuntimeStats`]: crate::runtime::RuntimeStats
     pub fn set_tracer(&mut self, t: Tracer) {
         self.tracer = Some(t);
+    }
+
+    /// Install the wave-global draft corpus reader. Subsequent slot
+    /// lifecycle events seed token drafters from the published snapshot
+    /// instead of empty state; already-live drafters are untouched.
+    pub fn set_corpus(&mut self, h: CorpusHandle) {
+        self.corpus = Some(h);
+    }
+
+    /// Weight-update invalidations served so far (serve-loop decay poll).
+    pub fn invalidation_count(&self) -> u64 {
+        self.invalidations
+    }
+
+    /// Build a token drafter for `method`, cloned out of the published
+    /// corpus snapshot when one is installed and warm (cold constructor
+    /// otherwise), returning the seeding snapshot as provenance so the
+    /// prefetch mirror can rebuild identically. One pointer load per
+    /// lifecycle event; the per-token draft path never comes here.
+    fn seeded_token_drafter(
+        &self,
+        method: &DraftMethod,
+    ) -> (Option<Box<dyn TokenDrafter>>, Option<Arc<CorpusSnapshot>>) {
+        if let Some(h) = &self.corpus {
+            let snap = h.load();
+            if let Some(td) = snap.seed_token_drafter(method) {
+                return (Some(td), Some(snap));
+            }
+        }
+        (method.new_token_drafter(), None)
     }
 
     /// Create a worker for `requests` (all sharing the manifest prompt
@@ -498,16 +544,17 @@ impl<'rt> Worker<'rt> {
         self.scratch.toks = toks;
 
         for i in 0..self.bucket {
-            self.token_drafters[i] = match &self.slots[i] {
-                Some(r) if self.plans[i].window > 0 => {
-                    let mut td = self.plans[i].method.new_token_drafter();
-                    if let Some(t) = td.as_mut() {
-                        t.extend(&r.seq);
-                    }
-                    td
-                }
-                _ => None,
-            };
+            if self.slots[i].is_none() || self.plans[i].window == 0 {
+                self.token_drafters[i] = None;
+                self.seeded_from[i] = None;
+                continue;
+            }
+            let (mut td, seed) = self.seeded_token_drafter(&self.plans[i].method);
+            if let Some(t) = td.as_mut() {
+                t.extend(&self.slots[i].as_ref().unwrap().seq);
+            }
+            self.token_drafters[i] = td;
+            self.seeded_from[i] = seed;
         }
         for i in 0..self.bucket {
             self.prefetch_reset(i);
@@ -595,14 +642,16 @@ impl<'rt> Worker<'rt> {
         }
         self.scratch.toks = toks;
 
+        self.seeded_from[slot] = None;
         self.token_drafters[slot] = if plan.window > 0 {
-            let mut td = plan.method.new_token_drafter();
+            let (mut td, seed) = self.seeded_token_drafter(&plan.method);
             if let Some(t) = td.as_mut() {
                 // the whole verified sequence, not just the prompt: a
                 // re-admitted (quarantined) request drafts from its full
                 // history exactly as it did before the fault
                 t.extend(&req.seq);
             }
+            self.seeded_from[slot] = seed;
             td
         } else {
             None
@@ -644,6 +693,7 @@ impl<'rt> Worker<'rt> {
         self.validate_plan(&plan)?;
         let row = self.cache.extract_row(src)?;
         self.cache.insert_row(dst, &row)?;
+        self.seeded_from[dst] = None;
         self.token_drafters[dst] = if plan.window > 0 {
             if let Some(name) = plan.method.model_name() {
                 // consumed stays 0: the next draft round's catch-up feeds
@@ -651,8 +701,10 @@ impl<'rt> Worker<'rt> {
                 self.ensure_draft_model(name)?;
                 None
             } else {
-                let mut td = plan.method.new_token_drafter().expect("token method");
+                let (td, seed) = self.seeded_token_drafter(&plan.method);
+                let mut td = td.expect("token method");
                 td.extend(&req.seq);
+                self.seeded_from[dst] = seed;
                 Some(td)
             }
         } else {
@@ -701,13 +753,18 @@ impl<'rt> Worker<'rt> {
         self.validate_request(&req)?;
         self.validate_plan(&plan)?;
         self.cache.insert_row(slot, row)?;
+        self.seeded_from[slot] = None;
         self.token_drafters[slot] = if plan.window > 0 {
             if let Some(name) = plan.method.model_name() {
                 self.ensure_draft_model(name)?;
                 None
             } else {
-                let mut td = plan.method.new_token_drafter().expect("token method");
+                // migrated/forked slots land on the warm corpus too: the
+                // cluster replicates epochs through the shared handle
+                let (td, seed) = self.seeded_token_drafter(&plan.method);
+                let mut td = td.expect("token method");
                 td.extend(&req.seq);
+                self.seeded_from[slot] = seed;
                 Some(td)
             }
         } else {
@@ -734,6 +791,7 @@ impl<'rt> Worker<'rt> {
             st.consumed[slot] = 0;
         }
         self.token_drafters[slot] = None;
+        self.seeded_from[slot] = None;
         self.plans[slot] = self.cfg.plan.clone();
         self.prefetch_reset(slot);
         Ok(req)
@@ -769,6 +827,7 @@ impl<'rt> Worker<'rt> {
         if !keep {
             // tear down the old drafter surface
             self.token_drafters[slot] = None;
+            self.seeded_from[slot] = None;
             if old.window > 0 {
                 if let Some(oname) = old.method.model_name() {
                     if let Some(st) = self.draft_models.get_mut(oname) {
@@ -786,9 +845,11 @@ impl<'rt> Worker<'rt> {
                     // reset the staging cache mid-batch for nothing)
                     self.ensure_draft_model(name)?;
                 } else {
-                    let mut td = plan.method.new_token_drafter().expect("token method");
+                    let (td, seed) = self.seeded_token_drafter(&plan.method);
+                    let mut td = td.expect("token method");
                     td.extend(&self.slots[slot].as_ref().unwrap().seq);
                     self.token_drafters[slot] = Some(td);
+                    self.seeded_from[slot] = seed;
                 }
             }
         }
@@ -829,6 +890,10 @@ impl<'rt> Worker<'rt> {
                 method: self.plans[slot].method.clone(),
                 window: self.plans[slot].window,
                 seq: self.slots[slot].as_ref().unwrap().seq.clone(),
+                // mirror from the SAME snapshot the slot drafter was
+                // seeded with — a cold mirror of a warm drafter (or vice
+                // versa) would predict different chunks than the worker
+                seed: self.seeded_from[slot].clone(),
             })
         } else {
             None
@@ -1614,6 +1679,7 @@ impl<'rt> Worker<'rt> {
     /// and is not touched here. Lossless by construction: drafts only
     /// *propose* — verification against the target decides every token.
     pub fn invalidate_draft_state(&mut self) -> Result<()> {
+        self.invalidations += 1;
         for st in self.draft_models.values_mut() {
             for slot in 0..self.bucket {
                 st.cache.clear_row(slot)?;
@@ -1627,11 +1693,16 @@ impl<'rt> Worker<'rt> {
             if self.plans[slot].window == 0 || self.plans[slot].method.is_model() {
                 continue;
             }
+            // deliberately UNSEEDED: the published corpus indexed the OLD
+            // policy's continuations, so it is stale by definition at this
+            // instant — the serve loop decays/reseeds it at the next round
+            // boundary, and later lifecycle events pick the fresh epoch up
             let mut td = self.plans[slot].method.new_token_drafter().ok_or_else(|| {
                 anyhow!("plan method for slot {slot} names no token drafter")
             })?;
             td.extend(&r.seq);
             self.token_drafters[slot] = Some(td);
+            self.seeded_from[slot] = None;
         }
         // mirrors indexed the pre-update drafts; rebuild them from the
         // verified sequences exactly like the worker-side drafters

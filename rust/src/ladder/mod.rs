@@ -13,6 +13,22 @@ use crate::planner::costmodel::CostModel;
 use crate::planner::tgs::{tgs_coupled, tgs_decoupled, tgs_vanilla};
 use crate::util::Rng;
 
+/// Pseudo-count weight of a profiled prior when blending in measured
+/// acceptance: the prior counts as this many drafted tokens of evidence.
+pub const PRIOR_PSEUDO_COUNT: f64 = 32.0;
+
+/// Blend a profiled prior acceptance rate with a measured rate backed by
+/// `n` drafted tokens of evidence (Beta-mean style shrinkage): with
+/// little evidence the result stays near the prior, with a wave of
+/// evidence it converges to the measured rate. This is the
+/// prior-feedback rule the serve replanner applies so Algorithm 1/2
+/// start from measured rates instead of static profiles (PERF.md
+/// §Online draft learning).
+pub fn blend_measured(prior: f64, measured: f64, n: u64) -> f64 {
+    let n = n as f64;
+    ((prior * PRIOR_PSEUDO_COUNT + measured * n) / (PRIOR_PSEUDO_COUNT + n)).clamp(0.0, 1.0)
+}
+
 /// One method's speedup curve over the acceptance-rate grid.
 #[derive(Clone, Debug)]
 pub struct LadderEntry {
@@ -246,6 +262,19 @@ mod tests {
             let rel = (ga - gs).abs() / ga;
             assert!(rel < 0.25, "{}: analytic {ga:.2} vs simulated {gs:.2}", ea.method);
         }
+    }
+
+    #[test]
+    fn blend_measured_shrinks_toward_evidence() {
+        // no evidence: the prior stands
+        assert!((blend_measured(0.4, 0.9, 0) - 0.4).abs() < 1e-12);
+        // evidence equal to the pseudo-count: halfway
+        let half = blend_measured(0.4, 0.9, PRIOR_PSEUDO_COUNT as u64);
+        assert!((half - 0.65).abs() < 1e-12);
+        // overwhelming evidence: converges to the measured rate
+        assert!((blend_measured(0.4, 0.9, 1_000_000) - 0.9).abs() < 1e-3);
+        // monotone in n
+        assert!(blend_measured(0.4, 0.9, 100) > blend_measured(0.4, 0.9, 10));
     }
 
     #[test]

@@ -14,7 +14,7 @@ use std::process::exit;
 
 use specactor::coordinator::global::{plan_initial, rollout, GlobalConfig};
 use specactor::coordinator::{RaceArbiter, Reconfigurator};
-use specactor::drafter::DraftMethod;
+use specactor::drafter::{DraftCorpus, DraftMethod};
 use specactor::engine::{EngineConfig, Request, SlotPlan, VerifyDiscipline, Worker};
 use specactor::ladder::Ladder;
 use specactor::obs::{chrome_trace, MetricsExporter};
@@ -46,6 +46,13 @@ fn usage() -> ! {
            --fon-race        race tail stragglers in-process (Algorithm 3): fork the\n\
                              worst below-mean slot into idle slots under next-best\n\
                              draft methods; first finisher wins, admissions preempt\n\
+           --corpus          wave-global online draft learning: harvest every\n\
+                             accepted token into a shared corpus, publish immutable\n\
+                             snapshots to the drafters at round boundaries, seed new\n\
+                             admissions' token drafters from them, and feed measured\n\
+                             acceptance into the planner priors; with --workers N the\n\
+                             corpus is shared across all workers. Token-identical:\n\
+                             seeding changes proposals, never verified outputs\n\
            --vanilla         disable speculation (plain decode rounds)\n\
            --overlap         overlapped execution: prefetch next-round drafts behind\n\
                              the fused verify step, stage KV double-buffered, and run\n\
@@ -189,6 +196,14 @@ fn print_serve_summary<E: ServeEngine>(engine: &str, b: &Batcher<E>, rep: &OpenL
             .collect();
         println!("  acceptance by method: {}", parts.join("  "));
     }
+    if m.corpus_publishes > 0 {
+        println!(
+            "  corpus: {} tokens published, {} seeded admissions, {} publishes, \
+             {} evictions, {} decays",
+            m.corpus_tokens, m.corpus_seeds, m.corpus_publishes, m.corpus_evictions,
+            m.corpus_decays
+        );
+    }
 }
 
 /// Wire the observability surface onto a constructed batcher: per-phase
@@ -323,6 +338,14 @@ fn print_cluster_summary<E: ServeEngine>(
             cm.cross_races, cm.cross_race_wins, cm.cross_race_cancels, cm.stage_rollbacks
         );
     }
+    if cm.corpus_publishes > 0 {
+        println!(
+            "  corpus (shared): {} tokens published, {} seeded admissions, {} publishes, \
+             {} evictions, {} decays",
+            cm.corpus_tokens, cm.corpus_seeds, cm.corpus_publishes, cm.corpus_evictions,
+            cm.corpus_decays
+        );
+    }
     for (w, b) in c.workers().iter().enumerate() {
         let health = match c.health()[w] {
             WorkerHealth::Healthy => "healthy",
@@ -355,6 +378,7 @@ fn cmd_serve(mut args: Args) {
     let seed = args.opt_parse("seed", 7u64);
     let reconfig_period = args.opt_parse("reconfig-period", 0u64);
     let fon_race = args.flag("fon-race");
+    let corpus = args.flag("corpus");
     let vanilla = args.flag("vanilla");
     let overlap = args.flag("overlap") && !vanilla;
     let grouped = args.flag("grouped-verify");
@@ -426,6 +450,9 @@ fn cmd_serve(mut args: Args) {
             if fon_race && !vanilla {
                 c = c.with_cross_racing();
             }
+            if corpus && !vanilla {
+                c = c.with_corpus(DraftCorpus::new());
+            }
             let exporter = metrics_addr.as_deref().map(|addr| {
                 MetricsExporter::bind(addr).unwrap_or_else(|e| {
                     eprintln!("metrics exporter: {e:#}");
@@ -468,6 +495,9 @@ fn cmd_serve(mut args: Args) {
         }
         if fon_race && !vanilla {
             b = b.with_racing(RaceArbiter::synthetic());
+        }
+        if corpus && !vanilla {
+            b = b.with_corpus(DraftCorpus::new());
         }
         b = wire_observability(b, metrics_addr.as_deref(), trace_out.as_deref(), pace_us);
         match drive_open_loop(&mut b, arrivals, Some(1.0e-3)) {
@@ -574,6 +604,9 @@ fn cmd_serve(mut args: Args) {
         if fon_race && !vanilla {
             c = c.with_cross_racing();
         }
+        if corpus && !vanilla {
+            c = c.with_corpus(DraftCorpus::new());
+        }
         let exporter = metrics_addr.as_deref().map(|addr| {
             MetricsExporter::bind(addr).unwrap_or_else(|e| {
                 eprintln!("metrics exporter: {e:#}");
@@ -631,6 +664,9 @@ fn cmd_serve(mut args: Args) {
         }
         rank.sort_by(|x, y| y.1.total_cmp(&x.1));
         b = b.with_racing(RaceArbiter::for_manifest(&m, cost.clone(), rank));
+    }
+    if corpus && !vanilla {
+        b = b.with_corpus(DraftCorpus::new());
     }
     b = wire_observability(b, metrics_addr.as_deref(), trace_out.as_deref(), pace_us);
     match drive_open_loop(&mut b, arrivals, None) {

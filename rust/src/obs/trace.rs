@@ -66,9 +66,13 @@ pub enum Phase {
     /// Overlapped round: next-round h2d staging overlapped with this
     /// round's execute via the split submit/await runtime step.
     PrefetchKvH2d,
+    /// Tick phase 6: folding accepted segments into the wave-global
+    /// draft corpus and publishing the next snapshot epoch (round
+    /// boundary — off the decode critical path by construction).
+    CorpusPublish,
 }
 
-pub const N_PHASES: usize = 14;
+pub const N_PHASES: usize = 15;
 
 impl Phase {
     pub const ALL: [Phase; N_PHASES] = [
@@ -86,6 +90,7 @@ impl Phase {
         Phase::KvD2h,
         Phase::PrefetchDraft,
         Phase::PrefetchKvH2d,
+        Phase::CorpusPublish,
     ];
 
     pub fn label(self) -> &'static str {
@@ -104,6 +109,7 @@ impl Phase {
             Phase::KvD2h => "kv_d2h",
             Phase::PrefetchDraft => "prefetch_draft",
             Phase::PrefetchKvH2d => "prefetch_kv_h2d",
+            Phase::CorpusPublish => "corpus_publish",
         }
     }
 

@@ -39,6 +39,12 @@ impl AffineCost {
     }
 }
 
+/// Per-token cost of the suffix-automaton drafter relative to the n-gram
+/// drafter: automaton transition walks touch more state than a flat
+/// gram-table probe, but stay in the same near-free CPU-lookup family.
+/// Used by [`CostModel::install_sam_curve`].
+pub const SAM_NGRAM_COST_RATIO: f64 = 1.25;
+
 /// Relative compute scale of a draft method (vs the target model).
 #[derive(Clone, Debug)]
 pub struct DraftCost {
@@ -221,14 +227,42 @@ impl CostModel {
         self.draft_cost(method).per_token.eval(b)
     }
 
+    /// Give the suffix-automaton drafter its OWN cost key. Until live
+    /// evidence arrives sam has no profiled curve and [`draft_cost`]
+    /// borrows n-gram's; once the serve loop has measured per-method
+    /// acceptance for sam ([`Reconfigurator::feed_measured`]) it installs
+    /// a dedicated "sam" curve — the n-gram curve scaled by
+    /// [`SAM_NGRAM_COST_RATIO`] (automaton transitions walk a larger
+    /// state machine than a flat gram-table probe, same CPU-lookup
+    /// family) — so `cost_method` stops falling back and Algorithm 2
+    /// prices sam windows against sam's own curve. Idempotent.
+    ///
+    /// [`draft_cost`]: CostModel::draft_cost
+    /// [`Reconfigurator::feed_measured`]: crate::coordinator::reconfig::Reconfigurator::feed_measured
+    pub fn install_sam_curve(&mut self) -> bool {
+        if self.drafts.iter().any(|d| d.method == "sam") {
+            return false;
+        }
+        let Some(ng) = self.drafts.iter().find(|d| d.method == "ngram") else {
+            return false;
+        };
+        let per_token = AffineCost::new(
+            ng.per_token.slope * SAM_NGRAM_COST_RATIO,
+            ng.per_token.intercept * SAM_NGRAM_COST_RATIO,
+        );
+        self.drafts.push(DraftCost { method: "sam".into(), per_token });
+        true
+    }
+
     /// Cost curve for `method`. The suffix-automaton drafter has no
-    /// profiled curve of its own and borrows n-gram's — same CPU
-    /// token-lookup family, piggybacked on the worker — so ladders and
-    /// replanners can be pinned to "sam" directly. Unknown MODEL drafter
-    /// names stay a loud error: their real cost is orders of magnitude
-    /// above any token drafter's, and pricing them as near-free lookups
-    /// would silently mis-plan. ([`CostModel::methods`] enumerates only
-    /// explicitly profiled curves.)
+    /// profiled curve of its own until [`CostModel::install_sam_curve`]
+    /// runs and borrows n-gram's — same CPU token-lookup family,
+    /// piggybacked on the worker — so ladders and replanners can be
+    /// pinned to "sam" directly. Unknown MODEL drafter names stay a loud
+    /// error: their real cost is orders of magnitude above any token
+    /// drafter's, and pricing them as near-free lookups would silently
+    /// mis-plan. ([`CostModel::methods`] enumerates only explicitly
+    /// profiled curves.)
     pub fn draft_cost(&self, method: &str) -> &DraftCost {
         if let Some(d) = self.drafts.iter().find(|d| d.method == method) {
             return d;
@@ -334,6 +368,23 @@ mod tests {
         );
         // fork cost is a control-plane constant well under one decode step
         assert!(m.fork_cost > 0.0 && m.fork_cost < m.decode(1));
+    }
+
+    #[test]
+    fn sam_curve_installs_once_and_prices_above_ngram() {
+        let mut m = CostModel::paper_32b();
+        // pre-install: sam borrows the n-gram curve exactly
+        assert_eq!(m.draft("sam", 64), m.draft("ngram", 64));
+        assert!(!m.methods().iter().any(|s| s == "sam"));
+        assert!(m.install_sam_curve());
+        // post-install: dedicated key, ratio-scaled, still near-free
+        assert!(m.methods().iter().any(|s| s == "sam"));
+        let ratio = m.draft("sam", 64) / m.draft("ngram", 64);
+        assert!((ratio - SAM_NGRAM_COST_RATIO).abs() < 1e-12, "ratio {ratio}");
+        assert!(m.draft("sam", 64) < m.decode(64) / 50.0);
+        // idempotent
+        assert!(!m.install_sam_curve());
+        assert_eq!(m.drafts.iter().filter(|d| d.method == "sam").count(), 1);
     }
 
     #[test]

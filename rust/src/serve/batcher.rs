@@ -48,6 +48,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::race::RaceArbiter;
 use crate::coordinator::reconfig::{LiveSlot, Reconfigurator};
+use crate::drafter::corpus::{CorpusHandle, DraftCorpus};
 use crate::drafter::DraftMethod;
 use crate::engine::{
     same_group, EngineReport, PlanMode, Request, Severity, SlotAccept, SlotPlan, SpecError,
@@ -117,6 +118,18 @@ pub trait ServeEngine {
     /// no-op for engines without draft-side state.
     fn invalidate_draft_state(&mut self) -> Result<()> {
         Ok(())
+    }
+    /// Install a shared wave-global draft-corpus handle
+    /// ([`crate::drafter::corpus`]): engines with token drafters seed
+    /// every new admission's drafter from the latest published snapshot.
+    /// Default no-op for engines without draft-side state.
+    fn set_corpus(&mut self, _h: CorpusHandle) {}
+    /// Cumulative weight-update invalidations absorbed
+    /// ([`ServeEngine::invalidate_draft_state`] calls). The batcher polls
+    /// the delta at round boundaries to trigger corpus decay; engines
+    /// without the hook report 0 forever.
+    fn invalidations(&self) -> u64 {
+        0
     }
     /// Install a per-phase span recorder: subsequent rounds emit
     /// Draft/Verify/Apply (and KV-copy) spans into the shared flight
@@ -211,6 +224,14 @@ impl ServeEngine for Worker<'_> {
         Worker::invalidate_draft_state(self)
     }
 
+    fn set_corpus(&mut self, h: CorpusHandle) {
+        Worker::set_corpus(self, h)
+    }
+
+    fn invalidations(&self) -> u64 {
+        Worker::invalidation_count(self)
+    }
+
     fn attach_tracer(&mut self, t: Tracer) {
         Worker::set_tracer(self, t)
     }
@@ -284,6 +305,20 @@ pub struct Batcher<E: ServeEngine> {
     /// stragglers are forked into idle slots and raced under other draft
     /// methods; the first finisher wins, admissions preempt replicas.
     pub race: Option<RaceArbiter>,
+    /// Wave-global draft corpus (PERF.md §Online draft learning):
+    /// finished requests' verified tokens are harvested here and
+    /// published to the engine's drafters as immutable snapshots at
+    /// round boundaries. `None` = feature off.
+    corpus: Option<DraftCorpus>,
+    /// Engine invalidation count at the last corpus roundup — the
+    /// weight-update edge detector that triggers corpus decay and prior
+    /// re-widening at the drained round boundary.
+    seen_invalidations: u64,
+    /// Per-method `(accepted, drafted)` counters at the last prior
+    /// reset: measured-acceptance feedback is computed as deltas against
+    /// this base, so a decayed wave re-measures from scratch instead of
+    /// dragging pre-update evidence along.
+    prior_base: BTreeMap<String, (u64, u64)>,
     /// Per-slot arrival timestamp of the occupying request.
     arrival_s: Vec<f64>,
     /// Per-slot priority class of the occupying request (quarantined
@@ -363,6 +398,9 @@ impl<E: ServeEngine> Batcher<E> {
             report: EngineReport::default(),
             reconfig: None,
             race: None,
+            corpus: None,
+            seen_invalidations: 0,
+            prior_base: BTreeMap::new(),
             arrival_s: vec![0.0; cap],
             prio_s: vec![Priority::Batch; cap],
             degrade_attempts: vec![0; cap],
@@ -402,6 +440,28 @@ impl<E: ServeEngine> Batcher<E> {
     pub fn with_racing(mut self, ar: RaceArbiter) -> Self {
         self.race = Some(ar);
         self
+    }
+
+    /// Attach a wave-global draft corpus (`--corpus`): every finished
+    /// request's verified tokens are harvested into it, the pending
+    /// harvest is folded into an immutable snapshot at round boundaries,
+    /// and the engine (handed the shared [`CorpusHandle`] here) seeds
+    /// new admissions' token drafters from the latest snapshot. Measured
+    /// per-method acceptance feeds the replanner's and Reconfigurator's
+    /// priors at the same boundaries; a weight-update invalidation
+    /// decays the corpus and re-widens the priors.
+    pub fn with_corpus(mut self, c: DraftCorpus) -> Self {
+        self.install_corpus(c);
+        self
+    }
+
+    /// Non-consuming [`Batcher::with_corpus`]: the cluster installs a
+    /// tap of its master corpus on each already-built worker through
+    /// this (the tap shares the master's snapshot handle, so one master
+    /// publish is visible to every worker's engine at once).
+    pub fn install_corpus(&mut self, c: DraftCorpus) {
+        self.engine.set_corpus(c.handle());
+        self.corpus = Some(c);
     }
 
     /// Serve in OVERLAPPED tick order: run the engine round before
@@ -491,6 +551,11 @@ impl<E: ServeEngine> Batcher<E> {
         } else {
             self.tick_inner(now_s)
         };
+        // corpus bookkeeping runs in the OUTER tick, after the inner
+        // body: the inner paths early-return on zero occupancy, and the
+        // tick that retires the last request must still publish its
+        // harvest (and a faulted tick must still decay on a pause).
+        self.corpus_roundup();
         if let Some(ex) = &self.exporter {
             if self.pace_us > 0 || self.ticks % PUBLISH_EVERY_TICKS == 1 {
                 ex.publish(self.collect_registry(now_s).render());
@@ -529,6 +594,9 @@ impl<E: ServeEngine> Batcher<E> {
                     fin.wasted_rounds,
                 );
                 self.metrics.on_finish(now_s - arrival);
+                if let Some(c) = self.corpus.as_mut() {
+                    c.add_segment(&fin.req.seq);
+                }
                 self.finished.push(FinishedRequest {
                     req: fin.req,
                     arrival_s: arrival,
@@ -555,6 +623,13 @@ impl<E: ServeEngine> Batcher<E> {
                 self.retries.remove(&req.id);
                 let arrival = self.arrival_s[slot];
                 self.metrics.on_finish(now_s - arrival);
+                // harvest the completed request's verified tokens into
+                // the wave-global corpus (completion sites only — a
+                // quarantined or migrating request continues elsewhere
+                // and would double-count)
+                if let Some(c) = self.corpus.as_mut() {
+                    c.add_segment(&req.seq);
+                }
                 self.finished.push(FinishedRequest { req, arrival_s: arrival, finished_s: now_s });
                 tr.retired += 1;
             }
@@ -639,6 +714,13 @@ impl<E: ServeEngine> Batcher<E> {
             // verified output survived the fault and decoding resumes
             if self.retries.contains_key(&id) {
                 self.metrics.recoveries += 1;
+            }
+            if let Some(c) = self.corpus.as_mut() {
+                // token-drafter admissions seed from the snapshot the
+                // engine holds; count only warm offers
+                if c.is_warm() && admission_plan.window > 0 && !admission_plan.method.is_model() {
+                    c.note_seed();
+                }
             }
             self.metrics.on_admit(now_s - q.enqueued_s);
             tr.admitted += 1;
@@ -852,6 +934,9 @@ impl<E: ServeEngine> Batcher<E> {
                     fin.wasted_rounds,
                 );
                 self.metrics.on_finish(now_s - arrival);
+                if let Some(c) = self.corpus.as_mut() {
+                    c.add_segment(&fin.req.seq);
+                }
                 self.finished.push(FinishedRequest {
                     req: fin.req,
                     arrival_s: arrival,
@@ -877,6 +962,13 @@ impl<E: ServeEngine> Batcher<E> {
                 self.retries.remove(&req.id);
                 let arrival = self.arrival_s[slot];
                 self.metrics.on_finish(now_s - arrival);
+                // harvest the completed request's verified tokens into
+                // the wave-global corpus (completion sites only — a
+                // quarantined or migrating request continues elsewhere
+                // and would double-count)
+                if let Some(c) = self.corpus.as_mut() {
+                    c.add_segment(&req.seq);
+                }
                 self.finished.push(FinishedRequest { req, arrival_s: arrival, finished_s: now_s });
                 tr.retired += 1;
             }
@@ -956,6 +1048,13 @@ impl<E: ServeEngine> Batcher<E> {
             self.reset_degrade(slot);
             if self.retries.contains_key(&id) {
                 self.metrics.recoveries += 1;
+            }
+            if let Some(c) = self.corpus.as_mut() {
+                // token-drafter admissions seed from the snapshot the
+                // engine holds; count only warm offers
+                if c.is_warm() && admission_plan.window > 0 && !admission_plan.method.is_model() {
+                    c.note_seed();
+                }
             }
             self.metrics.on_admit(now_s - q.enqueued_s);
             tr.admitted += 1;
@@ -1140,6 +1239,19 @@ impl<E: ServeEngine> Batcher<E> {
             reg.counter(&format!("specactor_engine_{name}"), help, v as f64);
         }
         reg.counter("specactor_serve_ticks", "Serve-loop ticks run", self.ticks as f64);
+        // the wave-global corpus ledger under its own family name (the
+        // `specactor_serve_corpus_*` mirrors above reconcile to_json)
+        let m = &self.metrics;
+        let corpus_counters: [(&str, &str, u64); 5] = [
+            ("tokens", "Corpus tokens indexed by the latest published snapshot", m.corpus_tokens),
+            ("seeds", "Admissions seeded from a warm corpus snapshot", m.corpus_seeds),
+            ("publishes", "Corpus snapshot epochs published", m.corpus_publishes),
+            ("evictions", "Corpus segments evicted by the retention cap", m.corpus_evictions),
+            ("decays", "Weight-update corpus decays", m.corpus_decays),
+        ];
+        for (name, help, v) in corpus_counters {
+            reg.counter(&format!("specactor_corpus_{name}"), help, v as f64);
+        }
         reg.gauge(
             "specactor_slots_occupancy",
             "Batch slots currently live",
@@ -1174,6 +1286,116 @@ impl<E: ServeEngine> Batcher<E> {
         if let Some(ex) = &self.exporter {
             ex.publish(self.collect_registry(wall_s).render());
         }
+    }
+
+    /// Round-boundary corpus bookkeeping (no-op without `with_corpus`):
+    ///
+    /// 1. **decay** — a weight-update invalidation (the chaos `pause=N`
+    ///    protocol, `ServeEngine::invalidate_draft_state`) makes every
+    ///    corpus token stale against the new weights, so the corpus
+    ///    publishes an empty epoch, reseeds from the live slots'
+    ///    verified prefixes (those survive the update — verification
+    ///    owns them), and the planner priors re-widen to their profiled
+    ///    values ([`Replanner::note_decay`], `Reconfigurator::note_decay`);
+    /// 2. **publish** — the tick's harvested completions fold into a new
+    ///    immutable snapshot (one epoch per boundary, never per token),
+    ///    traced as [`Phase::CorpusPublish`];
+    /// 3. **feed** — on publish/decay boundaries only, per-method
+    ///    measured acceptance deltas (against [`Batcher::prior_base`])
+    ///    flow into the replanner and Reconfigurator so Algorithm 1/2
+    ///    start from measured rates instead of static profiles.
+    fn corpus_roundup(&mut self) {
+        if self.corpus.is_none() {
+            return;
+        }
+        let inv = self.engine.invalidations();
+        let mut decayed = false;
+        if inv > self.seen_invalidations {
+            self.seen_invalidations = inv;
+            let c = self.corpus.as_mut().unwrap();
+            if c.decay_on_invalidate() {
+                c.decay();
+                decayed = true;
+            }
+        }
+        if decayed {
+            let mut seqs: Vec<Vec<i32>> = Vec::new();
+            for slot in 0..self.engine.capacity() {
+                if self.slots.is_live(slot) {
+                    if let Some(r) = self.engine.request(slot) {
+                        seqs.push(r.seq.clone());
+                    }
+                }
+            }
+            let c = self.corpus.as_mut().unwrap();
+            for s in &seqs {
+                c.add_segment(s);
+            }
+            self.note_prior_decay();
+        }
+        let mut published = false;
+        {
+            let c = self.corpus.as_mut().unwrap();
+            if c.publish_due() {
+                let m = self.tracer.as_ref().map(|t| t.now_us());
+                let folded = c.publish();
+                if let (Some(t), Some(m)) = (&self.tracer, m) {
+                    t.record(Phase::CorpusPublish, m, folded as u32);
+                }
+                published = true;
+            }
+            self.metrics.set_corpus_stats(&c.stats);
+        }
+        if published || decayed {
+            self.feed_measured_deltas();
+        }
+    }
+
+    /// Feed per-method measured acceptance deltas (counted against
+    /// [`Batcher::prior_base`]) into the replanner and Reconfigurator.
+    /// Called on local publish/decay boundaries and, via the cluster, at
+    /// MASTER corpus boundaries (worker taps never publish themselves,
+    /// so the cluster drives the feed cadence for its workers).
+    pub fn feed_measured_deltas(&mut self) {
+        let deltas: Vec<(String, f64, u64, u64)> = self
+            .metrics
+            .method_acceptance()
+            .into_iter()
+            .map(|(m, _, a, d)| {
+                let (a0, d0) = self.prior_base.get(&m).copied().unwrap_or((0, 0));
+                let (da, dd) = (a.saturating_sub(a0), d.saturating_sub(d0));
+                let rate = if dd > 0 { da as f64 / dd as f64 } else { 0.0 };
+                (m, rate, da, dd)
+            })
+            .collect();
+        self.replan.feed_measured(&deltas);
+        if let Some(rc) = self.reconfig.as_mut() {
+            rc.feed_measured(&deltas);
+        }
+    }
+
+    /// Reset the measured-acceptance feedback to "no evidence yet": the
+    /// planner priors return to their profiled values and future deltas
+    /// measure from this instant. Called on local corpus decay and, via
+    /// the cluster, when the MASTER corpus decays (every worker's priors
+    /// re-widen together even though only one engine saw the pause).
+    pub fn note_prior_decay(&mut self) {
+        self.replan.note_decay();
+        if let Some(rc) = self.reconfig.as_mut() {
+            rc.note_decay();
+        }
+        self.prior_base = self
+            .metrics
+            .method_acceptance()
+            .into_iter()
+            .map(|(m, _, a, d)| (m, (a, d)))
+            .collect();
+    }
+
+    /// Mutable access to the attached corpus (the cluster drains worker
+    /// taps and relays decay flags through this).
+    pub fn corpus_mut(&mut self) -> Option<&mut DraftCorpus> {
+        self.corpus.as_mut()
     }
 
     fn reset_degrade(&mut self, slot: usize) {
@@ -1501,9 +1723,18 @@ impl<E: ServeEngine> Batcher<E> {
             bail!("no free slot to adopt request {}", e.payload.req.id)
         };
         let plan = self.current_plan();
+        let seeded = self
+            .corpus
+            .as_ref()
+            .is_some_and(|c| c.is_warm() && plan.window > 0 && !plan.method.is_model());
         if let Err(err) = self.engine.insert_payload(slot, e.payload.clone(), plan) {
             let _ = self.slots.release(slot);
             return Err(err);
+        }
+        if seeded {
+            if let Some(c) = self.corpus.as_mut() {
+                c.note_seed();
+            }
         }
         self.prio_s[slot] = e.prio;
         self.arrival_s[slot] = e.arrival_s;
@@ -1670,7 +1901,29 @@ pub struct SyntheticEngine {
     overlap: bool,
     /// Per-slot "last round full-accepted" state backing the model.
     prev_full: Vec<bool>,
+    /// Wave-global corpus handle (`None` = feature off): token-drafter
+    /// admissions peek at the latest snapshot and model a seeded
+    /// drafter's acceptance boost over their first rounds.
+    corpus: Option<CorpusHandle>,
+    /// Rounds of modelled seeded-drafter acceptance boost left, per slot.
+    warm_left: Vec<u8>,
+    /// Slot seeded from a PRE-invalidation snapshot (stale corpus): its
+    /// modelled drafter proposes near-garbage until it retires — the
+    /// collapse the decay-on-invalidate rule exists to prevent.
+    stale: Vec<bool>,
+    /// Snapshot epoch observed at the last weight-update invalidation.
+    inval_epoch: u64,
 }
+
+/// Rounds a corpus-seeded admission keeps its modelled acceptance boost
+/// (after which the request's own history dominates, as in the real
+/// drafters, whose per-request automata absorb the verified sequence).
+const CORPUS_WARM_ROUNDS: u8 = 6;
+/// Modelled acceptance of a warm-seeded token drafter during the boost.
+const CORPUS_WARM_ACCEPT: f64 = 0.95;
+/// Modelled acceptance of a drafter seeded from a stale (pre-update)
+/// corpus: the old weights' continuations rarely survive verification.
+const CORPUS_STALE_ACCEPT: f64 = 0.1;
 
 impl SyntheticEngine {
     pub fn new(capacity: usize, seed: u64) -> Self {
@@ -1685,6 +1938,10 @@ impl SyntheticEngine {
             invalidations: 0,
             overlap: false,
             prev_full: vec![false; capacity],
+            corpus: None,
+            warm_left: vec![0; capacity],
+            stale: vec![false; capacity],
+            inval_epoch: 0,
         }
     }
 
@@ -1753,6 +2010,30 @@ impl SyntheticEngine {
             0.85
         }
     }
+
+    /// Admission-time corpus peek: a token-drafter plan seeds from the
+    /// latest published snapshot — a warm POST-update snapshot grants
+    /// the acceptance boost, a warm PRE-update snapshot marks the slot
+    /// stale, a cold snapshot (or a model-drafter/vanilla plan) does
+    /// nothing. Token output is untouched either way: seeding only
+    /// changes how many drafted tokens verification accepts.
+    fn note_admit_seed(&mut self, slot: usize, plan: &SlotPlan) {
+        self.warm_left[slot] = 0;
+        self.stale[slot] = false;
+        let Some(h) = &self.corpus else { return };
+        if plan.window == 0 || plan.method.is_model() {
+            return;
+        }
+        let snap = h.load();
+        if !snap.is_warm() {
+            return;
+        }
+        if snap.epoch > self.inval_epoch {
+            self.warm_left[slot] = CORPUS_WARM_ROUNDS;
+        } else {
+            self.stale[slot] = true;
+        }
+    }
 }
 
 impl ServeEngine for SyntheticEngine {
@@ -1767,6 +2048,7 @@ impl ServeEngine for SyntheticEngine {
         if self.slots[slot].is_some() {
             bail!("slot {slot} already occupied");
         }
+        self.note_admit_seed(slot, &plan);
         self.slots[slot] = Some(req);
         self.plans[slot] = plan;
         self.prev_full[slot] = false;
@@ -1776,6 +2058,12 @@ impl ServeEngine for SyntheticEngine {
     fn retire(&mut self, slot: usize) -> Result<Request> {
         if let Some(pf) = self.prev_full.get_mut(slot) {
             *pf = false;
+        }
+        if let Some(w) = self.warm_left.get_mut(slot) {
+            *w = 0;
+        }
+        if let Some(s) = self.stale.get_mut(slot) {
+            *s = false;
         }
         self.slots
             .get_mut(slot)
@@ -1796,7 +2084,15 @@ impl ServeEngine for SyntheticEngine {
             }
             active += 1;
             let w = self.plans[i].window;
-            let p = self.accept_for(id, &self.plans[i].method);
+            let mut p = self.accept_for(id, &self.plans[i].method);
+            if w > 0 && !self.plans[i].method.is_model() {
+                if self.stale[i] {
+                    p = CORPUS_STALE_ACCEPT;
+                } else if self.warm_left[i] > 0 {
+                    p = p.max(CORPUS_WARM_ACCEPT);
+                    self.warm_left[i] -= 1;
+                }
+            }
             let r = self.slots[i].as_mut().unwrap();
             let mut adv = 1usize;
             let mut acc = 0usize;
@@ -1890,6 +2186,7 @@ impl ServeEngine for SyntheticEngine {
         if self.slots[dst].is_some() {
             bail!("fork destination slot {dst} already occupied");
         }
+        self.note_admit_seed(dst, &plan);
         self.plans[dst] = plan;
         self.slots[dst] = Some(req);
         self.prev_full[dst] = false;
@@ -1898,7 +2195,28 @@ impl ServeEngine for SyntheticEngine {
 
     fn invalidate_draft_state(&mut self) -> Result<()> {
         self.invalidations += 1;
+        // live drafters rebuild UNSEEDED from their verified sequences
+        // (the worker's invalidation semantics): acceptance boosts and
+        // staleness both end here; only the snapshot epoch at this
+        // instant decides whether FUTURE admissions seed warm or stale
+        for w in self.warm_left.iter_mut() {
+            *w = 0;
+        }
+        for s in self.stale.iter_mut() {
+            *s = false;
+        }
+        if let Some(h) = &self.corpus {
+            self.inval_epoch = h.epoch();
+        }
         Ok(())
+    }
+
+    fn set_corpus(&mut self, h: CorpusHandle) {
+        self.corpus = Some(h);
+    }
+
+    fn invalidations(&self) -> u64 {
+        self.invalidations
     }
 }
 
@@ -2547,5 +2865,131 @@ mod tests {
         assert_eq!(b.degrade_until[0], Some(b.ticks + 4), "second backoff is 4 ticks");
         drain_to_idle(&mut b, now);
         assert_eq!(b.metrics.completed, 1);
+    }
+
+    /// Replanner profiled so the ngram token drafter wins selection —
+    /// the wave-global corpus seeds token drafters only, so these tests
+    /// need the serve plan to actually carry one.
+    fn ngram_replanner() -> Replanner {
+        Replanner::new(
+            CostModel::paper_32b(),
+            vec![("ngram".to_string(), 0.90), ("draft_small".to_string(), 0.60)],
+            vec![1, 2, 4],
+            vec![1, 3, 7],
+            7,
+        )
+    }
+
+    /// A publisher corpus pre-warmed with one published segment.
+    fn warm_corpus() -> DraftCorpus {
+        let mut c = DraftCorpus::new();
+        c.add_segment(&expected_seq(100, &[1, 2, 3, 4], 64));
+        assert!(c.publish() > 0);
+        assert!(c.is_warm());
+        c
+    }
+
+    #[test]
+    fn corpus_seeded_admissions_accept_better_with_identical_tokens() {
+        let drive = |corpus: Option<DraftCorpus>| {
+            let mut b = Batcher::new(SyntheticEngine::new(4, 99), 16, ngram_replanner(), true);
+            if let Some(c) = corpus {
+                b = b.with_corpus(c);
+            }
+            for i in 0..8u64 {
+                assert!(b.enqueue(req(i, 24), Priority::Batch, 0.0));
+            }
+            let mut fins = drain_to_idle(&mut b, 0.0);
+            fins.sort_by_key(|f| f.req.id);
+            (fins, b.metrics.clone())
+        };
+        let (cold_fins, cold_m) = drive(None);
+        let (warm_fins, warm_m) = drive(Some(warm_corpus()));
+        // losslessness: seeding changes proposals and acceptance, never
+        // the verified output (the tape is keyed by (seed, id, position))
+        assert_eq!(cold_fins.len(), warm_fins.len());
+        for (c, w) in cold_fins.iter().zip(&warm_fins) {
+            assert_eq!(c.req.id, w.req.id);
+            assert_eq!(c.req.seq, w.req.seq, "request {} diverged under seeding", c.req.id);
+            assert_eq!(w.req.seq, expected_seq(w.req.id, &[1, 2, 3, 4], 24));
+        }
+        assert!(warm_m.corpus_seeds > 0, "warm token-drafter admissions must count as seeds");
+        assert!(warm_m.corpus_publishes >= 1);
+        assert!(warm_m.corpus_tokens > 0, "completions must be harvested and published");
+        assert_eq!(cold_m.corpus_seeds, 0, "the cold run has no corpus at all");
+        // acceptance-at-admission uplift: the seeded run converts a
+        // strictly larger fraction of drafted tokens
+        let rate = |m: &ServeMetrics| {
+            let d: u64 = m.method_drafted.values().sum();
+            let a: u64 = m.method_accepted.values().sum();
+            assert!(d > 0, "speculative plans must have drafted");
+            a as f64 / d as f64
+        };
+        assert!(
+            rate(&warm_m) > rate(&cold_m),
+            "seeded acceptance {:.3} must beat cold {:.3}",
+            rate(&warm_m),
+            rate(&cold_m)
+        );
+        // and the seeded wave drains no slower
+        assert!(warm_m.rounds <= cold_m.rounds, "seeding must not cost rounds");
+    }
+
+    #[test]
+    fn pause_decays_the_corpus_and_reseeds_from_live_slots() {
+        use crate::serve::chaos::{ChaosEngine, FaultPlan};
+        let plan = FaultPlan::parse("seed=3,pause=4").unwrap();
+        let engine = ChaosEngine::new(SyntheticEngine::new(4, 99), plan);
+        let mut b =
+            Batcher::new(engine, 16, ngram_replanner(), true).with_corpus(warm_corpus());
+        for i in 0..8u64 {
+            assert!(b.enqueue(req(i, 24), Priority::Batch, 0.0));
+        }
+        let fins = drain_to_idle(&mut b, 0.0);
+        assert_eq!(fins.len(), 8, "pauses must not lose requests");
+        for f in &fins {
+            assert_eq!(
+                f.req.seq,
+                expected_seq(f.req.id, &[1, 2, 3, 4], 24),
+                "request {} diverged across the weight update",
+                f.req.id
+            );
+        }
+        assert!(b.metrics.corpus_decays >= 1, "pause=4 must decay the corpus");
+        // the decay epoch plus the live-slot reseed republication (and
+        // the pre-warm publish) all land on the publish counter
+        assert!(b.metrics.corpus_publishes >= 3);
+        assert!(b.metrics.corpus_tokens > 0, "reseed + completions must rewarm the corpus");
+        assert_eq!(b.metrics.lost, 0);
+        // the scrape carries the corpus family under both names
+        let reg = b.collect_registry(1.0);
+        assert!(reg.find("specactor_corpus_decays", &[]).unwrap() >= 1.0);
+        assert_eq!(
+            reg.find("specactor_corpus_seeds", &[]),
+            reg.find("specactor_serve_corpus_seeds", &[]),
+            "alias and mirror must agree"
+        );
+    }
+
+    #[test]
+    fn persisted_corpus_skips_decay_and_stays_lossless() {
+        use crate::serve::chaos::{ChaosEngine, FaultPlan};
+        // the stale-corpus control arm (benches/corpus_gain.rs): decay
+        // disabled, so a pause leaves the pre-update snapshot standing
+        // and new admissions seed stale — slower, but still lossless
+        let plan = FaultPlan::parse("seed=3,pause=4").unwrap();
+        let engine = ChaosEngine::new(SyntheticEngine::new(4, 99), plan);
+        let mut b = Batcher::new(engine, 16, ngram_replanner(), true)
+            .with_corpus(warm_corpus().persist_across_updates());
+        for i in 0..8u64 {
+            assert!(b.enqueue(req(i, 24), Priority::Batch, 0.0));
+        }
+        let fins = drain_to_idle(&mut b, 0.0);
+        assert_eq!(fins.len(), 8);
+        for f in &fins {
+            assert_eq!(f.req.seq, expected_seq(f.req.id, &[1, 2, 3, 4], 24));
+        }
+        assert_eq!(b.metrics.corpus_decays, 0, "persist arm must never decay");
+        assert!(b.engine().pauses >= 1, "the pause schedule must have fired");
     }
 }

@@ -41,6 +41,7 @@
 
 use anyhow::{bail, Result};
 
+use crate::drafter::corpus::CorpusHandle;
 use crate::engine::{EngineReport, Request, SlotPlan, SpecError, VerifyDiscipline};
 use crate::runtime::MigrationPayload;
 use crate::util::rng::{splitmix64, Rng};
@@ -351,6 +352,14 @@ impl<E: ServeEngine> ServeEngine for ChaosEngine<E> {
 
     fn invalidate_draft_state(&mut self) -> Result<()> {
         self.inner.invalidate_draft_state()
+    }
+
+    fn set_corpus(&mut self, h: CorpusHandle) {
+        self.inner.set_corpus(h)
+    }
+
+    fn invalidations(&self) -> u64 {
+        self.inner.invalidations()
     }
 
     fn extract_payload(&mut self, slot: usize) -> Result<MigrationPayload> {

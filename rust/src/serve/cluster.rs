@@ -39,7 +39,14 @@
 //!    worst-acceptance straggler onto a remote idle slot, and
 //! 6. **balances**: when a worker drains while another still holds a
 //!    deep batch, one slot is work-stolen per tick through the same
-//!    transport path.
+//!    transport path, and
+//! 7. **folds the wave-global draft corpus** (`with_corpus`): every
+//!    worker tap's harvest drains into the MASTER corpus, decay flags
+//!    from weight-update pauses relay cluster-wide (one worker's pause
+//!    stales the shared epochs for everyone), and ONE snapshot epoch is
+//!    published per boundary — the shared handle is the replication
+//!    mechanism, so migrated and forked slots always land on the same
+//!    warm corpus their source was drafting from.
 //!
 //! Completion is deduplicated by request id at [`Cluster::drain_finished`]
 //! — belt-and-braces for the one race where both sides of a cross-worker
@@ -50,6 +57,7 @@ use std::collections::BTreeSet;
 use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::race::cross_race_candidate;
+use crate::drafter::corpus::DraftCorpus;
 use crate::engine::{Request, Severity, SpecError};
 use crate::obs::MetricRegistry;
 use crate::runtime::{MigrationPayload, RowTransport};
@@ -124,6 +132,19 @@ pub struct ClusterMetrics {
     pub completed: u64,
     /// Duplicate completions dropped at drain (same-tick race ties).
     pub dup_completions: u64,
+    /// Accepted tokens folded into the MASTER corpus' published epochs.
+    pub corpus_tokens: u64,
+    /// Token-drafter admissions seeded from the shared snapshot, summed
+    /// over every worker's tap.
+    pub corpus_seeds: u64,
+    /// Master corpus snapshot epochs published (cluster-wide: taps never
+    /// publish, so this is the single epoch lineage all workers see).
+    pub corpus_publishes: u64,
+    /// Segments evicted from the master corpus ring under its cap.
+    pub corpus_evictions: u64,
+    /// Master corpus decays (a weight-update pause on ANY worker decays
+    /// the shared corpus and re-widens every worker's priors).
+    pub corpus_decays: u64,
 }
 
 impl ClusterMetrics {
@@ -139,7 +160,7 @@ impl ClusterMetrics {
 
     /// Cluster-wide counters as (key, value) pairs — transport counters
     /// ride along so one series covers the whole migration path.
-    pub fn counter_series(&self, t: &RowTransport) -> [(&'static str, u64); 16] {
+    pub fn counter_series(&self, t: &RowTransport) -> [(&'static str, u64); 21] {
         [
             ("worker_deaths", self.worker_deaths),
             ("evac_extracted", self.evac_extracted),
@@ -157,6 +178,11 @@ impl ClusterMetrics {
             ("transport_corruptions", t.corruptions),
             ("transport_escalations", t.escalations),
             ("transport_backoff_ticks", t.backoff_ticks),
+            ("corpus_tokens", self.corpus_tokens),
+            ("corpus_seeds", self.corpus_seeds),
+            ("corpus_publishes", self.corpus_publishes),
+            ("corpus_evictions", self.corpus_evictions),
+            ("corpus_decays", self.corpus_decays),
         ]
     }
 
@@ -188,6 +214,11 @@ impl ClusterMetrics {
             "transport_corruptions" => "Migration frames that failed integrity checks",
             "transport_escalations" => "Deliveries abandoned after the retry budget",
             "transport_backoff_ticks" => "Ticks spent in transport retry backoff",
+            "corpus_tokens" => "Accepted tokens in the master corpus' published epochs",
+            "corpus_seeds" => "Token-drafter admissions seeded from the shared snapshot",
+            "corpus_publishes" => "Master corpus snapshot epochs published",
+            "corpus_evictions" => "Segments evicted from the master corpus ring",
+            "corpus_decays" => "Master corpus decays relayed from worker weight updates",
             "migrations_out" => "Slots migrated off this worker",
             "migrations_in" => "Migrated payloads adopted by this worker",
             "evacuations" => "Requests evacuated off this worker at death",
@@ -296,6 +327,9 @@ pub struct Cluster<E: ServeEngine> {
     pub metrics: ClusterMetrics,
     staged: Option<StagedFork>,
     races: Vec<CrossRace>,
+    /// Wave-global MASTER draft corpus (`with_corpus`): the single
+    /// publisher behind every worker's tap.
+    corpus: Option<DraftCorpus>,
     /// Cross-worker racing enabled (`with_cross_racing`).
     racing: bool,
     /// Ids already drained as finished (the dedup set).
@@ -322,6 +356,7 @@ impl<E: ServeEngine> Cluster<E> {
             metrics: ClusterMetrics::new(n),
             staged: None,
             races: Vec::new(),
+            corpus: None,
             racing: false,
             done_ids: BTreeSet::new(),
             ticks: 0,
@@ -334,6 +369,22 @@ impl<E: ServeEngine> Cluster<E> {
     /// Enable cross-worker Fastest-of-N race forks.
     pub fn with_cross_racing(mut self) -> Self {
         self.racing = true;
+        self
+    }
+
+    /// Attach a wave-global MASTER draft corpus: each worker's batcher
+    /// gets a tap of the master's snapshot handle ([`DraftCorpus::tap`]),
+    /// so every worker's completions fold into ONE epoch lineage and
+    /// every worker's engine — including migrated and forked slots,
+    /// which admit through those same engines — seeds new token drafters
+    /// from the same snapshot. The shared handle IS the replication
+    /// mechanism: one master publish per tick and all workers observe
+    /// the new epoch at their next admission.
+    pub fn with_corpus(mut self, master: DraftCorpus) -> Self {
+        for b in &mut self.workers {
+            b.install_corpus(DraftCorpus::tap(master.handle()));
+        }
+        self.corpus = Some(master);
         self
     }
 
@@ -445,7 +496,73 @@ impl<E: ServeEngine> Cluster<E> {
             self.stage_race();
         }
         self.balance()?;
+        self.corpus_roundup();
         Ok(())
+    }
+
+    /// MASTER-corpus round boundary (no-op without `with_corpus`): drain
+    /// every worker tap's harvest into the master, relay decay flags (a
+    /// weight-update pause on ONE worker decays the SHARED corpus — its
+    /// epochs are stale against the new weights for everyone — and
+    /// re-widens every worker's planner priors), reseed the fresh
+    /// lineage from the live slots' verified prefixes, and publish one
+    /// epoch for the whole cluster. Worker taps never publish; measured
+    /// acceptance feeds into each worker's replanner at the master's
+    /// publish/decay boundaries.
+    fn corpus_roundup(&mut self) {
+        if self.corpus.is_none() {
+            return;
+        }
+        let mut decay = false;
+        let mut segs: Vec<Vec<i32>> = Vec::new();
+        let mut seeds = 0u64;
+        for b in &mut self.workers {
+            if let Some(tap) = b.corpus_mut() {
+                decay |= tap.take_decay_flag();
+                segs.extend(tap.drain_pending());
+                seeds += tap.stats.seeds;
+            }
+        }
+        if decay {
+            // live verified prefixes survive the weight update
+            // (verification owns them) — they reseed the fresh lineage
+            for w in 0..self.workers.len() {
+                if self.health[w] == WorkerHealth::Dead {
+                    continue;
+                }
+                let b = &self.workers[w];
+                for s in 0..b.slots.capacity() {
+                    if b.slots.is_live(s) {
+                        if let Some(r) = b.engine().request(s) {
+                            segs.push(r.seq.clone());
+                        }
+                    }
+                }
+            }
+            self.corpus.as_mut().unwrap().decay();
+            for b in &mut self.workers {
+                b.note_prior_decay();
+            }
+        }
+        let master = self.corpus.as_mut().unwrap();
+        for s in &segs {
+            master.add_segment(s);
+        }
+        let mut published = false;
+        if master.publish_due() {
+            master.publish();
+            published = true;
+        }
+        self.metrics.corpus_tokens = master.stats.tokens;
+        self.metrics.corpus_publishes = master.stats.publishes;
+        self.metrics.corpus_evictions = master.stats.evictions;
+        self.metrics.corpus_decays = master.stats.decays;
+        self.metrics.corpus_seeds = seeds;
+        if published || decay {
+            for b in &mut self.workers {
+                b.feed_measured_deltas();
+            }
+        }
     }
 
     /// Per-tick heartbeat observation: token progress (or an empty
@@ -1090,6 +1207,54 @@ mod tests {
         assert_eq!(c.transport.corruptions, 0);
         let got = by_id(c.drain_finished());
         assert_eq!(got, want, "work-stealing migration must stay token-identical");
+    }
+
+    /// Replanner profiled so the ngram token drafter wins selection (the
+    /// wave-global corpus seeds token drafters only, so this test needs
+    /// the serve plans to actually carry one).
+    fn ngram_replanner() -> crate::serve::replan::Replanner {
+        Replanner::new(
+            crate::planner::costmodel::CostModel::paper_32b(),
+            vec![("ngram".to_string(), 0.90), ("draft_small".to_string(), 0.60)],
+            vec![1, 2, 4],
+            vec![1, 3, 7],
+            7,
+        )
+    }
+
+    #[test]
+    fn cluster_shares_one_corpus_and_stays_lossless() {
+        // reference: plain single worker, no corpus at all
+        let mut b = mk_batcher(4, 7);
+        drive_open_loop(&mut b, arrivals(12, 16), Some(1e-3)).unwrap();
+        let want = by_id(b.drain_finished());
+        assert_eq!(want.len(), 12);
+
+        let mut master = DraftCorpus::new();
+        master.add_segment(&want[0].1);
+        assert!(master.publish() > 0, "pre-warming the master must fold tokens");
+        let mk = || Batcher::new(SyntheticEngine::new(4, 7), 64, ngram_replanner(), true);
+        let mut c = Cluster::new((0..3).map(|_| mk()).collect(), 64).with_corpus(master);
+        let rep = drive_cluster_open_loop(&mut c, arrivals(12, 16), Some(1e-3)).unwrap();
+        assert_eq!(rep.rejected, 0);
+        let got = by_id(c.drain_finished());
+        assert_eq!(got, want, "a shared warm corpus must stay token-identical");
+        assert!(
+            c.metrics.corpus_seeds > 0,
+            "workers must seed token-drafter admissions from the shared snapshot"
+        );
+        assert!(
+            c.metrics.corpus_publishes >= 2,
+            "the pre-warm epoch plus at least one wave publish"
+        );
+        assert!(c.metrics.corpus_tokens > 0, "wave completions must fold into the master");
+        assert_eq!(c.metrics.corpus_decays, 0);
+        // epoch replication: every worker tap shares the master's handle,
+        // so each observes the same (advanced) epoch lineage
+        for w in 0..c.len() {
+            let e = c.worker_mut(w).corpus_mut().unwrap().epoch();
+            assert!(e >= 2, "worker {w} tap stuck at epoch {e}");
+        }
     }
 
     #[test]

@@ -9,6 +9,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::drafter::corpus::CorpusStats;
 use crate::obs::MetricRegistry;
 use crate::util::json::Json;
 use crate::util::stats::{P2Quantile, Welford};
@@ -97,6 +98,18 @@ pub struct ServeMetrics {
     pub method_drafted: BTreeMap<String, u64>,
     /// Tokens accepted per plan-method label (see `method_drafted`).
     pub method_accepted: BTreeMap<String, u64>,
+    /// Wave-global draft corpus: tokens indexed by the latest published
+    /// snapshot (mirrored each tick from `drafter::corpus::CorpusStats`,
+    /// like the prefetch counters mirror `EngineReport`).
+    pub corpus_tokens: u64,
+    /// Admissions whose token drafters were seeded from a warm snapshot.
+    pub corpus_seeds: u64,
+    /// Corpus snapshot epochs published (decay epochs included).
+    pub corpus_publishes: u64,
+    /// Corpus segments evicted by the retention cap.
+    pub corpus_evictions: u64,
+    /// Weight-update corpus decays (wave resets).
+    pub corpus_decays: u64,
     queue_wait: Welford,
     latency_p50: P2Quantile,
     latency_p99: P2Quantile,
@@ -133,6 +146,11 @@ impl Default for ServeMetrics {
             prefetch_rollbacks: 0,
             method_drafted: BTreeMap::new(),
             method_accepted: BTreeMap::new(),
+            corpus_tokens: 0,
+            corpus_seeds: 0,
+            corpus_publishes: 0,
+            corpus_evictions: 0,
+            corpus_decays: 0,
             queue_wait: Welford::default(),
             latency_p50: P2Quantile::new(0.5),
             latency_p99: P2Quantile::new(0.99),
@@ -217,6 +235,16 @@ impl ServeMetrics {
         *self.method_accepted.entry(method.to_string()).or_insert(0) += accepted;
     }
 
+    /// Mirror the wave-global corpus telemetry into the serve snapshot
+    /// (assignment, not accumulation — `CorpusStats` is itself monotone).
+    pub fn set_corpus_stats(&mut self, s: &CorpusStats) {
+        self.corpus_tokens = s.tokens;
+        self.corpus_seeds = s.seeds;
+        self.corpus_publishes = s.publishes;
+        self.corpus_evictions = s.evictions;
+        self.corpus_decays = s.decays;
+    }
+
     /// Measured acceptance per method, `(method, accepted/drafted)`.
     pub fn method_acceptance(&self) -> Vec<(String, f64, u64, u64)> {
         self.method_drafted
@@ -262,7 +290,7 @@ impl ServeMetrics {
     /// Monotone (counter-typed) series — the single enumeration both
     /// [`ServeMetrics::to_json`] and [`ServeMetrics::register`] render
     /// from, so the JSON summary and the `/metrics` scrape cannot drift.
-    fn counter_series(&self) -> [(&'static str, u64); 23] {
+    fn counter_series(&self) -> [(&'static str, u64); 28] {
         [
             ("admitted", self.admitted),
             ("completed", self.completed),
@@ -287,6 +315,11 @@ impl ServeMetrics {
             ("lost", self.lost),
             ("prefetch_hits", self.prefetch_hits),
             ("prefetch_rollbacks", self.prefetch_rollbacks),
+            ("corpus_tokens", self.corpus_tokens),
+            ("corpus_seeds", self.corpus_seeds),
+            ("corpus_publishes", self.corpus_publishes),
+            ("corpus_evictions", self.corpus_evictions),
+            ("corpus_decays", self.corpus_decays),
         ]
     }
 
@@ -312,6 +345,16 @@ impl ServeMetrics {
         ]
     }
 
+    /// Labeled (per-method) gauge maps — measured acceptance rates, the
+    /// numbers the replanner/Reconfigurator priors are fed from; shared
+    /// between renderers like every other series.
+    fn rate_map_series(&self) -> [(&'static str, Vec<(String, f64)>); 1] {
+        [(
+            "method_acceptance_rate",
+            self.method_acceptance().into_iter().map(|(m, rate, _, _)| (m, rate)).collect(),
+        )]
+    }
+
     /// Machine-readable snapshot (BENCH_serve.json rows, demo output).
     /// Rendered from the same series lists as [`ServeMetrics::register`].
     pub fn to_json(&self, wall_s: f64) -> Json {
@@ -323,6 +366,12 @@ impl ServeMetrics {
             fields.push((
                 k,
                 Json::Obj(map.iter().map(|(m, v)| (m.clone(), Json::num(*v as f64))).collect()),
+            ));
+        }
+        for (k, map) in self.rate_map_series() {
+            fields.push((
+                k,
+                Json::Obj(map.into_iter().map(|(m, v)| (m, Json::num(v))).collect()),
             ));
         }
         for (k, v) in self.gauge_series(wall_s) {
@@ -341,6 +390,12 @@ impl ServeMetrics {
             let name = format!("{PROM_PREFIX}{k}");
             for (method, v) in map {
                 reg.counter_l(&name, serve_help(k), &[("method", method)], *v as f64);
+            }
+        }
+        for (k, map) in self.rate_map_series() {
+            let name = format!("{PROM_PREFIX}{k}");
+            for (method, v) in &map {
+                reg.gauge_l(&name, serve_help(k), &[("method", method)], *v);
             }
         }
         for (k, v) in self.gauge_series(wall_s) {
@@ -375,6 +430,12 @@ fn serve_help(k: &str) -> &'static str {
         "lost" => "Requests lost without completion or typed rejection",
         "prefetch_hits" => "Rounds served from a prefetched draft chunk",
         "prefetch_rollbacks" => "Prefetch mirrors rolled back on mis-speculation",
+        "corpus_tokens" => "Corpus tokens indexed by the latest published snapshot",
+        "corpus_seeds" => "Admissions seeded from a warm corpus snapshot",
+        "corpus_publishes" => "Corpus snapshot epochs published",
+        "corpus_evictions" => "Corpus segments evicted by the retention cap",
+        "corpus_decays" => "Weight-update corpus decays",
+        "method_acceptance_rate" => "Measured acceptance rate per plan method",
         "race_wins_by_method" => "Replica wins per draft method",
         "method_drafted" => "Tokens drafted per plan method",
         "method_accepted" => "Tokens accepted per plan method",
@@ -535,6 +596,34 @@ mod tests {
         m.register(&mut reg, 1.0);
         assert_eq!(reg.find("specactor_serve_prefetch_hits", &[]), Some(9.0));
         assert_eq!(reg.find("specactor_serve_prefetch_rollbacks", &[]), Some(2.0));
+    }
+
+    #[test]
+    fn corpus_counters_and_rate_gauges_in_both_renderers() {
+        let mut m = ServeMetrics::new();
+        m.set_corpus_stats(&CorpusStats {
+            tokens: 640,
+            seeds: 5,
+            publishes: 3,
+            evictions: 1,
+            decays: 2,
+        });
+        m.on_method_tokens("sam", 20, 15);
+        let j = m.to_json(1.0);
+        assert_eq!(j.get("corpus_tokens").as_f64(), Some(640.0));
+        assert_eq!(j.get("corpus_seeds").as_f64(), Some(5.0));
+        assert_eq!(j.get("corpus_publishes").as_f64(), Some(3.0));
+        assert_eq!(j.get("corpus_evictions").as_f64(), Some(1.0));
+        assert_eq!(j.get("corpus_decays").as_f64(), Some(2.0));
+        assert_eq!(j.get("method_acceptance_rate").get("sam").as_f64(), Some(0.75));
+        let mut reg = MetricRegistry::new();
+        m.register(&mut reg, 1.0);
+        assert_eq!(reg.find("specactor_serve_corpus_tokens", &[]), Some(640.0));
+        assert_eq!(reg.find("specactor_serve_corpus_decays", &[]), Some(2.0));
+        assert_eq!(
+            reg.find("specactor_serve_method_acceptance_rate", &[("method", "sam")]),
+            Some(0.75)
+        );
     }
 
     #[test]

@@ -29,6 +29,18 @@
 //! [`MetricsExporter`](crate::obs::MetricsExporter), `--metrics-addr`) —
 //! both assembled from the same counters `ServeMetrics::to_json` renders.
 //!
+//! Wave-global online draft learning (`--corpus`,
+//! [`DraftCorpus`](crate::drafter::corpus::DraftCorpus)): the loop
+//! harvests every finished request's verified tokens into a shared
+//! corpus, folds the harvest into an immutable snapshot at round
+//! boundaries (epoch publication — the per-token draft hot path reads
+//! the snapshot lock-free), seeds new admissions' token drafters from
+//! the latest epoch, and feeds measured per-method acceptance back into
+//! the [`Replanner`]'s and Reconfigurator's priors. A weight-update
+//! invalidation decays the corpus and re-widens the priors; under
+//! `--workers N` one MASTER corpus is shared by every worker through
+//! per-worker taps ([`Cluster::with_corpus`](cluster::Cluster)).
+//!
 //! Multi-worker serving (`--workers N`): [`cluster::Cluster`] puts N of
 //! these loops behind one global queue with heartbeat supervision,
 //! work-stealing slot migration over checksummed

@@ -26,6 +26,10 @@ use crate::planner::plan::{search, PlanInput};
 use crate::runtime::Manifest;
 use crate::sim::TraceConfig;
 
+/// Minimum drafted-token evidence before a measured acceptance rate is
+/// allowed to move a prior (below this the rate is mostly noise).
+pub const MIN_MEASURED_DRAFTED: u64 = 64;
+
 /// The replanner's current decision for the live occupancy bucket.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ServePlan {
@@ -47,6 +51,11 @@ pub struct ServePlan {
 pub struct Replanner {
     cost: CostModel,
     profiled: Vec<(String, f64)>,
+    /// The static profiled priors as constructed — the re-widening target
+    /// a weight-update decay restores ([`Replanner::note_decay`]) and the
+    /// anchor measured acceptance is blended against (so repeated feeds
+    /// of cumulative measurements stay idempotent, never compounding).
+    profiled0: Vec<(String, f64)>,
     /// Sorted occupancy bucket upper bounds (last one is open-ended).
     buckets: Vec<usize>,
     /// Draft windows the runtime can actually verify (lowered step window
@@ -89,6 +98,7 @@ impl Replanner {
         allowed_windows.dedup();
         let mut r = Replanner {
             cost,
+            profiled0: profiled.clone(),
             profiled,
             buckets,
             allowed_windows,
@@ -169,6 +179,58 @@ impl Replanner {
             .copied()
             .find(|&b| b >= occ)
             .unwrap_or(*self.buckets.last().unwrap())
+    }
+
+    /// Fold measured per-method acceptance (rate over `drafted` drafted
+    /// tokens, from `ServeMetrics::method_acceptance` deltas) into the
+    /// ladder priors, so Algorithm 1/2 start from measured rates instead
+    /// of static profiles once the wave has produced evidence. Each prior
+    /// is re-blended from its ORIGINAL profiled value with a pseudo-count
+    /// (`ladder::blend_measured`), so feeding cumulative measurements
+    /// repeatedly converges instead of compounding. Methods without a
+    /// profiled prior (e.g. a corpus-warmed sam) are added outright.
+    /// Returns true when any prior moved — the current bucket is then
+    /// invalidated so the next occupancy report replans.
+    pub fn feed_measured(&mut self, measured: &[(String, f64, u64, u64)]) -> bool {
+        let mut moved = false;
+        for (method, rate, _accepted, drafted) in measured {
+            if *drafted < MIN_MEASURED_DRAFTED || method == "vanilla" {
+                continue;
+            }
+            let prior = self
+                .profiled0
+                .iter()
+                .find(|(m, _)| m == method)
+                .map(|(_, p)| *p)
+                .unwrap_or(*rate);
+            let blended = crate::ladder::blend_measured(prior, *rate, *drafted);
+            match self.profiled.iter_mut().find(|(m, _)| m == method) {
+                Some((_, p)) => {
+                    if (*p - blended).abs() > 1e-3 {
+                        *p = blended;
+                        moved = true;
+                    }
+                }
+                None => {
+                    self.profiled.push((method.clone(), blended));
+                    moved = true;
+                }
+            }
+        }
+        if moved {
+            self.current = None;
+        }
+        moved
+    }
+
+    /// Weight-update re-widening: the measured evidence described the OLD
+    /// policy's acceptance, so restore the static profiled priors and
+    /// force a replan at the next occupancy report. (The caller resets
+    /// its measurement baseline at the same boundary, so post-update
+    /// feeds blend fresh evidence only.)
+    pub fn note_decay(&mut self) {
+        self.profiled = self.profiled0.clone();
+        self.current = None;
     }
 
     /// Report the live occupancy. Returns the fresh plan when the
@@ -359,6 +421,47 @@ mod tests {
         r.on_occupancy(5);
         assert_eq!(r.plan.window, 0);
         assert!(!r.plan.method.is_empty());
+    }
+
+    #[test]
+    fn measured_feed_moves_priors_and_forces_replan() {
+        let mut r = mk();
+        r.on_occupancy(8);
+        let before = r.plan.clone();
+        // strong measured evidence that ngram accepts far better than its
+        // 0.40 profile (the corpus-warmed wave), plus a brand-new sam rate
+        let fed = r.feed_measured(&[
+            ("ngram".to_string(), 0.9, 900, 1000),
+            ("sam".to_string(), 0.8, 400, 500),
+        ]);
+        assert!(fed, "priors must move on strong evidence");
+        assert!(r.profiled.iter().any(|(m, p)| m == "ngram" && *p > 0.40));
+        assert!(r.profiled.iter().any(|(m, p)| m == "sam" && *p > 0.0), "sam prior added");
+        // bucket invalidated: the same occupancy replans
+        assert!(r.on_occupancy(8).is_some());
+        // feeding the SAME cumulative evidence again is idempotent
+        let again = r.feed_measured(&[("ngram".to_string(), 0.9, 900, 1000)]);
+        assert!(!again, "re-feeding identical cumulative evidence must not move priors");
+        let _ = before;
+    }
+
+    #[test]
+    fn tiny_evidence_is_ignored() {
+        let mut r = mk();
+        r.on_occupancy(8);
+        assert!(!r.feed_measured(&[("ngram".to_string(), 1.0, 10, 10)]));
+    }
+
+    #[test]
+    fn decay_restores_profiled_priors() {
+        let mut r = mk();
+        r.on_occupancy(8);
+        r.feed_measured(&[("ngram".to_string(), 0.95, 950, 1000)]);
+        let moved: Vec<_> = r.profiled.clone();
+        r.note_decay();
+        assert_ne!(r.profiled, moved, "decay must re-widen the priors");
+        assert!(r.profiled.iter().any(|(m, p)| m == "ngram" && (*p - 0.40).abs() < 1e-9));
+        assert!(r.on_occupancy(8).is_some(), "decay must force a replan");
     }
 
     #[test]

@@ -184,6 +184,55 @@ fn transport_escalation_falls_back_to_reprefill_losslessly() {
     assert!(c.metrics.evac_salvaged >= 1, "escalation must fall back to charged re-prefill");
 }
 
+/// (vi) Wave-global corpus cell: one SHARED master corpus across the
+/// workers, under mid-wave chaos — worker kills plus periodic
+/// weight-update pauses (which decay the master and re-widen every
+/// worker's priors). Corpus seeding changes proposals and acceptance
+/// only, so the wave must stay token-identical with zero lost requests
+/// while the cluster ledger counts seeds, publishes and relayed decays.
+#[test]
+fn shared_corpus_survives_kills_and_pauses_losslessly() {
+    use specactor::drafter::DraftCorpus;
+    let budget = 16;
+    let offered = 10u64;
+    let plan = FaultPlan::parse("seed=9,worker=0.3,pause=4").expect("chaos spec");
+    // profiled so the ngram token drafter wins selection — the corpus
+    // seeds token drafters only
+    let mk_replan = || {
+        Replanner::new(
+            CostModel::paper_32b(),
+            vec![("ngram".to_string(), 0.90), ("draft_small".to_string(), 0.60)],
+            vec![1, 2, 4],
+            vec![1, 3, 7],
+            7,
+        )
+    };
+    let batchers = (0..3)
+        .map(|w| {
+            let e = ChaosEngine::new(SyntheticEngine::new(4, 7), plan.for_worker(w));
+            Batcher::new(e, 32, mk_replan(), true)
+        })
+        .collect();
+    let mut master = DraftCorpus::new();
+    master.add_segment(&expected_seq(99, &[1, 2, 3, 4], budget));
+    assert!(master.publish() > 0);
+    let mut c = Cluster::new(batchers, 64).with_corpus(master);
+    for i in 0..offered {
+        assert!(c.enqueue(Request::new(i, vec![1, 2, 3, 4], budget), Priority::Batch, 0.0));
+    }
+    let fin = drain(&mut c, 0.0);
+    assert_eq!(fin.len(), offered as usize, "corpus + chaos must never drop a request");
+    assert_exact(&fin, budget);
+    assert_nothing_lost(&c);
+    assert!(c.metrics.corpus_seeds > 0, "admissions must seed from the shared snapshot");
+    assert!(c.metrics.corpus_publishes >= 2, "pre-warm epoch plus at least one wave publish");
+    assert!(c.metrics.corpus_tokens > 0);
+    assert!(
+        c.metrics.corpus_decays >= 1,
+        "pause=4 must relay at least one decay to the master"
+    );
+}
+
 /// Delegating engine that corrupts the FIRST inbound migration frame
 /// only: the retried delivery must succeed and be byte-identical.
 struct CorruptOnce {

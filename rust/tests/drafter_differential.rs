@@ -13,7 +13,9 @@
 
 use std::collections::HashMap;
 
-use specactor::drafter::{NgramDrafter, SamDrafter, TokenDrafter};
+use specactor::drafter::{
+    DraftCorpus, DraftMethod, NgramDrafter, SamDrafter, TokenDrafter, SEGMENT_SEP,
+};
 use specactor::util::proptest_lite::{check, Gen};
 
 // ---------------------------------------------------------------------------
@@ -242,6 +244,84 @@ fn ngram_table_matches_bruteforce_reference() {
         }
         Ok(())
     });
+}
+
+// ---------------------------------------------------------------------------
+// Corpus-seeded drafters vs from-scratch references over the joined stream.
+// ---------------------------------------------------------------------------
+
+/// A drafter seeded from a published [`DraftCorpus`] snapshot must be
+/// indistinguishable from one that replayed the whole separator-joined
+/// corpus itself: same automaton, same gram table, same proposals. The
+/// snapshot is a pre-built replay, not an approximation — so the naive
+/// references above double as references for the corpus path.
+#[test]
+fn corpus_seeded_drafters_match_references_over_joined_stream() {
+    check("corpus-seeded-differential", 60, |g| {
+        let nseg = 1 + g.usize_in(0, 3);
+        let mut c = DraftCorpus::new();
+        let mut segs: Vec<Vec<i32>> = Vec::new();
+        for _ in 0..nseg {
+            let (toks, _) = stream_chunks(g);
+            c.add_segment(&toks);
+            segs.push(toks);
+        }
+        assert!(c.publish() > 0);
+        let (req, _) = stream_chunks(g);
+        let snap = c.handle().load();
+
+        // the reference history: segments and the request prefix joined
+        // by separators, exactly as the corpus folds them
+        let mut joined: Vec<i32> = Vec::new();
+        for s in &segs {
+            joined.push(SEGMENT_SEP);
+            joined.extend_from_slice(s);
+        }
+        joined.push(SEGMENT_SEP);
+        joined.extend_from_slice(&req);
+
+        let mut sam = snap.seed_token_drafter(&DraftMethod::Sam).expect("warm snapshot");
+        sam.extend(&req);
+        let mut ref_sam = RefSam::new(16);
+        ref_sam.extend(&joined);
+        for n in [1usize, 3, 8, 16] {
+            let got = sam.draft(n);
+            let want = ref_sam.draft(n);
+            if got != want {
+                return Err(format!(
+                    "seeded sam draft({n}): {got:?} != reference {want:?} (joined {joined:?})"
+                ));
+            }
+        }
+
+        let mut ng = snap.seed_token_drafter(&DraftMethod::Ngram).expect("warm snapshot");
+        ng.extend(&req);
+        for n in [1usize, 2, 5] {
+            let got = ng.draft(n);
+            let want = ngram_ref_draft(&joined, 3, n);
+            if got != want {
+                return Err(format!(
+                    "seeded ngram draft({n}): {got:?} != reference {want:?} (joined {joined:?})"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Model drafters never seed from the corpus (their state is weights,
+/// not history); token drafters always do once the snapshot is warm.
+#[test]
+fn model_methods_never_seed_from_the_corpus() {
+    let mut c = DraftCorpus::new();
+    c.add_segment(&[1, 2, 3, 1, 2, 3]);
+    assert!(c.publish() > 0);
+    let snap = c.handle().load();
+    assert!(snap
+        .seed_token_drafter(&DraftMethod::Model("draft_small".to_string()))
+        .is_none());
+    assert!(snap.seed_token_drafter(&DraftMethod::Sam).is_some());
+    assert!(snap.seed_token_drafter(&DraftMethod::Ngram).is_some());
 }
 
 #[test]

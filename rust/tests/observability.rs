@@ -347,6 +347,75 @@ fn batcher_snapshot_is_scrapable_over_tcp() {
     assert!(resp.ends_with("ok\n"));
 }
 
+/// Corpus observability: a `--corpus` run exposes the engine-agnostic
+/// `specactor_corpus_*` alias family (equal, sample for sample, to the
+/// `specactor_serve_corpus_*` mirrors — both render from the same
+/// `ServeMetrics` fields), per-method measured-acceptance gauges, and a
+/// `corpus_publish` phase in the chrome trace.
+#[test]
+fn corpus_alias_family_gauges_and_publish_phase_are_on_the_scrape() {
+    use specactor::drafter::DraftCorpus;
+    use specactor::planner::costmodel::CostModel;
+    // profiled so the ngram token drafter wins selection — the corpus
+    // seeds token drafters only, so the plans must carry one
+    let replan = Replanner::new(
+        CostModel::paper_32b(),
+        vec![("ngram".to_string(), 0.90), ("draft_small".to_string(), 0.60)],
+        vec![1, 2, 4],
+        vec![1, 3, 7],
+        7,
+    );
+    let mut corpus = DraftCorpus::new();
+    corpus.add_segment(&[1, 2, 3, 4, 5, 6, 7, 8]);
+    assert!(corpus.publish() > 0);
+    let mut b = Batcher::new(SyntheticEngine::new(4, 99), 16, replan, true)
+        .with_corpus(corpus)
+        .with_tracing(4096);
+    let arrivals: Vec<(f64, Request, Priority)> =
+        (0..6u64).map(|i| (i as f64 * 0.005, req(i, 24), Priority::Batch)).collect();
+    let rep = drive_open_loop(&mut b, arrivals, Some(1.0e-3)).expect("serve run");
+    let reg = b.collect_registry(rep.elapsed_s);
+
+    for key in ["tokens", "seeds", "publishes", "evictions", "decays"] {
+        let alias = reg
+            .find(&format!("specactor_corpus_{key}"), &[])
+            .unwrap_or_else(|| panic!("alias specactor_corpus_{key} missing from the scrape"));
+        let mirror = reg
+            .find(&format!("{PROM_PREFIX}corpus_{key}"), &[])
+            .unwrap_or_else(|| panic!("mirror {PROM_PREFIX}corpus_{key} missing"));
+        assert_eq!(alias, mirror, "corpus_{key} alias diverges from the serve mirror");
+    }
+    assert!(
+        reg.find("specactor_corpus_seeds", &[]).unwrap() > 0.0,
+        "warm token-drafter admissions must count as seeds"
+    );
+    assert!(
+        reg.find("specactor_corpus_publishes", &[]).unwrap() >= 2.0,
+        "the pre-warm epoch plus at least one wave publish"
+    );
+    let rate =
+        reg.find(&format!("{PROM_PREFIX}method_acceptance_rate"), &[("method", "ngram")]);
+    assert!(rate.is_some(), "per-method measured-acceptance gauge missing");
+    assert_format_clean(&reg.render());
+
+    // the snapshot fold is a first-class traced phase
+    let t = b.tracer().expect("tracing was enabled");
+    let j = chrome_trace(&t.events(), &b.fault_dumps);
+    let parsed = Json::parse(&j.to_string()).expect("valid trace JSON");
+    let names: Vec<&str> = parsed
+        .get("traceEvents")
+        .as_arr()
+        .expect("traceEvents array")
+        .iter()
+        .filter_map(|e| e.get("name").as_str())
+        .collect();
+    assert!(
+        names.contains(&Phase::CorpusPublish.label()),
+        "`{}` phase missing from the trace",
+        Phase::CorpusPublish.label()
+    );
+}
+
 /// A served 2-worker cluster under kill + transport chaos (tracing on),
 /// driven to idle: deaths, holds, evacuations and transport retries all
 /// land on the counters so the scrape has a real surface to reconcile.

@@ -285,6 +285,66 @@ fn overlapped_reconfigured_serving_is_lossless() {
     assert_eq!(got, want, "overlapped+reconfigured serving diverged from static vanilla");
 }
 
+/// Wave-global corpus serving (`--corpus`): seeding the token drafters
+/// from a pre-warmed shared corpus — and harvesting this wave's
+/// completions back into it mid-run — changes proposals and acceptance
+/// only; outputs must stay token-identical to static vanilla. The
+/// corpus is deliberately warmed with the requests' own vanilla outputs
+/// (the strongest seeding possible: the drafters can propose exact
+/// continuations), so any acceptance-dependent leak into the sampling
+/// tape would show here first.
+#[test]
+fn corpus_seeded_serving_is_lossless() {
+    use specactor::drafter::DraftCorpus;
+    let rt = Runtime::load(&art()).unwrap();
+    let n = 4;
+    let want = vanilla_outputs(&rt, n, 14);
+    let mut corpus = DraftCorpus::new();
+    for seq in &want {
+        corpus.add_segment(seq);
+    }
+    assert!(corpus.publish() > 0);
+    let replan = replanner(&rt, "ngram", 0.6);
+    let worker = Worker::with_capacity(&rt, EngineConfig::default(), n).unwrap();
+    let mut b = Batcher::new(worker, 2 * n, replan, true).with_corpus(corpus);
+    let mut now = 0.0f64;
+    let mut pending = mk_requests(&rt, n, 14).into_iter();
+    let mut next_at = 0usize;
+    let mut tick_no = 0usize;
+    let mut remaining = n;
+    loop {
+        while remaining > 0 && tick_no >= next_at {
+            assert!(b.enqueue(pending.next().unwrap(), Priority::Batch, now));
+            remaining -= 1;
+            next_at += 2;
+        }
+        if remaining == 0 && b.idle() {
+            break;
+        }
+        if b.idle() {
+            tick_no = next_at;
+            now = next_at as f64 * 0.01;
+            continue;
+        }
+        b.tick(now).unwrap();
+        tick_no += 1;
+        now += 0.01;
+        assert!(tick_no < 10_000, "serve loop did not converge");
+    }
+    let mut fin = b.drain_finished();
+    assert_eq!(fin.len(), n, "not all requests served");
+    fin.sort_by_key(|f| f.req.id);
+    let got: Vec<Vec<i32>> =
+        fin.iter().map(|f| f.req.seq[f.req.prompt.len()..].to_vec()).collect();
+    assert_eq!(got, want, "corpus-seeded serving diverged from static vanilla");
+    assert!(b.metrics.corpus_seeds > 0, "token-drafter admissions must seed from the corpus");
+    assert!(
+        b.metrics.corpus_publishes >= 2,
+        "the pre-warm epoch plus at least one wave publish"
+    );
+    assert!(b.metrics.corpus_tokens > 0);
+}
+
 /// The serve loop must actually exercise continuous batching: with fewer
 /// slots than requests, admissions overlap retirements and the engine
 /// report shows speculation progress.
