@@ -264,9 +264,18 @@ impl DraftCorpus {
         self.handle.load().is_warm()
     }
 
-    /// Current publication epoch.
+    /// Current publication epoch, read through the shared handle: for a
+    /// publisher this equals its local counter; for a tap (which never
+    /// publishes, so never advances a local counter) it is the master's
+    /// replicated epoch — the only meaningful answer.
     pub fn epoch(&self) -> u64 {
-        self.epoch
+        self.handle.epoch()
+    }
+
+    /// Does this corpus publish its own epochs (false for cluster taps,
+    /// whose harvest the supervisor drains and publishes)?
+    pub fn is_publisher(&self) -> bool {
+        self.publisher
     }
 
     /// An admission seeded its drafters from the warm snapshot.
@@ -494,6 +503,7 @@ mod tests {
         }
         master.publish();
         assert_eq!(tap.handle().epoch(), 1, "replication is the shared handle");
+        assert_eq!(tap.epoch(), 1, "a tap's epoch() must read the replicated handle");
         assert!(tap.is_warm());
         tap.decay();
         assert!(tap.take_decay_flag(), "tap decay is an event for the supervisor");

@@ -1319,17 +1319,23 @@ impl<E: ServeEngine> Batcher<E> {
             }
         }
         if decayed {
-            let mut seqs: Vec<Vec<i32>> = Vec::new();
-            for slot in 0..self.engine.capacity() {
-                if self.slots.is_live(slot) {
-                    if let Some(r) = self.engine.request(slot) {
-                        seqs.push(r.seq.clone());
+            // only a publishing corpus reseeds locally: a cluster tap's
+            // reseed would be drained at the master's decay boundary and
+            // discarded (the cluster sweeps every worker's live prefixes
+            // itself as the sole reseed source)
+            if self.corpus.as_ref().unwrap().is_publisher() {
+                let mut seqs: Vec<Vec<i32>> = Vec::new();
+                for slot in 0..self.engine.capacity() {
+                    if self.slots.is_live(slot) {
+                        if let Some(r) = self.engine.request(slot) {
+                            seqs.push(r.seq.clone());
+                        }
                     }
                 }
-            }
-            let c = self.corpus.as_mut().unwrap();
-            for s in &seqs {
-                c.add_segment(s);
+                let c = self.corpus.as_mut().unwrap();
+                for s in &seqs {
+                    c.add_segment(s);
+                }
             }
             self.note_prior_decay();
         }

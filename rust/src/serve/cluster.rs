@@ -524,8 +524,16 @@ impl<E: ServeEngine> Cluster<E> {
             }
         }
         if decay {
+            // the drained harvest was accepted under the OLD weights
+            // (completions from workers that never paused, queued before
+            // the decay relayed) — folding it into the fresh lineage
+            // would defeat the staleness purge the decay performs, so
+            // drop it wholesale and re-sweep below
+            segs.clear();
             // live verified prefixes survive the weight update
-            // (verification owns them) — they reseed the fresh lineage
+            // (verification owns them) — they reseed the fresh lineage,
+            // and this sweep is the SOLE reseed source (taps skip their
+            // local reseed, so nothing is duplicated)
             for w in 0..self.workers.len() {
                 if self.health[w] == WorkerHealth::Dead {
                     continue;
@@ -1254,6 +1262,37 @@ mod tests {
         for w in 0..c.len() {
             let e = c.worker_mut(w).corpus_mut().unwrap().epoch();
             assert!(e >= 2, "worker {w} tap stuck at epoch {e}");
+        }
+    }
+
+    /// A decay relayed from one worker must purge the whole tick's
+    /// pre-decay harvest: completions drained from workers that never
+    /// paused were accepted under the OLD weights and must not fold
+    /// into the fresh post-decay lineage.
+    #[test]
+    fn relayed_decay_discards_predecay_harvest() {
+        let mut master = DraftCorpus::new();
+        master.add_segment(&[1, 2, 3, 1, 2, 3]);
+        assert!(master.publish() > 0);
+        let mk = || Batcher::new(SyntheticEngine::new(4, 7), 64, ngram_replanner(), true);
+        let mut c = Cluster::new((0..2).map(|_| mk()).collect(), 64).with_corpus(master);
+        // worker 0 harvested a completion under the old weights...
+        c.worker_mut(0).corpus_mut().unwrap().add_segment(&[9, 9, 9, 9]);
+        // ...and worker 1 saw the weight-update pause the same tick
+        c.worker_mut(1).corpus_mut().unwrap().decay();
+        c.tick(0.0).unwrap();
+        assert_eq!(c.metrics.corpus_decays, 1, "tap decay must relay to the master");
+        // no live slots → nothing reseeds: the master must come out
+        // COLD, not warmed by the stale pre-decay completion
+        assert_eq!(
+            c.metrics.corpus_tokens, 0,
+            "stale pre-decay harvest leaked past the relayed decay"
+        );
+        assert!(!c.worker_mut(0).corpus_mut().unwrap().is_warm());
+        // epoch replication after decay: every tap reads the master's
+        // lineage (pre-warm publish + decay epoch)
+        for w in 0..c.len() {
+            assert_eq!(c.worker_mut(w).corpus_mut().unwrap().epoch(), 2);
         }
     }
 
